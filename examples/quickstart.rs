@@ -1,0 +1,51 @@
+//! Quickstart: learn a nonlinear system online with RFF-KLMS in ~20
+//! lines — the paper's §4 algorithm through the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{OnlineRegressor, RffKlms, RffMap};
+use rff_kaf::metrics::to_db;
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+
+fn main() {
+    // 1. A nonlinear streaming system: y = w0'x + 0.1 (w1'x)^2 + noise
+    //    (the paper's Example 2).
+    let mut system = NonlinearWiener::new(run_rng(7, 0), 0.05);
+
+    // 2. Draw the random Fourier feature map for a Gaussian kernel
+    //    (sigma = 5) with D = 300 features over d = 5 inputs.
+    let mut rng = run_rng(7, 1);
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+
+    // 3. RFF-KLMS = plain LMS on z_O(x). Fixed-size model: theta in R^300.
+    let mut filter = RffKlms::new(map, 1.0);
+
+    // 4. Stream 10k samples; print the learning curve each 1000 steps.
+    let mut window = Vec::new();
+    for n in 1..=10_000 {
+        let s = system.next_sample();
+        let e = filter.step(&s.x, s.y);
+        window.push(e * e);
+        if n % 1000 == 0 {
+            let mse: f64 = window.iter().sum::<f64>() / window.len() as f64;
+            println!(
+                "n={n:>6}  MSE {:>8.2} dB  (model size {} — constant)",
+                to_db(mse),
+                filter.model_size()
+            );
+            window.clear();
+        }
+    }
+
+    // 5. Predict on fresh inputs.
+    let probe = system.next_sample();
+    println!(
+        "\nprediction at fresh x: {:+.4}  (true clean value {:+.4})",
+        filter.predict(&probe.x),
+        probe.clean
+    );
+}

@@ -1,0 +1,185 @@
+//! **End-to-end driver**: boots the full three-layer stack on a real
+//! workload and proves all layers compose.
+//!
+//! * loads the AOT artifacts (L1 Pallas kernel + L2 JAX scan, lowered to
+//!   HLO text) into the PJRT executor,
+//! * starts the coordinator service with a worker pool and a dynamic
+//!   predict batcher,
+//! * opens N concurrent filter sessions, each streaming a *different*
+//!   nonlinear system through the chunked PJRT training path,
+//! * fires batched prediction bursts while training is in flight,
+//! * reports per-session steady-state MSE, training throughput, predict
+//!   latency percentiles and batcher fill ratio.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving_pipeline
+//! # native fallback (no artifacts required):
+//! cargo run --release --example serving_pipeline -- --native
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §End-to-end used the defaults.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use rff_kaf::coordinator::{
+    Backend, CoordinatorService, FilterSession, Request, Response, ServiceConfig, SessionConfig,
+};
+use rff_kaf::metrics::{to_db, LogHistogram, Stats};
+use rff_kaf::rng::run_rng;
+use rff_kaf::runtime::PjrtExecutor;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n_sessions = args.get_or("sessions", 16usize);
+    let n_samples = args.get_or("samples", 1920usize); // 30 chunks of 64
+    let native = args.flag("native");
+    let seed = args.get_or("seed", 2016u64);
+
+    // --- boot the runtime ------------------------------------------------
+    let executor = if native {
+        None
+    } else {
+        match PjrtExecutor::start(args.get("dir").unwrap_or("artifacts")) {
+            Ok(e) => {
+                println!("PJRT platform: {}", e.handle().platform().unwrap());
+                Some(e)
+            }
+            Err(err) => {
+                eprintln!("artifacts unavailable ({err}); falling back to native");
+                None
+            }
+        }
+    };
+    let handle = executor.as_ref().map(|e| e.handle());
+    let backend = if handle.is_some() { Backend::Pjrt } else { Backend::Native };
+    println!("backend: {backend:?}, {n_sessions} sessions x {n_samples} samples");
+
+    // --- boot the coordinator -------------------------------------------
+    let svc = Arc::new(CoordinatorService::start(
+        ServiceConfig {
+            workers: 4,
+            queue_capacity: 2048,
+            max_batch: 32,
+            batch_wait: std::time::Duration::from_millis(1),
+        },
+        handle.clone(),
+    ));
+    let mut session_ids = Vec::new();
+    for i in 0..n_sessions {
+        let mut rng = run_rng(seed, i);
+        let cfg = SessionConfig { backend, ..SessionConfig::paper_default() };
+        let s = FilterSession::new(cfg, &mut rng, handle.clone()).expect("session");
+        session_ids.push(svc.add_session(s));
+    }
+
+    // --- training: every session streams its own system ------------------
+    let t_train = Instant::now();
+    let trainers: Vec<_> = session_ids
+        .iter()
+        .map(|&sid| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                // each session learns a DIFFERENT system (per-session seed)
+                let mut src = NonlinearWiener::new(run_rng(7777, sid as usize), 0.05);
+                let mut sum_sq = 0.0;
+                let mut count = 0usize;
+                for s in src.take_samples(n_samples) {
+                    let errs = svc.train_sync(sid, s.x.clone(), s.y).expect("train");
+                    // errors arrive chunk-at-a-time on the PJRT path
+                    for e in errs {
+                        if count >= n_samples * 3 / 4 {
+                            sum_sq += e * e;
+                        }
+                        count += 1;
+                    }
+                }
+                for e in svc.flush_sync(sid).expect("flush") {
+                    sum_sq += e * e;
+                    count += 1;
+                }
+                (sid, sum_sq, count)
+            })
+        })
+        .collect();
+    let mut session_mse = Vec::new();
+    for t in trainers {
+        let (sid, sum_sq, count) = t.join().unwrap();
+        let tail = count / 4;
+        session_mse.push((sid, sum_sq / tail.max(1) as f64));
+    }
+    let train_secs = t_train.elapsed().as_secs_f64();
+    let total = n_sessions * n_samples;
+
+    // --- serving: batched predict bursts ---------------------------------
+    let mut latency = LogHistogram::new();
+    let n_bursts = 50;
+    let burst = 32;
+    let mut probe_src = NonlinearWiener::new(run_rng(8888, 0), 0.05);
+    for b in 0..n_bursts {
+        let sid = session_ids[b % session_ids.len()];
+        let probes = probe_src.take_samples(burst);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let t0 = Instant::now();
+        for p in &probes {
+            svc.submit(Request::Predict { session: sid, x: p.x.clone(), resp: tx.clone() })
+                .expect("submit");
+        }
+        drop(tx);
+        let mut got = 0;
+        while let Ok(r) = rx.recv() {
+            match r {
+                Response::Predicted(_) => got += 1,
+                Response::Error(e) => panic!("predict error: {e}"),
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(got, burst);
+        latency.record(t0.elapsed().as_secs_f64());
+    }
+
+    // --- report -----------------------------------------------------------
+    println!("\n== training ==");
+    println!(
+        "  {total} samples in {train_secs:.3}s = {:.0} samples/s aggregate",
+        total as f64 / train_secs
+    );
+    let mut mse_stats = Stats::new();
+    for &(sid, mse) in &session_mse {
+        mse_stats.push(to_db(mse));
+        if sid <= 4 {
+            println!("  session {sid}: steady-state {:.2} dB", to_db(mse));
+        }
+    }
+    println!(
+        "  per-session steady-state MSE: mean {:.2} dB (min {:.2}, max {:.2})",
+        mse_stats.mean(),
+        mse_stats.min(),
+        mse_stats.max()
+    );
+    println!("\n== serving (bursts of {burst} predicts) ==");
+    println!("  {}", latency.report_ms("burst latency"));
+    println!(
+        "  burst latency: mean {:.3} ms, min {:.3} ms",
+        latency.mean() * 1e3,
+        latency.min() * 1e3
+    );
+    let stats = svc.stats();
+    let batches = stats.predict_batches.load(Ordering::Relaxed);
+    let rows = stats.predict_rows.load(Ordering::Relaxed);
+    println!(
+        "  trained={} predicted={} errors={} pjrt_batches={} (fill {:.0}%)",
+        stats.trained.load(Ordering::Relaxed),
+        stats.predicted.load(Ordering::Relaxed),
+        stats.errors.load(Ordering::Relaxed),
+        batches,
+        if batches > 0 { 100.0 * rows as f64 / (batches * 32) as f64 } else { 0.0 },
+    );
+    assert_eq!(stats.errors.load(Ordering::Relaxed), 0, "no request may fail");
+
+    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    println!("\nend-to-end OK: all layers composed.");
+}

@@ -1,0 +1,150 @@
+"""AOT emitter: lower every L2 graph to HLO *text* + write a manifest.
+
+HLO text (NOT `lowered.compiler_ir("hlo")`-proto `.serialize()`): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text
+parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Emits one `<name>.hlo.txt` per (graph, shape-config) pair plus
+`manifest.json` describing inputs/outputs so the Rust artifact registry
+can type-check calls at load time.
+
+Artifacts are lowered with return_tuple=True: the Rust side unwraps with
+`to_tuple()` / `to_tuple1()`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue.
+#
+# Canonical shape configs cover every paper experiment:
+#   Ex. 2 / Fig. 1 / Fig. 2:  d=5, D=300 (and D=100 for the Fig. 1 sweep)
+#   Ex. 3 (chaotic1):         d=1, D=100  (delay embedding of order 1: u_{n-1})
+#   Ex. 4 (chaotic2):         d=2, D=100  (inputs (u_n, v_n))
+# Chunk length N=64 amortises PJRT dispatch; batch B=32 for the batcher.
+# ---------------------------------------------------------------------------
+
+CHUNK_N = 64
+BATCH_B = 32
+
+
+def catalogue():
+    """Yield (name, jitted_fn, example_args, meta) for every artifact."""
+    configs = [
+        dict(d=5, D=300),
+        dict(d=5, D=100),
+        dict(d=1, D=100),
+        dict(d=2, D=100),
+    ]
+    for cfg in configs:
+        d, D = cfg["d"], cfg["D"]
+        n, bsz = CHUNK_N, BATCH_B
+
+        name = f"rffklms_chunk_d{d}_D{D}_N{n}"
+        args = (spec(D), spec(n, d), spec(n), spec(d, D), spec(D), spec(1))
+        yield name, model.rffklms_chunk, args, dict(
+            kind="rffklms_chunk", d=d, D=D, N=n,
+            inputs=["theta[D]", "x[N,d]", "y[N]", "omega[d,D]", "b[D]", "mu[1]"],
+            outputs=["theta[D]", "errors[N]"],
+        )
+
+        name = f"rff_features_d{d}_D{D}_B{bsz}"
+        args = (spec(bsz, d), spec(d, D), spec(D))
+        yield name, model.rff_features_batch, args, dict(
+            kind="rff_features", d=d, D=D, B=bsz,
+            inputs=["x[B,d]", "omega[d,D]", "b[D]"],
+            outputs=["z[B,D]"],
+        )
+
+        name = f"rff_predict_d{d}_D{D}_B{bsz}"
+        args = (spec(D), spec(bsz, d), spec(d, D), spec(D))
+        yield name, model.rff_predict_batch, args, dict(
+            kind="rff_predict", d=d, D=D, B=bsz,
+            inputs=["theta[D]", "x[B,d]", "omega[d,D]", "b[D]"],
+            outputs=["yhat[B]"],
+        )
+
+    # KRLS chunk only for the Fig. 2b config (P is D^2 — keep D moderate).
+    for d, D in [(5, 300), (1, 100)]:
+        n = CHUNK_N
+        name = f"rffkrls_chunk_d{d}_D{D}_N{n}"
+        args = (spec(D), spec(D, D), spec(n, d), spec(n), spec(d, D), spec(D), spec(1))
+        yield name, model.rffkrls_chunk, args, dict(
+            kind="rffkrls_chunk", d=d, D=D, N=n,
+            inputs=["theta[D]", "p[D,D]", "x[N,d]", "y[N]", "omega[d,D]", "b[D]", "beta[1]"],
+            outputs=["theta[D]", "p[D,D]", "errors[N]"],
+        )
+
+    # Gaussian Gram block for the QKLMS cross-check (sigma baked in).
+    for d, M, sigma in [(5, 128, 5.0), (1, 32, 0.05), (2, 32, 0.05)]:
+        name = f"gauss_kernel_d{d}_M{M}"
+        fn = functools.partial(model.gauss_kernel_batch, sigma=sigma)
+        args = (spec(BATCH_B, d), spec(M, d))
+        yield name, fn, args, dict(
+            kind="gauss_kernel", d=d, M=M, B=BATCH_B, sigma=sigma,
+            inputs=["x[B,d]", "c[M,d]"],
+            outputs=["k[B,M]"],
+        )
+
+
+def lower_one(fn, args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+
+    manifest = {"format": 1, "chunk_n": CHUNK_N, "batch_b": BATCH_B, "artifacts": []}
+    for name, fn, args, meta in catalogue():
+        if ns.only and ns.only not in name:
+            continue
+        text = lower_one(fn, args)
+        path = os.path.join(ns.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(name=name, file=f"{name}.hlo.txt", **meta)
+        manifest["artifacts"].append(entry)
+        print(f"  {name}: {len(text)} chars")
+
+    with open(os.path.join(ns.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {ns.out}")
+
+
+if __name__ == "__main__":
+    main()

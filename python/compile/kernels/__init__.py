@@ -1,0 +1,11 @@
+"""L1 Pallas kernels + pure-jnp reference oracle."""
+
+from .gauss import gauss_kernel
+from .rff import mxu_utilization_estimate, rff_features, vmem_footprint_bytes
+
+__all__ = [
+    "rff_features",
+    "gauss_kernel",
+    "vmem_footprint_bytes",
+    "mxu_utilization_estimate",
+]

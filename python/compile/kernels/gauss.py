@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: Gaussian kernel (Gram) matrix.
+
+    K[B, M] = exp(-||x_i - c_j||^2 / (2 sigma^2))
+
+Used by the QKLMS baseline cross-check path and by the exact-kernel
+comparison experiments (RFF approximation-error ablation). Tiled over the
+center axis M; the squared distance is computed via the expansion
+||x||^2 + ||c||^2 - 2 x.c so the inner loop is again one MXU matmul with a
+fused epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_PREFERRED_TILE_M = 128
+
+
+def _tile_m(M: int) -> int:
+    for t in range(min(M, _PREFERRED_TILE_M), 0, -1):
+        if M % t == 0:
+            return t
+    return 1
+
+
+def _gauss_kernel(x_ref, c_ref, o_ref, *, inv_two_sigma_sq: float):
+    x = x_ref[...]  # [B, d]
+    c = c_ref[...]  # [TM, d]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [B, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # [1, TM]
+    cross = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # [B, TM]
+    d2 = jnp.maximum(x2 + c2 - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-d2 * inv_two_sigma_sq).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def gauss_kernel(x: jnp.ndarray, c: jnp.ndarray, *, sigma: float, interpret: bool = True) -> jnp.ndarray:
+    """Pallas Gaussian kernel matrix.
+
+    Args:
+      x: [B, d] query batch.
+      c: [M, d] centers (dictionary).
+      sigma: kernel bandwidth (static: baked into the artifact).
+
+    Returns: [B, M] kernel matrix.
+    """
+    B, d = x.shape
+    M, d2 = c.shape
+    assert d == d2
+    tile = _tile_m(M)
+    inv = 1.0 / (2.0 * sigma * sigma)
+    return pl.pallas_call(
+        functools.partial(_gauss_kernel, inv_two_sigma_sq=inv),
+        grid=(M // tile,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j: (0, 0)),
+            pl.BlockSpec((tile, d), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M), x.dtype),
+        interpret=interpret,
+    )(x, c)

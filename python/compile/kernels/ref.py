@@ -1,0 +1,112 @@
+"""Pure-jnp reference oracle for every L1 Pallas kernel.
+
+These are the CORE correctness signal: the Pallas kernels in `rff.py` and
+`gauss.py` and the L2 scan models in `model.py` are asserted allclose
+against these implementations by `python/tests/`.
+
+All functions are plain jax.numpy — no pallas, no control flow tricks —
+so they can be read as the mathematical definition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rff_features_ref(x: jnp.ndarray, omega: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Random Fourier feature map, Eq. (3) of the paper.
+
+    z_Omega(u) = sqrt(2/D) * cos(Omega^T u + b), applied row-wise.
+
+    Args:
+      x:     [B, d] input batch.
+      omega: [d, D] frequency matrix (columns are omega_i ~ N(0, I/sigma^2)).
+      b:     [D]    phases (b_i ~ U[0, 2pi]).
+
+    Returns:
+      [B, D] feature matrix Z with Z @ Z.T approximating the kernel Gram.
+    """
+    d, D = omega.shape
+    scale = jnp.sqrt(2.0 / D).astype(x.dtype)
+    return scale * jnp.cos(x @ omega + b[None, :])
+
+
+def gauss_kernel_ref(x: jnp.ndarray, c: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    """Gaussian kernel matrix K[i, j] = exp(-||x_i - c_j||^2 / (2 sigma^2))."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [B,1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # [1,M]
+    d2 = jnp.maximum(x2 + c2 - 2.0 * (x @ c.T), 0.0)
+    return jnp.exp(-d2 / (2.0 * sigma * sigma))
+
+
+def rffklms_chunk_ref(theta, x, y, omega, b, mu):
+    """Reference RFF-KLMS over an N-sample chunk (numpy loop, float64).
+
+    Per-sample recursion (paper §4):
+      e_n     = y_n - theta^T z(x_n)
+      theta  += mu * e_n * z(x_n)
+
+    Returns (theta_out [D], errors [N]).
+    """
+    theta = np.asarray(theta, dtype=np.float64).copy()
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    omega = np.asarray(omega, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    mu = float(np.asarray(mu).reshape(()))
+    D = omega.shape[1]
+    scale = np.sqrt(2.0 / D)
+    errs = np.zeros(x.shape[0])
+    for n in range(x.shape[0]):
+        z = scale * np.cos(x[n] @ omega + b)
+        e = y[n] - theta @ z
+        theta = theta + mu * e * z
+        errs[n] = e
+    return theta, errs
+
+
+def rffkrls_chunk_ref(theta, p, x, y, omega, b, beta):
+    """Reference exponentially-weighted RFF-KRLS over an N-sample chunk.
+
+    Standard RLS on z-features with forgetting factor beta (paper §6):
+      z    = z_Omega(x_n)
+      pi   = P z
+      k    = pi / (beta + z^T pi)
+      e    = y_n - theta^T z           (a-priori error)
+      theta += k e
+      P    = (P - k pi^T) / beta
+
+    P is initialised by the caller to I / lambda (regularisation).
+    Returns (theta_out [D], P_out [D,D], errors [N]).
+    """
+    theta = np.asarray(theta, dtype=np.float64).copy()
+    p = np.asarray(p, dtype=np.float64).copy()
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    omega = np.asarray(omega, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    beta = float(np.asarray(beta).reshape(()))
+    D = omega.shape[1]
+    scale = np.sqrt(2.0 / D)
+    errs = np.zeros(x.shape[0])
+    for n in range(x.shape[0]):
+        z = scale * np.cos(x[n] @ omega + b)
+        pi = p @ z
+        denom = beta + z @ pi
+        k = pi / denom
+        e = y[n] - theta @ z
+        theta = theta + k * e
+        p = (p - np.outer(k, pi)) / beta
+        errs[n] = e
+    return theta, p, errs
+
+
+def sample_rff_params_ref(rng: np.random.Generator, d: int, D: int, sigma: float):
+    """Draw (omega [d,D], b [D]) for the Gaussian kernel of bandwidth sigma.
+
+    Bochner: p(omega) = N(0, I/sigma^2)  (paper Eq. (5));  b ~ U[0, 2pi].
+    """
+    omega = rng.normal(0.0, 1.0 / sigma, size=(d, D))
+    b = rng.uniform(0.0, 2.0 * np.pi, size=(D,))
+    return omega, b

@@ -1,0 +1,97 @@
+"""L2 JAX compute graphs: chunked online-filter updates built on the L1
+Pallas kernels.
+
+The online recursions (KLMS / RLS) are sequential per sample, but the
+feature map z_Omega(x_n) does NOT depend on the filter state theta — so a
+chunk of N samples is processed as
+
+    1. one Pallas call  Z[N, D] = rff_features(X[N, d])     (MXU work)
+    2. a lax.scan over the rows of Z for the cheap recursion (VPU work)
+
+This is mathematically identical to the per-sample algorithm in the paper
+(§4 / §6) and is what makes the AOT artifact coarse enough for the Rust
+coordinator to amortise PJRT dispatch over N samples.
+
+Every function here is lowered once by `aot.py` to HLO text; Python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import gauss_kernel, rff_features
+
+
+def rffklms_chunk(theta, x, y, omega, b, mu):
+    """RFF-KLMS over an N-sample chunk (paper §4).
+
+    Args:
+      theta: [D]    current weight vector.
+      x:     [N, d] chunk of inputs.
+      y:     [N]    chunk of targets.
+      omega: [d, D] RFF frequencies.
+      b:     [D]    RFF phases.
+      mu:    [1]    step size (runtime input so one artifact covers all mu).
+
+    Returns:
+      theta_out: [D]  updated weights.
+      errors:    [N]  a-priori errors e_n = y_n - theta_n^T z(x_n).
+    """
+    z = rff_features(x, omega, b)  # [N, D] — the L1 Pallas kernel
+    mu_s = mu[0]
+
+    def step(th, inp):
+        zn, yn = inp
+        e = yn - jnp.dot(th, zn)
+        return th + mu_s * e * zn, e
+
+    theta_out, errors = lax.scan(step, theta, (z, y))
+    return theta_out, errors
+
+
+def rffkrls_chunk(theta, p, x, y, omega, b, beta):
+    """Exponentially-weighted RFF-KRLS over an N-sample chunk (paper §6).
+
+    Carries (theta [D], P [D,D]); P is initialised to I/lambda by the
+    caller (regularisation parameter lambda enters only there).
+
+    Args:
+      beta: [1] forgetting factor (e.g. 0.9995).
+
+    Returns (theta_out [D], p_out [D,D], errors [N]).
+    """
+    z = rff_features(x, omega, b)
+    beta_s = beta[0]
+
+    def step(carry, inp):
+        th, pm = carry
+        zn, yn = inp
+        pi = pm @ zn  # [D]
+        denom = beta_s + jnp.dot(zn, pi)
+        k = pi / denom
+        e = yn - jnp.dot(th, zn)
+        th = th + k * e
+        pm = (pm - jnp.outer(k, pi)) / beta_s
+        return (th, pm), e
+
+    (theta_out, p_out), errors = lax.scan(step, (theta, p), (z, y))
+    return theta_out, p_out, errors
+
+
+def rff_features_batch(x, omega, b):
+    """Bare feature-map artifact for the coordinator's dynamic batcher."""
+    return rff_features(x, omega, b)
+
+
+def rff_predict_batch(theta, x, omega, b):
+    """Batched prediction y_hat = Z theta — the serving (inference) path."""
+    z = rff_features(x, omega, b)
+    return z @ theta
+
+
+def gauss_kernel_batch(x, c, *, sigma):
+    """Gaussian Gram block for the QKLMS cross-check path (sigma static)."""
+    return gauss_kernel(x, c, sigma=sigma)

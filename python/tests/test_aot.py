@@ -1,0 +1,76 @@
+"""AOT emitter checks: the catalogue lowers, HLO text is parseable-looking,
+and the manifest agrees with what is on disk (when artifacts are built).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestCatalogue:
+    def test_catalogue_names_unique(self):
+        names = [name for name, *_ in aot.catalogue()]
+        assert len(names) == len(set(names))
+        assert len(names) >= 15
+
+    def test_catalogue_covers_paper_configs(self):
+        names = [name for name, *_ in aot.catalogue()]
+        # Ex.2 / Fig.1 / Fig.2 config
+        assert "rffklms_chunk_d5_D300_N64" in names
+        assert "rffkrls_chunk_d5_D300_N64" in names
+        # Ex.3 chaotic (d=1) and Ex.4 (d=2)
+        assert "rffklms_chunk_d1_D100_N64" in names
+        assert "rffklms_chunk_d2_D100_N64" in names
+
+    def test_lower_one_produces_hlo_text(self):
+        # Lower the smallest artifact and sanity-check the text format the
+        # Rust loader (HloModuleProto::from_text_file) consumes.
+        for name, fn, args, meta in aot.catalogue():
+            if name == "rff_features_d1_D100_B32":
+                text = aot.lower_one(fn, args)
+                assert "HloModule" in text
+                assert "ENTRY" in text
+                # return_tuple=True => root is a tuple
+                assert "tuple(" in text or "tuple." in text
+                return
+        pytest.fail("expected artifact missing from catalogue")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    def _manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_files_exist(self):
+        m = self._manifest()
+        assert m["format"] == 1
+        for a in m["artifacts"]:
+            path = os.path.join(ART_DIR, a["file"])
+            assert os.path.exists(path), a["file"]
+            with open(path) as f:
+                head = f.read(64)
+            assert "HloModule" in head
+
+    def test_manifest_matches_catalogue(self):
+        m = self._manifest()
+        disk = {a["name"] for a in m["artifacts"]}
+        cat = {name for name, *_ in aot.catalogue()}
+        assert disk == cat
+
+    def test_manifest_shapes_recorded(self):
+        m = self._manifest()
+        for a in m["artifacts"]:
+            assert "inputs" in a and "outputs" in a and "kind" in a
+            if a["kind"].endswith("chunk"):
+                assert a["N"] == m["chunk_n"]

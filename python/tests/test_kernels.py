@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+Hypothesis sweeps shapes; fixed-seed numpy draws the data. The assertions
+are tight (1e-5) because both sides compute in f32 on CPU interpret mode.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rff_features, gauss_kernel
+from compile.kernels.rff import _tile_d, vmem_footprint_bytes, mxu_utilization_estimate
+from compile.kernels.gauss import _tile_m
+from compile.kernels.ref import (
+    gauss_kernel_ref,
+    rff_features_ref,
+    sample_rff_params_ref,
+)
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _data(seed, B, d, D, sigma=5.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(B, d)).astype(np.float32)
+    om, b = sample_rff_params_ref(rng, d, D, sigma)
+    return x, om.astype(np.float32), b.astype(np.float32)
+
+
+class TestRffFeatures:
+    @settings(deadline=None, max_examples=20)
+    @given(
+        B=st.integers(1, 16),
+        d=st.integers(1, 8),
+        D=st.sampled_from([1, 2, 7, 32, 50, 96, 100, 128, 300]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shape_sweep(self, B, d, D, seed):
+        x, om, b = _data(seed, B, d, D)
+        got = np.array(rff_features(jnp.array(x), jnp.array(om), jnp.array(b)))
+        want = np.array(rff_features_ref(jnp.array(x), jnp.array(om), jnp.array(b)))
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_output_shape_and_dtype(self):
+        x, om, b = _data(0, 4, 5, 64)
+        z = rff_features(jnp.array(x), jnp.array(om), jnp.array(b))
+        assert z.shape == (4, 64)
+        assert z.dtype == jnp.float32
+
+    def test_feature_magnitude_bound(self):
+        # |z_i| <= sqrt(2/D) componentwise (it's a scaled cosine).
+        x, om, b = _data(1, 8, 3, 50)
+        z = np.array(rff_features(jnp.array(x), jnp.array(om), jnp.array(b)))
+        assert np.all(np.abs(z) <= np.sqrt(2.0 / 50) + 1e-6)
+
+    def test_kernel_approximation_mc(self):
+        # z(x)^T z(y) -> kappa_sigma(x - y) as D grows (Theorem 1 / Eq. (4)).
+        rng = np.random.default_rng(7)
+        d, D, sigma = 5, 8192, 5.0
+        x = rng.normal(size=(2, d)).astype(np.float32)
+        om, b = sample_rff_params_ref(rng, d, D, sigma)
+        z = np.array(
+            rff_features(jnp.array(x), jnp.array(om.astype(np.float32)), jnp.array(b.astype(np.float32)))
+        )
+        approx = float(z[0] @ z[1])
+        exact = float(np.exp(-np.sum((x[0] - x[1]) ** 2) / (2 * sigma**2)))
+        # MC error ~ 1/sqrt(D) ~ 0.011; allow 5 sigma.
+        assert abs(approx - exact) < 5.0 / np.sqrt(D)
+
+    def test_deterministic(self):
+        x, om, b = _data(3, 4, 2, 32)
+        z1 = np.array(rff_features(jnp.array(x), jnp.array(om), jnp.array(b)))
+        z2 = np.array(rff_features(jnp.array(x), jnp.array(om), jnp.array(b)))
+        np.testing.assert_array_equal(z1, z2)
+
+    def test_shift_invariance_of_gram(self):
+        # The Gram approximation depends only on x - y: shifting both rows
+        # by the same vector leaves z(x)^T z(y) approximately unchanged.
+        rng = np.random.default_rng(11)
+        d, D = 3, 4096
+        x = rng.normal(size=(2, d)).astype(np.float32)
+        shift = rng.normal(size=(1, d)).astype(np.float32)
+        om, b = sample_rff_params_ref(rng, d, D, 2.0)
+        om, b = om.astype(np.float32), b.astype(np.float32)
+        z = np.array(rff_features(jnp.array(x), jnp.array(om), jnp.array(b)))
+        zs = np.array(rff_features(jnp.array(x + shift), jnp.array(om), jnp.array(b)))
+        assert abs(float(z[0] @ z[1]) - float(zs[0] @ zs[1])) < 10.0 / np.sqrt(D)
+
+
+class TestGaussKernel:
+    @settings(deadline=None, max_examples=20)
+    @given(
+        B=st.integers(1, 12),
+        M=st.sampled_from([1, 3, 8, 32, 100, 128]),
+        d=st.integers(1, 8),
+        sigma=st.sampled_from([0.05, 0.5, 1.0, 5.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shape_sweep(self, B, M, d, sigma, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(B, d)).astype(np.float32)
+        c = rng.normal(size=(M, d)).astype(np.float32)
+        got = np.array(gauss_kernel(jnp.array(x), jnp.array(c), sigma=sigma))
+        want = np.array(gauss_kernel_ref(jnp.array(x), jnp.array(c), sigma))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_self_kernel_is_one(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(6, 4)).astype(np.float32)
+        k = np.array(gauss_kernel(jnp.array(x), jnp.array(x), sigma=1.0))
+        np.testing.assert_allclose(np.diag(k), 1.0, atol=1e-5)
+
+    def test_range(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(5, 3)).astype(np.float32) * 10
+        c = rng.normal(size=(7, 3)).astype(np.float32) * 10
+        k = np.array(gauss_kernel(jnp.array(x), jnp.array(c), sigma=0.5))
+        assert np.all(k >= 0.0) and np.all(k <= 1.0 + 1e-6)
+
+
+class TestTiling:
+    @given(D=st.integers(1, 2048))
+    @settings(deadline=None, max_examples=60)
+    def test_tile_divides(self, D):
+        t = _tile_d(D)
+        assert D % t == 0 and 1 <= t <= 128
+
+    @given(M=st.integers(1, 2048))
+    @settings(deadline=None, max_examples=60)
+    def test_tile_m_divides(self, M):
+        t = _tile_m(M)
+        assert M % t == 0 and 1 <= t <= 128
+
+    def test_vmem_footprint_under_budget(self):
+        # Every catalogued config must fit one grid step well under 16 MiB VMEM.
+        for (B, d, D) in [(32, 5, 300), (64, 5, 300), (32, 1, 100), (64, 2, 100)]:
+            assert vmem_footprint_bytes(B, d, D) < 16 * 1024 * 1024 / 4
+
+    def test_mxu_estimate_in_range(self):
+        u = mxu_utilization_estimate(32, 5, 300)
+        assert 0.0 < u <= 1.0

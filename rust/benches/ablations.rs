@@ -1,0 +1,124 @@
+//! Bench — ablations beyond the paper's figures (EXPERIMENTS.md §Ablations):
+//!
+//! 1. D-sweep error floors on Ex. 2 (extends Fig. 1's message),
+//! 2. kernel-approximation error vs the Rahimi–Recht certificate,
+//! 3. distributed traffic accounting (QKLMS vs RFF diffusion payloads),
+//! 4. QKLMS ε → (M, floor) trade-off table.
+//!
+//! `cargo bench --bench ablations [-- --runs 20]`
+
+use rff_kaf::distributed::{dict_payload_bytes, rff_payload_bytes, TrafficReport};
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{OnlineRegressor, Qklms, RffKlms, RffMap};
+use rff_kaf::metrics::{to_db, LearningCurve};
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+use rff_kaf::theory;
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let runs = args.get_or("runs", 20usize);
+    let seed = args.get_or("seed", 20160321u64);
+
+    // ---- 1. D-sweep steady-state floors on Example 2 ---------------------
+    println!("=== Ablation 1: RFF-KLMS error floor vs D (Ex. 2, {runs} runs x 6000) ===");
+    println!("{:<8} {:>16} {:>18}", "D", "steady state", "gap to QKLMS");
+    let horizon = 6000;
+    let mut q_curve = LearningCurve::new(horizon);
+    for run in 0..runs {
+        let mut src = NonlinearWiener::new(run_rng(seed, run), 0.05);
+        let samples = src.take_samples(horizon);
+        let mut q = Qklms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 1.0, 5.0);
+        q_curve.add_run(&q.run(&samples));
+    }
+    let q_ss = to_db(q_curve.steady_state(600));
+    for d_feat in [25usize, 50, 100, 200, 300, 600, 1200] {
+        let mut curve = LearningCurve::new(horizon);
+        for run in 0..runs {
+            let mut src = NonlinearWiener::new(run_rng(seed, run), 0.05);
+            let samples = src.take_samples(horizon);
+            let mut rng = run_rng(seed ^ 0xAB1, run);
+            let mut f = RffKlms::new(
+                RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, d_feat),
+                1.0,
+            );
+            curve.add_run(&f.run(&samples));
+        }
+        let ss = to_db(curve.steady_state(600));
+        println!("{:<8} {:>13.2} dB {:>15.2} dB", d_feat, ss, ss - q_ss);
+    }
+    println!("(QKLMS eps=5 reference: {q_ss:.2} dB)\n");
+
+    // ---- 2. approximation error vs the Rahimi–Recht certificate ----------
+    println!("=== Ablation 2: kernel approximation error vs certified bound ===");
+    println!(
+        "{:<8} {:>14} {:>22}",
+        "D", "empirical max", "certified eps (95%)"
+    );
+    let kernel = Kernel::Gaussian { sigma: 5.0 };
+    let diam = 6.0;
+    for d_feat in [100usize, 300, 1000, 3000] {
+        let mut rng = run_rng(seed ^ 0xAB2, d_feat);
+        let map = RffMap::draw(&mut rng, kernel, 5, d_feat);
+        let emp = theory::empirical_max_error(&map, kernel, diam, 3000, &mut rng);
+        // invert required_features approximately: find eps with D(eps)=d_feat
+        let mut eps = 1.0;
+        while eps > 1e-3 && theory::required_features(5, 5.0, diam, eps, 0.05) <= d_feat {
+            eps *= 0.95;
+        }
+        println!("{:<8} {:>14.4} {:>22.4}", d_feat, emp, eps / 0.95);
+    }
+    println!("(empirical stays far inside the loose uniform bound)\n");
+
+    // ---- 3. distributed traffic accounting -------------------------------
+    println!("=== Ablation 3: diffusion traffic, QKLMS vs RFF (16 links) ===");
+    let mut q = Qklms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 1.0, 5.0);
+    let mut src = NonlinearWiener::new(run_rng(seed ^ 0xAB3, 0), 0.05);
+    let mut m_traj = Vec::new();
+    for s in src.take_samples(12000) {
+        q.step(&s.x, s.y);
+        m_traj.push(q.dictionary_size());
+    }
+    let report = TrafficReport::compare(16, 5, 300, &m_traj);
+    println!(
+        "  steady per-link payload: QKLMS {} B (M={}) vs RFF {} B (D=300)",
+        dict_payload_bytes(*m_traj.last().unwrap(), 5),
+        m_traj.last().unwrap(),
+        rff_payload_bytes(300)
+    );
+    println!(
+        "  cumulative over {} rounds: dict {:.1} MB vs RFF {:.1} MB (ratio {:.2}x); matching ops {:.1}M (RFF: 0)",
+        report.steps,
+        report.dict_bytes as f64 / 1e6,
+        report.rff_bytes as f64 / 1e6,
+        report.bytes_ratio(),
+        report.dict_matching as f64 / 1e6,
+    );
+
+    // ---- 4. QKLMS epsilon trade-off --------------------------------------
+    println!("\n=== Ablation 4: QKLMS eps -> (M, floor) trade-off (Ex. 2) ===");
+    println!("{:<8} {:>8} {:>16} {:>14}", "eps", "M", "steady state", "train ms");
+    for eps in [0.5, 2.0, 5.0, 15.0, 50.0] {
+        let mut curve = LearningCurve::new(horizon);
+        let mut m_mean = 0.0;
+        let mut secs = 0.0;
+        let r = runs.min(8);
+        for run in 0..r {
+            let mut src = NonlinearWiener::new(run_rng(seed, run), 0.05);
+            let samples = src.take_samples(horizon);
+            let mut f = Qklms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 1.0, eps);
+            let t0 = std::time::Instant::now();
+            curve.add_run(&f.run(&samples));
+            secs += t0.elapsed().as_secs_f64() / r as f64;
+            m_mean += f.model_size() as f64 / r as f64;
+        }
+        println!(
+            "{:<8} {:>8.0} {:>13.2} dB {:>14.2}",
+            eps,
+            m_mean,
+            to_db(curve.steady_state(600)),
+            secs * 1e3
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench — paper **Fig. 1**: RFF-KLMS learning curves on the linear
+//! kernel expansion (Eq. 7) for several D, against the theory
+//! steady-state line (Proposition 1.4).
+//!
+//! `cargo bench --bench fig1_rffklms_convergence [-- --runs 100 --horizon 5000]`
+
+use rff_kaf::experiments::{fig1, print_figure, save_figure_csv, Series};
+use rff_kaf::metrics::to_db;
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let runs = args.get_or("runs", 100usize);
+    let horizon = args.get_or("horizon", 5000usize);
+    let seed = args.get_or("seed", 20160321u64);
+    let d_values: Vec<usize> = args
+        .get("d")
+        .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
+        .unwrap_or_else(|| vec![50, 100, 300, 1000]);
+
+    let t0 = std::time::Instant::now();
+    let res = fig1(runs, horizon, &d_values, seed);
+    let mut series = res.series.clone();
+    series.push(Series::new("theory transient (Prop.1)", res.theory_curve.clone()));
+    print_figure(
+        &format!("Fig. 1 — RFFKLMS on Eq. (7), {runs} runs x {horizon}"),
+        &series,
+        12,
+    );
+    println!(
+        "\ntheory steady state (the dashed line): {:.2} dB",
+        to_db(res.theory_steady_state)
+    );
+    for s in &res.series {
+        println!(
+            "  {:<18} steady-state {:.2} dB (theory gap {:+.2} dB)",
+            s.label,
+            s.steady_state_db(),
+            s.steady_state_db() - to_db(res.theory_steady_state)
+        );
+    }
+    if let Some(path) = args.get("out") {
+        save_figure_csv(path, &series).expect("csv");
+        println!("wrote {path}");
+    }
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

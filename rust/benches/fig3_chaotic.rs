@@ -1,0 +1,50 @@
+//! Bench — paper **Fig. 3a/3b**: the chaotic-series experiments
+//! (Examples 3 and 4), QKLMS vs RFF-KLMS at paper parameters.
+//!
+//! Paper scale: 1000 runs (defaults here). `-- --runs N` to adjust.
+
+use rff_kaf::experiments::{fig3a, fig3b, print_figure, save_figure_csv};
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let runs = args.get_or("runs", 1000usize);
+    let seed = args.get_or("seed", 20160321u64);
+
+    {
+        let horizon = args.get_or("horizon", 500usize);
+        let t0 = std::time::Instant::now();
+        let res = fig3a(runs, horizon, seed);
+        print_figure(
+            &format!("Fig. 3a — Example 3 chaotic series, {runs} runs x {horizon}"),
+            &res.series,
+            10,
+        );
+        println!(
+            "QKLMS dictionary M={:.1} (paper: ~7) | train secs {:.4} vs {:.4}",
+            res.model_sizes[0], res.train_secs[0], res.train_secs[1]
+        );
+        if let Some(path) = args.get("out") {
+            save_figure_csv(&format!("{path}.fig3a.csv"), &res.series).expect("csv");
+        }
+        println!("fig3a wall time: {:.2}s\n", t0.elapsed().as_secs_f64());
+    }
+    {
+        let horizon = args.get_or("horizon4", 1000usize);
+        let t0 = std::time::Instant::now();
+        let res = fig3b(runs, horizon, seed + 1);
+        print_figure(
+            &format!("Fig. 3b — Example 4 chaotic series, {runs} runs x {horizon}"),
+            &res.series,
+            10,
+        );
+        println!(
+            "QKLMS dictionary M={:.1} (paper: ~32) | train secs {:.4} vs {:.4}",
+            res.model_sizes[0], res.train_secs[0], res.train_secs[1]
+        );
+        if let Some(path) = args.get("out") {
+            save_figure_csv(&format!("{path}.fig3b.csv"), &res.series).expect("csv");
+        }
+        println!("fig3b wall time: {:.2}s", t0.elapsed().as_secs_f64());
+    }
+}

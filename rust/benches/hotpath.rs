@@ -1,0 +1,111 @@
+//! Bench — hot-path microbenchmarks for the §Perf pass: the per-sample
+//! step of every algorithm, the RFF feature map alone, the fast-math
+//! substitutes vs libm, and the PJRT chunk dispatch (when artifacts are
+//! built).
+//!
+//! `cargo bench --bench hotpath [-- --quick]`
+
+use rff_kaf::bench::Bencher;
+use rff_kaf::kaf::fastmath::{fast_cos, fast_exp_neg};
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{KrlsAld, OnlineRegressor, Qklms, RffKlms, RffKrls, RffMap};
+use rff_kaf::rng::{run_rng, Distribution, Normal};
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut b = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
+
+    let mut rng = run_rng(1, 0);
+    let normal = Normal::standard();
+
+    // --- transcendental substitutes --------------------------------------
+    let xs: Vec<f64> = normal.sample_vec(&mut rng, 1024);
+    b.bench("libm_cos_1024", || xs.iter().map(|&x| x.cos()).sum::<f64>());
+    b.bench("fast_cos_1024", || xs.iter().map(|&x| fast_cos(x)).sum::<f64>());
+    let negs: Vec<f64> = xs.iter().map(|x| -x.abs()).collect();
+    b.bench("libm_exp_1024", || negs.iter().map(|&x| x.exp()).sum::<f64>());
+    b.bench("fast_exp_neg_1024", || negs.iter().map(|&x| fast_exp_neg(x)).sum::<f64>());
+
+    // --- the RFF feature map (the L1 kernel's Rust mirror) ---------------
+    for (d, feats) in [(5usize, 300usize), (1, 100), (2, 100)] {
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, feats);
+        let x: Vec<f64> = normal.sample_vec(&mut rng, d);
+        let mut z = vec![0.0; feats];
+        let m = b.bench(&format!("rff_map_d{d}_D{feats}"), || {
+            map.apply_into(&x, &mut z);
+            z[0]
+        });
+        let _ = m;
+    }
+
+    // --- per-sample filter steps (Table-1 per-step costs) -----------------
+    let mut src = NonlinearWiener::new(run_rng(2, 0), 0.05);
+    let warm: Vec<_> = src.take_samples(4000);
+
+    // steady-state QKLMS (dictionary frozen around its plateau)
+    let mut qk = Qklms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 1.0, 5.0);
+    for s in &warm {
+        qk.step(&s.x, s.y);
+    }
+    let m_dict = qk.dictionary_size();
+    let probe = warm[warm.len() - 1].clone();
+    b.bench(&format!("qklms_step_M{m_dict}"), || qk.step(&probe.x, probe.y));
+
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+    let mut rff = RffKlms::new(map.clone(), 1.0);
+    b.bench("rffklms_step_D300", || rff.step(&probe.x, probe.y));
+
+    let mut rffk = RffKrls::new(map, 0.9995, 1e-4);
+    b.bench("rffkrls_step_D300", || rffk.step(&probe.x, probe.y));
+
+    let mut engel = KrlsAld::new(Kernel::Gaussian { sigma: 5.0 }, 5, 5e-4);
+    for s in &warm[..1500] {
+        engel.step(&s.x, s.y);
+    }
+    let m_eng = engel.dictionary_size();
+    b.bench(&format!("krls_ald_step_M{m_eng}"), || engel.step(&probe.x, probe.y));
+
+    // --- PJRT chunk dispatch (requires artifacts) --------------------------
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.json").exists() {
+        let exec = rff_kaf::runtime::PjrtExecutor::start(art).expect("executor");
+        let h = exec.handle();
+        let (d, feats) = (5usize, 300usize);
+        let n = h.chunk_len("rffklms_chunk", d, feats).unwrap();
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, feats);
+        let omega = map.omega_f32_dxD();
+        let bb = map.phases_f32();
+        let x: Vec<f32> = normal.sample_vec(&mut rng, n * d).iter().map(|&v| v as f32).collect();
+        let y: Vec<f32> = normal.sample_vec(&mut rng, n).iter().map(|&v| v as f32).collect();
+        let mut theta = vec![0.0f32; feats];
+        // warm the executable cache
+        let _ = h
+            .klms_chunk(d, feats, theta.clone(), x.clone(), y.clone(), omega.clone(), bb.clone(), 1.0)
+            .unwrap();
+        let m = b.bench(&format!("pjrt_klms_chunk_N{n}_D{feats}"), || {
+            let (t2, e) = h
+                .klms_chunk(d, feats, theta.clone(), x.clone(), y.clone(), omega.clone(), bb.clone(), 1.0)
+                .unwrap();
+            theta = t2;
+            e.len()
+        });
+        println!(
+            "{}",
+            m.throughput(n as f64) // samples per second through the chunk
+        );
+
+        let bsz = h.batch_len("rff_features", d, feats).unwrap();
+        let xb: Vec<f32> =
+            normal.sample_vec(&mut rng, bsz * d).iter().map(|&v| v as f32).collect();
+        let m = b.bench(&format!("pjrt_rff_features_B{bsz}_D{feats}"), || {
+            h.features(d, feats, xb.clone(), omega.clone(), bb.clone()).unwrap().len()
+        });
+        println!("{}", m.throughput(bsz as f64));
+    } else {
+        println!("(artifacts not built; skipping PJRT dispatch benches)");
+    }
+
+    println!("\n{} measurements total", b.results().len());
+}

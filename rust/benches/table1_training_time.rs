@@ -1,0 +1,65 @@
+//! Bench — paper **Table 1**: mean training times for QKLMS vs RFF-KLMS
+//! on Examples 2, 3 and 4, plus the dictionary sizes, plus the crossover
+//! analysis that places the compiled-code timings in context (see
+//! EXPERIMENTS.md for the discussion of the Matlab-vs-Rust platform
+//! effect on the paper's absolute ratios).
+//!
+//! Run with `cargo bench --bench table1_training_time`.
+//! `--runs N` and `--scale S` (fraction of the paper's horizons) adjust
+//! cost; defaults reproduce the paper's horizons exactly.
+
+use rff_kaf::experiments::table1;
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{OnlineRegressor, Qklms, RffKlms, RffMap};
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let runs = args.get_or("runs", 10usize);
+    let scale = args.get_or("scale", 1.0f64);
+    let seed = args.get_or("seed", 1u64);
+
+    println!("=== Table 1 — mean training times ({runs} runs, horizon scale {scale}) ===\n");
+    let t = table1(runs, scale, seed);
+    print!("{}", t.render());
+    println!(
+        "\npaper (Matlab, core i5): Ex2 0.891s vs 0.226s | Ex3 0.036s vs 0.006s | Ex4 0.057s vs 0.021s"
+    );
+    println!("(see EXPERIMENTS.md §Table1 for the platform discussion)\n");
+
+    // Crossover sweep: the compiled-code regime where the paper's
+    // direction holds — dictionary size M grows past D.
+    println!("=== Crossover: QKLMS cost grows with M, RFF-KLMS is flat (d=10) ===");
+    println!(
+        "{:<10} {:>10} {:>14} {:>14} {:>9}",
+        "epsilon", "dict M", "QKLMS ms", "RFFKLMS ms", "speedup"
+    );
+    let dim = 10;
+    let horizon = (4000.0 * scale).max(200.0) as usize;
+    for eps in [4.0, 2.0, 1.0, 0.5, 0.25] {
+        let mut src = NonlinearWiener::with_dim(run_rng(seed, 0), dim, 0.05);
+        let samples = src.take_samples(horizon);
+        let mut qk = Qklms::new(Kernel::Gaussian { sigma: 5.0 }, dim, 1.0, eps);
+        let t0 = std::time::Instant::now();
+        qk.run(&samples);
+        let t_qk = t0.elapsed().as_secs_f64() * 1e3;
+        let mut rng = run_rng(seed, 1);
+        let mut rff = RffKlms::new(
+            RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, dim, 300),
+            1.0,
+        );
+        let t0 = std::time::Instant::now();
+        rff.run(&samples);
+        let t_rff = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "{:<10} {:>10} {:>14.2} {:>14.2} {:>8.2}x",
+            eps,
+            qk.dictionary_size(),
+            t_qk,
+            t_rff,
+            t_qk / t_rff
+        );
+    }
+}

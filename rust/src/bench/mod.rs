@@ -1,0 +1,196 @@
+//! Micro-benchmark harness (criterion substitute for this offline
+//! environment): warmup, adaptive iteration count, outlier-trimmed
+//! statistics and criterion-style reporting.
+//!
+//! `cargo bench` drivers under `rust/benches/` build on [`Bencher`]; the
+//! per-figure experiment drivers use [`time_once`] for wall-clock rows
+//! (Table 1 replicates *training time*, not micro-op latency).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-iteration wall time statistics, outlier-trimmed.
+    pub mean_ns: f64,
+    /// Median.
+    pub median_ns: f64,
+    /// 95th percentile.
+    pub p95_ns: f64,
+    /// Standard deviation.
+    pub std_ns: f64,
+    /// Total iterations measured.
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Human-readable single-line report (criterion-ish).
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}] ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns - self.std_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.mean_ns + self.std_ns),
+            self.iters
+        )
+    }
+
+    /// Throughput line given elements processed per iteration.
+    pub fn throughput(&self, elems_per_iter: f64) -> String {
+        let eps = elems_per_iter / (self.mean_ns * 1e-9);
+        format!("{:<44} thrpt: {:.3} Melem/s", self.name, eps / 1e6)
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(300), Duration::from_secs(2), 10)
+    }
+}
+
+impl Bencher {
+    /// Custom budgets: `warmup` time, `measure` time, minimum iterations.
+    pub fn new(warmup: Duration, measure: Duration, min_iters: usize) -> Self {
+        Self { warmup, measure, min_iters, results: Vec::new() }
+    }
+
+    /// A faster profile for CI-ish runs.
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(50), Duration::from_millis(400), 5)
+    }
+
+    /// Benchmark `f`, which performs *one iteration* of the workload and
+    /// returns a value (kept opaque to stop dead-code elimination).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup: run until the warmup budget is spent.
+        let start = Instant::now();
+        let mut warm_iters = 0usize;
+        while start.elapsed() < self.warmup || warm_iters < 2 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        // Measure individual iterations until the measure budget is spent.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure || samples_ns.len() < self.min_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Trim the top/bottom 5% (scheduler noise).
+        let trim = samples_ns.len() / 20;
+        let kept = &samples_ns[trim..samples_ns.len() - trim.min(samples_ns.len() - 1)];
+        let n = kept.len().max(1) as f64;
+        let mean = kept.iter().sum::<f64>() / n;
+        let var = kept.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let median = kept[kept.len() / 2];
+        let p95 = kept[(kept.len() as f64 * 0.95) as usize % kept.len()];
+        let m = Measurement {
+            name: name.to_string(),
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            std_ns: var.sqrt(),
+            iters: samples_ns.len(),
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Time a single execution of `f` (for end-to-end rows like Table 1 where
+/// one "iteration" is a full training pass).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Mean wall time of `reps` executions of `f` (fresh state per rep is the
+/// caller's responsibility).
+pub fn time_mean(reps: usize, mut f: impl FnMut()) -> Duration {
+    assert!(reps > 0);
+    let t = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(&mut f)();
+    }
+    t.elapsed() / reps as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new(Duration::from_millis(5), Duration::from_millis(30), 5);
+        let m = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters >= 5);
+        assert!(m.median_ns <= m.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn time_mean_divides() {
+        let d = time_mean(10, || std::thread::sleep(Duration::from_micros(100)));
+        assert!(d >= Duration::from_micros(80) && d < Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 coordinator: the streaming service that owns filter sessions,
+//! routes requests, micro-batches PJRT work and orchestrates the paper's
+//! Monte-Carlo experiments.
+//!
+//! Architecture (vLLM-router-shaped, scaled to this paper):
+//!
+//! ```text
+//!  clients ──► SessionHandle ──► BoundedQueue (backpressure)
+//!                                   │
+//!                             router worker(s)
+//!                      ┌───────────┴────────────┐
+//!                 train path                predict path
+//!              FilterSession             DynamicBatcher: group ≤B
+//!            (chunk buffer → PJRT      predicts across sessions →
+//!             rffklms/rls chunk,        one rff_predict PJRT call
+//!             native remainder)
+//! ```
+//!
+//! The paper's *contribution* lives at the algorithm layer; the
+//! coordinator's job is to prove the fixed-size-θ property composes into
+//! a real serving system: constant-memory sessions, one executable per
+//! (d, D) config shared by every session, no dictionary transfer.
+
+mod orchestrator;
+mod service;
+mod session;
+
+pub use orchestrator::{McConfig, McResult, Orchestrator};
+pub use service::{CoordinatorService, Request, Response, ServiceConfig, ServiceStats};
+pub use session::{Algo, Backend, FilterSession, SessionConfig};

@@ -1,0 +1,152 @@
+//! Monte-Carlo experiment orchestrator: runs R independent realizations
+//! of (signal, filter) across the thread pool and accumulates the
+//! averaged learning curve — the machinery behind every figure of the
+//! paper (100 runs for Fig. 1, 1000 for Figs. 2–3).
+
+use crate::exec::parallel_for;
+use crate::kaf::OnlineRegressor;
+use crate::metrics::LearningCurve;
+use crate::signal::{SignalFactory, SignalSource};
+
+/// Monte-Carlo configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct McConfig {
+    /// Number of independent realizations.
+    pub runs: usize,
+    /// Samples per realization.
+    pub horizon: usize,
+    /// Worker threads (0 ⇒ auto).
+    pub workers: usize,
+}
+
+impl McConfig {
+    /// Standard config with auto worker count.
+    pub fn new(runs: usize, horizon: usize) -> Self {
+        Self { runs, horizon, workers: 0 }
+    }
+
+    fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::exec::default_parallelism()
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Result of one Monte-Carlo sweep for one algorithm.
+#[derive(Clone, Debug)]
+pub struct McResult {
+    /// Algorithm label.
+    pub name: String,
+    /// Averaged learning curve.
+    pub curve: LearningCurve,
+    /// Mean wall-clock training time per realization (seconds) — the
+    /// Table-1 statistic.
+    pub mean_train_secs: f64,
+    /// Mean final model size (dictionary size M or feature count D).
+    pub mean_model_size: f64,
+}
+
+impl McResult {
+    /// Steady-state MSE over the last tenth of the horizon.
+    pub fn steady_state(&self) -> f64 {
+        self.curve.steady_state((self.curve.horizon() / 10).max(1))
+    }
+}
+
+/// The orchestrator: pairs a [`SignalFactory`] with filter builders.
+pub struct Orchestrator {
+    config: McConfig,
+}
+
+impl Orchestrator {
+    /// Create with the given MC configuration.
+    pub fn new(config: McConfig) -> Self {
+        Self { config }
+    }
+
+    /// The MC configuration.
+    pub fn config(&self) -> &McConfig {
+        &self.config
+    }
+
+    /// Run `build_filter(run_index)` against `signals` for every run,
+    /// averaging curves. The filter builder receives the run index so it
+    /// can draw run-specific feature maps (deterministically).
+    pub fn run<F, R, S>(&self, name: &str, signals: &S, build_filter: F) -> McResult
+    where
+        S: SignalFactory,
+        F: Fn(usize) -> R + Sync,
+        R: OnlineRegressor,
+    {
+        let cfg = self.config;
+        let outputs = parallel_for(cfg.runs, cfg.effective_workers(), |run| {
+            let mut src = signals.for_run(run);
+            let samples = src.take_samples(cfg.horizon);
+            let mut filter = build_filter(run);
+            let t = std::time::Instant::now();
+            let errors = filter.run(&samples);
+            let secs = t.elapsed().as_secs_f64();
+            (errors, secs, filter.model_size())
+        });
+        let mut curve = LearningCurve::new(cfg.horizon);
+        let mut time_acc = 0.0;
+        let mut size_acc = 0.0;
+        for (errors, secs, size) in &outputs {
+            curve.add_run(errors);
+            time_acc += secs;
+            size_acc += *size as f64;
+        }
+        McResult {
+            name: name.to_string(),
+            curve,
+            mean_train_secs: time_acc / cfg.runs as f64,
+            mean_model_size: size_acc / cfg.runs as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::kaf::{RffKlms, RffMap};
+    use crate::rng::run_rng;
+    use crate::signal::{FnFactory, NonlinearWiener};
+
+    fn factory(seed: u64) -> impl SignalFactory<Source = NonlinearWiener> {
+        FnFactory::new(5, move |run| NonlinearWiener::new(run_rng(seed, run), 0.05))
+    }
+
+    fn rffklms(run: usize) -> RffKlms {
+        let mut rng = run_rng(999, run);
+        RffKlms::new(RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 100), 1.0)
+    }
+
+    #[test]
+    fn mc_sweep_accumulates_all_runs() {
+        let orch = Orchestrator::new(McConfig::new(8, 500));
+        let res = orch.run("RFF-KLMS", &factory(1), rffklms);
+        assert_eq!(res.curve.runs(), 8);
+        assert_eq!(res.curve.horizon(), 500);
+        assert!(res.mean_train_secs > 0.0);
+        assert_eq!(res.mean_model_size, 100.0);
+        // learning happened
+        let mse = res.curve.mse();
+        assert!(mse[499] < mse[0]);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let a = Orchestrator::new(McConfig { runs: 6, horizon: 200, workers: 1 })
+            .run("x", &factory(2), rffklms);
+        let b = Orchestrator::new(McConfig { runs: 6, horizon: 200, workers: 4 })
+            .run("x", &factory(2), rffklms);
+        let ma = a.curve.mse();
+        let mb = b.curve.mse();
+        for (x, y) in ma.iter().zip(&mb) {
+            assert!((x - y).abs() < 1e-15, "MC must be scheduling-independent");
+        }
+    }
+}

@@ -1,0 +1,429 @@
+//! The coordinator service: request router + worker pool + dynamic
+//! predict batcher over bounded (backpressure) queues.
+//!
+//! Requests enter through [`CoordinatorService::submit`]; router workers
+//! drain the queue, dispatch training samples to their sessions and
+//! micro-batch prediction requests per (d, D) config into single PJRT
+//! `rff_predict` executions (padding the fixed batch with zero rows).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::exec::BoundedQueue;
+use crate::runtime::ExecutorHandle;
+
+use super::session::FilterSession;
+
+/// Service tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Router worker threads.
+    pub workers: usize,
+    /// Request queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Max predicts to fuse into one PJRT batch.
+    pub max_batch: usize,
+    /// Gather window: after the first request of a batch arrives, how
+    /// long to wait for more before dispatching. `ZERO` (the default)
+    /// batches opportunistically — whatever is already queued — adding
+    /// no latency to synchronous request loops; bursty predict clients
+    /// set a small window (e.g. 1–2 ms) to trade tail latency for fused
+    /// PJRT dispatches.
+    pub batch_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_capacity: 1024,
+            max_batch: 32,
+            batch_wait: Duration::ZERO,
+        }
+    }
+}
+
+/// A request to the coordinator.
+pub enum Request {
+    /// Train session `session` on one labelled sample.
+    Train {
+        /// Target session id.
+        session: u64,
+        /// Input vector.
+        x: Vec<f64>,
+        /// Target.
+        y: f64,
+        /// Where to send the resulting a-priori errors (may be empty
+        /// while a PJRT chunk fills).
+        resp: Sender<Response>,
+    },
+    /// Predict with session `session`'s current model.
+    Predict {
+        /// Target session id.
+        session: u64,
+        /// Input vector.
+        x: Vec<f64>,
+        /// Response channel.
+        resp: Sender<Response>,
+    },
+    /// Flush any buffered partial chunk of `session`.
+    Flush {
+        /// Target session id.
+        session: u64,
+        /// Response channel.
+        resp: Sender<Response>,
+    },
+}
+
+/// A response from the coordinator.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// Errors emitted by a train/flush (empty while buffering).
+    Trained(Vec<f64>),
+    /// A prediction.
+    Predicted(f64),
+    /// Request failed.
+    Error(String),
+}
+
+/// Counters exported by the service.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    /// Training samples ingested.
+    pub trained: AtomicU64,
+    /// Predictions served.
+    pub predicted: AtomicU64,
+    /// PJRT predict batches dispatched.
+    pub predict_batches: AtomicU64,
+    /// Total rows in dispatched predict batches (fill ratio = rows /
+    /// (batches * B)).
+    pub predict_rows: AtomicU64,
+    /// Requests that returned an error.
+    pub errors: AtomicU64,
+}
+
+/// The running coordinator service.
+pub struct CoordinatorService {
+    queue: Arc<BoundedQueue<Request>>,
+    sessions: Arc<Mutex<BTreeMap<u64, FilterSession>>>,
+    stats: Arc<ServiceStats>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl CoordinatorService {
+    /// Start the service with `executor` (None disables PJRT batching —
+    /// predicts then run natively).
+    pub fn start(config: ServiceConfig, executor: Option<ExecutorHandle>) -> Self {
+        let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
+        let sessions: Arc<Mutex<BTreeMap<u64, FilterSession>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let stats = Arc::new(ServiceStats::default());
+        let workers = (0..config.workers.max(1))
+            .map(|i| {
+                let queue = Arc::clone(&queue);
+                let sessions = Arc::clone(&sessions);
+                let stats = Arc::clone(&stats);
+                let executor = executor.clone();
+                let cfg = config.clone();
+                std::thread::Builder::new()
+                    .name(format!("rff-kaf-router-{i}"))
+                    .spawn(move || router_loop(queue, sessions, stats, executor, cfg))
+                    .expect("spawning router worker")
+            })
+            .collect();
+        Self { queue, sessions, stats, workers, next_id: AtomicU64::new(1) }
+    }
+
+    /// Register a session, returning its id.
+    pub fn add_session(&self, session: FilterSession) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.sessions.lock().unwrap().insert(id, session);
+        id
+    }
+
+    /// Remove a session, returning it (flush first if you need the tail).
+    pub fn remove_session(&self, id: u64) -> Option<FilterSession> {
+        self.sessions.lock().unwrap().remove(&id)
+    }
+
+    /// Number of live sessions.
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// Submit a request (blocks when the queue is full — backpressure).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.queue
+            .push(req)
+            .map_err(|_| anyhow::anyhow!("service shut down"))
+    }
+
+    /// Service statistics.
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// Drain the queue and stop the workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Convenience synchronous wrappers (used by tests/examples) -------
+
+    /// Train and wait for the response.
+    pub fn train_sync(&self, session: u64, x: Vec<f64>, y: f64) -> Result<Vec<f64>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::Train { session, x, y, resp: tx })?;
+        match rx.recv()? {
+            Response::Trained(e) => Ok(e),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Predict and wait for the response.
+    pub fn predict_sync(&self, session: u64, x: Vec<f64>) -> Result<f64> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::Predict { session, x, resp: tx })?;
+        match rx.recv()? {
+            Response::Predicted(v) => Ok(v),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Flush and wait.
+    pub fn flush_sync(&self, session: u64) -> Result<Vec<f64>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::Flush { session, resp: tx })?;
+        match rx.recv()? {
+            Response::Trained(e) => Ok(e),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+fn router_loop(
+    queue: Arc<BoundedQueue<Request>>,
+    sessions: Arc<Mutex<BTreeMap<u64, FilterSession>>>,
+    stats: Arc<ServiceStats>,
+    executor: Option<ExecutorHandle>,
+    cfg: ServiceConfig,
+) {
+    loop {
+        // first_wait keeps idle workers parked cheaply; the short gather
+        // window lets request bursts coalesce into real batches.
+        let batch = match queue.pop_batch_gather(
+            cfg.max_batch,
+            Duration::from_millis(50),
+            cfg.batch_wait,
+        ) {
+            Ok(b) => b,
+            Err(_) => return, // closed and drained
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        // Partition: trains/flushes execute immediately; predicts gather
+        // for the dynamic batcher.
+        let mut predicts: Vec<(u64, Vec<f64>, Sender<Response>)> = Vec::new();
+        for req in batch {
+            match req {
+                Request::Train { session, x, y, resp } => {
+                    let mut guard = sessions.lock().unwrap();
+                    let out = match guard.get_mut(&session) {
+                        Some(s) => s.train(&x, y).map(Response::Trained),
+                        None => Err(anyhow::anyhow!("no session {session}")),
+                    };
+                    drop(guard);
+                    stats.trained.fetch_add(1, Ordering::Relaxed);
+                    respond(&stats, resp, out);
+                }
+                Request::Flush { session, resp } => {
+                    let mut guard = sessions.lock().unwrap();
+                    let out = match guard.get_mut(&session) {
+                        Some(s) => s.flush().map(Response::Trained),
+                        None => Err(anyhow::anyhow!("no session {session}")),
+                    };
+                    drop(guard);
+                    respond(&stats, resp, out);
+                }
+                Request::Predict { session, x, resp } => predicts.push((session, x, resp)),
+            }
+        }
+        if !predicts.is_empty() {
+            dispatch_predicts(&sessions, &stats, executor.as_ref(), predicts);
+        }
+    }
+}
+
+fn respond(stats: &ServiceStats, tx: Sender<Response>, out: Result<Response>) {
+    let msg = match out {
+        Ok(r) => r,
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            Response::Error(e.to_string())
+        }
+    };
+    let _ = tx.send(msg); // receiver may have hung up; that's fine
+}
+
+/// Group predicts by session config and, when PJRT is available and the
+/// config has a baked `rff_predict` artifact, run each group as one
+/// padded batch; otherwise fall back to native per-row predicts.
+fn dispatch_predicts(
+    sessions: &Mutex<BTreeMap<u64, FilterSession>>,
+    stats: &ServiceStats,
+    executor: Option<&ExecutorHandle>,
+    predicts: Vec<(u64, Vec<f64>, Sender<Response>)>,
+) {
+    // Group by (session) first: same session ⇒ same (d, D, Ω).
+    let mut by_session: BTreeMap<u64, Vec<(Vec<f64>, Sender<Response>)>> = BTreeMap::new();
+    for (sid, x, tx) in predicts {
+        by_session.entry(sid).or_default().push((x, tx));
+    }
+    let guard = sessions.lock().unwrap();
+    for (sid, rows) in by_session {
+        let Some(session) = guard.get(&sid) else {
+            for (_, tx) in rows {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Response::Error(format!("no session {sid}")));
+            }
+            continue;
+        };
+        let cfg = session.config();
+        let batched = executor.and_then(|eng| {
+            let bsz = eng.batch_len("rff_predict", cfg.dim, cfg.features).ok()?;
+            if rows.len() < 2 {
+                return None; // single predict: native is cheaper than a dispatch
+            }
+            Some((eng, bsz))
+        });
+        match batched {
+            Some((eng, bsz)) => {
+                let theta: Vec<f32> = session.theta().iter().map(|&v| v as f32).collect();
+                let omega = session.map().omega_f32_dxD();
+                let b = session.map().phases_f32();
+                // pad each group of up to bsz rows with zeros
+                for chunk in rows.chunks(bsz) {
+                    let mut x = vec![0.0f32; bsz * cfg.dim];
+                    for (r, (xi, _)) in chunk.iter().enumerate() {
+                        for (k, &v) in xi.iter().enumerate() {
+                            x[r * cfg.dim + k] = v as f32;
+                        }
+                    }
+                    match eng.predict(
+                        cfg.dim,
+                        cfg.features,
+                        theta.clone(),
+                        x,
+                        omega.clone(),
+                        b.clone(),
+                    ) {
+                        Ok(yhat) => {
+                            stats.predict_batches.fetch_add(1, Ordering::Relaxed);
+                            stats.predict_rows.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                            for (r, (_, tx)) in chunk.iter().enumerate() {
+                                stats.predicted.fetch_add(1, Ordering::Relaxed);
+                                let _ = tx.send(Response::Predicted(yhat[r] as f64));
+                            }
+                        }
+                        Err(e) => {
+                            for (_, tx) in chunk {
+                                stats.errors.fetch_add(1, Ordering::Relaxed);
+                                let _ = tx.send(Response::Error(e.to_string()));
+                            }
+                        }
+                    }
+                }
+            }
+            None => {
+                for (x, tx) in rows {
+                    let v = session.predict(&x);
+                    stats.predicted.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Response::Predicted(v));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::SessionConfig;
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    #[test]
+    fn train_predict_roundtrip_native() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(1, 0);
+        let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let sid = svc.add_session(s);
+        let mut src = NonlinearWiener::new(run_rng(1, 1), 0.05);
+        for smp in src.take_samples(1000) {
+            svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+        }
+        let mut src2 = NonlinearWiener::new(run_rng(1, 1), 0.05);
+        let probe = src2.take_samples(1100);
+        let mse: f64 = probe[1000..]
+            .iter()
+            .map(|t| {
+                let p = svc.predict_sync(sid, t.x.clone()).unwrap();
+                (p - t.clean).powi(2)
+            })
+            .sum::<f64>()
+            / 100.0;
+        assert!(mse < 1.0, "served-model mse {mse}");
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 1000);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_session_errors() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        assert!(svc.train_sync(42, vec![0.0; 5], 1.0).is_err());
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_sessions_do_not_interfere() {
+        let svc = Arc::new(CoordinatorService::start(ServiceConfig::default(), None));
+        let mut ids = Vec::new();
+        for i in 0..8 {
+            let mut rng = run_rng(100 + i, 0);
+            let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+            ids.push(svc.add_session(s));
+        }
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|&sid| {
+                let svc = Arc::clone(&svc);
+                std::thread::spawn(move || {
+                    let mut src = NonlinearWiener::new(run_rng(sid, 1), 0.05);
+                    for smp in src.take_samples(300) {
+                        svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 8 * 300);
+        assert_eq!(svc.session_count(), 8);
+        Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    }
+}

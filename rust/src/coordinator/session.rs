@@ -1,0 +1,452 @@
+//! Filter sessions: one online-learning state machine per stream.
+//!
+//! A session is configured with an algorithm + kernel + feature map and a
+//! backend:
+//! * [`Backend::Native`] — pure-Rust per-sample updates (lowest latency).
+//! * [`Backend::Pjrt`] — samples buffered into N-sample chunks executed
+//!   by the AOT artifact via the [`ExecutorHandle`]; remainders at
+//!   `flush()` run natively with matching math (f32 state, f64 features;
+//!   the integration tests bound the difference against the artifact).
+
+use anyhow::Result;
+
+use crate::kaf::kernels::Kernel;
+use crate::kaf::{OnlineRegressor, RffKlms, RffKrls, RffMap};
+use crate::rng::Rng;
+use crate::runtime::ExecutorHandle;
+
+/// Which algorithm a session runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algo {
+    /// RFF-KLMS with step size μ.
+    RffKlms {
+        /// LMS step size.
+        mu: f64,
+    },
+    /// RFF-KRLS with forgetting β and regularization λ.
+    RffKrls {
+        /// Forgetting factor.
+        beta: f64,
+        /// Regularization (P₀ = I/λ).
+        lambda: f64,
+    },
+}
+
+/// Execution backend for a session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust per-sample hot path.
+    Native,
+    /// Chunked AOT execution through PJRT.
+    Pjrt,
+}
+
+/// Session configuration.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Input dimension d.
+    pub dim: usize,
+    /// Feature count D.
+    pub features: usize,
+    /// Kernel (bandwidth matters: frequencies are drawn from its
+    /// spectral density).
+    pub kernel: Kernel,
+    /// Algorithm + hyperparameters.
+    pub algo: Algo,
+    /// Backend selection.
+    pub backend: Backend,
+}
+
+impl SessionConfig {
+    /// The paper's Ex.-2 serving config: d=5, D=300, σ=5, RFF-KLMS μ=1.
+    pub fn paper_default() -> Self {
+        Self {
+            dim: 5,
+            features: 300,
+            kernel: Kernel::Gaussian { sigma: 5.0 },
+            algo: Algo::RffKlms { mu: 1.0 },
+            backend: Backend::Native,
+        }
+    }
+}
+
+enum SessionState {
+    NativeKlms(RffKlms),
+    NativeKrls(RffKrls),
+    PjrtKlms {
+        map: RffMap,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        theta: Vec<f32>,
+        mu: f32,
+        buf_x: Vec<f32>,
+        buf_y: Vec<f32>,
+        chunk_n: usize,
+    },
+    PjrtKrls {
+        map: RffMap,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        theta: Vec<f32>,
+        p: Vec<f32>,
+        beta: f32,
+        buf_x: Vec<f32>,
+        buf_y: Vec<f32>,
+        chunk_n: usize,
+    },
+}
+
+/// One streaming filter session.
+pub struct FilterSession {
+    config: SessionConfig,
+    state: SessionState,
+    executor: Option<ExecutorHandle>,
+    samples_seen: usize,
+    sum_sq_err: f64,
+}
+
+impl FilterSession {
+    /// Create a session, drawing the feature map from `rng`.
+    /// `executor` is required for [`Backend::Pjrt`].
+    pub fn new(
+        config: SessionConfig,
+        rng: &mut Rng,
+        executor: Option<ExecutorHandle>,
+    ) -> Result<Self> {
+        let map = RffMap::draw(rng, config.kernel, config.dim, config.features);
+        Self::with_map(config, map, executor)
+    }
+
+    /// Create a session with an explicit feature map (lets tests share
+    /// `(Ω, b)` between native and PJRT sessions).
+    pub fn with_map(
+        config: SessionConfig,
+        map: RffMap,
+        executor: Option<ExecutorHandle>,
+    ) -> Result<Self> {
+        let state = match (config.backend, config.algo) {
+            (Backend::Native, Algo::RffKlms { mu }) => {
+                SessionState::NativeKlms(RffKlms::new(map, mu))
+            }
+            (Backend::Native, Algo::RffKrls { beta, lambda }) => {
+                SessionState::NativeKrls(RffKrls::new(map, beta, lambda))
+            }
+            (Backend::Pjrt, algo) => {
+                let handle = executor
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("PJRT backend requires an executor"))?;
+                let kind = match algo {
+                    Algo::RffKlms { .. } => "rffklms_chunk",
+                    Algo::RffKrls { .. } => "rffkrls_chunk",
+                };
+                let chunk_n = handle.chunk_len(kind, config.dim, config.features)?;
+                let omega = map.omega_f32_dxD();
+                let b = map.phases_f32();
+                match algo {
+                    Algo::RffKlms { mu } => SessionState::PjrtKlms {
+                        theta: vec![0.0; config.features],
+                        mu: mu as f32,
+                        buf_x: Vec::with_capacity(chunk_n * config.dim),
+                        buf_y: Vec::with_capacity(chunk_n),
+                        chunk_n,
+                        map,
+                        omega,
+                        b,
+                    },
+                    Algo::RffKrls { beta, lambda } => {
+                        let mut p = vec![0.0f32; config.features * config.features];
+                        for i in 0..config.features {
+                            p[i * config.features + i] = 1.0 / lambda as f32;
+                        }
+                        SessionState::PjrtKrls {
+                            theta: vec![0.0; config.features],
+                            p,
+                            beta: beta as f32,
+                            buf_x: Vec::with_capacity(chunk_n * config.dim),
+                            buf_y: Vec::with_capacity(chunk_n),
+                            chunk_n,
+                            map,
+                            omega,
+                            b,
+                        }
+                    }
+                }
+            }
+        };
+        Ok(Self { config, state, executor, samples_seen: 0, sum_sq_err: 0.0 })
+    }
+
+    /// Session configuration.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    /// Samples ingested so far.
+    pub fn samples_seen(&self) -> usize {
+        self.samples_seen
+    }
+
+    /// Running MSE over everything ingested (a-priori errors).
+    pub fn running_mse(&self) -> f64 {
+        if self.samples_seen == 0 {
+            0.0
+        } else {
+            self.sum_sq_err / self.samples_seen as f64
+        }
+    }
+
+    /// The feature map.
+    pub fn map(&self) -> &RffMap {
+        match &self.state {
+            SessionState::NativeKlms(f) => f.map(),
+            SessionState::NativeKrls(f) => f.map(),
+            SessionState::PjrtKlms { map, .. } | SessionState::PjrtKrls { map, .. } => map,
+        }
+    }
+
+    /// Current weight vector θ (f64 view).
+    pub fn theta(&self) -> Vec<f64> {
+        match &self.state {
+            SessionState::NativeKlms(f) => f.theta().to_vec(),
+            SessionState::NativeKrls(f) => f.theta().to_vec(),
+            SessionState::PjrtKlms { theta, .. } | SessionState::PjrtKrls { theta, .. } => {
+                theta.iter().map(|&v| v as f64).collect()
+            }
+        }
+    }
+
+    /// Predict `ŷ(x)` with the current model. Single-sample predicts use
+    /// the native map even on PJRT sessions (one dispatch per scalar is
+    /// never worth it; batched predicts go through the service batcher).
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        match &self.state {
+            SessionState::NativeKlms(f) => f.predict(x),
+            SessionState::NativeKrls(f) => f.predict(x),
+            SessionState::PjrtKlms { map, theta, .. }
+            | SessionState::PjrtKrls { map, theta, .. } => {
+                let z = map.apply(x);
+                z.iter().zip(theta).map(|(&zi, &t)| zi * t as f64).sum()
+            }
+        }
+    }
+
+    /// Ingest one labelled sample. Native backends return the a-priori
+    /// error immediately; the PJRT backend buffers and returns errors in
+    /// batches of `chunk_n` (empty vec while the chunk fills).
+    pub fn train(&mut self, x: &[f64], y: f64) -> Result<Vec<f64>> {
+        anyhow::ensure!(x.len() == self.config.dim, "sample dim mismatch");
+        self.samples_seen += 1;
+        match &mut self.state {
+            SessionState::NativeKlms(f) => {
+                let e = f.step(x, y);
+                self.sum_sq_err += e * e;
+                Ok(vec![e])
+            }
+            SessionState::NativeKrls(f) => {
+                let e = f.step(x, y);
+                self.sum_sq_err += e * e;
+                Ok(vec![e])
+            }
+            SessionState::PjrtKlms { buf_x, buf_y, chunk_n, .. } => {
+                buf_x.extend(x.iter().map(|&v| v as f32));
+                buf_y.push(y as f32);
+                if buf_y.len() < *chunk_n {
+                    return Ok(Vec::new());
+                }
+                self.run_klms_chunk()
+            }
+            SessionState::PjrtKrls { buf_x, buf_y, chunk_n, .. } => {
+                buf_x.extend(x.iter().map(|&v| v as f32));
+                buf_y.push(y as f32);
+                if buf_y.len() < *chunk_n {
+                    return Ok(Vec::new());
+                }
+                self.run_krls_chunk()
+            }
+        }
+    }
+
+    fn run_klms_chunk(&mut self) -> Result<Vec<f64>> {
+        let handle = self.executor.as_ref().expect("pjrt session has executor").clone();
+        let (d, features) = (self.config.dim, self.config.features);
+        let SessionState::PjrtKlms { omega, b, theta, mu, buf_x, buf_y, .. } = &mut self.state
+        else {
+            unreachable!()
+        };
+        let (theta_new, errs) = handle.klms_chunk(
+            d,
+            features,
+            std::mem::take(theta),
+            std::mem::take(buf_x),
+            std::mem::take(buf_y),
+            omega.clone(),
+            b.clone(),
+            *mu,
+        )?;
+        *theta = theta_new;
+        let errs: Vec<f64> = errs.into_iter().map(|e| e as f64).collect();
+        self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+        Ok(errs)
+    }
+
+    fn run_krls_chunk(&mut self) -> Result<Vec<f64>> {
+        let handle = self.executor.as_ref().expect("pjrt session has executor").clone();
+        let (d, features) = (self.config.dim, self.config.features);
+        let SessionState::PjrtKrls { omega, b, theta, p, beta, buf_x, buf_y, .. } =
+            &mut self.state
+        else {
+            unreachable!()
+        };
+        let (theta_new, p_new, errs) = handle.krls_chunk(
+            d,
+            features,
+            std::mem::take(theta),
+            std::mem::take(p),
+            std::mem::take(buf_x),
+            std::mem::take(buf_y),
+            omega.clone(),
+            b.clone(),
+            *beta,
+        )?;
+        *theta = theta_new;
+        *p = p_new;
+        let errs: Vec<f64> = errs.into_iter().map(|e| e as f64).collect();
+        self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+        Ok(errs)
+    }
+
+    /// Flush a partially filled PJRT chunk by finishing the remainder
+    /// with native (mathematically matching) updates. Returns the
+    /// remainder's errors. No-op for native sessions.
+    pub fn flush(&mut self) -> Result<Vec<f64>> {
+        match &mut self.state {
+            SessionState::NativeKlms(_) | SessionState::NativeKrls(_) => Ok(Vec::new()),
+            SessionState::PjrtKlms { map, theta, mu, buf_x, buf_y, .. } => {
+                let d = map.dim();
+                let mut errs = Vec::with_capacity(buf_y.len());
+                let mut z = vec![0.0f64; theta.len()];
+                for (row, &y) in buf_x.chunks(d).zip(buf_y.iter()) {
+                    let x: Vec<f64> = row.iter().map(|&v| v as f64).collect();
+                    map.apply_into(&x, &mut z);
+                    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
+                    let e = y as f64 - yhat;
+                    for (t, &zi) in theta.iter_mut().zip(&z) {
+                        *t += (*mu as f64 * e * zi) as f32;
+                    }
+                    errs.push(e);
+                }
+                buf_x.clear();
+                buf_y.clear();
+                self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+                Ok(errs)
+            }
+            SessionState::PjrtKrls { map, theta, p, beta, buf_x, buf_y, .. } => {
+                let d = map.dim();
+                let features = theta.len();
+                let mut errs = Vec::with_capacity(buf_y.len());
+                let mut z = vec![0.0f64; features];
+                for (row, &y) in buf_x.chunks(d).zip(buf_y.iter()) {
+                    let x: Vec<f64> = row.iter().map(|&v| v as f64).collect();
+                    map.apply_into(&x, &mut z);
+                    let mut pi = vec![0.0f64; features];
+                    for i in 0..features {
+                        let prow = &p[i * features..(i + 1) * features];
+                        pi[i] = prow.iter().zip(&z).map(|(&pv, &zi)| pv as f64 * zi).sum();
+                    }
+                    let denom =
+                        *beta as f64 + pi.iter().zip(&z).map(|(&a, &b)| a * b).sum::<f64>();
+                    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
+                    let e = y as f64 - yhat;
+                    let esc = e / denom;
+                    for i in 0..features {
+                        theta[i] += (pi[i] * esc) as f32;
+                    }
+                    let inv_beta = 1.0 / *beta as f64;
+                    let c = inv_beta / denom;
+                    for i in 0..features {
+                        let pii = pi[i];
+                        let prow = &mut p[i * features..(i + 1) * features];
+                        for (j, pv) in prow.iter_mut().enumerate() {
+                            *pv = (*pv as f64 * inv_beta - c * pii * pi[j]) as f32;
+                        }
+                    }
+                    errs.push(e);
+                }
+                buf_x.clear();
+                buf_y.clear();
+                self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+                Ok(errs)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    #[test]
+    fn native_session_learns() {
+        let mut rng = run_rng(1, 0);
+        let mut s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(1, 1), 0.05);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for (i, smp) in src.take_samples(4000).iter().enumerate() {
+            let e = s.train(&smp.x, smp.y).unwrap()[0];
+            if i < 200 {
+                first += e * e;
+            }
+            if i >= 3800 {
+                last += e * e;
+            }
+        }
+        assert!(last < first * 0.25, "first={first} last={last}");
+        assert_eq!(s.samples_seen(), 4000);
+        assert!(s.running_mse() > 0.0);
+    }
+
+    #[test]
+    fn krls_native_session_works() {
+        let cfg = SessionConfig {
+            algo: Algo::RffKrls { beta: 0.9995, lambda: 1e-4 },
+            features: 100,
+            ..SessionConfig::paper_default()
+        };
+        let mut rng = run_rng(2, 0);
+        let mut s = FilterSession::new(cfg, &mut rng, None).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(2, 1), 0.05);
+        for smp in src.take_samples(500) {
+            s.train(&smp.x, smp.y).unwrap();
+        }
+        let mut src2 = NonlinearWiener::new(run_rng(2, 1), 0.05);
+        let test = src2.take_samples(600);
+        let tail = &test[500..];
+        let mse: f64 =
+            tail.iter().map(|t| (s.predict(&t.x) - t.clean).powi(2)).sum::<f64>() / 100.0;
+        assert!(mse < 0.5, "predict mse {mse}");
+    }
+
+    #[test]
+    fn pjrt_backend_requires_executor() {
+        let cfg = SessionConfig { backend: Backend::Pjrt, ..SessionConfig::paper_default() };
+        let mut rng = run_rng(3, 0);
+        assert!(FilterSession::new(cfg, &mut rng, None).is_err());
+    }
+
+    #[test]
+    fn flush_noop_on_native() {
+        let mut rng = run_rng(4, 0);
+        let mut s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        assert!(s.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut rng = run_rng(5, 0);
+        let mut s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        assert!(s.train(&[1.0, 2.0], 0.5).is_err());
+    }
+}

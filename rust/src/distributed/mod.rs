@@ -1,0 +1,21 @@
+//! Distributed (diffusion) RFF-KLMS over a simulated network — the
+//! extension the paper's §7 / ref [21] points to, and the setting its
+//! intro uses to motivate fixed-size solutions: cooperating nodes
+//! exchange `θ ∈ R^D` vectors instead of dictionaries, so no dictionary
+//! matching and constant per-link payload.
+//!
+//! Combine-then-adapt (CTA) diffusion:
+//! ```text
+//! φ_k = Σ_l a_{lk} θ_l         (combine over neighbors, A doubly sym.)
+//! θ_k = φ_k + μ e_k z(x_k),    e_k = y_k − φ_kᵀ z(x_k)
+//! ```
+//! with Metropolis combination weights on an arbitrary undirected graph.
+
+mod network;
+mod traffic;
+
+pub use network::{DiffusionRffKlms, NetworkTopology};
+pub use traffic::{
+    dict_matching_ops, dict_payload_bytes, dict_traffic_bytes, rff_payload_bytes,
+    rff_traffic_bytes, TrafficReport,
+};

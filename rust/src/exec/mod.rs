@@ -1,0 +1,111 @@
+//! Execution substrate: a small thread pool with scoped parallel-for and
+//! bounded MPMC work queues.
+//!
+//! The offline vendor set has no `tokio`/`rayon`, so this module provides
+//! the concurrency the coordinator and the Monte-Carlo orchestrator need:
+//! [`ThreadPool`] for long-lived workers, [`parallel_for`] for data-
+//! parallel loops (MC runs), and [`BoundedQueue`] for backpressure-aware
+//! pipeline stages.
+
+mod pool;
+mod queue;
+
+pub use pool::ThreadPool;
+pub use queue::{BoundedQueue, QueueClosed};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to default to (physical parallelism, capped).
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(32)
+}
+
+/// Run `f(i)` for every `i in 0..n` across `workers` threads, collecting
+/// results in index order. Work-stealing via an atomic counter: cheap and
+/// load-balanced for heterogeneous task costs (e.g. QKLMS runs whose
+/// dictionaries grow differently).
+pub fn parallel_for<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                // thread-local staging to avoid hammering the mutex
+                let mut staged: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    staged.push((i, f(i)));
+                    if staged.len() >= 8 {
+                        let mut guard = results.lock().unwrap();
+                        for (j, v) in staged.drain(..) {
+                            guard[j] = Some(v);
+                        }
+                    }
+                }
+                if !staged.is_empty() {
+                    let mut guard = results.lock().unwrap();
+                    for (j, v) in staged.drain(..) {
+                        guard[j] = Some(v);
+                    }
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("worker panicked before storing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_for_preserves_order() {
+        let out = parallel_for(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_for_empty_and_single() {
+        assert!(parallel_for(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_for(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn parallel_for_single_worker_fallback() {
+        assert_eq!(parallel_for(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_stateful_work() {
+        use crate::rng::run_rng;
+        let serial: Vec<u64> = (0..20).map(|i| run_rng(5, i).next_u64()).collect();
+        let par = parallel_for(20, 6, |i| run_rng(5, i).next_u64());
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn default_parallelism_sane() {
+        let p = default_parallelism();
+        assert!(p >= 1 && p <= 32);
+    }
+}

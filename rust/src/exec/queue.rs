@@ -1,0 +1,266 @@
+//! Bounded blocking MPMC queue — the backpressure primitive between the
+//! coordinator's ingestion and batching stages.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Error returned when pushing to / popping from a closed queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueClosed;
+
+impl std::fmt::Display for QueueClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "queue closed")
+    }
+}
+
+impl std::error::Error for QueueClosed {}
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded blocking MPMC queue with close semantics:
+/// * `push` blocks while full (backpressure), errs once closed;
+/// * `pop` blocks while empty, drains remaining items after close, then
+///   errs.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue holding at most `capacity` items (`capacity >= 1`).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { buf: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current length (racy, diagnostic only).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).buf.len()
+    }
+
+    /// True if currently empty (racy, diagnostic only).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; waits while full. Errs if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), QueueClosed> {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        loop {
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            if g.buf.len() < self.capacity {
+                g.buf.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking push; `Ok(false)` when full.
+    pub fn try_push(&self, item: T) -> Result<bool, QueueClosed> {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if g.closed {
+            return Err(QueueClosed);
+        }
+        if g.buf.len() >= self.capacity {
+            return Ok(false);
+        }
+        g.buf.push_back(item);
+        self.not_empty.notify_one();
+        Ok(true)
+    }
+
+    /// Blocking pop; drains pending items after close, then errs.
+    pub fn pop(&self) -> Result<T, QueueClosed> {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            g = self.not_empty.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Pop up to `max` items, waiting up to `wait` for the *first* item —
+    /// the micro-batching primitive: returns whatever accumulated within
+    /// the window.
+    pub fn pop_batch(&self, max: usize, wait: Duration) -> Result<Vec<T>, QueueClosed> {
+        self.pop_batch_gather(max, wait, Duration::ZERO)
+    }
+
+    /// Micro-batching with a gather window: wait up to `first_wait` for
+    /// the first item, then keep gathering until `max` items have
+    /// arrived or `gather` elapses since the first item. This is what
+    /// lets a dynamic batcher fuse a burst of requests racing in from
+    /// producers instead of draining them one by one.
+    pub fn pop_batch_gather(
+        &self,
+        max: usize,
+        first_wait: Duration,
+        gather: Duration,
+    ) -> Result<Vec<T>, QueueClosed> {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let deadline = std::time::Instant::now() + first_wait;
+        while g.buf.is_empty() {
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(Vec::new());
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap_or_else(std::sync::PoisonError::into_inner);
+            g = guard;
+        }
+        // gather window: wait for the batch to fill
+        if !gather.is_zero() {
+            let gather_deadline = std::time::Instant::now() + gather;
+            while g.buf.len() < max && !g.closed {
+                let now = std::time::Instant::now();
+                if now >= gather_deadline {
+                    break;
+                }
+                let (guard, _timeout) =
+                    self.not_empty.wait_timeout(g, gather_deadline - now).unwrap_or_else(std::sync::PoisonError::into_inner);
+                g = guard;
+            }
+        }
+        // another consumer may have drained the queue while we gathered:
+        // an empty take is a valid (empty) batch, not a panic.
+        let take = max.min(g.buf.len());
+        let out: Vec<T> = g.buf.drain(..take).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        Ok(out)
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(!q.try_push(3).unwrap());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(3)); // blocks
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap(), 1);
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop().unwrap(), 3);
+    }
+
+    #[test]
+    fn close_drains_then_errs() {
+        let q = BoundedQueue::new(4);
+        q.push("a").unwrap();
+        q.close();
+        assert_eq!(q.pop().unwrap(), "a");
+        assert_eq!(q.pop(), Err(QueueClosed));
+        assert_eq!(q.push("b"), Err(QueueClosed));
+    }
+
+    #[test]
+    fn pop_batch_collects_waiting_items() {
+        let q = BoundedQueue::new(16);
+        for i in 0..7 {
+            q.push(i).unwrap();
+        }
+        let batch = q.pop_batch(5, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3, 4]);
+        let rest = q.pop_batch(5, Duration::from_millis(10)).unwrap();
+        assert_eq!(rest, vec![5, 6]);
+    }
+
+    #[test]
+    fn pop_batch_times_out_empty() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(4);
+        let batch = q.pop_batch(5, Duration::from_millis(5)).unwrap();
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let total = 1000;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..total / 4 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumed = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let c = Arc::clone(&consumed);
+                std::thread::spawn(move || {
+                    while let Ok(v) = q.pop() {
+                        c.lock().unwrap().push(v);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let got = consumed.lock().unwrap();
+        assert_eq!(got.len(), total);
+    }
+}

@@ -1,0 +1,339 @@
+//! The per-figure experiment drivers.
+
+use crate::coordinator::{McConfig, McResult, Orchestrator};
+use crate::kaf::kernels::Kernel;
+use crate::kaf::{KrlsAld, Qklms, RffKlms, RffKrls, RffMap};
+use crate::rng::run_rng;
+use crate::signal::{Chaotic1, Chaotic2, FnFactory, LinearKernelExpansion, NonlinearWiener};
+use crate::theory;
+
+use super::report::Series;
+
+/// Result of the Fig.-1 experiment: one curve per D plus the theory line.
+#[derive(Clone, Debug)]
+pub struct Fig1Result {
+    /// Simulated curves, one per requested D (labelled `RFFKLMS D=..`).
+    pub series: Vec<Series>,
+    /// Theory steady-state MSE (Proposition 1.4 closed form) for the
+    /// largest D — the dashed horizontal line of Fig. 1.
+    pub theory_steady_state: f64,
+    /// Predicted transient curve from the A_n recursion (largest D).
+    pub theory_curve: Vec<f64>,
+}
+
+/// Fig. 1 — RFF-KLMS on the linear kernel expansion (Eq. 7).
+///
+/// Paper setup: 5000 samples, 100 runs, x~N(0,I_5), σ_η=0.1, a_m~N(0,25),
+/// σ=5, μ=1, M=10 centers (the paper leaves M unstated; 10 keeps the
+/// clean signal O(10) as in the figure).
+pub fn fig1(runs: usize, horizon: usize, d_values: &[usize], seed: u64) -> Fig1Result {
+    let dim = 5;
+    let m_centers = 10;
+    let sigma = 5.0;
+    let mu = 1.0;
+    let noise_std = 0.1;
+    let orch = Orchestrator::new(McConfig::new(runs, horizon));
+    let factory = FnFactory::new(dim, move |run| {
+        LinearKernelExpansion::paper_default(run_rng(seed, run), dim, m_centers)
+    });
+    let mut series = Vec::new();
+    for &d_feat in d_values {
+        let res = orch.run(&format!("RFFKLMS D={d_feat}"), &factory, |run| {
+            let mut rng = run_rng(seed ^ 0xD5EE_D000, run);
+            RffKlms::new(RffMap::draw(&mut rng, Kernel::Gaussian { sigma }, dim, d_feat), mu)
+        });
+        series.push(Series::new(res.name.clone(), res.curve.mse()));
+    }
+    // Theory line for the largest D: R_zz from the closed form, steady
+    // state from Prop. 1.4; transient from the A_n recursion with a
+    // representative center draw (run 0).
+    let d_max = *d_values.iter().max().unwrap();
+    let mut rng = run_rng(seed ^ 0xD5EE_D000, 0);
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma }, dim, d_max);
+    let rzz = theory::rzz_closed_form(&map, 1.0);
+    let noise_var = noise_std * noise_std;
+    let theory_ss = theory::steady_state_mse(&rzz, mu, noise_var);
+    let src = LinearKernelExpansion::paper_default(run_rng(seed, 0), dim, m_centers);
+    let theta_opt = theory::optimal_theta(&map, src.centers(), src.coeffs());
+    let theory_curve =
+        theory::predicted_learning_curve(&rzz, &theta_opt, mu, noise_var, horizon);
+    Fig1Result { series, theory_steady_state: theory_ss, theory_curve }
+}
+
+/// Result of a two-algorithm comparison figure.
+#[derive(Clone, Debug)]
+pub struct FigCompareResult {
+    /// The two (or more) curves.
+    pub series: Vec<Series>,
+    /// Mean training seconds per run, aligned with `series`.
+    pub train_secs: Vec<f64>,
+    /// Mean final model size, aligned with `series`.
+    pub model_sizes: Vec<f64>,
+}
+
+impl FigCompareResult {
+    fn push(&mut self, res: &McResult) {
+        self.series.push(Series::new(res.name.clone(), res.curve.mse()));
+        self.train_secs.push(res.mean_train_secs);
+        self.model_sizes.push(res.mean_model_size);
+    }
+
+    fn new() -> Self {
+        Self { series: Vec::new(), train_secs: Vec::new(), model_sizes: Vec::new() }
+    }
+}
+
+/// Fig. 2a — RFF-KLMS (D=300) vs QKLMS (ε=5) on Ex. 2.
+/// Paper: 15000 samples, 1000 runs, σ=5, μ=1, σ_η=0.05.
+pub fn fig2a(runs: usize, horizon: usize, seed: u64) -> FigCompareResult {
+    let dim = 5;
+    let sigma = 5.0;
+    let orch = Orchestrator::new(McConfig::new(runs, horizon));
+    let factory =
+        FnFactory::new(dim, move |run| NonlinearWiener::new(run_rng(seed, run), 0.05));
+    let mut out = FigCompareResult::new();
+    out.push(&orch.run("QKLMS eps=5", &factory, |_| {
+        Qklms::new(Kernel::Gaussian { sigma }, dim, 1.0, 5.0)
+    }));
+    out.push(&orch.run("RFFKLMS D=300", &factory, |run| {
+        let mut rng = run_rng(seed ^ 0xFF2A, run);
+        RffKlms::new(RffMap::draw(&mut rng, Kernel::Gaussian { sigma }, dim, 300), 1.0)
+    }));
+    out
+}
+
+/// Fig. 2b — RFF-KRLS (D=300, λ=1e-4, β=0.9995) vs Engel KRLS (ν=5e-4)
+/// on Ex.-2 data.
+pub fn fig2b(runs: usize, horizon: usize, seed: u64) -> FigCompareResult {
+    let dim = 5;
+    let sigma = 5.0;
+    let orch = Orchestrator::new(McConfig::new(runs, horizon));
+    let factory =
+        FnFactory::new(dim, move |run| NonlinearWiener::new(run_rng(seed, run), 0.05));
+    let mut out = FigCompareResult::new();
+    out.push(&orch.run("KRLS-ALD nu=5e-4", &factory, |_| {
+        KrlsAld::new(Kernel::Gaussian { sigma }, dim, 5e-4)
+    }));
+    out.push(&orch.run("RFFKRLS D=300", &factory, |run| {
+        let mut rng = run_rng(seed ^ 0xFF2B, run);
+        RffKrls::new(
+            RffMap::draw(&mut rng, Kernel::Gaussian { sigma }, dim, 300),
+            0.9995,
+            1e-4,
+        )
+    }));
+    out
+}
+
+/// Fig. 3a — Ex. 3 chaotic series: RFF-KLMS (D=100) vs QKLMS (ε=0.01).
+/// Paper: 500 samples, 1000 runs, σ=0.05, μ=1, σ_η=0.01.
+pub fn fig3a(runs: usize, horizon: usize, seed: u64) -> FigCompareResult {
+    let sigma = 0.05;
+    let orch = Orchestrator::new(McConfig::new(runs, horizon));
+    let factory = FnFactory::new(1, move |run| Chaotic1::paper_default(run_rng(seed, run)));
+    let mut out = FigCompareResult::new();
+    out.push(&orch.run("QKLMS eps=0.01", &factory, |_| {
+        Qklms::new(Kernel::Gaussian { sigma }, 1, 1.0, 0.01)
+    }));
+    out.push(&orch.run("RFFKLMS D=100", &factory, |run| {
+        let mut rng = run_rng(seed ^ 0xF13A, run);
+        RffKlms::new(RffMap::draw(&mut rng, Kernel::Gaussian { sigma }, 1, 100), 1.0)
+    }));
+    out
+}
+
+/// Fig. 3b — Ex. 4 chaotic series: RFF-KLMS (D=100) vs QKLMS (ε=0.01).
+/// Paper: 1000 samples, 1000 runs, σ=0.05, μ=1, σ_η=0.001.
+pub fn fig3b(runs: usize, horizon: usize, seed: u64) -> FigCompareResult {
+    let sigma = 0.05;
+    let orch = Orchestrator::new(McConfig::new(runs, horizon));
+    let factory = FnFactory::new(2, move |run| Chaotic2::paper_default(run_rng(seed, run)));
+    let mut out = FigCompareResult::new();
+    out.push(&orch.run("QKLMS eps=0.01", &factory, |_| {
+        Qklms::new(Kernel::Gaussian { sigma }, 2, 1.0, 0.01)
+    }));
+    out.push(&orch.run("RFFKLMS D=100", &factory, |run| {
+        let mut rng = run_rng(seed ^ 0xF13B, run);
+        RffKlms::new(RffMap::draw(&mut rng, Kernel::Gaussian { sigma }, 2, 100), 1.0)
+    }));
+    out
+}
+
+/// One row of Table 1.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    /// Experiment label ("Example 2" …).
+    pub experiment: String,
+    /// Mean QKLMS training seconds.
+    pub qklms_secs: f64,
+    /// Mean RFF-KLMS training seconds.
+    pub rffklms_secs: f64,
+    /// Mean final QKLMS dictionary size.
+    pub qklms_dict: f64,
+    /// RFF feature count D.
+    pub rff_d: usize,
+}
+
+/// Table 1 result.
+#[derive(Clone, Debug)]
+pub struct Table1Result {
+    /// Rows for Examples 2, 3, 4.
+    pub rows: Vec<Table1Row>,
+}
+
+impl Table1Result {
+    /// Render the table like the paper's.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{:<12} {:>12} {:>14} {:>10} {:>22}\n",
+            "Experiment", "QKLMS time", "RFFKLMS time", "speedup", "QKLMS dictionary size"
+        ));
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:<12} {:>10.3}s {:>12.3}s {:>9.2}x {:>17} M={:.0}\n",
+                r.experiment,
+                r.qklms_secs,
+                r.rffklms_secs,
+                r.qklms_secs / r.rffklms_secs,
+                "",
+                r.qklms_dict
+            ));
+        }
+        s
+    }
+}
+
+/// Table 1 — mean training times for QKLMS vs RFF-KLMS on Examples 2–4.
+///
+/// Uses the paper's per-example horizons (15000 / 500 / 1000) scaled by
+/// `horizon_scale` and `runs` repetitions for the mean.
+pub fn table1(runs: usize, horizon_scale: f64, seed: u64) -> Table1Result {
+    let mut rows = Vec::new();
+    let scaled = |n: usize| ((n as f64 * horizon_scale) as usize).max(10);
+
+    // Example 2
+    {
+        let r = fig2a(runs, scaled(15000), seed);
+        rows.push(Table1Row {
+            experiment: "Example 2".into(),
+            qklms_secs: r.train_secs[0],
+            rffklms_secs: r.train_secs[1],
+            qklms_dict: r.model_sizes[0],
+            rff_d: 300,
+        });
+    }
+    // Example 3
+    {
+        let r = fig3a(runs, scaled(500), seed + 1);
+        rows.push(Table1Row {
+            experiment: "Example 3".into(),
+            qklms_secs: r.train_secs[0],
+            rffklms_secs: r.train_secs[1],
+            qklms_dict: r.model_sizes[0],
+            rff_d: 100,
+        });
+    }
+    // Example 4
+    {
+        let r = fig3b(runs, scaled(1000), seed + 2);
+        rows.push(Table1Row {
+            experiment: "Example 4".into(),
+            qklms_secs: r.train_secs[0],
+            rffklms_secs: r.train_secs[1],
+            qklms_dict: r.model_sizes[0],
+            rff_d: 100,
+        });
+    }
+    Table1Result { rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_theory_line_close_to_simulation() {
+        let res = fig1(10, 3000, &[400], 42);
+        let sim = &res.series[0];
+        let w = 300;
+        let sim_ss: f64 =
+            sim.mse[sim.mse.len() - w..].iter().sum::<f64>() / w as f64;
+        let rel = (sim_ss - res.theory_steady_state).abs() / res.theory_steady_state;
+        assert!(rel < 0.5, "sim {sim_ss} vs theory {}", res.theory_steady_state);
+        // theory transient decays
+        assert!(res.theory_curve[0] > res.theory_curve[2999]);
+    }
+
+    #[test]
+    fn fig2a_same_error_floor_shape() {
+        let res = fig2a(6, 3000, 7);
+        let ss: Vec<f64> = res.series.iter().map(|s| s.steady_state_db()).collect();
+        // QKLMS and RFFKLMS within 3 dB at steady state (paper: overlapping)
+        assert!((ss[0] - ss[1]).abs() < 3.0, "QKLMS {} vs RFF {}", ss[0], ss[1]);
+        // timing is platform-dependent (see EXPERIMENTS.md Table-1 notes);
+        // assert only that both were measured
+        assert!(res.train_secs.iter().all(|&t| t > 0.0), "{:?}", res.train_secs);
+    }
+
+    #[test]
+    fn fig3a_small_dictionary_regime() {
+        let res = fig3a(6, 500, 9);
+        // paper reports M ~ 7
+        assert!(res.model_sizes[0] < 40.0, "M={}", res.model_sizes[0]);
+        // both learn: steady state below initial MSE
+        for s in &res.series {
+            let head = s.mse[..20].iter().sum::<f64>() / 20.0;
+            let tail = s.mse[s.mse.len() - 50..].iter().sum::<f64>() / 50.0;
+            assert!(tail < head, "{}: head {head} tail {tail}", s.label);
+        }
+    }
+
+    #[test]
+    fn table1_rows_and_dictionaries() {
+        let t = table1(3, 0.05, 11);
+        assert_eq!(t.rows.len(), 3);
+        // dictionary sizes in the paper's regimes (scaled horizons give
+        // smaller-but-same-order M)
+        assert!(t.rows[0].qklms_dict > 10.0, "{:?}", t.rows[0]);
+        assert!(t.rows[1].qklms_dict < 40.0, "{:?}", t.rows[1]);
+        let rendered = t.render();
+        assert!(rendered.contains("Example 2"));
+    }
+
+    #[test]
+    fn table1_crossover_rff_wins_at_large_dictionaries() {
+        // The honest compiled-code version of the paper's Table-1 claim:
+        // RFF-KLMS O(Dd) with FIXED D beats QKLMS O(Md) once the tuned
+        // dictionary M grows past D — which the paper's own intro argues
+        // happens as input dimension / accuracy demands grow. d=10 with a
+        // small epsilon forces M >> D.
+        use crate::kaf::OnlineRegressor;
+        use crate::signal::SignalSource;
+        let dim = 10;
+        let mut src = NonlinearWiener::with_dim(run_rng(3, 0), dim, 0.05);
+        let samples = src.take_samples(4000);
+        let mut qk = Qklms::new(Kernel::Gaussian { sigma: 5.0 }, dim, 1.0, 0.5);
+        let t0 = std::time::Instant::now();
+        let _ = qk.run(&samples);
+        let t_qk = t0.elapsed();
+        let mut rng = run_rng(3, 1);
+        let mut rff = RffKlms::new(
+            RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, dim, 300),
+            1.0,
+        );
+        let t0 = std::time::Instant::now();
+        let _ = rff.run(&samples);
+        let t_rff = t0.elapsed();
+        assert!(
+            qk.dictionary_size() > 1000,
+            "crossover setup expects a big dictionary, got {}",
+            qk.dictionary_size()
+        );
+        assert!(
+            t_rff < t_qk,
+            "RFF {t_rff:?} must beat QKLMS {t_qk:?} at M={} >> D=300",
+            qk.dictionary_size()
+        );
+    }
+}

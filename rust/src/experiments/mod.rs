@@ -1,0 +1,22 @@
+//! Experiment drivers: one function per table/figure of the paper.
+//!
+//! | driver | reproduces | paper setup |
+//! |---|---|---|
+//! | [`fig1`]   | Fig. 1  | RFF-KLMS on Eq. (7), D sweep + theory line |
+//! | [`fig2a`]  | Fig. 2a | RFF-KLMS vs QKLMS on Ex. 2 |
+//! | [`fig2b`]  | Fig. 2b | RFF-KRLS vs Engel KRLS on Ex. 2 data |
+//! | [`fig3a`]  | Fig. 3a | RFF-KLMS vs QKLMS on Ex. 3 chaotic series |
+//! | [`fig3b`]  | Fig. 3b | RFF-KLMS vs QKLMS on Ex. 4 chaotic series |
+//! | [`table1`] | Table 1 | mean training times + dictionary sizes |
+//!
+//! All drivers accept `runs`/`horizon` so benches can run scaled-down
+//! versions; paper-scale parameters are the documented defaults. Results
+//! carry both raw curves (for CSV export) and compact summaries.
+
+mod drivers;
+mod report;
+
+pub use drivers::{
+    fig1, fig2a, fig2b, fig3a, fig3b, table1, Fig1Result, FigCompareResult, Table1Result,
+};
+pub use report::{print_figure, save_figure_csv, Series};

@@ -1,0 +1,106 @@
+//! Figure series reporting: terminal summaries and CSV export.
+
+use crate::metrics::{decimate, to_db};
+use crate::util::csv::CsvWriter;
+
+/// One named curve of a figure.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// MSE per step.
+    pub mse: Vec<f64>,
+}
+
+impl Series {
+    /// Build from a label and a curve.
+    pub fn new(label: impl Into<String>, mse: Vec<f64>) -> Self {
+        Self { label: label.into(), mse }
+    }
+
+    /// Steady-state (mean of last tenth) in dB.
+    pub fn steady_state_db(&self) -> f64 {
+        let w = (self.mse.len() / 10).max(1);
+        to_db(self.mse[self.mse.len() - w..].iter().sum::<f64>() / w as f64)
+    }
+}
+
+/// Print a figure as a decimated table of dB values — the "same
+/// rows/series the paper reports" in terminal form.
+pub fn print_figure(title: &str, series: &[Series], points: usize) {
+    println!("\n=== {title} ===");
+    if series.is_empty() {
+        return;
+    }
+    // header
+    print!("{:>8}", "n");
+    for s in series {
+        print!(" {:>18}", s.label);
+    }
+    println!();
+    let dec: Vec<Vec<(usize, f64)>> =
+        series.iter().map(|s| decimate(&s.mse, points)).collect();
+    for row in 0..dec[0].len() {
+        print!("{:>8}", dec[0][row].0);
+        for d in &dec {
+            if row < d.len() {
+                print!(" {:>15.2} dB", to_db(d[row].1));
+            } else {
+                print!(" {:>18}", "-");
+            }
+        }
+        println!();
+    }
+    for s in series {
+        println!("  steady-state {}: {:.2} dB", s.label, s.steady_state_db());
+    }
+}
+
+/// Save a figure's full-resolution series as CSV (`n, <label...>`).
+pub fn save_figure_csv(path: &str, series: &[Series]) -> std::io::Result<()> {
+    if series.is_empty() {
+        return Ok(());
+    }
+    let mut header = vec!["n".to_string()];
+    header.extend(series.iter().map(|s| s.label.clone()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut w = CsvWriter::new(&header_refs);
+    let horizon = series.iter().map(|s| s.mse.len()).min().unwrap();
+    for n in 0..horizon {
+        let mut row = vec![n as f64];
+        row.extend(series.iter().map(|s| s.mse[n]));
+        w.row_f64(&row);
+    }
+    w.save(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_db_of_constant_curve() {
+        let s = Series::new("x", vec![0.01; 100]);
+        assert!((s.steady_state_db() + 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_export_roundtrip() {
+        let dir = std::env::temp_dir().join("rffkaf_report_test");
+        let path = dir.join("fig.csv");
+        let series = vec![
+            Series::new("a", vec![1.0, 0.5, 0.25]),
+            Series::new("b", vec![2.0, 1.0, 0.5]),
+        ];
+        save_figure_csv(path.to_str().unwrap(), &series).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("n,a,b\n"));
+        assert_eq!(text.lines().count(), 4);
+    }
+
+    #[test]
+    fn print_figure_smoke() {
+        // just must not panic
+        print_figure("test", &[Series::new("a", vec![1.0; 50])], 5);
+    }
+}

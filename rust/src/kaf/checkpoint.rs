@@ -1,0 +1,180 @@
+//! Checkpointing: serialize an RFF filter's complete state — `(Ω, b, θ)`
+//! and hyperparameters — to JSON and restore it bit-identically (f64
+//! round-trips through our exact decimal formatter).
+//!
+//! This is the production feature the fixed-size parameterization makes
+//! trivial (the paper's intro point): a dictionary-based filter would
+//! need its full center list serialized; an RFF filter is three flat
+//! arrays of known size.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::rff::RffMap;
+use super::{RffKlms, RffKrls};
+use crate::util::json::JsonValue;
+
+fn arr(values: impl IntoIterator<Item = f64>) -> JsonValue {
+    JsonValue::Array(values.into_iter().map(JsonValue::Number).collect())
+}
+
+fn get_arr(v: &JsonValue, key: &str) -> Result<Vec<f64>> {
+    v.get(key)
+        .and_then(|a| a.as_array())
+        .ok_or_else(|| anyhow!("checkpoint missing array '{key}'"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-number in '{key}'")))
+        .collect()
+}
+
+fn get_num(v: &JsonValue, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow!("checkpoint missing number '{key}'"))
+}
+
+fn map_to_json(map: &RffMap) -> JsonValue {
+    let mut omega_flat = Vec::with_capacity(map.dim() * map.features());
+    for i in 0..map.features() {
+        omega_flat.extend_from_slice(map.omega(i));
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("dim".into(), JsonValue::Number(map.dim() as f64));
+    obj.insert("omega".into(), arr(omega_flat));
+    obj.insert("phases".into(), arr(map.phases().iter().copied()));
+    JsonValue::Object(obj)
+}
+
+fn map_from_json(v: &JsonValue) -> Result<RffMap> {
+    let dim = get_num(v, "dim")? as usize;
+    let omega = get_arr(v, "omega")?;
+    let phases = get_arr(v, "phases")?;
+    anyhow::ensure!(dim > 0 && !phases.is_empty(), "invalid map checkpoint");
+    anyhow::ensure!(omega.len() == dim * phases.len(), "omega/phases length mismatch");
+    Ok(RffMap::from_parts(omega, phases, dim))
+}
+
+/// Serialize an [`RffKlms`] filter (map + θ + μ) to a JSON string.
+pub fn save_rffklms(filter: &RffKlms) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("algo".into(), JsonValue::String("rffklms".into()));
+    obj.insert("map".into(), map_to_json(filter.map()));
+    obj.insert("theta".into(), arr(filter.theta().iter().copied()));
+    obj.insert("mu".into(), JsonValue::Number(filter.mu()));
+    JsonValue::Object(obj).to_string_pretty()
+}
+
+/// Restore an [`RffKlms`] from [`save_rffklms`] output.
+pub fn load_rffklms(text: &str) -> Result<RffKlms> {
+    let v = JsonValue::parse(text).context("parsing checkpoint")?;
+    anyhow::ensure!(
+        v.get("algo").and_then(|a| a.as_str()) == Some("rffklms"),
+        "not an rffklms checkpoint"
+    );
+    let map = map_from_json(v.get("map").ok_or_else(|| anyhow!("missing map"))?)?;
+    let theta = get_arr(&v, "theta")?;
+    let mu = get_num(&v, "mu")?;
+    anyhow::ensure!(theta.len() == map.features(), "theta/map mismatch");
+    let mut f = RffKlms::new(map, mu);
+    f.set_theta(theta);
+    Ok(f)
+}
+
+/// Serialize an [`RffKrls`] filter (map + θ + P + β + λ) to JSON.
+pub fn save_rffkrls(filter: &RffKrls) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("algo".into(), JsonValue::String("rffkrls".into()));
+    obj.insert("map".into(), map_to_json(filter.map()));
+    obj.insert("theta".into(), arr(filter.theta().iter().copied()));
+    obj.insert("p".into(), arr(filter.p().data().iter().copied()));
+    obj.insert("beta".into(), JsonValue::Number(filter.beta()));
+    obj.insert("lambda".into(), JsonValue::Number(filter.lambda()));
+    JsonValue::Object(obj).to_string_pretty()
+}
+
+/// Restore an [`RffKrls`] from [`save_rffkrls`] output.
+pub fn load_rffkrls(text: &str) -> Result<RffKrls> {
+    let v = JsonValue::parse(text).context("parsing checkpoint")?;
+    anyhow::ensure!(
+        v.get("algo").and_then(|a| a.as_str()) == Some("rffkrls"),
+        "not an rffkrls checkpoint"
+    );
+    let map = map_from_json(v.get("map").ok_or_else(|| anyhow!("missing map"))?)?;
+    let theta = get_arr(&v, "theta")?;
+    let p = get_arr(&v, "p")?;
+    let beta = get_num(&v, "beta")?;
+    let lambda = get_num(&v, "lambda")?;
+    let d_feat = map.features();
+    anyhow::ensure!(theta.len() == d_feat && p.len() == d_feat * d_feat, "state shape mismatch");
+    let mut f = RffKrls::new(map, beta, lambda);
+    f.restore_state(theta, p);
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::kaf::OnlineRegressor;
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    fn trained_klms() -> RffKlms {
+        let mut rng = run_rng(1, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 64);
+        let mut f = RffKlms::new(map, 0.7);
+        let mut src = NonlinearWiener::new(run_rng(1, 1), 0.05);
+        for s in src.take_samples(500) {
+            f.step(&s.x, s.y);
+        }
+        f
+    }
+
+    #[test]
+    fn klms_roundtrip_identical_predictions_and_updates() {
+        let mut original = trained_klms();
+        let text = save_rffklms(&original);
+        let mut restored = load_rffklms(&text).unwrap();
+        // identical prediction
+        let probe = [0.3, -0.1, 0.7, 0.2, -0.9];
+        assert_eq!(original.predict(&probe), restored.predict(&probe));
+        // identical future trajectory
+        let mut src = NonlinearWiener::new(run_rng(2, 0), 0.05);
+        for s in src.take_samples(100) {
+            let e1 = original.step(&s.x, s.y);
+            let e2 = restored.step(&s.x, s.y);
+            assert_eq!(e1, e2, "trajectories diverged");
+        }
+    }
+
+    #[test]
+    fn krls_roundtrip_identical() {
+        let mut rng = run_rng(3, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 32);
+        let mut f = RffKrls::new(map, 0.999, 1e-3);
+        let mut src = NonlinearWiener::new(run_rng(3, 1), 0.05);
+        for s in src.take_samples(200) {
+            f.step(&s.x, s.y);
+        }
+        let text = save_rffkrls(&f);
+        let mut g = load_rffkrls(&text).unwrap();
+        let mut src2 = NonlinearWiener::new(run_rng(3, 2), 0.05);
+        for s in src2.take_samples(50) {
+            assert_eq!(f.step(&s.x, s.y), g.step(&s.x, s.y));
+        }
+    }
+
+    #[test]
+    fn wrong_algo_tag_rejected() {
+        let f = trained_klms();
+        let text = save_rffklms(&f);
+        assert!(load_rffkrls(&text).is_err());
+    }
+
+    #[test]
+    fn corrupt_checkpoint_rejected() {
+        assert!(load_rffklms("{").is_err());
+        assert!(load_rffklms("{\"algo\":\"rffklms\"}").is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Shift-invariant kernels and their spectral (Bochner) descriptions.
+
+use crate::linalg::sq_dist;
+use crate::rng::{Cauchy, Distribution, Normal, Rng};
+
+/// Gaussian kernel `κ_σ(u, v) = exp(-||u − v||² / (2σ²))`.
+#[inline]
+pub fn gauss(u: &[f64], v: &[f64], sigma: f64) -> f64 {
+    super::fastmath::fast_exp_neg(-sq_dist(u, v) / (2.0 * sigma * sigma))
+}
+
+/// Laplacian kernel `κ_σ(u, v) = exp(-||u − v||₁ / σ)`.
+#[inline]
+pub fn laplacian(u: &[f64], v: &[f64], sigma: f64) -> f64 {
+    let l1: f64 = u.iter().zip(v).map(|(a, b)| (a - b).abs()).sum();
+    (-l1 / sigma).exp()
+}
+
+/// A shift-invariant kernel with a samplable spectral density (Bochner).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// Gaussian with bandwidth σ; spectral density `N(0, I/σ²)` (Eq. (5)).
+    Gaussian {
+        /// Bandwidth σ.
+        sigma: f64,
+    },
+    /// Laplacian with scale σ; spectral density is product-Cauchy(1/σ).
+    Laplacian {
+        /// Scale σ.
+        sigma: f64,
+    },
+}
+
+impl Kernel {
+    /// Evaluate `κ(u, v)`.
+    pub fn eval(&self, u: &[f64], v: &[f64]) -> f64 {
+        match *self {
+            Kernel::Gaussian { sigma } => gauss(u, v, sigma),
+            Kernel::Laplacian { sigma } => laplacian(u, v, sigma),
+        }
+    }
+
+    /// Draw one frequency vector `ω ∈ R^d` from the spectral density.
+    pub fn sample_freq(&self, rng: &mut Rng, d: usize) -> Vec<f64> {
+        match *self {
+            Kernel::Gaussian { sigma } => Normal::new(0.0, 1.0 / sigma).sample_vec(rng, d),
+            Kernel::Laplacian { sigma } => Cauchy::new(1.0 / sigma).sample_vec(rng, d),
+        }
+    }
+
+    /// Bandwidth parameter σ.
+    pub fn sigma(&self) -> f64 {
+        match *self {
+            Kernel::Gaussian { sigma } | Kernel::Laplacian { sigma } => sigma,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn gauss_identity_and_symmetry() {
+        let u = [1.0, 2.0];
+        let v = [0.5, -1.0];
+        assert_eq!(gauss(&u, &u, 2.0), 1.0);
+        assert_eq!(gauss(&u, &v, 2.0), gauss(&v, &u, 2.0));
+        assert!(gauss(&u, &v, 2.0) < 1.0);
+    }
+
+    #[test]
+    fn laplacian_identity_and_range() {
+        let u = [1.0, -3.0];
+        let v = [2.0, 4.0];
+        assert_eq!(laplacian(&u, &u, 1.0), 1.0);
+        let k = laplacian(&u, &v, 1.0);
+        assert!(k > 0.0 && k < 1.0);
+        assert!((k - (-8.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_spectral_mc_matches_kernel() {
+        // Monte-Carlo over the spectral density must reproduce the kernel:
+        // kappa(delta) = E[cos(w^T delta)].
+        let mut rng = run_rng(1, 0);
+        let k = Kernel::Gaussian { sigma: 2.0 };
+        let delta = [0.7, -0.3, 0.4];
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let w = k.sample_freq(&mut rng, 3);
+            acc += crate::linalg::dot(&w, &delta).cos();
+        }
+        let mc = acc / n as f64;
+        let exact = k.eval(&delta, &[0.0; 3]);
+        assert!((mc - exact).abs() < 0.01, "mc={mc} exact={exact}");
+    }
+
+    #[test]
+    fn laplacian_spectral_mc_matches_kernel() {
+        let mut rng = run_rng(2, 0);
+        let k = Kernel::Laplacian { sigma: 1.5 };
+        let delta = [0.4, 0.2];
+        let n = 400_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let w = k.sample_freq(&mut rng, 2);
+            acc += crate::linalg::dot(&w, &delta).cos();
+        }
+        let mc = acc / n as f64;
+        let exact = k.eval(&delta, &[0.0; 2]);
+        assert!((mc - exact).abs() < 0.02, "mc={mc} exact={exact}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Unsparsified KLMS (Liu, Pokharel, Príncipe 2008): the growing-expansion
+//! reference the paper's §1 motivates against. Kept as the error-floor
+//! ceiling in experiments — its dictionary is every sample seen, O(n)
+//! memory and O(n d) per step.
+
+use super::kernels::Kernel;
+use super::OnlineRegressor;
+
+/// Unsparsified kernel LMS. `f_n = f_{n−1} + μ e_n κ(x_n, ·)`.
+pub struct Klms {
+    kernel: Kernel,
+    mu: f64,
+    /// Dictionary: every input seen so far (flat, row-major).
+    centers: Vec<f64>,
+    /// Expansion coefficients θ_i = μ e_i.
+    coeffs: Vec<f64>,
+    dim: usize,
+}
+
+impl Klms {
+    /// Fresh filter over `dim`-dimensional inputs.
+    pub fn new(kernel: Kernel, dim: usize, mu: f64) -> Self {
+        assert!(dim > 0 && mu > 0.0);
+        Self { kernel, mu, centers: Vec::new(), coeffs: Vec::new(), dim }
+    }
+
+    /// Current dictionary size (grows by one per sample).
+    pub fn dictionary_size(&self) -> usize {
+        self.coeffs.len()
+    }
+}
+
+impl OnlineRegressor for Klms {
+    fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut acc = 0.0;
+        for (i, &c) in self.coeffs.iter().enumerate() {
+            let center = &self.centers[i * self.dim..(i + 1) * self.dim];
+            acc += c * self.kernel.eval(center, x);
+        }
+        acc
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let e = y - self.predict(x);
+        self.centers.extend_from_slice(x);
+        self.coeffs.push(self.mu * e);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        let e = y - self.predict(x);
+        self.centers.extend_from_slice(x);
+        self.coeffs.push(self.mu * e);
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "KLMS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::rng::{run_rng, Distribution, Normal};
+
+    #[test]
+    fn dictionary_grows_linearly() {
+        let mut f = Klms::new(Kernel::Gaussian { sigma: 1.0 }, 2, 0.5);
+        let mut rng = run_rng(1, 0);
+        let n = Normal::standard();
+        for i in 0..50 {
+            assert_eq!(f.dictionary_size(), i);
+            let x = n.sample_vec(&mut rng, 2);
+            f.update(&x, 1.0);
+        }
+    }
+
+    #[test]
+    fn learns_a_smooth_function() {
+        // y = sin(x) on [-2, 2]; KLMS error must shrink.
+        let mut f = Klms::new(Kernel::Gaussian { sigma: 0.7 }, 1, 0.5);
+        let mut rng = run_rng(2, 0);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        let n_samples = 800;
+        for i in 0..n_samples {
+            let x = 4.0 * rng.next_f64() - 2.0;
+            let e = f.step(&[x], x.sin());
+            if i < 50 {
+                first += e * e;
+            }
+            if i >= n_samples - 50 {
+                last += e * e;
+            }
+        }
+        assert!(last < first * 0.05, "first={first} last={last}");
+    }
+
+    #[test]
+    fn first_prediction_is_zero() {
+        let f = Klms::new(Kernel::Gaussian { sigma: 1.0 }, 3, 1.0);
+        assert_eq!(f.predict(&[1.0, 2.0, 3.0]), 0.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Engel's Kernel RLS with Approximate Linear Dependency (ALD)
+//! sparsification (Engel, Mannor, Meir 2004) — the §6 baseline.
+//!
+//! A new input joins the dictionary only if its feature-space image is not
+//! (ν-approximately) linearly dependent on the dictionary:
+//! `δ_t = κ(x,x) − k̃ᵀ K̃⁻¹ k̃ > ν`. The algorithm maintains the inverse
+//! Gram `K̃⁻¹`, the projection matrix `P` and coefficients `α` exactly as
+//! in the original paper.
+
+use super::kernels::Kernel;
+use super::OnlineRegressor;
+use crate::linalg::Mat;
+
+/// Engel's ALD-KRLS.
+pub struct KrlsAld {
+    kernel: Kernel,
+    /// ALD threshold ν.
+    nu: f64,
+    /// Dictionary centers, flat `[M, d]`.
+    centers: Vec<f64>,
+    /// Inverse dictionary Gram `K̃⁻¹` (M x M).
+    kinv: Mat,
+    /// Projection matrix `P` (M x M).
+    p: Mat,
+    /// Coefficients α (length M).
+    alpha: Vec<f64>,
+    dim: usize,
+}
+
+impl KrlsAld {
+    /// Fresh filter with ALD threshold `nu`.
+    pub fn new(kernel: Kernel, dim: usize, nu: f64) -> Self {
+        assert!(dim > 0 && nu >= 0.0);
+        Self {
+            kernel,
+            nu,
+            centers: Vec::new(),
+            kinv: Mat::zeros(0, 0),
+            p: Mat::zeros(0, 0),
+            alpha: Vec::new(),
+            dim,
+        }
+    }
+
+    /// Dictionary size M.
+    pub fn dictionary_size(&self) -> usize {
+        self.alpha.len()
+    }
+
+    #[inline]
+    fn center(&self, k: usize) -> &[f64] {
+        &self.centers[k * self.dim..(k + 1) * self.dim]
+    }
+
+    /// Kernel row `k̃ = [κ(c_1,x), …, κ(c_M,x)]`.
+    fn kernel_row(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.alpha.len()).map(|k| self.kernel.eval(self.center(k), x)).collect()
+    }
+
+    /// Grow `K̃⁻¹`, `P`, α for a newly admitted center.
+    fn grow(&mut self, x: &[f64], a: &[f64], delta: f64, err: f64) {
+        let m = self.alpha.len();
+        // K̃⁻¹ ← [[δ K̃⁻¹ + a aᵀ, −a], [−aᵀ, 1]] / δ
+        let mut kinv_new = Mat::zeros(m + 1, m + 1);
+        for i in 0..m {
+            for j in 0..m {
+                kinv_new[(i, j)] = (delta * self.kinv[(i, j)] + a[i] * a[j]) / delta;
+            }
+            kinv_new[(i, m)] = -a[i] / delta;
+            kinv_new[(m, i)] = -a[i] / delta;
+        }
+        kinv_new[(m, m)] = 1.0 / delta;
+        self.kinv = kinv_new;
+
+        // P ← [[P, 0], [0, 1]]
+        let mut p_new = Mat::zeros(m + 1, m + 1);
+        for i in 0..m {
+            for j in 0..m {
+                p_new[(i, j)] = self.p[(i, j)];
+            }
+        }
+        p_new[(m, m)] = 1.0;
+        self.p = p_new;
+
+        // α ← [α − a e/δ ; e/δ]
+        let scale = err / delta;
+        for (ai, &aval) in self.alpha.iter_mut().zip(a) {
+            *ai -= aval * scale;
+        }
+        self.alpha.push(scale);
+        self.centers.extend_from_slice(x);
+    }
+
+    /// Dictionary-unchanged update (the RLS step in coefficient space).
+    fn update_coeffs(&mut self, a: &[f64], err: f64) {
+        // q = P a / (1 + aᵀ P a)
+        let pa = self.p.matvec(a);
+        let denom = 1.0 + crate::linalg::dot(a, &pa);
+        let q: Vec<f64> = pa.iter().map(|v| v / denom).collect();
+        // P ← P − q (P a)ᵀ  (rank-1)
+        self.p.rank1_update(-1.0, &q, &pa);
+        // α ← α + K̃⁻¹ q e
+        let kq = self.kinv.matvec(&q);
+        for (ai, &kqi) in self.alpha.iter_mut().zip(&kq) {
+            *ai += kqi * err;
+        }
+    }
+}
+
+impl OnlineRegressor for KrlsAld {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let row = self.kernel_row(x);
+        crate::linalg::dot(&row, &self.alpha)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let _ = self.step(x, y);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        if self.alpha.is_empty() {
+            let ktt = self.kernel.eval(x, x);
+            self.kinv = Mat::from_vec(1, 1, vec![1.0 / ktt]);
+            self.p = Mat::eye(1);
+            self.alpha = vec![y / ktt];
+            self.centers = x.to_vec();
+            return y; // f_0 = 0
+        }
+        let row = self.kernel_row(x);
+        let yhat = crate::linalg::dot(&row, &self.alpha);
+        let e = y - yhat;
+        let a = self.kinv.matvec(&row);
+        let ktt = self.kernel.eval(x, x);
+        let delta = ktt - crate::linalg::dot(&row, &a);
+        if delta > self.nu {
+            self.grow(x, &a, delta, e);
+        } else {
+            self.update_coeffs(&a, e);
+        }
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.alpha.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "KRLS-ALD"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    fn gaussian(sigma: f64) -> Kernel {
+        Kernel::Gaussian { sigma }
+    }
+
+    #[test]
+    fn interpolates_training_points_with_tiny_nu() {
+        // With nu ~ 0 and no noise, KRLS approaches kernel interpolation:
+        // revisiting a training input must give (near) zero error.
+        let mut f = KrlsAld::new(gaussian(0.8), 1, 1e-12);
+        let xs = [-1.0, -0.3, 0.4, 1.2];
+        for &x in &xs {
+            f.step(&[x], (2.0 * x).sin());
+        }
+        for &x in &xs {
+            let err = (f.predict(&[x]) - (2.0 * x).sin()).abs();
+            assert!(err < 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn ald_bounds_dictionary() {
+        let mut src = NonlinearWiener::new(run_rng(1, 0), 0.05);
+        let mut f = KrlsAld::new(gaussian(5.0), 5, 5e-4);
+        for s in src.take_samples(3000) {
+            f.step(&s.x, s.y);
+        }
+        let m = f.dictionary_size();
+        assert!(m < 1500, "dictionary exploded: {m}");
+        assert!(m > 10, "dictionary degenerate: {m}");
+    }
+
+    #[test]
+    fn duplicate_input_never_admitted() {
+        let mut f = KrlsAld::new(gaussian(1.0), 2, 1e-6);
+        f.step(&[0.5, -0.5], 1.0);
+        let m1 = f.dictionary_size();
+        for _ in 0..5 {
+            f.step(&[0.5, -0.5], 1.0);
+        }
+        assert_eq!(f.dictionary_size(), m1);
+    }
+
+    #[test]
+    fn converges_faster_than_lms_family() {
+        // RLS-type algorithms should reach low error within few hundred
+        // samples on the Wiener system.
+        let mut src = NonlinearWiener::new(run_rng(2, 0), 0.05);
+        let samples = src.take_samples(1200);
+        let mut f = KrlsAld::new(gaussian(5.0), 5, 5e-4);
+        let errs = f.run(&samples);
+        let tail: f64 = errs[errs.len() - 200..].iter().map(|e| e * e).sum::<f64>() / 200.0;
+        assert!(tail < 0.05, "KRLS tail MSE {tail}");
+    }
+
+    #[test]
+    fn kinv_tracks_gram_inverse() {
+        // Internal invariant: K̃⁻¹ · K̃ = I on the current dictionary.
+        let mut src = NonlinearWiener::new(run_rng(3, 0), 0.05);
+        let mut f = KrlsAld::new(gaussian(5.0), 5, 0.01);
+        for s in src.take_samples(300) {
+            f.step(&s.x, s.y);
+        }
+        let m = f.dictionary_size();
+        let gram = Mat::from_fn(m, m, |i, j| f.kernel.eval(f.center(i), f.center(j)));
+        let prod = f.kinv.matmul(&gram);
+        let err = crate::linalg::max_abs_diff(&prod, &Mat::eye(m));
+        assert!(err < 1e-6, "K̃⁻¹K̃ deviates from I by {err} (M={m})");
+    }
+}

@@ -1,0 +1,150 @@
+//! Linear LMS and normalized LMS — the classical baselines the kernel
+//! methods must beat on nonlinear systems (and the algorithm RFF-KLMS
+//! reduces to after the feature map).
+
+use super::OnlineRegressor;
+use crate::linalg::{axpy, dot};
+
+/// Plain linear LMS: `θ ← θ + μ e x`.
+pub struct Lms {
+    theta: Vec<f64>,
+    mu: f64,
+}
+
+impl Lms {
+    /// Zero-initialised LMS over `dim` inputs with step size `mu`.
+    pub fn new(dim: usize, mu: f64) -> Self {
+        assert!(dim > 0 && mu > 0.0);
+        Self { theta: vec![0.0; dim], mu }
+    }
+
+    /// Current weights.
+    pub fn weights(&self) -> &[f64] {
+        &self.theta
+    }
+}
+
+impl OnlineRegressor for Lms {
+    fn predict(&self, x: &[f64]) -> f64 {
+        dot(&self.theta, x)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let e = y - self.predict(x);
+        axpy(self.mu * e, x, &mut self.theta);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        let e = y - self.predict(x);
+        axpy(self.mu * e, x, &mut self.theta);
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "LMS"
+    }
+}
+
+/// Normalized LMS: `θ ← θ + μ e x / (ε + ||x||²)`.
+pub struct Nlms {
+    theta: Vec<f64>,
+    mu: f64,
+    eps: f64,
+}
+
+impl Nlms {
+    /// Zero-initialised NLMS with step `mu` and regularizer `eps`.
+    pub fn new(dim: usize, mu: f64, eps: f64) -> Self {
+        assert!(dim > 0 && mu > 0.0 && eps >= 0.0);
+        Self { theta: vec![0.0; dim], mu, eps }
+    }
+}
+
+impl OnlineRegressor for Nlms {
+    fn predict(&self, x: &[f64]) -> f64 {
+        dot(&self.theta, x)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let e = y - self.predict(x);
+        let nrm = self.eps + dot(x, x);
+        axpy(self.mu * e / nrm, x, &mut self.theta);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        let e = y - self.predict(x);
+        let nrm = self.eps + dot(x, x);
+        axpy(self.mu * e / nrm, x, &mut self.theta);
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "NLMS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{run_rng, Distribution, Normal};
+
+    /// LMS must identify a linear system exactly (no noise).
+    #[test]
+    fn lms_identifies_linear_system() {
+        let mut rng = run_rng(1, 0);
+        let w_true = [0.5, -1.0, 2.0];
+        let mut lms = Lms::new(3, 0.1);
+        let normal = Normal::standard();
+        for _ in 0..2000 {
+            let x: Vec<f64> = normal.sample_vec(&mut rng, 3);
+            let y = dot(&w_true, &x);
+            lms.update(&x, y);
+        }
+        for (w, t) in lms.weights().iter().zip(&w_true) {
+            assert!((w - t).abs() < 1e-3, "weights {:?}", lms.weights());
+        }
+    }
+
+    #[test]
+    fn nlms_is_scale_invariant_in_convergence() {
+        // NLMS converges with the same mu even when inputs are scaled 100x.
+        let mut rng = run_rng(2, 0);
+        let w_true = [1.0, 2.0];
+        let mut nlms = Nlms::new(2, 0.5, 1e-9);
+        let normal = Normal::new(0.0, 100.0);
+        let mut last_e = f64::MAX;
+        for i in 0..3000 {
+            let x: Vec<f64> = normal.sample_vec(&mut rng, 2);
+            let y = dot(&w_true, &x);
+            let e = nlms.step(&x, y);
+            if i > 2900 {
+                last_e = last_e.min(e.abs());
+            }
+        }
+        assert!(last_e < 1e-6, "NLMS did not converge: {last_e}");
+    }
+
+    #[test]
+    fn step_returns_apriori_error() {
+        let mut lms = Lms::new(2, 0.5);
+        let e = lms.step(&[1.0, 0.0], 3.0);
+        assert_eq!(e, 3.0); // theta was zero
+        // after update theta = [1.5, 0]; a-priori error of same sample: 1.5
+        let e2 = lms.step(&[1.0, 0.0], 3.0);
+        assert_eq!(e2, 1.5);
+    }
+
+    #[test]
+    fn model_size_is_dim() {
+        assert_eq!(Lms::new(7, 0.1).model_size(), 7);
+        assert_eq!(Nlms::new(4, 0.1, 1e-6).model_size(), 4);
+    }
+}

@@ -1,0 +1,49 @@
+//! Kernel adaptive filtering: the paper's algorithms and every baseline.
+//!
+//! | type | algorithm | paper role |
+//! |---|---|---|
+//! | [`Lms`] | linear LMS | sanity baseline |
+//! | [`Nlms`] | normalized LMS | sanity baseline |
+//! | [`Klms`] | unsparsified KLMS | error-floor ceiling (grows O(n)) |
+//! | [`Qklms`] | quantized KLMS (§2) | the paper's main competitor |
+//! | [`NoveltyKlms`] | novelty-criterion KLMS | intro's sparsifier list |
+//! | [`CoherenceKlms`] | coherence-criterion KLMS | intro's sparsifier list (ref [12]) |
+//! | [`SurpriseKlms`] | surprise-criterion KLMS | intro's sparsifier list (ref [13]) |
+//! | [`RffNlms`] | normalized RFF-LMS | §7 "other settings" extension |
+//! | [`RffKlms`] | **RFF-KLMS (§4)** | the paper's contribution |
+//! | [`KrlsAld`] | Engel's ALD-KRLS | §6 competitor |
+//! | [`RffKrls`] | **RFF-KRLS (§6)** | the paper's contribution |
+//!
+//! All filters implement [`OnlineRegressor`]: `predict(x)` then
+//! `update(x, y)` (or the fused `step`). All state is `f64`; the PJRT
+//! hot path (f32) is validated against these implementations in the
+//! integration tests.
+
+pub mod checkpoint;
+mod coherence;
+pub mod fastmath;
+pub mod kernels;
+mod klms;
+mod krls;
+mod lms;
+mod novelty;
+mod qklms;
+pub mod rff;
+mod rff_klms;
+mod rff_nlms;
+mod surprise;
+mod rff_krls;
+mod traits;
+
+pub use coherence::CoherenceKlms;
+pub use klms::Klms;
+pub use krls::KrlsAld;
+pub use lms::{Lms, Nlms};
+pub use novelty::NoveltyKlms;
+pub use qklms::Qklms;
+pub use rff::RffMap;
+pub use rff_klms::RffKlms;
+pub use rff_nlms::RffNlms;
+pub use surprise::SurpriseKlms;
+pub use rff_krls::RffKrls;
+pub use traits::OnlineRegressor;

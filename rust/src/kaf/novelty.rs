@@ -1,0 +1,128 @@
+//! Novelty-criterion KLMS (Platt's criterion, cited in the paper's intro
+//! as one of the standard sparsifiers). A sample joins the dictionary
+//! only if it is both far from the dictionary (distance > δ) **and**
+//! surprising (|error| > δ_e). Included as the second representative
+//! sparsification baseline beyond QKLMS.
+
+use super::kernels::Kernel;
+use super::OnlineRegressor;
+use crate::linalg::sq_dist;
+
+/// Novelty-criterion KLMS.
+pub struct NoveltyKlms {
+    kernel: Kernel,
+    mu: f64,
+    /// Distance threshold δ (compared against Euclidean distance).
+    delta: f64,
+    /// Error threshold δ_e.
+    delta_e: f64,
+    centers: Vec<f64>,
+    coeffs: Vec<f64>,
+    dim: usize,
+}
+
+impl NoveltyKlms {
+    /// Fresh filter: thresholds `delta` (input novelty) and `delta_e`
+    /// (error novelty).
+    pub fn new(kernel: Kernel, dim: usize, mu: f64, delta: f64, delta_e: f64) -> Self {
+        assert!(dim > 0 && mu > 0.0 && delta >= 0.0 && delta_e >= 0.0);
+        Self { kernel, mu, delta, delta_e, centers: Vec::new(), coeffs: Vec::new(), dim }
+    }
+
+    /// Dictionary size M.
+    pub fn dictionary_size(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    #[inline]
+    fn center(&self, k: usize) -> &[f64] {
+        &self.centers[k * self.dim..(k + 1) * self.dim]
+    }
+}
+
+impl OnlineRegressor for NoveltyKlms {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (k, &c) in self.coeffs.iter().enumerate() {
+            acc += c * self.kernel.eval(self.center(k), x);
+        }
+        acc
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let _ = self.step(x, y);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        let m = self.coeffs.len();
+        let mut yhat = 0.0;
+        let mut dmin = f64::INFINITY;
+        for k in 0..m {
+            let c = self.center(k);
+            yhat += self.coeffs[k] * self.kernel.eval(c, x);
+            let d2 = sq_dist(c, x);
+            if d2 < dmin {
+                dmin = d2;
+            }
+        }
+        let e = y - yhat;
+        let novel_input = m == 0 || dmin.sqrt() > self.delta;
+        let novel_error = e.abs() > self.delta_e;
+        if novel_input && novel_error {
+            self.centers.extend_from_slice(x);
+            self.coeffs.push(self.mu * e);
+        }
+        // Non-novel samples are dropped entirely (classic novelty KLMS:
+        // no coefficient update without admission).
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "Novelty-KLMS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    #[test]
+    fn thresholds_gate_admission() {
+        let mut f = NoveltyKlms::new(Kernel::Gaussian { sigma: 1.0 }, 1, 0.5, 0.5, 0.01);
+        f.step(&[0.0], 1.0);
+        assert_eq!(f.dictionary_size(), 1);
+        // same point again: not novel in input
+        f.step(&[0.0], 1.0);
+        assert_eq!(f.dictionary_size(), 1);
+        // far point: admitted (error still large because f(2.0)~0)
+        f.step(&[2.0], 1.0);
+        assert_eq!(f.dictionary_size(), 2);
+    }
+
+    #[test]
+    fn small_error_blocks_admission() {
+        let mut f = NoveltyKlms::new(Kernel::Gaussian { sigma: 1.0 }, 1, 1.0, 0.1, 0.5);
+        f.step(&[0.0], 1.0); // admitted, coeff = 1.0
+        // y close to prediction at a new-but-predictable point
+        let yhat = f.predict(&[0.2]);
+        f.step(&[0.2], yhat + 0.1); // |e| = 0.1 < 0.5 -> rejected
+        assert_eq!(f.dictionary_size(), 1);
+    }
+
+    #[test]
+    fn dictionary_much_smaller_than_sample_count() {
+        let mut src = NonlinearWiener::new(run_rng(1, 0), 0.05);
+        let mut f = NoveltyKlms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 1.0, 2.0, 0.05);
+        for s in src.take_samples(3000) {
+            f.step(&s.x, s.y);
+        }
+        assert!(f.dictionary_size() < 600, "M={}", f.dictionary_size());
+        assert!(f.dictionary_size() > 3);
+    }
+}

@@ -1,0 +1,244 @@
+//! Quantized KLMS (Chen, Zhao, Zhu, Príncipe 2012) — §2 of the paper and
+//! its main baseline.
+//!
+//! At each step the new input either *merges into* the nearest dictionary
+//! center (if within the quantization radius ε in squared distance — the
+//! paper's step 5 compares `d_min` from `d_k = ||x − c_k||²` against ε)
+//! or is appended as a new center. The per-sample cost is the sequential
+//! nearest-center search: O(M d) — exactly what the paper charges it for
+//! in Table 1.
+
+use super::kernels::Kernel;
+use super::OnlineRegressor;
+use crate::linalg::sq_dist;
+
+/// Quantized KLMS filter (the paper's QKLMS, §2).
+pub struct Qklms {
+    kernel: Kernel,
+    mu: f64,
+    /// Quantization threshold ε compared against **squared** distance
+    /// (matching the paper's `d_k = ||x_n − c_k||²`, step 5).
+    epsilon: f64,
+    /// Dictionary centers, flat row-major `[M, d]`.
+    centers: Vec<f64>,
+    /// Coefficients θ_k, one per center.
+    coeffs: Vec<f64>,
+    dim: usize,
+}
+
+impl Qklms {
+    /// Fresh QKLMS over `dim` inputs: step `mu`, quantization `epsilon`.
+    pub fn new(kernel: Kernel, dim: usize, mu: f64, epsilon: f64) -> Self {
+        assert!(dim > 0 && mu > 0.0 && epsilon >= 0.0);
+        Self {
+            kernel,
+            mu,
+            epsilon,
+            centers: Vec::new(),
+            coeffs: Vec::new(),
+            dim,
+        }
+    }
+
+    /// Dictionary size M.
+    pub fn dictionary_size(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Borrow the centers (M rows of length d, flattened).
+    pub fn centers(&self) -> &[f64] {
+        &self.centers
+    }
+
+    #[inline]
+    fn center(&self, k: usize) -> &[f64] {
+        &self.centers[k * self.dim..(k + 1) * self.dim]
+    }
+
+    /// Nearest center: `(argmin_k ||x − c_k||², min value)`.
+    pub fn nearest(&self, x: &[f64]) -> Option<(usize, f64)> {
+        if self.coeffs.is_empty() {
+            return None;
+        }
+        let mut best = (0usize, f64::INFINITY);
+        for k in 0..self.coeffs.len() {
+            let d = sq_dist(self.center(k), x);
+            if d < best.1 {
+                best = (k, d);
+            }
+        }
+        Some(best)
+    }
+}
+
+impl OnlineRegressor for Qklms {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (k, &c) in self.coeffs.iter().enumerate() {
+            acc += c * self.kernel.eval(self.center(k), x);
+        }
+        acc
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let _ = self.step(x, y);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        // Single fused dictionary pass: kernel row for the prediction and
+        // squared distances for the quantization decision share the
+        // ||x - c_k||² computation (for the Gaussian kernel).
+        let m = self.coeffs.len();
+        let mut yhat = 0.0;
+        let mut best_k = usize::MAX;
+        let mut best_d = f64::INFINITY;
+        match self.kernel {
+            Kernel::Gaussian { sigma } => {
+                let inv = 1.0 / (2.0 * sigma * sigma);
+                for k in 0..m {
+                    let d2 = sq_dist(self.center(k), x);
+                    yhat += self.coeffs[k] * crate::kaf::fastmath::fast_exp_neg(-d2 * inv);
+                    if d2 < best_d {
+                        best_d = d2;
+                        best_k = k;
+                    }
+                }
+            }
+            _ => {
+                for k in 0..m {
+                    let c = self.center(k);
+                    yhat += self.coeffs[k] * self.kernel.eval(c, x);
+                    let d2 = sq_dist(c, x);
+                    if d2 < best_d {
+                        best_d = d2;
+                        best_k = k;
+                    }
+                }
+            }
+        }
+        let e = y - yhat;
+        if best_k != usize::MAX && best_d < self.epsilon {
+            // merge into nearest center
+            self.coeffs[best_k] += self.mu * e;
+        } else {
+            // append new center
+            self.centers.extend_from_slice(x);
+            self.coeffs.push(self.mu * e);
+        }
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "QKLMS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{run_rng, Distribution, Normal};
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    fn gaussian(sigma: f64) -> Kernel {
+        Kernel::Gaussian { sigma }
+    }
+
+    #[test]
+    fn epsilon_zero_reduces_to_klms_dictionary_growth() {
+        let mut f = Qklms::new(gaussian(1.0), 2, 0.5, 0.0);
+        let mut rng = run_rng(1, 0);
+        let n = Normal::standard();
+        for i in 0..30 {
+            assert_eq!(f.dictionary_size(), i);
+            f.update(&n.sample_vec(&mut rng, 2), 1.0);
+        }
+    }
+
+    #[test]
+    fn epsilon_huge_keeps_single_center() {
+        let mut f = Qklms::new(gaussian(1.0), 2, 0.5, 1e12);
+        let mut rng = run_rng(2, 0);
+        let n = Normal::standard();
+        for _ in 0..30 {
+            f.update(&n.sample_vec(&mut rng, 2), 1.0);
+        }
+        assert_eq!(f.dictionary_size(), 1);
+    }
+
+    #[test]
+    fn quantization_bounds_dictionary() {
+        // With eps=5 on d=5 standard normal inputs the paper reports
+        // M ~ 100 after 15000 samples; sanity-check the order of magnitude.
+        let mut src = NonlinearWiener::new(run_rng(3, 0), 0.05);
+        let mut f = Qklms::new(gaussian(5.0), 5, 1.0, 5.0);
+        for s in src.take_samples(5000) {
+            f.step(&s.x, s.y);
+        }
+        let m = f.dictionary_size();
+        assert!((30..400).contains(&m), "M={m}");
+    }
+
+    #[test]
+    fn matches_slow_reference_implementation() {
+        // The fused step must agree with a literal transcription of the
+        // paper's §2 pseudocode.
+        struct SlowQklms {
+            centers: Vec<Vec<f64>>,
+            coeffs: Vec<f64>,
+            mu: f64,
+            eps: f64,
+            sigma: f64,
+        }
+        impl SlowQklms {
+            fn step(&mut self, x: &[f64], y: f64) -> f64 {
+                let yhat: f64 = self
+                    .centers
+                    .iter()
+                    .zip(&self.coeffs)
+                    .map(|(c, &a)| a * crate::kaf::kernels::gauss(c, x, self.sigma))
+                    .sum();
+                let e = y - yhat;
+                let nearest = self
+                    .centers
+                    .iter()
+                    .enumerate()
+                    .map(|(k, c)| (k, crate::linalg::sq_dist(c, x)))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                match nearest {
+                    Some((k, dmin)) if dmin < self.eps => self.coeffs[k] += self.mu * e,
+                    _ => {
+                        self.centers.push(x.to_vec());
+                        self.coeffs.push(self.mu * e);
+                    }
+                }
+                e
+            }
+        }
+
+        let mut fast = Qklms::new(gaussian(5.0), 5, 1.0, 5.0);
+        let mut slow = SlowQklms { centers: vec![], coeffs: vec![], mu: 1.0, eps: 5.0, sigma: 5.0 };
+        let mut src = NonlinearWiener::new(run_rng(4, 0), 0.05);
+        for s in src.take_samples(600) {
+            let ef = fast.step(&s.x, s.y);
+            let es = slow.step(&s.x, s.y);
+            assert!((ef - es).abs() < 1e-10, "errors diverged: {ef} vs {es}");
+        }
+        assert_eq!(fast.dictionary_size(), slow.coeffs.len());
+    }
+
+    #[test]
+    fn learns_the_wiener_system() {
+        let mut src = NonlinearWiener::new(run_rng(5, 0), 0.05);
+        let mut f = Qklms::new(gaussian(5.0), 5, 1.0, 5.0);
+        let samples = src.take_samples(4000);
+        let errs = f.run(&samples);
+        let head: f64 = errs[..200].iter().map(|e| e * e).sum::<f64>() / 200.0;
+        let tail: f64 = errs[errs.len() - 200..].iter().map(|e| e * e).sum::<f64>() / 200.0;
+        assert!(tail < head * 0.2, "head={head} tail={tail}");
+    }
+}

@@ -1,0 +1,273 @@
+//! The random Fourier feature map `z_Ω` (paper Eq. (3)) — the shared
+//! substrate of [`RffKlms`](super::RffKlms) and [`RffKrls`](super::RffKrls)
+//! and the Rust mirror of the L1 Pallas kernel.
+//!
+//! Storage is **feature-major** (`omega_t[i]` holds `ω_i ∈ R^d`
+//! contiguously), so `z_i = cos(ω_iᵀx + b_i)` streams one cache line per
+//! feature — the layout the perf pass settled on (see EXPERIMENTS.md §Perf).
+
+use crate::rng::{Distribution, Rng, Uniform};
+
+use super::fastmath::fast_cos;
+
+use super::kernels::Kernel;
+
+/// A frozen draw of the random Fourier features `(Ω, b)` for a kernel.
+#[derive(Clone, Debug)]
+pub struct RffMap {
+    /// Feature-major frequencies: row `i` is `ω_i ∈ R^d` (D rows).
+    omega_t: Vec<f64>,
+    /// Phases `b_i ~ U[0, 2π)`.
+    phases: Vec<f64>,
+    /// Input dimension d.
+    dim: usize,
+    /// Feature count D.
+    features: usize,
+    /// `sqrt(2/D)` — the normalization of Eq. (3).
+    scale: f64,
+}
+
+impl RffMap {
+    /// Draw `(Ω, b)` for `kernel` with `features = D` map dimensions over
+    /// `dim = d` inputs, using `rng` (deterministic per seed).
+    pub fn draw(rng: &mut Rng, kernel: Kernel, dim: usize, features: usize) -> Self {
+        assert!(dim > 0 && features > 0);
+        let mut omega_t = Vec::with_capacity(dim * features);
+        for _ in 0..features {
+            omega_t.extend(kernel.sample_freq(rng, dim));
+        }
+        let phases = Uniform::phase().sample_vec(rng, features);
+        let scale = (2.0 / features as f64).sqrt();
+        Self { omega_t, phases, dim, features, scale }
+    }
+
+    /// Build from explicit parts (used by tests and the PJRT bridge,
+    /// which needs the same `(Ω, b)` on both sides).
+    pub fn from_parts(omega_t: Vec<f64>, phases: Vec<f64>, dim: usize) -> Self {
+        let features = phases.len();
+        assert_eq!(omega_t.len(), dim * features, "omega length mismatch");
+        let scale = (2.0 / features as f64).sqrt();
+        Self { omega_t, phases, dim, features, scale }
+    }
+
+    /// Input dimension d.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Feature count D.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// `sqrt(2/D)`.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Frequency row `ω_i`.
+    #[inline]
+    pub fn omega(&self, i: usize) -> &[f64] {
+        &self.omega_t[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Phases `b`.
+    pub fn phases(&self) -> &[f64] {
+        &self.phases
+    }
+
+    /// Column-major `Ω` as `[d, D]` row-major f32 (the artifact layout the
+    /// AOT graphs expect: `omega[k][i] = ω_i[k]`).
+    #[allow(non_snake_case)]
+    pub fn omega_f32_dxD(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim * self.features];
+        for i in 0..self.features {
+            let w = self.omega(i);
+            for k in 0..self.dim {
+                out[k * self.features + i] = w[k] as f32;
+            }
+        }
+        out
+    }
+
+    /// Phases as f32 (artifact input).
+    pub fn phases_f32(&self) -> Vec<f32> {
+        self.phases.iter().map(|&p| p as f32).collect()
+    }
+
+    /// Apply the map: write `z_Ω(x)` into `out` (length D).
+    /// This is the Rust hot path mirrored by the Pallas kernel.
+    #[inline]
+    pub fn apply_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(out.len(), self.features);
+        let d = self.dim;
+        match d {
+            // The paper's experiments have d ∈ {1, 2, 5}: specialise the
+            // tiny-d inner products so the compiler keeps them in registers.
+            1 => {
+                let x0 = x[0];
+                for i in 0..self.features {
+                    out[i] = self.scale * fast_cos(self.omega_t[i] * x0 + self.phases[i]);
+                }
+            }
+            2 => {
+                let (x0, x1) = (x[0], x[1]);
+                for i in 0..self.features {
+                    let w = &self.omega_t[i * 2..i * 2 + 2];
+                    out[i] = self.scale * fast_cos(w[0] * x0 + w[1] * x1 + self.phases[i]);
+                }
+            }
+            _ => {
+                for i in 0..self.features {
+                    let w = &self.omega_t[i * d..(i + 1) * d];
+                    let acc = crate::linalg::dot(w, x);
+                    out[i] = self.scale * fast_cos(acc + self.phases[i]);
+                }
+            }
+        }
+    }
+
+    /// Apply the map, allocating the output.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.features];
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// Fused `z = z_Ω(x)` **and** `ŷ = θᵀz` in a single pass over the
+    /// features — saves one full sweep of `z`/`θ` per filter step
+    /// (the §Perf pass measured the win on the RFF-KLMS step).
+    #[inline]
+    pub fn apply_dot_into(&self, x: &[f64], theta: &[f64], out: &mut [f64]) -> f64 {
+        debug_assert_eq!(theta.len(), self.features);
+        debug_assert_eq!(out.len(), self.features);
+        let d = self.dim;
+        let mut acc = 0.0;
+        match d {
+            1 => {
+                let x0 = x[0];
+                for i in 0..self.features {
+                    let z = self.scale * fast_cos(self.omega_t[i] * x0 + self.phases[i]);
+                    out[i] = z;
+                    acc += theta[i] * z;
+                }
+            }
+            2 => {
+                let (x0, x1) = (x[0], x[1]);
+                for i in 0..self.features {
+                    let w = &self.omega_t[i * 2..i * 2 + 2];
+                    let z = self.scale * fast_cos(w[0] * x0 + w[1] * x1 + self.phases[i]);
+                    out[i] = z;
+                    acc += theta[i] * z;
+                }
+            }
+            _ => {
+                for i in 0..self.features {
+                    let w = &self.omega_t[i * d..(i + 1) * d];
+                    let z = self.scale * fast_cos(crate::linalg::dot(w, x) + self.phases[i]);
+                    out[i] = z;
+                    acc += theta[i] * z;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Approximate the kernel via `z(x)ᵀz(y)` (Eq. (4)) — used by tests
+    /// and the approximation-error ablation.
+    pub fn approx_kernel(&self, x: &[f64], y: &[f64]) -> f64 {
+        let zx = self.apply(x);
+        let zy = self.apply(y);
+        crate::linalg::dot(&zx, &zy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn feature_magnitude_bounded_by_scale() {
+        let mut rng = run_rng(1, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 64);
+        let z = map.apply(&[0.3, -0.1, 2.0, 0.0, 1.0]);
+        let bound = (2.0f64 / 64.0).sqrt() + 1e-12;
+        assert!(z.iter().all(|v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn gaussian_kernel_approximation_improves_with_d() {
+        let mut rng = run_rng(2, 0);
+        let kernel = Kernel::Gaussian { sigma: 5.0 };
+        let x = [1.0, 0.5, -0.2, 0.3, 1.2];
+        let y = [0.2, -0.5, 0.7, -1.0, 0.4];
+        let exact = kernel.eval(&x, &y);
+        let mut errs = Vec::new();
+        for d_feat in [64usize, 4096] {
+            // average over several draws to suppress draw-luck
+            let mut e = 0.0;
+            for _ in 0..8 {
+                let map = RffMap::draw(&mut rng, kernel, 5, d_feat);
+                e += (map.approx_kernel(&x, &y) - exact).abs();
+            }
+            errs.push(e / 8.0);
+        }
+        assert!(
+            errs[1] < errs[0] * 0.5,
+            "error did not shrink with D: {errs:?}"
+        );
+        assert!(errs[1] < 0.02);
+    }
+
+    #[test]
+    fn laplacian_approximation_works_too() {
+        let mut rng = run_rng(3, 0);
+        let kernel = Kernel::Laplacian { sigma: 2.0 };
+        let x = [0.5, -0.3];
+        let y = [-0.2, 0.4];
+        let exact = kernel.eval(&x, &y);
+        let mut e = 0.0;
+        for _ in 0..8 {
+            let map = RffMap::draw(&mut rng, kernel, 2, 8192);
+            e += (map.approx_kernel(&x, &y) - exact).abs();
+        }
+        assert!(e / 8.0 < 0.03, "err={}", e / 8.0);
+    }
+
+    #[test]
+    fn apply_into_matches_apply_for_all_small_dims() {
+        let mut rng = run_rng(4, 0);
+        for d in [1usize, 2, 3, 5, 8] {
+            let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 1.0 }, d, 33);
+            let x: Vec<f64> = (0..d).map(|i| 0.1 * i as f64 - 0.2).collect();
+            let mut out = vec![0.0; 33];
+            map.apply_into(&x, &mut out);
+            assert_eq!(out, map.apply(&x));
+            // manual check of feature 7
+            let w = map.omega(7);
+            let want = map.scale() * (crate::linalg::dot(w, &x) + map.phases()[7]).cos();
+            assert!((out[7] - want).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn f32_export_layout_round_trips() {
+        let mut rng = run_rng(5, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 3, 10);
+        let dxd = map.omega_f32_dxD(); // [d=3, D=10] row-major
+        for i in 0..10 {
+            for k in 0..3 {
+                assert!((dxd[k * 10 + i] as f64 - map.omega(i)[k]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_validates_length() {
+        let r = std::panic::catch_unwind(|| RffMap::from_parts(vec![0.0; 7], vec![0.0; 3], 2));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! **RFF-KLMS** — the paper's §4 algorithm: plain LMS on RFF-mapped data.
+//!
+//! Per sample: `ŷ = θᵀ z_Ω(x)`, `e = y − ŷ`, `θ ← θ + μ e z_Ω(x)`.
+//! Fixed-size solution `θ ∈ R^D`, complexity O(Dd) per step, no
+//! dictionary, no sparsification.
+
+use super::rff::RffMap;
+use super::OnlineRegressor;
+use crate::linalg::{axpy, dot};
+
+/// The paper's RFF-KLMS filter.
+pub struct RffKlms {
+    map: RffMap,
+    theta: Vec<f64>,
+    mu: f64,
+    /// Scratch feature buffer reused across steps (no per-sample alloc —
+    /// this is the L3 hot path).
+    z: Vec<f64>,
+}
+
+impl RffKlms {
+    /// Build from a frozen feature map and step size `mu`.
+    pub fn new(map: RffMap, mu: f64) -> Self {
+        assert!(mu > 0.0);
+        let d_feat = map.features();
+        Self { map, theta: vec![0.0; d_feat], mu, z: vec![0.0; d_feat] }
+    }
+
+    /// The feature map (shared with the AOT artifacts in PJRT mode).
+    pub fn map(&self) -> &RffMap {
+        &self.map
+    }
+
+    /// Current weight vector θ.
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// Overwrite θ (used to sync state back from the PJRT runtime).
+    pub fn set_theta(&mut self, theta: Vec<f64>) {
+        assert_eq!(theta.len(), self.map.features());
+        self.theta = theta;
+    }
+
+    /// Step size μ.
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+}
+
+impl OnlineRegressor for RffKlms {
+    fn predict(&self, x: &[f64]) -> f64 {
+        // allocation-free would need interior mutability; predict() is the
+        // cold path (hot path = step()), so a stack-local buffer is fine.
+        let z = self.map.apply(x);
+        dot(&self.theta, &z)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let _ = self.step(x, y);
+    }
+
+    #[inline]
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        // fused feature map + prediction (one pass), then the update pass
+        let yhat = self.map.apply_dot_into(x, &self.theta, &mut self.z);
+        let e = y - yhat;
+        axpy(self.mu * e, &self.z, &mut self.theta);
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "RFF-KLMS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::kaf::Qklms;
+    use crate::rng::run_rng;
+    use crate::signal::{LinearKernelExpansion, NonlinearWiener, SignalSource};
+
+    #[test]
+    fn fixed_model_size_regardless_of_samples() {
+        let mut rng = run_rng(1, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 128);
+        let mut f = RffKlms::new(map, 0.5);
+        let mut src = NonlinearWiener::new(run_rng(1, 1), 0.05);
+        for s in src.take_samples(2000) {
+            f.step(&s.x, s.y);
+        }
+        assert_eq!(f.model_size(), 128);
+    }
+
+    #[test]
+    fn converges_on_linear_kernel_expansion() {
+        // Eq. (7) data: the model class is (approximately) realizable, so
+        // steady-state MSE must approach the noise floor sigma_eta^2 = 0.01.
+        let mut rng = run_rng(2, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 512);
+        let mut f = RffKlms::new(map, 1.0);
+        let mut src = LinearKernelExpansion::paper_default(run_rng(2, 1), 5, 10);
+        let samples = src.take_samples(6000);
+        let errs = f.run(&samples);
+        let tail: f64 =
+            errs[errs.len() - 500..].iter().map(|e| e * e).sum::<f64>() / 500.0;
+        assert!(tail < 0.05, "steady-state MSE {tail} (noise floor 0.01)");
+    }
+
+    #[test]
+    fn comparable_error_floor_to_qklms() {
+        // The paper's headline: same error floor as QKLMS on Ex. 2.
+        let seed = 77;
+        let mut mse_rff = 0.0;
+        let mut mse_qk = 0.0;
+        let runs = 5;
+        for run in 0..runs {
+            let mut src = NonlinearWiener::new(run_rng(seed, run), 0.05);
+            let samples = src.take_samples(8000);
+            let mut rng = run_rng(seed + 1, run);
+            let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+            let mut rff = RffKlms::new(map, 1.0);
+            let mut qk = Qklms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 1.0, 5.0);
+            let er = rff.run(&samples);
+            let eq = qk.run(&samples);
+            mse_rff += er[er.len() - 1000..].iter().map(|e| e * e).sum::<f64>() / 1000.0;
+            mse_qk += eq[eq.len() - 1000..].iter().map(|e| e * e).sum::<f64>() / 1000.0;
+        }
+        mse_rff /= runs as f64;
+        mse_qk /= runs as f64;
+        // within 3 dB of each other
+        let ratio_db = 10.0 * (mse_rff / mse_qk).log10();
+        assert!(ratio_db.abs() < 3.0, "RFF {mse_rff} vs QKLMS {mse_qk} ({ratio_db:.2} dB)");
+    }
+
+    #[test]
+    fn theta_roundtrip() {
+        let mut rng = run_rng(3, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 16);
+        let mut f = RffKlms::new(map, 1.0);
+        f.step(&[0.1; 5], 1.0);
+        let th = f.theta().to_vec();
+        f.set_theta(th.clone());
+        assert_eq!(f.theta(), th.as_slice());
+    }
+}

@@ -1,0 +1,208 @@
+//! Surprise-criterion KLMS (Liu, Príncipe — ref [13] of the paper's
+//! intro). The *surprise* of a datum is its negative log-likelihood
+//! under the learner's current Gaussian-process view:
+//!
+//! `S(x, y) = ½ ln(σ_p²) + e²/(2 σ_p²)`,  with predictive variance
+//! `σ_p² = λ + κ(x,x) − k̃ᵀ(K̃ + λI)⁻¹k̃` maintained on the dictionary.
+//!
+//! Samples with `S > T₁` are *abnormal* (discarded); `S < T₂` are
+//! *redundant* (coefficient update only); in between they are *learnable*
+//! and admitted. We maintain `(K̃ + λI)⁻¹` incrementally like KRLS.
+
+use super::kernels::Kernel;
+use super::OnlineRegressor;
+use crate::linalg::Mat;
+
+/// Surprise-criterion sparsified KLMS.
+pub struct SurpriseKlms {
+    kernel: Kernel,
+    mu: f64,
+    /// Regularization λ in the predictive variance.
+    lambda: f64,
+    /// Abnormality threshold T₁ (surprise above ⇒ discard).
+    t_abnormal: f64,
+    /// Redundancy threshold T₂ (surprise below ⇒ no admission).
+    t_redundant: f64,
+    centers: Vec<f64>,
+    coeffs: Vec<f64>,
+    /// (K̃ + λI)⁻¹ over the dictionary.
+    kinv: Mat,
+    row: Vec<f64>,
+    dim: usize,
+}
+
+impl SurpriseKlms {
+    /// Fresh filter. Typical thresholds: `t_abnormal` ~ 20–100,
+    /// `t_redundant` ~ −1..1 (surprise is in nats).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        kernel: Kernel,
+        dim: usize,
+        mu: f64,
+        lambda: f64,
+        t_abnormal: f64,
+        t_redundant: f64,
+    ) -> Self {
+        assert!(dim > 0 && mu > 0.0 && lambda > 0.0 && t_abnormal > t_redundant);
+        Self {
+            kernel,
+            mu,
+            lambda,
+            t_abnormal,
+            t_redundant,
+            centers: Vec::new(),
+            coeffs: Vec::new(),
+            kinv: Mat::zeros(0, 0),
+            row: Vec::new(),
+            dim,
+        }
+    }
+
+    /// Dictionary size M.
+    pub fn dictionary_size(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    #[inline]
+    fn center(&self, k: usize) -> &[f64] {
+        &self.centers[k * self.dim..(k + 1) * self.dim]
+    }
+
+    /// Grow (K̃+λI)⁻¹ by one center using the block-inverse identity.
+    fn grow_kinv(&mut self, a: &[f64], sigma2: f64) {
+        let m = self.coeffs.len();
+        let mut new = Mat::zeros(m + 1, m + 1);
+        for i in 0..m {
+            for j in 0..m {
+                new[(i, j)] = self.kinv[(i, j)] + a[i] * a[j] / sigma2;
+            }
+            new[(i, m)] = -a[i] / sigma2;
+            new[(m, i)] = -a[i] / sigma2;
+        }
+        new[(m, m)] = 1.0 / sigma2;
+        self.kinv = new;
+    }
+}
+
+impl OnlineRegressor for SurpriseKlms {
+    fn predict(&self, x: &[f64]) -> f64 {
+        (0..self.coeffs.len())
+            .map(|k| self.coeffs[k] * self.kernel.eval(self.center(k), x))
+            .sum()
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let _ = self.step(x, y);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        let m = self.coeffs.len();
+        self.row.clear();
+        let mut yhat = 0.0;
+        for k in 0..m {
+            let kv = self.kernel.eval(self.center(k), x);
+            self.row.push(kv);
+            yhat += self.coeffs[k] * kv;
+        }
+        let e = y - yhat;
+        if m == 0 {
+            let sigma2 = self.lambda + self.kernel.eval(x, x);
+            self.centers.extend_from_slice(x);
+            self.coeffs.push(self.mu * e);
+            self.kinv = Mat::from_vec(1, 1, vec![1.0 / sigma2]);
+            return e;
+        }
+        // predictive variance and surprise
+        let a = self.kinv.matvec(&self.row);
+        let ktt = self.kernel.eval(x, x);
+        let sigma2 = (self.lambda + ktt - crate::linalg::dot(&self.row, &a)).max(1e-12);
+        let surprise = 0.5 * sigma2.ln() + e * e / (2.0 * sigma2);
+
+        if surprise > self.t_abnormal {
+            // abnormal: outlier — discard entirely
+        } else if surprise > self.t_redundant {
+            // learnable: admit
+            self.grow_kinv(&a, sigma2);
+            self.centers.extend_from_slice(x);
+            self.coeffs.push(self.mu * e);
+        } else {
+            // redundant: cheap coefficient refresh on the nearest center
+            if let Some((k, _)) = self
+                .row
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            {
+                self.coeffs[k] += self.mu * e;
+            }
+        }
+        e
+    }
+
+    fn model_size(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "Surprise-KLMS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    fn filter() -> SurpriseKlms {
+        SurpriseKlms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 0.5, 0.01, 100.0, -2.0)
+    }
+
+    #[test]
+    fn dictionary_bounded() {
+        let mut f = filter();
+        let mut src = NonlinearWiener::new(run_rng(1, 0), 0.05);
+        for s in src.take_samples(2000) {
+            f.step(&s.x, s.y);
+        }
+        let m = f.dictionary_size();
+        assert!(m < 2000, "no sparsification: M={m}");
+        assert!(m > 2);
+    }
+
+    #[test]
+    fn abnormal_samples_discarded() {
+        let mut f = SurpriseKlms::new(Kernel::Gaussian { sigma: 5.0 }, 5, 0.5, 0.01, 5.0, -5.0);
+        let mut src = NonlinearWiener::new(run_rng(2, 0), 0.05);
+        for s in src.take_samples(300) {
+            f.step(&s.x, s.y);
+        }
+        let m_before = f.dictionary_size();
+        // gross outlier: huge error => surprise explodes => discarded
+        f.step(&[0.1; 5], 1e6);
+        assert_eq!(f.dictionary_size(), m_before, "outlier must not be admitted");
+    }
+
+    #[test]
+    fn learns_the_wiener_system() {
+        let mut f = filter();
+        let mut src = NonlinearWiener::new(run_rng(3, 0), 0.05);
+        let samples = src.take_samples(3000);
+        let errs = f.run(&samples);
+        let head: f64 = errs[..200].iter().map(|e| e * e).sum::<f64>() / 200.0;
+        let tail: f64 = errs[errs.len() - 200..].iter().map(|e| e * e).sum::<f64>() / 200.0;
+        assert!(tail < head * 0.35, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn redundant_region_updates_without_admission() {
+        let mut f = SurpriseKlms::new(Kernel::Gaussian { sigma: 1.0 }, 1, 0.5, 0.01, 1e12, 1e9);
+        // t_redundant enormous (but < t_abnormal) => everything after the first sample is
+        // "redundant": dictionary stays at 1 but coefficients move.
+        f.step(&[0.0], 1.0);
+        let c0 = f.coeffs[0];
+        f.step(&[0.01], 1.0);
+        assert_eq!(f.dictionary_size(), 1);
+        assert!((f.coeffs[0] - c0).abs() > 0.0, "coefficient should refresh");
+    }
+}

@@ -1,0 +1,44 @@
+//! The unifying online-regression interface.
+
+use crate::signal::Sample;
+
+/// An online (streaming) nonlinear regressor.
+///
+/// The canonical loop is:
+/// ```text
+/// for (x_n, y_n) in stream {
+///     let e_n = y_n - filter.predict(&x_n);   // a-priori error
+///     filter.update(&x_n, y_n);
+/// }
+/// ```
+/// `step` fuses the two (implementations override it to avoid computing
+/// the feature map / kernel row twice — this is the hot path).
+pub trait OnlineRegressor {
+    /// Predict `ŷ = f(x)` with the current model.
+    fn predict(&self, x: &[f64]) -> f64;
+
+    /// Incorporate the labelled sample `(x, y)`.
+    fn update(&mut self, x: &[f64], y: f64);
+
+    /// Fused predict-then-update; returns the **a-priori** error
+    /// `e = y − f_{n−1}(x)` (what the paper's learning curves plot).
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        let e = y - self.predict(x);
+        self.update(x, y);
+        e
+    }
+
+    /// Model size: number of adjustable parameters currently held
+    /// (D for RFF filters, dictionary size × 1 coefficient for KLMS
+    /// variants). Used by the Table-1 "dictionary size" column.
+    fn model_size(&self) -> usize;
+
+    /// Human-readable algorithm name (for reports).
+    fn name(&self) -> &'static str;
+
+    /// Run a full pass over `samples`, returning the a-priori error per
+    /// step (the learning curve of one Monte-Carlo realization).
+    fn run(&mut self, samples: &[Sample]) -> Vec<f64> {
+        samples.iter().map(|s| self.step(&s.x, s.y)).collect()
+    }
+}

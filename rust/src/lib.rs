@@ -1,0 +1,58 @@
+//! # rff-kaf — Random Fourier Feature Kernel Adaptive Filtering
+//!
+//! Production-grade reproduction of *"Efficient KLMS and KRLS Algorithms:
+//! A Random Fourier Feature Perspective"* (Bouboulis, Pougkakiotis,
+//! Theodoridis, 2016) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper replaces the growing kernel expansion of KLMS/KRLS with a
+//! fixed-size linear filter on random-Fourier-feature-mapped inputs:
+//! `z_Ω(u) = sqrt(2/D)·cos(Ωᵀu + b)` with `ω_i ~ N(0, I/σ²)`,
+//! `b_i ~ U[0, 2π]`, so `z(x)ᵀz(y) ≈ κ_σ(x − y)` (Bochner's theorem).
+//! Plain LMS/RLS on `z` then matches the MSE of sparsified kernel
+//! filters at a fraction of the cost — no dictionary, no per-sample
+//! dictionary search.
+//!
+//! ## Layers
+//!
+//! * **L1/L2 (build time, Python)** — Pallas RFF kernel + JAX chunk-scan
+//!   graphs, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — the streaming coordinator: filter sessions,
+//!   request router, dynamic batcher over the PJRT executables, the
+//!   Monte-Carlo experiment orchestrator that regenerates every figure
+//!   and table of the paper, and pure-Rust implementations of all
+//!   algorithms (RFF variants and dictionary-based baselines).
+//!
+//! ## Module map
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`rng`] | deterministic PRNG + Gaussian/uniform/Cauchy samplers |
+//! | [`linalg`] | dense matrices, LU/Cholesky, Jacobi eigensolver |
+//! | [`signal`] | the paper's four data generators + streaming traits |
+//! | [`kaf`] | kernels, RFF map, LMS/KLMS/QKLMS/KRLS/RFF-KLMS/RFF-KRLS |
+//! | [`theory`] | closed-form `R_zz`, step-size bounds, steady-state MSE |
+//! | [`metrics`] | MC learning-curve accumulation, dB, steady-state |
+//! | [`exec`] | thread pool + parallel-for (tokio substitute, offline) |
+//! | [`bench`] | micro-benchmark harness (criterion substitute, offline) |
+//! | [`util`] | minimal JSON/CSV writers, CLI parsing, logging |
+//! | [`runtime`] | PJRT client wrapper + HLO-text artifact registry |
+//! | [`coordinator`] | sessions, router, dynamic batcher, MC orchestrator |
+//! | [`distributed`] | diffusion RFF-KLMS over a simulated node graph |
+//! | [`experiments`] | drivers regenerating Figs. 1–3 and Table 1 |
+
+pub mod bench;
+pub mod coordinator;
+pub mod distributed;
+pub mod exec;
+pub mod experiments;
+pub mod kaf;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod signal;
+pub mod theory;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, matching the `xla` crate usage).
+pub type Result<T> = anyhow::Result<T>;

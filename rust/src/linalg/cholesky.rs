@@ -1,0 +1,123 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used by the theory module to *certify* strict positive definiteness of
+//! `R_zz` (Lemma 1 of the paper) and for fast SPD solves in KRLS
+//! cross-checks.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factorize an SPD matrix. Returns `None` if the matrix is not
+    /// positive definite to working precision (this is the Lemma-1 SPD
+    /// certificate used by `theory::rzz`).
+    pub fn new(a: &Mat) -> Option<Self> {
+        assert_eq!(a.rows(), a.cols(), "Cholesky requires square input");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return None;
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(Self { l })
+    }
+
+    /// The lower-triangular factor.
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `A x = b` via two triangular solves.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for j in 0..i {
+                s -= self.l[(i, j)] * y[j];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in (i + 1)..n {
+                s -= self.l[(j, i)] * x[j];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// log-determinant of `A` (numerically stable product of squares).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::max_abs_diff;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = crate::rng::Rng::seed_from_u64(seed);
+        let b = Mat::from_fn(n, n, |_, _| rng.next_f64() - 0.5);
+        // B Bᵀ + n I is SPD
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_roundtrip() {
+        let a = spd(10, 3);
+        let ch = Cholesky::new(&a).unwrap();
+        let recon = ch.factor().matmul(&ch.factor().transpose());
+        assert!(max_abs_diff(&recon, &a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_lu() {
+        let a = spd(8, 4);
+        let b: Vec<f64> = (0..8).map(|i| (i as f64).sin()).collect();
+        let x1 = Cholesky::new(&a).unwrap().solve(&b);
+        let x2 = crate::linalg::Lu::new(&a).solve(&b).unwrap();
+        for (u, v) in x1.iter().zip(&x2) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn log_det_matches_lu_det() {
+        let a = spd(6, 9);
+        let ld = Cholesky::new(&a).unwrap().log_det();
+        let det = crate::linalg::Lu::new(&a).det();
+        assert!((ld - det.ln()).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,166 @@
+//! Symmetric eigensolver via the cyclic Jacobi rotation method.
+//!
+//! `R_zz` is a `D x D` symmetric matrix; Proposition 1 needs its extreme
+//! eigenvalues (step-size bound `mu < 2/λ_max`, convergence-mode analysis
+//! needs the full spectrum). Jacobi is O(n³) per sweep but rock-solid for
+//! the D ≤ 1000 sizes of the paper, and needs no external LAPACK.
+
+use super::Mat;
+
+/// Result of a symmetric eigendecomposition `A = V diag(λ) Vᵀ`.
+pub struct SymmetricEigen {
+    /// Eigenvalues in ascending order.
+    pub eigenvalues: Vec<f64>,
+    /// Eigenvectors as columns, matching `eigenvalues` order.
+    pub eigenvectors: Mat,
+    /// Number of Jacobi sweeps used.
+    pub sweeps: usize,
+}
+
+/// Eigendecomposition of a symmetric matrix via cyclic Jacobi.
+///
+/// Panics if the input is not square; symmetry is the caller's contract
+/// (asymmetry up to `1e-9` is symmetrized silently, larger asymmetry
+/// panics in debug builds).
+pub fn symmetric_eigen(a: &Mat, max_sweeps: usize) -> SymmetricEigen {
+    assert_eq!(a.rows(), a.cols(), "symmetric_eigen requires square input");
+    debug_assert!(a.is_symmetric(1e-7), "input must be symmetric");
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s
+    };
+
+    let mut sweeps = 0;
+    while sweeps < max_sweeps && off(&m) > 1e-22 * (n * n) as f64 {
+        sweeps += 1;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                // stable tangent of the rotation angle
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract + sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| diag[a].partial_cmp(&diag[b]).unwrap());
+    let eigenvalues: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let eigenvectors = Mat::from_fn(n, n, |r, c| v[(r, idx[c])]);
+    SymmetricEigen { eigenvalues, eigenvectors, sweeps }
+}
+
+/// Just the eigenvalues (ascending) of a symmetric matrix.
+pub fn symmetric_eigenvalues(a: &Mat) -> Vec<f64> {
+    symmetric_eigen(a, 64).eigenvalues
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::max_abs_diff;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::from_vec(3, 3, vec![5., 0., 0., 0., -1., 0., 0., 0., 2.]);
+        let ev = symmetric_eigenvalues(&a);
+        assert!((ev[0] + 1.0).abs() < 1e-12);
+        assert!((ev[1] - 2.0).abs() < 1e-12);
+        assert!((ev[2] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1 and 3
+        let a = Mat::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let ev = symmetric_eigenvalues(&a);
+        assert!((ev[0] - 1.0).abs() < 1e-10);
+        assert!((ev[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_random_spd() {
+        let mut rng = crate::rng::Rng::seed_from_u64(17);
+        let n = 20;
+        let b = Mat::from_fn(n, n, |_, _| rng.next_f64() - 0.5);
+        let mut a = b.matmul(&b.transpose());
+        a.symmetrize();
+        let e = symmetric_eigen(&a, 64);
+        // A = V diag(λ) Vᵀ
+        let mut lam = Mat::zeros(n, n);
+        for i in 0..n {
+            lam[(i, i)] = e.eigenvalues[i];
+        }
+        let recon = e.eigenvectors.matmul(&lam).matmul(&e.eigenvectors.transpose());
+        assert!(max_abs_diff(&recon, &a) < 1e-8);
+        // SPD => all eigenvalues >= 0
+        assert!(e.eigenvalues.iter().all(|&l| l > -1e-10));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = crate::rng::Rng::seed_from_u64(23);
+        let n = 12;
+        let b = Mat::from_fn(n, n, |_, _| rng.next_f64() - 0.5);
+        let mut a = b.add(&b.transpose());
+        a.symmetrize();
+        let e = symmetric_eigen(&a, 64);
+        let vtv = e.eigenvectors.transpose().matmul(&e.eigenvectors);
+        assert!(max_abs_diff(&vtv, &Mat::eye(n)) < 1e-9);
+    }
+
+    #[test]
+    fn trace_equals_eigenvalue_sum() {
+        let mut rng = crate::rng::Rng::seed_from_u64(29);
+        let n = 15;
+        let b = Mat::from_fn(n, n, |_, _| rng.next_f64());
+        let mut a = b.add(&b.transpose());
+        a.symmetrize();
+        let ev = symmetric_eigenvalues(&a);
+        assert!((ev.iter().sum::<f64>() - a.trace()).abs() < 1e-8);
+    }
+}

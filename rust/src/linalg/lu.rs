@@ -1,0 +1,180 @@
+//! LU decomposition with partial pivoting: general linear solves,
+//! inverses and determinants (used for `R_zz⁻¹` in Eq. (8) and the
+//! theory module's steady-state computations).
+
+use super::Mat;
+
+/// LU factorization `P A = L U` with partial pivoting.
+pub struct Lu {
+    /// Combined L (strict lower, unit diagonal implicit) and U (upper).
+    lu: Mat,
+    /// Row permutation: `perm[i]` is the original row now in position `i`.
+    perm: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+    /// True if a pivot collapsed below tolerance (singular to working
+    /// precision). `solve` on a singular factorization returns `None`.
+    singular: bool,
+}
+
+impl Lu {
+    /// Factorize a square matrix. Always succeeds; check
+    /// [`Lu::is_singular`] before trusting solves.
+    pub fn new(a: &Mat) -> Self {
+        assert_eq!(a.rows(), a.cols(), "LU requires a square matrix");
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        let mut singular = false;
+
+        for k in 0..n {
+            // pivot: largest |entry| in column k at or below the diagonal
+            let mut p = k;
+            let mut max = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > max {
+                    max = v;
+                    p = i;
+                }
+            }
+            if max < 1e-300 {
+                singular = true;
+                continue;
+            }
+            if p != k {
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = t;
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[(k, k)];
+            for i in (k + 1)..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= m * v;
+                    }
+                }
+            }
+        }
+        Self { lu, perm, sign, singular }
+    }
+
+    /// Whether a pivot collapsed (matrix singular to working precision).
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    /// Determinant of the original matrix.
+    pub fn det(&self) -> f64 {
+        if self.singular {
+            return 0.0;
+        }
+        let n = self.lu.rows();
+        (0..n).map(|i| self.lu[(i, i)]).product::<f64>() * self.sign
+    }
+
+    /// Solve `A x = b`. Returns `None` if the factorization is singular.
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        if self.singular {
+            return None;
+        }
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // forward substitution on permuted b (unit lower triangular)
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[self.perm[i]];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * y[j];
+            }
+            y[i] = s;
+        }
+        // back substitution (upper triangular)
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in (i + 1)..n {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        Some(x)
+    }
+
+    /// Inverse of the original matrix (column-by-column solve).
+    pub fn inverse(&self) -> Option<Mat> {
+        if self.singular {
+            return None;
+        }
+        let n = self.lu.rows();
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e)?;
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+            e[j] = 0.0;
+        }
+        Some(inv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::max_abs_diff;
+
+    #[test]
+    fn solves_known_system() {
+        // A = [[2,1],[1,3]], b = [3,5] -> x = [4/5, 7/5]
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let x = Lu::new(&a).solve(&[3.0, 5.0]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_of_triangular() {
+        let a = Mat::from_vec(3, 3, vec![2., 1., 0., 0., 3., 5., 0., 0., 4.]);
+        assert!((Lu::new(&a).det() - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip_random() {
+        let mut rng = crate::rng::Rng::seed_from_u64(5);
+        let n = 12;
+        let a = Mat::from_fn(n, n, |i, j| {
+            let base = rng.next_f64() - 0.5;
+            if i == j { base + 3.0 } else { base }  // diagonally dominant
+        });
+        let inv = Lu::new(&a).inverse().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(max_abs_diff(&prod, &Mat::eye(n)) < 1e-9);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        let lu = Lu::new(&a);
+        assert!(lu.is_singular());
+        assert!(lu.solve(&[1.0, 1.0]).is_none());
+        assert_eq!(lu.det(), 0.0);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let x = Lu::new(&a).solve(&[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+}

@@ -1,0 +1,258 @@
+//! `rff-kaf` — the leader binary: runs the paper's experiments, serves
+//! streaming sessions, and inspects AOT artifacts.
+//!
+//! ```text
+//! rff-kaf fig1    [--runs 100]  [--horizon 5000] [--d 50,100,300,1000] [--out fig1.csv]
+//! rff-kaf fig2a   [--runs 1000] [--horizon 15000] [--out fig2a.csv]
+//! rff-kaf fig2b   [--runs 100]  [--horizon 2000]  [--out fig2b.csv]
+//! rff-kaf fig3a   [--runs 1000] [--horizon 500]
+//! rff-kaf fig3b   [--runs 1000] [--horizon 1000]
+//! rff-kaf table1  [--runs 10] [--scale 1.0]
+//! rff-kaf artifacts [--dir artifacts]      # list + compile-check
+//! rff-kaf serve   [--sessions 8] [--samples 2000] [--pjrt]
+//! rff-kaf all     [--runs 50]              # every figure, scaled
+//! ```
+//!
+//! Every command prints the same series/rows the paper reports and can
+//! export CSV for plotting.
+
+use rff_kaf::coordinator::{CoordinatorService, FilterSession, ServiceConfig, SessionConfig};
+use rff_kaf::experiments::{self, print_figure, save_figure_csv, Series};
+use rff_kaf::rng::run_rng;
+use rff_kaf::runtime::PjrtExecutor;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let seed = args.get_or("seed", 20160321u64); // paper's arXiv year/month
+    let code = match cmd {
+        "fig1" => cmd_fig1(&args, seed),
+        "fig2a" => cmd_fig2a(&args, seed),
+        "fig2b" => cmd_fig2b(&args, seed),
+        "fig3a" => cmd_fig3a(&args, seed),
+        "fig3b" => cmd_fig3b(&args, seed),
+        "table1" => cmd_table1(&args, seed),
+        "artifacts" => cmd_artifacts(&args),
+        "serve" => cmd_serve(&args, seed),
+        "all" => {
+            cmd_fig1(&args, seed)
+                | cmd_fig2a(&args, seed)
+                | cmd_fig2b(&args, seed)
+                | cmd_fig3a(&args, seed)
+                | cmd_fig3b(&args, seed)
+                | cmd_table1(&args, seed)
+        }
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+rff-kaf — RFF-KLMS / RFF-KRLS reproduction (Bouboulis et al., 2016)
+
+USAGE: rff-kaf <command> [--flags]
+
+COMMANDS
+  fig1     RFF-KLMS convergence + theory steady state (paper Fig. 1)
+  fig2a    RFF-KLMS vs QKLMS on Example 2              (paper Fig. 2a)
+  fig2b    RFF-KRLS vs Engel KRLS on Example 2 data    (paper Fig. 2b)
+  fig3a    chaotic series Example 3                    (paper Fig. 3a)
+  fig3b    chaotic series Example 4                    (paper Fig. 3b)
+  table1   mean training times + dictionary sizes      (paper Table 1)
+  artifacts  list + compile-check the AOT artifacts
+  serve    run the streaming coordinator demo
+  all      every figure and the table (use --runs to scale)
+
+FLAGS (per command; sensible paper-scale defaults)
+  --runs N --horizon N --seed N --out file.csv --d 50,100,300
+  --dir artifacts --sessions N --samples N --pjrt --workers N
+";
+
+fn maybe_save(args: &Args, series: &[Series]) {
+    if let Some(path) = args.get("out") {
+        match save_figure_csv(path, series) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("cannot write {path}: {e}"),
+        }
+    }
+}
+
+fn cmd_fig1(args: &Args, seed: u64) -> i32 {
+    let runs = args.get_or("runs", 100usize);
+    let horizon = args.get_or("horizon", 5000usize);
+    let d_values: Vec<usize> = args
+        .get("d")
+        .map(|s| s.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_else(|| vec![50, 100, 300, 1000]);
+    let res = experiments::fig1(runs, horizon, &d_values, seed);
+    let mut series = res.series.clone();
+    series.push(Series::new("theory (Prop.1)", res.theory_curve.clone()));
+    print_figure("Fig. 1 — RFFKLMS on Eq. (7), MSE vs n", &series, 12);
+    println!(
+        "theory steady-state (dashed line): {:.2} dB",
+        rff_kaf::metrics::to_db(res.theory_steady_state)
+    );
+    maybe_save(args, &series);
+    0
+}
+
+fn cmd_fig2a(args: &Args, seed: u64) -> i32 {
+    let runs = args.get_or("runs", 1000usize);
+    let horizon = args.get_or("horizon", 15000usize);
+    let res = experiments::fig2a(runs, horizon, seed);
+    print_figure("Fig. 2a — RFFKLMS vs QKLMS (Example 2)", &res.series, 12);
+    println!("mean train time: QKLMS {:.3}s, RFFKLMS {:.3}s", res.train_secs[0], res.train_secs[1]);
+    maybe_save(args, &res.series);
+    0
+}
+
+fn cmd_fig2b(args: &Args, seed: u64) -> i32 {
+    // Engel KRLS is O(M^2) per step: default to a reduced-but-faithful
+    // scale; paper-scale via --runs/--horizon.
+    let runs = args.get_or("runs", 100usize);
+    let horizon = args.get_or("horizon", 2000usize);
+    let res = experiments::fig2b(runs, horizon, seed);
+    print_figure("Fig. 2b — RFFKRLS vs Engel KRLS (Example 2 data)", &res.series, 12);
+    println!("mean train time: KRLS {:.3}s, RFFKRLS {:.3}s", res.train_secs[0], res.train_secs[1]);
+    maybe_save(args, &res.series);
+    0
+}
+
+fn cmd_fig3a(args: &Args, seed: u64) -> i32 {
+    let runs = args.get_or("runs", 1000usize);
+    let horizon = args.get_or("horizon", 500usize);
+    let res = experiments::fig3a(runs, horizon, seed);
+    print_figure("Fig. 3a — chaotic series Example 3", &res.series, 10);
+    println!("QKLMS mean dictionary size M={:.1}", res.model_sizes[0]);
+    maybe_save(args, &res.series);
+    0
+}
+
+fn cmd_fig3b(args: &Args, seed: u64) -> i32 {
+    let runs = args.get_or("runs", 1000usize);
+    let horizon = args.get_or("horizon", 1000usize);
+    let res = experiments::fig3b(runs, horizon, seed);
+    print_figure("Fig. 3b — chaotic series Example 4", &res.series, 10);
+    println!("QKLMS mean dictionary size M={:.1}", res.model_sizes[0]);
+    maybe_save(args, &res.series);
+    0
+}
+
+fn cmd_table1(args: &Args, seed: u64) -> i32 {
+    let runs = args.get_or("runs", 10usize);
+    let scale = args.get_or("scale", 1.0f64);
+    let t = experiments::table1(runs, scale, seed);
+    println!("\n=== Table 1 — mean training times ===");
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_artifacts(args: &Args) -> i32 {
+    let dir = args.get("dir").unwrap_or("artifacts");
+    match PjrtExecutor::start(dir) {
+        Ok(exec) => {
+            let handle = exec.handle();
+            println!("platform: {}", handle.platform().unwrap_or_default());
+            println!("artifacts in {dir}:");
+            let names = handle.names().unwrap_or_default();
+            let count = names.len();
+            for name in &names {
+                match handle.compile(name) {
+                    Ok(()) => println!("  [ok] {name}"),
+                    Err(e) => {
+                        println!("  [FAIL] {name}: {e}");
+                        return 1;
+                    }
+                }
+            }
+            println!("{count} artifacts compiled");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot open artifact dir {dir}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args, seed: u64) -> i32 {
+    let n_sessions = args.get_or("sessions", 8usize);
+    let n_samples = args.get_or("samples", 2000usize);
+    let workers = args.get_or("workers", 2usize);
+    let use_pjrt = args.flag("pjrt");
+    let executor = if use_pjrt {
+        match PjrtExecutor::start(args.get("dir").unwrap_or("artifacts")) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("--pjrt requested but executor failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+    let handle = executor.as_ref().map(|e| e.handle());
+    let svc = CoordinatorService::start(
+        ServiceConfig { workers, ..ServiceConfig::default() },
+        handle.clone(),
+    );
+    let mut ids = Vec::new();
+    for i in 0..n_sessions {
+        let mut rng = run_rng(seed, i);
+        let cfg = SessionConfig {
+            backend: if use_pjrt {
+                rff_kaf::coordinator::Backend::Pjrt
+            } else {
+                rff_kaf::coordinator::Backend::Native
+            },
+            ..SessionConfig::paper_default()
+        };
+        match FilterSession::new(cfg, &mut rng, handle.clone()) {
+            Ok(s) => ids.push(svc.add_session(s)),
+            Err(e) => {
+                eprintln!("session {i}: {e}");
+                return 1;
+            }
+        }
+    }
+    println!("serving {n_sessions} sessions x {n_samples} samples (pjrt={use_pjrt})");
+    let t = std::time::Instant::now();
+    let handles: Vec<_> = ids
+        .iter()
+        .map(|&sid| {
+            let mut src = NonlinearWiener::new(run_rng(seed ^ 0x5E55, sid as usize), 0.05);
+            let samples = src.take_samples(n_samples);
+            (sid, samples)
+        })
+        .collect();
+    for (sid, samples) in &handles {
+        for s in samples {
+            if let Err(e) = svc.train_sync(*sid, s.x.clone(), s.y) {
+                eprintln!("train: {e}");
+                return 1;
+            }
+        }
+        let _ = svc.flush_sync(*sid);
+    }
+    let secs = t.elapsed().as_secs_f64();
+    let total = n_sessions * n_samples;
+    println!(
+        "{total} samples in {secs:.3}s = {:.0} samples/s; trained={} predicted={} errors={}",
+        total as f64 / secs,
+        svc.stats().trained.load(std::sync::atomic::Ordering::Relaxed),
+        svc.stats().predicted.load(std::sync::atomic::Ordering::Relaxed),
+        svc.stats().errors.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    for &sid in &ids {
+        if let Some(sess) = svc.remove_session(sid) {
+            println!("  session {sid}: running MSE {:.5}", sess.running_mse());
+        }
+    }
+    svc.shutdown();
+    0
+}

@@ -1,0 +1,190 @@
+//! Log-bucketed latency histogram with percentile queries — the serving
+//! metric the coordinator exports (criterion/HDR-histogram substitute).
+
+/// Histogram over positive values with logarithmic buckets: 64 buckets
+/// per decade across `[1e-9, 1e3]` (nanoseconds-to-kiloseconds when fed
+/// seconds), constant memory, ~1.8% relative bucket width.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+const DECADES_FROM: i32 = -9;
+const DECADES_TO: i32 = 3;
+const BUCKETS_PER_DECADE: usize = 64;
+const N_BUCKETS: usize = ((DECADES_TO - DECADES_FROM) as usize) * BUCKETS_PER_DECADE;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; N_BUCKETS],
+            total: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        let l = v.max(1e-12).log10();
+        let pos = (l - DECADES_FROM as f64) * BUCKETS_PER_DECADE as f64;
+        (pos.floor().max(0.0) as usize).min(N_BUCKETS - 1)
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        // bucket midpoint in log space
+        let l = DECADES_FROM as f64 + (idx as f64 + 0.5) / BUCKETS_PER_DECADE as f64;
+        10f64.powf(l)
+    }
+
+    /// Record one observation (must be > 0; zeros are clamped).
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v;
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Exact min.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact max.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile `q ∈ [0,1]` to bucket resolution (~±2%).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+
+    /// One-line percentile report (p50/p95/p99/max), values in
+    /// milliseconds when observations were seconds.
+    pub fn report_ms(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.total,
+            self.quantile(0.5) * 1e3,
+            self.quantile(0.95) * 1e3,
+            self.quantile(0.99) * 1e3,
+            self.max * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_uniform_grid() {
+        let mut h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms .. 1s
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.5).abs() < 0.05, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((p99 - 0.99).abs() < 0.06, "p99={p99}");
+        assert_eq!(h.quantile(1.0), 1.0);
+    }
+
+    #[test]
+    fn min_max_mean_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0.002, 0.004, 0.006] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0.002);
+        assert_eq!(h.max(), 0.006);
+        assert!((h.mean() - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut c = LogHistogram::new();
+        for i in 1..500 {
+            let v = i as f64 * 1e-4;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert!((a.quantile(q) - c.quantile(q)).abs() / c.quantile(q) < 0.05);
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_sane() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let mut h = LogHistogram::new();
+        h.record(0.001);
+        let s = h.report_ms("probe");
+        assert!(s.contains("p50") && s.contains("probe"));
+    }
+}

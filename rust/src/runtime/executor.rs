@@ -1,0 +1,281 @@
+//! PJRT executor thread: the `xla` crate's client and executables are
+//! `!Send` (Rc-backed FFI handles), so the engine lives on one dedicated
+//! thread and the rest of the system talks to it through a cloneable
+//! [`ExecutorHandle`] — the same confinement pattern a GPU/TPU executor
+//! would use, and conveniently also the single-dispatch-queue point where
+//! batched work serializes.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Engine, RffChunkState, RlsChunkState};
+
+type Reply<T> = Sender<Result<T>>;
+
+enum Cmd {
+    Platform(Reply<String>),
+    Names(Reply<Vec<String>>),
+    ChunkLen { kind: String, d: usize, features: usize, resp: Reply<usize> },
+    BatchLen { kind: String, d: usize, features: usize, resp: Reply<usize> },
+    Compile { name: String, resp: Reply<()> },
+    KlmsChunk {
+        d: usize,
+        features: usize,
+        theta: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        mu: f32,
+        resp: Reply<(Vec<f32>, Vec<f32>)>, // (theta', errors)
+    },
+    KrlsChunk {
+        d: usize,
+        features: usize,
+        theta: Vec<f32>,
+        p: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        beta: f32,
+        resp: Reply<(Vec<f32>, Vec<f32>, Vec<f32>)>, // (theta', P', errors)
+    },
+    Features {
+        d: usize,
+        features: usize,
+        x: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        resp: Reply<Vec<f32>>,
+    },
+    Predict {
+        d: usize,
+        features: usize,
+        theta: Vec<f32>,
+        x: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        resp: Reply<Vec<f32>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the PJRT executor thread.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Sender<Cmd>,
+}
+
+/// The executor: owns the engine thread; dropping shuts it down.
+pub struct PjrtExecutor {
+    handle: ExecutorHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtExecutor {
+    /// Boot the executor thread over `artifact_dir`. Fails fast if the
+    /// registry or the PJRT client cannot be created.
+    pub fn start(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = artifact_dir.into();
+        let (tx, rx) = channel::<Cmd>();
+        let (boot_tx, boot_rx) = channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("rff-kaf-pjrt".into())
+            .spawn(move || {
+                let engine = match Engine::new(&dir) {
+                    Ok(e) => {
+                        let _ = boot_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Shutdown => break,
+                        Cmd::Platform(resp) => {
+                            let _ = resp.send(Ok(engine.platform()));
+                        }
+                        Cmd::Names(resp) => {
+                            let _ = resp.send(Ok(engine
+                                .registry()
+                                .names()
+                                .map(|s| s.to_string())
+                                .collect()));
+                        }
+                        Cmd::ChunkLen { kind, d, features, resp } => {
+                            let _ = resp.send(
+                                engine
+                                    .registry()
+                                    .find_chunk(&kind, d, features)
+                                    .and_then(|m| {
+                                        m.chunk_n.ok_or_else(|| anyhow!("{kind} has no N"))
+                                    }),
+                            );
+                        }
+                        Cmd::BatchLen { kind, d, features, resp } => {
+                            let _ = resp.send(
+                                engine
+                                    .registry()
+                                    .find_chunk(&kind, d, features)
+                                    .and_then(|m| {
+                                        m.batch_b.ok_or_else(|| anyhow!("{kind} has no B"))
+                                    }),
+                            );
+                        }
+                        Cmd::Compile { name, resp } => {
+                            let _ = resp.send(engine.executable(&name).map(|_| ()));
+                        }
+                        Cmd::KlmsChunk { d, features, theta, x, y, omega, b, mu, resp } => {
+                            let mut state = RffChunkState { theta };
+                            let out = engine
+                                .rffklms_chunk(d, features, &mut state, &x, &y, &omega, &b, mu)
+                                .map(|errs| (state.theta, errs));
+                            let _ = resp.send(out);
+                        }
+                        Cmd::KrlsChunk {
+                            d,
+                            features,
+                            theta,
+                            p,
+                            x,
+                            y,
+                            omega,
+                            b,
+                            beta,
+                            resp,
+                        } => {
+                            let mut state = RlsChunkState { theta, p };
+                            let out = engine
+                                .rffkrls_chunk(d, features, &mut state, &x, &y, &omega, &b, beta)
+                                .map(|errs| (state.theta, state.p, errs));
+                            let _ = resp.send(out);
+                        }
+                        Cmd::Features { d, features, x, omega, b, resp } => {
+                            let _ =
+                                resp.send(engine.rff_features(d, features, &x, &omega, &b));
+                        }
+                        Cmd::Predict { d, features, theta, x, omega, b, resp } => {
+                            let _ = resp.send(
+                                engine.rff_predict(d, features, &theta, &x, &omega, &b),
+                            );
+                        }
+                    }
+                }
+            })?;
+        boot_rx.recv().map_err(|_| anyhow!("executor thread died during boot"))??;
+        Ok(Self { handle: ExecutorHandle { tx }, thread: Some(thread) })
+    }
+
+    /// A cloneable handle for sessions/services.
+    pub fn handle(&self) -> ExecutorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for PjrtExecutor {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Cmd::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl ExecutorHandle {
+    fn roundtrip<T>(&self, make: impl FnOnce(Reply<T>) -> Cmd) -> Result<T> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(make(tx))
+            .map_err(|_| anyhow!("PJRT executor is gone"))?;
+        rx.recv().map_err(|_| anyhow!("PJRT executor dropped the request"))?
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> Result<String> {
+        self.roundtrip(Cmd::Platform)
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> Result<Vec<String>> {
+        self.roundtrip(Cmd::Names)
+    }
+
+    /// Chunk length N baked for `(kind, d, D)`.
+    pub fn chunk_len(&self, kind: &str, d: usize, features: usize) -> Result<usize> {
+        self.roundtrip(|resp| Cmd::ChunkLen { kind: kind.into(), d, features, resp })
+    }
+
+    /// Batch size B baked for `(kind, d, D)`.
+    pub fn batch_len(&self, kind: &str, d: usize, features: usize) -> Result<usize> {
+        self.roundtrip(|resp| Cmd::BatchLen { kind: kind.into(), d, features, resp })
+    }
+
+    /// Compile (and cache) artifact `name`.
+    pub fn compile(&self, name: &str) -> Result<()> {
+        self.roundtrip(|resp| Cmd::Compile { name: name.into(), resp })
+    }
+
+    /// Run an RFF-KLMS chunk; returns `(theta', errors)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn klms_chunk(
+        &self,
+        d: usize,
+        features: usize,
+        theta: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.roundtrip(|resp| Cmd::KlmsChunk { d, features, theta, x, y, omega, b, mu, resp })
+    }
+
+    /// Run an RFF-KRLS chunk; returns `(theta', P', errors)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn krls_chunk(
+        &self,
+        d: usize,
+        features: usize,
+        theta: Vec<f32>,
+        p: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+        beta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.roundtrip(|resp| Cmd::KrlsChunk { d, features, theta, p, x, y, omega, b, beta, resp })
+    }
+
+    /// Batched feature map.
+    pub fn features(
+        &self,
+        d: usize,
+        features: usize,
+        x: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        self.roundtrip(|resp| Cmd::Features { d, features, x, omega, b, resp })
+    }
+
+    /// Batched prediction.
+    pub fn predict(
+        &self,
+        d: usize,
+        features: usize,
+        theta: Vec<f32>,
+        x: Vec<f32>,
+        omega: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        self.roundtrip(|resp| Cmd::Predict { d, features, theta, x, omega, b, resp })
+    }
+}

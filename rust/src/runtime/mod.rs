@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! * [`ArtifactRegistry`] — parses `artifacts/manifest.json` and maps
+//!   artifact names to files + shape metadata, with helpful errors when a
+//!   requested (d, D, N) configuration was not baked.
+//! * [`Engine`] — one `PjRtClient` (CPU), compiled-executable cache, and
+//!   typed entry points for each artifact kind (`rffklms_chunk`,
+//!   `rffkrls_chunk`, `rff_features`, `rff_predict`, `gauss_kernel`).
+//!
+//! Interchange format is HLO **text** — see `python/compile/aot.py` for
+//! why serialized protos are rejected by xla_extension 0.5.1.
+
+mod engine;
+mod executor;
+mod registry;
+
+pub use engine::{Engine, RffChunkState, RlsChunkState};
+pub use executor::{ExecutorHandle, PjrtExecutor};
+pub use registry::{ArtifactMeta, ArtifactRegistry};

@@ -1,0 +1,210 @@
+//! Artifact discovery: `manifest.json` → typed metadata.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::JsonValue;
+
+/// Metadata of one AOT artifact (a lowered HLO-text module).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Registry key, e.g. `rffklms_chunk_d5_D300_N64`.
+    pub name: String,
+    /// HLO text file (absolute, resolved against the artifact dir).
+    pub path: PathBuf,
+    /// Graph kind: `rffklms_chunk`, `rffkrls_chunk`, `rff_features`,
+    /// `rff_predict`, `gauss_kernel`.
+    pub kind: String,
+    /// Input dimension d.
+    pub d: usize,
+    /// Feature count D (0 for gauss_kernel).
+    pub features: usize,
+    /// Chunk length N (chunk kinds only).
+    pub chunk_n: Option<usize>,
+    /// Batch size B (batch kinds only).
+    pub batch_b: Option<usize>,
+    /// Dictionary size M (gauss_kernel only).
+    pub dict_m: Option<usize>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactMeta>,
+    /// Default chunk length baked by aot.py.
+    pub chunk_n: usize,
+    /// Default batch size baked by aot.py.
+    pub batch_b: usize,
+}
+
+impl ArtifactRegistry {
+    /// Load the registry from an artifact directory containing
+    /// `manifest.json` (produced by `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let root = JsonValue::parse(&text).context("manifest.json is not valid JSON")?;
+        let format = root.get("format").and_then(|v| v.as_usize()).unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format} (expected 1)");
+        }
+        let chunk_n = root
+            .get("chunk_n")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing chunk_n"))?;
+        let batch_b = root
+            .get("batch_b")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing batch_b"))?;
+        let mut by_name = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file {} listed in manifest but missing on disk", path.display());
+            }
+            let meta = ArtifactMeta {
+                path,
+                kind: a
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact {name} missing kind"))?
+                    .to_string(),
+                d: a.get("d").and_then(|v| v.as_usize()).unwrap_or(0),
+                features: a.get("D").and_then(|v| v.as_usize()).unwrap_or(0),
+                chunk_n: a.get("N").and_then(|v| v.as_usize()),
+                batch_b: a.get("B").and_then(|v| v.as_usize()),
+                dict_m: a.get("M").and_then(|v| v.as_usize()),
+                name: name.clone(),
+            };
+            by_name.insert(name, meta);
+        }
+        Ok(Self { dir, by_name, chunk_n, batch_b })
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    /// True when the registry holds no artifacts.
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Lookup by exact name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest; available: [{}]",
+                self.by_name.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Find a chunk artifact for (kind, d, D): e.g.
+    /// `find_chunk("rffklms_chunk", 5, 300)`.
+    pub fn find_chunk(&self, kind: &str, d: usize, features: usize) -> Result<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .find(|m| m.kind == kind && m.d == d && m.features == features)
+            .ok_or_else(|| {
+                let avail: Vec<String> = self
+                    .by_name
+                    .values()
+                    .filter(|m| m.kind == kind)
+                    .map(|m| format!("(d={}, D={})", m.d, m.features))
+                    .collect();
+                anyhow!(
+                    "no {kind} artifact for d={d}, D={features}; baked configs: {} — \
+                     add the config to python/compile/aot.py and re-run `make artifacts`",
+                    avail.join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("rffkaf_registry_test1");
+        write_manifest(
+            &dir,
+            r#"{"format":1,"chunk_n":64,"batch_b":32,"artifacts":[
+                {"name":"rffklms_chunk_d5_D300_N64","file":"x.hlo.txt",
+                 "kind":"rffklms_chunk","d":5,"D":300,"N":64}
+            ]}"#,
+        );
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.chunk_n, 64);
+        let m = reg.find_chunk("rffklms_chunk", 5, 300).unwrap();
+        assert_eq!(m.chunk_n, Some(64));
+        assert!(reg.find_chunk("rffklms_chunk", 5, 999).is_err());
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_on_disk_is_an_error() {
+        let dir = std::env::temp_dir().join("rffkaf_registry_test2");
+        write_manifest(
+            &dir,
+            r#"{"format":1,"chunk_n":64,"batch_b":32,"artifacts":[
+                {"name":"a","file":"missing.hlo.txt","kind":"rff_features","d":1,"D":10,"B":2}
+            ]}"#,
+        );
+        let _ = std::fs::remove_file(dir.join("missing.hlo.txt"));
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, validate the real manifest.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let reg = ArtifactRegistry::load(&dir).unwrap();
+            assert!(reg.len() >= 15);
+            assert!(reg.find_chunk("rffklms_chunk", 5, 300).is_ok());
+            assert!(reg.find_chunk("rffkrls_chunk", 5, 300).is_ok());
+        }
+    }
+}

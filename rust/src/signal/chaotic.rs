@@ -1,0 +1,175 @@
+//! §5.3 and §5.4: the two chaotic/nonlinear time-series models of
+//! Parreira et al. used for Fig. 3a/3b and Table-1 rows 2–3.
+//!
+//! Both are *system identification* setups: the filter sees an input
+//! vector built from the exogenous drive and must predict the noisy
+//! output `y_n`.
+//!
+//! **Ex. 3** (`Chaotic1`): `d_n = d_{n-1}/(1+d_{n-1}²) + u_{n-1}³`,
+//! `y_n = d_n + η_n`, `u ~ N(0, 0.15²)`, `σ_η = 0.01`, `d_1 = 1`.
+//! The regression input is `x_n = u_{n-1}` (d = 1): the filter learns the
+//! map `u_{n-1} ↦ d_n` around the chaotic internal state.
+//!
+//! **Ex. 4** (`Chaotic2`): `d_n = u_n + 0.5 v_n − 0.2 d_{n-1} + 0.35 d_{n-2}`,
+//! `y_n = φ(d_n) + η_n` with the saturating φ of the paper,
+//! `v ~ N(0, 0.0156)`, `u_n = 0.5 v_n + η̂_n`, `η̂ ~ N(0, 0.0156)`,
+//! `σ_η = 0.001`, `d_1 = d_2 = 1`. Regression input `x_n = (u_n, v_n)`
+//! (d = 2).
+
+use super::{Sample, SignalSource};
+use crate::rng::{Distribution, Normal, Rng};
+
+/// §5.3 chaotic series (Fig. 3a): input `u_{n-1}`, target `d_n + η_n`.
+pub struct Chaotic1 {
+    rng: Rng,
+    d_prev: f64,
+    u_prev: f64,
+    noise_std: f64,
+    input_std: f64,
+}
+
+impl Chaotic1 {
+    /// Paper parameters: `σ_u = 0.15`, `σ_η = 0.01`, `d_1 = 1`.
+    pub fn paper_default(rng: Rng) -> Self {
+        Self::new(rng, 0.15, 0.01)
+    }
+
+    /// Custom noise/drive levels.
+    pub fn new(mut rng: Rng, input_std: f64, noise_std: f64) -> Self {
+        let u0 = Normal::new(0.0, input_std).sample(&mut rng);
+        Self { rng, d_prev: 1.0, u_prev: u0, noise_std, input_std }
+    }
+}
+
+impl SignalSource for Chaotic1 {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn next_sample(&mut self) -> Sample {
+        // d_n from the recursion driven by u_{n-1}
+        let d_n = self.d_prev / (1.0 + self.d_prev * self.d_prev) + self.u_prev.powi(3);
+        let x = vec![self.u_prev];
+        let noise = Normal::new(0.0, self.noise_std).sample(&mut self.rng);
+        let sample = Sample { x, y: d_n + noise, clean: d_n };
+        // advance state
+        self.d_prev = d_n;
+        self.u_prev = Normal::new(0.0, self.input_std).sample(&mut self.rng);
+        sample
+    }
+}
+
+/// The saturating nonlinearity φ of §5.4.
+pub fn phi(d: f64) -> f64 {
+    if d >= 0.0 {
+        d / (3.0 * (0.1 + 0.9 * d * d).sqrt())
+    } else {
+        -(d * d) * (1.0 - (0.7 * d).exp()) / 3.0
+    }
+}
+
+/// §5.4 chaotic series (Fig. 3b): input `(u_n, v_n)`, target `φ(d_n)+η_n`.
+pub struct Chaotic2 {
+    rng: Rng,
+    d1: f64, // d_{n-1}
+    d2: f64, // d_{n-2}
+    noise_std: f64,
+    v_std: f64,
+    uhat_std: f64,
+}
+
+impl Chaotic2 {
+    /// Paper parameters: `σ_v² = σ̂² = 0.0156`, `σ_η = 0.001`, `d_1 = d_2 = 1`.
+    pub fn paper_default(rng: Rng) -> Self {
+        Self::new(rng, 0.0156f64.sqrt(), 0.0156f64.sqrt(), 0.001)
+    }
+
+    /// Custom noise/drive levels.
+    pub fn new(rng: Rng, v_std: f64, uhat_std: f64, noise_std: f64) -> Self {
+        Self { rng, d1: 1.0, d2: 1.0, noise_std, v_std, uhat_std }
+    }
+}
+
+impl SignalSource for Chaotic2 {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn next_sample(&mut self) -> Sample {
+        let v = Normal::new(0.0, self.v_std).sample(&mut self.rng);
+        let uhat = Normal::new(0.0, self.uhat_std).sample(&mut self.rng);
+        let u = 0.5 * v + uhat;
+        let d_n = u + 0.5 * v - 0.2 * self.d1 + 0.35 * self.d2;
+        let clean = phi(d_n);
+        let noise = Normal::new(0.0, self.noise_std).sample(&mut self.rng);
+        let sample = Sample { x: vec![u, v], y: clean + noise, clean };
+        self.d2 = self.d1;
+        self.d1 = d_n;
+        sample
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn chaotic1_state_stays_bounded() {
+        // |d/(1+d^2)| <= 1/2 and |u^3| is tiny for sigma_u = 0.15, so the
+        // series must remain bounded.
+        let mut s = Chaotic1::paper_default(run_rng(1, 0));
+        for _ in 0..5000 {
+            let smp = s.next_sample();
+            assert!(smp.y.abs() < 2.0, "diverged: {}", smp.y);
+        }
+    }
+
+    #[test]
+    fn chaotic1_first_sample_uses_d1_equals_1() {
+        // d_2 = 1/(1+1) + u_1^3 = 0.5 + u_1^3; first emitted sample has
+        // clean = that value with x = [u_1].
+        let mut s = Chaotic1::paper_default(run_rng(2, 0));
+        let smp = s.next_sample();
+        let expect = 0.5 + smp.x[0].powi(3);
+        assert!((smp.clean - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phi_is_continuous_at_zero_and_saturates() {
+        assert!(phi(0.0).abs() < 1e-12);
+        assert!((phi(1e-9) - phi(-1e-9)).abs() < 1e-8);
+        // phi saturates towards 1/(3 sqrt(0.9)) as d -> inf
+        let lim = 1.0 / (3.0 * 0.9f64.sqrt());
+        assert!((phi(1e6) - lim).abs() < 1e-3);
+    }
+
+    #[test]
+    fn chaotic2_ar_recursion_is_stable() {
+        let mut s = Chaotic2::paper_default(run_rng(3, 0));
+        for _ in 0..5000 {
+            let smp = s.next_sample();
+            assert!(smp.y.is_finite() && smp.y.abs() < 3.0);
+        }
+    }
+
+    #[test]
+    fn chaotic2_input_correlation() {
+        // u = 0.5 v + uhat => cov(u, v) = 0.5 var(v).
+        let mut s = Chaotic2::paper_default(run_rng(4, 0));
+        let samples = s.take_samples(50_000);
+        let n = samples.len() as f64;
+        let mu_u = samples.iter().map(|s| s.x[0]).sum::<f64>() / n;
+        let mu_v = samples.iter().map(|s| s.x[1]).sum::<f64>() / n;
+        let cov = samples.iter().map(|s| (s.x[0] - mu_u) * (s.x[1] - mu_v)).sum::<f64>() / n;
+        let var_v = samples.iter().map(|s| (s.x[1] - mu_v) * (s.x[1] - mu_v)).sum::<f64>() / n;
+        assert!((cov - 0.5 * var_v).abs() < 0.002, "cov={cov} var_v={var_v}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Chaotic2::paper_default(run_rng(5, 2)).take_samples(6);
+        let b = Chaotic2::paper_default(run_rng(5, 2)).take_samples(6);
+        assert_eq!(a, b);
+    }
+}

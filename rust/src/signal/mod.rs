@@ -1,0 +1,120 @@
+//! Workload generators: the four synthetic systems of the paper's §5 plus
+//! the streaming traits the coordinator consumes.
+//!
+//! | generator | paper section | model |
+//! |---|---|---|
+//! | [`LinearKernelExpansion`] | §5.1 (Fig. 1) | `y = Σ a_m κ_σ(c_m, x) + η` |
+//! | [`NonlinearWiener`] | §5.2 (Fig. 2) | `y = w₀ᵀx + 0.1 (w₁ᵀx)² + η` |
+//! | [`Chaotic1`] | §5.3 (Fig. 3a) | `d_n = d_{n-1}/(1+d_{n-1}²) + u_{n-1}³` |
+//! | [`Chaotic2`] | §5.4 (Fig. 3b) | AR(2) + saturating nonlinearity φ |
+//! | [`MackeyGlass`] | (beyond the paper) | the canonical KAF benchmark series |
+//!
+//! Each generator implements [`SignalSource`]: an infinite stream of
+//! `(x_n, y_n)` pairs with `x_n ∈ R^d`. Generators own their RNG so a
+//! Monte-Carlo run is fully described by a seed.
+
+mod chaotic;
+mod expansion;
+mod mackey_glass;
+mod wiener;
+
+pub use chaotic::{Chaotic1, Chaotic2};
+pub use expansion::LinearKernelExpansion;
+pub use mackey_glass::MackeyGlass;
+pub use wiener::NonlinearWiener;
+
+use crate::rng::Rng;
+
+/// One labelled sample from a streaming nonlinear system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// Input vector `x_n ∈ R^d`.
+    pub x: Vec<f64>,
+    /// Target `y_n` (including observation noise).
+    pub y: f64,
+    /// Noise-free target (for excess-MSE diagnostics; equals `y` minus
+    /// the injected noise sample).
+    pub clean: f64,
+}
+
+/// An infinite stream of `(x, y)` samples.
+pub trait SignalSource {
+    /// Input dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Produce the next sample.
+    fn next_sample(&mut self) -> Sample;
+
+    /// Convenience: materialize `n` samples.
+    fn take_samples(&mut self, n: usize) -> Vec<Sample> {
+        (0..n).map(|_| self.next_sample()).collect()
+    }
+}
+
+/// Factory for Monte-Carlo experiments: builds a fresh, independently
+/// seeded stream per run.
+pub trait SignalFactory: Sync {
+    /// The concrete source type.
+    type Source: SignalSource;
+
+    /// Build the source for Monte-Carlo run index `run`.
+    fn for_run(&self, run: usize) -> Self::Source;
+
+    /// Input dimension of all produced sources.
+    fn dim(&self) -> usize;
+}
+
+/// Blanket factory from a `Fn(run) -> Source` closure.
+pub struct FnFactory<S, F: Fn(usize) -> S + Sync> {
+    f: F,
+    dim: usize,
+}
+
+impl<S: SignalSource, F: Fn(usize) -> S + Sync> FnFactory<S, F> {
+    /// Wrap a closure as a factory, stating the input dimension.
+    pub fn new(dim: usize, f: F) -> Self {
+        Self { f, dim }
+    }
+}
+
+impl<S: SignalSource, F: Fn(usize) -> S + Sync> SignalFactory for FnFactory<S, F> {
+    type Source = S;
+
+    fn for_run(&self, run: usize) -> S {
+        (self.f)(run)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Draw a `d`-dimensional standard normal scaled by `std`.
+pub(crate) fn gaussian_vec(rng: &mut Rng, d: usize, std: f64) -> Vec<f64> {
+    use crate::rng::{Distribution, Normal};
+    Normal::new(0.0, std).sample_vec(rng, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn take_samples_length_and_dim() {
+        let mut s = NonlinearWiener::new(run_rng(1, 0), 0.05);
+        let v = s.take_samples(10);
+        assert_eq!(v.len(), 10);
+        assert!(v.iter().all(|smp| smp.x.len() == s.dim()));
+    }
+
+    #[test]
+    fn fn_factory_builds_independent_runs() {
+        let f = FnFactory::new(5, |run| NonlinearWiener::new(run_rng(9, run), 0.05));
+        let a = f.for_run(0).take_samples(4);
+        let b = f.for_run(1).take_samples(4);
+        let a2 = f.for_run(0).take_samples(4);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,87 @@
+//! §5.2 / Eq. (9): the "simple non-linear model"
+//! `y_n = w₀ᵀ x_n + 0.1 (w₁ᵀ x_n)² + η_n`, `w₀, w₁ ∈ R⁵ ~ N(0, I)`,
+//! `x_n ~ N(0, I)`, `σ_η = 0.05` — the workload of Fig. 2a/2b and the
+//! Example-2 row of Table 1.
+
+use super::{gaussian_vec, Sample, SignalSource};
+use crate::rng::{Distribution, Normal, Rng};
+
+/// Generator for the paper's Example 2 (a quadratic Wiener-type system).
+pub struct NonlinearWiener {
+    rng: Rng,
+    w0: Vec<f64>,
+    w1: Vec<f64>,
+    noise_std: f64,
+    dim: usize,
+}
+
+impl NonlinearWiener {
+    /// Paper setup: d=5, `w0`,`w1` drawn i.i.d. `N(0,1)` from this run's
+    /// RNG, noise std `sigma_eta` (paper uses 0.05).
+    pub fn new(mut rng: Rng, noise_std: f64) -> Self {
+        let dim = 5;
+        let w0 = gaussian_vec(&mut rng, dim, 1.0);
+        let w1 = gaussian_vec(&mut rng, dim, 1.0);
+        Self { rng, w0, w1, noise_std, dim }
+    }
+
+    /// Custom dimension variant (for ablations).
+    pub fn with_dim(mut rng: Rng, dim: usize, noise_std: f64) -> Self {
+        let w0 = gaussian_vec(&mut rng, dim, 1.0);
+        let w1 = gaussian_vec(&mut rng, dim, 1.0);
+        Self { rng, w0, w1, noise_std, dim }
+    }
+
+    /// Noise-free regression function.
+    pub fn clean_fn(&self, x: &[f64]) -> f64 {
+        let l = crate::linalg::dot(&self.w0, x);
+        let q = crate::linalg::dot(&self.w1, x);
+        l + 0.1 * q * q
+    }
+}
+
+impl SignalSource for NonlinearWiener {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn next_sample(&mut self) -> Sample {
+        let x = gaussian_vec(&mut self.rng, self.dim, 1.0);
+        let clean = self.clean_fn(&x);
+        let noise = Normal::new(0.0, self.noise_std).sample(&mut self.rng);
+        Sample { y: clean + noise, clean, x }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn quadratic_term_present() {
+        // E[y] = 0.1 E[(w1^T x)^2] = 0.1 ||w1||^2 > 0 for x ~ N(0, I).
+        let mut g = NonlinearWiener::new(run_rng(11, 0), 0.0);
+        let w1_norm2: f64 = g.w1.iter().map(|v| v * v).sum();
+        let samples = g.take_samples(40_000);
+        let mean_y = samples.iter().map(|s| s.y).sum::<f64>() / samples.len() as f64;
+        assert!(
+            (mean_y - 0.1 * w1_norm2).abs() < 0.15 * (1.0 + 0.1 * w1_norm2),
+            "mean_y={mean_y} expected~{}",
+            0.1 * w1_norm2
+        );
+    }
+
+    #[test]
+    fn different_runs_have_different_weights() {
+        let a = NonlinearWiener::new(run_rng(2, 0), 0.05);
+        let b = NonlinearWiener::new(run_rng(2, 1), 0.05);
+        assert_ne!(a.w0, b.w0);
+    }
+
+    #[test]
+    fn dim_is_five_by_default() {
+        assert_eq!(NonlinearWiener::new(run_rng(0, 0), 0.05).dim(), 5);
+        assert_eq!(NonlinearWiener::with_dim(run_rng(0, 0), 8, 0.05).dim(), 8);
+    }
+}

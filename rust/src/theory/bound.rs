@@ -1,0 +1,106 @@
+//! The Rahimi–Recht uniform approximation bound (Claim 1 of "Random
+//! Features for Large-Scale Kernel Machines"), which the paper's §3
+//! invokes for "details on the quality of this approximation".
+//!
+//! For the Gaussian kernel on a compact set of diameter `diam`:
+//!
+//! `P( sup |z(x)ᵀz(y) − κ(x−y)| ≥ ε ) ≤ 2⁸ (σ_p diam / ε)² exp(−D ε² / (4(d+2)))`
+//!
+//! with `σ_p² = E‖ω‖² = d/σ²` for bandwidth σ. We expose the bound, the
+//! D required to certify a target (ε, δ), and an empirical max-error
+//! estimator used by the ablation tests.
+
+use crate::kaf::kernels::Kernel;
+use crate::kaf::RffMap;
+use crate::rng::{Distribution, Normal, Rng};
+
+/// The right-hand side of the uniform bound (may exceed 1 = vacuous).
+pub fn uniform_error_bound(d: usize, features: usize, sigma: f64, diam: f64, eps: f64) -> f64 {
+    assert!(eps > 0.0 && sigma > 0.0 && diam > 0.0);
+    let sigma_p = (d as f64).sqrt() / sigma;
+    let prefactor = 2f64.powi(8) * (sigma_p * diam / eps).powi(2);
+    let exponent = -(features as f64) * eps * eps / (4.0 * (d as f64 + 2.0));
+    (prefactor * exponent.exp()).min(1.0)
+}
+
+/// Smallest D certifying `sup error ≤ eps` with probability `1 − delta`
+/// (inverting the bound; the paper's "sufficiently large D").
+pub fn required_features(d: usize, sigma: f64, diam: f64, eps: f64, delta: f64) -> usize {
+    assert!((0.0..1.0).contains(&delta) && delta > 0.0);
+    let sigma_p = (d as f64).sqrt() / sigma;
+    let prefactor = 2f64.powi(8) * (sigma_p * diam / eps).powi(2);
+    let needed = 4.0 * (d as f64 + 2.0) / (eps * eps) * (prefactor / delta).ln();
+    needed.ceil().max(1.0) as usize
+}
+
+/// Empirical max kernel-approximation error of `map` over `n` random
+/// pairs drawn from `N(0, (diam/4)² I)` (so pairs span ~the diameter).
+pub fn empirical_max_error(
+    map: &RffMap,
+    kernel: Kernel,
+    diam: f64,
+    n: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let normal = Normal::new(0.0, diam / 4.0);
+    let mut worst = 0.0f64;
+    for _ in 0..n {
+        let x: Vec<f64> = normal.sample_vec(rng, map.dim());
+        let y: Vec<f64> = normal.sample_vec(rng, map.dim());
+        let err = (map.approx_kernel(&x, &y) - kernel.eval(&x, &y)).abs();
+        worst = worst.max(err);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn bound_decreases_with_d_and_increases_with_precision() {
+        // the bound is loose: it only becomes non-vacuous at large D
+        let b1 = uniform_error_bound(5, 50_000, 5.0, 4.0, 0.1);
+        let b2 = uniform_error_bound(5, 100_000, 5.0, 4.0, 0.1);
+        assert!(b1 < 1.0, "bound vacuous at D=50k: {b1}");
+        assert!(b2 < b1, "{b2} !< {b1}");
+        let b3 = uniform_error_bound(5, 50_000, 5.0, 4.0, 0.01);
+        assert!(b3 >= b1);
+    }
+
+    #[test]
+    fn required_features_is_consistent_with_bound() {
+        let (d, sigma, diam, eps, delta) = (5usize, 5.0, 4.0, 0.1, 0.05);
+        let need = required_features(d, sigma, diam, eps, delta);
+        let at_need = uniform_error_bound(d, need, sigma, diam, eps);
+        assert!(at_need <= delta * 1.01, "bound {at_need} at D={need}");
+        let below = uniform_error_bound(d, need / 2, sigma, diam, eps);
+        assert!(below > at_need);
+    }
+
+    #[test]
+    fn empirical_error_within_certified_eps() {
+        // Certify eps=0.25 at 95% for d=3, sigma=2, diam=4; draw that D
+        // and verify the empirical max error over 2000 pairs obeys it
+        // (overwhelmingly likely since the bound is loose).
+        let (d, sigma, diam, eps, delta) = (3usize, 2.0, 4.0, 0.25, 0.05);
+        let need = required_features(d, sigma, diam, eps, delta);
+        let kernel = Kernel::Gaussian { sigma };
+        let mut rng = run_rng(7, 0);
+        let map = RffMap::draw(&mut rng, kernel, d, need);
+        let worst = empirical_max_error(&map, kernel, diam, 2000, &mut rng);
+        assert!(worst < eps, "empirical {worst} vs certified {eps} (D={need})");
+    }
+
+    #[test]
+    fn empirical_error_shrinks_with_d() {
+        let kernel = Kernel::Gaussian { sigma: 2.0 };
+        let mut rng = run_rng(8, 0);
+        let small = RffMap::draw(&mut rng, kernel, 3, 32);
+        let big = RffMap::draw(&mut rng, kernel, 3, 4096);
+        let e_small = empirical_max_error(&small, kernel, 4.0, 500, &mut rng);
+        let e_big = empirical_max_error(&big, kernel, 4.0, 500, &mut rng);
+        assert!(e_big < e_small, "{e_big} !< {e_small}");
+    }
+}

@@ -1,0 +1,75 @@
+//! The paper's §4 mean-square analysis, made executable.
+//!
+//! * [`rzz_closed_form`] — the exact entries of
+//!   `R_zz = E[z_Ω(x) z_Ω(x)ᵀ]` for `x ~ N(0, σ_x² I)` (the displayed
+//!   `r_{i,j}` formula of §4).
+//! * [`rzz_empirical`] — Monte-Carlo estimate (validates the formula).
+//! * [`spd_certificate`] — Lemma 1 check via Cholesky.
+//! * [`step_size_bounds`] — Proposition 1.1/1.4: `μ < 2/λ_max` (mean),
+//!   `μ < 1/λ_max` (mean-square).
+//! * [`optimal_theta`] — Eq. (8) with the `η'` correction dropped
+//!   (the paper argues it vanishes for large D).
+//! * [`uniform_error_bound`] / [`required_features`] — the Rahimi–Recht
+//!   uniform approximation bound the paper's §3 cites.
+//! * [`predicted_learning_curve`] / [`steady_state_mse`] — the A_n
+//!   recursion of Proposition 1.4 in the eigenbasis of `R_zz` (O(D) per
+//!   step instead of O(D³)), regenerating Fig. 1's dashed line.
+
+mod bound;
+mod rzz;
+mod steady_state;
+
+pub use bound::{empirical_max_error, required_features, uniform_error_bound};
+pub use rzz::{rzz_closed_form, rzz_empirical, spd_certificate};
+pub use steady_state::{
+    optimal_theta, predicted_learning_curve, steady_state_mse, StepSizeBounds,
+};
+
+use crate::linalg::{symmetric_eigenvalues, Mat};
+
+/// Step-size bounds from the spectrum of `R_zz` (Proposition 1).
+pub fn step_size_bounds(rzz: &Mat) -> StepSizeBounds {
+    let ev = symmetric_eigenvalues(rzz);
+    let lambda_max = *ev.last().unwrap();
+    let lambda_min = ev[0];
+    StepSizeBounds {
+        mean_stable: 2.0 / lambda_max,
+        mean_square_stable: 1.0 / lambda_max,
+        lambda_min,
+        lambda_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::kaf::RffMap;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn bounds_ordered() {
+        let mut rng = run_rng(1, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 32);
+        let r = rzz_closed_form(&map, 1.0);
+        let b = step_size_bounds(&r);
+        assert!(b.lambda_min > 0.0, "Lemma 1: R_zz strictly PD");
+        assert!(b.mean_square_stable < b.mean_stable);
+        assert!((b.mean_stable - 2.0 * b.mean_square_stable).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_mu_one_is_stable_for_ex1_config() {
+        // The paper uses mu=1 for Ex.1 (sigma=5, D up to large): check
+        // mu=1 < 2/lambda_max indeed holds for a representative draw.
+        let mut rng = run_rng(2, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 100);
+        let r = rzz_closed_form(&map, 1.0);
+        let b = step_size_bounds(&r);
+        assert!(
+            b.mean_stable > 1.0,
+            "mu=1 must satisfy Theorem requirements (bound {})",
+            b.mean_stable
+        );
+    }
+}

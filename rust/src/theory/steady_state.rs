@@ -1,0 +1,194 @@
+//! Proposition 1 made executable: the optimal solution (Eq. 8), the A_n
+//! weight-error-covariance recursion, the predicted transient learning
+//! curve and the steady-state MSE — the dashed line of Fig. 1.
+
+use crate::kaf::RffMap;
+use crate::linalg::{symmetric_eigen, Mat};
+
+/// Step-size stability bounds (Proposition 1.1 and 1.4).
+#[derive(Clone, Copy, Debug)]
+pub struct StepSizeBounds {
+    /// Convergence in the mean requires `μ < mean_stable = 2/λ_max`.
+    pub mean_stable: f64,
+    /// Convergence of `A_n` (mean square) requires `μ < 1/λ_max`.
+    pub mean_square_stable: f64,
+    /// Smallest eigenvalue of `R_zz` (governs slowest mode).
+    pub lambda_min: f64,
+    /// Largest eigenvalue of `R_zz`.
+    pub lambda_max: f64,
+}
+
+/// Eq. (8) with the `η'` correction dropped (valid for large D):
+/// `θ_opt ≈ Σ_m a_m z_Ω(c_m)`.
+///
+/// `centers` are the expansion centers `c_m` of the data model (7),
+/// `coeffs` the `a_m`.
+pub fn optimal_theta(map: &RffMap, centers: &[Vec<f64>], coeffs: &[f64]) -> Vec<f64> {
+    assert_eq!(centers.len(), coeffs.len());
+    let mut theta = vec![0.0; map.features()];
+    let mut z = vec![0.0; map.features()];
+    for (c, &a) in centers.iter().zip(coeffs) {
+        map.apply_into(c, &mut z);
+        crate::linalg::axpy(a, &z, &mut theta);
+    }
+    theta
+}
+
+/// Steady-state MSE from Proposition 1.4.
+///
+/// In steady state the Lyapunov recursion
+/// `A_{n+1} = A_n − μ(R A_n + A_n R) + μ² σ_η² R`
+/// fixes `A_ss = (μ σ_η²/2) I`, giving
+/// `J_ss ≈ σ_η² + tr(R_zz A_ss) = σ_η² (1 + (μ/2) tr(R_zz))`.
+pub fn steady_state_mse(rzz: &Mat, mu: f64, noise_var: f64) -> f64 {
+    noise_var * (1.0 + 0.5 * mu * rzz.trace())
+}
+
+/// The full predicted learning curve `J_n = J_opt + tr(R_zz A_n)` for
+/// `n = 0..horizon`, computed in the eigenbasis of `R_zz` where the
+/// recursion diagonalizes:
+///
+/// `ã_i(n+1) = (1 − 2μλ_i) ã_i(n) + μ² σ_η² λ_i`, with
+/// `ã_i(0) = (Vᵀ θ_opt)_i²` (filter initialised at θ=0), and
+/// `J_n^ex = Σ_i λ_i ã_i(n)`.
+///
+/// Off-diagonal terms of `Ã` do not enter `tr(Λ Ã)` and decay
+/// geometrically, so tracking the diagonal is exact for the reported
+/// curve. O(D) per step.
+pub fn predicted_learning_curve(
+    rzz: &Mat,
+    theta_opt: &[f64],
+    mu: f64,
+    noise_var: f64,
+    horizon: usize,
+) -> Vec<f64> {
+    let eig = symmetric_eigen(rzz, 128);
+    let d_feat = rzz.rows();
+    assert_eq!(theta_opt.len(), d_feat);
+    // project theta_opt on the eigenbasis: (Vᵀ θ)_i
+    let mut a_diag = vec![0.0; d_feat];
+    for i in 0..d_feat {
+        let mut proj = 0.0;
+        for k in 0..d_feat {
+            proj += eig.eigenvectors[(k, i)] * theta_opt[k];
+        }
+        a_diag[i] = proj * proj;
+    }
+    let lam = &eig.eigenvalues;
+    let mut curve = Vec::with_capacity(horizon);
+    for _ in 0..horizon {
+        let jex: f64 = lam.iter().zip(&a_diag).map(|(&l, &a)| l * a).sum();
+        curve.push(noise_var + jex);
+        for (a, &l) in a_diag.iter_mut().zip(lam.iter()) {
+            *a = (1.0 - 2.0 * mu * l) * *a + mu * mu * noise_var * l;
+        }
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::rng::run_rng;
+    use crate::theory::rzz_closed_form;
+
+    fn setup(d_feat: usize) -> (RffMap, Mat) {
+        let mut rng = run_rng(1, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, d_feat);
+        let r = rzz_closed_form(&map, 1.0);
+        (map, r)
+    }
+
+    #[test]
+    fn curve_starts_high_and_decays_to_steady_state() {
+        let (map, r) = setup(48);
+        let centers: Vec<Vec<f64>> = (0..6)
+            .map(|i| (0..5).map(|k| ((i * 5 + k) as f64 * 0.37).sin()).collect())
+            .collect();
+        let coeffs: Vec<f64> = (0..6).map(|i| (i as f64 - 2.5) * 1.7).collect();
+        let theta = optimal_theta(&map, &centers, &coeffs);
+        let noise_var = 0.01;
+        let mu = 0.5;
+        let curve = predicted_learning_curve(&r, &theta, mu, noise_var, 8000);
+        assert!(curve[0] > curve[7999], "no decay");
+        let ss = steady_state_mse(&r, mu, noise_var);
+        let tail = curve[7900..].iter().sum::<f64>() / 100.0;
+        assert!(
+            (tail - ss).abs() / ss < 0.2,
+            "recursion tail {tail} vs closed-form steady state {ss}"
+        );
+        // steady state above the noise floor but same order
+        assert!(ss > noise_var && ss < 3.0 * noise_var);
+    }
+
+    #[test]
+    fn stable_mu_converges_to_floor() {
+        // For mu < 1/lambda_max every mode's |1-2 mu lambda_i| < 1, so the
+        // curve converges; it need not be monotone (modes with
+        // mu*lambda > 1/2 oscillate), so we check convergence + bound.
+        let (map, r) = setup(32);
+        let theta = optimal_theta(&map, &[vec![0.5; 5]], &[2.0]);
+        let b = crate::theory::step_size_bounds(&r);
+        let mu = 0.5 * b.mean_square_stable;
+        let curve = predicted_learning_curve(&r, &theta, mu, 0.01, 3000);
+        assert!(curve.iter().all(|v| v.is_finite()));
+        let tail = curve[2900..].iter().sum::<f64>() / 100.0;
+        let head = curve[..10].iter().sum::<f64>() / 10.0;
+        assert!(tail < head, "no net decay: head {head} tail {tail}");
+        // tail settled: last two windows agree to 1%
+        let prev = curve[2800..2900].iter().sum::<f64>() / 100.0;
+        assert!((tail - prev).abs() / tail < 0.01);
+    }
+
+    #[test]
+    fn unstable_mu_diverges() {
+        let (map, r) = setup(32);
+        let theta = optimal_theta(&map, &[vec![0.5; 5]], &[2.0]);
+        let b = crate::theory::step_size_bounds(&r);
+        let mu = 1.5 * b.mean_stable; // beyond 2/lambda_max
+        let curve = predicted_learning_curve(&r, &theta, mu, 0.01, 2000);
+        // the fastest mode's factor |1 - 2 mu lambda_max| = 5 => blow-up
+        // (possibly to non-finite); detect either.
+        let diverged = curve.iter().any(|v| !v.is_finite() || *v > curve[0] * 1e6);
+        assert!(diverged, "expected divergence, last={}", curve[1999]);
+    }
+
+    #[test]
+    fn predicted_matches_simulated_rffklms_on_eq7_data() {
+        // End-to-end theory-vs-simulation: run actual RFF-KLMS on Eq. (7)
+        // data with the same (Omega, b) and compare the steady state.
+        use crate::kaf::{OnlineRegressor, RffKlms};
+        use crate::signal::{LinearKernelExpansion, SignalSource};
+
+        let mut rng = run_rng(9, 0);
+        // D=512: large enough that the eta' approximation-error term the
+        // steady-state formula drops (Prop. 1.2) is actually negligible.
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 512);
+        let r = rzz_closed_form(&map, 1.0);
+        let mu = 0.8;
+        let noise_var = 0.01;
+
+        // average simulated MSE over a few runs
+        let runs = 12;
+        let horizon = 4000;
+        let mut acc = vec![0.0; horizon];
+        for run in 0..runs {
+            let mut src = LinearKernelExpansion::paper_default(run_rng(10, run), 5, 10);
+            let mut f = RffKlms::new(map.clone(), mu);
+            let samples = src.take_samples(horizon);
+            for (i, s) in samples.iter().enumerate() {
+                let e = f.step(&s.x, s.y);
+                acc[i] += e * e / runs as f64;
+            }
+        }
+        let sim_ss = acc[horizon - 500..].iter().sum::<f64>() / 500.0;
+        let pred_ss = steady_state_mse(&r, mu, noise_var);
+        // per-run theta_opt differs; we compare only steady states, which
+        // are center-independent. Allow 50% headroom (finite D bias).
+        assert!(
+            (sim_ss - pred_ss).abs() / pred_ss < 0.5,
+            "simulated {sim_ss} vs predicted {pred_ss}"
+        );
+    }
+}

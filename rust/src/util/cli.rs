@@ -1,0 +1,103 @@
+//! Minimal CLI argument parsing (clap substitute): `--key value`,
+//! `--key=value`, boolean `--flag`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.named.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.named.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Named value lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    /// Named value parsed to any `FromStr` type, with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean flag present?
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn named_both_syntaxes() {
+        let a = parse("--seed 42 --runs=100");
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get_or("runs", 0usize), 100);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // NB: `--quick fig1` would bind fig1 as the VALUE of --quick (the
+        // parser cannot know a flag is boolean); boolean flags go last or
+        // before another --flag.
+        let a = parse("bench fig1 --out results.csv --quick");
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional(), &["bench".to_string(), "fig1".to_string()]);
+        assert_eq!(a.get("out"), Some("results.csv"));
+        let b = parse("--quick --out x.csv");
+        assert!(b.flag("quick"));
+    }
+
+    #[test]
+    fn default_on_missing_or_unparsable() {
+        let a = parse("--n notanumber");
+        assert_eq!(a.get_or("n", 7usize), 7);
+        assert_eq!(a.get_or("absent", 1.5f64), 1.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("--verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+}

@@ -1,0 +1,89 @@
+//! Tiny CSV writer for experiment outputs (figure series, tables).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows of (stringifiable) cells as a CSV file with a header.
+pub struct CsvWriter {
+    out: Vec<u8>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Start a CSV with the given header.
+    pub fn new(header: &[&str]) -> Self {
+        let mut w = Self { out: Vec::new(), cols: header.len() };
+        w.write_row_raw(header.iter().map(|s| s.to_string()).collect());
+        w
+    }
+
+    fn write_row_raw(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.cols, "column count mismatch");
+        let line = cells
+            .into_iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        self.out.extend_from_slice(line.as_bytes());
+        self.out.push(b'\n');
+    }
+
+    /// Append a row of display-formatted cells.
+    pub fn row(&mut self, cells: &[String]) {
+        self.write_row_raw(cells.to_vec());
+    }
+
+    /// Append a row of f64s with full precision.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.write_row_raw(cells.iter().map(|v| format!("{v}")).collect());
+    }
+
+    /// The CSV text so far.
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.out).unwrap()
+    }
+
+    /// Write to a file, creating parent dirs.
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut w = CsvWriter::new(&["n", "mse"]);
+        w.row_f64(&[1.0, 0.5]);
+        w.row(&["2".into(), "0.25".into()]);
+        assert_eq!(w.as_str(), "n,mse\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&["x,y".into()]);
+        w.row(&["say \"hi\"".into()]);
+        assert_eq!(w.as_str(), "a\n\"x,y\"\n\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn column_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small utilities: JSON (writer + parser for the artifact manifest),
+//! CSV writing and CLI argument parsing — all from scratch because the
+//! offline vendor set has no serde/clap.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+
+pub use cli::Args;
+pub use json::JsonValue;

@@ -1,0 +1,164 @@
+//! Integration across filter algorithms on the paper's workloads: the
+//! relative-behaviour claims of §5/§6 at reduced-but-faithful scale.
+
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{
+    Klms, KrlsAld, Lms, NoveltyKlms, OnlineRegressor, Qklms, RffKlms, RffKrls, RffMap,
+};
+use rff_kaf::metrics::LearningCurve;
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{Chaotic1, NonlinearWiener, SignalSource};
+
+fn gaussian(sigma: f64) -> Kernel {
+    Kernel::Gaussian { sigma }
+}
+
+fn steady_state(errors: &[f64], window: usize) -> f64 {
+    errors[errors.len() - window..].iter().map(|e| e * e).sum::<f64>() / window as f64
+}
+
+/// All kernel methods must beat linear LMS on the quadratic system —
+/// the reason kernel adaptive filtering exists.
+#[test]
+fn kernel_methods_beat_linear_lms_on_nonlinear_system() {
+    let runs = 4;
+    let horizon = 4000;
+    let mut ss = std::collections::BTreeMap::<&str, f64>::new();
+    for run in 0..runs {
+        let mut src = NonlinearWiener::new(run_rng(100, run), 0.05);
+        let samples = src.take_samples(horizon);
+        let mut rng = run_rng(200, run);
+        let map = RffMap::draw(&mut rng, gaussian(5.0), 5, 300);
+
+        let mut lms = Lms::new(5, 0.05);
+        let mut qklms = Qklms::new(gaussian(5.0), 5, 1.0, 5.0);
+        let mut rff = RffKlms::new(map, 1.0);
+        for (name, errs) in [
+            ("lms", lms.run(&samples)),
+            ("qklms", qklms.run(&samples)),
+            ("rff", rff.run(&samples)),
+        ] {
+            *ss.entry(name).or_insert(0.0) += steady_state(&errs, 500) / runs as f64;
+        }
+    }
+    assert!(ss["qklms"] < ss["lms"] * 0.5, "{ss:?}");
+    assert!(ss["rff"] < ss["lms"] * 0.5, "{ss:?}");
+}
+
+/// The paper's headline (Fig. 2a): RFF-KLMS converges at similar speed
+/// and to a similar floor as QKLMS.
+#[test]
+fn rffklms_matches_qklms_learning_curve() {
+    let runs = 8;
+    let horizon = 6000;
+    let mut q_curve = LearningCurve::new(horizon);
+    let mut r_curve = LearningCurve::new(horizon);
+    for run in 0..runs {
+        let mut src = NonlinearWiener::new(run_rng(300, run), 0.05);
+        let samples = src.take_samples(horizon);
+        let mut qklms = Qklms::new(gaussian(5.0), 5, 1.0, 5.0);
+        q_curve.add_run(&qklms.run(&samples));
+        let mut rng = run_rng(400, run);
+        let mut rff = RffKlms::new(RffMap::draw(&mut rng, gaussian(5.0), 5, 300), 1.0);
+        r_curve.add_run(&rff.run(&samples));
+    }
+    let q_ss = q_curve.steady_state(600);
+    let r_ss = r_curve.steady_state(600);
+    let gap_db = 10.0 * (r_ss / q_ss).log10();
+    assert!(gap_db.abs() < 2.0, "steady-state gap {gap_db:.2} dB");
+    // convergence speed: both reach 2x their floor within similar sample
+    // counts (within a factor 2 of each other)
+    let conv = |c: &LearningCurve| {
+        rff_kaf::metrics::convergence_step(&c.mse(), 200, 2.0).unwrap_or(horizon)
+    };
+    let (qc, rc) = (conv(&q_curve), conv(&r_curve));
+    assert!(
+        (rc as f64) < (qc as f64) * 2.0 + 500.0,
+        "RFF converges at {rc}, QKLMS at {qc}"
+    );
+}
+
+/// Fig. 2b shape: both RLS variants converge much faster than the LMS
+/// family and to comparable floors.
+#[test]
+fn rls_variants_converge_fast_and_agree() {
+    let horizon = 1200;
+    let mut src = NonlinearWiener::new(run_rng(500, 0), 0.05);
+    let samples = src.take_samples(horizon);
+    let mut engel = KrlsAld::new(gaussian(5.0), 5, 5e-4);
+    let e_engel = engel.run(&samples);
+    let mut rng = run_rng(600, 0);
+    let mut rff = RffKrls::new(RffMap::draw(&mut rng, gaussian(5.0), 5, 300), 0.9995, 1e-4);
+    let e_rff = rff.run(&samples);
+    let ss_engel = steady_state(&e_engel, 200);
+    let ss_rff = steady_state(&e_rff, 200);
+    assert!(
+        (10.0 * (ss_rff / ss_engel).log10()).abs() < 4.0,
+        "Engel {ss_engel} vs RFF {ss_rff}"
+    );
+    // both should be within reach of the noise floor quickly
+    assert!(steady_state(&e_engel[..400].to_vec(), 100) < 0.1);
+    assert!(steady_state(&e_rff[..400].to_vec(), 100) < 0.1);
+}
+
+/// Unsparsified KLMS's dictionary grows with n; QKLMS and novelty keep
+/// it bounded; RFF stays constant — the §1 storyline.
+#[test]
+fn model_size_growth_comparison() {
+    let horizon = 2000;
+    let mut src = NonlinearWiener::new(run_rng(700, 0), 0.05);
+    let samples = src.take_samples(horizon);
+    let mut klms = Klms::new(gaussian(5.0), 5, 1.0);
+    let mut qklms = Qklms::new(gaussian(5.0), 5, 1.0, 5.0);
+    let mut novelty = NoveltyKlms::new(gaussian(5.0), 5, 1.0, 2.0, 0.05);
+    let mut rng = run_rng(800, 0);
+    let mut rff = RffKlms::new(RffMap::draw(&mut rng, gaussian(5.0), 5, 300), 1.0);
+    for f in [&mut klms as &mut dyn OnlineRegressor, &mut qklms, &mut novelty, &mut rff] {
+        f.run(&samples);
+    }
+    assert_eq!(klms.model_size(), horizon);
+    assert!(qklms.model_size() < horizon / 4, "QKLMS M={}", qklms.model_size());
+    assert!(novelty.model_size() < horizon / 2, "novelty M={}", novelty.model_size());
+    assert_eq!(rff.model_size(), 300);
+}
+
+/// ε controls the dictionary/MSE trade-off monotonically (the §5 tuning
+/// discussion).
+#[test]
+fn qklms_epsilon_tradeoff() {
+    let horizon = 4000;
+    let mut src = NonlinearWiener::new(run_rng(900, 0), 0.05);
+    let samples = src.take_samples(horizon);
+    let mut sizes = Vec::new();
+    let mut floors = Vec::new();
+    for eps in [0.5, 5.0, 50.0] {
+        let mut f = Qklms::new(gaussian(5.0), 5, 1.0, eps);
+        let errs = f.run(&samples);
+        sizes.push(f.model_size());
+        floors.push(steady_state(&errs, 400));
+    }
+    assert!(sizes[0] > sizes[1] && sizes[1] > sizes[2], "sizes {sizes:?}");
+    // very coarse quantization must hurt the floor
+    assert!(floors[2] > floors[0], "floors {floors:?}");
+}
+
+/// Chaotic-series workloads (Fig. 3) at reduced runs: both algorithms
+/// learn, RFF floor within 3 dB of QKLMS.
+#[test]
+fn chaotic_series_comparison() {
+    let runs = 12;
+    let horizon = 500;
+    let mut q_curve = LearningCurve::new(horizon);
+    let mut r_curve = LearningCurve::new(horizon);
+    for run in 0..runs {
+        let mut src = Chaotic1::paper_default(run_rng(1000, run));
+        let samples = src.take_samples(horizon);
+        let mut q = Qklms::new(gaussian(0.05), 1, 1.0, 0.01);
+        q_curve.add_run(&q.run(&samples));
+        let mut rng = run_rng(1100, run);
+        let mut r = RffKlms::new(RffMap::draw(&mut rng, gaussian(0.05), 1, 100), 1.0);
+        r_curve.add_run(&r.run(&samples));
+    }
+    let gap_db = 10.0 * (r_curve.steady_state(100) / q_curve.steady_state(100)).log10();
+    assert!(gap_db.abs() < 3.0, "gap {gap_db:.2} dB");
+}

@@ -1,0 +1,242 @@
+//! Integration: the PJRT runtime path (AOT HLO artifacts) against the
+//! native Rust implementations — the cross-layer correctness contract.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a message) when `artifacts/manifest.json` is absent so that
+//! `cargo test` stays green on a fresh checkout.
+
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{OnlineRegressor, RffKlms, RffKrls, RffMap};
+use rff_kaf::rng::run_rng;
+use rff_kaf::runtime::PjrtExecutor;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn executor() -> Option<PjrtExecutor> {
+    artifacts_dir().map(|d| PjrtExecutor::start(d).expect("PJRT executor boots"))
+}
+
+#[test]
+fn platform_reports_and_all_artifacts_compile() {
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let platform = h.platform().unwrap();
+    assert!(!platform.is_empty());
+    for name in h.names().unwrap() {
+        h.compile(&name).unwrap_or_else(|e| panic!("compile {name}: {e}"));
+    }
+}
+
+#[test]
+fn pjrt_klms_chunk_matches_native_filter() {
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let (d, feats) = (5usize, 300usize);
+    let n = h.chunk_len("rffklms_chunk", d, feats).unwrap();
+
+    let mut rng = run_rng(11, 0);
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, feats);
+    let mut native = RffKlms::new(map.clone(), 1.0);
+
+    let mut src = NonlinearWiener::new(run_rng(11, 1), 0.05);
+    let samples = src.take_samples(n * 3);
+
+    let omega = map.omega_f32_dxD();
+    let b = map.phases_f32();
+    let mut theta = vec![0.0f32; feats];
+    let mut pjrt_errs: Vec<f64> = Vec::new();
+    for chunk in samples.chunks(n) {
+        let x: Vec<f32> = chunk.iter().flat_map(|s| s.x.iter().map(|&v| v as f32)).collect();
+        let y: Vec<f32> = chunk.iter().map(|s| s.y as f32).collect();
+        let (theta_new, errs) = h
+            .klms_chunk(d, feats, theta.clone(), x, y, omega.clone(), b.clone(), 1.0)
+            .unwrap();
+        theta = theta_new;
+        pjrt_errs.extend(errs.iter().map(|&e| e as f64));
+    }
+    let native_errs = native.run(&samples);
+
+    // f32 artifact vs f64 native: errors agree to f32-accumulation level.
+    let mut max_rel = 0.0f64;
+    for (p, nat) in pjrt_errs.iter().zip(&native_errs) {
+        let rel = (p - nat).abs() / (1.0 + nat.abs());
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 5e-3, "per-step error divergence {max_rel}");
+
+    // final weights agree
+    let mut max_theta = 0.0f64;
+    for (p, nat) in theta.iter().zip(native.theta()) {
+        max_theta = max_theta.max((*p as f64 - nat).abs());
+    }
+    assert!(max_theta < 5e-3, "theta divergence {max_theta}");
+}
+
+#[test]
+fn pjrt_krls_chunk_matches_native_filter() {
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let (d, feats) = (1usize, 100usize);
+    let n = h.chunk_len("rffkrls_chunk", d, feats).unwrap();
+
+    let mut rng = run_rng(12, 0);
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 0.05 }, d, feats);
+    let (beta, lambda) = (0.9995f64, 1e-2f64);
+    let mut native = RffKrls::new(map.clone(), beta, lambda);
+
+    let mut src = rff_kaf::signal::Chaotic1::paper_default(run_rng(12, 1));
+    let samples = src.take_samples(n * 2);
+
+    let omega = map.omega_f32_dxD();
+    let b = map.phases_f32();
+    let mut theta = vec![0.0f32; feats];
+    let mut p = vec![0.0f32; feats * feats];
+    for i in 0..feats {
+        p[i * feats + i] = (1.0 / lambda) as f32;
+    }
+    let mut pjrt_errs: Vec<f64> = Vec::new();
+    for chunk in samples.chunks(n) {
+        let x: Vec<f32> = chunk.iter().flat_map(|s| s.x.iter().map(|&v| v as f32)).collect();
+        let y: Vec<f32> = chunk.iter().map(|s| s.y as f32).collect();
+        let (t2, p2, errs) = h
+            .krls_chunk(d, feats, theta, p, x, y, omega.clone(), b.clone(), beta as f32)
+            .unwrap();
+        theta = t2;
+        p = p2;
+        pjrt_errs.extend(errs.iter().map(|&e| e as f64));
+    }
+    let native_errs = native.run(&samples);
+    let mut max_abs = 0.0f64;
+    for (pe, ne) in pjrt_errs.iter().zip(&native_errs) {
+        max_abs = max_abs.max((pe - ne).abs());
+    }
+    // RLS in f32 accumulates more roundoff than LMS (P is D×D); the
+    // chaotic targets are O(1), so absolute agreement to 1e-2 is the
+    // cross-layer contract here.
+    assert!(max_abs < 1e-2, "per-step error divergence {max_abs}");
+}
+
+#[test]
+fn pjrt_features_match_native_map() {
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let (d, feats) = (5usize, 300usize);
+    let bsz = h.batch_len("rff_features", d, feats).unwrap();
+
+    let mut rng = run_rng(13, 0);
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, feats);
+    let mut src = NonlinearWiener::new(run_rng(13, 1), 0.05);
+    let samples = src.take_samples(bsz);
+    let x: Vec<f32> = samples.iter().flat_map(|s| s.x.iter().map(|&v| v as f32)).collect();
+
+    let z = h
+        .features(d, feats, x, map.omega_f32_dxD(), map.phases_f32())
+        .unwrap();
+    assert_eq!(z.len(), bsz * feats);
+    for (r, s) in samples.iter().enumerate() {
+        let zr = map.apply(&s.x);
+        for i in 0..feats {
+            let diff = (z[r * feats + i] as f64 - zr[i]).abs();
+            assert!(diff < 1e-5, "row {r} feature {i}: {diff}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_predict_matches_native_dot() {
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let (d, feats) = (2usize, 100usize);
+    let bsz = h.batch_len("rff_predict", d, feats).unwrap();
+
+    let mut rng = run_rng(14, 0);
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 0.05 }, d, feats);
+    let theta: Vec<f32> = (0..feats).map(|i| ((i as f32) * 0.01).sin()).collect();
+    let x: Vec<f32> = (0..bsz * d).map(|i| ((i as f32) * 0.1).cos() * 0.2).collect();
+
+    let yhat = h
+        .predict(d, feats, theta.clone(), x.clone(), map.omega_f32_dxD(), map.phases_f32())
+        .unwrap();
+    assert_eq!(yhat.len(), bsz);
+    for r in 0..bsz {
+        let xr: Vec<f64> = (0..d).map(|k| x[r * d + k] as f64).collect();
+        let z = map.apply(&xr);
+        let want: f64 = z.iter().zip(&theta).map(|(&zi, &t)| zi * t as f64).sum();
+        assert!((yhat[r] as f64 - want).abs() < 1e-4, "row {r}");
+    }
+}
+
+#[test]
+fn missing_artifact_config_reports_helpfully() {
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let err = h.chunk_len("rffklms_chunk", 7, 999).unwrap_err().to_string();
+    assert!(err.contains("baked configs"), "unhelpful error: {err}");
+}
+
+#[test]
+fn chunk_rejects_wrong_sample_count() {
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let (d, feats) = (5usize, 300usize);
+    let err = h
+        .klms_chunk(
+            d,
+            feats,
+            vec![0.0; feats],
+            vec![0.0; 3 * d],
+            vec![0.0; 3],
+            vec![0.0; d * feats],
+            vec![0.0; feats],
+            1.0,
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("exactly"), "unhelpful error: {err}");
+}
+
+#[test]
+fn gauss_kernel_artifact_compiles() {
+    let Some(exec) = executor() else { return };
+    exec.handle().compile("gauss_kernel_d5_M128").unwrap();
+}
+
+#[test]
+fn laplacian_kernel_rff_works_through_the_same_artifact() {
+    // The AOT graphs take (omega, b) as runtime inputs, so the SAME
+    // artifact serves any shift-invariant kernel: draw Laplacian
+    // (Cauchy-spectral) frequencies and verify the PJRT feature map
+    // still matches the native map.
+    let Some(exec) = executor() else { return };
+    let h = exec.handle();
+    let (d, feats) = (5usize, 300usize);
+    let bsz = h.batch_len("rff_features", d, feats).unwrap();
+
+    let mut rng = run_rng(21, 0);
+    let map = RffMap::draw(&mut rng, Kernel::Laplacian { sigma: 2.0 }, d, feats);
+    let mut src = NonlinearWiener::new(run_rng(21, 1), 0.05);
+    let samples = src.take_samples(bsz);
+    let x: Vec<f32> = samples.iter().flat_map(|s| s.x.iter().map(|&v| v as f32)).collect();
+    let z = h
+        .features(d, feats, x, map.omega_f32_dxD(), map.phases_f32())
+        .unwrap();
+    for (r, s) in samples.iter().enumerate() {
+        let zr = map.apply(&s.x);
+        for i in 0..feats {
+            // Cauchy frequencies can be large: f32 cos of a big argument
+            // loses absolute precision, so tolerance is looser than the
+            // Gaussian case.
+            let diff = (z[r * feats + i] as f64 - zr[i]).abs();
+            assert!(diff < 1e-2, "row {r} feature {i}: {diff}");
+        }
+    }
+}
