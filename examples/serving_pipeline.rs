@@ -59,15 +59,22 @@ fn main() {
     println!("backend: {backend:?}, {n_sessions} sessions x {n_samples} samples");
 
     // --- boot the coordinator -------------------------------------------
+    let workers = args.get_or("workers", 4usize);
     let svc = Arc::new(CoordinatorService::start(
         ServiceConfig {
-            workers: 4,
+            workers,
             queue_capacity: 2048,
             max_batch: 32,
             batch_wait: std::time::Duration::from_millis(1),
+            shards: args.get_or("shards", 16usize),
         },
         handle.clone(),
     ));
+    println!(
+        "coordinator: {workers} router workers over a {}-shard session store \
+         (per-session locking; predicts served from lock-free snapshots)",
+        svc.store().shard_count()
+    );
     let mut session_ids = Vec::new();
     for i in 0..n_sessions {
         let mut rng = run_rng(seed, i);
@@ -180,6 +187,8 @@ fn main() {
     );
     assert_eq!(stats.errors.load(Ordering::Relaxed), 0, "no request may fail");
 
-    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
     println!("\nend-to-end OK: all layers composed.");
 }

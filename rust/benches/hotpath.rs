@@ -69,8 +69,17 @@ fn main() {
 
     // --- PJRT chunk dispatch (requires artifacts) --------------------------
     let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if art.join("manifest.json").exists() {
-        let exec = rff_kaf::runtime::PjrtExecutor::start(art).expect("executor");
+    // artifacts may exist while the crate is built without `--features
+    // pjrt`; treat a failed boot as a skip, not a panic
+    let exec = if art.join("manifest.json").exists() {
+        rff_kaf::runtime::PjrtExecutor::start(art)
+            .map_err(|e| println!("(PJRT unavailable: {e}; skipping dispatch benches)"))
+            .ok()
+    } else {
+        println!("(artifacts not built; skipping PJRT dispatch benches)");
+        None
+    };
+    if let Some(exec) = exec {
         let h = exec.handle();
         let (d, feats) = (5usize, 300usize);
         let n = h.chunk_len("rffklms_chunk", d, feats).unwrap();
@@ -103,8 +112,6 @@ fn main() {
             h.features(d, feats, xb.clone(), omega.clone(), bb.clone()).unwrap().len()
         });
         println!("{}", m.throughput(bsz as f64));
-    } else {
-        println!("(artifacts not built; skipping PJRT dispatch benches)");
     }
 
     println!("\n{} measurements total", b.results().len());

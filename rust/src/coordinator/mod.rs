@@ -20,11 +20,37 @@
 //! coordinator's job is to prove the fixed-size-θ property composes into
 //! a real serving system: constant-memory sessions, one executable per
 //! (d, D) config shared by every session, no dictionary transfer.
+//!
+//! ## Sharding and locking contract
+//!
+//! Sessions live in a [`SessionStore`]: `N` shards (power of two), each a
+//! `Mutex<BTreeMap<u64, Arc<Mutex<FilterSession>>>>` keyed by a Fibonacci
+//! hash of the session id. Who holds which lock:
+//!
+//! * **Shard lock** — held only by `add_session` / `remove_session` /
+//!   `session_count` and by the id→cell lookup inside train/flush/predict
+//!   routing. Released before any filter math runs.
+//! * **Session lock** — held for exactly one `train()`/`flush()` call, or
+//!   just long enough for the predict batcher to snapshot `(θ, Ω, b)`
+//!   into a [`PredictState`]. Trains on different sessions therefore run
+//!   truly concurrently across router workers; only same-session trains
+//!   serialize.
+//! * **No lock across predict device traffic** — batched PJRT
+//!   `rff_predict` executions and native per-row predicts both run off
+//!   the detached snapshot, so a slow predict batch never blocks
+//!   training, and a training burst never blocks serving other sessions.
+//!   (A PJRT-backend *train* chunk does run under its own session's
+//!   lock — by design: training mutates θ — which serializes work on
+//!   that one session only.)
+//! * Lock order is always shard → session, one of each at most, so the
+//!   coordinator cannot deadlock.
 
 mod orchestrator;
 mod service;
 mod session;
+mod store;
 
 pub use orchestrator::{McConfig, McResult, Orchestrator};
 pub use service::{CoordinatorService, Request, Response, ServiceConfig, ServiceStats};
-pub use session::{Algo, Backend, FilterSession, SessionConfig};
+pub use session::{Algo, Backend, FilterSession, PredictState, SessionConfig};
+pub use store::SessionStore;

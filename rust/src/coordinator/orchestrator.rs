@@ -2,6 +2,11 @@
 //! of (signal, filter) across the thread pool and accumulates the
 //! averaged learning curve — the machinery behind every figure of the
 //! paper (100 runs for Fig. 1, 1000 for Figs. 2–3).
+//!
+//! Orchestrator runs own their filters outright (one per realization, no
+//! sharing), so they bypass the serving layer's [`super::SessionStore`]
+//! locking entirely — `parallel_for` gives each worker exclusive state,
+//! which is what keeps MC sweeps scheduling-independent bit-for-bit.
 
 use crate::exec::parallel_for;
 use crate::kaf::OnlineRegressor;

@@ -5,11 +5,30 @@
 //! drain the queue, dispatch training samples to their sessions and
 //! micro-batch prediction requests per (d, D) config into single PJRT
 //! `rff_predict` executions (padding the fixed batch with zero rows).
+//!
+//! ## Concurrency
+//!
+//! Sessions live in a sharded [`SessionStore`]: trains on *different*
+//! sessions run truly concurrently across router workers (only same-
+//! session trains serialize, on that session's own mutex), and the
+//! predict batcher snapshots `(θ, Ω, b)` under the per-session lock and
+//! releases it *before* the PJRT batch executes or native per-row
+//! predicts run — no lock is held across *predict* device traffic. (A
+//! PJRT-backend train does hold its own session's lock across the chunk
+//! dispatch, serializing only that session.) See [`SessionStore`] for
+//! the full locking contract.
+//!
+//! ## Stats semantics
+//!
+//! `trained` / `predicted` count *successful* operations only; failed
+//! requests (unknown session, dim mismatch, dead executor) count under
+//! `errors` instead — `trained + errors` bounds submitted trains, and
+//! the two never double-count one request.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, PoisonError};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -18,6 +37,7 @@ use crate::exec::BoundedQueue;
 use crate::runtime::ExecutorHandle;
 
 use super::session::FilterSession;
+use super::store::SessionStore;
 
 /// Service tuning knobs.
 #[derive(Clone, Debug)]
@@ -35,6 +55,11 @@ pub struct ServiceConfig {
     /// set a small window (e.g. 1–2 ms) to trade tail latency for fused
     /// PJRT dispatches.
     pub batch_wait: Duration,
+    /// Session-store shards (rounded up to a power of two). More shards
+    /// mean less contention on add/remove/lookup under many sessions;
+    /// per-session train/predict serialization is unaffected by this
+    /// knob — that always uses the session's own lock.
+    pub shards: usize,
 }
 
 impl Default for ServiceConfig {
@@ -44,6 +69,7 @@ impl Default for ServiceConfig {
             queue_capacity: 1024,
             max_batch: 32,
             batch_wait: Duration::ZERO,
+            shards: 16,
         }
     }
 }
@@ -94,9 +120,10 @@ pub enum Response {
 /// Counters exported by the service.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
-    /// Training samples ingested.
+    /// Training samples trained *successfully* (failed trains count
+    /// under `errors`, never here).
     pub trained: AtomicU64,
-    /// Predictions served.
+    /// Predictions served successfully (failures count under `errors`).
     pub predicted: AtomicU64,
     /// PJRT predict batches dispatched.
     pub predict_batches: AtomicU64,
@@ -110,7 +137,7 @@ pub struct ServiceStats {
 /// The running coordinator service.
 pub struct CoordinatorService {
     queue: Arc<BoundedQueue<Request>>,
-    sessions: Arc<Mutex<BTreeMap<u64, FilterSession>>>,
+    sessions: Arc<SessionStore>,
     stats: Arc<ServiceStats>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
@@ -121,8 +148,7 @@ impl CoordinatorService {
     /// predicts then run natively).
     pub fn start(config: ServiceConfig, executor: Option<ExecutorHandle>) -> Self {
         let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
-        let sessions: Arc<Mutex<BTreeMap<u64, FilterSession>>> =
-            Arc::new(Mutex::new(BTreeMap::new()));
+        let sessions = Arc::new(SessionStore::new(config.shards));
         let stats = Arc::new(ServiceStats::default());
         let workers = (0..config.workers.max(1))
             .map(|i| {
@@ -140,21 +166,27 @@ impl CoordinatorService {
         Self { queue, sessions, stats, workers, next_id: AtomicU64::new(1) }
     }
 
-    /// Register a session, returning its id.
+    /// Register a session, returning its id. Touches one shard only.
     pub fn add_session(&self, session: FilterSession) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.sessions.lock().unwrap().insert(id, session);
+        self.sessions.insert(id, session);
         id
     }
 
     /// Remove a session, returning it (flush first if you need the tail).
+    /// Waits out any in-flight request on the session; touches one shard.
     pub fn remove_session(&self, id: u64) -> Option<FilterSession> {
-        self.sessions.lock().unwrap().remove(&id)
+        self.sessions.remove(id)
     }
 
     /// Number of live sessions.
     pub fn session_count(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        self.sessions.len()
+    }
+
+    /// The shared session store (shard layout introspection).
+    pub fn store(&self) -> &SessionStore {
+        &self.sessions
     }
 
     /// Submit a request (blocks when the queue is full — backpressure).
@@ -215,7 +247,7 @@ impl CoordinatorService {
 
 fn router_loop(
     queue: Arc<BoundedQueue<Request>>,
-    sessions: Arc<Mutex<BTreeMap<u64, FilterSession>>>,
+    sessions: Arc<SessionStore>,
     stats: Arc<ServiceStats>,
     executor: Option<ExecutorHandle>,
     cfg: ServiceConfig,
@@ -240,22 +272,30 @@ fn router_loop(
         for req in batch {
             match req {
                 Request::Train { session, x, y, resp } => {
-                    let mut guard = sessions.lock().unwrap();
-                    let out = match guard.get_mut(&session) {
-                        Some(s) => s.train(&x, y).map(Response::Trained),
+                    // per-session lock only: trains on other sessions in
+                    // other workers proceed in parallel
+                    let out = match sessions.get(session) {
+                        Some(cell) => {
+                            let mut s =
+                                cell.lock().unwrap_or_else(PoisonError::into_inner);
+                            s.train(&x, y).map(Response::Trained)
+                        }
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
-                    drop(guard);
-                    stats.trained.fetch_add(1, Ordering::Relaxed);
+                    if out.is_ok() {
+                        stats.trained.fetch_add(1, Ordering::Relaxed);
+                    }
                     respond(&stats, resp, out);
                 }
                 Request::Flush { session, resp } => {
-                    let mut guard = sessions.lock().unwrap();
-                    let out = match guard.get_mut(&session) {
-                        Some(s) => s.flush().map(Response::Trained),
+                    let out = match sessions.get(session) {
+                        Some(cell) => {
+                            let mut s =
+                                cell.lock().unwrap_or_else(PoisonError::into_inner);
+                            s.flush().map(Response::Trained)
+                        }
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
-                    drop(guard);
                     respond(&stats, resp, out);
                 }
                 Request::Predict { session, x, resp } => predicts.push((session, x, resp)),
@@ -281,8 +321,13 @@ fn respond(stats: &ServiceStats, tx: Sender<Response>, out: Result<Response>) {
 /// Group predicts by session config and, when PJRT is available and the
 /// config has a baked `rff_predict` artifact, run each group as one
 /// padded batch; otherwise fall back to native per-row predicts.
+///
+/// Locking: each session is locked just long enough to snapshot
+/// `(θ, Ω, b)` ([`super::session::PredictState`]); the snapshot then
+/// serves the whole group with **no lock held** — a PJRT round-trip or a
+/// run of native predicts never blocks trains on the same session.
 fn dispatch_predicts(
-    sessions: &Mutex<BTreeMap<u64, FilterSession>>,
+    sessions: &SessionStore,
     stats: &ServiceStats,
     executor: Option<&ExecutorHandle>,
     predicts: Vec<(u64, Vec<f64>, Sender<Response>)>,
@@ -292,18 +337,41 @@ fn dispatch_predicts(
     for (sid, x, tx) in predicts {
         by_session.entry(sid).or_default().push((x, tx));
     }
-    let guard = sessions.lock().unwrap();
     for (sid, rows) in by_session {
-        let Some(session) = guard.get(&sid) else {
+        let Some(cell) = sessions.get(sid) else {
             for (_, tx) in rows {
                 stats.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = tx.send(Response::Error(format!("no session {sid}")));
             }
             continue;
         };
-        let cfg = session.config();
+        // the lock guard is a temporary: it dies at the end of this
+        // statement, before any batch executes or native predict runs
+        let snap = cell.lock().unwrap_or_else(PoisonError::into_inner).predict_state();
+        drop(cell); // release our cell ref so remove_session() can reclaim it
+        let (dim, features) = (snap.dim(), snap.features());
+        // reject dim-mismatched probes up front: both predict paths below
+        // index x[0..dim] and would panic the router worker otherwise
+        let rows: Vec<(Vec<f64>, Sender<Response>)> = rows
+            .into_iter()
+            .filter_map(|(x, tx)| {
+                if x.len() == dim {
+                    Some((x, tx))
+                } else {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Response::Error(format!(
+                        "predict dim mismatch for session {sid}: got {}, want {dim}",
+                        x.len()
+                    )));
+                    None
+                }
+            })
+            .collect();
+        if rows.is_empty() {
+            continue;
+        }
         let batched = executor.and_then(|eng| {
-            let bsz = eng.batch_len("rff_predict", cfg.dim, cfg.features).ok()?;
+            let bsz = eng.batch_len("rff_predict", dim, features).ok()?;
             if rows.len() < 2 {
                 return None; // single predict: native is cheaper than a dispatch
             }
@@ -311,20 +379,20 @@ fn dispatch_predicts(
         });
         match batched {
             Some((eng, bsz)) => {
-                let theta: Vec<f32> = session.theta().iter().map(|&v| v as f32).collect();
-                let omega = session.map().omega_f32_dxD();
-                let b = session.map().phases_f32();
+                let theta = snap.theta_f32();
+                let omega = snap.map().omega_f32_dxD();
+                let b = snap.map().phases_f32();
                 // pad each group of up to bsz rows with zeros
                 for chunk in rows.chunks(bsz) {
-                    let mut x = vec![0.0f32; bsz * cfg.dim];
+                    let mut x = vec![0.0f32; bsz * dim];
                     for (r, (xi, _)) in chunk.iter().enumerate() {
                         for (k, &v) in xi.iter().enumerate() {
-                            x[r * cfg.dim + k] = v as f32;
+                            x[r * dim + k] = v as f32;
                         }
                     }
                     match eng.predict(
-                        cfg.dim,
-                        cfg.features,
+                        dim,
+                        features,
                         theta.clone(),
                         x,
                         omega.clone(),
@@ -349,7 +417,7 @@ fn dispatch_predicts(
             }
             None => {
                 for (x, tx) in rows {
-                    let v = session.predict(&x);
+                    let v = snap.predict(&x);
                     stats.predicted.fetch_add(1, Ordering::Relaxed);
                     let _ = tx.send(Response::Predicted(v));
                 }
@@ -395,6 +463,21 @@ mod tests {
         let svc = CoordinatorService::start(ServiceConfig::default(), None);
         assert!(svc.train_sync(42, vec![0.0; 5], 1.0).is_err());
         assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 1);
+        // failed trains/predicts must not count as successes
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 0);
+        assert!(svc.predict_sync(42, vec![0.0; 5]).is_err());
+        assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn store_shard_count_follows_config() {
+        let svc = CoordinatorService::start(
+            ServiceConfig { shards: 5, ..ServiceConfig::default() },
+            None,
+        );
+        assert_eq!(svc.store().shard_count(), 8); // rounded up to 2^k
         svc.shutdown();
     }
 
@@ -424,6 +507,8 @@ mod tests {
         }
         assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 8 * 300);
         assert_eq!(svc.session_count(), 8);
-        Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+        if let Ok(s) = Arc::try_unwrap(svc) {
+            s.shutdown();
+        }
     }
 }

@@ -1,0 +1,224 @@
+//! Sharded, per-session-locked session store — the concurrency substrate
+//! of the coordinator service.
+//!
+//! The paper's fixed-size-θ property means every session is a small,
+//! self-contained `(θ, Ω, b)` state with O(D) updates; nothing about one
+//! session's train touches another's. The store mirrors that in the lock
+//! structure: session ids hash onto `N` shards, each shard is a
+//! `Mutex<BTreeMap<u64, Arc<Mutex<FilterSession>>>>`, and all mutation of
+//! a session happens under that session's *own* mutex.
+//!
+//! Locking contract (also documented on [`crate::coordinator`]):
+//!
+//! * **Shard locks** are held only for map operations — insert, remove,
+//!   id lookup, len. Never while training, predicting or dispatching.
+//! * **Session locks** are held for exactly one train/flush call, or just
+//!   long enough to snapshot predict state ([`super::session::PredictState`]).
+//!   No predict — PJRT batch or native per-row — runs under any lock;
+//!   only a session's own train (which on the PJRT backend may dispatch
+//!   a chunk) holds that session's lock.
+//! * Lock order is always shard → session; no path ever takes two shard
+//!   locks or two session locks at once, so deadlock is impossible.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use super::session::FilterSession;
+
+/// A shared, mutably-lockable session slot handed out by the store.
+/// Crate-private: see [`SessionStore::get`] for why cells never escape.
+pub(crate) type SessionCell = Arc<Mutex<FilterSession>>;
+
+type Shard = Mutex<BTreeMap<u64, SessionCell>>;
+
+/// Sharded map from session id to independently locked [`FilterSession`].
+pub struct SessionStore {
+    shards: Vec<Shard>,
+    /// `shards.len() - 1`; the shard count is a power of two so the
+    /// hash→shard reduction is a mask, not a modulo.
+    mask: u64,
+}
+
+impl SessionStore {
+    /// Store with at least `shards` shards (rounded up to a power of two,
+    /// minimum 1).
+    pub fn new(shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Self {
+            shards: (0..n).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            mask: (n - 1) as u64,
+        }
+    }
+
+    /// Number of shards (power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard index for `id`. Session ids are sequential, so spread them
+    /// with a Fibonacci hash before masking — consecutive ids land on
+    /// different shards. Public for diagnostics and so tests exercise
+    /// the real hash rather than a reimplementation.
+    pub fn shard_index(&self, id: u64) -> usize {
+        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) & self.mask) as usize
+    }
+
+    fn shard_for(&self, id: u64) -> &Shard {
+        &self.shards[self.shard_index(id)]
+    }
+
+    /// Insert `session` under `id` (replacing any previous occupant).
+    /// Crate-private: ids are allocated by `CoordinatorService`'s counter;
+    /// outside inserts could silently clobber a live session.
+    pub(crate) fn insert(&self, id: u64, session: FilterSession) {
+        self.shard_for(id)
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(id, Arc::new(Mutex::new(session)));
+    }
+
+    /// Clone the session cell for `id`. Callers lock the returned cell to
+    /// train/flush or snapshot; the shard lock is released before this
+    /// function returns.
+    ///
+    /// Crate-private on purpose: a caller that retained a cell while also
+    /// calling [`SessionStore::remove`] on the same thread would deadlock
+    /// that removal (it waits for the last outside reference to drop), so
+    /// cells never leave the crate — router workers hold one per request.
+    pub(crate) fn get(&self, id: u64) -> Option<SessionCell> {
+        self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner).get(&id).cloned()
+    }
+
+    /// Remove the session under `id` and return it by value.
+    ///
+    /// Router workers hold cell clones only for the duration of a single
+    /// request, so after unlinking the id from its shard we wait until
+    /// our `Arc` is the last reference, then unwrap it. The wait yields
+    /// first and falls back to short sleeps, so a request still in flight
+    /// on the session parks this thread briefly instead of burning a
+    /// core. Workers drop their cell clone at the end of each request, so
+    /// the wait is bounded by one train/flush/snapshot. Crate-private:
+    /// use [`crate::coordinator::CoordinatorService::remove_session`].
+    pub(crate) fn remove(&self, id: u64) -> Option<FilterSession> {
+        let mut cell =
+            self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner).remove(&id)?;
+        let mut spins = 0u32;
+        loop {
+            match Arc::try_unwrap(cell) {
+                Ok(m) => return Some(m.into_inner().unwrap_or_else(PoisonError::into_inner)),
+                Err(still_shared) => {
+                    cell = still_shared;
+                    spins += 1;
+                    if spins < 64 {
+                        std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total number of live sessions (sums shard lengths; takes each
+    /// shard lock in turn, never two at once).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(PoisonError::into_inner).len())
+            .sum()
+    }
+
+    /// True when no sessions are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::SessionConfig;
+    use crate::rng::run_rng;
+
+    fn session(seed: u64) -> FilterSession {
+        let mut rng = run_rng(seed, 0);
+        FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap()
+    }
+
+    #[test]
+    fn shard_count_rounds_up_to_power_of_two() {
+        assert_eq!(SessionStore::new(0).shard_count(), 1);
+        assert_eq!(SessionStore::new(1).shard_count(), 1);
+        assert_eq!(SessionStore::new(3).shard_count(), 4);
+        assert_eq!(SessionStore::new(16).shard_count(), 16);
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let store = SessionStore::new(8);
+        store.insert(7, session(1));
+        assert_eq!(store.len(), 1);
+        assert!(store.get(7).is_some());
+        assert!(store.get(8).is_none());
+        let s = store.remove(7).unwrap();
+        assert_eq!(s.samples_seen(), 0);
+        assert!(store.is_empty());
+        assert!(store.remove(7).is_none());
+    }
+
+    #[test]
+    fn sequential_ids_spread_across_shards() {
+        let store = SessionStore::new(8);
+        let hits: std::collections::BTreeSet<usize> =
+            (0..16u64).map(|id| store.shard_index(id)).collect();
+        assert!(hits.len() >= 4, "ids clumped onto {} shard(s)", hits.len());
+        for id in 0..16u64 {
+            assert!(store.shard_index(id) < store.shard_count());
+        }
+    }
+
+    #[test]
+    fn concurrent_trains_on_distinct_sessions_proceed() {
+        use crate::signal::{NonlinearWiener, SignalSource};
+        let store = Arc::new(SessionStore::new(8));
+        for id in 0..8u64 {
+            store.insert(id, session(100 + id));
+        }
+        let handles: Vec<_> = (0..8u64)
+            .map(|id| {
+                let store = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    let cell = store.get(id).unwrap();
+                    let mut src = NonlinearWiener::new(run_rng(id, 1), 0.05);
+                    for smp in src.take_samples(200) {
+                        cell.lock().unwrap().train(&smp.x, smp.y).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for id in 0..8u64 {
+            assert_eq!(store.remove(id).unwrap().samples_seen(), 200);
+        }
+    }
+
+    #[test]
+    fn remove_waits_out_transient_borrowers() {
+        let store = Arc::new(SessionStore::new(4));
+        store.insert(1, session(9));
+        let cell = store.get(1).unwrap();
+        let borrower = std::thread::spawn(move || {
+            let guard = cell.lock().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            drop(guard);
+            // `cell` drops here, releasing the last outside reference
+        });
+        // remove() spins until the borrower's clone is gone
+        let s = store.remove(1).unwrap();
+        assert_eq!(s.samples_seen(), 0);
+        borrower.join().unwrap();
+    }
+}

@@ -149,8 +149,13 @@ impl<T> BoundedQueue<T> {
             }
         }
         // another consumer may have drained the queue while we gathered:
-        // an empty take is a valid (empty) batch, not a panic.
+        // with the queue still open that's a valid (empty) batch, but
+        // once closed-and-empty nothing can ever arrive — report closure
+        // so callers terminate instead of spinning on empty batches.
         let take = max.min(g.buf.len());
+        if take == 0 && g.closed {
+            return Err(QueueClosed);
+        }
         let out: Vec<T> = g.buf.drain(..take).collect();
         if !out.is_empty() {
             self.not_full.notify_all();
@@ -225,6 +230,26 @@ mod tests {
         let q: BoundedQueue<i32> = BoundedQueue::new(4);
         let batch = q.pop_batch(5, Duration::from_millis(5)).unwrap();
         assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_gather_errs_when_drained_and_closed() {
+        // regression: a consumer inside the gather window whose items are
+        // stolen by another consumer before close() used to report a
+        // spurious empty batch and only learn of closure on its *next*
+        // call; closed-and-empty must surface as QueueClosed immediately.
+        let q = Arc::new(BoundedQueue::new(4));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let gatherer = std::thread::spawn(move || {
+            q2.pop_batch_gather(8, Duration::from_secs(5), Duration::from_millis(500))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(q.pop().unwrap(), 1); // steal during the gather window
+        q.close();
+        // whether the gatherer was still in first-wait or mid-gather, the
+        // closed+empty queue must surface as an error, not an empty batch
+        assert_eq!(gatherer.join().unwrap(), Err(QueueClosed));
     }
 
     #[test]

@@ -45,6 +45,9 @@ impl RffMap {
     /// which needs the same `(Ω, b)` on both sides).
     pub fn from_parts(omega_t: Vec<f64>, phases: Vec<f64>, dim: usize) -> Self {
         let features = phases.len();
+        // same invariant as `draw`: an empty map would make
+        // `scale = sqrt(2/0) = +inf` and poison every feature
+        assert!(dim > 0 && features > 0, "RffMap needs dim > 0 and features > 0");
         assert_eq!(omega_t.len(), dim * features, "omega length mismatch");
         let scale = (2.0 / features as f64).sqrt();
         Self { omega_t, phases, dim, features, scale }
@@ -268,6 +271,16 @@ mod tests {
     #[test]
     fn from_parts_validates_length() {
         let r = std::panic::catch_unwind(|| RffMap::from_parts(vec![0.0; 7], vec![0.0; 3], 2));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_empty_map() {
+        // regression: empty phases used to slip through with features = 0
+        // and scale = sqrt(2/0) = +inf
+        let r = std::panic::catch_unwind(|| RffMap::from_parts(vec![], vec![], 2));
+        assert!(r.is_err());
+        let r = std::panic::catch_unwind(|| RffMap::from_parts(vec![], vec![], 0));
         assert!(r.is_err());
     }
 }

@@ -1,0 +1,144 @@
+//! Engine stub compiled when the `pjrt` cargo feature is **disabled**:
+//! same API surface as the real [`engine`](self) module minus the xla
+//! dependency, so the whole crate — coordinator, native serving, tests —
+//! builds and runs without the `xla_extension` C++ library.
+//!
+//! [`Engine::new`] still validates the artifact registry (so manifest
+//! errors surface identically) but then refuses to boot; every caller of
+//! [`crate::runtime::PjrtExecutor::start`] already handles that error by
+//! falling back to the native backend.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::registry::ArtifactRegistry;
+
+/// Mutable per-session state threaded through `rffklms_chunk` calls.
+#[derive(Clone, Debug)]
+pub struct RffChunkState {
+    /// Weight vector θ (length D, f32 — the artifact dtype).
+    pub theta: Vec<f32>,
+}
+
+impl RffChunkState {
+    /// Zero-initialised state for feature count `features`.
+    pub fn zeros(features: usize) -> Self {
+        Self { theta: vec![0.0; features] }
+    }
+}
+
+/// Mutable per-session state for `rffkrls_chunk` calls.
+#[derive(Clone, Debug)]
+pub struct RlsChunkState {
+    /// Weight vector θ (length D).
+    pub theta: Vec<f32>,
+    /// Inverse-correlation matrix P, row-major `[D, D]`.
+    pub p: Vec<f32>,
+}
+
+impl RlsChunkState {
+    /// Fresh RLS state with `P = I/λ`.
+    pub fn new(features: usize, lambda: f32) -> Self {
+        let mut p = vec![0.0; features * features];
+        for i in 0..features {
+            p[i * features + i] = 1.0 / lambda;
+        }
+        Self { theta: vec![0.0; features], p }
+    }
+}
+
+/// Stand-in for the PJRT CPU engine; construction always fails.
+pub struct Engine {
+    registry: ArtifactRegistry,
+}
+
+impl Engine {
+    /// Validate the artifact directory, then refuse to boot: executing
+    /// AOT artifacts needs the real PJRT client.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let _registry = ArtifactRegistry::load(artifact_dir)?;
+        bail!(
+            "rff-kaf was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the xla_extension library) to \
+             execute AOT artifacts — native backends are unaffected"
+        )
+    }
+
+    /// The artifact registry.
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    /// Compile-and-cache is unavailable without PJRT.
+    pub fn executable(&self, name: &str) -> Result<()> {
+        bail!("cannot compile {name}: built without the `pjrt` feature")
+    }
+
+    /// Number of compiled executables currently cached (always 0).
+    pub fn cached_executables(&self) -> usize {
+        0
+    }
+
+    /// Unavailable without PJRT.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rffklms_chunk(
+        &self,
+        _d: usize,
+        _features: usize,
+        _state: &mut RffChunkState,
+        _x: &[f32],
+        _y: &[f32],
+        _omega: &[f32],
+        _b: &[f32],
+        _mu: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("rffklms_chunk: built without the `pjrt` feature")
+    }
+
+    /// Unavailable without PJRT.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rffkrls_chunk(
+        &self,
+        _d: usize,
+        _features: usize,
+        _state: &mut RlsChunkState,
+        _x: &[f32],
+        _y: &[f32],
+        _omega: &[f32],
+        _b: &[f32],
+        _beta: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("rffkrls_chunk: built without the `pjrt` feature")
+    }
+
+    /// Unavailable without PJRT.
+    pub fn rff_features(
+        &self,
+        _d: usize,
+        _features: usize,
+        _x: &[f32],
+        _omega: &[f32],
+        _b: &[f32],
+    ) -> Result<Vec<f32>> {
+        bail!("rff_features: built without the `pjrt` feature")
+    }
+
+    /// Unavailable without PJRT.
+    pub fn rff_predict(
+        &self,
+        _d: usize,
+        _features: usize,
+        _theta: &[f32],
+        _x: &[f32],
+        _omega: &[f32],
+        _b: &[f32],
+    ) -> Result<Vec<f32>> {
+        bail!("rff_predict: built without the `pjrt` feature")
+    }
+}

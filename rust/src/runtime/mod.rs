@@ -10,7 +10,16 @@
 //!
 //! Interchange format is HLO **text** — see `python/compile/aot.py` for
 //! why serialized protos are rejected by xla_extension 0.5.1.
+//!
+//! The `xla` dependency is gated behind the `pjrt` cargo feature: without
+//! it a stub [`Engine`] (same API) refuses to boot and every caller falls
+//! back to native execution, so the tier-1 build/test gate never needs
+//! the xla_extension C++ library.
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod executor;
 mod registry;

@@ -17,7 +17,15 @@ use rff_kaf::signal::{NonlinearWiener, SignalSource};
 fn executor() -> Option<PjrtExecutor> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
-        Some(PjrtExecutor::start(dir).expect("executor boots"))
+        // artifacts exist but the crate may be built without the `pjrt`
+        // feature (the tier-1 default) — that is a skip, not a failure
+        match PjrtExecutor::start(dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("skipping: PJRT unavailable ({err})");
+                None
+            }
+        }
     } else {
         eprintln!("skipping: artifacts not built");
         None
@@ -124,7 +132,9 @@ fn batched_predicts_match_native_predicts() {
     let rows = svc.stats().predict_rows.load(Ordering::Relaxed);
     assert!(batches >= 1, "no PJRT batches dispatched");
     assert!(rows as usize >= 2, "batches were trivial");
-    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
 }
 
 #[test]
@@ -181,7 +191,9 @@ fn backpressure_bounds_queue_depth() {
         p.join().unwrap();
     }
     assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 800);
-    Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
 }
 
 #[test]
@@ -222,6 +234,139 @@ fn executor_death_surfaces_as_errors_not_hangs() {
         svc.train_sync(sid_native, s.x.clone(), s.y).unwrap();
     }
     svc.shutdown();
+}
+
+#[test]
+fn trained_counter_ignores_failed_trains() {
+    // regression: stats.trained used to be bumped even when the target
+    // session did not exist or train() returned an error
+    let svc = CoordinatorService::start(ServiceConfig::default(), None);
+
+    // unknown session
+    assert!(svc.train_sync(999, vec![0.0; 5], 1.0).is_err());
+    assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 1);
+
+    // existing session, dim-mismatched sample: train() errors
+    let mut rng = run_rng(91, 0);
+    let sid = svc.add_session(
+        FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap(),
+    );
+    assert!(svc.train_sync(sid, vec![0.0; 2], 1.0).is_err());
+    assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
+
+    // symmetric check: predicted must not move on predict error paths
+    assert!(svc.predict_sync(999, vec![0.0; 5]).is_err());
+    assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 3);
+
+    // dim-mismatched predict on a live session: error response, not a
+    // router-worker panic, and predicted stays put
+    assert!(svc.predict_sync(sid, vec![0.0; 2]).is_err());
+    assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 4);
+
+    // the service survived all of the above: one good train still counts
+    assert!(svc.train_sync(sid, vec![0.0; 5], 1.0).is_ok());
+    assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_concurrent_traffic_over_sharded_store() {
+    // ≥16 sessions, ≥4 client threads, mixed train/predict/flush traffic
+    // plus deliberate failures: per-session sample counts must be exact,
+    // trained must equal the number of *successful* trains, and every
+    // submitted request must get exactly one response (nothing lost).
+    const SESSIONS: u64 = 16;
+    const CLIENTS: usize = 4;
+    const TRAINS_PER_CLIENT_PER_SESSION: usize = 40;
+    const PREDICTS_PER_CLIENT_PER_SESSION: usize = 5;
+    const BAD_TRAINS_PER_CLIENT: usize = 7;
+
+    let svc = Arc::new(CoordinatorService::start(
+        ServiceConfig { workers: 4, shards: 8, ..ServiceConfig::default() },
+        None,
+    ));
+    let mut ids = Vec::new();
+    for i in 0..SESSIONS {
+        let mut rng = run_rng(500 + i, 0);
+        ids.push(svc.add_session(
+            FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap(),
+        ));
+    }
+    let ids = Arc::new(ids);
+
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let svc = Arc::clone(&svc);
+            let ids = Arc::clone(&ids);
+            std::thread::spawn(move || {
+                let mut ok_trains = 0usize;
+                let mut ok_predicts = 0usize;
+                let mut failures = 0usize;
+                for (k, &sid) in ids.iter().enumerate() {
+                    let mut src =
+                        NonlinearWiener::new(run_rng(9000 + c as u64, k), 0.05);
+                    for smp in src.take_samples(TRAINS_PER_CLIENT_PER_SESSION) {
+                        svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+                        ok_trains += 1;
+                    }
+                    for smp in src.take_samples(PREDICTS_PER_CLIENT_PER_SESSION) {
+                        let v = svc.predict_sync(sid, smp.x.clone()).unwrap();
+                        assert!(v.is_finite());
+                        ok_predicts += 1;
+                    }
+                    // flush is a no-op on native sessions but still a
+                    // response that must come back
+                    assert!(svc.flush_sync(sid).unwrap().is_empty());
+                }
+                for i in 0..BAD_TRAINS_PER_CLIENT {
+                    // nonexistent session: must error, never hang
+                    assert!(svc
+                        .train_sync(1_000_000 + i as u64, vec![0.0; 5], 1.0)
+                        .is_err());
+                    failures += 1;
+                }
+                (ok_trains, ok_predicts, failures)
+            })
+        })
+        .collect();
+
+    let mut total_ok_trains = 0u64;
+    let mut total_ok_predicts = 0u64;
+    let mut total_failures = 0u64;
+    for c in clients {
+        let (t, p, f) = c.join().unwrap();
+        total_ok_trains += t as u64;
+        total_ok_predicts += p as u64;
+        total_failures += f as u64;
+    }
+
+    // no lost responses: every sync call above returned
+    assert_eq!(
+        total_ok_trains,
+        SESSIONS * (CLIENTS * TRAINS_PER_CLIENT_PER_SESSION) as u64
+    );
+    // trained counts exactly the successes, errors exactly the failures
+    assert_eq!(svc.stats().trained.load(Ordering::Relaxed), total_ok_trains);
+    assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), total_ok_predicts);
+    assert_eq!(svc.stats().errors.load(Ordering::Relaxed), total_failures);
+    // per-session sample counts are exact (no cross-session bleed)
+    assert_eq!(svc.session_count(), SESSIONS as usize);
+    for &sid in ids.iter() {
+        let s = svc.remove_session(sid).unwrap();
+        assert_eq!(
+            s.samples_seen(),
+            CLIENTS * TRAINS_PER_CLIENT_PER_SESSION,
+            "session {sid} lost or gained samples"
+        );
+    }
+    assert_eq!(svc.session_count(), 0);
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
 }
 
 #[test]
