@@ -15,6 +15,8 @@
 //! make artifacts && cargo run --release --example serving_pipeline
 //! # native fallback (no artifacts required):
 //! cargo run --release --example serving_pipeline -- --native
+//! # ship training rows in batches of 64 (Request::TrainBatch):
+//! cargo run --release --example serving_pipeline -- --native --train-batch 64
 //! ```
 //!
 //! The run recorded in EXPERIMENTS.md §End-to-end used the defaults.
@@ -38,6 +40,8 @@ fn main() {
     let n_samples = args.get_or("samples", 1920usize); // 30 chunks of 64
     let native = args.flag("native");
     let seed = args.get_or("seed", 2016u64);
+    // rows per Request::TrainBatch; 1 = one Request::Train per row
+    let train_batch = args.get_or("train-batch", 1usize).max(1);
 
     // --- boot the runtime ------------------------------------------------
     let executor = if native {
@@ -56,7 +60,10 @@ fn main() {
     };
     let handle = executor.as_ref().map(|e| e.handle());
     let backend = if handle.is_some() { Backend::Pjrt } else { Backend::Native };
-    println!("backend: {backend:?}, {n_sessions} sessions x {n_samples} samples");
+    println!(
+        "backend: {backend:?}, {n_sessions} sessions x {n_samples} samples \
+         (train batch size {train_batch})"
+    );
 
     // --- boot the coordinator -------------------------------------------
     let workers = args.get_or("workers", 4usize);
@@ -67,6 +74,7 @@ fn main() {
             max_batch: 32,
             batch_wait: std::time::Duration::from_millis(1),
             shards: args.get_or("shards", 16usize),
+            ..ServiceConfig::default()
         },
         handle.clone(),
     ));
@@ -94,14 +102,30 @@ fn main() {
                 let mut src = NonlinearWiener::new(run_rng(7777, sid as usize), 0.05);
                 let mut sum_sq = 0.0;
                 let mut count = 0usize;
-                for s in src.take_samples(n_samples) {
-                    let errs = svc.train_sync(sid, s.x.clone(), s.y).expect("train");
+                let mut tally = |errs: Vec<f64>| {
                     // errors arrive chunk-at-a-time on the PJRT path
                     for e in errs {
                         if count >= n_samples * 3 / 4 {
                             sum_sq += e * e;
                         }
                         count += 1;
+                    }
+                };
+                if train_batch > 1 {
+                    // ship rows in row-major [n, d] batches: one queue
+                    // slot + one response per batch instead of per row
+                    for chunk in src.take_samples(n_samples).chunks(train_batch) {
+                        let mut xs = Vec::with_capacity(chunk.len() * 5);
+                        let mut ys = Vec::with_capacity(chunk.len());
+                        for s in chunk {
+                            xs.extend_from_slice(&s.x);
+                            ys.push(s.y);
+                        }
+                        tally(svc.train_batch_sync(sid, xs, ys).expect("train batch"));
+                    }
+                } else {
+                    for s in src.take_samples(n_samples) {
+                        tally(svc.train_sync(sid, s.x.clone(), s.y).expect("train"));
                     }
                 }
                 for e in svc.flush_sync(sid).expect("flush") {

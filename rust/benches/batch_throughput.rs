@@ -1,0 +1,155 @@
+//! Bench — the batch-first hot path: per-row vs batched rows/s at the
+//! paper's serving config (d = 5, D = 300) for n ∈ {1, 8, 64, 256}.
+//!
+//! Three layers, innermost first:
+//! * `PredictState`: per-row `predict()` (one alloc + one map pass per
+//!   row) vs `predict_batch()` (one blocked Z-free fused kernel into a
+//!   reused output buffer) — the service's native fallback path.
+//! * `RffKlms`: per-row `step()` loop vs `train_batch()` (blocked
+//!   feature map, sequential θ updates — bitwise-identical results).
+//! * end-to-end coordinator: `n` `Request::Train` round-trips vs one
+//!   `Request::TrainBatch` carrying `n` rows (amortized queue/channel
+//!   overhead).
+//!
+//! Results are recorded in EXPERIMENTS.md §Batch.
+//!
+//! `cargo bench --bench batch_throughput [-- --quick]`
+
+use rff_kaf::bench::Bencher;
+use rff_kaf::coordinator::{CoordinatorService, FilterSession, ServiceConfig, SessionConfig};
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{OnlineRegressor, RffKlms, RffMap};
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+use rff_kaf::util::Args;
+
+const SIZES: [usize; 4] = [1, 8, 64, 256];
+
+fn rows_per_s(n: usize, mean_ns: f64) -> f64 {
+    n as f64 / (mean_ns * 1e-9)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut b = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
+
+    let (d, feats) = (5usize, 300usize);
+    let mut rng = run_rng(1, 0);
+    let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, feats);
+
+    // a warmed-up session snapshot (θ nonzero, realistic values)
+    let mut session =
+        FilterSession::with_map(SessionConfig::paper_default(), map.clone(), None).unwrap();
+    let mut src = NonlinearWiener::new(run_rng(1, 1), 0.05);
+    for s in src.take_samples(2000) {
+        session.train(&s.x, s.y).unwrap();
+    }
+    let snap = session.predict_state();
+
+    // --- L1: native predict, per-row vs batched --------------------------
+    println!("== native predict: per-row vs batched (d={d}, D={feats}) ==");
+    for n in SIZES {
+        let probes: Vec<f64> = src
+            .take_samples(n)
+            .iter()
+            .flat_map(|s| s.x.clone())
+            .collect();
+        let per_row_ns = b
+            .bench(&format!("predict_per_row_n{n}"), || {
+                let mut acc = 0.0;
+                for r in 0..n {
+                    acc += snap.predict(&probes[r * d..(r + 1) * d]);
+                }
+                acc
+            })
+            .mean_ns;
+        let mut out = vec![0.0; n];
+        let batched_ns = b
+            .bench(&format!("predict_batch_n{n}"), || {
+                snap.predict_batch(&probes, &mut out);
+                out[n - 1]
+            })
+            .mean_ns;
+        println!(
+            "  n={n:>3}: per-row {:>12.0} rows/s | batched {:>12.0} rows/s | speedup {:.2}x",
+            rows_per_s(n, per_row_ns),
+            rows_per_s(n, batched_ns),
+            per_row_ns / batched_ns
+        );
+    }
+
+    // --- L2: RFF-KLMS training, per-row vs batched ------------------------
+    println!("\n== rffklms train: per-row step loop vs train_batch ==");
+    let mut f_row = RffKlms::new(map.clone(), 1.0);
+    let mut f_batch = RffKlms::new(map.clone(), 1.0);
+    for n in SIZES {
+        let block = src.take_samples(n);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        for s in &block {
+            xs.extend_from_slice(&s.x);
+            ys.push(s.y);
+        }
+        let per_row_ns = b
+            .bench(&format!("klms_step_loop_n{n}"), || {
+                let mut acc = 0.0;
+                for (row, &y) in xs.chunks_exact(d).zip(&ys) {
+                    acc += f_row.step(row, y);
+                }
+                acc
+            })
+            .mean_ns;
+        let batched_ns = b
+            .bench(&format!("klms_train_batch_n{n}"), || {
+                f_batch.train_batch(d, &xs, &ys).len()
+            })
+            .mean_ns;
+        println!(
+            "  n={n:>3}: per-row {:>12.0} rows/s | batched {:>12.0} rows/s | speedup {:.2}x",
+            rows_per_s(n, per_row_ns),
+            rows_per_s(n, batched_ns),
+            per_row_ns / batched_ns
+        );
+    }
+
+    // --- L3: coordinator, Train round-trips vs one TrainBatch -------------
+    println!("\n== coordinator train: n Request::Train vs one Request::TrainBatch ==");
+    let svc = CoordinatorService::start(ServiceConfig::default(), None);
+    let mut rng2 = run_rng(2, 0);
+    let sid_row = svc.add_session(
+        FilterSession::new(SessionConfig::paper_default(), &mut rng2, None).unwrap(),
+    );
+    let sid_batch = svc.add_session(
+        FilterSession::new(SessionConfig::paper_default(), &mut rng2, None).unwrap(),
+    );
+    for n in SIZES {
+        let block = src.take_samples(n);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        for s in &block {
+            xs.extend_from_slice(&s.x);
+            ys.push(s.y);
+        }
+        let per_row_ns = b
+            .bench(&format!("svc_train_per_row_n{n}"), || {
+                let mut k = 0;
+                for (row, &y) in xs.chunks_exact(d).zip(&ys) {
+                    k += svc.train_sync(sid_row, row.to_vec(), y).unwrap().len();
+                }
+                k
+            })
+            .mean_ns;
+        let batched_ns = b
+            .bench(&format!("svc_train_batch_n{n}"), || {
+                svc.train_batch_sync(sid_batch, xs.clone(), ys.clone()).unwrap().len()
+            })
+            .mean_ns;
+        println!(
+            "  n={n:>3}: per-row {:>12.0} rows/s | batched {:>12.0} rows/s | speedup {:.2}x",
+            rows_per_s(n, per_row_ns),
+            rows_per_s(n, batched_ns),
+            per_row_ns / batched_ns
+        );
+    }
+    svc.shutdown();
+
+    println!("\n{} measurements total", b.results().len());
+}

@@ -21,6 +21,30 @@
 //! a real serving system: constant-memory sessions, one executable per
 //! (d, D) config shared by every session, no dictionary transfer.
 //!
+//! ## Batch contract
+//!
+//! The hot path is batch-first end to end. All batch payloads are
+//! **row-major `[n, d]`** (`n` concatenated samples), matching the
+//! `kaf` layer's [`RffMap`](crate::kaf::RffMap) blocked kernels:
+//!
+//! * [`Request::TrainBatch`] ships `n` rows in one request — one queue
+//!   slot and one response channel round-trip for the whole batch.
+//!   [`FilterSession::train_batch`] then runs the filters' blocked batch
+//!   kernels (native; bitwise identical to per-row training) or, on the
+//!   PJRT backend, dispatches every chunk the rows complete (one request
+//!   → possibly several chunk dispatches). Stats count rows, not
+//!   requests.
+//! * Predicts are coalesced by the service itself: the router gathers up
+//!   to `max_batch` predict requests (waiting `batch_wait` for a burst),
+//!   groups them per session, snapshots a [`PredictState`] and serves the
+//!   whole group via one PJRT `rff_predict` execution — or, natively,
+//!   one [`PredictState::predict_batch`] call (the Z-free fused kernel)
+//!   into a per-worker reused output buffer; zero steady-state
+//!   allocations.
+//! * PJRT sessions buffer partial chunks; `flush()` finishes remainders
+//!   through the shared `native_step` f32 kernels — the one place that
+//!   math lives.
+//!
 //! ## Sharding and locking contract
 //!
 //! Sessions live in a [`SessionStore`]: `N` shards (power of two), each a
@@ -45,6 +69,7 @@
 //! * Lock order is always shard → session, one of each at most, so the
 //!   coordinator cannot deadlock.
 
+mod native_step;
 mod orchestrator;
 mod service;
 mod session;

@@ -1,0 +1,142 @@
+//! The shared native step kernels for **f32-state** sessions — the
+//! single place where the PJRT sessions' "matching math" lives.
+//!
+//! PJRT-backed [`FilterSession`](super::FilterSession)s hold f32 state
+//! (θ, P) because that is what the AOT artifacts compute in. When a
+//! partially-filled chunk must finish natively (`flush()`), the remainder
+//! rows have to be stepped with *exactly* the mixed-precision recipe the
+//! artifacts use — f64 features and accumulation, f32 state read/write —
+//! or the native remainder would drift from the device path. These
+//! kernels are that recipe, extracted so no call site hand-inlines it:
+//! `flush()` loops them per remainder row, and the session/integration
+//! tests bound them against both the f64 filters and the artifacts.
+//!
+//! The f64 (native-backend) hot path does **not** live here — it is the
+//! [`OnlineRegressor`](crate::kaf::OnlineRegressor) step/train_batch
+//! family in `kaf/`.
+
+use crate::kaf::RffMap;
+
+/// One RFF-KLMS step on f32 state: `ŷ = θᵀz`, `e = y − ŷ`,
+/// `θ ← θ + μ e z` with f64 feature/error math and per-element f32
+/// rounding on the θ write-back (the artifact's precision profile).
+/// `z` is a reusable length-D scratch; returns the a-priori error.
+pub(crate) fn klms_step(
+    map: &RffMap,
+    theta: &mut [f32],
+    mu: f32,
+    x: &[f64],
+    y: f32,
+    z: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(theta.len(), map.features());
+    map.apply_into(x, z);
+    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
+    let e = y as f64 - yhat;
+    for (t, &zi) in theta.iter_mut().zip(z.iter()) {
+        *t += (mu as f64 * e * zi) as f32;
+    }
+    e
+}
+
+/// One RFF-KRLS step on f32 state (`P` row-major `[D, D]`): the RLS
+/// recursion `π = Pz`, `denom = β + zᵀπ`, `θ ← θ + π e/denom`,
+/// `P ← (P − π πᵀ/denom)/β`, all in f64 with f32 rounding on the θ/P
+/// write-backs. `z`/`pi` are reusable length-D scratches; returns the
+/// a-priori error.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn krls_step(
+    map: &RffMap,
+    theta: &mut [f32],
+    p: &mut [f32],
+    beta: f32,
+    x: &[f64],
+    y: f32,
+    z: &mut [f64],
+    pi: &mut [f64],
+) -> f64 {
+    let features = theta.len();
+    debug_assert_eq!(features, map.features());
+    debug_assert_eq!(p.len(), features * features);
+    map.apply_into(x, z);
+    for (i, pi_i) in pi.iter_mut().enumerate() {
+        let prow = &p[i * features..(i + 1) * features];
+        *pi_i = prow.iter().zip(z.iter()).map(|(&pv, &zi)| pv as f64 * zi).sum();
+    }
+    let denom = beta as f64 + pi.iter().zip(z.iter()).map(|(&a, &b)| a * b).sum::<f64>();
+    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
+    let e = y as f64 - yhat;
+    let esc = e / denom;
+    for (t, &pi_i) in theta.iter_mut().zip(pi.iter()) {
+        *t += (pi_i * esc) as f32;
+    }
+    let inv_beta = 1.0 / beta as f64;
+    let c = inv_beta / denom;
+    for i in 0..features {
+        let pii = pi[i];
+        let prow = &mut p[i * features..(i + 1) * features];
+        for (j, pv) in prow.iter_mut().enumerate() {
+            *pv = (*pv as f64 * inv_beta - c * pii * pi[j]) as f32;
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::kaf::{OnlineRegressor, RffKlms, RffKrls};
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    #[test]
+    fn f32_klms_tracks_f64_filter() {
+        // the f32 kernel is the f64 step with rounding on the state
+        // write-back: errors must track within f32 resolution over a run
+        let mut rng = run_rng(1, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 100);
+        let mut f64_filter = RffKlms::new(map.clone(), 1.0);
+        let mut theta = vec![0.0f32; 100];
+        let mut z = vec![0.0f64; 100];
+        let mut src = NonlinearWiener::new(run_rng(1, 1), 0.05);
+        let mut max_div = 0.0f64;
+        for s in src.take_samples(300) {
+            let e64 = f64_filter.step(&s.x, s.y);
+            let e32 = klms_step(&map, &mut theta, 1.0, &s.x, s.y as f32, &mut z);
+            max_div = max_div.max((e64 - e32).abs());
+        }
+        assert!(max_div < 1e-3, "f32 kernel diverged from f64 filter: {max_div}");
+    }
+
+    #[test]
+    fn f32_krls_tracks_f64_filter() {
+        let mut rng = run_rng(2, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 60);
+        let (beta, lambda) = (0.9995f64, 1e-2f64);
+        let mut f64_filter = RffKrls::new(map.clone(), beta, lambda);
+        let mut theta = vec![0.0f32; 60];
+        let mut p = vec![0.0f32; 60 * 60];
+        for i in 0..60 {
+            p[i * 60 + i] = (1.0 / lambda) as f32;
+        }
+        let (mut z, mut pi) = (vec![0.0f64; 60], vec![0.0f64; 60]);
+        let mut src = NonlinearWiener::new(run_rng(2, 1), 0.05);
+        let mut max_div = 0.0f64;
+        for s in src.take_samples(200) {
+            let e64 = f64_filter.step(&s.x, s.y);
+            let e32 = krls_step(
+                &map,
+                &mut theta,
+                &mut p,
+                beta as f32,
+                &s.x,
+                s.y as f32,
+                &mut z,
+                &mut pi,
+            );
+            max_div = max_div.max((e64 - e32).abs());
+        }
+        assert!(max_div < 5e-2, "f32 kernel diverged from f64 filter: {max_div}");
+    }
+}

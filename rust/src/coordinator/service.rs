@@ -22,8 +22,16 @@
 //!
 //! `trained` / `predicted` count *successful* operations only; failed
 //! requests (unknown session, dim mismatch, dead executor) count under
-//! `errors` instead — `trained + errors` bounds submitted trains, and
-//! the two never double-count one request.
+//! `errors` instead, and the two never double-count one request.
+//! `trained` counts **rows**, not requests: a [`Request::TrainBatch`] of
+//! `n` rows moves it by `n`, identically to `n` single trains. `trained`
+//! means *accepted* — on the PJRT backend a row may still be buffered in
+//! a partial chunk when it is counted. On a PJRT chunk-dispatch failure
+//! mid-batch the request reports an error and counts no rows toward
+//! `trained`, even though chunks dispatched earlier in the same request
+//! remain applied; blind retries of a failed `TrainBatch` therefore
+//! re-train those rows. The per-session `samples_seen` is the row-exact
+//! applied-rows ground truth.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -55,6 +63,14 @@ pub struct ServiceConfig {
     /// set a small window (e.g. 1–2 ms) to trade tail latency for fused
     /// PJRT dispatches.
     pub batch_wait: Duration,
+    /// How long an **idle** router worker blocks waiting for the *first*
+    /// request of a batch before re-checking queue state (was a hardcoded
+    /// 50 ms). This is purely a parking cadence: it bounds how often idle
+    /// workers wake, costs nothing in request latency (a push wakes a
+    /// parked worker immediately via the queue's condvar) and only
+    /// matters for how promptly workers notice `shutdown()`. Lower it in
+    /// latency-sensitive tests; raising it saves idle wakeups.
+    pub first_wait: Duration,
     /// Session-store shards (rounded up to a power of two). More shards
     /// mean less contention on add/remove/lookup under many sessions;
     /// per-session train/predict serialization is unaffected by this
@@ -69,6 +85,7 @@ impl Default for ServiceConfig {
             queue_capacity: 1024,
             max_batch: 32,
             batch_wait: Duration::ZERO,
+            first_wait: Duration::from_millis(50),
             shards: 16,
         }
     }
@@ -86,6 +103,21 @@ pub enum Request {
         y: f64,
         /// Where to send the resulting a-priori errors (may be empty
         /// while a PJRT chunk fills).
+        resp: Sender<Response>,
+    },
+    /// Train session `session` on `n` rows in one request — amortizes
+    /// queue/channel overhead over the whole batch and lets the session
+    /// run its blocked batch kernels (native) or fill whole PJRT chunks
+    /// in one submit. One response carries every error that became
+    /// available; stats count the rows, not the request.
+    TrainBatch {
+        /// Target session id.
+        session: u64,
+        /// Row-major `[n, dim]` inputs.
+        xs: Vec<f64>,
+        /// The `n` targets.
+        ys: Vec<f64>,
+        /// Where to send the resulting a-priori errors.
         resp: Sender<Response>,
     },
     /// Predict with session `session`'s current model.
@@ -120,8 +152,13 @@ pub enum Response {
 /// Counters exported by the service.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
-    /// Training samples trained *successfully* (failed trains count
-    /// under `errors`, never here).
+    /// Training **rows** *accepted* successfully (failed requests count
+    /// under `errors`, never here). Rows, not requests: a `TrainBatch`
+    /// of `n` rows adds `n`, the same as `n` single `Train`s. On the
+    /// PJRT backend acceptance precedes application — a row counts when
+    /// its request succeeds, which may be while it is still buffered in a
+    /// partial chunk; the per-session `samples_seen` counts *applied*
+    /// rows and is the row-exact ground truth.
     pub trained: AtomicU64,
     /// Predictions served successfully (failures count under `errors`).
     pub predicted: AtomicU64,
@@ -222,6 +259,18 @@ impl CoordinatorService {
         }
     }
 
+    /// Train on a whole batch of rows (`xs` row-major `[n, dim]`) and
+    /// wait for the response.
+    pub fn train_batch_sync(&self, session: u64, xs: Vec<f64>, ys: Vec<f64>) -> Result<Vec<f64>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::TrainBatch { session, xs, ys, resp: tx })?;
+        match rx.recv()? {
+            Response::Trained(e) => Ok(e),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
     /// Predict and wait for the response.
     pub fn predict_sync(&self, session: u64, x: Vec<f64>) -> Result<f64> {
         let (tx, rx) = std::sync::mpsc::channel();
@@ -252,14 +301,14 @@ fn router_loop(
     executor: Option<ExecutorHandle>,
     cfg: ServiceConfig,
 ) {
+    // per-worker buffers: reused across every native predict batch this
+    // worker serves (grow to the largest burst, then allocation-free)
+    let mut scratch = PredictScratch::default();
     loop {
         // first_wait keeps idle workers parked cheaply; the short gather
         // window lets request bursts coalesce into real batches.
-        let batch = match queue.pop_batch_gather(
-            cfg.max_batch,
-            Duration::from_millis(50),
-            cfg.batch_wait,
-        ) {
+        let batch = match queue.pop_batch_gather(cfg.max_batch, cfg.first_wait, cfg.batch_wait)
+        {
             Ok(b) => b,
             Err(_) => return, // closed and drained
         };
@@ -287,6 +336,23 @@ fn router_loop(
                     }
                     respond(&stats, resp, out);
                 }
+                Request::TrainBatch { session, xs, ys, resp } => {
+                    let rows = ys.len() as u64;
+                    let out = match sessions.get(session) {
+                        Some(cell) => {
+                            let mut s =
+                                cell.lock().unwrap_or_else(PoisonError::into_inner);
+                            s.train_batch(&xs, &ys).map(Response::Trained)
+                        }
+                        None => Err(anyhow::anyhow!("no session {session}")),
+                    };
+                    if out.is_ok() {
+                        // rows, not requests — n rows here count the same
+                        // as n single Train requests
+                        stats.trained.fetch_add(rows, Ordering::Relaxed);
+                    }
+                    respond(&stats, resp, out);
+                }
                 Request::Flush { session, resp } => {
                     let out = match sessions.get(session) {
                         Some(cell) => {
@@ -302,9 +368,18 @@ fn router_loop(
             }
         }
         if !predicts.is_empty() {
-            dispatch_predicts(&sessions, &stats, executor.as_ref(), predicts);
+            dispatch_predicts(&sessions, &stats, executor.as_ref(), predicts, &mut scratch);
         }
     }
+}
+
+/// Per-router-worker reusable buffers for the native predict fallback:
+/// the gathered row-major probe matrix and the prediction output. Both
+/// grow to the largest burst served, then stay allocation-free.
+#[derive(Default)]
+struct PredictScratch {
+    xs: Vec<f64>,
+    out: Vec<f64>,
 }
 
 fn respond(stats: &ServiceStats, tx: Sender<Response>, out: Result<Response>) {
@@ -320,17 +395,20 @@ fn respond(stats: &ServiceStats, tx: Sender<Response>, out: Result<Response>) {
 
 /// Group predicts by session config and, when PJRT is available and the
 /// config has a baked `rff_predict` artifact, run each group as one
-/// padded batch; otherwise fall back to native per-row predicts.
+/// padded batch; otherwise fall back to one **native batched** predict
+/// per group ([`super::session::PredictState::predict_batch`] over the
+/// worker's reusable scratch).
 ///
 /// Locking: each session is locked just long enough to snapshot
 /// `(θ, Ω, b)` ([`super::session::PredictState`]); the snapshot then
 /// serves the whole group with **no lock held** — a PJRT round-trip or a
-/// run of native predicts never blocks trains on the same session.
+/// native batch never blocks trains on the same session.
 fn dispatch_predicts(
     sessions: &SessionStore,
     stats: &ServiceStats,
     executor: Option<&ExecutorHandle>,
     predicts: Vec<(u64, Vec<f64>, Sender<Response>)>,
+    scratch: &mut PredictScratch,
 ) {
     // Group by (session) first: same session ⇒ same (d, D, Ω).
     let mut by_session: BTreeMap<u64, Vec<(Vec<f64>, Sender<Response>)>> = BTreeMap::new();
@@ -416,8 +494,21 @@ fn dispatch_predicts(
                 }
             }
             None => {
-                for (x, tx) in rows {
-                    let v = snap.predict(&x);
+                // native fallback serves the whole group through one
+                // Z-free blocked batch kernel, gathering rows into and
+                // predicting out of the worker's reused buffers — zero
+                // steady-state allocations, same values as per-row
+                // predicts
+                scratch.xs.clear();
+                for (x, _) in &rows {
+                    scratch.xs.extend_from_slice(x);
+                }
+                if scratch.out.len() < rows.len() {
+                    scratch.out.resize(rows.len(), 0.0);
+                }
+                let out = &mut scratch.out[..rows.len()];
+                snap.predict_batch(&scratch.xs, out);
+                for ((_, tx), &v) in rows.into_iter().zip(out.iter()) {
                     stats.predicted.fetch_add(1, Ordering::Relaxed);
                     let _ = tx.send(Response::Predicted(v));
                 }
@@ -468,6 +559,97 @@ mod tests {
         assert!(svc.predict_sync(42, vec![0.0; 5]).is_err());
         assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 0);
         assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn train_batch_counts_rows_and_matches_per_row() {
+        use crate::kaf::kernels::Kernel;
+        use crate::kaf::RffMap;
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(7, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+        let cfg = SessionConfig::paper_default();
+        let sid_batch =
+            svc.add_session(FilterSession::with_map(cfg.clone(), map.clone(), None).unwrap());
+        let sid_row = svc.add_session(FilterSession::with_map(cfg, map, None).unwrap());
+
+        let mut src = NonlinearWiener::new(run_rng(7, 1), 0.05);
+        let samples = src.take_samples(200);
+        let mut want = Vec::new();
+        for s in &samples {
+            want.extend(svc.train_sync(sid_row, s.x.clone(), s.y).unwrap());
+        }
+        let mut got = Vec::new();
+        for chunk in samples.chunks(48) {
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for s in chunk {
+                xs.extend_from_slice(&s.x);
+                ys.push(s.y);
+            }
+            got.extend(svc.train_batch_sync(sid_batch, xs, ys).unwrap());
+        }
+        assert_eq!(got, want, "batched service training must match per-row bitwise");
+        // trained counts rows for both paths: 200 + 200
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 400);
+
+        // served predictions agree bitwise across the two sessions
+        let probe = samples[0].x.clone();
+        assert_eq!(
+            svc.predict_sync(sid_batch, probe.clone()).unwrap(),
+            svc.predict_sync(sid_row, probe).unwrap()
+        );
+
+        // failed batches count zero rows
+        assert!(svc.train_batch_sync(999, vec![0.0; 5], vec![1.0]).is_err());
+        assert!(svc.train_batch_sync(sid_batch, vec![0.0; 7], vec![1.0]).is_err());
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 400);
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn burst_of_predicts_served_batched_natively() {
+        // the native fallback serves bursts through predict_batch; the
+        // values must equal direct per-row session predicts
+        let svc = CoordinatorService::start(
+            ServiceConfig {
+                workers: 1,
+                batch_wait: Duration::from_millis(2),
+                ..ServiceConfig::default()
+            },
+            None,
+        );
+        let mut rng = run_rng(8, 0);
+        let mut s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(8, 1), 0.05);
+        for smp in src.take_samples(400) {
+            s.train(&smp.x, smp.y).unwrap();
+        }
+        let sid = svc.add_session(s);
+        let probes = src.take_samples(64);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for p in &probes {
+            svc.submit(Request::Predict { session: sid, x: p.x.clone(), resp: tx.clone() })
+                .unwrap();
+        }
+        drop(tx);
+        let mut served = Vec::new();
+        while let Ok(r) = rx.recv() {
+            match r {
+                Response::Predicted(v) => served.push(v),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(served.len(), 64);
+        let sess = svc.remove_session(sid).unwrap();
+        let mut want: Vec<f64> = probes.iter().map(|p| sess.predict(&p.x)).collect();
+        let mut got = served;
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, want, "batched native serving must match per-row predicts bitwise");
+        assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 64);
         svc.shutdown();
     }
 

@@ -17,6 +17,8 @@ use crate::kaf::{OnlineRegressor, RffKlms, RffKrls, RffMap};
 use crate::rng::Rng;
 use crate::runtime::ExecutorHandle;
 
+use super::native_step;
+
 /// Which algorithm a session runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Algo {
@@ -139,10 +141,23 @@ impl PredictState {
         self.theta.iter().map(|&v| v as f32).collect()
     }
 
-    /// `ŷ = θᵀ z_Ω(x)` — same math as [`FilterSession::predict`].
+    /// `ŷ = θᵀ z_Ω(x)` — same math as [`FilterSession::predict`]
+    /// (fused apply+dot, single-accumulator order — bitwise identical to
+    /// [`Self::predict_batch`]).
     pub fn predict(&self, x: &[f64]) -> f64 {
-        let z = self.map.apply(x);
-        crate::linalg::dot(&self.theta, &z)
+        let mut z = vec![0.0; self.theta.len()];
+        self.map.apply_dot_into(x, &self.theta, &mut z)
+    }
+
+    /// Batched predict over row-major `[n, dim]` probes, writing `n`
+    /// predictions into `out`. Runs the blocked **Z-free** fused kernel
+    /// ([`RffMap::predict_batch_into`]) — no feature matrix stored, no
+    /// allocation (the caller owns `out`), bitwise the same values as
+    /// per-row [`Self::predict`]. The service's native fallback serves
+    /// whole bursts through this with one reused `out` buffer per router
+    /// worker.
+    pub fn predict_batch(&self, xs: &[f64], out: &mut [f64]) {
+        self.map.predict_batch_into(xs, &self.theta, out);
     }
 }
 
@@ -236,7 +251,11 @@ impl FilterSession {
         &self.config
     }
 
-    /// Samples ingested so far.
+    /// Rows whose update has actually been **applied**: native rows
+    /// immediately, PJRT rows once their chunk dispatched successfully
+    /// (or `flush()` ran the remainder natively). Buffered-but-undispatched
+    /// rows and rows lost to a failed dispatch are *not* counted, so this
+    /// always agrees with the errors folded into [`Self::running_mse`].
     pub fn samples_seen(&self) -> usize {
         self.samples_seen
     }
@@ -296,20 +315,77 @@ impl FilterSession {
     /// Ingest one labelled sample. Native backends return the a-priori
     /// error immediately; the PJRT backend buffers and returns errors in
     /// batches of `chunk_n` (empty vec while the chunk fills).
+    ///
+    /// Stats: `samples_seen` moves only for rows whose update was applied
+    /// — a failed chunk dispatch drops the chunk's rows and counts none
+    /// of them (regression: it used to count them anyway, drifting from
+    /// `running_mse`).
     pub fn train(&mut self, x: &[f64], y: f64) -> Result<Vec<f64>> {
         anyhow::ensure!(x.len() == self.config.dim, "sample dim mismatch");
-        self.samples_seen += 1;
         match &mut self.state {
             SessionState::NativeKlms(f) => {
                 let e = f.step(x, y);
+                self.samples_seen += 1;
                 self.sum_sq_err += e * e;
                 Ok(vec![e])
             }
             SessionState::NativeKrls(f) => {
                 let e = f.step(x, y);
+                self.samples_seen += 1;
                 self.sum_sq_err += e * e;
                 Ok(vec![e])
             }
+            SessionState::PjrtKlms { .. } | SessionState::PjrtKrls { .. } => {
+                self.pjrt_push(x, y)
+            }
+        }
+    }
+
+    /// Ingest `n` labelled rows in one call: `xs` is row-major `[n, dim]`,
+    /// `ys` the `n` targets; returns every a-priori error that became
+    /// available, in row order. Native backends run the filters' blocked
+    /// batch kernels — **bitwise identical** to `n` per-row [`Self::train`]
+    /// calls, just faster. The PJRT backend buffers rows and dispatches as
+    /// many whole chunks as the rows complete — one *request* can
+    /// dispatch several chunks (each chunk is still its own executor
+    /// round-trip; what the batch amortizes is queue/channel overhead) —
+    /// leaving any remainder buffered for the next call/flush.
+    ///
+    /// On a chunk-dispatch error the failed chunk's rows are dropped and
+    /// not counted; chunks already dispatched by the same call remain
+    /// applied and counted.
+    pub fn train_batch(&mut self, xs: &[f64], ys: &[f64]) -> Result<Vec<f64>> {
+        let d = self.config.dim;
+        anyhow::ensure!(
+            xs.len() == ys.len() * d,
+            "train_batch shape mismatch: xs must be [n, dim], ys length n"
+        );
+        match &mut self.state {
+            SessionState::NativeKlms(f) => {
+                let errs = f.train_batch(d, xs, ys);
+                self.samples_seen += errs.len();
+                self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+                Ok(errs)
+            }
+            SessionState::NativeKrls(f) => {
+                let errs = f.train_batch(d, xs, ys);
+                self.samples_seen += errs.len();
+                self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+                Ok(errs)
+            }
+            SessionState::PjrtKlms { .. } | SessionState::PjrtKrls { .. } => {
+                let mut out = Vec::new();
+                for (row, &y) in xs.chunks_exact(d).zip(ys) {
+                    out.extend(self.pjrt_push(row, y)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Buffer one row on a PJRT session, dispatching the chunk when full.
+    fn pjrt_push(&mut self, x: &[f64], y: f64) -> Result<Vec<f64>> {
+        match &mut self.state {
             SessionState::PjrtKlms { buf_x, buf_y, chunk_n, .. } => {
                 buf_x.extend(x.iter().map(|&v| v as f32));
                 buf_y.push(y as f32);
@@ -326,6 +402,7 @@ impl FilterSession {
                 }
                 self.run_krls_chunk()
             }
+            _ => unreachable!("pjrt_push on a native session"),
         }
     }
 
@@ -336,10 +413,12 @@ impl FilterSession {
         else {
             unreachable!()
         };
+        // θ is cloned (not taken) so a failed dispatch loses only the
+        // chunk's rows, never the learned state
         let (theta_new, errs) = handle.klms_chunk(
             d,
             features,
-            std::mem::take(theta),
+            theta.clone(),
             std::mem::take(buf_x),
             std::mem::take(buf_y),
             omega.clone(),
@@ -348,6 +427,7 @@ impl FilterSession {
         )?;
         *theta = theta_new;
         let errs: Vec<f64> = errs.into_iter().map(|e| e as f64).collect();
+        self.samples_seen += errs.len();
         self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
         Ok(errs)
     }
@@ -360,11 +440,13 @@ impl FilterSession {
         else {
             unreachable!()
         };
+        // θ/P are cloned (not taken) so a failed dispatch loses only the
+        // chunk's rows, never the learned state
         let (theta_new, p_new, errs) = handle.krls_chunk(
             d,
             features,
-            std::mem::take(theta),
-            std::mem::take(p),
+            theta.clone(),
+            p.clone(),
             std::mem::take(buf_x),
             std::mem::take(buf_y),
             omega.clone(),
@@ -374,73 +456,58 @@ impl FilterSession {
         *theta = theta_new;
         *p = p_new;
         let errs: Vec<f64> = errs.into_iter().map(|e| e as f64).collect();
+        self.samples_seen += errs.len();
         self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
         Ok(errs)
     }
 
     /// Flush a partially filled PJRT chunk by finishing the remainder
-    /// with native (mathematically matching) updates. Returns the
-    /// remainder's errors. No-op for native sessions.
+    /// through the shared [`native_step`] kernels (the same
+    /// mathematically-matching f32 recipe the integration tests bound
+    /// against the artifact). Returns the remainder's errors, which are
+    /// counted into `samples_seen` here (buffered rows are not counted at
+    /// buffer time). No-op for native sessions.
     pub fn flush(&mut self) -> Result<Vec<f64>> {
-        match &mut self.state {
-            SessionState::NativeKlms(_) | SessionState::NativeKrls(_) => Ok(Vec::new()),
+        let errs = match &mut self.state {
+            SessionState::NativeKlms(_) | SessionState::NativeKrls(_) => Vec::new(),
             SessionState::PjrtKlms { map, theta, mu, buf_x, buf_y, .. } => {
                 let d = map.dim();
                 let mut errs = Vec::with_capacity(buf_y.len());
                 let mut z = vec![0.0f64; theta.len()];
+                let mut x = vec![0.0f64; d];
                 for (row, &y) in buf_x.chunks(d).zip(buf_y.iter()) {
-                    let x: Vec<f64> = row.iter().map(|&v| v as f64).collect();
-                    map.apply_into(&x, &mut z);
-                    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
-                    let e = y as f64 - yhat;
-                    for (t, &zi) in theta.iter_mut().zip(&z) {
-                        *t += (*mu as f64 * e * zi) as f32;
+                    for (xo, &xi) in x.iter_mut().zip(row) {
+                        *xo = xi as f64;
                     }
-                    errs.push(e);
+                    errs.push(native_step::klms_step(map, theta, *mu, &x, y, &mut z));
                 }
                 buf_x.clear();
                 buf_y.clear();
-                self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
-                Ok(errs)
+                errs
             }
             SessionState::PjrtKrls { map, theta, p, beta, buf_x, buf_y, .. } => {
                 let d = map.dim();
                 let features = theta.len();
                 let mut errs = Vec::with_capacity(buf_y.len());
                 let mut z = vec![0.0f64; features];
+                let mut pi = vec![0.0f64; features];
+                let mut x = vec![0.0f64; d];
                 for (row, &y) in buf_x.chunks(d).zip(buf_y.iter()) {
-                    let x: Vec<f64> = row.iter().map(|&v| v as f64).collect();
-                    map.apply_into(&x, &mut z);
-                    let mut pi = vec![0.0f64; features];
-                    for i in 0..features {
-                        let prow = &p[i * features..(i + 1) * features];
-                        pi[i] = prow.iter().zip(&z).map(|(&pv, &zi)| pv as f64 * zi).sum();
+                    for (xo, &xi) in x.iter_mut().zip(row) {
+                        *xo = xi as f64;
                     }
-                    let denom =
-                        *beta as f64 + pi.iter().zip(&z).map(|(&a, &b)| a * b).sum::<f64>();
-                    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
-                    let e = y as f64 - yhat;
-                    let esc = e / denom;
-                    for i in 0..features {
-                        theta[i] += (pi[i] * esc) as f32;
-                    }
-                    let inv_beta = 1.0 / *beta as f64;
-                    let c = inv_beta / denom;
-                    for i in 0..features {
-                        let pii = pi[i];
-                        let prow = &mut p[i * features..(i + 1) * features];
-                        for (j, pv) in prow.iter_mut().enumerate() {
-                            *pv = (*pv as f64 * inv_beta - c * pii * pi[j]) as f32;
-                        }
-                    }
-                    errs.push(e);
+                    errs.push(native_step::krls_step(
+                        map, theta, p, *beta, &x, y, &mut z, &mut pi,
+                    ));
                 }
                 buf_x.clear();
                 buf_y.clear();
-                self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
-                Ok(errs)
+                errs
             }
-        }
+        };
+        self.samples_seen += errs.len();
+        self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+        Ok(errs)
     }
 }
 
@@ -529,6 +596,89 @@ mod tests {
         }
         assert_eq!(snap.theta(), &frozen[..]);
         assert_ne!(s.theta(), frozen);
+    }
+
+    #[test]
+    fn failed_chunk_dispatch_counts_no_samples() {
+        // regression: samples_seen used to be incremented at buffer time,
+        // so a failed chunk dispatch left it disagreeing with the errors
+        // folded into running_mse
+        let handle = ExecutorHandle::failing_stub(4);
+        let cfg = SessionConfig { backend: Backend::Pjrt, ..SessionConfig::paper_default() };
+        let mut rng = run_rng(7, 0);
+        let mut s = FilterSession::new(cfg, &mut rng, Some(handle)).unwrap();
+        let x = [0.1, 0.2, -0.3, 0.4, 0.0];
+        // buffered rows are pending, not yet "seen"
+        for _ in 0..3 {
+            assert!(s.train(&x, 0.5).unwrap().is_empty());
+        }
+        assert_eq!(s.samples_seen(), 0);
+        // the 4th row completes the chunk; the injected dispatch failure
+        // must drop the chunk without counting any of its rows
+        assert!(s.train(&x, 0.5).is_err());
+        assert_eq!(s.samples_seen(), 0);
+        assert_eq!(s.running_mse(), 0.0);
+        // the buffer was consumed by the failed dispatch: nothing to flush
+        assert!(s.flush().unwrap().is_empty());
+        assert_eq!(s.samples_seen(), 0);
+        // learned state survives the failure (θ is cloned, not taken, for
+        // the dispatch) and the session stays usable
+        assert_eq!(s.theta().len(), 300);
+        assert!(s.train(&x, 0.5).unwrap().is_empty()); // buffers again
+        let errs = s.flush().unwrap();
+        assert_eq!(errs.len(), 1);
+        assert_eq!(s.samples_seen(), 1);
+    }
+
+    #[test]
+    fn flush_counts_remainder_rows() {
+        // remainder rows become "seen" when flush() applies them natively
+        let handle = ExecutorHandle::failing_stub(64);
+        let cfg = SessionConfig { backend: Backend::Pjrt, ..SessionConfig::paper_default() };
+        let mut rng = run_rng(8, 0);
+        let mut s = FilterSession::new(cfg, &mut rng, Some(handle)).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(8, 1), 0.05);
+        for smp in src.take_samples(5) {
+            assert!(s.train(&smp.x, smp.y).unwrap().is_empty());
+        }
+        assert_eq!(s.samples_seen(), 0); // buffered, not yet applied
+        let errs = s.flush().unwrap();
+        assert_eq!(errs.len(), 5);
+        assert_eq!(s.samples_seen(), 5);
+        assert!(s.running_mse() > 0.0);
+    }
+
+    #[test]
+    fn train_batch_native_matches_per_row_session() {
+        let mut rng = run_rng(9, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+        let cfg = SessionConfig::paper_default();
+        let mut per_row = FilterSession::with_map(cfg.clone(), map.clone(), None).unwrap();
+        let mut batched = FilterSession::with_map(cfg, map, None).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(9, 1), 0.05);
+        let samples = src.take_samples(130);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut want = Vec::new();
+        for smp in &samples {
+            want.extend(per_row.train(&smp.x, smp.y).unwrap());
+            xs.extend_from_slice(&smp.x);
+            ys.push(smp.y);
+        }
+        let got = batched.train_batch(&xs, &ys).unwrap();
+        assert_eq!(got, want, "batched errors must equal per-row errors bitwise");
+        assert_eq!(batched.samples_seen(), per_row.samples_seen());
+        assert_eq!(batched.theta(), per_row.theta());
+        // batched predictions off the snapshot equal per-row predicts
+        let snap = batched.predict_state();
+        let mut out = vec![0.0; ys.len()];
+        snap.predict_batch(&xs, &mut out);
+        for (r, &v) in out.iter().enumerate() {
+            assert_eq!(v, per_row.predict(&xs[r * 5..(r + 1) * 5]));
+        }
+        // shape mismatch rejected before any row is applied
+        assert!(batched.train_batch(&xs[..7], &ys[..2]).is_err());
+        assert_eq!(batched.samples_seen(), per_row.samples_seen());
     }
 
     #[test]

@@ -18,6 +18,21 @@
 //! `update(x, y)` (or the fused `step`). All state is `f64`; the PJRT
 //! hot path (f32) is validated against these implementations in the
 //! integration tests.
+//!
+//! ## Batch contract
+//!
+//! [`OnlineRegressor::predict_batch`] / [`OnlineRegressor::train_batch`]
+//! take **row-major `[n, d]`** inputs (`n` concatenated samples) and
+//! default to per-row loops, so every algorithm is batchable. The RFF
+//! filters override them with the blocked kernels of [`RffMap`]
+//! ([`RffMap::apply_batch_into`], [`RffMap::apply_dot_batch`] over a
+//! reusable [`FeatureScratch`], and the Z-free
+//! [`RffMap::predict_batch_into`]): only the θ-independent feature map is
+//! batched, updates stay strictly sequential, so batched and per-row
+//! runs yield **bitwise-identical** θ, errors and predictions — the
+//! property the `batch_parity` test suite pins down. This is the paper's
+//! point operationalised: a fixed-size linear state makes the hot path a
+//! dense matrix op, which dictionary methods cannot do.
 
 pub mod checkpoint;
 mod coherence;
@@ -41,7 +56,7 @@ pub use krls::KrlsAld;
 pub use lms::{Lms, Nlms};
 pub use novelty::NoveltyKlms;
 pub use qklms::Qklms;
-pub use rff::RffMap;
+pub use rff::{FeatureScratch, RffMap, ROW_BLOCK};
 pub use rff_klms::RffKlms;
 pub use rff_nlms::RffNlms;
 pub use surprise::SurpriseKlms;

@@ -5,12 +5,74 @@
 //! Storage is **feature-major** (`omega_t[i]` holds `ω_i ∈ R^d`
 //! contiguously), so `z_i = cos(ω_iᵀx + b_i)` streams one cache line per
 //! feature — the layout the perf pass settled on (see EXPERIMENTS.md §Perf).
+//!
+//! ## Batch substrate
+//!
+//! Because the map is frozen, `z_Ω` over a whole batch is a dense
+//! matrix op: [`RffMap::apply_batch_into`] and [`RffMap::apply_dot_batch`]
+//! take row-major `[n, d]` inputs and produce row-major `[n, D]` features
+//! (plus fused `ŷ = Z θ` for the latter), and
+//! [`RffMap::predict_batch_into`] computes `ŷ` alone, skipping the Z
+//! store — the serving hot path. The kernels are **blocked** —
+//! rows are processed in blocks of [`ROW_BLOCK`], and within a block the
+//! loop runs *features outer, rows inner*, so each `ω_i` row (and `θ_i`)
+//! is loaded once per block and reused across every row while the block's
+//! output stays cache-resident. [`FeatureScratch`] is the reusable arena
+//! of the fused Z+ŷ kernel; the Z-free predict kernel writes into a
+//! caller-owned buffer — either way steady-state batch work allocates
+//! nothing.
+//! Every batch element is computed by the *same expression* as the
+//! per-row [`RffMap::apply_into`] / [`RffMap::apply_dot_into`] paths, so
+//! batched and per-row results are bitwise identical (asserted by the
+//! batch-parity tests; see EXPERIMENTS.md §Batch).
 
 use crate::rng::{Distribution, Rng, Uniform};
 
 use super::fastmath::fast_cos;
 
 use super::kernels::Kernel;
+
+/// Row-block size of the batch kernels: 64 rows × 8 B = one cache line of
+/// output per feature per block, and a `[64, 300]` f64 feature block
+/// (150 KB) still fits L2. Chosen on that locality argument for the
+/// d=5, D=300 serving config; re-tune against EXPERIMENTS.md §Batch once
+/// its results table is recorded.
+pub const ROW_BLOCK: usize = 64;
+
+/// Reusable arena for [`RffMap::apply_dot_batch`] — the general fused
+/// kernel for callers that consume **both** the `[n, D]` feature matrix
+/// and the predictions (e.g. a future fused train variant; the parity
+/// suite pins its semantics). Holds the Z block and the length-`n` ŷ
+/// vector, growing monotonically to the largest batch seen so steady-state
+/// calls perform **zero allocations**. The serving predict path does not
+/// need Z and uses the Z-free [`RffMap::predict_batch_into`] instead;
+/// training uses [`RffMap::apply_batch_into`] over a filter-local block.
+#[derive(Clone, Debug, Default)]
+pub struct FeatureScratch {
+    z: Vec<f64>,
+    yhat: Vec<f64>,
+}
+
+impl FeatureScratch {
+    /// Empty arena; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow `([n, feats]` Z, zeroed `[n]` ŷ)` views, growing if needed.
+    fn prepare(&mut self, n: usize, feats: usize) -> (&mut [f64], &mut [f64]) {
+        let need = n * feats;
+        if self.z.len() < need {
+            self.z.resize(need, 0.0);
+        }
+        if self.yhat.len() < n {
+            self.yhat.resize(n, 0.0);
+        }
+        let yhat = &mut self.yhat[..n];
+        yhat.fill(0.0);
+        (&mut self.z[..need], yhat)
+    }
+}
 
 /// A frozen draw of the random Fourier features `(Ω, b)` for a kernel.
 #[derive(Clone, Debug)]
@@ -177,6 +239,140 @@ impl RffMap {
         acc
     }
 
+    /// Blocked batch kernel core. `xs` is row-major `[n, d]`. With
+    /// `STORE_Z`, writes the row-major `[n, D]` feature matrix into `z`;
+    /// with `FUSED`, accumulates `yhat[r] = Σ_i θ_i z_ri` (caller zeroes
+    /// `yhat`) — the per-row accumulation order is `i` ascending with a
+    /// single accumulator, bitwise identical to [`Self::apply_dot_into`].
+    /// Predict-only callers set `STORE_Z = false` and skip the `[n, D]`
+    /// store traffic entirely. Rows go in blocks of [`ROW_BLOCK`]; within
+    /// a block the feature loop is outer so `ω_i`/`b_i`/`θ_i` load once
+    /// per block and the row-inner loop vectorizes.
+    #[inline]
+    fn batch_core<const FUSED: bool, const STORE_Z: bool>(
+        &self,
+        xs: &[f64],
+        theta: &[f64],
+        z: &mut [f64],
+        yhat: &mut [f64],
+    ) {
+        let d = self.dim;
+        let feats = self.features;
+        let n = xs.len() / d;
+        debug_assert_eq!(xs.len(), n * d);
+        if STORE_Z {
+            debug_assert_eq!(z.len(), n * feats);
+        }
+        if FUSED {
+            debug_assert_eq!(theta.len(), feats);
+            debug_assert_eq!(yhat.len(), n);
+        }
+        let mut r0 = 0;
+        while r0 < n {
+            let bn = ROW_BLOCK.min(n - r0);
+            let xb = &xs[r0 * d..(r0 + bn) * d];
+            match d {
+                // same tiny-d specializations as `apply_into`: the weights
+                // stay in registers across the whole row-inner loop.
+                1 => {
+                    for i in 0..feats {
+                        let w0 = self.omega_t[i];
+                        let ph = self.phases[i];
+                        let th = if FUSED { theta[i] } else { 0.0 };
+                        for r in 0..bn {
+                            let zi = self.scale * fast_cos(w0 * xb[r] + ph);
+                            if STORE_Z {
+                                z[(r0 + r) * feats + i] = zi;
+                            }
+                            if FUSED {
+                                yhat[r0 + r] += th * zi;
+                            }
+                        }
+                    }
+                }
+                2 => {
+                    for i in 0..feats {
+                        let w = &self.omega_t[i * 2..i * 2 + 2];
+                        let (w0, w1) = (w[0], w[1]);
+                        let ph = self.phases[i];
+                        let th = if FUSED { theta[i] } else { 0.0 };
+                        for r in 0..bn {
+                            let zi = self.scale
+                                * fast_cos(w0 * xb[r * 2] + w1 * xb[r * 2 + 1] + ph);
+                            if STORE_Z {
+                                z[(r0 + r) * feats + i] = zi;
+                            }
+                            if FUSED {
+                                yhat[r0 + r] += th * zi;
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    for i in 0..feats {
+                        let w = &self.omega_t[i * d..(i + 1) * d];
+                        let ph = self.phases[i];
+                        let th = if FUSED { theta[i] } else { 0.0 };
+                        for r in 0..bn {
+                            let x = &xb[r * d..(r + 1) * d];
+                            let zi = self.scale * fast_cos(crate::linalg::dot(w, x) + ph);
+                            if STORE_Z {
+                                z[(r0 + r) * feats + i] = zi;
+                            }
+                            if FUSED {
+                                yhat[r0 + r] += th * zi;
+                            }
+                        }
+                    }
+                }
+            }
+            r0 += bn;
+        }
+    }
+
+    /// Batched feature map: `xs` holds `n` row-major `d`-vectors, `z`
+    /// receives the row-major `[n, D]` feature matrix. Each row equals
+    /// [`Self::apply_into`] of that row bitwise; see the module docs for
+    /// the blocked loop structure.
+    pub fn apply_batch_into(&self, xs: &[f64], z: &mut [f64]) {
+        assert_eq!(xs.len() % self.dim, 0, "xs is not a whole number of rows");
+        let n = xs.len() / self.dim;
+        assert_eq!(z.len(), n * self.features, "z must be [n, D]");
+        self.batch_core::<false, true>(xs, &[], z, &mut []);
+    }
+
+    /// Fused batched map **and** predict: computes `Z = z_Ω(X)` and
+    /// `ŷ = Z θ` in one blocked pass, returning `([n, D]` Z, `[n]` ŷ)`
+    /// views into `scratch` (grown as needed, never reallocated at steady
+    /// state). Row `r` of the result is bitwise identical to
+    /// `apply_dot_into(x_r, θ, …)`.
+    pub fn apply_dot_batch<'s>(
+        &self,
+        xs: &[f64],
+        theta: &[f64],
+        scratch: &'s mut FeatureScratch,
+    ) -> (&'s [f64], &'s [f64]) {
+        assert_eq!(xs.len() % self.dim, 0, "xs is not a whole number of rows");
+        assert_eq!(theta.len(), self.features, "theta must be length D");
+        let n = xs.len() / self.dim;
+        let (z, yhat) = scratch.prepare(n, self.features);
+        self.batch_core::<true, true>(xs, theta, z, yhat);
+        (&scratch.z[..n * self.features], &scratch.yhat[..n])
+    }
+
+    /// Batched predict **without materializing Z**: writes
+    /// `ŷ_r = θᵀ z_Ω(x_r)` into `out` (length `n`, row-major `[n, d]`
+    /// inputs) skipping the `[n, D]` feature store entirely — the serving
+    /// fallback's hot path, where only the predictions are consumed.
+    /// Allocation-free (the caller owns `out`) and bitwise identical per
+    /// row to [`Self::apply_dot_into`].
+    pub fn predict_batch_into(&self, xs: &[f64], theta: &[f64], out: &mut [f64]) {
+        assert_eq!(xs.len(), out.len() * self.dim, "xs must be [out.len(), d]");
+        assert_eq!(theta.len(), self.features, "theta must be length D");
+        out.fill(0.0);
+        self.batch_core::<true, false>(xs, theta, &mut [], out);
+    }
+
     /// Approximate the kernel via `z(x)ᵀz(y)` (Eq. (4)) — used by tests
     /// and the approximation-error ablation.
     pub fn approx_kernel(&self, x: &[f64], y: &[f64]) -> f64 {
@@ -254,6 +450,77 @@ mod tests {
             let want = map.scale() * (crate::linalg::dot(w, &x) + map.phases()[7]).cos();
             assert!((out[7] - want).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn batch_apply_matches_per_row_bitwise() {
+        // n = 70 crosses a ROW_BLOCK boundary (64), exercising the
+        // blocked loop's tail handling for every d specialization.
+        let mut rng = run_rng(7, 0);
+        for d in [1usize, 2, 3, 5] {
+            let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 2.0 }, d, 37);
+            let n = 70;
+            let xs: Vec<f64> = (0..n * d).map(|i| (i as f64 * 0.137).sin()).collect();
+            let mut z = vec![0.0; n * 37];
+            map.apply_batch_into(&xs, &mut z);
+            for r in 0..n {
+                let row = map.apply(&xs[r * d..(r + 1) * d]);
+                // bitwise, not epsilon: the batch kernel must evaluate the
+                // exact same expression per element
+                assert_eq!(&z[r * 37..(r + 1) * 37], &row[..], "d={d} row={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_matches_apply_dot_into_bitwise() {
+        let mut rng = run_rng(8, 0);
+        for d in [1usize, 2, 5] {
+            let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, 64);
+            let theta: Vec<f64> = (0..64).map(|i| (i as f64 * 0.31).cos()).collect();
+            let n = 9;
+            let xs: Vec<f64> = (0..n * d).map(|i| (i as f64 * 0.29).cos()).collect();
+            let mut scratch = FeatureScratch::new();
+            let (z, yhat) = map.apply_dot_batch(&xs, &theta, &mut scratch);
+            let mut z_row = vec![0.0; 64];
+            for r in 0..n {
+                let want = map.apply_dot_into(&xs[r * d..(r + 1) * d], &theta, &mut z_row);
+                assert_eq!(yhat[r], want, "d={d} row={r}");
+                assert_eq!(&z[r * 64..(r + 1) * 64], &z_row[..]);
+            }
+            // the Z-free predict kernel produces the same ŷ (stale `out`
+            // contents must not leak: fill with garbage first)
+            let mut out = vec![7.7; n];
+            map.predict_batch_into(&xs, &theta, &mut out);
+            let yhat2: Vec<f64> = {
+                let (_, y) = map.apply_dot_batch(&xs, &theta, &mut scratch);
+                y.to_vec()
+            };
+            assert_eq!(out, yhat2, "d={d}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_batch_sizes() {
+        // grow to a large batch, then shrink: stale yhat/z tails must not
+        // leak into the smaller batch's results
+        let mut rng = run_rng(9, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 30);
+        let theta = vec![0.5; 30];
+        let mut scratch = FeatureScratch::new();
+        let big: Vec<f64> = (0..100 * 5).map(|i| i as f64 * 0.01).collect();
+        let _ = map.apply_dot_batch(&big, &theta, &mut scratch);
+        let small: Vec<f64> = (0..3 * 5).map(|i| 1.0 - i as f64 * 0.02).collect();
+        let (_, yhat) = map.apply_dot_batch(&small, &theta, &mut scratch);
+        assert_eq!(yhat.len(), 3);
+        let mut z_row = vec![0.0; 30];
+        for r in 0..3 {
+            let want = map.apply_dot_into(&small[r * 5..(r + 1) * 5], &theta, &mut z_row);
+            assert_eq!(yhat[r], want);
+        }
+        // empty batch is a no-op, not a panic
+        let (z, yhat) = map.apply_dot_batch(&[], &theta, &mut scratch);
+        assert!(z.is_empty() && yhat.is_empty());
     }
 
     #[test]

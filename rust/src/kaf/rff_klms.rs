@@ -4,9 +4,9 @@
 //! Fixed-size solution `θ ∈ R^D`, complexity O(Dd) per step, no
 //! dictionary, no sparsification.
 
-use super::rff::RffMap;
+use super::rff::{RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
-use crate::linalg::{axpy, dot};
+use crate::linalg::{axpy, seq_dot};
 
 /// The paper's RFF-KLMS filter.
 pub struct RffKlms {
@@ -51,13 +51,45 @@ impl RffKlms {
 impl OnlineRegressor for RffKlms {
     fn predict(&self, x: &[f64]) -> f64 {
         // allocation-free would need interior mutability; predict() is the
-        // cold path (hot path = step()), so a stack-local buffer is fine.
-        let z = self.map.apply(x);
-        dot(&self.theta, &z)
+        // cold path (hot path = step()/train_batch), so a local buffer is
+        // fine. Fused apply+dot keeps the accumulation order identical to
+        // step() and the batch kernels (bitwise parity).
+        let mut z = vec![0.0; self.theta.len()];
+        self.map.apply_dot_into(x, &self.theta, &mut z)
     }
 
     fn update(&mut self, x: &[f64], y: f64) {
         let _ = self.step(x, y);
+    }
+
+    fn predict_batch(&self, dim: usize, xs: &[f64], out: &mut [f64]) {
+        assert_eq!(dim, self.map.dim(), "predict_batch dim mismatch");
+        // Z-free fused kernel: no feature matrix stored, no allocation
+        self.map.predict_batch_into(xs, &self.theta, out);
+    }
+
+    fn train_batch(&mut self, dim: usize, xs: &[f64], ys: &[f64]) -> Vec<f64> {
+        assert_eq!(dim, self.map.dim(), "train_batch dim mismatch");
+        assert_eq!(xs.len(), dim * ys.len(), "xs must be [ys.len(), dim]");
+        if ys.is_empty() {
+            return Vec::new();
+        }
+        // Only the θ-independent feature map is batched (blocked, features
+        // outer); θ updates stay strictly sequential, so the errors and
+        // final θ are bitwise identical to per-row step() calls.
+        let feats = self.theta.len();
+        let mut errs = Vec::with_capacity(ys.len());
+        let mut zb = vec![0.0; ROW_BLOCK.min(ys.len()) * feats];
+        for (xs_block, ys_block) in xs.chunks(ROW_BLOCK * dim).zip(ys.chunks(ROW_BLOCK)) {
+            let zb = &mut zb[..ys_block.len() * feats];
+            self.map.apply_batch_into(xs_block, zb);
+            for (z_r, &y) in zb.chunks_exact(feats).zip(ys_block) {
+                let e = y - seq_dot(&self.theta, z_r);
+                axpy(self.mu * e, z_r, &mut self.theta);
+                errs.push(e);
+            }
+        }
+        errs
     }
 
     #[inline]
@@ -137,6 +169,34 @@ mod tests {
         // within 3 dB of each other
         let ratio_db = 10.0 * (mse_rff / mse_qk).log10();
         assert!(ratio_db.abs() < 3.0, "RFF {mse_rff} vs QKLMS {mse_qk} ({ratio_db:.2} dB)");
+    }
+
+    #[test]
+    fn train_batch_bitwise_matches_per_row() {
+        let mut rng = run_rng(9, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+        let mut per_row = RffKlms::new(map.clone(), 1.0);
+        let mut batched = RffKlms::new(map, 1.0);
+        let mut src = NonlinearWiener::new(run_rng(9, 1), 0.05);
+        let samples = src.take_samples(150); // crosses a ROW_BLOCK boundary
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut want = Vec::new();
+        for s in &samples {
+            xs.extend_from_slice(&s.x);
+            ys.push(s.y);
+            want.push(per_row.step(&s.x, s.y));
+        }
+        let got = batched.train_batch(5, &xs, &ys);
+        assert_eq!(got, want, "a-priori errors diverged");
+        assert_eq!(batched.theta(), per_row.theta(), "theta diverged");
+        // predict_batch == predict, bitwise
+        let probe = &xs[..10 * 5];
+        let mut out = vec![0.0; 10];
+        batched.predict_batch(5, probe, &mut out);
+        for (r, &v) in out.iter().enumerate() {
+            assert_eq!(v, per_row.predict(&probe[r * 5..(r + 1) * 5]));
+        }
     }
 
     #[test]

@@ -12,9 +12,9 @@
 //! with `P₀ = I/λ`. O(D²) per step but no dictionary search and roughly
 //! half the cost of Engel's KRLS at matched accuracy (Fig. 2b).
 
-use super::rff::RffMap;
+use super::rff::{RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
-use crate::linalg::{dot, Mat};
+use crate::linalg::{dot, seq_dot, Mat};
 
 /// The paper's RFF-KRLS filter.
 pub struct RffKrls {
@@ -82,22 +82,13 @@ impl RffKrls {
         self.theta = theta;
         self.p = crate::linalg::Mat::from_vec(d_feat, d_feat, p_flat);
     }
-}
 
-impl OnlineRegressor for RffKrls {
-    fn predict(&self, x: &[f64]) -> f64 {
-        let z = self.map.apply(x);
-        dot(&self.theta, &z)
-    }
-
-    fn update(&mut self, x: &[f64], y: f64) {
-        let _ = self.step(x, y);
-    }
-
-    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+    /// The RLS update given features already in `self.z` and the a-priori
+    /// prediction `yhat`; returns the a-priori error. The single update
+    /// kernel shared by [`OnlineRegressor::step`] and
+    /// [`OnlineRegressor::train_batch`] — identical math, one code path.
+    fn rls_update_from_z(&mut self, yhat: f64, y: f64) -> f64 {
         let d_feat = self.theta.len();
-        // fused feature map + prediction
-        let yhat = self.map.apply_dot_into(x, &self.theta, &mut self.z);
         // pi = P z (P symmetric; row-major matvec)
         for i in 0..d_feat {
             self.pi[i] = dot(self.p.row(i), &self.z);
@@ -122,6 +113,55 @@ impl OnlineRegressor for RffKrls {
             }
         }
         e
+    }
+}
+
+impl OnlineRegressor for RffKrls {
+    fn predict(&self, x: &[f64]) -> f64 {
+        // fused apply+dot: accumulation order matches step() and the
+        // batch kernels (bitwise parity)
+        let mut z = vec![0.0; self.theta.len()];
+        self.map.apply_dot_into(x, &self.theta, &mut z)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) {
+        let _ = self.step(x, y);
+    }
+
+    fn step(&mut self, x: &[f64], y: f64) -> f64 {
+        // fused feature map + prediction, then the shared RLS update
+        let yhat = self.map.apply_dot_into(x, &self.theta, &mut self.z);
+        self.rls_update_from_z(yhat, y)
+    }
+
+    fn predict_batch(&self, dim: usize, xs: &[f64], out: &mut [f64]) {
+        assert_eq!(dim, self.map.dim(), "predict_batch dim mismatch");
+        // Z-free fused kernel: no feature matrix stored, no allocation
+        self.map.predict_batch_into(xs, &self.theta, out);
+    }
+
+    fn train_batch(&mut self, dim: usize, xs: &[f64], ys: &[f64]) -> Vec<f64> {
+        assert_eq!(dim, self.map.dim(), "train_batch dim mismatch");
+        assert_eq!(xs.len(), dim * ys.len(), "xs must be [ys.len(), dim]");
+        if ys.is_empty() {
+            return Vec::new();
+        }
+        // batch the θ-independent feature map (blocked), keep the O(D²)
+        // RLS recursion strictly sequential through the shared kernel —
+        // bitwise identical to per-row step() calls
+        let feats = self.theta.len();
+        let mut errs = Vec::with_capacity(ys.len());
+        let mut zb = vec![0.0; ROW_BLOCK.min(ys.len()) * feats];
+        for (xs_block, ys_block) in xs.chunks(ROW_BLOCK * dim).zip(ys.chunks(ROW_BLOCK)) {
+            let zb = &mut zb[..ys_block.len() * feats];
+            self.map.apply_batch_into(xs_block, zb);
+            for (z_r, &y) in zb.chunks_exact(feats).zip(ys_block) {
+                self.z.copy_from_slice(z_r);
+                let yhat = seq_dot(&self.theta, &self.z);
+                errs.push(self.rls_update_from_z(yhat, y));
+            }
+        }
+        errs
     }
 
     fn model_size(&self) -> usize {
@@ -205,6 +245,32 @@ mod tests {
             mse(&er),
             mse(&el)
         );
+    }
+
+    #[test]
+    fn train_batch_bitwise_matches_per_row() {
+        let m = map(7, 5, 80);
+        let mut per_row = RffKrls::new(m.clone(), 0.9995, 1e-4);
+        let mut batched = RffKrls::new(m, 0.9995, 1e-4);
+        let mut src = NonlinearWiener::new(run_rng(7, 1), 0.05);
+        let samples = src.take_samples(100); // crosses a ROW_BLOCK boundary
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut want = Vec::new();
+        for s in &samples {
+            xs.extend_from_slice(&s.x);
+            ys.push(s.y);
+            want.push(per_row.step(&s.x, s.y));
+        }
+        let got = batched.train_batch(5, &xs, &ys);
+        assert_eq!(got, want, "a-priori errors diverged");
+        assert_eq!(batched.theta(), per_row.theta(), "theta diverged");
+        assert_eq!(batched.p().data(), per_row.p().data(), "P diverged");
+        let mut out = vec![0.0; 4];
+        batched.predict_batch(5, &xs[..20], &mut out);
+        for (r, &v) in out.iter().enumerate() {
+            assert_eq!(v, per_row.predict(&xs[r * 5..(r + 1) * 5]));
+        }
     }
 
     #[test]

@@ -4,9 +4,9 @@
 //! Not in the paper's experiments; included as the obvious "linear
 //! characteristics pave the way to other settings" (§7) variant.
 
-use super::rff::RffMap;
+use super::rff::{RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
-use crate::linalg::{axpy, dot};
+use crate::linalg::{axpy, dot, seq_dot};
 
 /// NLMS on RFF features: `θ ← θ + μ e z / (ε + ‖z‖²)`.
 pub struct RffNlms {
@@ -39,8 +39,10 @@ impl RffNlms {
 
 impl OnlineRegressor for RffNlms {
     fn predict(&self, x: &[f64]) -> f64 {
-        let z = self.map.apply(x);
-        dot(&self.theta, &z)
+        // fused apply+dot: accumulation order matches step() and the
+        // batch kernels (bitwise parity)
+        let mut z = vec![0.0; self.theta.len()];
+        self.map.apply_dot_into(x, &self.theta, &mut z)
     }
 
     fn update(&mut self, x: &[f64], y: f64) {
@@ -55,6 +57,36 @@ impl OnlineRegressor for RffNlms {
         let nrm = self.eps + dot(&self.z, &self.z);
         axpy(self.mu * e / nrm, &self.z, &mut self.theta);
         e
+    }
+
+    fn predict_batch(&self, dim: usize, xs: &[f64], out: &mut [f64]) {
+        assert_eq!(dim, self.map.dim(), "predict_batch dim mismatch");
+        // Z-free fused kernel: no feature matrix stored, no allocation
+        self.map.predict_batch_into(xs, &self.theta, out);
+    }
+
+    fn train_batch(&mut self, dim: usize, xs: &[f64], ys: &[f64]) -> Vec<f64> {
+        assert_eq!(dim, self.map.dim(), "train_batch dim mismatch");
+        assert_eq!(xs.len(), dim * ys.len(), "xs must be [ys.len(), dim]");
+        if ys.is_empty() {
+            return Vec::new();
+        }
+        // batched feature map, sequential normalized updates — bitwise
+        // identical to per-row step() calls
+        let feats = self.theta.len();
+        let mut errs = Vec::with_capacity(ys.len());
+        let mut zb = vec![0.0; ROW_BLOCK.min(ys.len()) * feats];
+        for (xs_block, ys_block) in xs.chunks(ROW_BLOCK * dim).zip(ys.chunks(ROW_BLOCK)) {
+            let zb = &mut zb[..ys_block.len() * feats];
+            self.map.apply_batch_into(xs_block, zb);
+            for (z_r, &y) in zb.chunks_exact(feats).zip(ys_block) {
+                let e = y - seq_dot(&self.theta, z_r);
+                let nrm = self.eps + dot(z_r, z_r);
+                axpy(self.mu * e / nrm, z_r, &mut self.theta);
+                errs.push(e);
+            }
+        }
+        errs
     }
 
     fn model_size(&self) -> usize {
@@ -99,6 +131,26 @@ mod tests {
             assert!(e.is_finite());
         }
         assert!(f.theta().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn train_batch_bitwise_matches_per_row() {
+        let mut rng = run_rng(4, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 120);
+        let mut per_row = RffNlms::new(map.clone(), 0.5, 1e-6);
+        let mut batched = RffNlms::new(map, 0.5, 1e-6);
+        let mut src = NonlinearWiener::new(run_rng(4, 1), 0.05);
+        let samples = src.take_samples(90); // crosses a ROW_BLOCK boundary
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut want = Vec::new();
+        for s in &samples {
+            xs.extend_from_slice(&s.x);
+            ys.push(s.y);
+            want.push(per_row.step(&s.x, s.y));
+        }
+        assert_eq!(batched.train_batch(5, &xs, &ys), want);
+        assert_eq!(batched.theta(), per_row.theta());
     }
 
     #[test]

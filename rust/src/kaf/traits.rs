@@ -28,6 +28,31 @@ pub trait OnlineRegressor {
         e
     }
 
+    /// Batched predict over row-major `[n, dim]` inputs, writing `n`
+    /// predictions into `out`. The default loops [`Self::predict`];
+    /// RFF filters override it with the blocked batch kernels of
+    /// [`RffMap`](super::RffMap) (bitwise-identical results, no per-row
+    /// allocation).
+    fn predict_batch(&self, dim: usize, xs: &[f64], out: &mut [f64]) {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(xs.len(), dim * out.len(), "xs must be [out.len(), dim]");
+        for (row, o) in xs.chunks_exact(dim).zip(out.iter_mut()) {
+            *o = self.predict(row);
+        }
+    }
+
+    /// Batched train over row-major `[n, dim]` inputs and `n` targets,
+    /// returning the `n` a-priori errors in row order. Semantically a
+    /// sequence of [`Self::step`] calls — updates apply row by row, so a
+    /// row's error reflects every earlier row in the batch — and the
+    /// batch-native overrides in the RFF filters are **bitwise identical**
+    /// to that sequence (they only batch the θ-independent feature map).
+    fn train_batch(&mut self, dim: usize, xs: &[f64], ys: &[f64]) -> Vec<f64> {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(xs.len(), dim * ys.len(), "xs must be [ys.len(), dim]");
+        xs.chunks_exact(dim).zip(ys).map(|(row, &y)| self.step(row, y)).collect()
+    }
+
     /// Model size: number of adjustable parameters currently held
     /// (D for RFF filters, dictionary size × 1 coefficient for KLMS
     /// variants). Used by the Table-1 "dictionary size" column.

@@ -52,6 +52,26 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Strictly sequential single-accumulator dot product.
+///
+/// Slower than [`dot`] (no unrolling) but its accumulation order matches
+/// the fused `θᵀz` accumulation inside
+/// [`RffMap::apply_dot_into`](crate::kaf::RffMap::apply_dot_into) and
+/// [`RffMap::apply_dot_batch`](crate::kaf::RffMap::apply_dot_batch)
+/// exactly. The batched train paths use it for their a-priori
+/// predictions so that batched and per-row runs produce bitwise-identical
+/// θ trajectories and error sequences (the batch-parity tests assert
+/// `==`, not an epsilon).
+#[inline]
+pub fn seq_dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
 /// `y += alpha * x` over equal-length slices.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
@@ -83,6 +103,19 @@ mod tests {
         let b: Vec<f64> = (0..37).map(|i| 1.0 - i as f64 * 0.1).collect();
         let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seq_dot_matches_naive_sum_order() {
+        let a: Vec<f64> = (0..9).map(|i| 0.3 * i as f64 - 1.0).collect();
+        let b: Vec<f64> = (0..9).map(|i| 0.7 - 0.2 * i as f64).collect();
+        let mut naive = 0.0;
+        for i in 0..9 {
+            naive += a[i] * b[i];
+        }
+        // bitwise: same op sequence, not just approximately equal
+        assert_eq!(seq_dot(&a, &b), naive);
+        assert!((seq_dot(&a, &b) - dot(&a, &b)).abs() < 1e-12);
     }
 
     #[test]

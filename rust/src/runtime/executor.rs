@@ -188,6 +188,52 @@ impl Drop for PjrtExecutor {
 }
 
 impl ExecutorHandle {
+    /// Test-only failure-injection handle: answers `chunk_len`/`batch_len`
+    /// with `chunk_n` (so PJRT sessions can be constructed without
+    /// artifacts) but fails every dispatch with an injected error — lets
+    /// unit tests exercise the session/service error paths (e.g. the
+    /// samples-seen accounting on a failed chunk dispatch) without a PJRT
+    /// runtime. The service thread exits when the last handle drops.
+    #[cfg(test)]
+    pub(crate) fn failing_stub(chunk_n: usize) -> Self {
+        let (tx, rx) = channel::<Cmd>();
+        std::thread::spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Cmd::Shutdown => break,
+                    Cmd::Platform(resp) => {
+                        let _ = resp.send(Ok("failing-stub".into()));
+                    }
+                    Cmd::Names(resp) => {
+                        let _ = resp.send(Ok(Vec::new()));
+                    }
+                    Cmd::ChunkLen { resp, .. } => {
+                        let _ = resp.send(Ok(chunk_n));
+                    }
+                    Cmd::BatchLen { resp, .. } => {
+                        let _ = resp.send(Ok(chunk_n));
+                    }
+                    Cmd::Compile { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("injected failure (stub executor)")));
+                    }
+                    Cmd::KlmsChunk { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("injected failure (stub executor)")));
+                    }
+                    Cmd::KrlsChunk { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("injected failure (stub executor)")));
+                    }
+                    Cmd::Features { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("injected failure (stub executor)")));
+                    }
+                    Cmd::Predict { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!("injected failure (stub executor)")));
+                    }
+                }
+            }
+        });
+        Self { tx }
+    }
+
     fn roundtrip<T>(&self, make: impl FnOnce(Reply<T>) -> Cmd) -> Result<T> {
         let (tx, rx) = channel();
         self.tx

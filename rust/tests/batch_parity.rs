@@ -1,0 +1,147 @@
+//! Property tests for the batch-first hot path: `train_batch` /
+//! `predict_batch` must produce results **bitwise identical** to the
+//! per-row path on the native f64 backend, for all three RFF filters,
+//! across random dims, feature counts, batch sizes and batch splits.
+//!
+//! (Same shrink-free random-sweep harness as `prop_invariants.rs` — the
+//! offline vendor set has no `proptest`.)
+
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{
+    FeatureScratch, OnlineRegressor, RffKlms, RffKrls, RffMap, RffNlms, ROW_BLOCK,
+};
+use rff_kaf::rng::{Distribution, Normal, Rng};
+
+/// Mini property harness: run `prop(rng)` for `n` random cases; panic
+/// with the case seed on failure.
+fn cases(name: &str, n: usize, prop: impl Fn(&mut Rng)) {
+    for case in 0..n {
+        let seed = 0xBA7C4 ^ (case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+struct Case {
+    dim: usize,
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+fn random_case(rng: &mut Rng) -> (RffMap, Case) {
+    let dim = 1 + rng.next_below(7) as usize;
+    let feats = 1 + rng.next_below(96) as usize;
+    let sigma = 0.5 + 5.0 * rng.next_f64();
+    let map = RffMap::draw(rng, Kernel::Gaussian { sigma }, dim, feats);
+    // batch sizes straddle ROW_BLOCK so the blocked tail path is hit
+    let n = 1 + rng.next_below(2 * ROW_BLOCK as u64) as usize;
+    let xs = Normal::standard().sample_vec(rng, n * dim);
+    let ys = Normal::standard().sample_vec(rng, n);
+    (map, Case { dim, xs, ys })
+}
+
+/// Train `per_row` sample-by-sample and `batched` through `train_batch`
+/// over a random split of the same rows; every error must match bitwise.
+fn check_parity<F: OnlineRegressor>(
+    rng: &mut Rng,
+    c: &Case,
+    per_row: &mut F,
+    batched: &mut F,
+    theta_of: impl Fn(&F) -> Vec<f64>,
+) {
+    let mut want = Vec::new();
+    for (row, &y) in c.xs.chunks_exact(c.dim).zip(&c.ys) {
+        want.push(per_row.step(row, y));
+    }
+    // feed the batch path the same rows in randomly-sized sub-batches —
+    // parity must hold regardless of how clients split the stream
+    let mut got = Vec::new();
+    let mut start = 0;
+    while start < c.ys.len() {
+        let take = 1 + rng.next_below(c.ys.len() as u64) as usize;
+        let end = (start + take).min(c.ys.len());
+        got.extend(batched.train_batch(
+            c.dim,
+            &c.xs[start * c.dim..end * c.dim],
+            &c.ys[start..end],
+        ));
+        start = end;
+    }
+    assert_eq!(got, want, "a-priori errors diverged");
+    assert_eq!(theta_of(batched), theta_of(per_row), "theta diverged");
+    // predictions: batched vs per-row, bitwise
+    let mut out = vec![0.0; c.ys.len()];
+    batched.predict_batch(c.dim, &c.xs, &mut out);
+    for (r, &v) in out.iter().enumerate() {
+        let row = &c.xs[r * c.dim..(r + 1) * c.dim];
+        assert_eq!(v, per_row.predict(row), "prediction diverged at row {r}");
+    }
+}
+
+#[test]
+fn prop_rffklms_batch_equals_per_row() {
+    cases("rffklms_batch_parity", 60, |rng| {
+        let (map, c) = random_case(rng);
+        let mu = 0.1 + rng.next_f64();
+        let mut per_row = RffKlms::new(map.clone(), mu);
+        let mut batched = RffKlms::new(map, mu);
+        check_parity(rng, &c, &mut per_row, &mut batched, |f| f.theta().to_vec());
+    });
+}
+
+#[test]
+fn prop_rffkrls_batch_equals_per_row() {
+    cases("rffkrls_batch_parity", 25, |rng| {
+        let (map, c) = random_case(rng);
+        let beta = 0.99 + 0.01 * rng.next_f64();
+        let lambda = 1e-4 + 0.1 * rng.next_f64();
+        let mut per_row = RffKrls::new(map.clone(), beta, lambda);
+        let mut batched = RffKrls::new(map, beta, lambda);
+        check_parity(rng, &c, &mut per_row, &mut batched, |f| f.theta().to_vec());
+        // the full P state must agree too, not just θ
+        assert_eq!(batched.p().data(), per_row.p().data(), "P diverged");
+    });
+}
+
+#[test]
+fn prop_rffnlms_batch_equals_per_row() {
+    cases("rffnlms_batch_parity", 60, |rng| {
+        let (map, c) = random_case(rng);
+        let mu = 0.1 + rng.next_f64();
+        let mut per_row = RffNlms::new(map.clone(), mu, 1e-6);
+        let mut batched = RffNlms::new(map, mu, 1e-6);
+        check_parity(rng, &c, &mut per_row, &mut batched, |f| f.theta().to_vec());
+    });
+}
+
+#[test]
+fn prop_batch_map_matches_per_row_map() {
+    // the substrate itself: apply_batch_into / apply_dot_batch vs
+    // apply_into / apply_dot_into, random shapes, bitwise
+    cases("batch_map_parity", 120, |rng| {
+        let dim = 1 + rng.next_below(7) as usize;
+        let feats = 1 + rng.next_below(160) as usize;
+        let map = RffMap::draw(rng, Kernel::Gaussian { sigma: 1.0 }, dim, feats);
+        let n = rng.next_below(ROW_BLOCK as u64 + 20) as usize;
+        let xs = Normal::standard().sample_vec(rng, n * dim);
+        let theta = Normal::standard().sample_vec(rng, feats);
+        let mut scratch = FeatureScratch::new();
+        let (z, yhat) = map.apply_dot_batch(&xs, &theta, &mut scratch);
+        let mut z_row = vec![0.0; feats];
+        for r in 0..n {
+            let row = &xs[r * dim..(r + 1) * dim];
+            let want = map.apply_dot_into(row, &theta, &mut z_row);
+            assert_eq!(yhat[r], want);
+            assert_eq!(&z[r * feats..(r + 1) * feats], &z_row[..]);
+            assert_eq!(z_row, map.apply(row));
+        }
+        // Z-free predict kernel agrees with the Z-storing fused kernel
+        let yhat = yhat.to_vec();
+        let mut out = vec![f64::NAN; n];
+        map.predict_batch_into(&xs, &theta, &mut out);
+        assert_eq!(out, yhat);
+    });
+}
