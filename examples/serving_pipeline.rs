@@ -17,7 +17,12 @@
 //! cargo run --release --example serving_pipeline -- --native
 //! # ship training rows in batches of 64 (Request::TrainBatch):
 //! cargo run --release --example serving_pipeline -- --native --train-batch 64
+//! # cap resident sessions (the rest spill/restore through snapshots):
+//! cargo run --release --example serving_pipeline -- --native --max-resident 4
 //! ```
+//!
+//! All sessions are registered from one map spec, so the whole fleet
+//! shares a single interned `(Ω, b)` — only θ is per-session state.
 //!
 //! The run recorded in EXPERIMENTS.md §End-to-end used the defaults.
 
@@ -26,7 +31,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use rff_kaf::coordinator::{
-    Backend, CoordinatorService, FilterSession, Request, Response, ServiceConfig, SessionConfig,
+    Backend, CoordinatorService, Request, Response, ServiceConfig, SessionConfig,
 };
 use rff_kaf::metrics::{to_db, LogHistogram, Stats};
 use rff_kaf::rng::run_rng;
@@ -67,6 +72,9 @@ fn main() {
 
     // --- boot the coordinator -------------------------------------------
     let workers = args.get_or("workers", 4usize);
+    // 0 = unbounded; N caps live sessions, spilling the LRU through
+    // versioned snapshots (in-memory sink here; --snapshot-dir for disk)
+    let max_resident = args.get_or("max-resident", 0usize);
     let svc = Arc::new(CoordinatorService::start(
         ServiceConfig {
             workers,
@@ -74,22 +82,33 @@ fn main() {
             max_batch: 32,
             batch_wait: std::time::Duration::from_millis(1),
             shards: args.get_or("shards", 16usize),
+            max_resident_sessions: max_resident,
+            snapshot_dir: args.get("snapshot-dir").map(std::path::PathBuf::from),
             ..ServiceConfig::default()
         },
         handle.clone(),
     ));
     println!(
         "coordinator: {workers} router workers over a {}-shard session store \
-         (per-session locking; predicts served from lock-free snapshots)",
-        svc.store().shard_count()
+         (per-session locking; predicts served from lock-free snapshots{})",
+        svc.store().shard_count(),
+        if max_resident > 0 {
+            format!("; resident cap {max_resident}")
+        } else {
+            String::new()
+        }
     );
     let mut session_ids = Vec::new();
-    for i in 0..n_sessions {
-        let mut rng = run_rng(seed, i);
+    for _ in 0..n_sessions {
+        // one spec for the whole fleet: every session shares the single
+        // interned (Ω, b); each still streams its own system below
         let cfg = SessionConfig { backend, ..SessionConfig::paper_default() };
-        let s = FilterSession::new(cfg, &mut rng, handle.clone()).expect("session");
-        session_ids.push(svc.add_session(s));
+        session_ids.push(svc.add_session_from_spec(cfg, seed).expect("session"));
     }
+    println!(
+        "fleet: {n_sessions} sessions over {} interned map(s)",
+        svc.registry().len()
+    );
 
     // --- training: every session streams its own system ------------------
     let t_train = Instant::now();
@@ -209,6 +228,16 @@ fn main() {
         batches,
         if batches > 0 { 100.0 * rows as f64 / (batches * 32) as f64 } else { 0.0 },
     );
+    if max_resident > 0 {
+        println!(
+            "  residency: cap {max_resident}, evictions={} restores={} \
+             (resident now {}, spilled {})",
+            stats.spill.evictions.load(Ordering::Relaxed),
+            stats.spill.restores.load(Ordering::Relaxed),
+            svc.store().resident_count(),
+            svc.store().spilled_count(),
+        );
+    }
     assert_eq!(stats.errors.load(Ordering::Relaxed), 0, "no request may fail");
 
     if let Ok(s) = Arc::try_unwrap(svc) {

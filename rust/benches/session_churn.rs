@@ -1,0 +1,136 @@
+//! Bench — session residency at fleet scale: bytes/session under map
+//! interning, and the train throughput cost of LRU evict/restore churn.
+//!
+//! Three parts:
+//! * **Memory:** per-session resident bytes at the paper's serving
+//!   config (d = 5, D = 300), interned fleet (one shared `(Ω, b)` in the
+//!   registry) vs the pre-interning layout (every session carried its
+//!   own map copy *plus* a second `shared_map` clone) — KLMS and KRLS.
+//! * **Resident-set sweep:** train/predict a 10k-session fleet through a
+//!   coordinator capped at 1k resident sessions (9 in 10 touches fault a
+//!   spilled session back in) vs the same fleet unbounded — the price of
+//!   bounded residency.
+//! * **Touch micro-costs:** one resident train vs one faulting train
+//!   (restore + evict round-trip through the in-memory sink).
+//!
+//! Results are recorded in EXPERIMENTS.md §Memory.
+//!
+//! `cargo bench --bench session_churn [-- --quick]`
+
+use rff_kaf::bench::{time_once, Bencher};
+use rff_kaf::coordinator::{Algo, CoordinatorService, ServiceConfig, SessionConfig};
+use rff_kaf::kaf::MapRegistry;
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+use rff_kaf::util::Args;
+
+fn kb(bytes: usize) -> f64 {
+    bytes as f64 / 1024.0
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let quick = args.flag("quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    let fleet: usize = args.get_or("sessions", if quick { 1_000 } else { 10_000 });
+    let cap: usize = args.get_or("resident", (fleet / 10).max(1));
+
+    // --- memory: bytes/session, interned vs per-session maps -------------
+    println!("== bytes/session at d=5, D=300 (map interned once per fleet) ==");
+    let registry = MapRegistry::new();
+    let klms_cfg = SessionConfig::paper_default();
+    let krls_cfg = SessionConfig {
+        algo: Algo::RffKrls { beta: 0.9995, lambda: 1e-4 },
+        ..klms_cfg.clone()
+    };
+    for (name, cfg, n) in [("KLMS", &klms_cfg, 256usize), ("KRLS", &krls_cfg, 32usize)] {
+        let sessions: Vec<_> = (0..n)
+            .map(|_| {
+                rff_kaf::coordinator::FilterSession::from_spec(cfg.clone(), 1, &registry, None)
+                    .unwrap()
+            })
+            .collect();
+        let state = sessions[0].state_bytes();
+        let map_bytes = sessions[0].map_arc().heap_bytes();
+        let interned = state as f64 + map_bytes as f64 / n as f64;
+        // pre-interning layout: the filter's own map clone + the
+        // session's shared_map Arc clone = 2 resident copies per session
+        let naive = state + 2 * map_bytes;
+        println!(
+            "  {name}: state {:.1} KB + map {:.1} KB/fleet → {:.1} KB/session \
+             (was {:.1} KB/session; {:.1}x)",
+            kb(state),
+            kb(map_bytes),
+            interned / 1024.0,
+            kb(naive),
+            naive as f64 / interned
+        );
+    }
+    println!("  registry: {} map(s), {:.1} KB total", registry.len(), kb(registry.heap_bytes()));
+
+    // --- resident-set sweep: 10k sessions, 1k resident --------------------
+    println!("\n== resident-set sweep: {fleet} sessions, cap {cap} vs unbounded ==");
+    let rows_per_touch = 8usize;
+    let mut src = NonlinearWiener::new(run_rng(77, 0), 0.05);
+    let block = src.take_samples(rows_per_touch);
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    for s in &block {
+        xs.extend_from_slice(&s.x);
+        ys.push(s.y);
+    }
+    for (label, max_resident) in [("capped", cap), ("unbounded", 0usize)] {
+        let svc = CoordinatorService::start(
+            ServiceConfig {
+                workers: 2,
+                queue_capacity: 4096,
+                max_resident_sessions: max_resident,
+                ..ServiceConfig::default()
+            },
+            None,
+        );
+        let ids: Vec<u64> = (0..fleet)
+            .map(|_| svc.add_session_from_spec(klms_cfg.clone(), 9).unwrap())
+            .collect();
+        let (_, sweep) = time_once(|| {
+            for &sid in &ids {
+                svc.train_batch_sync(sid, xs.clone(), ys.clone()).unwrap();
+            }
+        });
+        let rows = fleet * rows_per_touch;
+        let spill = &svc.stats().spill;
+        println!(
+            "  {label:>9}: {rows} rows in {:.3}s = {:>9.0} rows/s \
+             (evictions {}, restores {})",
+            sweep.as_secs_f64(),
+            rows as f64 / sweep.as_secs_f64(),
+            spill.evictions.load(std::sync::atomic::Ordering::Relaxed),
+            spill.restores.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        svc.shutdown();
+    }
+
+    // --- micro: resident touch vs faulting touch --------------------------
+    println!("\n== touch micro-costs (train of 1 row, D=300) ==");
+    let svc = CoordinatorService::start(
+        ServiceConfig { workers: 1, max_resident_sessions: 1, ..ServiceConfig::default() },
+        None,
+    );
+    let a = svc.add_session_from_spec(klms_cfg.clone(), 3).unwrap();
+    let b_id = svc.add_session_from_spec(klms_cfg.clone(), 3).unwrap();
+    let probe = src.take_samples(1).remove(0);
+    b.bench("touch_resident", || {
+        // same session every time: stays resident
+        svc.train_sync(a, probe.x.clone(), probe.y).unwrap().len()
+    });
+    let mut flip = false;
+    b.bench("touch_faulting", || {
+        // alternate sessions under cap 1: every touch restores one and
+        // evicts the other (snapshot serialize + parse per touch)
+        flip = !flip;
+        let sid = if flip { b_id } else { a };
+        svc.train_sync(sid, probe.x.clone(), probe.y).unwrap().len()
+    });
+    svc.shutdown();
+
+    println!("\n{} measurements total", b.results().len());
+}

@@ -1,25 +1,41 @@
 //! L3 coordinator: the streaming service that owns filter sessions,
-//! routes requests, micro-batches PJRT work and orchestrates the paper's
-//! Monte-Carlo experiments.
+//! routes requests, micro-batches PJRT work, spills idle sessions, and
+//! orchestrates the paper's Monte-Carlo experiments.
 //!
 //! Architecture (vLLM-router-shaped, scaled to this paper):
 //!
 //! ```text
-//!  clients ──► SessionHandle ──► BoundedQueue (backpressure)
-//!                                   │
-//!                             router worker(s)
-//!                      ┌───────────┴────────────┐
-//!                 train path                predict path
-//!              FilterSession             DynamicBatcher: group ≤B
-//!            (chunk buffer → PJRT      predicts across sessions →
-//!             rffklms/rls chunk,        one rff_predict PJRT call
-//!             native remainder)
+//!  clients ──► submit ──► BoundedQueue (backpressure)
+//!                             │
+//!                       router worker(s)
+//!              ┌──────────────┼────────────────┐
+//!         train path     predict path     snapshot path
+//!       FilterSession   DynamicBatcher:   SessionSnapshot
+//!      (chunk buffer →  group ≤B predicts (versioned JSON;
+//!       PJRT chunk,     across sessions → map inline or by
+//!       native          one rff_predict   MapSpec reference)
+//!       remainder)      PJRT call)              │
+//!              │               │                │
+//!        ┌─────┴───────────────┴────┐     ┌─────┴──────┐
+//!        │ SessionStore (sharded,   │ ◄──►│ SnapshotSink│
+//!        │ per-session locks, idle- │spill│ (memory or  │
+//!        │ LRU eviction + restore)  │     │  directory) │
+//!        └──────────┬──────────────┘      └────────────┘
+//!                   │ Arc<RffMap>
+//!            ┌──────┴───────┐
+//!            │ MapRegistry  │  one interned (Ω, b) + f32 view per
+//!            │ (kaf layer)  │  (kernel, d, D, seed) — fleet-shared
+//!            └──────────────┘
 //! ```
 //!
 //! The paper's *contribution* lives at the algorithm layer; the
 //! coordinator's job is to prove the fixed-size-θ property composes into
-//! a real serving system: constant-memory sessions, one executable per
-//! (d, D) config shared by every session, no dictionary transfer.
+//! a real serving system: **constant-memory sessions** (one shared map
+//! per config via [`MapRegistry`](crate::kaf::MapRegistry), θ-only
+//! per-session state), **bounded residency** (idle sessions spill to a
+//! [`SnapshotSink`] and restore transparently on next touch), and one
+//! executable per (d, D) config shared by every session — no dictionary
+//! transfer anywhere.
 //!
 //! ## Batch contract
 //!
@@ -31,51 +47,79 @@
 //!   slot and one response channel round-trip for the whole batch.
 //!   [`FilterSession::train_batch`] then runs the filters' blocked batch
 //!   kernels (native; bitwise identical to per-row training) or, on the
-//!   PJRT backend, dispatches every chunk the rows complete (one request
-//!   → possibly several chunk dispatches). Stats count rows, not
-//!   requests.
+//!   PJRT backend, dispatches every chunk the rows complete. Stats count
+//!   rows, not requests.
 //! * Predicts are coalesced by the service itself: the router gathers up
 //!   to `max_batch` predict requests (waiting `batch_wait` for a burst),
 //!   groups them per session, snapshots a [`PredictState`] and serves the
 //!   whole group via one PJRT `rff_predict` execution — or, natively,
 //!   one [`PredictState::predict_batch`] call (the Z-free fused kernel)
 //!   into a per-worker reused output buffer; zero steady-state
-//!   allocations.
+//!   allocations (single-row fallbacks use the same Z-free kernel with
+//!   n = 1, also allocation-free).
 //! * PJRT sessions buffer partial chunks; `flush()` finishes remainders
 //!   through the shared `native_step` f32 kernels — the one place that
-//!   math lives.
+//!   math lives. Removing a session flushes its buffered rows first, so
+//!   a remove never drops trained samples.
+//!
+//! ## Session lifecycle: spill and restore
+//!
+//! With `ServiceConfig { max_resident_sessions, snapshot_dir }` set, the
+//! [`SessionStore`] keeps at most `max_resident_sessions` sessions live;
+//! beyond that, the least-recently-touched session is **evicted**: its
+//! [`SessionSnapshot`] (versioned JSON; all four state variants incl.
+//! buffered PJRT chunk rows; map by registry reference when interned)
+//! spills to the configured [`SnapshotSink`] and the live state is
+//! dropped. The next touch of that id restores it transparently —
+//! snapshot → evict → restore → train is **bitwise identical** to the
+//! uninterrupted native run (property-tested in
+//! `tests/snapshot_parity.rs`). [`Request::Snapshot`] /
+//! [`Request::Restore`] expose the same codec to clients for manual
+//! checkpointing and migration; eviction/restore counters land in
+//! [`ServiceStats`].
 //!
 //! ## Sharding and locking contract
 //!
 //! Sessions live in a [`SessionStore`]: `N` shards (power of two), each a
-//! `Mutex<BTreeMap<u64, Arc<Mutex<FilterSession>>>>` keyed by a Fibonacci
-//! hash of the session id. Who holds which lock:
+//! `Mutex<BTreeMap<u64, Resident>>` keyed by a Fibonacci hash of the
+//! session id, where a `Resident` is an `Arc<Mutex<FilterSession>>` plus
+//! an LRU touch stamp. Who holds which lock:
 //!
-//! * **Shard lock** — held only by `add_session` / `remove_session` /
-//!   `session_count` and by the id→cell lookup inside train/flush/predict
-//!   routing. Released before any filter math runs.
+//! * **Shard lock** — held for map operations (insert / remove / lookup /
+//!   len) *and* for the restore of a spilled session on touch (decode +
+//!   re-insert happen under the shard lock so a racing double-touch
+//!   restores exactly once). Never held while training, predicting, or
+//!   dispatching device work.
 //! * **Session lock** — held for exactly one `train()`/`flush()` call, or
 //!   just long enough for the predict batcher to snapshot `(θ, Ω, b)`
-//!   into a [`PredictState`]. Trains on different sessions therefore run
-//!   truly concurrently across router workers; only same-session trains
+//!   into a [`PredictState`]. Trains on different sessions run truly
+//!   concurrently across router workers; only same-session trains
 //!   serialize.
+//! * **Eviction set** — a store-wide `Mutex<BTreeSet<u64>>` naming
+//!   sessions mid-eviction (unlinked from their shard, snapshot not yet
+//!   in the sink). Touches of those ids spin briefly until the spill
+//!   completes, then restore from the sink; without this, a concurrent
+//!   touch would observe the session in *neither* tier and misreport
+//!   "no session". Acquired only while a shard lock is held or alone —
+//!   lock order is always shard → eviction set → (nothing), and session
+//!   locks are never taken under either, so deadlock remains impossible.
 //! * **No lock across predict device traffic** — batched PJRT
-//!   `rff_predict` executions and native per-row predicts both run off
-//!   the detached snapshot, so a slow predict batch never blocks
-//!   training, and a training burst never blocks serving other sessions.
-//!   (A PJRT-backend *train* chunk does run under its own session's
-//!   lock — by design: training mutates θ — which serializes work on
-//!   that one session only.)
-//! * Lock order is always shard → session, one of each at most, so the
-//!   coordinator cannot deadlock.
+//!   `rff_predict` executions and native predicts run off the detached
+//!   snapshot. (A PJRT-backend *train* chunk does run under its own
+//!   session's lock — by design: training mutates θ.) The evictor
+//!   serializes its victim the same way `remove` always has: unlink,
+//!   wait for in-flight borrowers to drain, then snapshot — so a spilled
+//!   snapshot always contains every applied row.
 
 mod native_step;
 mod orchestrator;
 mod service;
 mod session;
+mod snapshot;
 mod store;
 
 pub use orchestrator::{McConfig, McResult, Orchestrator};
 pub use service::{CoordinatorService, Request, Response, ServiceConfig, ServiceStats};
 pub use session::{Algo, Backend, FilterSession, PredictState, SessionConfig};
-pub use store::SessionStore;
+pub use snapshot::{DirSink, MemorySink, SessionSnapshot, SnapshotSink, SNAPSHOT_FORMAT};
+pub use store::{SessionStore, SpillConfig, SpillStats};

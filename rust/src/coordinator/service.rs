@@ -32,8 +32,19 @@
 //! remain applied; blind retries of a failed `TrainBatch` therefore
 //! re-train those rows. The per-session `samples_seen` is the row-exact
 //! applied-rows ground truth.
+//!
+//! ## Residency
+//!
+//! With `max_resident_sessions > 0` the store spills idle-LRU sessions
+//! to a snapshot sink ([`DirSink`] under `snapshot_dir`, else
+//! [`MemorySink`]) and restores them transparently on the next touch —
+//! requests never observe eviction except as latency. `stats().spill`
+//! carries the eviction/restore counters; [`Request::Snapshot`] /
+//! [`Request::Restore`] expose the same snapshot codec for manual
+//! checkpointing, rollback and migration.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, PoisonError};
@@ -42,10 +53,12 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::exec::BoundedQueue;
+use crate::kaf::MapRegistry;
 use crate::runtime::ExecutorHandle;
 
-use super::session::FilterSession;
-use super::store::SessionStore;
+use super::session::{FilterSession, SessionConfig};
+use super::snapshot::{DirSink, MemorySink, SessionSnapshot, SnapshotSink};
+use super::store::{SessionStore, SpillConfig, SpillStats};
 
 /// Service tuning knobs.
 #[derive(Clone, Debug)]
@@ -76,6 +89,17 @@ pub struct ServiceConfig {
     /// per-session train/predict serialization is unaffected by this
     /// knob — that always uses the session's own lock.
     pub shards: usize,
+    /// Resident-session cap: beyond this many live sessions, the store
+    /// evicts the least-recently-touched one into a snapshot sink and
+    /// restores it transparently on its next touch. `0` (the default)
+    /// disables eviction — every session stays resident forever, the
+    /// pre-spill behavior.
+    pub max_resident_sessions: usize,
+    /// Where evicted sessions spill when a cap is set: a directory
+    /// (one JSON snapshot file per session, crash-tolerant writes) or,
+    /// when `None`, an in-memory sink (sessions demote to their
+    /// serialized form but stay in RAM).
+    pub snapshot_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -87,6 +111,8 @@ impl Default for ServiceConfig {
             batch_wait: Duration::ZERO,
             first_wait: Duration::from_millis(50),
             shards: 16,
+            max_resident_sessions: 0,
+            snapshot_dir: None,
         }
     }
 }
@@ -136,6 +162,29 @@ pub enum Request {
         /// Response channel.
         resp: Sender<Response>,
     },
+    /// Serialize session `session`'s complete state to a versioned
+    /// [`SessionSnapshot`] document (buffered PJRT chunk rows included —
+    /// no flush happens). The same codec the store's eviction path uses.
+    Snapshot {
+        /// Target session id.
+        session: u64,
+        /// Response channel (receives [`Response::Snapshot`]).
+        resp: Sender<Response>,
+    },
+    /// Install the session serialized in `snapshot` under id `session`
+    /// (replacing any current occupant — checkpoint rollback and
+    /// migration both want exactly that). Reference-mode maps resolve
+    /// through the service's registry, so restored fleets keep sharing
+    /// one `(Ω, b)`.
+    Restore {
+        /// Session id to install under.
+        session: u64,
+        /// A document produced by [`Request::Snapshot`] (or
+        /// [`SessionSnapshot::to_json`]).
+        snapshot: String,
+        /// Response channel (receives [`Response::Restored`]).
+        resp: Sender<Response>,
+    },
 }
 
 /// A response from the coordinator.
@@ -145,6 +194,10 @@ pub enum Response {
     Trained(Vec<f64>),
     /// A prediction.
     Predicted(f64),
+    /// A serialized session snapshot.
+    Snapshot(String),
+    /// A snapshot was installed.
+    Restored,
     /// Request failed.
     Error(String),
 }
@@ -169,6 +222,13 @@ pub struct ServiceStats {
     pub predict_rows: AtomicU64,
     /// Requests that returned an error.
     pub errors: AtomicU64,
+    /// Explicit [`Request::Snapshot`]s served successfully.
+    pub snapshots: AtomicU64,
+    /// Explicit [`Request::Restore`]s served successfully.
+    pub restored: AtomicU64,
+    /// Eviction/restore bookkeeping, shared with the session store (the
+    /// store increments these as it spills and re-admits sessions).
+    pub spill: Arc<SpillStats>,
 }
 
 /// The running coordinator service.
@@ -176,8 +236,14 @@ pub struct CoordinatorService {
     queue: Arc<BoundedQueue<Request>>,
     sessions: Arc<SessionStore>,
     stats: Arc<ServiceStats>,
+    registry: Arc<MapRegistry>,
+    executor: Option<ExecutorHandle>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    next_id: AtomicU64,
+    /// Shared with router workers: a [`Request::Restore`] under an
+    /// explicit id must advance this past that id, or a later
+    /// `add_session` could allocate the same id and silently clobber the
+    /// restored session.
+    next_id: Arc<AtomicU64>,
 }
 
 impl CoordinatorService {
@@ -185,35 +251,84 @@ impl CoordinatorService {
     /// predicts then run natively).
     pub fn start(config: ServiceConfig, executor: Option<ExecutorHandle>) -> Self {
         let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
-        let sessions = Arc::new(SessionStore::new(config.shards));
         let stats = Arc::new(ServiceStats::default());
+        let registry = Arc::new(MapRegistry::new());
+        let sessions = if config.max_resident_sessions > 0 {
+            let sink: Arc<dyn SnapshotSink> = match &config.snapshot_dir {
+                Some(dir) => Arc::new(DirSink::new(dir)),
+                None => Arc::new(MemorySink::new()),
+            };
+            Arc::new(SessionStore::with_spill(
+                config.shards,
+                SpillConfig {
+                    max_resident: config.max_resident_sessions,
+                    sink,
+                    registry: Arc::clone(&registry),
+                    executor: executor.clone(),
+                    stats: Arc::clone(&stats.spill),
+                },
+            ))
+        } else {
+            Arc::new(SessionStore::new(config.shards))
+        };
+        let next_id = Arc::new(AtomicU64::new(1));
         let workers = (0..config.workers.max(1))
             .map(|i| {
                 let queue = Arc::clone(&queue);
                 let sessions = Arc::clone(&sessions);
                 let stats = Arc::clone(&stats);
+                let registry = Arc::clone(&registry);
+                let next_id = Arc::clone(&next_id);
                 let executor = executor.clone();
                 let cfg = config.clone();
                 std::thread::Builder::new()
                     .name(format!("rff-kaf-router-{i}"))
-                    .spawn(move || router_loop(queue, sessions, stats, executor, cfg))
+                    .spawn(move || {
+                        router_loop(queue, sessions, stats, registry, next_id, executor, cfg)
+                    })
                     .expect("spawning router worker")
             })
             .collect();
-        Self { queue, sessions, stats, workers, next_id: AtomicU64::new(1) }
+        Self { queue, sessions, stats, registry, executor, workers, next_id }
     }
 
-    /// Register a session, returning its id. Touches one shard only.
+    /// Register a session, returning its id. Touches one shard only (may
+    /// evict the LRU session when a resident cap is configured).
     pub fn add_session(&self, session: FilterSession) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.sessions.insert(id, session);
         id
     }
 
-    /// Remove a session, returning it (flush first if you need the tail).
-    /// Waits out any in-flight request on the session; touches one shard.
+    /// Register a session whose map is **interned** in the service's
+    /// [`MapRegistry`]: every session added with the same
+    /// `(config.kernel, dim, features, seed)` shares one resident
+    /// `(Ω, b)`, and its eviction snapshots store the map as a reference
+    /// instead of by value.
+    pub fn add_session_from_spec(&self, config: SessionConfig, seed: u64) -> Result<u64> {
+        let session =
+            FilterSession::from_spec(config, seed, &self.registry, self.executor.clone())?;
+        Ok(self.add_session(session))
+    }
+
+    /// Remove a session, returning it with any buffered partial PJRT
+    /// chunk rows **flushed** through the native kernels first — a
+    /// remove never silently drops trained samples (it used to drop up
+    /// to `chunk_n − 1` of them). Waits out any in-flight request on the
+    /// session; restores the session from the spill sink if it was
+    /// evicted.
     pub fn remove_session(&self, id: u64) -> Option<FilterSession> {
-        self.sessions.remove(id)
+        let mut session = self.sessions.remove(id)?;
+        // flush() on a native session is a no-op; on a PJRT session it
+        // runs the remainder through native_step (pure computation, no
+        // dispatch) and cannot fail
+        let _ = session.flush();
+        Some(session)
+    }
+
+    /// The service's feature-map registry (interned `(Ω, b)` draws).
+    pub fn registry(&self) -> &Arc<MapRegistry> {
+        &self.registry
     }
 
     /// Number of live sessions.
@@ -292,12 +407,36 @@ impl CoordinatorService {
             other => anyhow::bail!("unexpected response {other:?}"),
         }
     }
+
+    /// Snapshot a session's state and wait for the serialized document.
+    pub fn snapshot_sync(&self, session: u64) -> Result<String> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::Snapshot { session, resp: tx })?;
+        match rx.recv()? {
+            Response::Snapshot(text) => Ok(text),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Install a snapshot under `session` and wait for the confirmation.
+    pub fn restore_sync(&self, session: u64, snapshot: String) -> Result<()> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::Restore { session, snapshot, resp: tx })?;
+        match rx.recv()? {
+            Response::Restored => Ok(()),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
 }
 
 fn router_loop(
     queue: Arc<BoundedQueue<Request>>,
     sessions: Arc<SessionStore>,
     stats: Arc<ServiceStats>,
+    registry: Arc<MapRegistry>,
+    next_id: Arc<AtomicU64>,
     executor: Option<ExecutorHandle>,
     cfg: ServiceConfig,
 ) {
@@ -362,6 +501,42 @@ fn router_loop(
                         }
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
+                    respond(&stats, resp, out);
+                }
+                Request::Snapshot { session, resp } => {
+                    // resident sessions serialize under their own lock (a
+                    // consistent point-in-time state, buffered rows
+                    // included, nothing flushed or dispatched); spilled
+                    // sessions return the sink's document directly — no
+                    // fault-in, no induced eviction
+                    let out = match sessions.snapshot_json(session) {
+                        Some(text) => Ok(Response::Snapshot(text)),
+                        None => Err(anyhow::anyhow!("no session {session}")),
+                    };
+                    if out.is_ok() {
+                        stats.snapshots.fetch_add(1, Ordering::Relaxed);
+                    }
+                    respond(&stats, resp, out);
+                }
+                Request::Restore { session, snapshot, resp } => {
+                    // decode outside any lock (it can be large), then one
+                    // store insert — replacing any current occupant is the
+                    // point (rollback/migration semantics)
+                    let out = SessionSnapshot::from_json(&snapshot)
+                        .and_then(|snap| {
+                            FilterSession::restore(snap, Some(&registry), executor.clone())
+                        })
+                        .map(|sess| {
+                            sessions.insert(session, sess);
+                            // an explicit id must never be re-issued by
+                            // add_session later — that would silently
+                            // clobber the restored session
+                            next_id.fetch_max(session.saturating_add(1), Ordering::Relaxed);
+                            Response::Restored
+                        });
+                    if out.is_ok() {
+                        stats.restored.fetch_add(1, Ordering::Relaxed);
+                    }
                     respond(&stats, resp, out);
                 }
                 Request::Predict { session, x, resp } => predicts.push((session, x, resp)),
@@ -458,8 +633,9 @@ fn dispatch_predicts(
         match batched {
             Some((eng, bsz)) => {
                 let theta = snap.theta_f32();
-                let omega = snap.map().omega_f32_dxD();
-                let b = snap.map().phases_f32();
+                // (Ω, b) staging tensors come from the map's shared cached
+                // f32 view — built once per map, not per dispatch group
+                let view = Arc::clone(snap.map().f32_view());
                 // pad each group of up to bsz rows with zeros
                 for chunk in rows.chunks(bsz) {
                     let mut x = vec![0.0f32; bsz * dim];
@@ -473,8 +649,8 @@ fn dispatch_predicts(
                         features,
                         theta.clone(),
                         x,
-                        omega.clone(),
-                        b.clone(),
+                        view.omega.clone(),
+                        view.phases.clone(),
                     ) {
                         Ok(yhat) => {
                             stats.predict_batches.fetch_add(1, Ordering::Relaxed);
@@ -520,7 +696,7 @@ fn dispatch_predicts(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::session::SessionConfig;
+    use crate::coordinator::session::{Backend, SessionConfig};
     use crate::rng::run_rng;
     use crate::signal::{NonlinearWiener, SignalSource};
 
@@ -660,6 +836,112 @@ mod tests {
             None,
         );
         assert_eq!(svc.store().shard_count(), 8); // rounded up to 2^k
+        svc.shutdown();
+    }
+
+    #[test]
+    fn remove_session_flushes_buffered_chunk_rows() {
+        // regression: remove used to hand the session back with up to
+        // chunk_n − 1 trained rows still sitting in the PJRT buffer —
+        // silently dropped unless the caller knew to flush
+        let handle = ExecutorHandle::failing_stub(64);
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let cfg = SessionConfig { backend: Backend::Pjrt, ..SessionConfig::paper_default() };
+        let mut rng = run_rng(20, 0);
+        let sid =
+            svc.add_session(FilterSession::new(cfg, &mut rng, Some(handle)).unwrap());
+        let mut src = NonlinearWiener::new(run_rng(20, 1), 0.05);
+        for smp in src.take_samples(5) {
+            assert!(svc.train_sync(sid, smp.x.clone(), smp.y).unwrap().is_empty());
+        }
+        let s = svc.remove_session(sid).unwrap();
+        // the 5 buffered rows were applied through the native kernels
+        assert_eq!(s.samples_seen(), 5);
+        assert!(s.running_mse() > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resident_cap_evicts_and_restores_transparently() {
+        let svc = CoordinatorService::start(
+            ServiceConfig { workers: 2, max_resident_sessions: 2, ..ServiceConfig::default() },
+            None,
+        );
+        let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+        let ids: Vec<u64> = (0..5)
+            .map(|_| svc.add_session_from_spec(cfg.clone(), 7).unwrap())
+            .collect();
+        // the fleet shares ONE interned map
+        assert_eq!(svc.registry().len(), 1);
+        assert_eq!(svc.session_count(), 5);
+        assert_eq!(svc.store().resident_count(), 2);
+        // train every session round-robin — touches restore spilled
+        // sessions transparently
+        let mut src = NonlinearWiener::new(run_rng(21, 1), 0.05);
+        for smp in src.take_samples(40) {
+            for &sid in &ids {
+                svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+            }
+        }
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 0);
+        let spill = &svc.stats().spill;
+        assert!(spill.evictions.load(Ordering::Relaxed) > 0, "no eviction happened");
+        assert_eq!(spill.restore_failures.load(Ordering::Relaxed), 0);
+        // exact per-session row counts survived the churn
+        for &sid in &ids {
+            let s = svc.remove_session(sid).unwrap();
+            assert_eq!(s.samples_seen(), 40, "session {sid} lost rows");
+        }
+        // every eviction was eventually matched by a restore
+        assert_eq!(
+            spill.evictions.load(Ordering::Relaxed),
+            spill.restores.load(Ordering::Relaxed)
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn snapshot_restore_requests_roundtrip() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(22, 0);
+        let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+        let sid = svc.add_session(FilterSession::new(cfg, &mut rng, None).unwrap());
+        let mut src = NonlinearWiener::new(run_rng(22, 1), 0.05);
+        let samples = src.take_samples(60);
+        for smp in &samples[..30] {
+            svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+        }
+        let checkpoint = svc.snapshot_sync(sid).unwrap();
+        // diverge the live session, then roll it back
+        for smp in &samples[30..] {
+            svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+        }
+        let diverged = svc.predict_sync(sid, samples[0].x.clone()).unwrap();
+        svc.restore_sync(sid, checkpoint.clone()).unwrap();
+        let rolled_back = svc.predict_sync(sid, samples[0].x.clone()).unwrap();
+        assert_ne!(diverged, rolled_back, "restore did not roll the state back");
+        // ...and migration: install the checkpoint under a fresh id
+        let clone_id = 777;
+        svc.restore_sync(clone_id, checkpoint).unwrap();
+        assert_eq!(
+            svc.predict_sync(clone_id, samples[0].x.clone()).unwrap(),
+            rolled_back,
+            "migrated session must serve identical predictions"
+        );
+        assert_eq!(svc.stats().snapshots.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.stats().restored.load(Ordering::Relaxed), 2);
+        // regression: restoring under an explicit id advances the id
+        // allocator past it — a later add_session must never re-issue
+        // id 777 and silently clobber the migrated session
+        let mut rng2 = run_rng(23, 0);
+        let fresh = svc.add_session(
+            FilterSession::new(SessionConfig::paper_default(), &mut rng2, None).unwrap(),
+        );
+        assert!(fresh > clone_id, "id allocator re-issued a restored id");
+        assert_eq!(svc.session_count(), 3);
+        // bad documents are an error, not a worker panic
+        assert!(svc.restore_sync(1, "{".into()).is_err());
+        assert!(svc.snapshot_sync(999).is_err());
         svc.shutdown();
     }
 

@@ -12,12 +12,14 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::kaf::checkpoint::MapPayload;
 use crate::kaf::kernels::Kernel;
-use crate::kaf::{OnlineRegressor, RffKlms, RffKrls, RffMap};
+use crate::kaf::{MapRegistry, MapSpec, OnlineRegressor, RffKlms, RffKrls, RffMap};
 use crate::rng::Rng;
 use crate::runtime::ExecutorHandle;
 
 use super::native_step;
+use super::snapshot::{SessionSnapshot, SnapshotState};
 
 /// Which algorithm a session runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -77,10 +79,11 @@ impl SessionConfig {
 enum SessionState {
     NativeKlms(RffKlms),
     NativeKrls(RffKrls),
+    // PJRT variants hold only the f32 *learned* state and chunk buffers;
+    // the f32 (Ω, b) staging tensors live in the shared map's cached
+    // `f32_view()` — one copy per map, not per session.
     PjrtKlms {
-        map: RffMap,
-        omega: Vec<f32>,
-        b: Vec<f32>,
+        map: Arc<RffMap>,
         theta: Vec<f32>,
         mu: f32,
         buf_x: Vec<f32>,
@@ -88,9 +91,7 @@ enum SessionState {
         chunk_n: usize,
     },
     PjrtKrls {
-        map: RffMap,
-        omega: Vec<f32>,
-        b: Vec<f32>,
+        map: Arc<RffMap>,
         theta: Vec<f32>,
         p: Vec<f32>,
         beta: f32,
@@ -141,12 +142,15 @@ impl PredictState {
         self.theta.iter().map(|&v| v as f32).collect()
     }
 
-    /// `ŷ = θᵀ z_Ω(x)` — same math as [`FilterSession::predict`]
-    /// (fused apply+dot, single-accumulator order — bitwise identical to
-    /// [`Self::predict_batch`]).
+    /// `ŷ = θᵀ z_Ω(x)` — the Z-free fused kernel with n = 1: no feature
+    /// store and **no allocation** (the router's per-row fallback calls
+    /// this in a loop, so a per-call `Vec` would be steady-state churn).
+    /// Single-accumulator order — bitwise identical to
+    /// [`Self::predict_batch`] and [`FilterSession::predict`].
     pub fn predict(&self, x: &[f64]) -> f64 {
-        let mut z = vec![0.0; self.theta.len()];
-        self.map.apply_dot_into(x, &self.theta, &mut z)
+        let mut out = [0.0];
+        self.map.predict_batch_into(x, &self.theta, &mut out);
+        out[0]
     }
 
     /// Batched predict over row-major `[n, dim]` probes, writing `n`
@@ -162,16 +166,23 @@ impl PredictState {
 }
 
 /// One streaming filter session.
+///
+/// The frozen `(Ω, b)` lives behind **one** `Arc<RffMap>` held by the
+/// filter (or the PJRT state) — the same handle [`Self::predict_state`]
+/// bumps and, for interned maps, the same allocation every other
+/// same-spec session in the fleet shares. A session's own state is just
+/// θ (and P / chunk buffers): the paper's fixed-size property, resident.
 pub struct FilterSession {
     config: SessionConfig,
     state: SessionState,
     executor: Option<ExecutorHandle>,
     samples_seen: usize,
     sum_sq_err: f64,
-    /// Shared copy of the frozen `(Ω, b)` so [`Self::predict_state`] is
-    /// an `Arc` bump under the session lock, not a map memcpy. Costs one
-    /// extra map per session (12 KB at d=5, D=300).
-    shared_map: Arc<RffMap>,
+    /// Registry identity of the map when known (sessions built by
+    /// [`Self::from_spec`] or restored from a reference snapshot). Lets
+    /// [`Self::snapshot`] serialize the map as a spec instead of by
+    /// value, so a fleet snapshot stores Ω once.
+    map_spec: Option<MapSpec>,
 }
 
 impl FilterSession {
@@ -186,14 +197,46 @@ impl FilterSession {
         Self::with_map(config, map, executor)
     }
 
-    /// Create a session with an explicit feature map (lets tests share
-    /// `(Ω, b)` between native and PJRT sessions).
+    /// Create a session with an explicit feature map — owned, or an
+    /// `Arc` already shared with other sessions (tests share `(Ω, b)`
+    /// between native and PJRT sessions this way).
     pub fn with_map(
         config: SessionConfig,
-        map: RffMap,
+        map: impl Into<Arc<RffMap>>,
         executor: Option<ExecutorHandle>,
     ) -> Result<Self> {
-        let shared_map = Arc::new(map.clone());
+        Self::build(config, map.into(), None, executor)
+    }
+
+    /// Create a session whose map is **interned**: the spec
+    /// `(config.kernel, dim, features, seed)` resolves through `registry`,
+    /// so every same-spec session shares one resident `(Ω, b)` and this
+    /// session's snapshots carry a map reference instead of the arrays.
+    pub fn from_spec(
+        config: SessionConfig,
+        seed: u64,
+        registry: &MapRegistry,
+        executor: Option<ExecutorHandle>,
+    ) -> Result<Self> {
+        let spec = MapSpec::new(config.kernel, config.dim, config.features, seed);
+        let map = registry.get_or_draw(&spec);
+        Self::build(config, map, Some(spec), executor)
+    }
+
+    fn build(
+        config: SessionConfig,
+        map: Arc<RffMap>,
+        map_spec: Option<MapSpec>,
+        executor: Option<ExecutorHandle>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            map.dim() == config.dim && map.features() == config.features,
+            "map shape (d={}, D={}) does not match config (d={}, D={})",
+            map.dim(),
+            map.features(),
+            config.dim,
+            config.features
+        );
         let state = match (config.backend, config.algo) {
             (Backend::Native, Algo::RffKlms { mu }) => {
                 SessionState::NativeKlms(RffKlms::new(map, mu))
@@ -210,8 +253,6 @@ impl FilterSession {
                     Algo::RffKrls { .. } => "rffkrls_chunk",
                 };
                 let chunk_n = handle.chunk_len(kind, config.dim, config.features)?;
-                let omega = map.omega_f32_dxD();
-                let b = map.phases_f32();
                 match algo {
                     Algo::RffKlms { mu } => SessionState::PjrtKlms {
                         theta: vec![0.0; config.features],
@@ -220,8 +261,6 @@ impl FilterSession {
                         buf_y: Vec::with_capacity(chunk_n),
                         chunk_n,
                         map,
-                        omega,
-                        b,
                     },
                     Algo::RffKrls { beta, lambda } => {
                         let mut p = vec![0.0f32; config.features * config.features];
@@ -236,14 +275,12 @@ impl FilterSession {
                             buf_y: Vec::with_capacity(chunk_n),
                             chunk_n,
                             map,
-                            omega,
-                            b,
                         }
                     }
                 }
             }
         };
-        Ok(Self { config, state, executor, samples_seen: 0, sum_sq_err: 0.0, shared_map })
+        Ok(Self { config, state, executor, samples_seen: 0, sum_sq_err: 0.0, map_spec })
     }
 
     /// Session configuration.
@@ -271,11 +308,24 @@ impl FilterSession {
 
     /// The feature map.
     pub fn map(&self) -> &RffMap {
+        self.map_arc()
+    }
+
+    /// The shared map handle — the *only* resident copy of `(Ω, b)` this
+    /// session holds. `Arc::strong_count` on it counts the whole fleet's
+    /// sharing (plus the registry's own reference for interned maps).
+    pub fn map_arc(&self) -> &Arc<RffMap> {
         match &self.state {
-            SessionState::NativeKlms(f) => f.map(),
-            SessionState::NativeKrls(f) => f.map(),
+            SessionState::NativeKlms(f) => f.map_arc(),
+            SessionState::NativeKrls(f) => f.map_arc(),
             SessionState::PjrtKlms { map, .. } | SessionState::PjrtKrls { map, .. } => map,
         }
+    }
+
+    /// The registry identity of the map, when this session was built
+    /// from one ([`Self::from_spec`] or a reference-snapshot restore).
+    pub fn map_spec(&self) -> Option<MapSpec> {
+        self.map_spec
     }
 
     /// Current weight vector θ (f64 view).
@@ -294,7 +344,7 @@ impl FilterSession {
     /// θ copy, no device traffic. Callers (the service batcher) drop the
     /// session lock right after taking this.
     pub fn predict_state(&self) -> PredictState {
-        PredictState { map: Arc::clone(&self.shared_map), theta: self.theta() }
+        PredictState { map: Arc::clone(self.map_arc()), theta: self.theta() }
     }
 
     /// Predict `ŷ(x)` with the current model. Single-sample predicts use
@@ -409,10 +459,13 @@ impl FilterSession {
     fn run_klms_chunk(&mut self) -> Result<Vec<f64>> {
         let handle = self.executor.as_ref().expect("pjrt session has executor").clone();
         let (d, features) = (self.config.dim, self.config.features);
-        let SessionState::PjrtKlms { omega, b, theta, mu, buf_x, buf_y, .. } = &mut self.state
+        let SessionState::PjrtKlms { map, theta, mu, buf_x, buf_y, .. } = &mut self.state
         else {
             unreachable!()
         };
+        // the f32 (Ω, b) staging tensors come from the map's shared
+        // cached view — per-dispatch clones, no per-session copy
+        let view = Arc::clone(map.f32_view());
         // θ is cloned (not taken) so a failed dispatch loses only the
         // chunk's rows, never the learned state
         let (theta_new, errs) = handle.klms_chunk(
@@ -421,8 +474,8 @@ impl FilterSession {
             theta.clone(),
             std::mem::take(buf_x),
             std::mem::take(buf_y),
-            omega.clone(),
-            b.clone(),
+            view.omega.clone(),
+            view.phases.clone(),
             *mu,
         )?;
         *theta = theta_new;
@@ -435,11 +488,12 @@ impl FilterSession {
     fn run_krls_chunk(&mut self) -> Result<Vec<f64>> {
         let handle = self.executor.as_ref().expect("pjrt session has executor").clone();
         let (d, features) = (self.config.dim, self.config.features);
-        let SessionState::PjrtKrls { omega, b, theta, p, beta, buf_x, buf_y, .. } =
-            &mut self.state
+        let SessionState::PjrtKrls { map, theta, p, beta, buf_x, buf_y, .. } = &mut self.state
         else {
             unreachable!()
         };
+        // shared cached f32 staging view, as in `run_klms_chunk`
+        let view = Arc::clone(map.f32_view());
         // θ/P are cloned (not taken) so a failed dispatch loses only the
         // chunk's rows, never the learned state
         let (theta_new, p_new, errs) = handle.krls_chunk(
@@ -449,8 +503,8 @@ impl FilterSession {
             p.clone(),
             std::mem::take(buf_x),
             std::mem::take(buf_y),
-            omega.clone(),
-            b.clone(),
+            view.omega.clone(),
+            view.phases.clone(),
             *beta,
         )?;
         *theta = theta_new;
@@ -508,6 +562,141 @@ impl FilterSession {
         self.samples_seen += errs.len();
         self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
         Ok(errs)
+    }
+
+    /// Capture a [`SessionSnapshot`] of this session's complete state:
+    /// config, map (by reference when the session has a [`MapSpec`],
+    /// inline otherwise), learned θ/P, any buffered partial PJRT chunk
+    /// rows, and the running stats. Pure read — no flush, no dispatch;
+    /// buffered rows are carried in the snapshot, not dropped.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        let map = match self.map_spec {
+            Some(spec) => MapPayload::Reference(spec),
+            None => MapPayload::Inline(Arc::clone(self.map_arc())),
+        };
+        let state = match &self.state {
+            SessionState::NativeKlms(f) => {
+                SnapshotState::NativeKlms { theta: f.theta().to_vec() }
+            }
+            SessionState::NativeKrls(f) => SnapshotState::NativeKrls {
+                theta: f.theta().to_vec(),
+                p: f.p().data().to_vec(),
+            },
+            SessionState::PjrtKlms { theta, buf_x, buf_y, .. } => SnapshotState::PjrtKlms {
+                theta: theta.clone(),
+                buf_x: buf_x.clone(),
+                buf_y: buf_y.clone(),
+            },
+            SessionState::PjrtKrls { theta, p, buf_x, buf_y, .. } => SnapshotState::PjrtKrls {
+                theta: theta.clone(),
+                p: p.clone(),
+                buf_x: buf_x.clone(),
+                buf_y: buf_y.clone(),
+            },
+        };
+        SessionSnapshot {
+            config: self.config.clone(),
+            map,
+            state,
+            samples_seen: self.samples_seen,
+            sum_sq_err: self.sum_sq_err,
+        }
+    }
+
+    /// Rebuild a session from a snapshot. Reference-mode maps resolve
+    /// through `registry` (sharing the fleet's interned copy; a missing
+    /// registry re-draws the identical map standalone); `executor` is
+    /// required for PJRT-backend snapshots, exactly as at construction.
+    ///
+    /// Exactness: restoring a native session and continuing to train
+    /// produces errors/θ/P **bitwise identical** to the uninterrupted
+    /// run; f32 PJRT state also round-trips bitwise, with buffered
+    /// partial chunk rows re-buffered, so the next chunk dispatch sees
+    /// exactly what it would have.
+    pub fn restore(
+        snap: SessionSnapshot,
+        registry: Option<&MapRegistry>,
+        executor: Option<ExecutorHandle>,
+    ) -> Result<Self> {
+        let spec = snap.map.spec();
+        let map = snap.map.resolve(registry);
+        let mut s = Self::build(snap.config, map, spec, executor)?;
+        let feats = s.config.features;
+        match (&mut s.state, snap.state) {
+            (SessionState::NativeKlms(f), SnapshotState::NativeKlms { theta }) => {
+                anyhow::ensure!(theta.len() == feats, "theta length mismatch");
+                f.set_theta(theta);
+            }
+            (SessionState::NativeKrls(f), SnapshotState::NativeKrls { theta, p }) => {
+                anyhow::ensure!(
+                    theta.len() == feats && p.len() == feats * feats,
+                    "state shape mismatch"
+                );
+                f.restore_state(theta, p);
+            }
+            (
+                SessionState::PjrtKlms { theta, buf_x, buf_y, chunk_n, .. },
+                SnapshotState::PjrtKlms { theta: t, buf_x: bx, buf_y: by },
+            ) => {
+                anyhow::ensure!(t.len() == feats, "theta length mismatch");
+                anyhow::ensure!(bx.len() == by.len() * s.config.dim, "buffer shape mismatch");
+                anyhow::ensure!(
+                    by.len() < *chunk_n,
+                    "snapshot buffers {} rows but the current artifact chunk is {} — \
+                     restore against the artifact set the snapshot was taken with",
+                    by.len(),
+                    *chunk_n
+                );
+                *theta = t;
+                *buf_x = bx;
+                *buf_y = by;
+            }
+            (
+                SessionState::PjrtKrls { theta, p, buf_x, buf_y, chunk_n, .. },
+                SnapshotState::PjrtKrls { theta: t, p: pp, buf_x: bx, buf_y: by },
+            ) => {
+                anyhow::ensure!(
+                    t.len() == feats && pp.len() == feats * feats,
+                    "state shape mismatch"
+                );
+                anyhow::ensure!(bx.len() == by.len() * s.config.dim, "buffer shape mismatch");
+                anyhow::ensure!(
+                    by.len() < *chunk_n,
+                    "snapshot buffers {} rows but the current artifact chunk is {} — \
+                     restore against the artifact set the snapshot was taken with",
+                    by.len(),
+                    *chunk_n
+                );
+                *theta = t;
+                *p = pp;
+                *buf_x = bx;
+                *buf_y = by;
+            }
+            _ => anyhow::bail!("snapshot state does not match its config's backend/algo"),
+        }
+        s.samples_seen = snap.samples_seen;
+        s.sum_sq_err = snap.sum_sq_err;
+        Ok(s)
+    }
+
+    /// Approximate heap bytes of this session's **own** state — θ, P,
+    /// scratch and chunk buffers — excluding the shared map (count that
+    /// once per fleet via [`RffMap::heap_bytes`]). The per-session
+    /// marginal cost the §Memory protocol records.
+    pub fn state_bytes(&self) -> usize {
+        let d_feat = self.config.features;
+        match &self.state {
+            // θ + the filter's scratch z
+            SessionState::NativeKlms(_) => 2 * d_feat * 8,
+            // θ + P + scratches z, π
+            SessionState::NativeKrls(_) => (d_feat * d_feat + 3 * d_feat) * 8,
+            SessionState::PjrtKlms { theta, buf_x, buf_y, .. } => {
+                (theta.len() + buf_x.capacity() + buf_y.capacity()) * 4
+            }
+            SessionState::PjrtKrls { theta, p, buf_x, buf_y, .. } => {
+                (theta.len() + p.len() + buf_x.capacity() + buf_y.capacity()) * 4
+            }
+        }
     }
 }
 
@@ -686,5 +875,143 @@ mod tests {
         let mut rng = run_rng(5, 0);
         let mut s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
         assert!(s.train(&[1.0, 2.0], 0.5).is_err());
+    }
+
+    #[test]
+    fn map_config_mismatch_rejected() {
+        let mut rng = run_rng(10, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 100);
+        // config says D=300, map has D=100
+        assert!(FilterSession::with_map(SessionConfig::paper_default(), map, None).is_err());
+    }
+
+    #[test]
+    fn fleet_of_spec_sessions_shares_one_map() {
+        // acceptance gate: N same-config sessions hold exactly ONE
+        // resident (Ω, b) — the registry's copy
+        let registry = MapRegistry::new();
+        let cfg = SessionConfig { features: 32, ..SessionConfig::paper_default() };
+        let sessions: Vec<FilterSession> = (0..10)
+            .map(|_| FilterSession::from_spec(cfg.clone(), 42, &registry, None).unwrap())
+            .collect();
+        let spec = MapSpec::new(cfg.kernel, cfg.dim, cfg.features, 42);
+        let map = registry.get_or_draw(&spec);
+        // registry + 10 sessions + our probe handle
+        assert_eq!(Arc::strong_count(&map), 12);
+        assert_eq!(registry.len(), 1);
+        assert_eq!(registry.misses(), 1);
+        for s in &sessions {
+            assert!(Arc::ptr_eq(s.map_arc(), &map));
+            assert_eq!(s.map_spec(), Some(spec));
+        }
+        // KRLS sessions share the same interned map too
+        let krls_cfg = SessionConfig {
+            algo: Algo::RffKrls { beta: 0.9995, lambda: 1e-4 },
+            ..cfg
+        };
+        let k = FilterSession::from_spec(krls_cfg, 42, &registry, None).unwrap();
+        assert!(Arc::ptr_eq(k.map_arc(), &map));
+        assert_eq!(registry.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_restore_native_is_bitwise() {
+        for algo in [
+            Algo::RffKlms { mu: 1.0 },
+            Algo::RffKrls { beta: 0.9995, lambda: 1e-4 },
+        ] {
+            let cfg = SessionConfig { algo, features: 24, ..SessionConfig::paper_default() };
+            let mut rng = run_rng(11, 0);
+            let mut live = FilterSession::new(cfg, &mut rng, None).unwrap();
+            let mut src = NonlinearWiener::new(run_rng(11, 1), 0.05);
+            for smp in src.take_samples(80) {
+                live.train(&smp.x, smp.y).unwrap();
+            }
+            let text = live.snapshot().to_json();
+            let snap = SessionSnapshot::from_json(&text).unwrap();
+            let mut restored = FilterSession::restore(snap, None, None).unwrap();
+            assert_eq!(restored.samples_seen(), live.samples_seen());
+            assert_eq!(restored.running_mse(), live.running_mse());
+            assert_eq!(restored.theta(), live.theta());
+            // bitwise-identical continuation
+            for smp in src.take_samples(60) {
+                let a = live.train(&smp.x, smp.y).unwrap();
+                let b = restored.train(&smp.x, smp.y).unwrap();
+                assert_eq!(a, b, "continuation diverged");
+            }
+            assert_eq!(restored.theta(), live.theta());
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_carries_buffered_pjrt_rows() {
+        // buffered partial-chunk rows survive snapshot → restore: flushing
+        // the restored session applies them (nothing silently dropped)
+        let handle = ExecutorHandle::failing_stub(8);
+        let cfg = SessionConfig { backend: Backend::Pjrt, ..SessionConfig::paper_default() };
+        let mut rng = run_rng(12, 0);
+        let mut s = FilterSession::new(cfg, &mut rng, Some(handle.clone())).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(12, 1), 0.05);
+        for smp in src.take_samples(3) {
+            assert!(s.train(&smp.x, smp.y).unwrap().is_empty()); // buffering
+        }
+        assert_eq!(s.samples_seen(), 0);
+        let text = s.snapshot().to_json();
+        let snap = SessionSnapshot::from_json(&text).unwrap();
+        let mut restored = FilterSession::restore(snap, None, Some(handle)).unwrap();
+        // the original's flush and the restored one's flush agree exactly
+        let want = s.flush().unwrap();
+        let got = restored.flush().unwrap();
+        assert_eq!(want.len(), 3);
+        assert_eq!(got, want, "restored buffered rows diverged");
+        assert_eq!(restored.samples_seen(), 3);
+        assert_eq!(restored.theta(), s.theta());
+    }
+
+    #[test]
+    fn spec_session_snapshot_is_a_reference() {
+        // interned sessions snapshot the map by spec: tiny document, and
+        // restore shares the registry's copy instead of allocating one
+        let registry = MapRegistry::new();
+        let cfg = SessionConfig { features: 64, ..SessionConfig::paper_default() };
+        let mut s = FilterSession::from_spec(cfg.clone(), 5, &registry, None).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(13, 1), 0.05);
+        for smp in src.take_samples(50) {
+            s.train(&smp.x, smp.y).unwrap();
+        }
+        let by_ref = s.snapshot().to_json();
+        let inline = {
+            // same state, inline map for comparison
+            let mut t = FilterSession::with_map(cfg, Arc::clone(s.map_arc()), None).unwrap();
+            for smp in NonlinearWiener::new(run_rng(13, 1), 0.05).take_samples(50) {
+                t.train(&smp.x, smp.y).unwrap();
+            }
+            t.snapshot().to_json()
+        };
+        assert!(
+            by_ref.len() * 2 < inline.len(),
+            "reference snapshot ({}) should be far smaller than inline ({})",
+            by_ref.len(),
+            inline.len()
+        );
+        let snap = SessionSnapshot::from_json(&by_ref).unwrap();
+        assert!(snap.map_spec().is_some());
+        let restored = FilterSession::restore(snap, Some(&registry), None).unwrap();
+        assert!(Arc::ptr_eq(restored.map_arc(), s.map_arc()));
+        assert_eq!(restored.theta(), s.theta());
+    }
+
+    #[test]
+    fn corrupt_snapshot_rejected() {
+        assert!(SessionSnapshot::from_json("{").is_err());
+        assert!(SessionSnapshot::from_json("{\"format\":1}").is_err());
+        assert!(SessionSnapshot::from_json("{\"format\":999}").is_err());
+        // state/config mismatch is an error, not a panic
+        let mut rng = run_rng(14, 0);
+        let s =
+            FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let text = s.snapshot().to_json().replace("native_klms", "native_krls");
+        // shape check catches it at parse (θ is not D² long for P)
+        assert!(SessionSnapshot::from_json(&text).is_err());
     }
 }

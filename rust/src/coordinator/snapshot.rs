@@ -1,0 +1,427 @@
+//! Versioned whole-session snapshots and the pluggable spill sinks the
+//! session store evicts through.
+//!
+//! A [`SessionSnapshot`] round-trips a complete
+//! [`FilterSession`](super::FilterSession): configuration, feature map
+//! (inline or as a registry reference — see
+//! [`MapPayload`](crate::kaf::checkpoint::MapPayload)), the learned
+//! state of **all four** session variants (native f64 θ / θ+P, PJRT f32
+//! θ / θ+P *including any buffered partial chunk rows*), and the running
+//! stats. The codec guarantees:
+//!
+//! * **Exactness.** Native f64 state round-trips bit-identically, so
+//!   snapshot → restore → train equals the uninterrupted run bitwise
+//!   (property-tested in `tests/snapshot_parity.rs`). f32 state is
+//!   stored through its exact f64 widening and also round-trips
+//!   bitwise.
+//! * **Versioning.** Documents carry `"format"` ([`SNAPSHOT_FORMAT`]);
+//!   other versions are rejected, never misparsed.
+//! * **Fleet-scale maps.** Sessions created from a
+//!   [`MapSpec`](crate::kaf::MapSpec) serialize the map as a reference
+//!   (config + seed), so a fleet snapshot stores Ω once — in the
+//!   registry, not in every document.
+//!
+//! [`SnapshotSink`] is where evicted sessions spill: [`MemorySink`]
+//! (tests, benches, cache-tier semantics) and [`DirSink`] (one JSON file
+//! per session, crash-tolerant tmp+rename writes).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Mutex, PoisonError};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::kaf::checkpoint::{
+    arr, arr_f32, get_arr, get_arr_f32, get_num, get_str, get_usize, kernel_from_json,
+    kernel_to_json, MapPayload,
+};
+use crate::kaf::MapSpec;
+use crate::util::json::JsonValue;
+
+use super::session::{Algo, Backend, SessionConfig};
+
+/// Session-snapshot format version written by this build.
+pub const SNAPSHOT_FORMAT: usize = 1;
+
+/// A serializable snapshot of one filter session's complete state.
+///
+/// Capture with [`FilterSession::snapshot`](super::FilterSession::snapshot),
+/// rebuild with [`FilterSession::restore`](super::FilterSession::restore).
+pub struct SessionSnapshot {
+    pub(crate) config: SessionConfig,
+    pub(crate) map: MapPayload,
+    pub(crate) state: SnapshotState,
+    pub(crate) samples_seen: usize,
+    pub(crate) sum_sq_err: f64,
+}
+
+/// Learned state of each `SessionState` variant, decoupled from the live
+/// filter objects so the codec has no construction side effects.
+pub(crate) enum SnapshotState {
+    /// Native f64 RFF-KLMS: θ.
+    NativeKlms { theta: Vec<f64> },
+    /// Native f64 RFF-KRLS: θ and row-major `[D, D]` P.
+    NativeKrls { theta: Vec<f64>, p: Vec<f64> },
+    /// PJRT f32 KLMS: θ plus the buffered partial chunk rows.
+    PjrtKlms { theta: Vec<f32>, buf_x: Vec<f32>, buf_y: Vec<f32> },
+    /// PJRT f32 KRLS: θ, P, and the buffered partial chunk rows.
+    PjrtKrls { theta: Vec<f32>, p: Vec<f32>, buf_x: Vec<f32>, buf_y: Vec<f32> },
+}
+
+fn algo_to_json(algo: Algo) -> JsonValue {
+    let mut obj = BTreeMap::new();
+    match algo {
+        Algo::RffKlms { mu } => {
+            obj.insert("type".into(), JsonValue::String("rffklms".into()));
+            obj.insert("mu".into(), JsonValue::Number(mu));
+        }
+        Algo::RffKrls { beta, lambda } => {
+            obj.insert("type".into(), JsonValue::String("rffkrls".into()));
+            obj.insert("beta".into(), JsonValue::Number(beta));
+            obj.insert("lambda".into(), JsonValue::Number(lambda));
+        }
+    }
+    JsonValue::Object(obj)
+}
+
+fn algo_from_json(v: &JsonValue) -> Result<Algo> {
+    match get_str(v, "type")? {
+        "rffklms" => Ok(Algo::RffKlms { mu: get_num(v, "mu")? }),
+        "rffkrls" => Ok(Algo::RffKrls { beta: get_num(v, "beta")?, lambda: get_num(v, "lambda")? }),
+        other => bail!("unknown algo '{other}'"),
+    }
+}
+
+fn config_to_json(config: &SessionConfig) -> JsonValue {
+    let mut obj = BTreeMap::new();
+    obj.insert("dim".into(), JsonValue::Number(config.dim as f64));
+    obj.insert("features".into(), JsonValue::Number(config.features as f64));
+    obj.insert("kernel".into(), kernel_to_json(config.kernel));
+    obj.insert("algo".into(), algo_to_json(config.algo));
+    let backend = match config.backend {
+        Backend::Native => "native",
+        Backend::Pjrt => "pjrt",
+    };
+    obj.insert("backend".into(), JsonValue::String(backend.into()));
+    JsonValue::Object(obj)
+}
+
+fn config_from_json(v: &JsonValue) -> Result<SessionConfig> {
+    let backend = match get_str(v, "backend")? {
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        other => bail!("unknown backend '{other}'"),
+    };
+    Ok(SessionConfig {
+        dim: get_usize(v, "dim")?,
+        features: get_usize(v, "features")?,
+        kernel: kernel_from_json(v.get("kernel").ok_or_else(|| anyhow!("missing kernel"))?)?,
+        algo: algo_from_json(v.get("algo").ok_or_else(|| anyhow!("missing algo"))?)?,
+        backend,
+    })
+}
+
+impl SessionSnapshot {
+    /// Session configuration carried by the snapshot.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    /// Applied-rows count at capture time.
+    pub fn samples_seen(&self) -> usize {
+        self.samples_seen
+    }
+
+    /// The map spec, when the map is stored by reference.
+    pub fn map_spec(&self) -> Option<MapSpec> {
+        self.map.spec()
+    }
+
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> String {
+        let mut state = BTreeMap::new();
+        match &self.state {
+            SnapshotState::NativeKlms { theta } => {
+                state.insert("type".into(), JsonValue::String("native_klms".into()));
+                state.insert("theta".into(), arr(theta.iter().copied()));
+            }
+            SnapshotState::NativeKrls { theta, p } => {
+                state.insert("type".into(), JsonValue::String("native_krls".into()));
+                state.insert("theta".into(), arr(theta.iter().copied()));
+                state.insert("p".into(), arr(p.iter().copied()));
+            }
+            SnapshotState::PjrtKlms { theta, buf_x, buf_y } => {
+                state.insert("type".into(), JsonValue::String("pjrt_klms".into()));
+                state.insert("theta".into(), arr_f32(theta));
+                state.insert("buf_x".into(), arr_f32(buf_x));
+                state.insert("buf_y".into(), arr_f32(buf_y));
+            }
+            SnapshotState::PjrtKrls { theta, p, buf_x, buf_y } => {
+                state.insert("type".into(), JsonValue::String("pjrt_krls".into()));
+                state.insert("theta".into(), arr_f32(theta));
+                state.insert("p".into(), arr_f32(p));
+                state.insert("buf_x".into(), arr_f32(buf_x));
+                state.insert("buf_y".into(), arr_f32(buf_y));
+            }
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("format".into(), JsonValue::Number(SNAPSHOT_FORMAT as f64));
+        obj.insert("config".into(), config_to_json(&self.config));
+        obj.insert("map".into(), self.map.to_json());
+        obj.insert("state".into(), JsonValue::Object(state));
+        obj.insert("samples_seen".into(), JsonValue::Number(self.samples_seen as f64));
+        obj.insert("sum_sq_err".into(), JsonValue::Number(self.sum_sq_err));
+        JsonValue::Object(obj).to_string_compact()
+    }
+
+    /// Parse and shape-check a snapshot document. The map is *not*
+    /// resolved here — [`FilterSession::restore`](super::FilterSession::restore)
+    /// resolves references through the registry it is given.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text).context("parsing session snapshot")?;
+        match v.get("format").and_then(|f| f.as_usize()) {
+            Some(SNAPSHOT_FORMAT) => {}
+            Some(other) => bail!(
+                "unsupported snapshot format {other} (this build reads format {SNAPSHOT_FORMAT})"
+            ),
+            None => bail!("session snapshot has no format field"),
+        }
+        let config =
+            config_from_json(v.get("config").ok_or_else(|| anyhow!("missing config"))?)?;
+        let map = MapPayload::from_json(v.get("map").ok_or_else(|| anyhow!("missing map"))?)?;
+        let sv = v.get("state").ok_or_else(|| anyhow!("missing state"))?;
+        let (d, feats) = (config.dim, config.features);
+        anyhow::ensure!(d > 0 && feats > 0, "invalid config shape");
+        let state = match get_str(sv, "type")? {
+            "native_klms" => SnapshotState::NativeKlms { theta: get_arr(sv, "theta")? },
+            "native_krls" => {
+                SnapshotState::NativeKrls { theta: get_arr(sv, "theta")?, p: get_arr(sv, "p")? }
+            }
+            "pjrt_klms" => SnapshotState::PjrtKlms {
+                theta: get_arr_f32(sv, "theta")?,
+                buf_x: get_arr_f32(sv, "buf_x")?,
+                buf_y: get_arr_f32(sv, "buf_y")?,
+            },
+            "pjrt_krls" => SnapshotState::PjrtKrls {
+                theta: get_arr_f32(sv, "theta")?,
+                p: get_arr_f32(sv, "p")?,
+                buf_x: get_arr_f32(sv, "buf_x")?,
+                buf_y: get_arr_f32(sv, "buf_y")?,
+            },
+            other => bail!("unknown snapshot state type '{other}'"),
+        };
+        // shape checks up front, so a corrupt document errors here rather
+        // than panicking inside a filter constructor during restore
+        let (theta_len, p_len, buf) = match &state {
+            SnapshotState::NativeKlms { theta } => (theta.len(), None, None),
+            SnapshotState::NativeKrls { theta, p } => (theta.len(), Some(p.len()), None),
+            SnapshotState::PjrtKlms { theta, buf_x, buf_y } => {
+                (theta.len(), None, Some((buf_x.len(), buf_y.len())))
+            }
+            SnapshotState::PjrtKrls { theta, p, buf_x, buf_y } => {
+                (theta.len(), Some(p.len()), Some((buf_x.len(), buf_y.len())))
+            }
+        };
+        anyhow::ensure!(theta_len == feats, "theta length does not match features");
+        if let Some(p_len) = p_len {
+            anyhow::ensure!(p_len == feats * feats, "P shape does not match features");
+        }
+        if let Some((bx, by)) = buf {
+            anyhow::ensure!(bx == by * d, "buffered chunk rows are not [n, dim]");
+        }
+        let samples_seen = get_usize(&v, "samples_seen")?;
+        let sum_sq_err = get_num(&v, "sum_sq_err")?;
+        Ok(Self { config, map, state, samples_seen, sum_sq_err })
+    }
+}
+
+// ---- spill sinks --------------------------------------------------------
+
+/// Where evicted sessions spill to, and restore from. Implementations
+/// must be safe for concurrent use from multiple router workers; the
+/// store serializes same-id accesses itself (per-shard locks), so a sink
+/// only needs whole-call atomicity per operation.
+pub trait SnapshotSink: Send + Sync {
+    /// Persist `snapshot` as the spilled state of session `id`,
+    /// overwriting any previous spill of the same id.
+    fn put(&self, id: u64, snapshot: &str) -> Result<()>;
+
+    /// Fetch the spilled snapshot of `id` (`None` when not spilled).
+    fn get(&self, id: u64) -> Result<Option<String>>;
+
+    /// Drop the spilled snapshot of `id` (no-op when absent).
+    fn delete(&self, id: u64) -> Result<()>;
+
+    /// Number of sessions currently spilled.
+    fn count(&self) -> usize;
+}
+
+/// In-memory sink: spilled sessions stay in RAM but in *serialized* form
+/// — a cache-tier demotion (θ-sized JSON instead of live filter state +
+/// lock + map handles). The default sink when no
+/// `snapshot_dir` is configured; also what tests and benches use.
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    snapshots: Mutex<BTreeMap<u64, String>>,
+}
+
+impl MemorySink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total serialized bytes currently held (the spilled-tier footprint).
+    pub fn bytes(&self) -> usize {
+        self.snapshots
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .values()
+            .map(|s| s.len())
+            .sum()
+    }
+}
+
+impl SnapshotSink for MemorySink {
+    fn put(&self, id: u64, snapshot: &str) -> Result<()> {
+        self.snapshots
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(id, snapshot.to_string());
+        Ok(())
+    }
+
+    fn get(&self, id: u64) -> Result<Option<String>> {
+        Ok(self
+            .snapshots
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(&id)
+            .cloned())
+    }
+
+    fn delete(&self, id: u64) -> Result<()> {
+        self.snapshots.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.snapshots.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+}
+
+/// On-disk sink: one `session-<id>.json` per spilled session under a
+/// directory. Writes go through a `.tmp` sibling and an atomic rename,
+/// so a crash mid-spill leaves either the old snapshot or none — never a
+/// torn file that restore would misparse.
+#[derive(Debug)]
+pub struct DirSink {
+    dir: PathBuf,
+}
+
+impl DirSink {
+    /// Sink rooted at `dir` (created on first spill).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// The sink's directory.
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    fn path(&self, id: u64) -> PathBuf {
+        // zero-padded so lexicographic directory order is id order
+        self.dir.join(format!("session-{id:020}.json"))
+    }
+}
+
+impl SnapshotSink for DirSink {
+    fn put(&self, id: u64, snapshot: &str) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating snapshot dir {}", self.dir.display()))?;
+        let path = self.path(id);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, snapshot)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+
+    fn get(&self, id: u64) -> Result<Option<String>> {
+        match std::fs::read_to_string(self.path(id)) {
+            Ok(text) => Ok(Some(text)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("reading snapshot of session {id}")),
+        }
+    }
+
+    fn delete(&self, id: u64) -> Result<()> {
+        match std::fs::remove_file(self.path(id)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| format!("deleting snapshot of session {id}")),
+        }
+    }
+
+    fn count(&self) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return 0; // not created yet ⇒ nothing spilled
+        };
+        entries
+            .flatten()
+            .filter(|e| {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                name.starts_with("session-") && name.ends_with(".json")
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_sink_roundtrip() {
+        let sink = MemorySink::new();
+        assert_eq!(sink.count(), 0);
+        assert_eq!(sink.get(1).unwrap(), None);
+        sink.put(1, "alpha").unwrap();
+        sink.put(2, "beta").unwrap();
+        sink.put(1, "alpha2").unwrap(); // overwrite
+        assert_eq!(sink.count(), 2);
+        assert_eq!(sink.get(1).unwrap().as_deref(), Some("alpha2"));
+        assert_eq!(sink.bytes(), "alpha2".len() + "beta".len());
+        sink.delete(1).unwrap();
+        sink.delete(1).unwrap(); // idempotent
+        assert_eq!(sink.count(), 1);
+    }
+
+    #[test]
+    fn dir_sink_roundtrip() {
+        let dir = std::env::temp_dir().join("rffkaf_dirsink_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = DirSink::new(&dir);
+        assert_eq!(sink.count(), 0); // dir not created yet
+        assert_eq!(sink.get(7).unwrap(), None);
+        sink.put(7, "{\"x\":1}").unwrap();
+        sink.put(9, "{\"y\":2}").unwrap();
+        assert_eq!(sink.count(), 2);
+        assert_eq!(sink.get(7).unwrap().as_deref(), Some("{\"x\":1}"));
+        sink.delete(7).unwrap();
+        sink.delete(7).unwrap();
+        assert_eq!(sink.count(), 1);
+        assert_eq!(sink.get(7).unwrap(), None);
+        // no stray tmp files after a successful publish
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,52 +1,144 @@
-//! Sharded, per-session-locked session store — the concurrency substrate
-//! of the coordinator service.
+//! Sharded, per-session-locked session store with idle-LRU spill — the
+//! concurrency and residency substrate of the coordinator service.
 //!
 //! The paper's fixed-size-θ property means every session is a small,
-//! self-contained `(θ, Ω, b)` state with O(D) updates; nothing about one
-//! session's train touches another's. The store mirrors that in the lock
+//! self-contained state with O(D) updates; nothing about one session's
+//! train touches another's. The store mirrors that in the lock
 //! structure: session ids hash onto `N` shards, each shard is a
-//! `Mutex<BTreeMap<u64, Arc<Mutex<FilterSession>>>>`, and all mutation of
-//! a session happens under that session's *own* mutex.
+//! `Mutex<BTreeMap<u64, Resident>>`, and all mutation of a session
+//! happens under that session's *own* mutex.
+//!
+//! The same property makes sessions *evictable*: a session's complete
+//! state serializes to a [`SessionSnapshot`] of known size, so when a
+//! resident cap is configured ([`SpillConfig`]) the least-recently-
+//! touched session spills to a [`SnapshotSink`] and the store restores
+//! it transparently on its next touch. Snapshot → evict → restore →
+//! train is bitwise identical to the uninterrupted run (native), so
+//! callers cannot observe eviction except through latency and the
+//! [`SpillStats`] counters.
 //!
 //! Locking contract (also documented on [`crate::coordinator`]):
 //!
-//! * **Shard locks** are held only for map operations — insert, remove,
-//!   id lookup, len. Never while training, predicting or dispatching.
+//! * **Shard locks** are held for map operations — insert, remove, id
+//!   lookup, len — and for the decode + re-insert of a spilled session
+//!   on touch (so a racing double-touch restores exactly once). Never
+//!   while training, predicting or dispatching.
 //! * **Session locks** are held for exactly one train/flush call, or just
 //!   long enough to snapshot predict state ([`super::session::PredictState`]).
-//!   No predict — PJRT batch or native per-row — runs under any lock;
-//!   only a session's own train (which on the PJRT backend may dispatch
-//!   a chunk) holds that session's lock.
-//! * Lock order is always shard → session; no path ever takes two shard
-//!   locks or two session locks at once, so deadlock is impossible.
+//! * **The eviction set** (`Mutex<BTreeSet<u64>>`) names sessions whose
+//!   spill is in flight: unlinked from their shard but not yet in the
+//!   sink. Touches of those ids spin briefly, then restore from the
+//!   sink. Acquired only alone or under a shard lock (order: shard →
+//!   eviction set); session locks are never taken under either, so
+//!   deadlock is impossible.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
+use crate::kaf::MapRegistry;
+use crate::runtime::ExecutorHandle;
+
 use super::session::FilterSession;
+use super::snapshot::{SessionSnapshot, SnapshotSink};
 
 /// A shared, mutably-lockable session slot handed out by the store.
 /// Crate-private: see [`SessionStore::get`] for why cells never escape.
 pub(crate) type SessionCell = Arc<Mutex<FilterSession>>;
 
-type Shard = Mutex<BTreeMap<u64, SessionCell>>;
+/// One resident session: its cell plus the LRU touch stamp (mutated only
+/// under the owning shard's lock).
+struct Resident {
+    cell: SessionCell,
+    last_touch: u64,
+}
 
-/// Sharded map from session id to independently locked [`FilterSession`].
+type Shard = Mutex<BTreeMap<u64, Resident>>;
+
+/// Spill policy: the resident cap and where evicted sessions go.
+pub struct SpillConfig {
+    /// Maximum resident (live, unlocked-or-locked) sessions; the
+    /// least-recently-touched session beyond this spills. Must be ≥ 1.
+    pub max_resident: usize,
+    /// Where snapshots spill to / restore from.
+    pub sink: Arc<dyn SnapshotSink>,
+    /// Resolves reference-mode map payloads on restore, so restored
+    /// sessions share the fleet's interned `(Ω, b)`.
+    pub registry: Arc<MapRegistry>,
+    /// Needed to rebuild PJRT-backend sessions on restore.
+    pub executor: Option<ExecutorHandle>,
+    /// Eviction/restore counters (shared with
+    /// [`super::ServiceStats`]).
+    pub stats: Arc<SpillStats>,
+}
+
+/// Spill bookkeeping. Steady-state invariant:
+/// `evictions == restores + currently-spilled`; after every session has
+/// been removed (removes restore spilled sessions), `evictions ==
+/// restores` exactly.
+#[derive(Debug, Default)]
+pub struct SpillStats {
+    /// Sessions evicted to the sink.
+    pub evictions: AtomicU64,
+    /// Sessions restored from the sink (on touch or removal).
+    pub restores: AtomicU64,
+    /// Spilled snapshots that failed to load/decode (session stays in
+    /// the sink; the touch reported "no session").
+    pub restore_failures: AtomicU64,
+    /// Evictions whose sink write failed (the session was re-admitted,
+    /// not lost).
+    pub eviction_failures: AtomicU64,
+}
+
+enum Lookup {
+    Found(SessionCell),
+    /// Found in the sink and re-admitted: caller must re-enforce the cap.
+    Restored(SessionCell),
+    Absent,
+    /// Mid-eviction: unlinked but not yet in the sink — retry shortly.
+    MidEviction,
+}
+
+/// Sharded map from session id to independently locked [`FilterSession`],
+/// with optional idle-LRU spill.
 pub struct SessionStore {
     shards: Vec<Shard>,
     /// `shards.len() - 1`; the shard count is a power of two so the
     /// hash→shard reduction is a mask, not a modulo.
     mask: u64,
+    /// Monotonic LRU clock (ticks on every touch).
+    clock: AtomicU64,
+    /// Resident-session count (maintained eagerly so the cap check is a
+    /// load, not an all-shards scan).
+    resident: AtomicUsize,
+    /// Ids whose eviction is in flight. See the module docs.
+    evicting: Mutex<BTreeSet<u64>>,
+    spill: Option<SpillConfig>,
 }
 
 impl SessionStore {
     /// Store with at least `shards` shards (rounded up to a power of two,
-    /// minimum 1).
+    /// minimum 1) and unbounded residency (no spill).
     pub fn new(shards: usize) -> Self {
+        Self::build(shards, None)
+    }
+
+    /// Store with idle-LRU spill: at most `spill.max_resident` sessions
+    /// stay live; the rest round-trip through `spill.sink`.
+    pub fn with_spill(shards: usize, spill: SpillConfig) -> Self {
+        assert!(spill.max_resident >= 1, "max_resident must be at least 1");
+        Self::build(shards, Some(spill))
+    }
+
+    fn build(shards: usize, spill: Option<SpillConfig>) -> Self {
         let n = shards.max(1).next_power_of_two();
         Self {
             shards: (0..n).map(|_| Mutex::new(BTreeMap::new())).collect(),
             mask: (n - 1) as u64,
+            clock: AtomicU64::new(0),
+            resident: AtomicUsize::new(0),
+            evicting: Mutex::new(BTreeSet::new()),
+            spill,
         }
     }
 
@@ -68,65 +160,327 @@ impl SessionStore {
         &self.shards[self.shard_index(id)]
     }
 
-    /// Insert `session` under `id` (replacing any previous occupant).
-    /// Crate-private: ids are allocated by `CoordinatorService`'s counter;
-    /// outside inserts could silently clobber a live session.
-    pub(crate) fn insert(&self, id: u64, session: FilterSession) {
-        self.shard_for(id)
-            .lock()
-            .unwrap_or_else(PoisonError::into_inner)
-            .insert(id, Arc::new(Mutex::new(session)));
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Clone the session cell for `id`. Callers lock the returned cell to
-    /// train/flush or snapshot; the shard lock is released before this
-    /// function returns.
+    fn decode(spill: &SpillConfig, text: &str) -> anyhow::Result<FilterSession> {
+        let snap = SessionSnapshot::from_json(text)?;
+        FilterSession::restore(snap, Some(&spill.registry), spill.executor.clone())
+    }
+
+    /// Insert `session` under `id` (replacing any previous occupant, and
+    /// discarding any stale spilled snapshot of the same id). May evict
+    /// the LRU session when a cap is configured. Crate-private: ids are
+    /// allocated by `CoordinatorService`'s counter; outside inserts could
+    /// silently clobber a live session.
+    pub(crate) fn insert(&self, id: u64, session: FilterSession) {
+        let stamp = self.tick();
+        let mut spins = 0u32;
+        loop {
+            let mut shard = self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(spill) = &self.spill {
+                // an in-flight eviction of the same id would land its
+                // snapshot in the sink *after* our delete below, leaving a
+                // stale spill that a later touch could resurrect — wait it
+                // out first (rare: only explicit re-inserts race evictions)
+                if self.evicting.lock().unwrap_or_else(PoisonError::into_inner).contains(&id) {
+                    drop(shard);
+                    Self::backoff(&mut spins);
+                    continue;
+                }
+                // a re-used id must not resurrect a stale snapshot later
+                let _ = spill.sink.delete(id);
+            }
+            let prev = shard.insert(
+                id,
+                Resident { cell: Arc::new(Mutex::new(session)), last_touch: stamp },
+            );
+            if prev.is_none() {
+                self.resident.fetch_add(1, Ordering::Relaxed);
+            }
+            break;
+        }
+        self.enforce_cap();
+    }
+
+    /// Clone the session cell for `id`, restoring it from the spill sink
+    /// if it was evicted. Callers lock the returned cell to train/flush
+    /// or snapshot; all store locks are released before this function
+    /// returns.
     ///
     /// Crate-private on purpose: a caller that retained a cell while also
     /// calling [`SessionStore::remove`] on the same thread would deadlock
     /// that removal (it waits for the last outside reference to drop), so
     /// cells never leave the crate — router workers hold one per request.
     pub(crate) fn get(&self, id: u64) -> Option<SessionCell> {
-        self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner).get(&id).cloned()
+        let mut spins = 0u32;
+        loop {
+            match self.lookup(id) {
+                Lookup::Found(cell) => return Some(cell),
+                Lookup::Restored(cell) => {
+                    // the restore pushed us over the cap: evict someone
+                    // (never the just-restored session — it is MRU)
+                    self.enforce_cap();
+                    return Some(cell);
+                }
+                Lookup::Absent => return None,
+                Lookup::MidEviction => Self::backoff(&mut spins),
+            }
+        }
     }
 
-    /// Remove the session under `id` and return it by value.
+    fn lookup(&self, id: u64) -> Lookup {
+        let mut shard = self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(r) = shard.get_mut(&id) {
+            r.last_touch = self.tick();
+            return Lookup::Found(Arc::clone(&r.cell));
+        }
+        let Some(spill) = &self.spill else { return Lookup::Absent };
+        if self.evicting.lock().unwrap_or_else(PoisonError::into_inner).contains(&id) {
+            return Lookup::MidEviction;
+        }
+        // Not resident, not mid-eviction: restore from the sink if it is
+        // there. Decoding under the shard lock serializes racing touches
+        // of the same id — exactly one restore happens. Known trade-off:
+        // other sessions on this shard stall for the decode (KRLS at
+        // D=300 parses a ~MB document); acceptable at 16 shards, and a
+        // `restoring` rendezvous (decode outside the lock, mirroring
+        // `evict`) is the escape hatch if cold-restore tails ever matter.
+        let text = match spill.sink.get(id) {
+            Ok(Some(text)) => text,
+            Ok(None) => return Lookup::Absent,
+            Err(_) => {
+                spill.stats.restore_failures.fetch_add(1, Ordering::Relaxed);
+                return Lookup::Absent;
+            }
+        };
+        match Self::decode(spill, &text) {
+            Ok(session) => {
+                let _ = spill.sink.delete(id);
+                let cell = Arc::new(Mutex::new(session));
+                let stamp = self.tick();
+                shard.insert(id, Resident { cell: Arc::clone(&cell), last_touch: stamp });
+                self.resident.fetch_add(1, Ordering::Relaxed);
+                spill.stats.restores.fetch_add(1, Ordering::Relaxed);
+                Lookup::Restored(cell)
+            }
+            Err(_) => {
+                // snapshot stays in the sink for forensics; the touch
+                // observes "no session"
+                spill.stats.restore_failures.fetch_add(1, Ordering::Relaxed);
+                Lookup::Absent
+            }
+        }
+    }
+
+    /// Remove the session under `id` and return it by value, restoring
+    /// it from the spill sink when evicted.
     ///
     /// Router workers hold cell clones only for the duration of a single
     /// request, so after unlinking the id from its shard we wait until
     /// our `Arc` is the last reference, then unwrap it. The wait yields
     /// first and falls back to short sleeps, so a request still in flight
     /// on the session parks this thread briefly instead of burning a
-    /// core. Workers drop their cell clone at the end of each request, so
-    /// the wait is bounded by one train/flush/snapshot. Crate-private:
-    /// use [`crate::coordinator::CoordinatorService::remove_session`].
+    /// core. Crate-private: use
+    /// [`crate::coordinator::CoordinatorService::remove_session`].
     pub(crate) fn remove(&self, id: u64) -> Option<FilterSession> {
-        let mut cell =
-            self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner).remove(&id)?;
+        let mut spins = 0u32;
+        loop {
+            {
+                let mut shard =
+                    self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner);
+                if let Some(r) = shard.remove(&id) {
+                    drop(shard);
+                    self.resident.fetch_sub(1, Ordering::Relaxed);
+                    return Some(Self::unwrap_wait(r.cell));
+                }
+                let spill = self.spill.as_ref()?;
+                if !self.evicting.lock().unwrap_or_else(PoisonError::into_inner).contains(&id)
+                {
+                    // settled: either spilled (restore and hand back) or
+                    // truly absent
+                    let text = match spill.sink.get(id) {
+                        Ok(Some(text)) => text,
+                        Ok(None) => return None,
+                        Err(_) => {
+                            spill.stats.restore_failures.fetch_add(1, Ordering::Relaxed);
+                            return None;
+                        }
+                    };
+                    return match Self::decode(spill, &text) {
+                        Ok(session) => {
+                            let _ = spill.sink.delete(id);
+                            spill.stats.restores.fetch_add(1, Ordering::Relaxed);
+                            Some(session)
+                        }
+                        Err(_) => {
+                            spill.stats.restore_failures.fetch_add(1, Ordering::Relaxed);
+                            None
+                        }
+                    };
+                }
+            }
+            // mid-eviction: the spill completes shortly, then the sink has it
+            Self::backoff(&mut spins);
+        }
+    }
+
+    /// Serialized snapshot of session `id`, without disturbing residency:
+    /// resident sessions serialize under their own lock (no LRU touch —
+    /// reading a checkpoint is not "use"); spilled sessions return the
+    /// sink's document directly instead of faulting megabytes of state
+    /// resident (and evicting someone else) just to re-serialize it.
+    pub fn snapshot_json(&self, id: u64) -> Option<String> {
+        let mut spins = 0u32;
+        loop {
+            {
+                let shard = self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner);
+                if let Some(r) = shard.get(&id) {
+                    let cell = Arc::clone(&r.cell);
+                    drop(shard);
+                    // shard lock released before the session lock, per the
+                    // locking contract
+                    let session = cell.lock().unwrap_or_else(PoisonError::into_inner);
+                    return Some(session.snapshot().to_json());
+                }
+                let spill = self.spill.as_ref()?;
+                if !self.evicting.lock().unwrap_or_else(PoisonError::into_inner).contains(&id)
+                {
+                    return spill.sink.get(id).ok().flatten();
+                }
+            }
+            Self::backoff(&mut spins);
+        }
+    }
+
+    /// Yield for the first attempts, then park briefly — the same
+    /// escalation [`Self::unwrap_wait`] uses, shared by every
+    /// mid-eviction retry loop so spinners never burn a core for the
+    /// duration of a slow spill (an in-flight train + a disk write).
+    fn backoff(spins: &mut u32) {
+        *spins += 1;
+        if *spins < 64 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+
+    /// Wait until `cell` is the last reference, then unwrap the session.
+    fn unwrap_wait(mut cell: SessionCell) -> FilterSession {
         let mut spins = 0u32;
         loop {
             match Arc::try_unwrap(cell) {
-                Ok(m) => return Some(m.into_inner().unwrap_or_else(PoisonError::into_inner)),
+                Ok(m) => return m.into_inner().unwrap_or_else(PoisonError::into_inner),
                 Err(still_shared) => {
                     cell = still_shared;
-                    spins += 1;
-                    if spins < 64 {
-                        std::thread::yield_now();
-                    } else {
-                        std::thread::sleep(std::time::Duration::from_micros(100));
-                    }
+                    Self::backoff(&mut spins);
                 }
             }
         }
     }
 
-    /// Total number of live sessions (sums shard lengths; takes each
-    /// shard lock in turn, never two at once).
+    /// Evict LRU sessions until the resident count honors the cap.
+    /// Attempts are bounded so a touch storm (every candidate touched
+    /// between selection and unlink) cannot wedge a worker here.
+    fn enforce_cap(&self) {
+        let Some(spill) = &self.spill else { return };
+        for _ in 0..64 {
+            if self.resident.load(Ordering::Relaxed) <= spill.max_resident {
+                return;
+            }
+            let Some((id, stamp)) = self.lru_candidate() else { return };
+            if !self.evict(spill, id, stamp) {
+                return; // sink failure: stop evicting rather than spin
+            }
+        }
+    }
+
+    /// The resident session with the smallest touch stamp. A full scan,
+    /// but of *resident* entries only — O(`max_resident`), not O(total
+    /// sessions) — taking one shard lock at a time; per eviction this is
+    /// microseconds against the snapshot serialize/parse that dominates
+    /// every spill. Revisit with a stamp-ordered index only if profiles
+    /// ever show otherwise.
+    fn lru_candidate(&self) -> Option<(u64, u64)> {
+        let mut best: Option<(u64, u64)> = None;
+        for shard in &self.shards {
+            let m = shard.lock().unwrap_or_else(PoisonError::into_inner);
+            for (&id, r) in m.iter() {
+                match best {
+                    Some((_, t)) if r.last_touch >= t => {}
+                    _ => best = Some((id, r.last_touch)),
+                }
+            }
+        }
+        best
+    }
+
+    /// Spill one session: unlink (iff untouched since selection), wait
+    /// out in-flight borrowers so the snapshot holds every applied row,
+    /// serialize, sink. Returns false only on a sink write failure (the
+    /// session is re-admitted, not lost).
+    fn evict(&self, spill: &SpillConfig, id: u64, stamp: u64) -> bool {
+        let cell = {
+            let mut shard = self.shard_for(id).lock().unwrap_or_else(PoisonError::into_inner);
+            let untouched = matches!(shard.get(&id), Some(r) if r.last_touch == stamp);
+            if !untouched {
+                // touched or removed since selection — not idle after all
+                return true;
+            }
+            // order: shard → eviction set (see module docs)
+            self.evicting.lock().unwrap_or_else(PoisonError::into_inner).insert(id);
+            shard.remove(&id).expect("present above").cell
+        };
+        self.resident.fetch_sub(1, Ordering::Relaxed);
+        let session = Self::unwrap_wait(cell);
+        let text = session.snapshot().to_json();
+        let ok = spill.sink.put(id, &text).is_ok();
+        if ok {
+            spill.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // a failing sink must not lose the session: re-admit it
+            spill.stats.eviction_failures.fetch_add(1, Ordering::Relaxed);
+            let stamp = self.tick();
+            self.shard_for(id)
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .insert(id, Resident { cell: Arc::new(Mutex::new(session)), last_touch: stamp });
+            self.resident.fetch_add(1, Ordering::Relaxed);
+        }
+        self.evicting.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
+        ok
+    }
+
+    /// Currently resident (live) sessions.
+    pub fn resident_count(&self) -> usize {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// Sessions currently spilled to the sink.
+    pub fn spilled_count(&self) -> usize {
+        self.spill.as_ref().map_or(0, |s| s.sink.count())
+    }
+
+    /// Total number of live sessions — resident, spilled, and
+    /// mid-eviction. Advisory under concurrent eviction: there is an
+    /// instants-wide window (sink write landed, eviction-set entry not
+    /// yet cleared) where one session can be counted in both tiers, so
+    /// treat this as a monitoring number; exact counts come from
+    /// quiescent states (every test asserts it that way).
     pub fn len(&self) -> usize {
-        self.shards
+        let resident: usize = self
+            .shards
             .iter()
             .map(|s| s.lock().unwrap_or_else(PoisonError::into_inner).len())
-            .sum()
+            .sum();
+        let in_flight = if self.spill.is_some() {
+            self.evicting.lock().unwrap_or_else(PoisonError::into_inner).len()
+        } else {
+            0
+        };
+        resident + in_flight + self.spilled_count()
     }
 
     /// True when no sessions are registered.
@@ -139,11 +493,31 @@ impl SessionStore {
 mod tests {
     use super::*;
     use crate::coordinator::session::SessionConfig;
+    use crate::coordinator::MemorySink;
     use crate::rng::run_rng;
 
     fn session(seed: u64) -> FilterSession {
         let mut rng = run_rng(seed, 0);
         FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap()
+    }
+
+    fn small_cfg() -> SessionConfig {
+        SessionConfig { features: 16, ..SessionConfig::paper_default() }
+    }
+
+    fn spilled_store(max_resident: usize) -> (SessionStore, Arc<SpillStats>) {
+        let stats = Arc::new(SpillStats::default());
+        let store = SessionStore::with_spill(
+            4,
+            SpillConfig {
+                max_resident,
+                sink: Arc::new(MemorySink::new()),
+                registry: Arc::new(MapRegistry::new()),
+                executor: None,
+                stats: Arc::clone(&stats),
+            },
+        );
+        (store, stats)
     }
 
     #[test]
@@ -220,5 +594,92 @@ mod tests {
         let s = store.remove(1).unwrap();
         assert_eq!(s.samples_seen(), 0);
         borrower.join().unwrap();
+    }
+
+    #[test]
+    fn cap_evicts_lru_and_touch_restores() {
+        use crate::signal::{NonlinearWiener, SignalSource};
+        let (store, stats) = spilled_store(2);
+        let mut rng = run_rng(50, 0);
+        for id in 0..3u64 {
+            store.insert(id, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        }
+        // 3 inserted, cap 2: the LRU (id 0, inserted first) spilled
+        assert_eq!(store.resident_count(), 2);
+        assert_eq!(store.spilled_count(), 1);
+        assert_eq!(store.len(), 3);
+        assert_eq!(stats.evictions.load(Ordering::Relaxed), 1);
+        assert!(store.get(1).is_some()); // resident hit, no restore
+        assert_eq!(stats.restores.load(Ordering::Relaxed), 0);
+
+        // train through an evict/restore cycle: touch id 0 → it restores
+        // (and someone else spills)
+        let mut src = NonlinearWiener::new(run_rng(50, 1), 0.05);
+        let samples = src.take_samples(20);
+        for smp in &samples {
+            let cell = store.get(0).unwrap();
+            cell.lock().unwrap().train(&smp.x, smp.y).unwrap();
+        }
+        assert_eq!(stats.restores.load(Ordering::Relaxed), 1);
+        assert_eq!(store.resident_count(), 2);
+        assert_eq!(store.len(), 3);
+        // the trained rows survived the spill round-trips
+        let s0 = store.remove(0).unwrap();
+        assert_eq!(s0.samples_seen(), 20);
+        // removing spilled sessions restores them: in the end,
+        // evictions == restores exactly
+        assert!(store.remove(1).is_some());
+        assert!(store.remove(2).is_some());
+        assert!(store.is_empty());
+        assert_eq!(
+            stats.evictions.load(Ordering::Relaxed),
+            stats.restores.load(Ordering::Relaxed)
+        );
+        assert_eq!(stats.restore_failures.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn eviction_prefers_least_recently_touched() {
+        let (store, _) = spilled_store(2);
+        let mut rng = run_rng(51, 0);
+        store.insert(1, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        store.insert(2, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        // touch 1 so 2 becomes LRU, then overflow
+        assert!(store.get(1).is_some());
+        store.insert(3, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        assert_eq!(store.resident_count(), 2);
+        // id 2 spilled; 1 and 3 resident — verify without get() (which
+        // would restore): spilled_count is 1 and touching 1/3 causes no
+        // restore
+        assert_eq!(store.spilled_count(), 1);
+        assert!(store.get(1).is_some());
+        assert!(store.get(3).is_some());
+        assert_eq!(store.spilled_count(), 1); // still only id 2 out
+    }
+
+    #[test]
+    fn spilled_session_restores_evicting_another() {
+        let (store, stats) = spilled_store(1);
+        let mut rng = run_rng(52, 0);
+        store.insert(1, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        store.insert(2, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        assert_eq!((store.resident_count(), store.spilled_count()), (1, 1));
+        // touch the spilled one: it comes back, the other goes out
+        assert!(store.get(1).is_some());
+        assert_eq!((store.resident_count(), store.spilled_count()), (1, 1));
+        assert_eq!(stats.restores.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.evictions.load(Ordering::Relaxed), 2);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn no_spill_means_unbounded_residency() {
+        let store = SessionStore::new(2);
+        for id in 0..16u64 {
+            store.insert(id, session(id));
+        }
+        assert_eq!(store.len(), 16);
+        assert_eq!(store.resident_count(), 16);
+        assert_eq!(store.spilled_count(), 0);
     }
 }

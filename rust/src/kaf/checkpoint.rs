@@ -1,25 +1,55 @@
-//! Checkpointing: serialize an RFF filter's complete state — `(Ω, b, θ)`
-//! and hyperparameters — to JSON and restore it bit-identically (f64
-//! round-trips through our exact decimal formatter).
+//! Checkpointing: the versioned JSON codec for RFF filter state, and the
+//! shared serialization substrate of the coordinator's session snapshots
+//! (`coordinator::SessionSnapshot`).
 //!
 //! This is the production feature the fixed-size parameterization makes
 //! trivial (the paper's intro point): a dictionary-based filter would
-//! need its full center list serialized; an RFF filter is three flat
-//! arrays of known size.
+//! need its full center list serialized; an RFF filter is a few flat
+//! arrays of known size. Two further properties shape the format:
+//!
+//! * **Versioned.** Every document carries a `"format"` field
+//!   ([`CHECKPOINT_FORMAT`]); loaders reject other versions and the
+//!   pre-versioning ad-hoc layout outright instead of misparsing it.
+//! * **Map by value or by name.** The frozen `(Ω, b)` can be serialized
+//!   inline (self-contained, portable) or as a [`MapPayload::Reference`]
+//!   — just the [`MapSpec`] `(kernel, d, D, seed)` — because the draw is
+//!   deterministic. A fleet snapshot of N same-config sessions then
+//!   stores Ω once (in the registry, not the snapshots) instead of N
+//!   times; restore resolves the spec through a [`MapRegistry`] so the
+//!   restored filter *shares* the fleet's interned map.
+//!
+//! f64 state round-trips bit-identically (numbers are written with
+//! Rust's shortest-round-trip float formatting); f32 state is stored
+//! through its exact f64 widening, which also round-trips bitwise.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use super::kernels::Kernel;
+use super::map_registry::{MapRegistry, MapSpec};
 use super::rff::RffMap;
-use super::{RffKlms, RffKrls};
+use super::{RffKlms, RffKrls, RffNlms};
 use crate::util::json::JsonValue;
 
-fn arr(values: impl IntoIterator<Item = f64>) -> JsonValue {
+/// Format version written by this build. History: the unversioned seed
+/// layout (retroactively "format 1") had no `format` field, no NLMS
+/// support and inline-only maps; format 2 added all three.
+pub const CHECKPOINT_FORMAT: usize = 2;
+
+// ---- JSON helpers shared with coordinator::snapshot ---------------------
+
+pub(crate) fn arr(values: impl IntoIterator<Item = f64>) -> JsonValue {
     JsonValue::Array(values.into_iter().map(JsonValue::Number).collect())
 }
 
-fn get_arr(v: &JsonValue, key: &str) -> Result<Vec<f64>> {
+/// f32 slices are stored through their exact f64 widening.
+pub(crate) fn arr_f32(values: &[f32]) -> JsonValue {
+    arr(values.iter().map(|&v| v as f64))
+}
+
+pub(crate) fn get_arr(v: &JsonValue, key: &str) -> Result<Vec<f64>> {
     v.get(key)
         .and_then(|a| a.as_array())
         .ok_or_else(|| anyhow!("checkpoint missing array '{key}'"))?
@@ -28,94 +58,281 @@ fn get_arr(v: &JsonValue, key: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
-fn get_num(v: &JsonValue, key: &str) -> Result<f64> {
+pub(crate) fn get_arr_f32(v: &JsonValue, key: &str) -> Result<Vec<f32>> {
+    Ok(get_arr(v, key)?.into_iter().map(|x| x as f32).collect())
+}
+
+pub(crate) fn get_num(v: &JsonValue, key: &str) -> Result<f64> {
     v.get(key)
         .and_then(|x| x.as_f64())
         .ok_or_else(|| anyhow!("checkpoint missing number '{key}'"))
 }
 
-fn map_to_json(map: &RffMap) -> JsonValue {
-    let mut omega_flat = Vec::with_capacity(map.dim() * map.features());
-    for i in 0..map.features() {
-        omega_flat.extend_from_slice(map.omega(i));
+pub(crate) fn get_usize(v: &JsonValue, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| anyhow!("checkpoint missing integer '{key}'"))
+}
+
+pub(crate) fn get_str<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("checkpoint missing string '{key}'"))
+}
+
+/// Check the document's `"format"` field against [`CHECKPOINT_FORMAT`].
+pub(crate) fn check_format(v: &JsonValue) -> Result<()> {
+    match v.get("format").and_then(|f| f.as_usize()) {
+        Some(CHECKPOINT_FORMAT) => Ok(()),
+        Some(other) => bail!(
+            "unsupported checkpoint format {other} (this build reads format {CHECKPOINT_FORMAT})"
+        ),
+        None => bail!(
+            "checkpoint has no format field (pre-versioning layout); \
+             re-save it with a current build"
+        ),
     }
+}
+
+/// Kernel codec: `{"type": "gaussian"|"laplacian", "sigma": σ}`.
+pub(crate) fn kernel_to_json(kernel: Kernel) -> JsonValue {
+    let (kind, sigma) = match kernel {
+        Kernel::Gaussian { sigma } => ("gaussian", sigma),
+        Kernel::Laplacian { sigma } => ("laplacian", sigma),
+    };
     let mut obj = BTreeMap::new();
-    obj.insert("dim".into(), JsonValue::Number(map.dim() as f64));
-    obj.insert("omega".into(), arr(omega_flat));
-    obj.insert("phases".into(), arr(map.phases().iter().copied()));
+    obj.insert("type".into(), JsonValue::String(kind.into()));
+    obj.insert("sigma".into(), JsonValue::Number(sigma));
     JsonValue::Object(obj)
 }
 
-fn map_from_json(v: &JsonValue) -> Result<RffMap> {
-    let dim = get_num(v, "dim")? as usize;
-    let omega = get_arr(v, "omega")?;
-    let phases = get_arr(v, "phases")?;
-    anyhow::ensure!(dim > 0 && !phases.is_empty(), "invalid map checkpoint");
-    anyhow::ensure!(omega.len() == dim * phases.len(), "omega/phases length mismatch");
-    Ok(RffMap::from_parts(omega, phases, dim))
+pub(crate) fn kernel_from_json(v: &JsonValue) -> Result<Kernel> {
+    let sigma = get_num(v, "sigma")?;
+    anyhow::ensure!(sigma > 0.0 && sigma.is_finite(), "kernel sigma must be positive");
+    match get_str(v, "type")? {
+        "gaussian" => Ok(Kernel::Gaussian { sigma }),
+        "laplacian" => Ok(Kernel::Laplacian { sigma }),
+        other => bail!("unknown kernel type '{other}'"),
+    }
 }
 
-/// Serialize an [`RffKlms`] filter (map + θ + μ) to a JSON string.
-pub fn save_rffklms(filter: &RffKlms) -> String {
+// ---- map payload --------------------------------------------------------
+
+/// How a checkpoint carries the frozen feature map.
+pub enum MapPayload {
+    /// The full `(Ω, b)` arrays — self-contained, restorable anywhere.
+    Inline(Arc<RffMap>),
+    /// The [`MapSpec`] naming a deterministic draw — a few numbers
+    /// instead of O(dD) floats. Restore re-draws (or better, resolves
+    /// the spec through a [`MapRegistry`] so the restored filter shares
+    /// the already-interned map).
+    Reference(MapSpec),
+}
+
+impl MapPayload {
+    /// The spec, when this payload is a reference.
+    pub fn spec(&self) -> Option<MapSpec> {
+        match self {
+            MapPayload::Inline(_) => None,
+            MapPayload::Reference(spec) => Some(*spec),
+        }
+    }
+
+    /// Resolve to a shareable map: references intern through `registry`
+    /// (drawing standalone when none is given); inline maps are returned
+    /// as-is.
+    pub fn resolve(self, registry: Option<&MapRegistry>) -> Arc<RffMap> {
+        match self {
+            MapPayload::Inline(map) => map,
+            MapPayload::Reference(spec) => match registry {
+                Some(reg) => reg.get_or_draw(&spec),
+                None => Arc::new(spec.draw()),
+            },
+        }
+    }
+
+    /// Serialize (`"mode"` discriminates inline vs reference; the seed is
+    /// a decimal *string* — JSON numbers are f64 and would corrupt seeds
+    /// above 2⁵³).
+    pub fn to_json(&self) -> JsonValue {
+        let mut obj = BTreeMap::new();
+        match self {
+            MapPayload::Inline(map) => {
+                let mut omega_flat = Vec::with_capacity(map.dim() * map.features());
+                for i in 0..map.features() {
+                    omega_flat.extend_from_slice(map.omega(i));
+                }
+                obj.insert("mode".into(), JsonValue::String("inline".into()));
+                obj.insert("dim".into(), JsonValue::Number(map.dim() as f64));
+                obj.insert("omega".into(), arr(omega_flat));
+                obj.insert("phases".into(), arr(map.phases().iter().copied()));
+            }
+            MapPayload::Reference(spec) => {
+                obj.insert("mode".into(), JsonValue::String("reference".into()));
+                obj.insert("kernel".into(), kernel_to_json(spec.kernel));
+                obj.insert("dim".into(), JsonValue::Number(spec.dim as f64));
+                obj.insert("features".into(), JsonValue::Number(spec.features as f64));
+                obj.insert("seed".into(), JsonValue::String(spec.seed.to_string()));
+            }
+        }
+        JsonValue::Object(obj)
+    }
+
+    /// Parse either payload mode.
+    pub fn from_json(v: &JsonValue) -> Result<Self> {
+        match get_str(v, "mode")? {
+            "inline" => {
+                let dim = get_usize(v, "dim")?;
+                let omega = get_arr(v, "omega")?;
+                let phases = get_arr(v, "phases")?;
+                anyhow::ensure!(dim > 0 && !phases.is_empty(), "invalid inline map");
+                anyhow::ensure!(
+                    omega.len() == dim * phases.len(),
+                    "omega/phases length mismatch"
+                );
+                Ok(MapPayload::Inline(Arc::new(RffMap::from_parts(omega, phases, dim))))
+            }
+            "reference" => {
+                let kernel =
+                    kernel_from_json(v.get("kernel").ok_or_else(|| anyhow!("missing kernel"))?)?;
+                let dim = get_usize(v, "dim")?;
+                let features = get_usize(v, "features")?;
+                anyhow::ensure!(dim > 0 && features > 0, "invalid map reference shape");
+                let seed: u64 = get_str(v, "seed")?
+                    .parse()
+                    .context("map reference seed is not a u64")?;
+                Ok(MapPayload::Reference(MapSpec::new(kernel, dim, features, seed)))
+            }
+            other => bail!("unknown map payload mode '{other}'"),
+        }
+    }
+}
+
+// ---- filter checkpoints -------------------------------------------------
+
+fn filter_doc(algo: &str, map: &MapPayload, fields: Vec<(&str, JsonValue)>) -> String {
     let mut obj = BTreeMap::new();
-    obj.insert("algo".into(), JsonValue::String("rffklms".into()));
-    obj.insert("map".into(), map_to_json(filter.map()));
-    obj.insert("theta".into(), arr(filter.theta().iter().copied()));
-    obj.insert("mu".into(), JsonValue::Number(filter.mu()));
+    obj.insert("format".into(), JsonValue::Number(CHECKPOINT_FORMAT as f64));
+    obj.insert("algo".into(), JsonValue::String(algo.into()));
+    obj.insert("map".into(), map.to_json());
+    for (k, v) in fields {
+        obj.insert(k.into(), v);
+    }
     JsonValue::Object(obj).to_string_pretty()
 }
 
-/// Restore an [`RffKlms`] from [`save_rffklms`] output.
-pub fn load_rffklms(text: &str) -> Result<RffKlms> {
+fn open_filter_doc(text: &str, algo: &str) -> Result<(JsonValue, MapPayload)> {
     let v = JsonValue::parse(text).context("parsing checkpoint")?;
-    anyhow::ensure!(
-        v.get("algo").and_then(|a| a.as_str()) == Some("rffklms"),
-        "not an rffklms checkpoint"
-    );
-    let map = map_from_json(v.get("map").ok_or_else(|| anyhow!("missing map"))?)?;
+    check_format(&v)?;
+    let found = get_str(&v, "algo")?;
+    anyhow::ensure!(found == algo, "not an {algo} checkpoint (found '{found}')");
+    let map = MapPayload::from_json(v.get("map").ok_or_else(|| anyhow!("missing map"))?)?;
+    Ok((v, map))
+}
+
+/// Serialize an [`RffKlms`] filter (map + θ + μ) with the map inline.
+pub fn save_rffklms(filter: &RffKlms) -> String {
+    save_rffklms_with(filter, MapPayload::Inline(Arc::clone(filter.map_arc())))
+}
+
+/// Serialize an [`RffKlms`] with an explicit map payload (pass a
+/// [`MapPayload::Reference`] to store the map by spec instead of value).
+pub fn save_rffklms_with(filter: &RffKlms, map: MapPayload) -> String {
+    filter_doc(
+        "rffklms",
+        &map,
+        vec![
+            ("theta", arr(filter.theta().iter().copied())),
+            ("mu", JsonValue::Number(filter.mu())),
+        ],
+    )
+}
+
+/// Restore an [`RffKlms`] from [`save_rffklms`] output. `registry`
+/// resolves reference-mode maps to the fleet's interned copy.
+pub fn load_rffklms(text: &str, registry: Option<&MapRegistry>) -> Result<RffKlms> {
+    let (v, map) = open_filter_doc(text, "rffklms")?;
     let theta = get_arr(&v, "theta")?;
     let mu = get_num(&v, "mu")?;
+    let map = map.resolve(registry);
     anyhow::ensure!(theta.len() == map.features(), "theta/map mismatch");
     let mut f = RffKlms::new(map, mu);
     f.set_theta(theta);
     Ok(f)
 }
 
-/// Serialize an [`RffKrls`] filter (map + θ + P + β + λ) to JSON.
+/// Serialize an [`RffKrls`] filter (map + θ + P + β + λ) with the map
+/// inline.
 pub fn save_rffkrls(filter: &RffKrls) -> String {
-    let mut obj = BTreeMap::new();
-    obj.insert("algo".into(), JsonValue::String("rffkrls".into()));
-    obj.insert("map".into(), map_to_json(filter.map()));
-    obj.insert("theta".into(), arr(filter.theta().iter().copied()));
-    obj.insert("p".into(), arr(filter.p().data().iter().copied()));
-    obj.insert("beta".into(), JsonValue::Number(filter.beta()));
-    obj.insert("lambda".into(), JsonValue::Number(filter.lambda()));
-    JsonValue::Object(obj).to_string_pretty()
+    save_rffkrls_with(filter, MapPayload::Inline(Arc::clone(filter.map_arc())))
+}
+
+/// Serialize an [`RffKrls`] with an explicit map payload.
+pub fn save_rffkrls_with(filter: &RffKrls, map: MapPayload) -> String {
+    filter_doc(
+        "rffkrls",
+        &map,
+        vec![
+            ("theta", arr(filter.theta().iter().copied())),
+            ("p", arr(filter.p().data().iter().copied())),
+            ("beta", JsonValue::Number(filter.beta())),
+            ("lambda", JsonValue::Number(filter.lambda())),
+        ],
+    )
 }
 
 /// Restore an [`RffKrls`] from [`save_rffkrls`] output.
-pub fn load_rffkrls(text: &str) -> Result<RffKrls> {
-    let v = JsonValue::parse(text).context("parsing checkpoint")?;
-    anyhow::ensure!(
-        v.get("algo").and_then(|a| a.as_str()) == Some("rffkrls"),
-        "not an rffkrls checkpoint"
-    );
-    let map = map_from_json(v.get("map").ok_or_else(|| anyhow!("missing map"))?)?;
+pub fn load_rffkrls(text: &str, registry: Option<&MapRegistry>) -> Result<RffKrls> {
+    let (v, map) = open_filter_doc(text, "rffkrls")?;
     let theta = get_arr(&v, "theta")?;
     let p = get_arr(&v, "p")?;
     let beta = get_num(&v, "beta")?;
     let lambda = get_num(&v, "lambda")?;
+    let map = map.resolve(registry);
     let d_feat = map.features();
-    anyhow::ensure!(theta.len() == d_feat && p.len() == d_feat * d_feat, "state shape mismatch");
+    anyhow::ensure!(
+        theta.len() == d_feat && p.len() == d_feat * d_feat,
+        "state shape mismatch"
+    );
     let mut f = RffKrls::new(map, beta, lambda);
     f.restore_state(theta, p);
+    Ok(f)
+}
+
+/// Serialize an [`RffNlms`] filter (map + θ + μ + ε) with the map inline.
+pub fn save_rffnlms(filter: &RffNlms) -> String {
+    save_rffnlms_with(filter, MapPayload::Inline(Arc::clone(filter.map_arc())))
+}
+
+/// Serialize an [`RffNlms`] with an explicit map payload.
+pub fn save_rffnlms_with(filter: &RffNlms, map: MapPayload) -> String {
+    filter_doc(
+        "rffnlms",
+        &map,
+        vec![
+            ("theta", arr(filter.theta().iter().copied())),
+            ("mu", JsonValue::Number(filter.mu())),
+            ("eps", JsonValue::Number(filter.eps())),
+        ],
+    )
+}
+
+/// Restore an [`RffNlms`] from [`save_rffnlms`] output.
+pub fn load_rffnlms(text: &str, registry: Option<&MapRegistry>) -> Result<RffNlms> {
+    let (v, map) = open_filter_doc(text, "rffnlms")?;
+    let theta = get_arr(&v, "theta")?;
+    let mu = get_num(&v, "mu")?;
+    let eps = get_num(&v, "eps")?;
+    let map = map.resolve(registry);
+    anyhow::ensure!(theta.len() == map.features(), "theta/map mismatch");
+    let mut f = RffNlms::new(map, mu, eps);
+    f.set_theta(theta);
     Ok(f)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kaf::kernels::Kernel;
     use crate::kaf::OnlineRegressor;
     use crate::rng::run_rng;
     use crate::signal::{NonlinearWiener, SignalSource};
@@ -135,7 +352,7 @@ mod tests {
     fn klms_roundtrip_identical_predictions_and_updates() {
         let mut original = trained_klms();
         let text = save_rffklms(&original);
-        let mut restored = load_rffklms(&text).unwrap();
+        let mut restored = load_rffklms(&text, None).unwrap();
         // identical prediction
         let probe = [0.3, -0.1, 0.7, 0.2, -0.9];
         assert_eq!(original.predict(&probe), restored.predict(&probe));
@@ -158,7 +375,7 @@ mod tests {
             f.step(&s.x, s.y);
         }
         let text = save_rffkrls(&f);
-        let mut g = load_rffkrls(&text).unwrap();
+        let mut g = load_rffkrls(&text, None).unwrap();
         let mut src2 = NonlinearWiener::new(run_rng(3, 2), 0.05);
         for s in src2.take_samples(50) {
             assert_eq!(f.step(&s.x, s.y), g.step(&s.x, s.y));
@@ -166,15 +383,72 @@ mod tests {
     }
 
     #[test]
+    fn nlms_roundtrip_identical() {
+        let mut rng = run_rng(4, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 48);
+        let mut f = RffNlms::new(map, 0.5, 1e-6);
+        let mut src = NonlinearWiener::new(run_rng(4, 1), 0.05);
+        for s in src.take_samples(300) {
+            f.step(&s.x, s.y);
+        }
+        let text = save_rffnlms(&f);
+        let mut g = load_rffnlms(&text, None).unwrap();
+        assert_eq!(f.theta(), g.theta());
+        let mut src2 = NonlinearWiener::new(run_rng(4, 2), 0.05);
+        for s in src2.take_samples(50) {
+            assert_eq!(f.step(&s.x, s.y), g.step(&s.x, s.y));
+        }
+    }
+
+    #[test]
+    fn reference_map_restores_through_registry_shared() {
+        let registry = MapRegistry::new();
+        let spec = MapSpec::new(Kernel::Gaussian { sigma: 5.0 }, 5, 40, 99);
+        let map = registry.get_or_draw(&spec);
+        let mut f = RffKlms::new(Arc::clone(&map), 1.0);
+        let mut src = NonlinearWiener::new(run_rng(5, 0), 0.05);
+        for s in src.take_samples(200) {
+            f.step(&s.x, s.y);
+        }
+        let text = save_rffklms_with(&f, MapPayload::Reference(spec));
+        // a reference checkpoint is tiny relative to an inline one
+        assert!(text.len() < save_rffklms(&f).len() / 2);
+        let g = load_rffklms(&text, Some(&registry)).unwrap();
+        // the restored filter SHARES the interned map, not a copy
+        assert!(Arc::ptr_eq(g.map_arc(), &map));
+        assert_eq!(f.theta(), g.theta());
+        // and resolving without a registry re-draws the identical map
+        let h = load_rffklms(&text, None).unwrap();
+        assert!(!Arc::ptr_eq(h.map_arc(), &map));
+        assert_eq!(h.map().phases(), map.phases());
+    }
+
+    #[test]
     fn wrong_algo_tag_rejected() {
         let f = trained_klms();
         let text = save_rffklms(&f);
-        assert!(load_rffkrls(&text).is_err());
+        assert!(load_rffkrls(&text, None).is_err());
+        assert!(load_rffnlms(&text, None).is_err());
     }
 
     #[test]
     fn corrupt_checkpoint_rejected() {
-        assert!(load_rffklms("{").is_err());
-        assert!(load_rffklms("{\"algo\":\"rffklms\"}").is_err());
+        assert!(load_rffklms("{", None).is_err());
+        assert!(load_rffklms("{\"algo\":\"rffklms\"}", None).is_err());
+    }
+
+    #[test]
+    fn unversioned_and_future_formats_rejected() {
+        // the pre-versioning ad-hoc layout has no "format" field
+        let legacy = r#"{"algo":"rffklms","map":{"dim":1,"omega":[0.1],"phases":[0.2]},
+                         "theta":[0.0],"mu":1}"#;
+        let err = load_rffklms(legacy, None).unwrap_err().to_string();
+        assert!(err.contains("format"), "unhelpful error: {err}");
+        // a future format is rejected, not misparsed
+        let future = save_rffklms(&trained_klms()).replace(
+            &format!("\"format\": {CHECKPOINT_FORMAT}"),
+            "\"format\": 999",
+        );
+        assert!(load_rffklms(&future, None).is_err());
     }
 }

@@ -1,0 +1,217 @@
+//! Feature-map interning: one resident `(Ω, b)` per configuration.
+//!
+//! The paper's serving story rests on the map being *frozen and
+//! config-derived*: `(Ω, b)` is a pure function of
+//! `(kernel, d, D, seed)`, so a million sessions with the same config
+//! need exactly one copy — only θ (and P for KRLS) is per-session state.
+//! The distributed follow-up (arXiv:1703.08131) exploits the same
+//! property across nodes ("agreeing on a map costs one seed exchange"),
+//! and the deterministic-feature line (arXiv:1912.04530) makes the
+//! general point: the map is shareable, the weights are the learner.
+//!
+//! [`MapRegistry`] is the feature-map analogue of the runtime's
+//! one-executable-per-`(d, D)` artifact registry
+//! ([`crate::runtime::ArtifactRegistry`]): callers describe the draw
+//! with a [`MapSpec`] and get back an `Arc<RffMap>` that every
+//! same-spec caller shares. Interned maps also make session snapshots
+//! cheap — a snapshot can store the spec (a few numbers) instead of the
+//! full `(Ω, b)` arrays, and restore resolves it right back through the
+//! registry (see `coordinator::SessionSnapshot`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use super::kernels::Kernel;
+use super::rff::RffMap;
+use crate::rng::Rng;
+
+/// The config-derived identity of one frozen feature-map draw.
+///
+/// Determinism contract: [`MapSpec::draw`] yields a bitwise-identical
+/// `(Ω, b)` for the same spec on every platform and in every process —
+/// the property that lets snapshots reference a map by spec instead of
+/// serializing it, and lets distributed nodes agree on a map by
+/// exchanging one seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MapSpec {
+    /// Kernel whose spectral density the frequencies are drawn from.
+    pub kernel: Kernel,
+    /// Input dimension d.
+    pub dim: usize,
+    /// Feature count D.
+    pub features: usize,
+    /// Draw seed (feeds `Rng::seed_from_u64`).
+    pub seed: u64,
+}
+
+impl MapSpec {
+    /// Spec for drawing `features = D` map dimensions over `dim = d`
+    /// inputs from `kernel`'s spectral density, seeded by `seed`.
+    pub fn new(kernel: Kernel, dim: usize, features: usize, seed: u64) -> Self {
+        Self { kernel, dim, features, seed }
+    }
+
+    /// Deterministically draw the map this spec names (see the type-level
+    /// determinism contract).
+    pub fn draw(&self) -> RffMap {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        RffMap::draw(&mut rng, self.kernel, self.dim, self.features)
+    }
+
+    /// Total interning key. σ participates by bit pattern: two specs are
+    /// the same draw iff every field is bit-identical.
+    fn key(&self) -> MapKey {
+        let (kind, sigma) = match self.kernel {
+            Kernel::Gaussian { sigma } => (0u8, sigma),
+            Kernel::Laplacian { sigma } => (1u8, sigma),
+        };
+        MapKey {
+            kind,
+            sigma_bits: sigma.to_bits(),
+            dim: self.dim,
+            features: self.features,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Orderable interning key (σ by bit pattern — `f64` itself is not `Ord`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct MapKey {
+    kind: u8,
+    sigma_bits: u64,
+    dim: usize,
+    features: usize,
+    seed: u64,
+}
+
+/// Interns feature maps by [`MapSpec`] so every same-config consumer
+/// shares one `Arc<RffMap>` (and, transitively, one cached f32 view).
+///
+/// The first `get_or_draw` of a spec draws the map **under the registry
+/// lock**: two racing first touches must resolve to the *same* `Arc`, or
+/// the loser's sessions would carry a second copy and defeat the
+/// interning. The draw is O(dD) and happens once per config, so holding
+/// the lock across it is cheap; steady-state lookups are a map probe.
+#[derive(Debug, Default)]
+pub struct MapRegistry {
+    maps: Mutex<BTreeMap<MapKey, Arc<RffMap>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MapRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The interned map for `spec`, drawing (and caching) it on first use.
+    pub fn get_or_draw(&self, spec: &MapSpec) -> Arc<RffMap> {
+        let mut maps = self.maps.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(map) = maps.get(&spec.key()) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(map);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let map = Arc::new(spec.draw());
+        maps.insert(spec.key(), Arc::clone(&map));
+        map
+    }
+
+    /// Number of distinct maps interned.
+    pub fn len(&self) -> usize {
+        self.maps.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    /// True when nothing has been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups that found an already-interned map.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to draw (one per distinct spec ever requested).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total heap bytes of every interned map (the fleet-wide map cost —
+    /// compare against `sessions × map bytes` for the §Memory before
+    /// number).
+    pub fn heap_bytes(&self) -> usize {
+        self.maps
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .values()
+            .map(|m| m.heap_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(seed: u64) -> MapSpec {
+        MapSpec::new(Kernel::Gaussian { sigma: 5.0 }, 5, 32, seed)
+    }
+
+    #[test]
+    fn same_spec_returns_same_arc() {
+        let reg = MapRegistry::new();
+        let a = reg.get_or_draw(&spec(7));
+        let b = reg.get_or_draw(&spec(7));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.len(), 1);
+        assert_eq!((reg.hits(), reg.misses()), (1, 1));
+        // registry + a + b
+        assert_eq!(Arc::strong_count(&a), 3);
+    }
+
+    #[test]
+    fn distinct_specs_are_distinct_maps() {
+        let reg = MapRegistry::new();
+        let a = reg.get_or_draw(&spec(1));
+        let b = reg.get_or_draw(&spec(2));
+        let c = reg.get_or_draw(&MapSpec::new(Kernel::Laplacian { sigma: 5.0 }, 5, 32, 1));
+        let d = reg.get_or_draw(&MapSpec::new(Kernel::Gaussian { sigma: 2.0 }, 5, 32, 1));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(reg.len(), 4);
+    }
+
+    #[test]
+    fn spec_draw_is_deterministic() {
+        let a = spec(42).draw();
+        let b = spec(42).draw();
+        assert_eq!(a.phases(), b.phases());
+        for i in 0..a.features() {
+            assert_eq!(a.omega(i), b.omega(i));
+        }
+    }
+
+    #[test]
+    fn concurrent_first_touch_interns_once() {
+        let reg = Arc::new(MapRegistry::new());
+        let maps: Vec<_> = (0..8)
+            .map(|_| {
+                let reg = Arc::clone(&reg);
+                std::thread::spawn(move || reg.get_or_draw(&spec(9)))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.misses(), 1);
+        for m in &maps[1..] {
+            assert!(Arc::ptr_eq(&maps[0], m));
+        }
+    }
+}

@@ -33,6 +33,16 @@
 //! property the `batch_parity` test suite pins down. This is the paper's
 //! point operationalised: a fixed-size linear state makes the hot path a
 //! dense matrix op, which dictionary methods cannot do.
+//!
+//! ## Shared maps
+//!
+//! The RFF filters hold their frozen `(Ω, b)` behind an `Arc<`[`RffMap`]`>`,
+//! and [`MapRegistry`] interns maps by [`MapSpec`] `(kernel, d, D, seed)`
+//! so a fleet of same-config filters/sessions keeps exactly **one**
+//! resident copy of the map (plus one cached f32 artifact view,
+//! [`MapF32View`]) — only θ (and P) is per-learner state. Checkpoints
+//! can therefore reference a map by spec instead of serializing it; see
+//! [`checkpoint`].
 
 pub mod checkpoint;
 mod coherence;
@@ -41,6 +51,7 @@ pub mod kernels;
 mod klms;
 mod krls;
 mod lms;
+mod map_registry;
 mod novelty;
 mod qklms;
 pub mod rff;
@@ -56,7 +67,8 @@ pub use krls::KrlsAld;
 pub use lms::{Lms, Nlms};
 pub use novelty::NoveltyKlms;
 pub use qklms::Qklms;
-pub use rff::{FeatureScratch, RffMap, ROW_BLOCK};
+pub use map_registry::{MapRegistry, MapSpec};
+pub use rff::{FeatureScratch, MapF32View, RffMap, ROW_BLOCK};
 pub use rff_klms::RffKlms;
 pub use rff_nlms::RffNlms;
 pub use surprise::SurpriseKlms;

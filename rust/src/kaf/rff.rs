@@ -26,6 +26,8 @@
 //! batched and per-row results are bitwise identical (asserted by the
 //! batch-parity tests; see EXPERIMENTS.md §Batch).
 
+use std::sync::{Arc, OnceLock};
+
 use crate::rng::{Distribution, Rng, Uniform};
 
 use super::fastmath::fast_cos;
@@ -74,6 +76,23 @@ impl FeatureScratch {
     }
 }
 
+/// The f32 artifact-layout view of a map: `Ω` as `[d, D]` row-major and
+/// the phases `b`, both f32 — exactly the tensors every PJRT dispatch
+/// (`rffklms_chunk`, `rffkrls_chunk`, `rff_predict`) ships to the device.
+///
+/// Built lazily by [`RffMap::f32_view`] and cached inside the map behind
+/// an `Arc`, so a fleet of sessions sharing one interned map also shares
+/// **one** f32 copy instead of each session staging its own `omega`/`b`
+/// vectors (the pre-interning layout cost ~7 KB extra per session at
+/// d=5, D=300).
+#[derive(Clone, Debug)]
+pub struct MapF32View {
+    /// Column-major `Ω` as `[d, D]` row-major f32: `omega[k*D + i] = ω_i[k]`.
+    pub omega: Vec<f32>,
+    /// Phases `b` as f32.
+    pub phases: Vec<f32>,
+}
+
 /// A frozen draw of the random Fourier features `(Ω, b)` for a kernel.
 #[derive(Clone, Debug)]
 pub struct RffMap {
@@ -87,6 +106,9 @@ pub struct RffMap {
     features: usize,
     /// `sqrt(2/D)` — the normalization of Eq. (3).
     scale: f64,
+    /// Lazily-built cached [`MapF32View`]; one copy per map, shared by
+    /// every PJRT session/dispatch that uses this map.
+    f32_view: OnceLock<Arc<MapF32View>>,
 }
 
 impl RffMap {
@@ -100,7 +122,7 @@ impl RffMap {
         }
         let phases = Uniform::phase().sample_vec(rng, features);
         let scale = (2.0 / features as f64).sqrt();
-        Self { omega_t, phases, dim, features, scale }
+        Self { omega_t, phases, dim, features, scale, f32_view: OnceLock::new() }
     }
 
     /// Build from explicit parts (used by tests and the PJRT bridge,
@@ -112,7 +134,7 @@ impl RffMap {
         assert!(dim > 0 && features > 0, "RffMap needs dim > 0 and features > 0");
         assert_eq!(omega_t.len(), dim * features, "omega length mismatch");
         let scale = (2.0 / features as f64).sqrt();
-        Self { omega_t, phases, dim, features, scale }
+        Self { omega_t, phases, dim, features, scale, f32_view: OnceLock::new() }
     }
 
     /// Input dimension d.
@@ -141,23 +163,46 @@ impl RffMap {
         &self.phases
     }
 
-    /// Column-major `Ω` as `[d, D]` row-major f32 (the artifact layout the
-    /// AOT graphs expect: `omega[k][i] = ω_i[k]`).
-    #[allow(non_snake_case)]
-    pub fn omega_f32_dxD(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.dim * self.features];
-        for i in 0..self.features {
-            let w = self.omega(i);
-            for k in 0..self.dim {
-                out[k * self.features + i] = w[k] as f32;
+    /// The cached f32 artifact view of this map — `Ω` as `[d, D]` row-major
+    /// f32 (`omega[k*D + i] = ω_i[k]`, the layout the AOT graphs expect)
+    /// plus the f32 phases. Built on first use, then shared: every PJRT
+    /// session and predict dispatch on this map clones tensors out of this
+    /// one view instead of carrying a private staging copy.
+    pub fn f32_view(&self) -> &Arc<MapF32View> {
+        self.f32_view.get_or_init(|| {
+            let mut omega = vec![0.0f32; self.dim * self.features];
+            for i in 0..self.features {
+                let w = &self.omega_t[i * self.dim..(i + 1) * self.dim];
+                for k in 0..self.dim {
+                    omega[k * self.features + i] = w[k] as f32;
+                }
             }
-        }
-        out
+            let phases = self.phases.iter().map(|&p| p as f32).collect();
+            Arc::new(MapF32View { omega, phases })
+        })
     }
 
-    /// Phases as f32 (artifact input).
+    /// Column-major `Ω` as `[d, D]` row-major f32 — an owned copy out of
+    /// the cached [`Self::f32_view`].
+    #[allow(non_snake_case)]
+    pub fn omega_f32_dxD(&self) -> Vec<f32> {
+        self.f32_view().omega.clone()
+    }
+
+    /// Phases as f32 — an owned copy out of the cached [`Self::f32_view`].
     pub fn phases_f32(&self) -> Vec<f32> {
-        self.phases.iter().map(|&p| p as f32).collect()
+        self.f32_view().phases.clone()
+    }
+
+    /// Approximate heap footprint of this map in bytes: the f64 `(Ω, b)`
+    /// plus the f32 view if it has been built. The §Memory protocol's
+    /// accounting unit (EXPERIMENTS.md).
+    pub fn heap_bytes(&self) -> usize {
+        let mut bytes = (self.omega_t.len() + self.phases.len()) * 8;
+        if let Some(v) = self.f32_view.get() {
+            bytes += (v.omega.len() + v.phases.len()) * 4;
+        }
+        bytes
     }
 
     /// Apply the map: write `z_Ω(x)` into `out` (length D).

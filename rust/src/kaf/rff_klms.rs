@@ -4,13 +4,20 @@
 //! Fixed-size solution `θ ∈ R^D`, complexity O(Dd) per step, no
 //! dictionary, no sparsification.
 
+use std::sync::Arc;
+
 use super::rff::{RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
 use crate::linalg::{axpy, seq_dot};
 
 /// The paper's RFF-KLMS filter.
+///
+/// Holds its frozen map behind an `Arc`: a fleet of filters built from
+/// one interned map (see [`super::MapRegistry`]) shares a single
+/// resident `(Ω, b)` — only θ is per-filter state, which is the paper's
+/// fixed-size-solution property taken literally.
 pub struct RffKlms {
-    map: RffMap,
+    map: Arc<RffMap>,
     theta: Vec<f64>,
     mu: f64,
     /// Scratch feature buffer reused across steps (no per-sample alloc —
@@ -19,15 +26,23 @@ pub struct RffKlms {
 }
 
 impl RffKlms {
-    /// Build from a frozen feature map and step size `mu`.
-    pub fn new(map: RffMap, mu: f64) -> Self {
+    /// Build from a frozen feature map and step size `mu`. Accepts an
+    /// owned map (wrapped on the spot) or an `Arc` shared with other
+    /// filters/sessions.
+    pub fn new(map: impl Into<Arc<RffMap>>, mu: f64) -> Self {
         assert!(mu > 0.0);
+        let map = map.into();
         let d_feat = map.features();
         Self { map, theta: vec![0.0; d_feat], mu, z: vec![0.0; d_feat] }
     }
 
     /// The feature map (shared with the AOT artifacts in PJRT mode).
     pub fn map(&self) -> &RffMap {
+        &self.map
+    }
+
+    /// The shared map handle (an `Arc` bump, no copy).
+    pub fn map_arc(&self) -> &Arc<RffMap> {
         &self.map
     }
 
@@ -50,12 +65,12 @@ impl RffKlms {
 
 impl OnlineRegressor for RffKlms {
     fn predict(&self, x: &[f64]) -> f64 {
-        // allocation-free would need interior mutability; predict() is the
-        // cold path (hot path = step()/train_batch), so a local buffer is
-        // fine. Fused apply+dot keeps the accumulation order identical to
-        // step() and the batch kernels (bitwise parity).
-        let mut z = vec![0.0; self.theta.len()];
-        self.map.apply_dot_into(x, &self.theta, &mut z)
+        // Z-free fused kernel with n = 1: no feature store, no heap
+        // allocation, and the same single-accumulator order as step()
+        // and the batch kernels (bitwise parity).
+        let mut out = [0.0];
+        self.map.predict_batch_into(x, &self.theta, &mut out);
+        out[0]
     }
 
     fn update(&mut self, x: &[f64], y: f64) {

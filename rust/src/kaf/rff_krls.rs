@@ -12,13 +12,19 @@
 //! with `P₀ = I/λ`. O(D²) per step but no dictionary search and roughly
 //! half the cost of Engel's KRLS at matched accuracy (Fig. 2b).
 
+use std::sync::Arc;
+
 use super::rff::{RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
 use crate::linalg::{dot, seq_dot, Mat};
 
 /// The paper's RFF-KRLS filter.
+///
+/// Like [`super::RffKlms`], holds its frozen map behind an `Arc` so
+/// same-config filters share one resident `(Ω, b)`; θ and P are the
+/// per-filter state.
 pub struct RffKrls {
-    map: RffMap,
+    map: Arc<RffMap>,
     theta: Vec<f64>,
     /// Inverse-correlation estimate P (D x D).
     p: Mat,
@@ -33,10 +39,12 @@ pub struct RffKrls {
 
 impl RffKrls {
     /// Build from a frozen map with forgetting `beta` and regularizer
-    /// `lambda` (paper: β = 0.9995, λ = 1e-4).
-    pub fn new(map: RffMap, beta: f64, lambda: f64) -> Self {
+    /// `lambda` (paper: β = 0.9995, λ = 1e-4). Accepts an owned map or a
+    /// shared `Arc`.
+    pub fn new(map: impl Into<Arc<RffMap>>, beta: f64, lambda: f64) -> Self {
         assert!((0.0..=1.0).contains(&beta) && beta > 0.0, "beta in (0,1]");
         assert!(lambda > 0.0, "lambda must be positive");
+        let map = map.into();
         let d_feat = map.features();
         Self {
             map,
@@ -51,6 +59,11 @@ impl RffKrls {
 
     /// The feature map.
     pub fn map(&self) -> &RffMap {
+        &self.map
+    }
+
+    /// The shared map handle (an `Arc` bump, no copy).
+    pub fn map_arc(&self) -> &Arc<RffMap> {
         &self.map
     }
 
@@ -118,10 +131,12 @@ impl RffKrls {
 
 impl OnlineRegressor for RffKrls {
     fn predict(&self, x: &[f64]) -> f64 {
-        // fused apply+dot: accumulation order matches step() and the
-        // batch kernels (bitwise parity)
-        let mut z = vec![0.0; self.theta.len()];
-        self.map.apply_dot_into(x, &self.theta, &mut z)
+        // Z-free fused kernel with n = 1: no feature store, no heap
+        // allocation, same accumulation order as step() and the batch
+        // kernels (bitwise parity)
+        let mut out = [0.0];
+        self.map.predict_batch_into(x, &self.theta, &mut out);
+        out[0]
     }
 
     fn update(&mut self, x: &[f64], y: f64) {

@@ -4,13 +4,18 @@
 //! Not in the paper's experiments; included as the obvious "linear
 //! characteristics pave the way to other settings" (§7) variant.
 
+use std::sync::Arc;
+
 use super::rff::{RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
 use crate::linalg::{axpy, dot, seq_dot};
 
 /// NLMS on RFF features: `θ ← θ + μ e z / (ε + ‖z‖²)`.
+///
+/// Holds its frozen map behind an `Arc`, like the other RFF filters:
+/// same-config filters share one resident `(Ω, b)`.
 pub struct RffNlms {
-    map: RffMap,
+    map: Arc<RffMap>,
     theta: Vec<f64>,
     mu: f64,
     eps: f64,
@@ -19,9 +24,10 @@ pub struct RffNlms {
 
 impl RffNlms {
     /// Build from a frozen map; `mu ∈ (0, 2)` for NLMS stability, `eps`
-    /// the small regularizer.
-    pub fn new(map: RffMap, mu: f64, eps: f64) -> Self {
+    /// the small regularizer. Accepts an owned map or a shared `Arc`.
+    pub fn new(map: impl Into<Arc<RffMap>>, mu: f64, eps: f64) -> Self {
         assert!(mu > 0.0 && eps >= 0.0);
+        let map = map.into();
         let d_feat = map.features();
         Self { map, theta: vec![0.0; d_feat], mu, eps, z: vec![0.0; d_feat] }
     }
@@ -31,18 +37,41 @@ impl RffNlms {
         &self.map
     }
 
+    /// The shared map handle (an `Arc` bump, no copy).
+    pub fn map_arc(&self) -> &Arc<RffMap> {
+        &self.map
+    }
+
     /// Current weights.
     pub fn theta(&self) -> &[f64] {
         &self.theta
+    }
+
+    /// Overwrite θ (checkpoint restore).
+    pub fn set_theta(&mut self, theta: Vec<f64>) {
+        assert_eq!(theta.len(), self.map.features());
+        self.theta = theta;
+    }
+
+    /// Step size μ.
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    /// Normalization regularizer ε.
+    pub fn eps(&self) -> f64 {
+        self.eps
     }
 }
 
 impl OnlineRegressor for RffNlms {
     fn predict(&self, x: &[f64]) -> f64 {
-        // fused apply+dot: accumulation order matches step() and the
-        // batch kernels (bitwise parity)
-        let mut z = vec![0.0; self.theta.len()];
-        self.map.apply_dot_into(x, &self.theta, &mut z)
+        // Z-free fused kernel with n = 1: no feature store, no heap
+        // allocation, same accumulation order as step() and the batch
+        // kernels (bitwise parity)
+        let mut out = [0.0];
+        self.map.predict_batch_into(x, &self.theta, &mut out);
+        out[0]
     }
 
     fn update(&mut self, x: &[f64], y: f64) {

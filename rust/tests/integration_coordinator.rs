@@ -388,7 +388,7 @@ fn checkpoint_roundtrip_through_session() {
     let mut filter = RffKlms::new(session.map().clone(), 1.0);
     filter.set_theta(session.theta());
     let text = save_rffklms(&filter);
-    let restored = load_rffklms(&text).unwrap();
+    let restored = load_rffklms(&text, None).unwrap();
     let probe = src.take_samples(20);
     for p in &probe {
         let a = session.predict(&p.x);

@@ -1,0 +1,123 @@
+//! Session-churn stress test: concurrent mixed train/predict traffic
+//! over a fleet far larger than the resident cap, so every client
+//! continually faults spilled sessions back in while evicting others.
+//!
+//! Asserts the spill layer is *invisible* to correctness: exact
+//! per-session `samples_seen`, no lost responses, zero request errors,
+//! zero restore failures, and exact `evictions == restores` bookkeeping
+//! once every session has been drained out of the store.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use rff_kaf::coordinator::{Algo, CoordinatorService, ServiceConfig, SessionConfig};
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+
+const CLIENTS: usize = 4;
+const SESSIONS: usize = 24;
+const RESIDENT_CAP: usize = 5; // ≪ SESSIONS: touches churn constantly
+const ROUNDS: usize = 30;
+
+#[test]
+fn churn_under_concurrent_traffic_loses_nothing() {
+    let svc = Arc::new(CoordinatorService::start(
+        ServiceConfig {
+            workers: 4,
+            shards: 4,
+            max_resident_sessions: RESIDENT_CAP,
+            ..ServiceConfig::default()
+        },
+        None,
+    ));
+
+    // two specs (KLMS and KRLS) → the whole 24-session fleet shares two
+    // interned maps, and eviction snapshots are map references
+    let klms_cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+    let krls_cfg = SessionConfig {
+        algo: Algo::RffKrls { beta: 0.9995, lambda: 1e-2 },
+        ..klms_cfg.clone()
+    };
+    let ids: Vec<u64> = (0..SESSIONS)
+        .map(|i| {
+            let cfg = if i % 2 == 0 { klms_cfg.clone() } else { krls_cfg.clone() };
+            svc.add_session_from_spec(cfg, 4242).unwrap()
+        })
+        .collect();
+    assert_eq!(svc.registry().len(), 2, "fleet should intern exactly two maps");
+    assert_eq!(svc.session_count(), SESSIONS);
+    assert!(svc.store().resident_count() <= RESIDENT_CAP);
+
+    // 4 clients hammer every session with interleaved trains + predicts
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let svc = Arc::clone(&svc);
+            let ids = ids.clone();
+            std::thread::spawn(move || {
+                let mut src = NonlinearWiener::new(run_rng(900 + c as u64, 1), 0.05);
+                let mut responses = 0usize;
+                for round in 0..ROUNDS {
+                    for (i, &sid) in ids.iter().enumerate() {
+                        let batch = src.take_samples(1);
+                        let smp = &batch[0];
+                        let errs = svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+                        assert_eq!(errs.len(), 1, "native train returns one error");
+                        responses += 1;
+                        // sprinkle predicts over other sessions mid-churn
+                        if (round + i + c) % 7 == 0 {
+                            let other = ids[(i + c + 1) % ids.len()];
+                            let p = svc.predict_sync(other, smp.x.clone()).unwrap();
+                            assert!(p.is_finite());
+                            responses += 1;
+                        }
+                    }
+                }
+                responses
+            })
+        })
+        .collect();
+    let mut total_responses = 0;
+    for c in clients {
+        total_responses += c.join().unwrap();
+    }
+
+    // no lost responses: every submitted request came back Ok
+    let expected_trains = CLIENTS * ROUNDS * SESSIONS;
+    assert!(total_responses >= expected_trains);
+    let stats = svc.stats();
+    assert_eq!(stats.errors.load(Ordering::Relaxed), 0, "no request may fail");
+    assert_eq!(stats.trained.load(Ordering::Relaxed) as usize, expected_trains);
+
+    // churn actually happened, and never corrupted a snapshot
+    let spill = &stats.spill;
+    assert!(
+        spill.evictions.load(Ordering::Relaxed) > 0,
+        "cap {RESIDENT_CAP} over {SESSIONS} sessions must evict"
+    );
+    assert_eq!(spill.restore_failures.load(Ordering::Relaxed), 0);
+    assert_eq!(spill.eviction_failures.load(Ordering::Relaxed), 0);
+
+    // exact per-session accounting survived every spill round-trip
+    assert_eq!(svc.session_count(), SESSIONS);
+    for &sid in &ids {
+        let s = svc.remove_session(sid).unwrap();
+        assert_eq!(
+            s.samples_seen(),
+            CLIENTS * ROUNDS,
+            "session {sid} lost or gained rows across evict/restore cycles"
+        );
+    }
+    assert_eq!(svc.session_count(), 0);
+
+    // draining the store restored every still-spilled session: the books
+    // must balance exactly
+    assert_eq!(
+        spill.evictions.load(Ordering::Relaxed),
+        spill.restores.load(Ordering::Relaxed),
+        "evictions and restores must pair up once the store is empty"
+    );
+
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}

@@ -1,0 +1,177 @@
+//! Property tests for the versioned session-snapshot codec: snapshot →
+//! (serialize → parse) → restore → train must be **bitwise identical**
+//! to the uninterrupted run on the native f64 backend, for both
+//! algorithms, both map payload modes (inline and registry reference),
+//! across random dims, feature counts and split points — the acceptance
+//! gate of the spill/restore layer, in the same style as
+//! `batch_parity.rs`.
+//!
+//! Also covers the RFF-NLMS filter-level checkpoint (the filter with no
+//! save/load before this suite) and map interning across restores.
+
+use std::sync::Arc;
+
+use rff_kaf::coordinator::{Algo, FilterSession, SessionConfig, SessionSnapshot};
+use rff_kaf::kaf::checkpoint::{load_rffnlms, save_rffnlms};
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{MapRegistry, OnlineRegressor, RffNlms};
+use rff_kaf::rng::{Distribution, Normal, Rng};
+
+/// Mini property harness: run `prop(rng)` for `n` random cases; panic
+/// with the case seed on failure.
+fn cases(name: &str, n: usize, prop: impl Fn(&mut Rng)) {
+    for case in 0..n {
+        let seed = 0x5AAB5 ^ (case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+fn random_config(rng: &mut Rng, algo: Algo) -> SessionConfig {
+    SessionConfig {
+        dim: 1 + rng.next_below(6) as usize,
+        features: 1 + rng.next_below(40) as usize,
+        kernel: Kernel::Gaussian { sigma: 0.5 + 5.0 * rng.next_f64() },
+        algo,
+        backend: rff_kaf::coordinator::Backend::Native,
+    }
+}
+
+fn random_algo(rng: &mut Rng) -> Algo {
+    if rng.next_below(2) == 0 {
+        Algo::RffKlms { mu: 0.1 + rng.next_f64() }
+    } else {
+        Algo::RffKrls { beta: 0.99 + 0.01 * rng.next_f64(), lambda: 1e-4 + 0.1 * rng.next_f64() }
+    }
+}
+
+/// Train `n` random rows with a snapshot/restore interruption at row `k`
+/// on one session, uninterrupted on the other; every error and the final
+/// θ must match bitwise.
+fn check_snapshot_parity(
+    rng: &mut Rng,
+    mut uninterrupted: FilterSession,
+    mut resumable: FilterSession,
+    registry: Option<&MapRegistry>,
+) {
+    let dim = uninterrupted.config().dim;
+    let n = 10 + rng.next_below(60) as usize;
+    let k = rng.next_below(n as u64) as usize;
+    let xs = Normal::standard().sample_vec(rng, n * dim);
+    let ys = Normal::standard().sample_vec(rng, n);
+    let mut want = Vec::new();
+    let mut got = Vec::new();
+    for (r, (row, &y)) in xs.chunks_exact(dim).zip(&ys).enumerate() {
+        if r == k {
+            // interrupt: serialize, drop the live session, re-parse, restore
+            let text = resumable.snapshot().to_json();
+            let snap = SessionSnapshot::from_json(&text).expect("reparse");
+            resumable = FilterSession::restore(snap, registry, None).expect("restore");
+        }
+        want.extend(uninterrupted.train(row, y).expect("train"));
+        got.extend(resumable.train(row, y).expect("train"));
+    }
+    assert_eq!(got, want, "a-priori errors diverged after restore at row {k}");
+    assert_eq!(resumable.theta(), uninterrupted.theta(), "theta diverged");
+    assert_eq!(resumable.samples_seen(), uninterrupted.samples_seen());
+    assert_eq!(resumable.running_mse(), uninterrupted.running_mse());
+    // predictions agree bitwise too
+    let probe = &xs[..dim];
+    assert_eq!(resumable.predict(probe), uninterrupted.predict(probe));
+}
+
+#[test]
+fn prop_snapshot_restore_inline_map_is_bitwise() {
+    cases("snapshot_parity_inline", 40, |rng| {
+        let algo = random_algo(rng);
+        let cfg = random_config(rng, algo);
+        let map_seed = rng.next_u64();
+        let mut draw_rng = Rng::seed_from_u64(map_seed);
+        let map = rff_kaf::kaf::RffMap::draw(&mut draw_rng, cfg.kernel, cfg.dim, cfg.features);
+        let a = FilterSession::with_map(cfg.clone(), map.clone(), None).unwrap();
+        let b = FilterSession::with_map(cfg, map, None).unwrap();
+        check_snapshot_parity(rng, a, b, None);
+    });
+}
+
+#[test]
+fn prop_snapshot_restore_reference_map_is_bitwise() {
+    cases("snapshot_parity_reference", 40, |rng| {
+        let algo = random_algo(rng);
+        let cfg = random_config(rng, algo);
+        let seed = rng.next_u64();
+        let registry = MapRegistry::new();
+        let a = FilterSession::from_spec(cfg.clone(), seed, &registry, None).unwrap();
+        let b = FilterSession::from_spec(cfg, seed, &registry, None).unwrap();
+        let shared = Arc::clone(a.map_arc());
+        check_snapshot_parity(rng, a, b, Some(&registry));
+        // the registry still holds exactly one map for the spec: restores
+        // resolved the reference instead of drawing copies
+        assert_eq!(registry.len(), 1);
+        assert!(Arc::strong_count(&shared) >= 2);
+    });
+}
+
+#[test]
+fn prop_reference_restore_without_registry_redraws_identically() {
+    // a reference snapshot is restorable anywhere: without a registry the
+    // spec re-draws the exact same map (determinism contract)
+    cases("reference_redraw", 20, |rng| {
+        let cfg = random_config(rng, Algo::RffKlms { mu: 0.5 });
+        let seed = rng.next_u64();
+        let registry = MapRegistry::new();
+        let a = FilterSession::from_spec(cfg.clone(), seed, &registry, None).unwrap();
+        let b = FilterSession::from_spec(cfg, seed, &registry, None).unwrap();
+        check_snapshot_parity(rng, a, b, None); // None: restore re-draws
+    });
+}
+
+#[test]
+fn prop_rffnlms_checkpoint_roundtrip_is_bitwise() {
+    // satellite: RFF-NLMS had no save/load at all before this codec
+    cases("rffnlms_checkpoint", 40, |rng| {
+        let dim = 1 + rng.next_below(6) as usize;
+        let feats = 1 + rng.next_below(48) as usize;
+        let sigma = 0.5 + 5.0 * rng.next_f64();
+        let map = rff_kaf::kaf::RffMap::draw(rng, Kernel::Gaussian { sigma }, dim, feats);
+        let mu = 0.1 + rng.next_f64();
+        let mut live = RffNlms::new(map.clone(), mu, 1e-6);
+        let mut resumable = RffNlms::new(map, mu, 1e-6);
+        let n = 10 + rng.next_below(50) as usize;
+        let k = rng.next_below(n as u64) as usize;
+        let xs = Normal::standard().sample_vec(rng, n * dim);
+        let ys = Normal::standard().sample_vec(rng, n);
+        for (r, (row, &y)) in xs.chunks_exact(dim).zip(&ys).enumerate() {
+            if r == k {
+                let text = save_rffnlms(&resumable);
+                resumable = load_rffnlms(&text, None).expect("nlms restore");
+            }
+            let e_live = live.step(row, y);
+            let e_res = resumable.step(row, y);
+            assert_eq!(e_res, e_live, "NLMS error diverged after restore at row {k}");
+        }
+        assert_eq!(resumable.theta(), live.theta());
+    });
+}
+
+#[test]
+fn snapshot_document_is_versioned() {
+    let mut rng = Rng::seed_from_u64(1);
+    let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+    let text = s.snapshot().to_json();
+    assert!(
+        text.contains(&format!("\"format\":{}", rff_kaf::coordinator::SNAPSHOT_FORMAT)),
+        "snapshot must carry its format version: {}",
+        &text[..200.min(text.len())]
+    );
+    // tampering the version must be rejected
+    let tampered = text.replacen(
+        &format!("\"format\":{}", rff_kaf::coordinator::SNAPSHOT_FORMAT),
+        "\"format\":4096",
+        1,
+    );
+    assert!(SessionSnapshot::from_json(&tampered).is_err());
+}
