@@ -151,5 +151,6 @@ fn main() {
     }
     svc.shutdown();
 
+    b.write_json("batch_throughput").expect("writing BENCH_batch_throughput.json");
     println!("\n{} measurements total", b.results().len());
 }

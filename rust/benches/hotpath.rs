@@ -114,5 +114,6 @@ fn main() {
         println!("{}", m.throughput(bsz as f64));
     }
 
+    b.write_json("hotpath").expect("writing BENCH_hotpath.json");
     println!("\n{} measurements total", b.results().len());
 }

@@ -1,0 +1,124 @@
+//! Bench — the lane SIMD substrate vs its scalar references: the lane
+//! cosine against the one-at-a-time scalar loop, and the packed
+//! upper-triangular KRLS step against a local dense-`P` reference
+//! implementation (the pre-packed layout), at D ∈ {100, 300, 1000}.
+//!
+//! Emits `BENCH_lane_kernels.json` (machine-readable trajectory row;
+//! see EXPERIMENTS.md §Perf for the lane-width sweep protocol).
+//!
+//! `cargo bench --bench lane_kernels [-- --quick]`
+
+use rff_kaf::bench::Bencher;
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{OnlineRegressor, RffKrls, RffMap};
+use rff_kaf::linalg::simd::{self, LANES};
+use rff_kaf::rng::{run_rng, Distribution, Normal};
+use rff_kaf::util::Args;
+
+/// The dense-layout RLS step the packed kernels replaced — kept here as
+/// the bench baseline so the flop/traffic halving stays measurable.
+struct DenseKrls {
+    theta: Vec<f64>,
+    p: Vec<f64>,
+    beta: f64,
+    z: Vec<f64>,
+    pi: Vec<f64>,
+}
+
+impl DenseKrls {
+    fn new(features: usize, beta: f64, lambda: f64) -> Self {
+        let mut p = vec![0.0; features * features];
+        for i in 0..features {
+            p[i * features + i] = 1.0 / lambda;
+        }
+        Self {
+            theta: vec![0.0; features],
+            p,
+            beta,
+            z: vec![0.0; features],
+            pi: vec![0.0; features],
+        }
+    }
+
+    fn step(&mut self, map: &RffMap, x: &[f64], y: f64) -> f64 {
+        let feats = self.theta.len();
+        let yhat = map.apply_dot_into(x, &self.theta, &mut self.z);
+        for i in 0..feats {
+            self.pi[i] = simd::dot(&self.p[i * feats..(i + 1) * feats], &self.z);
+        }
+        let denom = self.beta + simd::dot(&self.z, &self.pi);
+        let e = y - yhat;
+        simd::axpy(e / denom, &self.pi, &mut self.theta);
+        let inv_beta = 1.0 / self.beta;
+        let c = inv_beta / denom;
+        for i in 0..feats {
+            let cpi = c * self.pi[i];
+            let row = &mut self.p[i * feats..(i + 1) * feats];
+            for (r, &pj) in row.iter_mut().zip(&self.pi) {
+                *r = *r * inv_beta - cpi * pj;
+            }
+        }
+        e
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut b = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
+
+    let mut rng = run_rng(1, 0);
+    let normal = Normal::standard();
+
+    // --- scalar vs lane cosine -------------------------------------------
+    let xs: Vec<f64> = normal.sample_vec(&mut rng, 1024);
+    b.bench("cos_scalar_1024", || xs.iter().map(|&x| simd::fast_cos(x)).sum::<f64>());
+    b.bench("cos_lanes_1024", || {
+        let mut s = 0.0;
+        for chunk in xs.chunks_exact(LANES) {
+            let args: &[f64; LANES] = chunk.try_into().unwrap();
+            s += simd::fast_cos_lanes(args).iter().sum::<f64>();
+        }
+        s
+    });
+
+    // --- dense vs packed KRLS step at D ∈ {100, 300, 1000} ---------------
+    let d = 5usize;
+    for feats in [100usize, 300, 1000] {
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, feats);
+        let x: Vec<f64> = normal.sample_vec(&mut rng, d);
+        let y = 0.7;
+
+        let mut dense = DenseKrls::new(feats, 0.9995, 1e-4);
+        let md = b.bench(&format!("krls_step_dense_D{feats}"), || dense.step(&map, &x, y));
+        let dense_mean = md.mean_ns;
+
+        let mut packed = RffKrls::new(map.clone(), 0.9995, 1e-4);
+        let mp = b.bench(&format!("krls_step_packed_D{feats}"), || packed.step(&x, y));
+        println!(
+            "  packed/dense step time ratio at D={feats}: {:.3} \
+             (P resident: {} vs {} floats)",
+            mp.mean_ns / dense_mean,
+            packed.p_packed().len(),
+            feats * feats
+        );
+
+        // the isolated O(D²) kernels, without the feature map
+        let z: Vec<f64> = normal.sample_vec(&mut rng, feats);
+        let mut out = vec![0.0; feats];
+        let pd = dense.p.clone();
+        b.bench(&format!("symv_dense_D{feats}"), || {
+            for i in 0..feats {
+                out[i] = simd::dot(&pd[i * feats..(i + 1) * feats], &z);
+            }
+            out[0]
+        });
+        let pp = packed.p_packed().to_vec();
+        b.bench(&format!("symv_packed_D{feats}"), || {
+            simd::packed_symv(feats, &pp, &z, &mut out);
+            out[0]
+        });
+    }
+
+    b.write_json("lane_kernels").expect("writing BENCH_lane_kernels.json");
+    println!("\n{} measurements total", b.results().len());
+}

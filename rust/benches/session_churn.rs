@@ -132,5 +132,6 @@ fn main() {
     });
     svc.shutdown();
 
+    b.write_json("session_churn").expect("writing BENCH_session_churn.json");
     println!("\n{} measurements total", b.results().len());
 }

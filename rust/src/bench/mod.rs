@@ -6,7 +6,10 @@
 //! per-figure experiment drivers use [`time_once`] for wall-clock rows
 //! (Table 1 replicates *training time*, not micro-op latency).
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::JsonValue;
 
 /// One benchmark measurement summary (nanoseconds per iteration).
 #[derive(Clone, Debug)]
@@ -42,6 +45,18 @@ impl Measurement {
     pub fn throughput(&self, elems_per_iter: f64) -> String {
         let eps = elems_per_iter / (self.mean_ns * 1e-9);
         format!("{:<44} thrpt: {:.3} Melem/s", self.name, eps / 1e6)
+    }
+
+    /// Machine-readable form (one row of a `BENCH_*.json` document).
+    pub fn to_json(&self) -> JsonValue {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".into(), JsonValue::String(self.name.clone()));
+        obj.insert("mean_ns".into(), JsonValue::Number(self.mean_ns));
+        obj.insert("median_ns".into(), JsonValue::Number(self.median_ns));
+        obj.insert("p95_ns".into(), JsonValue::Number(self.p95_ns));
+        obj.insert("std_ns".into(), JsonValue::Number(self.std_ns));
+        obj.insert("iters".into(), JsonValue::Number(self.iters as f64));
+        JsonValue::Object(obj)
     }
 }
 
@@ -133,6 +148,28 @@ impl Bencher {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Write every measurement so far to `BENCH_<name>.json` in the
+    /// current directory (the crate root under `cargo bench`), so the
+    /// perf trajectory is recorded machine-readably run over run —
+    /// see EXPERIMENTS.md §Perf. Returns the written path.
+    pub fn write_json(&self, name: &str) -> std::io::Result<PathBuf> {
+        self.write_json_to(Path::new("."), name)
+    }
+
+    /// [`Self::write_json`] into an explicit directory.
+    pub fn write_json_to(&self, dir: &Path, name: &str) -> std::io::Result<PathBuf> {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("bench".into(), JsonValue::String(name.to_string()));
+        obj.insert(
+            "measurements".into(),
+            JsonValue::Array(self.results.iter().map(Measurement::to_json).collect()),
+        );
+        let path = dir.join(format!("BENCH_{name}.json"));
+        std::fs::write(&path, JsonValue::Object(obj).to_string_pretty())?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
 }
 
 /// Time a single execution of `f` (for end-to-end rows like Table 1 where
@@ -171,6 +208,26 @@ mod tests {
         assert!(m.mean_ns > 0.0);
         assert!(m.iters >= 5);
         assert!(m.median_ns <= m.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_document() {
+        let mut b = Bencher::new(Duration::from_millis(1), Duration::from_millis(5), 3);
+        b.bench("spin_a", || std::hint::black_box(1 + 1));
+        b.bench("spin_b", || std::hint::black_box(2 + 2));
+        let dir = std::env::temp_dir().join("rffkaf_bench_json_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = b.write_json_to(&dir, "unit").unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "BENCH_unit.json");
+        let doc = JsonValue::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("unit"));
+        let rows = doc.get("measurements").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").and_then(|v| v.as_str()), Some("spin_a"));
+        assert!(rows[0].get("mean_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(rows[1].get("iters").and_then(|v| v.as_usize()).unwrap() >= 3);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -121,5 +121,7 @@ mod store;
 pub use orchestrator::{McConfig, McResult, Orchestrator};
 pub use service::{CoordinatorService, Request, Response, ServiceConfig, ServiceStats};
 pub use session::{Algo, Backend, FilterSession, PredictState, SessionConfig};
-pub use snapshot::{DirSink, MemorySink, SessionSnapshot, SnapshotSink, SNAPSHOT_FORMAT};
+pub use snapshot::{
+    DirSink, MemorySink, SessionSnapshot, SnapshotSink, SNAPSHOT_FORMAT, SNAPSHOT_READ_FORMATS,
+};
 pub use store::{SessionStore, SpillConfig, SpillStats};

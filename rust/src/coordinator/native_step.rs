@@ -16,11 +16,15 @@
 //! family in `kaf/`.
 
 use crate::kaf::RffMap;
+use crate::linalg::simd;
 
 /// One RFF-KLMS step on f32 state: `ŷ = θᵀz`, `e = y − ŷ`,
 /// `θ ← θ + μ e z` with f64 feature/error math and per-element f32
 /// rounding on the θ write-back (the artifact's precision profile).
-/// `z` is a reusable length-D scratch; returns the a-priori error.
+/// The feature map and both vector sweeps run on the lane substrate
+/// ([`simd::dot_f64_f32`], [`simd::axpy_into_f32`]) — the same vector
+/// code path as the f64 filters. `z` is a reusable length-D scratch;
+/// returns the a-priori error.
 pub(crate) fn klms_step(
     map: &RffMap,
     theta: &mut [f32],
@@ -31,18 +35,19 @@ pub(crate) fn klms_step(
 ) -> f64 {
     debug_assert_eq!(theta.len(), map.features());
     map.apply_into(x, z);
-    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
+    let yhat = simd::dot_f64_f32(z, theta);
     let e = y as f64 - yhat;
-    for (t, &zi) in theta.iter_mut().zip(z.iter()) {
-        *t += (mu as f64 * e * zi) as f32;
-    }
+    simd::axpy_into_f32(mu as f64 * e, z, theta);
     e
 }
 
-/// One RFF-KRLS step on f32 state (`P` row-major `[D, D]`): the RLS
-/// recursion `π = Pz`, `denom = β + zᵀπ`, `θ ← θ + π e/denom`,
-/// `P ← (P − π πᵀ/denom)/β`, all in f64 with f32 rounding on the θ/P
-/// write-backs. `z`/`pi` are reusable length-D scratches; returns the
+/// One RFF-KRLS step on f32 state (`P` row-major `[D, D]` — the device
+/// artifact's dense layout, unlike the native filter's packed
+/// triangle): the RLS recursion `π = Pz`, `denom = β + zᵀπ`,
+/// `θ ← θ + π e/denom`, `P ← (P − π πᵀ/denom)/β`, all in f64 with f32
+/// rounding on the θ/P write-backs, every sweep on the lane substrate
+/// ([`simd::dot_f32_f64`] row sweeps, [`simd::scale_rank1_row_f32`]
+/// rank-1 rows). `z`/`pi` are reusable length-D scratches; returns the
 /// a-priori error.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn krls_step(
@@ -60,24 +65,18 @@ pub(crate) fn krls_step(
     debug_assert_eq!(p.len(), features * features);
     map.apply_into(x, z);
     for (i, pi_i) in pi.iter_mut().enumerate() {
-        let prow = &p[i * features..(i + 1) * features];
-        *pi_i = prow.iter().zip(z.iter()).map(|(&pv, &zi)| pv as f64 * zi).sum();
+        *pi_i = simd::dot_f32_f64(&p[i * features..(i + 1) * features], z);
     }
-    let denom = beta as f64 + pi.iter().zip(z.iter()).map(|(&a, &b)| a * b).sum::<f64>();
-    let yhat: f64 = z.iter().zip(theta.iter()).map(|(&zi, &t)| zi * t as f64).sum();
+    let denom = beta as f64 + simd::dot(pi, z);
+    let yhat = simd::dot_f64_f32(z, theta);
     let e = y as f64 - yhat;
     let esc = e / denom;
-    for (t, &pi_i) in theta.iter_mut().zip(pi.iter()) {
-        *t += (pi_i * esc) as f32;
-    }
+    simd::axpy_into_f32(esc, pi, theta);
     let inv_beta = 1.0 / beta as f64;
     let c = inv_beta / denom;
     for i in 0..features {
-        let pii = pi[i];
-        let prow = &mut p[i * features..(i + 1) * features];
-        for (j, pv) in prow.iter_mut().enumerate() {
-            *pv = (*pv as f64 * inv_beta - c * pii * pi[j]) as f32;
-        }
+        let cpi = c * pi[i];
+        simd::scale_rank1_row_f32(&mut p[i * features..(i + 1) * features], inv_beta, cpi, pi);
     }
     e
 }

@@ -356,8 +356,12 @@ impl FilterSession {
             SessionState::NativeKrls(f) => f.predict(x),
             SessionState::PjrtKlms { map, theta, .. }
             | SessionState::PjrtKrls { map, theta, .. } => {
+                // lane feature map + strictly sequential mixed dot: f32→f64
+                // widening is exact, so this is bitwise identical to the
+                // PredictState path (which widens θ once and runs the
+                // sequential fused kernel)
                 let z = map.apply(x);
-                z.iter().zip(theta).map(|(&zi, &t)| zi * t as f64).sum()
+                crate::linalg::simd::seq_dot_f64_f32(&z, theta)
             }
         }
     }
@@ -580,7 +584,9 @@ impl FilterSession {
             }
             SessionState::NativeKrls(f) => SnapshotState::NativeKrls {
                 theta: f.theta().to_vec(),
-                p: f.p().data().to_vec(),
+                // the filter's live packed upper triangle — no dense
+                // reconstruction on the snapshot path
+                p_packed: f.p_packed().to_vec(),
             },
             SessionState::PjrtKlms { theta, buf_x, buf_y, .. } => SnapshotState::PjrtKlms {
                 theta: theta.clone(),
@@ -627,12 +633,13 @@ impl FilterSession {
                 anyhow::ensure!(theta.len() == feats, "theta length mismatch");
                 f.set_theta(theta);
             }
-            (SessionState::NativeKrls(f), SnapshotState::NativeKrls { theta, p }) => {
+            (SessionState::NativeKrls(f), SnapshotState::NativeKrls { theta, p_packed }) => {
                 anyhow::ensure!(
-                    theta.len() == feats && p.len() == feats * feats,
+                    theta.len() == feats
+                        && p_packed.len() == crate::linalg::simd::packed_len(feats),
                     "state shape mismatch"
                 );
-                f.restore_state(theta, p);
+                f.restore_state_packed(theta, p_packed);
             }
             (
                 SessionState::PjrtKlms { theta, buf_x, buf_y, chunk_n, .. },
@@ -682,14 +689,15 @@ impl FilterSession {
     /// Approximate heap bytes of this session's **own** state — θ, P,
     /// scratch and chunk buffers — excluding the shared map (count that
     /// once per fleet via [`RffMap::heap_bytes`]). The per-session
-    /// marginal cost the §Memory protocol records.
+    /// marginal cost the §Memory protocol records. Native variants
+    /// delegate to the filters' own accounting, so the KRLS number
+    /// reflects the packed `D(D+1)/2` P (about half the dense layout at
+    /// large D); the PJRT KRLS `P` stays dense f32 — the device
+    /// artifact's layout.
     pub fn state_bytes(&self) -> usize {
-        let d_feat = self.config.features;
         match &self.state {
-            // θ + the filter's scratch z
-            SessionState::NativeKlms(_) => 2 * d_feat * 8,
-            // θ + P + scratches z, π
-            SessionState::NativeKrls(_) => (d_feat * d_feat + 3 * d_feat) * 8,
+            SessionState::NativeKlms(f) => f.heap_bytes(),
+            SessionState::NativeKrls(f) => f.heap_bytes(),
             SessionState::PjrtKlms { theta, buf_x, buf_y, .. } => {
                 (theta.len() + buf_x.capacity() + buf_y.capacity()) * 4
             }

@@ -40,8 +40,17 @@ use crate::util::json::JsonValue;
 
 use super::session::{Algo, Backend, SessionConfig};
 
-/// Session-snapshot format version written by this build.
-pub const SNAPSHOT_FORMAT: usize = 1;
+/// Session-snapshot format version written by this build. History:
+/// format 1 stored the native-KRLS `P` dense (`"p"`, `[D, D]`
+/// row-major); format 2 stores its packed upper triangle
+/// (`"p_packed"`, `D(D+1)/2` numbers — the filter's live layout).
+/// Format-1 documents are still read, translated at the boundary. The
+/// PJRT f32 `P` stays dense in every format — that is the device
+/// artifact's layout, round-tripped verbatim.
+pub const SNAPSHOT_FORMAT: usize = 2;
+
+/// Formats this build can read (see [`SNAPSHOT_FORMAT`]).
+pub const SNAPSHOT_READ_FORMATS: [usize; 2] = [1, SNAPSHOT_FORMAT];
 
 /// A serializable snapshot of one filter session's complete state.
 ///
@@ -60,8 +69,10 @@ pub struct SessionSnapshot {
 pub(crate) enum SnapshotState {
     /// Native f64 RFF-KLMS: θ.
     NativeKlms { theta: Vec<f64> },
-    /// Native f64 RFF-KRLS: θ and row-major `[D, D]` P.
-    NativeKrls { theta: Vec<f64>, p: Vec<f64> },
+    /// Native f64 RFF-KRLS: θ and the packed upper triangle of P
+    /// (`D(D+1)/2` floats — the filter's live layout; format-1 dense
+    /// documents are translated to this at parse).
+    NativeKrls { theta: Vec<f64>, p_packed: Vec<f64> },
     /// PJRT f32 KLMS: θ plus the buffered partial chunk rows.
     PjrtKlms { theta: Vec<f32>, buf_x: Vec<f32>, buf_y: Vec<f32> },
     /// PJRT f32 KRLS: θ, P, and the buffered partial chunk rows.
@@ -145,10 +156,10 @@ impl SessionSnapshot {
                 state.insert("type".into(), JsonValue::String("native_klms".into()));
                 state.insert("theta".into(), arr(theta.iter().copied()));
             }
-            SnapshotState::NativeKrls { theta, p } => {
+            SnapshotState::NativeKrls { theta, p_packed } => {
                 state.insert("type".into(), JsonValue::String("native_krls".into()));
                 state.insert("theta".into(), arr(theta.iter().copied()));
-                state.insert("p".into(), arr(p.iter().copied()));
+                state.insert("p_packed".into(), arr(p_packed.iter().copied()));
             }
             SnapshotState::PjrtKlms { theta, buf_x, buf_y } => {
                 state.insert("type".into(), JsonValue::String("pjrt_klms".into()));
@@ -180,9 +191,10 @@ impl SessionSnapshot {
     pub fn from_json(text: &str) -> Result<Self> {
         let v = JsonValue::parse(text).context("parsing session snapshot")?;
         match v.get("format").and_then(|f| f.as_usize()) {
-            Some(SNAPSHOT_FORMAT) => {}
+            Some(f) if SNAPSHOT_READ_FORMATS.contains(&f) => {}
             Some(other) => bail!(
-                "unsupported snapshot format {other} (this build reads format {SNAPSHOT_FORMAT})"
+                "unsupported snapshot format {other} \
+                 (this build reads formats {SNAPSHOT_READ_FORMATS:?})"
             ),
             None => bail!("session snapshot has no format field"),
         }
@@ -195,7 +207,18 @@ impl SessionSnapshot {
         let state = match get_str(sv, "type")? {
             "native_klms" => SnapshotState::NativeKlms { theta: get_arr(sv, "theta")? },
             "native_krls" => {
-                SnapshotState::NativeKrls { theta: get_arr(sv, "theta")?, p: get_arr(sv, "p")? }
+                // packed (format 2) or dense (format 1, translated here)
+                let p_packed = if sv.get("p_packed").is_some() {
+                    get_arr(sv, "p_packed")?
+                } else {
+                    let p = get_arr(sv, "p")?;
+                    anyhow::ensure!(
+                        p.len() == feats * feats,
+                        "dense P shape does not match features"
+                    );
+                    crate::linalg::simd::pack_upper(feats, &p)
+                };
+                SnapshotState::NativeKrls { theta: get_arr(sv, "theta")?, p_packed }
             }
             "pjrt_klms" => SnapshotState::PjrtKlms {
                 theta: get_arr_f32(sv, "theta")?,
@@ -212,19 +235,26 @@ impl SessionSnapshot {
         };
         // shape checks up front, so a corrupt document errors here rather
         // than panicking inside a filter constructor during restore
-        let (theta_len, p_len, buf) = match &state {
+        // expected P length differs by variant: native carries the
+        // packed triangle, PJRT carries the dense device layout
+        let (theta_len, p_check, buf) = match &state {
             SnapshotState::NativeKlms { theta } => (theta.len(), None, None),
-            SnapshotState::NativeKrls { theta, p } => (theta.len(), Some(p.len()), None),
+            SnapshotState::NativeKrls { theta, p_packed } => {
+                let want = crate::linalg::simd::packed_len(feats);
+                (theta.len(), Some((p_packed.len(), want)), None)
+            }
             SnapshotState::PjrtKlms { theta, buf_x, buf_y } => {
                 (theta.len(), None, Some((buf_x.len(), buf_y.len())))
             }
-            SnapshotState::PjrtKrls { theta, p, buf_x, buf_y } => {
-                (theta.len(), Some(p.len()), Some((buf_x.len(), buf_y.len())))
-            }
+            SnapshotState::PjrtKrls { theta, p, buf_x, buf_y } => (
+                theta.len(),
+                Some((p.len(), feats * feats)),
+                Some((buf_x.len(), buf_y.len())),
+            ),
         };
         anyhow::ensure!(theta_len == feats, "theta length does not match features");
-        if let Some(p_len) = p_len {
-            anyhow::ensure!(p_len == feats * feats, "P shape does not match features");
+        if let Some((p_len, want)) = p_check {
+            anyhow::ensure!(p_len == want, "P shape does not match features");
         }
         if let Some((bx, by)) = buf {
             anyhow::ensure!(bx == by * d, "buffered chunk rows are not [n, dim]");
@@ -383,6 +413,68 @@ impl SnapshotSink for DirSink {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::FilterSession;
+    use crate::rng::run_rng;
+
+    #[test]
+    fn native_krls_snapshot_is_packed_and_reads_legacy_dense() {
+        // format coverage for the packed-P layout at the session level:
+        // this build writes `p_packed`; a hand-built format-1 dense
+        // document restores to the bitwise-identical session
+        let feats = 9;
+        let cfg = SessionConfig {
+            algo: Algo::RffKrls { beta: 0.999, lambda: 1e-3 },
+            features: feats,
+            ..SessionConfig::paper_default()
+        };
+        let mut rng = run_rng(21, 0);
+        let mut s = FilterSession::new(cfg, &mut rng, None).unwrap();
+        for i in 0..50 {
+            let t = i as f64 * 0.21;
+            let x = [t.sin(), (t * 0.7).cos(), t.cos(), (t * 1.3).sin(), 0.3 * t.sin()];
+            s.train(&x, (t * 0.9).cos()).unwrap();
+        }
+        let text = s.snapshot().to_json();
+        assert!(text.contains("\"p_packed\""));
+        let packed_restored =
+            FilterSession::restore(SessionSnapshot::from_json(&text).unwrap(), None, None)
+                .unwrap();
+        assert_eq!(packed_restored.theta(), s.theta());
+
+        // rebuild the document in the legacy format-1 dense layout
+        let mut v = JsonValue::parse(&text).unwrap();
+        let JsonValue::Object(obj) = &mut v else { unreachable!("snapshot is an object") };
+        obj.insert("format".into(), JsonValue::Number(1.0));
+        let Some(JsonValue::Object(st)) = obj.get_mut("state") else {
+            unreachable!("state is an object")
+        };
+        let packed: Vec<f64> = st
+            .remove("p_packed")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        let dense = crate::linalg::simd::unpack_symmetric(feats, &packed);
+        st.insert("p".into(), arr(dense.iter().copied()));
+        let legacy = v.to_string_compact();
+        let snap = SessionSnapshot::from_json(&legacy).expect("legacy dense snapshot reads");
+        let restored = FilterSession::restore(snap, None, None).unwrap();
+        assert_eq!(restored.theta(), s.theta());
+        // identical continuation: the boundary translation was exact
+        let probe = [0.2, -0.1, 0.4, 0.0, -0.3];
+        assert_eq!(restored.predict(&probe), s.predict(&probe));
+        let mut a = s;
+        let mut b = restored;
+        for i in 0..20 {
+            let t = i as f64 * 0.37;
+            let x = [t.cos(), t.sin(), 0.5 * t.cos(), (t * 2.0).sin(), 0.1];
+            let ea = a.train(&x, t.sin()).unwrap();
+            let eb = b.train(&x, t.sin()).unwrap();
+            assert_eq!(ea, eb, "continuation diverged after legacy restore");
+        }
+    }
 
     #[test]
     fn memory_sink_roundtrip() {

@@ -35,8 +35,16 @@ use crate::util::json::JsonValue;
 
 /// Format version written by this build. History: the unversioned seed
 /// layout (retroactively "format 1") had no `format` field, no NLMS
-/// support and inline-only maps; format 2 added all three.
-pub const CHECKPOINT_FORMAT: usize = 2;
+/// support and inline-only maps; format 2 added all three; format 3
+/// switched the KRLS `P` payload to its packed upper triangle
+/// (`"p_packed"`, `D(D+1)/2` numbers — half the document size of the
+/// dense `"p"`, matching the filter's live packed state).
+pub const CHECKPOINT_FORMAT: usize = 3;
+
+/// Formats this build can read. Format-2 documents differ only in the
+/// KRLS `P` layout (dense row-major `"p"`), which [`load_rffkrls`]
+/// translates to packed at the boundary; everything else is identical.
+pub const CHECKPOINT_READ_FORMATS: [usize; 2] = [2, CHECKPOINT_FORMAT];
 
 // ---- JSON helpers shared with coordinator::snapshot ---------------------
 
@@ -80,12 +88,14 @@ pub(crate) fn get_str<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
         .ok_or_else(|| anyhow!("checkpoint missing string '{key}'"))
 }
 
-/// Check the document's `"format"` field against [`CHECKPOINT_FORMAT`].
+/// Check the document's `"format"` field against
+/// [`CHECKPOINT_READ_FORMATS`].
 pub(crate) fn check_format(v: &JsonValue) -> Result<()> {
     match v.get("format").and_then(|f| f.as_usize()) {
-        Some(CHECKPOINT_FORMAT) => Ok(()),
+        Some(f) if CHECKPOINT_READ_FORMATS.contains(&f) => Ok(()),
         Some(other) => bail!(
-            "unsupported checkpoint format {other} (this build reads format {CHECKPOINT_FORMAT})"
+            "unsupported checkpoint format {other} \
+             (this build reads formats {CHECKPOINT_READ_FORMATS:?})"
         ),
         None => bail!(
             "checkpoint has no format field (pre-versioning layout); \
@@ -267,35 +277,50 @@ pub fn save_rffkrls(filter: &RffKrls) -> String {
     save_rffkrls_with(filter, MapPayload::Inline(Arc::clone(filter.map_arc())))
 }
 
-/// Serialize an [`RffKrls`] with an explicit map payload.
+/// Serialize an [`RffKrls`] with an explicit map payload. The `P`
+/// state is written as its packed upper triangle (`"p_packed"`,
+/// `D(D+1)/2` numbers — the filter's live layout, and half the dense
+/// document size).
 pub fn save_rffkrls_with(filter: &RffKrls, map: MapPayload) -> String {
     filter_doc(
         "rffkrls",
         &map,
         vec![
             ("theta", arr(filter.theta().iter().copied())),
-            ("p", arr(filter.p().data().iter().copied())),
+            ("p_packed", arr(filter.p_packed().iter().copied())),
             ("beta", JsonValue::Number(filter.beta())),
             ("lambda", JsonValue::Number(filter.lambda())),
         ],
     )
 }
 
-/// Restore an [`RffKrls`] from [`save_rffkrls`] output.
+/// Restore an [`RffKrls`] from [`save_rffkrls`] output. Reads both the
+/// packed layout (`"p_packed"`, format 3) and the legacy dense layout
+/// (`"p"`, format 2) — dense documents are translated to packed at this
+/// boundary (P is symmetric by codec contract; the strict lower
+/// triangle of a dense document is ignored).
 pub fn load_rffkrls(text: &str, registry: Option<&MapRegistry>) -> Result<RffKrls> {
     let (v, map) = open_filter_doc(text, "rffkrls")?;
     let theta = get_arr(&v, "theta")?;
-    let p = get_arr(&v, "p")?;
     let beta = get_num(&v, "beta")?;
     let lambda = get_num(&v, "lambda")?;
     let map = map.resolve(registry);
     let d_feat = map.features();
-    anyhow::ensure!(
-        theta.len() == d_feat && p.len() == d_feat * d_feat,
-        "state shape mismatch"
-    );
+    anyhow::ensure!(theta.len() == d_feat, "state shape mismatch");
+    let packed = if v.get("p_packed").is_some() {
+        let packed = get_arr(&v, "p_packed")?;
+        anyhow::ensure!(
+            packed.len() == crate::linalg::simd::packed_len(d_feat),
+            "packed P shape mismatch"
+        );
+        packed
+    } else {
+        let p = get_arr(&v, "p")?;
+        anyhow::ensure!(p.len() == d_feat * d_feat, "state shape mismatch");
+        crate::linalg::simd::pack_upper(d_feat, &p)
+    };
     let mut f = RffKrls::new(map, beta, lambda);
-    f.restore_state(theta, p);
+    f.restore_state_packed(theta, packed);
     Ok(f)
 }
 
@@ -380,6 +405,45 @@ mod tests {
         for s in src2.take_samples(50) {
             assert_eq!(f.step(&s.x, s.y), g.step(&s.x, s.y));
         }
+    }
+
+    #[test]
+    fn krls_checkpoint_is_packed_and_reads_legacy_dense() {
+        // format coverage for the packed-P layout: the written document
+        // carries the packed triangle, and a hand-built legacy format-2
+        // dense document restores to the identical packed state
+        let mut rng = run_rng(7, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 13);
+        let mut f = RffKrls::new(map, 0.999, 1e-3);
+        let mut src = NonlinearWiener::new(run_rng(7, 1), 0.05);
+        for s in src.take_samples(80) {
+            f.step(&s.x, s.y);
+        }
+        let text = save_rffkrls(&f);
+        assert!(text.contains("\"p_packed\""));
+        assert!(!text.contains("\"p\""), "dense P must not be written anymore");
+        let g = load_rffkrls(&text, None).unwrap();
+        assert_eq!(g.p_packed(), f.p_packed());
+        assert_eq!(g.theta(), f.theta());
+
+        // legacy format-2 document: dense "p", format field 2
+        let mut v = JsonValue::parse(&text).unwrap();
+        match &mut v {
+            JsonValue::Object(obj) => {
+                obj.insert("format".into(), JsonValue::Number(2.0));
+                obj.remove("p_packed");
+                obj.insert("p".into(), arr(f.p().data().iter().copied()));
+            }
+            _ => unreachable!("checkpoint is an object"),
+        }
+        let legacy = v.to_string_pretty();
+        let h = load_rffkrls(&legacy, None).unwrap();
+        assert_eq!(
+            h.p_packed(),
+            f.p_packed(),
+            "dense → packed boundary translation must be exact"
+        );
+        assert_eq!(h.theta(), f.theta());
     }
 
     #[test]

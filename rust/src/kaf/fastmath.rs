@@ -2,54 +2,22 @@
 //!
 //! `libm`'s `cos`/`exp` are scalar calls the compiler cannot vectorize;
 //! at D = 300 features they dominate the RFF step (≈70% of wall time in
-//! the §Perf profile). These branch-free polynomial versions vectorize
-//! under `-C opt-level=3` and are accurate to ~1e-7 relative — far below
-//! the f32 artifact precision and the Monte-Carlo noise of every
-//! experiment. Both QKLMS (exp) and RFF (cos) hot paths use them, so the
-//! Table-1 comparison stays implementation-fair.
+//! the §Perf profile). The polynomial versions vectorize under
+//! `-C opt-level=3` and are accurate to ~1e-7 relative — far below the
+//! f32 artifact precision and the Monte-Carlo noise of every experiment.
+//! Both QKLMS (exp) and RFF (cos) hot paths use them, so the Table-1
+//! comparison stays implementation-fair.
+//!
+//! The cosine itself lives in the lane substrate
+//! ([`crate::linalg::simd`]) together with its lane-wide form
+//! [`fast_cos_lanes`](crate::linalg::simd::fast_cos_lanes) — hot loops
+//! consume whole `[f64; LANES]` chunks and fall back to the scalar
+//! [`fast_cos`] only on the tail; this module re-exports the scalar for
+//! the exp-side callers (QKLMS) and the benches.
 
-/// Fast cosine, |err| < 2e-8 for |x| < 2^20 (range-reduced minimax poly).
-///
-/// Strategy: reduce to `r ∈ [-π/4, π/4]` with quadrant index, evaluate
-/// the sin/cos minimax polynomials, pick by quadrant. Branch-free except
-/// the final quadrant select (compiles to cmov/blend).
-#[inline]
-pub fn fast_cos(x: f64) -> f64 {
-    const FRAC_2_PI: f64 = core::f64::consts::FRAC_2_PI; // 2/pi
-    // Cody–Waite split of pi/2 for accurate reduction.
-    const PIO2_1: f64 = 1.570_796_326_794_896_6e0;
-    const PIO2_1T: f64 = 6.123_233_995_736_766e-17;
+use crate::linalg::simd::{self, LANES};
 
-    let ax = x.abs();
-    // quadrant: round(|x| * 2/pi)
-    let q = (ax * FRAC_2_PI + 0.5).floor();
-    let r = (ax - q * PIO2_1) - q * PIO2_1T;
-    let q = q as i64 & 3;
-
-    let r2 = r * r;
-    // sin(r)/cos(r) minimax polynomials on [-pi/4, pi/4]
-    let s = r + r * r2
-        * (-1.666_666_666_666_663e-1
-            + r2 * (8.333_333_333_322_118e-3
-                + r2 * (-1.984_126_982_958_954e-4
-                    + r2 * (2.755_731_329_901_505e-6
-                        + r2 * (-2.505_070_584_637_887e-8
-                            + r2 * 1.589_413_637_195_215e-10)))));
-    let c = 1.0 + r2
-        * (-0.5
-            + r2 * (4.166_666_666_666_016e-2
-                + r2 * (-1.388_888_888_887_057e-3
-                    + r2 * (2.480_158_728_823_386e-5
-                        + r2 * (-2.755_731_317_768_328e-7
-                            + r2 * 2.087_558_246_437_389e-9)))));
-    // cos(|x| ) = cos(r + q·π/2): select branchlessly via
-    //   even q → ±c, odd q → ∓s, sign flips when (q+1) & 2.
-    // Compiled to cmov/blend — keeps the loop vectorizable (§Perf).
-    let pick_s = (q & 1) != 0;
-    let negate = ((q + 1) & 2) != 0; // q ∈ {1, 2} (mod 4) → negative
-    let mag = if pick_s { s } else { c };
-    if negate { -mag } else { mag }
-}
+pub use crate::linalg::simd::fast_cos;
 
 /// Fast `exp(x)` for `x <= 0` (the kernel-evaluation case: the argument
 /// is `−dist²/(2σ²)`), |rel err| < 3e-9. Clamps to 0 below −708.
@@ -80,12 +48,26 @@ pub fn fast_exp_neg(x: f64) -> f64 {
 }
 
 /// Apply `out[i] = scale * cos(acc[i] + phase[i])` over slices — the RFF
-/// epilogue, written as a flat loop the auto-vectorizer handles.
+/// epilogue, consuming whole lanes through
+/// [`scaled_cos_lanes`](crate::linalg::simd::scaled_cos_lanes) with a
+/// scalar tail (same expression per element, so the lane/tail boundary
+/// is invisible bitwise).
 #[inline]
 pub fn cos_epilogue(acc: &[f64], phases: &[f64], scale: f64, out: &mut [f64]) {
     debug_assert_eq!(acc.len(), phases.len());
     debug_assert_eq!(acc.len(), out.len());
-    for i in 0..out.len() {
+    let n = out.len();
+    let lane_end = n - n % LANES;
+    let mut i0 = 0;
+    while i0 < lane_end {
+        let mut args = [0.0; LANES];
+        for l in 0..LANES {
+            args[l] = acc[i0 + l] + phases[i0 + l];
+        }
+        out[i0..i0 + LANES].copy_from_slice(&simd::scaled_cos_lanes(&args, scale));
+        i0 += LANES;
+    }
+    for i in lane_end..n {
         out[i] = scale * fast_cos(acc[i] + phases[i]);
     }
 }

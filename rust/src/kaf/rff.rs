@@ -6,6 +6,23 @@
 //! contiguously), so `z_i = cos(ω_iᵀx + b_i)` streams one cache line per
 //! feature — the layout the perf pass settled on (see EXPERIMENTS.md §Perf).
 //!
+//! ## Lane substrate
+//!
+//! The feature loop of every kernel here is a **lane loop**: features
+//! are consumed in `[f64; LANES]` chunks through the SIMD substrate
+//! ([`crate::linalg::simd`]) — fused dot+phase lane evaluation
+//! ([`simd::phase_args_lane`]) into the vectorized lane cosine
+//! ([`simd::scaled_cos_lanes`]) — with the `D mod LANES` tail finished
+//! by the scalar twins ([`simd::phase_arg`], [`simd::fast_cos`]). Lane
+//! and tail evaluate the same expression per element (including the
+//! tiny-d ∈ {1, 2} register specializations, which live inside the lane
+//! primitive), so results never depend on where the lane boundary falls;
+//! `tests/lane_tails.rs` pins this with `D` coprime to `LANES`. The
+//! fused `ŷ = θᵀz` accumulation is a single sequential accumulator in
+//! index-ascending order — [`seq_dot`](crate::linalg::seq_dot) order —
+//! in *every* path (per-row, batched, Z-free predict), which is what
+//! makes the bitwise-parity guarantees below possible.
+//!
 //! ## Batch substrate
 //!
 //! Because the map is frozen, `z_Ω` over a whole batch is a dense
@@ -15,12 +32,12 @@
 //! [`RffMap::predict_batch_into`] computes `ŷ` alone, skipping the Z
 //! store — the serving hot path. The kernels are **blocked** —
 //! rows are processed in blocks of [`ROW_BLOCK`], and within a block the
-//! loop runs *features outer, rows inner*, so each `ω_i` row (and `θ_i`)
-//! is loaded once per block and reused across every row while the block's
-//! output stays cache-resident. [`FeatureScratch`] is the reusable arena
-//! of the fused Z+ŷ kernel; the Z-free predict kernel writes into a
-//! caller-owned buffer — either way steady-state batch work allocates
-//! nothing.
+//! loop runs *feature-lanes outer, rows inner*, so each `[LANES]` chunk
+//! of `ω`/`b`/`θ` is loaded once per block and reused across every row
+//! while the block's output stays cache-resident. [`FeatureScratch`] is
+//! the reusable arena of the fused Z+ŷ kernel; the Z-free predict kernel
+//! writes into a caller-owned buffer — either way steady-state batch
+//! work allocates nothing.
 //! Every batch element is computed by the *same expression* as the
 //! per-row [`RffMap::apply_into`] / [`RffMap::apply_dot_into`] paths, so
 //! batched and per-row results are bitwise identical (asserted by the
@@ -28,9 +45,8 @@
 
 use std::sync::{Arc, OnceLock};
 
+use crate::linalg::simd::{self, LANES};
 use crate::rng::{Distribution, Rng, Uniform};
-
-use super::fastmath::fast_cos;
 
 use super::kernels::Kernel;
 
@@ -206,35 +222,26 @@ impl RffMap {
     }
 
     /// Apply the map: write `z_Ω(x)` into `out` (length D).
-    /// This is the Rust hot path mirrored by the Pallas kernel.
+    /// This is the Rust hot path mirrored by the Pallas kernel: the
+    /// feature loop walks whole lanes ([`simd::phase_args_lane`] →
+    /// [`simd::scaled_cos_lanes`], with the tiny-d ∈ {1, 2}
+    /// specializations inside the lane primitive) and finishes the
+    /// `D mod LANES` tail through the bitwise-identical scalar path.
     #[inline]
     pub fn apply_into(&self, x: &[f64], out: &mut [f64]) {
         debug_assert_eq!(x.len(), self.dim);
         debug_assert_eq!(out.len(), self.features);
-        let d = self.dim;
-        match d {
-            // The paper's experiments have d ∈ {1, 2, 5}: specialise the
-            // tiny-d inner products so the compiler keeps them in registers.
-            1 => {
-                let x0 = x[0];
-                for i in 0..self.features {
-                    out[i] = self.scale * fast_cos(self.omega_t[i] * x0 + self.phases[i]);
-                }
-            }
-            2 => {
-                let (x0, x1) = (x[0], x[1]);
-                for i in 0..self.features {
-                    let w = &self.omega_t[i * 2..i * 2 + 2];
-                    out[i] = self.scale * fast_cos(w[0] * x0 + w[1] * x1 + self.phases[i]);
-                }
-            }
-            _ => {
-                for i in 0..self.features {
-                    let w = &self.omega_t[i * d..(i + 1) * d];
-                    let acc = crate::linalg::dot(w, x);
-                    out[i] = self.scale * fast_cos(acc + self.phases[i]);
-                }
-            }
+        let feats = self.features;
+        let lane_end = feats - feats % LANES;
+        let mut i0 = 0;
+        while i0 < lane_end {
+            let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
+            out[i0..i0 + LANES].copy_from_slice(&simd::scaled_cos_lanes(&args, self.scale));
+            i0 += LANES;
+        }
+        for i in lane_end..feats {
+            out[i] =
+                self.scale * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
         }
     }
 
@@ -247,39 +254,34 @@ impl RffMap {
 
     /// Fused `z = z_Ω(x)` **and** `ŷ = θᵀz` in a single pass over the
     /// features — saves one full sweep of `z`/`θ` per filter step
-    /// (the §Perf pass measured the win on the RFF-KLMS step).
+    /// (the §Perf pass measured the win on the RFF-KLMS step). Lane
+    /// loop like [`Self::apply_into`]; the `ŷ` accumulation stays a
+    /// single sequential accumulator in index-ascending order (within a
+    /// lane and across lanes), i.e. exactly
+    /// [`seq_dot`](crate::linalg::seq_dot) order — the contract the
+    /// batch kernels and the batched train paths match bitwise.
     #[inline]
     pub fn apply_dot_into(&self, x: &[f64], theta: &[f64], out: &mut [f64]) -> f64 {
         debug_assert_eq!(theta.len(), self.features);
         debug_assert_eq!(out.len(), self.features);
-        let d = self.dim;
+        let feats = self.features;
+        let lane_end = feats - feats % LANES;
         let mut acc = 0.0;
-        match d {
-            1 => {
-                let x0 = x[0];
-                for i in 0..self.features {
-                    let z = self.scale * fast_cos(self.omega_t[i] * x0 + self.phases[i]);
-                    out[i] = z;
-                    acc += theta[i] * z;
-                }
+        let mut i0 = 0;
+        while i0 < lane_end {
+            let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
+            let zl = simd::scaled_cos_lanes(&args, self.scale);
+            out[i0..i0 + LANES].copy_from_slice(&zl);
+            for l in 0..LANES {
+                acc += theta[i0 + l] * zl[l];
             }
-            2 => {
-                let (x0, x1) = (x[0], x[1]);
-                for i in 0..self.features {
-                    let w = &self.omega_t[i * 2..i * 2 + 2];
-                    let z = self.scale * fast_cos(w[0] * x0 + w[1] * x1 + self.phases[i]);
-                    out[i] = z;
-                    acc += theta[i] * z;
-                }
-            }
-            _ => {
-                for i in 0..self.features {
-                    let w = &self.omega_t[i * d..(i + 1) * d];
-                    let z = self.scale * fast_cos(crate::linalg::dot(w, x) + self.phases[i]);
-                    out[i] = z;
-                    acc += theta[i] * z;
-                }
-            }
+            i0 += LANES;
+        }
+        for i in lane_end..feats {
+            let z =
+                self.scale * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
+            out[i] = z;
+            acc += theta[i] * z;
         }
         acc
     }
@@ -287,12 +289,19 @@ impl RffMap {
     /// Blocked batch kernel core. `xs` is row-major `[n, d]`. With
     /// `STORE_Z`, writes the row-major `[n, D]` feature matrix into `z`;
     /// with `FUSED`, accumulates `yhat[r] = Σ_i θ_i z_ri` (caller zeroes
-    /// `yhat`) — the per-row accumulation order is `i` ascending with a
-    /// single accumulator, bitwise identical to [`Self::apply_dot_into`].
-    /// Predict-only callers set `STORE_Z = false` and skip the `[n, D]`
-    /// store traffic entirely. Rows go in blocks of [`ROW_BLOCK`]; within
-    /// a block the feature loop is outer so `ω_i`/`b_i`/`θ_i` load once
-    /// per block and the row-inner loop vectorizes.
+    /// `yhat`). Predict-only callers set `STORE_Z = false` and skip the
+    /// `[n, D]` store traffic entirely.
+    ///
+    /// Loop structure: rows in blocks of [`ROW_BLOCK`]; within a block
+    /// the **feature-lane** loop is outer (a `[LANES]` chunk of
+    /// `ω`/`b`/`θ` loads once per block) and rows are inner, each row
+    /// evaluating the lane through the same
+    /// [`simd::phase_args_lane`] → [`simd::scaled_cos_lanes`] pair as
+    /// [`Self::apply_into`]. The fused accumulation adds `θ_l·z_l` into
+    /// `yhat[r]` sequentially within the lane, lanes (then the scalar
+    /// feature tail) in ascending order — so per row the adds hit the
+    /// accumulator in plain index-ascending order, bitwise identical to
+    /// [`Self::apply_dot_into`].
     #[inline]
     fn batch_core<const FUSED: bool, const STORE_Z: bool>(
         &self,
@@ -312,62 +321,48 @@ impl RffMap {
             debug_assert_eq!(theta.len(), feats);
             debug_assert_eq!(yhat.len(), n);
         }
+        let lane_end = feats - feats % LANES;
         let mut r0 = 0;
         while r0 < n {
             let bn = ROW_BLOCK.min(n - r0);
             let xb = &xs[r0 * d..(r0 + bn) * d];
-            match d {
-                // same tiny-d specializations as `apply_into`: the weights
-                // stay in registers across the whole row-inner loop.
-                1 => {
-                    for i in 0..feats {
-                        let w0 = self.omega_t[i];
-                        let ph = self.phases[i];
-                        let th = if FUSED { theta[i] } else { 0.0 };
-                        for r in 0..bn {
-                            let zi = self.scale * fast_cos(w0 * xb[r] + ph);
-                            if STORE_Z {
-                                z[(r0 + r) * feats + i] = zi;
-                            }
-                            if FUSED {
-                                yhat[r0 + r] += th * zi;
-                            }
+            let mut i0 = 0;
+            while i0 < lane_end {
+                // stage the θ lane once per block
+                let mut th = [0.0; LANES];
+                if FUSED {
+                    th.copy_from_slice(&theta[i0..i0 + LANES]);
+                }
+                for r in 0..bn {
+                    let x = &xb[r * d..(r + 1) * d];
+                    let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
+                    let zl = simd::scaled_cos_lanes(&args, self.scale);
+                    if STORE_Z {
+                        let row = (r0 + r) * feats;
+                        z[row + i0..row + i0 + LANES].copy_from_slice(&zl);
+                    }
+                    if FUSED {
+                        let acc = &mut yhat[r0 + r];
+                        for l in 0..LANES {
+                            *acc += th[l] * zl[l];
                         }
                     }
                 }
-                2 => {
-                    for i in 0..feats {
-                        let w = &self.omega_t[i * 2..i * 2 + 2];
-                        let (w0, w1) = (w[0], w[1]);
-                        let ph = self.phases[i];
-                        let th = if FUSED { theta[i] } else { 0.0 };
-                        for r in 0..bn {
-                            let zi = self.scale
-                                * fast_cos(w0 * xb[r * 2] + w1 * xb[r * 2 + 1] + ph);
-                            if STORE_Z {
-                                z[(r0 + r) * feats + i] = zi;
-                            }
-                            if FUSED {
-                                yhat[r0 + r] += th * zi;
-                            }
-                        }
+                i0 += LANES;
+            }
+            // scalar tail features (feats mod LANES), same per-element
+            // expression and the same index-ascending accumulation
+            for i in lane_end..feats {
+                let th = if FUSED { theta[i] } else { 0.0 };
+                for r in 0..bn {
+                    let x = &xb[r * d..(r + 1) * d];
+                    let zi = self.scale
+                        * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
+                    if STORE_Z {
+                        z[(r0 + r) * feats + i] = zi;
                     }
-                }
-                _ => {
-                    for i in 0..feats {
-                        let w = &self.omega_t[i * d..(i + 1) * d];
-                        let ph = self.phases[i];
-                        let th = if FUSED { theta[i] } else { 0.0 };
-                        for r in 0..bn {
-                            let x = &xb[r * d..(r + 1) * d];
-                            let zi = self.scale * fast_cos(crate::linalg::dot(w, x) + ph);
-                            if STORE_Z {
-                                z[(r0 + r) * feats + i] = zi;
-                            }
-                            if FUSED {
-                                yhat[r0 + r] += th * zi;
-                            }
-                        }
+                    if FUSED {
+                        yhat[r0 + r] += th * zi;
                     }
                 }
             }

@@ -23,6 +23,9 @@ pub struct RffKlms {
     /// Scratch feature buffer reused across steps (no per-sample alloc —
     /// this is the L3 hot path).
     z: Vec<f64>,
+    /// Batch feature-block scratch (`[ROW_BLOCK, D]` max), grown once on
+    /// first batch call — steady-state `train_batch` allocates nothing.
+    zb: Vec<f64>,
 }
 
 impl RffKlms {
@@ -33,7 +36,14 @@ impl RffKlms {
         assert!(mu > 0.0);
         let map = map.into();
         let d_feat = map.features();
-        Self { map, theta: vec![0.0; d_feat], mu, z: vec![0.0; d_feat] }
+        Self { map, theta: vec![0.0; d_feat], mu, z: vec![0.0; d_feat], zb: Vec::new() }
+    }
+
+    /// Approximate heap footprint of this filter's **own** state in
+    /// bytes — θ plus the z/batch scratches; the shared map is counted
+    /// once per fleet via [`RffMap::heap_bytes`].
+    pub fn heap_bytes(&self) -> usize {
+        (self.theta.len() + self.z.len() + self.zb.capacity()) * 8
     }
 
     /// The feature map (shared with the AOT artifacts in PJRT mode).
@@ -89,16 +99,22 @@ impl OnlineRegressor for RffKlms {
         if ys.is_empty() {
             return Vec::new();
         }
-        // Only the θ-independent feature map is batched (blocked, features
-        // outer); θ updates stay strictly sequential, so the errors and
-        // final θ are bitwise identical to per-row step() calls.
+        // Only the θ-independent feature map is batched (blocked lane
+        // kernels, feature-lanes outer) into the filter-owned scratch;
+        // θ updates stay strictly sequential, so the errors and final θ
+        // are bitwise identical to per-row step() calls — and the
+        // steady-state batch path allocates nothing but the error vec.
         let feats = self.theta.len();
+        let need = ROW_BLOCK.min(ys.len()) * feats;
+        if self.zb.len() < need {
+            self.zb.resize(need, 0.0);
+        }
         let mut errs = Vec::with_capacity(ys.len());
-        let mut zb = vec![0.0; ROW_BLOCK.min(ys.len()) * feats];
         for (xs_block, ys_block) in xs.chunks(ROW_BLOCK * dim).zip(ys.chunks(ROW_BLOCK)) {
-            let zb = &mut zb[..ys_block.len() * feats];
-            self.map.apply_batch_into(xs_block, zb);
-            for (z_r, &y) in zb.chunks_exact(feats).zip(ys_block) {
+            let bn = ys_block.len();
+            self.map.apply_batch_into(xs_block, &mut self.zb[..bn * feats]);
+            for (r, &y) in ys_block.iter().enumerate() {
+                let z_r = &self.zb[r * feats..(r + 1) * feats];
                 let e = y - seq_dot(&self.theta, z_r);
                 axpy(self.mu * e, z_r, &mut self.theta);
                 errs.push(e);

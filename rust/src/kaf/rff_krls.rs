@@ -11,23 +11,42 @@
 //! ```
 //! with `P₀ = I/λ`. O(D²) per step but no dictionary search and roughly
 //! half the cost of Engel's KRLS at matched accuracy (Fig. 2b).
+//!
+//! ## Packed-triangular P
+//!
+//! The recursion keeps `P` symmetric, so the live state is the **packed
+//! upper triangle** — `D(D+1)/2` floats ([`simd::packed_len`]) instead
+//! of `D²`. The two O(D²) kernels run on the packed layout through the
+//! lane substrate: [`simd::packed_symv`] (`π = Pz`: each stored element
+//! read once for its two symmetric roles — half the memory traffic) and
+//! [`simd::packed_rank1_scaled`] (`P ← (P − π πᵀ/denom)/β`: exactly
+//! `D(D+1)/2` multiply-add pairs — **half the flops and half the
+//! resident bytes** of the dense update, the dominant cost of the step).
+//! Feature evaluation (`z_Ω`, `θᵀz`) rides the same lane kernels as
+//! every other filter (see [`RffMap`]). Dense `[D, D]` views exist only
+//! at boundaries: [`RffKrls::p`] reconstructs one for
+//! diagnostics/tests, and [`RffKrls::restore_state`] accepts the legacy
+//! dense checkpoint layout (translated on entry; the packed twin is
+//! [`RffKrls::restore_state_packed`]).
 
 use std::sync::Arc;
 
 use super::rff::{RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
-use crate::linalg::{dot, seq_dot, Mat};
+use crate::linalg::simd;
+use crate::linalg::{seq_dot, Mat};
 
 /// The paper's RFF-KRLS filter.
 ///
 /// Like [`super::RffKlms`], holds its frozen map behind an `Arc` so
-/// same-config filters share one resident `(Ω, b)`; θ and P are the
-/// per-filter state.
+/// same-config filters share one resident `(Ω, b)`; θ and the packed P
+/// are the per-filter state.
 pub struct RffKrls {
     map: Arc<RffMap>,
     theta: Vec<f64>,
-    /// Inverse-correlation estimate P (D x D).
-    p: Mat,
+    /// Inverse-correlation estimate P as its packed upper triangle
+    /// (`D(D+1)/2` floats; row `i` stores columns `i..D` contiguously).
+    pt: Vec<f64>,
     /// Forgetting factor β ∈ (0, 1].
     beta: f64,
     /// Regularization λ (enters via `P₀ = I/λ`).
@@ -35,6 +54,9 @@ pub struct RffKrls {
     /// Scratch buffers (hot path, no per-sample allocation).
     z: Vec<f64>,
     pi: Vec<f64>,
+    /// Batch feature-block scratch (`[ROW_BLOCK, D]` max), grown once on
+    /// first batch call — steady-state `train_batch` allocates nothing.
+    zb: Vec<f64>,
 }
 
 impl RffKrls {
@@ -46,14 +68,21 @@ impl RffKrls {
         assert!(lambda > 0.0, "lambda must be positive");
         let map = map.into();
         let d_feat = map.features();
+        // P₀ = I/λ in packed-upper layout: each row's first stored
+        // element is its diagonal.
+        let mut pt = vec![0.0; simd::packed_len(d_feat)];
+        for i in 0..d_feat {
+            pt[simd::packed_row_start(d_feat, i)] = 1.0 / lambda;
+        }
         Self {
             map,
             theta: vec![0.0; d_feat],
-            p: Mat::scaled_eye(d_feat, 1.0 / lambda),
+            pt,
             beta,
             lambda,
             z: vec![0.0; d_feat],
             pi: vec![0.0; d_feat],
+            zb: Vec::new(),
         }
     }
 
@@ -72,9 +101,19 @@ impl RffKrls {
         &self.theta
     }
 
-    /// Inverse-correlation matrix P.
-    pub fn p(&self) -> &Mat {
-        &self.p
+    /// Inverse-correlation matrix P, reconstructed dense (exactly
+    /// symmetric by construction). O(D²) copy — diagnostics and tests
+    /// only; the live state is [`Self::p_packed`].
+    pub fn p(&self) -> Mat {
+        let d_feat = self.theta.len();
+        Mat::from_vec(d_feat, d_feat, simd::unpack_symmetric(d_feat, &self.pt))
+    }
+
+    /// The live packed upper triangle of P (`D(D+1)/2` floats; row `i`
+    /// stores columns `i..D` starting at
+    /// [`simd::packed_row_start`]`(D, i)`).
+    pub fn p_packed(&self) -> &[f64] {
+        &self.pt
     }
 
     /// Regularization λ.
@@ -87,44 +126,56 @@ impl RffKrls {
         self.beta
     }
 
-    /// Restore `(θ, P)` from a checkpoint (shapes must match `D`).
+    /// Restore `(θ, P)` from a **dense** row-major `[D, D]` P (the
+    /// legacy checkpoint layout). P is symmetric by contract; the strict
+    /// lower triangle is ignored at the boundary. Prefer
+    /// [`Self::restore_state_packed`] for packed documents.
     pub fn restore_state(&mut self, theta: Vec<f64>, p_flat: Vec<f64>) {
         let d_feat = self.theta.len();
-        assert_eq!(theta.len(), d_feat);
         assert_eq!(p_flat.len(), d_feat * d_feat);
+        self.restore_state_packed(theta, simd::pack_upper(d_feat, &p_flat));
+    }
+
+    /// Restore `(θ, P)` from the packed upper triangle (the native
+    /// checkpoint/snapshot layout; shapes must match `D`).
+    pub fn restore_state_packed(&mut self, theta: Vec<f64>, p_packed: Vec<f64>) {
+        let d_feat = self.theta.len();
+        assert_eq!(theta.len(), d_feat);
+        assert_eq!(p_packed.len(), simd::packed_len(d_feat));
         self.theta = theta;
-        self.p = crate::linalg::Mat::from_vec(d_feat, d_feat, p_flat);
+        self.pt = p_packed;
+    }
+
+    /// Approximate heap footprint of this filter's **own** state in
+    /// bytes — θ, packed P, and the z/π/batch scratches; the shared map
+    /// is counted once per fleet via [`RffMap::heap_bytes`]. The packed
+    /// layout makes this ~half the dense filter's footprint at large D
+    /// (§Memory accounting in EXPERIMENTS.md).
+    pub fn heap_bytes(&self) -> usize {
+        (self.theta.len() + self.pt.len() + self.z.len() + self.pi.len() + self.zb.capacity())
+            * 8
     }
 
     /// The RLS update given features already in `self.z` and the a-priori
     /// prediction `yhat`; returns the a-priori error. The single update
     /// kernel shared by [`OnlineRegressor::step`] and
-    /// [`OnlineRegressor::train_batch`] — identical math, one code path.
+    /// [`OnlineRegressor::train_batch`] — identical math, one code path,
+    /// running entirely on the packed lane kernels.
     fn rls_update_from_z(&mut self, yhat: f64, y: f64) -> f64 {
         let d_feat = self.theta.len();
-        // pi = P z (P symmetric; row-major matvec)
-        for i in 0..d_feat {
-            self.pi[i] = dot(self.p.row(i), &self.z);
-        }
-        let denom = self.beta + dot(&self.z, &self.pi);
+        // π = P z on the packed triangle (deterministic order; see
+        // `simd::packed_symv`)
+        simd::packed_symv(d_feat, &self.pt, &self.z, &mut self.pi);
+        let denom = self.beta + simd::dot(&self.z, &self.pi);
         let e = y - yhat;
         let escale = e / denom;
         // θ += (π/denom) e  — k = π/denom never materialised
-        for (t, &pi_i) in self.theta.iter_mut().zip(self.pi.iter()) {
-            *t += pi_i * escale;
-        }
-        // P ← (P − π πᵀ/denom) / β, symmetric rank-1, one pass; zip
-        // (not indexing) so the inner loop is bounds-check-free and
-        // vectorizes (§Perf).
+        simd::axpy(escale, &self.pi, &mut self.theta);
+        // P ← (P − π πᵀ/denom) / β: D(D+1)/2 multiply-add pairs on the
+        // packed triangle — half the dense update's flops/bytes
         let inv_beta = 1.0 / self.beta;
         let c = inv_beta / denom;
-        for i in 0..d_feat {
-            let cpi = c * self.pi[i];
-            let row = self.p.row_mut(i);
-            for (r, &pj) in row.iter_mut().zip(self.pi.iter()) {
-                *r = *r * inv_beta - cpi * pj;
-            }
-        }
+        simd::packed_rank1_scaled(d_feat, &mut self.pt, &self.pi, inv_beta, c);
         e
     }
 }
@@ -161,17 +212,21 @@ impl OnlineRegressor for RffKrls {
         if ys.is_empty() {
             return Vec::new();
         }
-        // batch the θ-independent feature map (blocked), keep the O(D²)
-        // RLS recursion strictly sequential through the shared kernel —
-        // bitwise identical to per-row step() calls
+        // batch the θ-independent feature map (blocked lane kernels) into
+        // the filter-owned scratch, keep the O(D²) RLS recursion strictly
+        // sequential through the shared kernel — bitwise identical to
+        // per-row step() calls, zero allocations at steady state
         let feats = self.theta.len();
+        let need = ROW_BLOCK.min(ys.len()) * feats;
+        if self.zb.len() < need {
+            self.zb.resize(need, 0.0);
+        }
         let mut errs = Vec::with_capacity(ys.len());
-        let mut zb = vec![0.0; ROW_BLOCK.min(ys.len()) * feats];
         for (xs_block, ys_block) in xs.chunks(ROW_BLOCK * dim).zip(ys.chunks(ROW_BLOCK)) {
-            let zb = &mut zb[..ys_block.len() * feats];
-            self.map.apply_batch_into(xs_block, zb);
-            for (z_r, &y) in zb.chunks_exact(feats).zip(ys_block) {
-                self.z.copy_from_slice(z_r);
+            let bn = ys_block.len();
+            self.map.apply_batch_into(xs_block, &mut self.zb[..bn * feats]);
+            for (r, &y) in ys_block.iter().enumerate() {
+                self.z.copy_from_slice(&self.zb[r * feats..(r + 1) * feats]);
                 let yhat = seq_dot(&self.theta, &self.z);
                 errs.push(self.rls_update_from_z(yhat, y));
             }
@@ -237,11 +292,30 @@ mod tests {
         for s in src.take_samples(400) {
             f.step(&s.x, s.y);
         }
-        assert!(f.p().is_symmetric(1e-6));
+        // the packed representation is symmetric by construction — the
+        // dense reconstruction must be exactly symmetric, not just close
+        assert!(f.p().is_symmetric(0.0));
         // positive definite (Cholesky succeeds)
-        let mut p = f.p().clone();
+        let mut p = f.p();
         p.symmetrize();
         assert!(crate::linalg::Cholesky::new(&p).is_some());
+    }
+
+    #[test]
+    fn packed_storage_is_half_the_dense_footprint() {
+        // loop-bound/accounting gate: the live P is D(D+1)/2 floats and
+        // the filter's heap accounting reflects it — 2·len(P) = D² + D.
+        let d_feat = 33; // coprime with the lane width
+        let f = RffKrls::new(map(5, 5, d_feat), 0.9995, 1e-4);
+        assert_eq!(f.p_packed().len(), d_feat * (d_feat + 1) / 2);
+        assert_eq!(2 * f.p_packed().len(), d_feat * d_feat + d_feat);
+        let dense_equiv = (d_feat * d_feat + 3 * d_feat) * 8;
+        assert!(
+            f.heap_bytes() < dense_equiv * 3 / 4,
+            "heap {} should be well under the dense-layout {}",
+            f.heap_bytes(),
+            dense_equiv
+        );
     }
 
     #[test]
@@ -280,11 +354,39 @@ mod tests {
         let got = batched.train_batch(5, &xs, &ys);
         assert_eq!(got, want, "a-priori errors diverged");
         assert_eq!(batched.theta(), per_row.theta(), "theta diverged");
-        assert_eq!(batched.p().data(), per_row.p().data(), "P diverged");
+        assert_eq!(batched.p_packed(), per_row.p_packed(), "P diverged");
         let mut out = vec![0.0; 4];
         batched.predict_batch(5, &xs[..20], &mut out);
         for (r, &v) in out.iter().enumerate() {
             assert_eq!(v, per_row.predict(&xs[r * 5..(r + 1) * 5]));
+        }
+    }
+
+    #[test]
+    fn restore_state_accepts_dense_and_packed() {
+        let m = map(9, 5, 24);
+        let mut trained = RffKrls::new(m.clone(), 0.999, 1e-3);
+        let mut src = NonlinearWiener::new(run_rng(9, 1), 0.05);
+        for s in src.take_samples(120) {
+            trained.step(&s.x, s.y);
+        }
+        // packed round-trip is exact
+        let mut packed_restored = RffKrls::new(m.clone(), 0.999, 1e-3);
+        packed_restored
+            .restore_state_packed(trained.theta().to_vec(), trained.p_packed().to_vec());
+        assert_eq!(packed_restored.p_packed(), trained.p_packed());
+        // dense (legacy) round-trip through the reconstruction is exact
+        // too: the dense view's upper triangle IS the packed state
+        let mut dense_restored = RffKrls::new(m, 0.999, 1e-3);
+        dense_restored.restore_state(trained.theta().to_vec(), trained.p().data().to_vec());
+        assert_eq!(dense_restored.p_packed(), trained.p_packed());
+        // identical continuation from either restore
+        for s in src.take_samples(40) {
+            let a = trained.step(&s.x, s.y);
+            let b = packed_restored.step(&s.x, s.y);
+            let c = dense_restored.step(&s.x, s.y);
+            assert_eq!(a, b);
+            assert_eq!(a, c);
         }
     }
 

@@ -20,6 +20,9 @@ pub struct RffNlms {
     mu: f64,
     eps: f64,
     z: Vec<f64>,
+    /// Batch feature-block scratch (`[ROW_BLOCK, D]` max), grown once on
+    /// first batch call — steady-state `train_batch` allocates nothing.
+    zb: Vec<f64>,
 }
 
 impl RffNlms {
@@ -29,7 +32,14 @@ impl RffNlms {
         assert!(mu > 0.0 && eps >= 0.0);
         let map = map.into();
         let d_feat = map.features();
-        Self { map, theta: vec![0.0; d_feat], mu, eps, z: vec![0.0; d_feat] }
+        Self { map, theta: vec![0.0; d_feat], mu, eps, z: vec![0.0; d_feat], zb: Vec::new() }
+    }
+
+    /// Approximate heap footprint of this filter's **own** state in
+    /// bytes — θ plus the z/batch scratches; the shared map is counted
+    /// once per fleet via [`RffMap::heap_bytes`].
+    pub fn heap_bytes(&self) -> usize {
+        (self.theta.len() + self.z.len() + self.zb.capacity()) * 8
     }
 
     /// The feature map.
@@ -100,15 +110,20 @@ impl OnlineRegressor for RffNlms {
         if ys.is_empty() {
             return Vec::new();
         }
-        // batched feature map, sequential normalized updates — bitwise
-        // identical to per-row step() calls
+        // batched feature map into the filter-owned scratch, sequential
+        // normalized updates — bitwise identical to per-row step()
+        // calls, no allocation at steady state beyond the error vec
         let feats = self.theta.len();
+        let need = ROW_BLOCK.min(ys.len()) * feats;
+        if self.zb.len() < need {
+            self.zb.resize(need, 0.0);
+        }
         let mut errs = Vec::with_capacity(ys.len());
-        let mut zb = vec![0.0; ROW_BLOCK.min(ys.len()) * feats];
         for (xs_block, ys_block) in xs.chunks(ROW_BLOCK * dim).zip(ys.chunks(ROW_BLOCK)) {
-            let zb = &mut zb[..ys_block.len() * feats];
-            self.map.apply_batch_into(xs_block, zb);
-            for (z_r, &y) in zb.chunks_exact(feats).zip(ys_block) {
+            let bn = ys_block.len();
+            self.map.apply_batch_into(xs_block, &mut self.zb[..bn * feats]);
+            for (r, &y) in ys_block.iter().enumerate() {
+                let z_r = &self.zb[r * feats..(r + 1) * feats];
                 let e = y - seq_dot(&self.theta, z_r);
                 let nrm = self.eps + dot(z_r, z_r);
                 axpy(self.mu * e / nrm, z_r, &mut self.theta);

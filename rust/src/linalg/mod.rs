@@ -2,22 +2,31 @@
 //! carries no `nalgebra`/`ndarray`).
 //!
 //! Provides exactly what the paper's pipeline needs:
+//! * [`simd`] — the lane-oriented SIMD substrate every hot loop runs
+//!   through (fixed-width chunk kernels, packed-triangular symmetric
+//!   storage, and the crate's [`dot`]/[`seq_dot`]/[`axpy`] primitives
+//!   with their documented accumulation orders),
 //! * [`Mat`] — row-major dense `f64` matrix with the usual ops,
-//! * [`lu`] — LU decomposition with partial pivoting (general solves,
+//! * [`Lu`] — LU decomposition with partial pivoting (general solves,
 //!   determinants, `R_zz⁻¹` in Eq. (8)),
-//! * [`cholesky`] — SPD factorization (KRLS gram solves, SPD checks),
-//! * [`eigen`] — symmetric Jacobi eigensolver (λ_max(R_zz) for the
-//!   step-size bounds of Proposition 1).
+//! * [`Cholesky`] — SPD factorization (KRLS gram solves, SPD checks),
+//! * [`symmetric_eigen`] — symmetric Jacobi eigensolver (λ_max(R_zz)
+//!   for the step-size bounds of Proposition 1).
 
 mod cholesky;
 mod eigen;
 mod lu;
 mod mat;
+pub mod simd;
 
 pub use cholesky::Cholesky;
 pub use eigen::{symmetric_eigen, symmetric_eigenvalues, SymmetricEigen};
 pub use lu::Lu;
 pub use mat::Mat;
+// The slice primitives live in the lane substrate ([`simd`]) so there is
+// exactly one implementation of each accumulation order (see the
+// contract in `simd`'s module docs); these are the crate-wide names.
+pub use simd::{axpy, dot, seq_dot};
 
 /// Maximum absolute difference between two equally-shaped matrices.
 pub fn max_abs_diff(a: &Mat, b: &Mat) -> f64 {
@@ -27,58 +36,6 @@ pub fn max_abs_diff(a: &Mat, b: &Mat) -> f64 {
         .zip(b.data())
         .map(|(x, y)| (x - y).abs())
         .fold(0.0, f64::max)
-}
-
-/// Dot product of two equal-length slices with f64 accumulation.
-#[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than the naive fold
-    // and deterministic (fixed association order).
-    let n = a.len();
-    let mut acc = [0.0f64; 4];
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
-}
-
-/// Strictly sequential single-accumulator dot product.
-///
-/// Slower than [`dot`] (no unrolling) but its accumulation order matches
-/// the fused `θᵀz` accumulation inside
-/// [`RffMap::apply_dot_into`](crate::kaf::RffMap::apply_dot_into) and
-/// [`RffMap::apply_dot_batch`](crate::kaf::RffMap::apply_dot_batch)
-/// exactly. The batched train paths use it for their a-priori
-/// predictions so that batched and per-row runs produce bitwise-identical
-/// θ trajectories and error sequences (the batch-parity tests assert
-/// `==`, not an epsilon).
-#[inline]
-pub fn seq_dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
-    }
-    s
-}
-
-/// `y += alpha * x` over equal-length slices.
-#[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
 }
 
 /// Squared Euclidean distance between two equal-length slices.

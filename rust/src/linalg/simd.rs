@@ -1,0 +1,544 @@
+//! Lane-oriented SIMD substrate: fixed-width `[f64; LANES]` chunk
+//! kernels for every hot loop in the crate (stable Rust, no intrinsics —
+//! the fixed-size-array loops are the shape LLVM's auto-vectorizer
+//! reliably turns into vector code under `-C opt-level=3`, with or
+//! without `-C target-cpu=native`).
+//!
+//! Every caller that used to walk features one scalar at a time — the
+//! RFF map ([`RffMap::apply_into`](crate::kaf::RffMap::apply_into) /
+//! [`apply_dot_into`](crate::kaf::RffMap::apply_dot_into) / the blocked
+//! batch kernels), the packed-triangular KRLS recursion, and the
+//! coordinator's f32 native-step kernels — now runs its inner loop
+//! through these primitives, so serving and training share one vector
+//! code path.
+//!
+//! ## Accumulation-order contract
+//!
+//! Bitwise parity between the per-row, batched, and coordinator paths
+//! (asserted by `tests/batch_parity.rs`, `tests/snapshot_parity.rs` and
+//! `tests/lane_tails.rs`) rests on two documented orders:
+//!
+//! * [`dot`] (and the mixed-precision variants) accumulate into `LANES`
+//!   partial sums — lane `l` takes elements `l, l+LANES, l+2·LANES, …` —
+//!   reduced by a fixed pairwise tree, then a strictly sequential scalar
+//!   tail. Deterministic for a given length, but **not** the same
+//!   grouping as a sequential sum.
+//! * [`seq_dot`] is strictly sequential (single accumulator, index
+//!   ascending). This is exactly the order in which the fused kernels
+//!   accumulate `ŷ = θᵀz` (lane chunks ascending, elements within a
+//!   lane ascending — which *is* plain index-ascending order), so the
+//!   batched train paths use `seq_dot` for their a-priori predictions
+//!   and land bitwise on the per-row trajectory.
+//!
+//! Lane kernels and their scalar tails evaluate the *same expression
+//! per element* (the lane cos is [`fast_cos`] applied per lane; the lane
+//! phase-dot matches [`phase_arg`] bitwise, including the tiny-d
+//! specializations), so a result never depends on where the lane/tail
+//! boundary falls — `tests/lane_tails.rs` pins this with `D`, `n`
+//! coprime to `LANES`.
+//!
+//! ## Packed upper-triangular symmetric storage
+//!
+//! The RLS recursion (paper §6) keeps `P` symmetric, so the strict lower
+//! triangle is redundant. [`packed_len`]`(n) = n(n+1)/2` floats store
+//! row `i`'s columns `i..n` contiguously ([`packed_row_start`]), which
+//! keeps the rank-1 update ([`packed_rank1_scaled`]) and the row sweeps
+//! of the symmetric matvec ([`packed_symv`]) contiguous and
+//! vectorizable. The rank-1 update performs exactly `n(n+1)/2`
+//! multiply-add pairs — half the flops and half the resident bytes of
+//! the dense update (the dominant O(D²) cost of the KRLS step); the
+//! matvec still performs ~n² multiply-adds (a matvec must) but reads
+//! each stored element once for its two uses, halving memory traffic.
+
+/// Lane width of the substrate: 8 × f64 = one AVX-512 register or two
+/// AVX2 registers per chunk. Chosen over 4 because the `fast_cos`
+/// polynomial has enough ILP to keep two 256-bit pipes busy; see
+/// EXPERIMENTS.md §Perf for the sweep protocol (any power of two
+/// works — the whole tree, reduction included, adapts).
+pub const LANES: usize = 8;
+
+// The pairwise reduction halves the accumulator array, so the width
+// must be a power of two.
+const _: () = assert!(LANES.is_power_of_two());
+
+/// Reduce a lane of partial accumulators by the fixed halving tree
+/// (`acc[l] += acc[l + width]`, width `LANES/2 → 1`) — deterministic
+/// for a given `LANES`, and the single reduction order every lane dot
+/// shares.
+#[inline]
+fn reduce_lanes(mut acc: [f64; LANES]) -> f64 {
+    let mut width = LANES / 2;
+    while width >= 1 {
+        for l in 0..width {
+            acc[l] += acc[l + width];
+        }
+        if width == 1 {
+            break;
+        }
+        width /= 2;
+    }
+    acc[0]
+}
+
+/// Fast cosine, |err| < 2e-8 for |x| < 2^20 (range-reduced minimax
+/// poly). Branch-free except the final quadrant select (compiles to
+/// cmov/blend), so [`fast_cos_lanes`] vectorizes. This is the scalar
+/// tail-path primitive; hot loops should consume whole lanes.
+///
+/// Strategy: reduce to `r ∈ [-π/4, π/4]` with quadrant index, evaluate
+/// the sin/cos minimax polynomials, pick by quadrant.
+#[inline]
+pub fn fast_cos(x: f64) -> f64 {
+    const FRAC_2_PI: f64 = core::f64::consts::FRAC_2_PI; // 2/pi
+    // Cody–Waite split of pi/2 for accurate reduction.
+    const PIO2_1: f64 = 1.570_796_326_794_896_6e0;
+    const PIO2_1T: f64 = 6.123_233_995_736_766e-17;
+
+    let ax = x.abs();
+    // quadrant: round(|x| * 2/pi)
+    let q = (ax * FRAC_2_PI + 0.5).floor();
+    let r = (ax - q * PIO2_1) - q * PIO2_1T;
+    let q = q as i64 & 3;
+
+    let r2 = r * r;
+    // sin(r)/cos(r) minimax polynomials on [-pi/4, pi/4]
+    let s = r + r * r2
+        * (-1.666_666_666_666_663e-1
+            + r2 * (8.333_333_333_322_118e-3
+                + r2 * (-1.984_126_982_958_954e-4
+                    + r2 * (2.755_731_329_901_505e-6
+                        + r2 * (-2.505_070_584_637_887e-8
+                            + r2 * 1.589_413_637_195_215e-10)))));
+    let c = 1.0 + r2
+        * (-0.5
+            + r2 * (4.166_666_666_666_016e-2
+                + r2 * (-1.388_888_888_887_057e-3
+                    + r2 * (2.480_158_728_823_386e-5
+                        + r2 * (-2.755_731_317_768_328e-7
+                            + r2 * 2.087_558_246_437_389e-9)))));
+    // cos(|x|) = cos(r + q·π/2): select branchlessly via
+    //   even q → ±c, odd q → ∓s, sign flips when (q+1) & 2.
+    let pick_s = (q & 1) != 0;
+    let negate = ((q + 1) & 2) != 0; // q ∈ {1, 2} (mod 4) → negative
+    let mag = if pick_s { s } else { c };
+    if negate { -mag } else { mag }
+}
+
+/// [`fast_cos`] applied to a whole lane. Element `l` of the result is
+/// bitwise `fast_cos(args[l])` — same ops, evaluated `LANES`-wide, so
+/// lane and tail paths can never disagree.
+#[inline]
+pub fn fast_cos_lanes(args: &[f64; LANES]) -> [f64; LANES] {
+    let mut out = [0.0; LANES];
+    for l in 0..LANES {
+        out[l] = fast_cos(args[l]);
+    }
+    out
+}
+
+/// `scale * fast_cos(args[l])` per lane — the RFF feature epilogue.
+#[inline]
+pub fn scaled_cos_lanes(args: &[f64; LANES], scale: f64) -> [f64; LANES] {
+    let mut out = fast_cos_lanes(args);
+    for v in &mut out {
+        *v *= scale;
+    }
+    out
+}
+
+/// Scalar phase argument `ω_iᵀx + b_i` of feature `i` — the tail-path
+/// twin of [`phase_args_lane`]: for every `d` (including the tiny-d
+/// lane specializations) the two produce bitwise-identical values.
+#[inline]
+pub fn phase_arg(omega_t: &[f64], phases: &[f64], x: &[f64], i: usize) -> f64 {
+    let d = x.len();
+    dot(&omega_t[i * d..(i + 1) * d], x) + phases[i]
+}
+
+/// Fused dot+phase lane: `args[l] = ω_{i0+l}ᵀx + b_{i0+l}` for one lane
+/// of `LANES` consecutive features out of feature-major `omega_t`.
+/// Caller guarantees `i0 + LANES <= features`.
+///
+/// The paper's experiments have d ∈ {1, 2, 5}; d = 1 and d = 2 are
+/// specialised so the weights stream as flat lanes with `x` pinned in
+/// registers. Both specializations evaluate the same
+/// left-to-right sum as the generic [`dot`] path (whose unrolled stage
+/// needs ≥ `LANES` elements and therefore degenerates to the sequential
+/// tail for tiny d), so the specialization is invisible bitwise.
+#[inline]
+pub fn phase_args_lane(omega_t: &[f64], phases: &[f64], x: &[f64], i0: usize) -> [f64; LANES] {
+    let d = x.len();
+    let mut args = [0.0; LANES];
+    let ph = &phases[i0..i0 + LANES];
+    match d {
+        1 => {
+            let x0 = x[0];
+            let w = &omega_t[i0..i0 + LANES];
+            for l in 0..LANES {
+                args[l] = w[l] * x0 + ph[l];
+            }
+        }
+        2 => {
+            let (x0, x1) = (x[0], x[1]);
+            let w = &omega_t[i0 * 2..(i0 + LANES) * 2];
+            for l in 0..LANES {
+                args[l] = w[l * 2] * x0 + w[l * 2 + 1] * x1 + ph[l];
+            }
+        }
+        _ => {
+            for l in 0..LANES {
+                let w = &omega_t[(i0 + l) * d..(i0 + l + 1) * d];
+                args[l] = dot(w, x) + ph[l];
+            }
+        }
+    }
+    args
+}
+
+/// Dot product with `LANES` partial accumulators (see the module-level
+/// accumulation-order contract). The default dot of the crate —
+/// re-exported as `linalg::dot`.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    // fixed pairwise reduction tree, then the strictly sequential tail
+    let mut s = reduce_lanes(acc);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// Strictly sequential single-accumulator dot product.
+///
+/// Slower than [`dot`] (no lane parallelism) but its accumulation order
+/// matches the fused `θᵀz` accumulation inside
+/// [`RffMap::apply_dot_into`](crate::kaf::RffMap::apply_dot_into) and
+/// the batch kernels exactly (lane chunks ascending, sequential within a
+/// lane = plain index-ascending). The batched train paths use it for
+/// their a-priori predictions so batched and per-row runs produce
+/// bitwise-identical θ trajectories and error sequences (the
+/// batch-parity tests assert `==`, not an epsilon).
+#[inline]
+pub fn seq_dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha * x` over equal-length slices (elementwise — order
+/// doesn't matter; one lane-friendly flat loop).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+// ---- mixed-precision lanes (coordinator f32-state kernels) --------------
+
+/// f64-accumulated dot of an f32-state row with an f64 vector, `LANES`
+/// partial accumulators — the `π_i = P_i·z` row sweep of the f32 KRLS
+/// kernel (f32 storage, f64 math: the PJRT artifacts' precision
+/// profile).
+#[inline]
+pub fn dot_f32_f64(a: &[f32], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            acc[l] += xa[l] as f64 * xb[l];
+        }
+    }
+    let mut s = reduce_lanes(acc);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += *x as f64 * y;
+    }
+    s
+}
+
+/// f64-accumulated dot of an f64 vector with f32 state (`ŷ = θᵀz` of
+/// the f32 kernels), `LANES` partial accumulators.
+#[inline]
+pub fn dot_f64_f32(a: &[f64], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l] as f64;
+        }
+    }
+    let mut s = reduce_lanes(acc);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * *y as f64;
+    }
+    s
+}
+
+/// Strictly sequential f64-accumulated dot of an f64 vector with f32
+/// state — the mixed-precision twin of [`seq_dot`]. Because f32 → f64
+/// widening is exact, this produces the **bitwise-identical** value to
+/// `seq_dot(a, widen(b))`, i.e. the fused `θᵀz` order of the predict
+/// kernels: a PJRT session's direct predict and a
+/// `PredictState`-snapshot predict (which widens θ once) must agree
+/// exactly.
+#[inline]
+pub fn seq_dot_f64_f32(a: &[f64], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * *y as f64;
+    }
+    s
+}
+
+/// `y[i] += (alpha * x[i]) rounded to f32` — the f32-state θ write-back
+/// (f64 product, per-element f32 rounding; elementwise, so lane-safe).
+#[inline]
+pub fn axpy_into_f32(alpha: f64, x: &[f64], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += (alpha * xi) as f32;
+    }
+}
+
+/// One row of the f32 KRLS rank-1 update:
+/// `row[k] = f32(row[k]·s − cpi·pi[k])` — f64 math, f32 rounding on the
+/// write-back, elementwise (lane-safe).
+#[inline]
+pub fn scale_rank1_row_f32(row: &mut [f32], s: f64, cpi: f64, pi: &[f64]) {
+    debug_assert_eq!(row.len(), pi.len());
+    for (r, &pj) in row.iter_mut().zip(pi) {
+        *r = (*r as f64 * s - cpi * pj) as f32;
+    }
+}
+
+// ---- packed upper-triangular symmetric kernels --------------------------
+
+/// Number of floats in packed-upper storage of an `n × n` symmetric
+/// matrix: `n(n+1)/2`.
+pub const fn packed_len(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// Offset of `P[i, i]` in packed-upper storage — row `i` stores columns
+/// `i..n` contiguously starting here.
+pub const fn packed_row_start(n: usize, i: usize) -> usize {
+    // Σ_{k<i} (n − k) = i·n − i(i−1)/2, written without the i = 0
+    // underflow.
+    (i * (2 * n - i + 1)) / 2
+}
+
+/// Extract the packed upper triangle of a row-major dense `n × n`
+/// matrix (the strict lower triangle is ignored — callers own the
+/// symmetry contract). Boundary translator for dense-layout
+/// checkpoints/snapshots.
+pub fn pack_upper(n: usize, dense: &[f64]) -> Vec<f64> {
+    assert_eq!(dense.len(), n * n, "pack_upper needs an n×n matrix");
+    let mut packed = Vec::with_capacity(packed_len(n));
+    for i in 0..n {
+        packed.extend_from_slice(&dense[i * n + i..(i + 1) * n]);
+    }
+    packed
+}
+
+/// Reconstruct the row-major dense symmetric matrix from packed-upper
+/// storage (exactly symmetric by construction: `out[j,i]` is a copy of
+/// `out[i,j]`, not a recomputation).
+pub fn unpack_symmetric(n: usize, packed: &[f64]) -> Vec<f64> {
+    assert_eq!(packed.len(), packed_len(n), "packed length mismatch");
+    let mut dense = vec![0.0; n * n];
+    let mut off = 0;
+    for i in 0..n {
+        for (k, &v) in packed[off..off + (n - i)].iter().enumerate() {
+            let j = i + k;
+            dense[i * n + j] = v;
+            dense[j * n + i] = v;
+        }
+        off += n - i;
+    }
+    dense
+}
+
+/// Symmetric matvec `out = P z` on packed-upper `P`.
+///
+/// Row sweep `i` ascending; each stored element `P[i,j]` (`j ≥ i`) is
+/// read once and used for both its symmetric roles: the in-row part of
+/// `out[i]` accumulates through [`dot`] (lane partials), the scattered
+/// part `out[j] += P[i,j]·z[i]` through [`axpy`]. Deterministic order;
+/// every caller of the f64 KRLS recursion goes through this one
+/// function, which is what keeps per-row and batched trains bitwise
+/// equal.
+pub fn packed_symv(n: usize, p: &[f64], z: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(p.len(), packed_len(n));
+    debug_assert_eq!(z.len(), n);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    let mut off = 0;
+    for i in 0..n {
+        let w = n - i;
+        let row = &p[off..off + w];
+        let zi = z[i];
+        // diagonal + in-row columns j > i contribute to out[i]
+        out[i] += row[0] * zi + dot(&row[1..], &z[i + 1..]);
+        // symmetric halves: out[j] += P[i,j]·z[i] for j > i
+        axpy(zi, &row[1..], &mut out[i + 1..]);
+        off += w;
+    }
+}
+
+/// Scaled symmetric rank-1 update `P ← s·P − c·(π πᵀ)` on packed-upper
+/// storage: exactly [`packed_len`]`(n)` multiply-add pairs (one per
+/// stored element, each row contiguous against `π[i..]`) — **half** the
+/// dense update's flops and bytes, the dominant O(D²) cost of the KRLS
+/// step. `tests/lane_tails.rs` pins both the loop bound and the
+/// element-for-element agreement with the dense expression
+/// `s·P[i,j] − (c·π_i)·π_j`.
+pub fn packed_rank1_scaled(n: usize, p: &mut [f64], pi: &[f64], s: f64, c: f64) {
+    debug_assert_eq!(p.len(), packed_len(n));
+    debug_assert_eq!(pi.len(), n);
+    let mut off = 0;
+    for i in 0..n {
+        let w = n - i;
+        let cpi = c * pi[i];
+        let row = &mut p[off..off + w];
+        for (r, &pj) in row.iter_mut().zip(&pi[i..]) {
+            *r = *r * s - cpi * pj;
+        }
+        off += w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, f: impl Fn(usize) -> f64) -> Vec<f64> {
+        (0..n).map(f).collect()
+    }
+
+    #[test]
+    fn cos_lanes_match_scalar_bitwise() {
+        let xs = seq(LANES, |i| i as f64 * 1.37 - 3.0);
+        let args: [f64; LANES] = xs.as_slice().try_into().unwrap();
+        let lanes = fast_cos_lanes(&args);
+        for l in 0..LANES {
+            assert_eq!(lanes[l], fast_cos(args[l]));
+        }
+        let scaled = scaled_cos_lanes(&args, 0.25);
+        for l in 0..LANES {
+            assert_eq!(scaled[l], 0.25 * fast_cos(args[l]));
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive_and_handles_tails() {
+        // lengths straddling the lane width, incl. all-tail and exact
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 37] {
+            let a = seq(n, |i| i as f64 * 0.5 - 1.0);
+            let b = seq(n, |i| 1.0 - i as f64 * 0.1);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-9, "n={n}");
+            assert_eq!(seq_dot(&a, &b), naive, "seq_dot must be the sequential order");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_dots_accumulate_in_f64() {
+        let n = 21;
+        let a32: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3 - 2.0) / 3.0).collect();
+        let b = seq(n, |i| 0.7 - i as f64 * 0.05);
+        let want: f64 = a32.iter().zip(&b).map(|(&x, y)| x as f64 * y).sum();
+        assert!((dot_f32_f64(&a32, &b) - want).abs() < 1e-12);
+        assert!((dot_f64_f32(&b, &a32) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_writebacks_round_per_element() {
+        let x = seq(5, |i| i as f64 + 0.125);
+        let mut y = vec![1.0f32; 5];
+        axpy_into_f32(0.5, &x, &mut y);
+        for (i, &v) in y.iter().enumerate() {
+            assert_eq!(v, 1.0f32 + (0.5 * x[i]) as f32);
+        }
+        let pi = seq(5, |i| 1.0 - 0.2 * i as f64);
+        let mut row = vec![2.0f32; 5];
+        scale_rank1_row_f32(&mut row, 1.5, 0.25, &pi);
+        for (k, &v) in row.iter().enumerate() {
+            assert_eq!(v, (2.0f64 * 1.5 - 0.25 * pi[k]) as f32);
+        }
+    }
+
+    #[test]
+    fn packed_indexing_and_roundtrip() {
+        for n in [1usize, 2, 5, 8] {
+            assert_eq!(packed_len(n), n * (n + 1) / 2);
+            assert_eq!(packed_row_start(n, 0), 0);
+            let mut expect = 0;
+            for i in 0..n {
+                assert_eq!(packed_row_start(n, i), expect, "n={n} i={i}");
+                expect += n - i;
+            }
+            // symmetric dense → packed → dense is exact
+            let dense: Vec<f64> = (0..n * n)
+                .map(|k| {
+                    let (i, j) = (k / n, k % n);
+                    ((i.min(j) * 31 + i.max(j) * 7) % 13) as f64 - 6.0
+                })
+                .collect();
+            let packed = pack_upper(n, &dense);
+            assert_eq!(packed.len(), packed_len(n));
+            assert_eq!(unpack_symmetric(n, &packed), dense);
+        }
+    }
+
+    #[test]
+    fn packed_symv_matches_dense_matvec() {
+        let n = 11; // coprime with LANES: exercises the in-row dot tails
+        let packed: Vec<f64> = (0..packed_len(n)).map(|k| (k as f64 * 0.37).sin()).collect();
+        let dense = unpack_symmetric(n, &packed);
+        let z = seq(n, |i| (i as f64 * 0.61).cos());
+        let mut out = vec![f64::NAN; n]; // stale contents must not leak
+        packed_symv(n, &packed, &z, &mut out);
+        for i in 0..n {
+            let want: f64 = (0..n).map(|j| dense[i * n + j] * z[j]).sum();
+            assert!((out[i] - want).abs() < 1e-12, "i={i}: {} vs {want}", out[i]);
+        }
+    }
+
+    #[test]
+    fn packed_rank1_matches_dense_expression_bitwise() {
+        let n = 9;
+        let before: Vec<f64> = (0..packed_len(n)).map(|k| (k as f64 * 0.29).cos()).collect();
+        let pi = seq(n, |i| 0.4 * i as f64 - 1.1);
+        let (s, c) = (1.0 / 0.999, 0.37);
+        let mut p = before.clone();
+        packed_rank1_scaled(n, &mut p, &pi, s, c);
+        let mut off = 0;
+        for i in 0..n {
+            for k in 0..(n - i) {
+                let j = i + k;
+                // the exact dense-update expression, same op order
+                let want = before[off + k] * s - (c * pi[i]) * pi[j];
+                assert_eq!(p[off + k], want, "({i},{j})");
+            }
+            off += n - i;
+        }
+    }
+}
