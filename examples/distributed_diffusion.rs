@@ -1,82 +1,188 @@
-//! Distributed (diffusion) RFF-KLMS — the §7/[21] extension: a network
-//! of nodes cooperatively identifies one nonlinear system, exchanging
-//! only fixed-size θ vectors (no dictionaries, no dictionary matching).
+//! Distributed (diffusion) RFF learning — served through the
+//! coordinator: a network of nodes cooperatively identifies one
+//! nonlinear system, registered as a **diffusion group session**
+//! (`Request::TrainDiffusion`), exchanging only fixed-size θ vectors (no
+//! dictionaries, no dictionary matching). The isolated baseline is a
+//! 1-node group on the same service; both share one interned map.
 //!
 //! ```bash
-//! cargo run --release --example distributed_diffusion -- --nodes 12 --topology ring
+//! cargo run --release --example distributed_diffusion -- \
+//!     --nodes 12 --topology ring --ordering atc --batch 8
 //! ```
 
-use rff_kaf::distributed::{DiffusionRffKlms, NetworkTopology};
-use rff_kaf::kaf::kernels::Kernel;
-use rff_kaf::kaf::RffMap;
+use rff_kaf::coordinator::{
+    Algo, CoordinatorService, DiffusionGroupConfig, FilterSession, ServiceConfig,
+    SessionConfig, SessionSnapshot,
+};
+use rff_kaf::distributed::{rff_payload_bytes, rff_traffic_bytes, DiffusionOrdering, NetworkTopology};
 use rff_kaf::metrics::to_db;
 use rff_kaf::rng::{run_rng, Distribution, Normal};
 use rff_kaf::signal::{NonlinearWiener, SignalSource};
 use rff_kaf::util::Args;
 
+/// Disagreement diagnostic off the *serving* path: snapshot the group
+/// through the coordinator's codec and inspect the restored network —
+/// the same document the spill/restore machinery moves.
+fn group_disagreement(svc: &CoordinatorService, gid: u64) -> f64 {
+    let text = svc.snapshot_sync(gid).expect("snapshot");
+    let snap = SessionSnapshot::from_json(&text).expect("parse");
+    let sess =
+        FilterSession::restore(snap, Some(svc.registry().as_ref()), None).expect("restore");
+    sess.diffusion().expect("diffusion group").disagreement()
+}
+
 fn main() {
     let args = Args::from_env();
     let n_nodes = args.get_or("nodes", 12usize);
     let horizon = args.get_or("samples", 4000usize);
+    let batch = args.get_or("batch", 8usize).max(1);
     let topology = args.get("topology").unwrap_or("ring").to_string();
+    let ordering = match args.get("ordering").unwrap_or("atc") {
+        "atc" => DiffusionOrdering::AdaptThenCombine,
+        "cta" => DiffusionOrdering::CombineThenAdapt,
+        other => {
+            eprintln!("unknown ordering {other}; use atc|cta");
+            std::process::exit(1);
+        }
+    };
 
     let topo = match topology.as_str() {
         "ring" => NetworkTopology::ring(n_nodes),
         "complete" => NetworkTopology::complete(n_nodes),
-        "random" => {
-            let mut rng = run_rng(99, 0);
-            NetworkTopology::random(n_nodes, 0.3, &mut rng)
-        }
+        "path" => NetworkTopology::path(n_nodes),
+        // random draws surface failure instead of silently substituting
+        // another topology (the old ring fallback)
+        "random" => match NetworkTopology::random(n_nodes, 0.3, &mut run_rng(99, 0)) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("random topology failed: {e}");
+                std::process::exit(1);
+            }
+        },
         other => {
-            eprintln!("unknown topology {other}; use ring|complete|random");
+            eprintln!("unknown topology {other}; use ring|complete|path|random");
             std::process::exit(1);
         }
     };
+    let links = topo.links();
     println!(
-        "topology: {topology} ({} nodes, connected: {})",
+        "topology: {topology} ({} nodes, {} directed links, connected: {})",
         topo.len(),
+        links,
         topo.is_connected()
     );
 
-    // One shared system observed by all nodes with independent noise.
-    let mut system = NonlinearWiener::new(run_rng(99, 1), 0.0);
-    let mut map_rng = run_rng(99, 2);
-    let map = RffMap::draw(&mut map_rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+    // One serving config for the whole fleet: d=5, D=300, KLMS μ=0.5.
+    let session = SessionConfig { algo: Algo::RffKlms { mu: 0.5 }, ..SessionConfig::paper_default() };
+    let svc = CoordinatorService::start(ServiceConfig::default(), None);
+    let gid = svc
+        .add_diffusion_group(
+            DiffusionGroupConfig { session: session.clone(), ordering, topology: topo },
+            2016,
+        )
+        .expect("register group");
+    let solo = svc
+        .add_diffusion_group(
+            DiffusionGroupConfig {
+                session,
+                ordering,
+                topology: NetworkTopology::new(1, &[]),
+            },
+            2016,
+        )
+        .expect("register isolated baseline");
     println!(
-        "per-link payload: {} floats (fixed; a dictionary-based filter would ship
-  its growing center list every exchange)",
-        map.features()
+        "interned maps: {} — the {n_nodes}-node group and the isolated node share one (Ω, b)",
+        svc.registry().len()
+    );
+    println!(
+        "per-link payload: {} B fixed ({} floats; a dictionary-based filter would ship its \
+         growing center list every exchange)",
+        rff_payload_bytes(300),
+        300
     );
 
-    let mut coop = DiffusionRffKlms::new(topo, map.clone(), 0.5);
-    // isolated reference node
-    let mut solo = DiffusionRffKlms::new(NetworkTopology::new(1, &[]), map, 0.5);
-
+    // One shared system observed by all nodes with independent noise;
+    // training rides TrainDiffusion windows of `batch` whole rounds.
+    let mut system = NonlinearWiener::new(run_rng(99, 1), 0.0);
     let noise = Normal::new(0.0, 0.3);
     let mut noise_rng = run_rng(99, 3);
+    let d = 5;
+    let tail_from = horizon - horizon / 4;
+    let report_every = (horizon / 8).max(1);
     let (mut coop_tail, mut solo_tail, mut count) = (0.0, 0.0, 0usize);
-    for i in 0..horizon {
-        let s = system.next_sample();
-        let batch: Vec<(Vec<f64>, f64)> = (0..coop.nodes())
-            .map(|_| (s.x.clone(), s.clean + noise.sample(&mut noise_rng)))
-            .collect();
-        let errs = coop.step(&batch);
-        let solo_err = solo.step(&[(s.x.clone(), s.clean + noise.sample(&mut noise_rng))]);
-        if i >= horizon - horizon / 4 {
-            coop_tail += errs.iter().map(|e| e * e).sum::<f64>() / errs.len() as f64;
-            solo_tail += solo_err[0] * solo_err[0];
-            count += 1;
+    let mut round = 0usize;
+    while round < horizon {
+        let window = batch.min(horizon - round);
+        let mut xs = Vec::with_capacity(window * n_nodes * d);
+        let mut ys = Vec::with_capacity(window * n_nodes);
+        let mut solo_xs = Vec::with_capacity(window * d);
+        let mut solo_ys = Vec::with_capacity(window);
+        for _ in 0..window {
+            let s = system.next_sample();
+            for _ in 0..n_nodes {
+                xs.extend_from_slice(&s.x);
+                ys.push(s.clean + noise.sample(&mut noise_rng));
+            }
+            solo_xs.extend_from_slice(&s.x);
+            solo_ys.push(s.clean + noise.sample(&mut noise_rng));
         }
-        if (i + 1) % (horizon / 8).max(1) == 0 {
+        let errs = svc.train_diffusion_sync(gid, xs, ys).expect("group train");
+        let solo_errs = svc.train_diffusion_sync(solo, solo_xs, solo_ys).expect("solo train");
+        for w in 0..window {
+            if round + w >= tail_from {
+                let e = &errs[w * n_nodes..(w + 1) * n_nodes];
+                coop_tail += e.iter().map(|e| e * e).sum::<f64>() / n_nodes as f64;
+                solo_tail += solo_errs[w] * solo_errs[w];
+                count += 1;
+            }
+        }
+        let before = round;
+        round += window;
+        if round / report_every > before / report_every || round == horizon {
             println!(
                 "n={:>6}  network disagreement {:.3e}",
-                i + 1,
-                coop.disagreement()
+                round,
+                group_disagreement(&svc, gid)
             );
         }
     }
+
     let floor = 0.09; // sigma_eta^2
     println!("\nsteady-state MSE (last quarter):");
-    println!("  cooperative ({} nodes): {:.2} dB (excess {:.2e})", coop.nodes(), to_db(coop_tail / count as f64), coop_tail / count as f64 - floor);
-    println!("  isolated node:          {:.2} dB (excess {:.2e})", to_db(solo_tail / count as f64), solo_tail / count as f64 - floor);
+    println!(
+        "  cooperative ({n_nodes} nodes): {:.2} dB (excess {:.2e})",
+        to_db(coop_tail / count as f64),
+        coop_tail / count as f64 - floor
+    );
+    println!(
+        "  isolated node:          {:.2} dB (excess {:.2e})",
+        to_db(solo_tail / count as f64),
+        solo_tail / count as f64 - floor
+    );
+    println!(
+        "cumulative exchange traffic over {horizon} rounds: {:.1} MB \
+         (constant per round; see `distributed::traffic` and `cargo bench --bench ablations` \
+         for the QKLMS comparison)",
+        rff_traffic_bytes(links, 300, horizon) as f64 / 1e6
+    );
+
+    // The group is an ordinary session: snapshot it, migrate it under a
+    // fresh id, and check the served consensus predictions agree.
+    let checkpoint = svc.snapshot_sync(gid).expect("snapshot");
+    println!("\ngroup snapshot: {} KB (map by registry reference)", checkpoint.len() / 1024);
+    svc.restore_sync(4242, checkpoint).expect("migrate");
+    let probe = system.next_sample();
+    let a = svc.predict_sync(gid, probe.x.clone()).expect("predict");
+    let b = svc.predict_sync(4242, probe.x).expect("predict");
+    assert_eq!(a, b, "migrated group must serve identical predictions");
+    println!("migrated group serves bitwise-identical consensus predictions ✓");
+
+    let stats = svc.stats();
+    println!(
+        "service: {} diffusion rows, {} errors",
+        stats.diffusion_rows.load(std::sync::atomic::Ordering::Relaxed),
+        stats.errors.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    svc.shutdown();
 }

@@ -3,11 +3,18 @@
 //! 1. D-sweep error floors on Ex. 2 (extends Fig. 1's message),
 //! 2. kernel-approximation error vs the Rahimi–Recht certificate,
 //! 3. distributed traffic accounting (QKLMS vs RFF diffusion payloads),
+//!    with the per-step costs behind the table measured through
+//!    [`Bencher`] and written to `BENCH_ablations.json` like the other
+//!    harnesses,
 //! 4. QKLMS ε → (M, floor) trade-off table.
 //!
-//! `cargo bench --bench ablations [-- --runs 20]`
+//! `cargo bench --bench ablations [-- --runs 20] [-- --quick]`
 
-use rff_kaf::distributed::{dict_payload_bytes, rff_payload_bytes, TrafficReport};
+use rff_kaf::bench::Bencher;
+use rff_kaf::distributed::{
+    dict_payload_bytes, rff_payload_bytes, DiffusionAlgo, DiffusionNetwork, DiffusionOrdering,
+    NetworkTopology, TrafficReport,
+};
 use rff_kaf::kaf::kernels::Kernel;
 use rff_kaf::kaf::{OnlineRegressor, Qklms, RffKlms, RffMap};
 use rff_kaf::metrics::{to_db, LearningCurve};
@@ -20,6 +27,7 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let runs = args.get_or("runs", 20usize);
     let seed = args.get_or("seed", 20160321u64);
+    let mut bench = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
 
     // ---- 1. D-sweep steady-state floors on Example 2 ---------------------
     println!("=== Ablation 1: RFF-KLMS error floor vs D (Ex. 2, {runs} runs x 6000) ===");
@@ -95,6 +103,44 @@ fn main() {
         report.bytes_ratio(),
         report.dict_matching as f64 / 1e6,
     );
+    // the per-step compute behind that traffic table, measured
+    // machine-readably: one whole diffusion round on a 16-node ring at
+    // D=300 vs one steady-state QKLMS step (M ≈ 100 after the trajectory
+    // above) vs one RFF-KLMS step — recorded in BENCH_ablations.json
+    {
+        let n = 16usize;
+        let mut rng = run_rng(seed ^ 0xAB4, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
+        let mut net = DiffusionNetwork::new(
+            NetworkTopology::ring(n),
+            map.clone(),
+            DiffusionAlgo::Klms { mu: 0.5 },
+            DiffusionOrdering::AdaptThenCombine,
+        );
+        let mut rff = RffKlms::new(map, 1.0);
+        let mut src = NonlinearWiener::new(run_rng(seed ^ 0xAB4, 1), 0.05);
+        let mut xs = vec![0.0; n * 5];
+        let mut ys = vec![0.0; n];
+        let mut errs = vec![0.0; n];
+        let m = bench.bench("diffusion_round_ring16_D300", || {
+            let s = src.next_sample();
+            for k in 0..n {
+                xs[k * 5..(k + 1) * 5].copy_from_slice(&s.x);
+                ys[k] = s.y;
+            }
+            net.step_into(&xs, &ys, &mut errs);
+            errs[0]
+        });
+        println!("{}", m.throughput(n as f64));
+        bench.bench("qklms_step_steady_eps5", || {
+            let s = src.next_sample();
+            q.step(&s.x, s.y)
+        });
+        bench.bench("rffklms_step_D300", || {
+            let s = src.next_sample();
+            rff.step(&s.x, s.y)
+        });
+    }
 
     // ---- 4. QKLMS epsilon trade-off --------------------------------------
     println!("\n=== Ablation 4: QKLMS eps -> (M, floor) trade-off (Ex. 2) ===");
@@ -121,4 +167,6 @@ fn main() {
             secs * 1e3
         );
     }
+
+    bench.write_json("ablations").expect("writing BENCH_ablations.json");
 }

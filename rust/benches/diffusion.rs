@@ -1,0 +1,101 @@
+//! Bench — diffusion networks on the session/SIMD substrate (ISSUE 5):
+//!
+//! 1. combine kernel `φ = Σ a_l θ_l`: scalar multi-axpy vs the
+//!    lanes-outer [`weighted_combine_rows`](rff_kaf::linalg::simd)
+//!    kernel, across neighbor degrees,
+//! 2. diffusion rows/s vs node count × topology, per-step vs
+//!    `step_batch` windows (the blocked feature kernels amortize
+//!    `ω`/`b` lane loads across every row of a window).
+//!
+//! Emits `BENCH_diffusion.json` (see EXPERIMENTS.md §Distributed).
+//!
+//! `cargo bench --bench diffusion [-- --quick]`
+
+use rff_kaf::bench::Bencher;
+use rff_kaf::distributed::{
+    DiffusionAlgo, DiffusionNetwork, DiffusionOrdering, NetworkTopology,
+};
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::RffMap;
+use rff_kaf::linalg::{axpy, simd};
+use rff_kaf::rng::{run_rng, Distribution, Normal};
+use rff_kaf::util::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let quick = args.flag("quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    let feats = args.get_or("features", 300usize);
+    let d = 5usize;
+
+    // ---- 1. combine kernel: scalar axpy sequence vs lane multi-axpy ------
+    println!("== combine kernel (D = {feats}, per node of the given degree) ==");
+    let mut rng = run_rng(1, 0);
+    for deg in [2usize, 8, 16] {
+        let n_rows = deg + 1; // self + neighbors
+        let mat = Normal::standard().sample_vec(&mut rng, n_rows * feats);
+        let rows: Vec<usize> = (0..n_rows).collect();
+        let weights = vec![1.0 / n_rows as f64; n_rows];
+        let mut out = vec![0.0; feats];
+        b.bench(&format!("combine_scalar_axpy_deg{deg}"), || {
+            out.fill(0.0);
+            for (&r, &w) in rows.iter().zip(&weights) {
+                axpy(w, &mat[r * feats..(r + 1) * feats], &mut out);
+            }
+            out[0]
+        });
+        b.bench(&format!("combine_lane_deg{deg}"), || {
+            simd::weighted_combine_rows(feats, &mat, &rows, &weights, &mut out);
+            out[0]
+        });
+    }
+
+    // ---- 2. rows/s vs node count × topology; per-step vs step_batch ------
+    let window = args.get_or("window", 16usize).max(1);
+    println!("\n== diffusion rounds (d = {d}, D = {feats}, {window}-round windows) ==");
+    for &n in &[4usize, 8, 16, 32] {
+        for topo_name in ["ring", "complete"] {
+            let topo = match topo_name {
+                "ring" => NetworkTopology::ring(n),
+                _ => NetworkTopology::complete(n),
+            };
+            let mut rng = run_rng(2, n);
+            let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, d, feats);
+            let mut net = DiffusionNetwork::new(
+                topo,
+                map,
+                DiffusionAlgo::Klms { mu: 0.5 },
+                DiffusionOrdering::AdaptThenCombine,
+            );
+            let xs = Normal::standard().sample_vec(&mut rng, window * n * d);
+            let ys = Normal::standard().sample_vec(&mut rng, window * n);
+            let mut errs = vec![0.0; window * n];
+            let rows = (window * n) as f64;
+            let line = {
+                let m = b.bench(&format!("step_{topo_name}_n{n}"), || {
+                    for r in 0..window {
+                        let lo = r * n;
+                        net.step_into(
+                            &xs[lo * d..(lo + n) * d],
+                            &ys[lo..lo + n],
+                            &mut errs[lo..lo + n],
+                        );
+                    }
+                    errs[0]
+                });
+                m.throughput(rows)
+            };
+            println!("{line}");
+            let line = {
+                let m = b.bench(&format!("step_batch_{topo_name}_n{n}"), || {
+                    net.step_batch_into(&xs, &ys, &mut errs);
+                    errs[0]
+                });
+                m.throughput(rows)
+            };
+            println!("{line}");
+        }
+    }
+
+    b.write_json("diffusion").expect("writing BENCH_diffusion.json");
+}

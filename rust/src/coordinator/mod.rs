@@ -8,25 +8,44 @@
 //!  clients ──► submit ──► BoundedQueue (backpressure)
 //!                             │
 //!                       router worker(s)
-//!              ┌──────────────┼────────────────┐
-//!         train path     predict path     snapshot path
-//!       FilterSession   DynamicBatcher:   SessionSnapshot
-//!      (chunk buffer →  group ≤B predicts (versioned JSON;
-//!       PJRT chunk,     across sessions → map inline or by
-//!       native          one rff_predict   MapSpec reference)
-//!       remainder)      PJRT call)              │
-//!              │               │                │
-//!        ┌─────┴───────────────┴────┐     ┌─────┴──────┐
-//!        │ SessionStore (sharded,   │ ◄──►│ SnapshotSink│
-//!        │ per-session locks, idle- │spill│ (memory or  │
-//!        │ LRU eviction + restore)  │     │  directory) │
-//!        └──────────┬──────────────┘      └────────────┘
-//!                   │ Arc<RffMap>
-//!            ┌──────┴───────┐
-//!            │ MapRegistry  │  one interned (Ω, b) + f32 view per
-//!            │ (kaf layer)  │  (kernel, d, D, seed) — fleet-shared
-//!            └──────────────┘
+//!         ┌───────────────────┼──────────────────────┐
+//!    train path          predict path           snapshot path
+//!  FilterSession        DynamicBatcher:        SessionSnapshot
+//! (chunk buffer →       group ≤B predicts     (versioned JSON;
+//!  PJRT chunk, native   across sessions →      map inline or by
+//!  remainder) — or a    one rff_predict        MapSpec reference;
+//!  DiffusionNetwork     PJRT call; groups      diffusion groups:
+//!  group: TrainDiff-    serve consensus-       topology + per-node
+//!  usion rounds over    mean θ the same way)   θ in one document)
+//!  blocked batch              │                       │
+//!  kernels)                   │                       │
+//!         └─────┬─────────────┴───────┐         ┌─────┴──────┐
+//!               │ SessionStore (sharded,   ◄──► │ SnapshotSink│
+//!               │ per-session locks, idle-  spill│ (memory or  │
+//!               │ LRU eviction + restore)       │  directory) │
+//!               └──────────┬──────────────┘     └────────────┘
+//!                          │ Arc<RffMap>
+//!                   ┌──────┴───────┐
+//!                   │ MapRegistry  │  one interned (Ω, b) + f32 view per
+//!                   │ (kaf layer)  │  (kernel, d, D, seed) — shared by
+//!                   └──────────────┘  sessions AND diffusion groups
 //! ```
+//!
+//! ## Diffusion groups
+//!
+//! A whole diffusion network ([`crate::distributed::DiffusionNetwork`])
+//! registers as **one session**
+//! ([`CoordinatorService::add_diffusion_group`] /
+//! [`DiffusionGroupConfig`]): per-node θ over one interned map, trained
+//! in whole rounds via [`Request::TrainDiffusion`] (row-major
+//! `[rounds · nodes, d]` windows through the blocked batch kernels —
+//! bitwise identical to round-by-round stepping), served through the
+//! ordinary predict path as the consensus-mean θ, counted under
+//! [`ServiceStats`]`::diffusion_rows`, and snapshot/spilled through the
+//! same [`SnapshotSink`] machinery as every other session (state type
+//! `"diffusion"`, format-versioned, topology by canonical edge list).
+//! Nothing in the store or router special-cases groups — a group is a
+//! session whose state happens to be a network.
 //!
 //! The paper's *contribution* lives at the algorithm layer; the
 //! coordinator's job is to prove the fixed-size-θ property composes into
@@ -67,8 +86,9 @@
 //! With `ServiceConfig { max_resident_sessions, snapshot_dir }` set, the
 //! [`SessionStore`] keeps at most `max_resident_sessions` sessions live;
 //! beyond that, the least-recently-touched session is **evicted**: its
-//! [`SessionSnapshot`] (versioned JSON; all four state variants incl.
-//! buffered PJRT chunk rows; map by registry reference when interned)
+//! [`SessionSnapshot`] (versioned JSON; every state variant incl.
+//! buffered PJRT chunk rows and whole diffusion groups; map by registry
+//! reference when interned)
 //! spills to the configured [`SnapshotSink`] and the live state is
 //! dropped. The next touch of that id restores it transparently —
 //! snapshot → evict → restore → train is **bitwise identical** to the
@@ -120,7 +140,9 @@ mod store;
 
 pub use orchestrator::{McConfig, McResult, Orchestrator};
 pub use service::{CoordinatorService, Request, Response, ServiceConfig, ServiceStats};
-pub use session::{Algo, Backend, FilterSession, PredictState, SessionConfig};
+pub use session::{
+    Algo, Backend, DiffusionGroupConfig, FilterSession, PredictState, SessionConfig,
+};
 pub use snapshot::{
     DirSink, MemorySink, SessionSnapshot, SnapshotSink, SNAPSHOT_FORMAT, SNAPSHOT_READ_FORMATS,
 };

@@ -56,7 +56,7 @@ use crate::exec::BoundedQueue;
 use crate::kaf::MapRegistry;
 use crate::runtime::ExecutorHandle;
 
-use super::session::{FilterSession, SessionConfig};
+use super::session::{DiffusionGroupConfig, FilterSession, SessionConfig};
 use super::snapshot::{DirSink, MemorySink, SessionSnapshot, SnapshotSink};
 use super::store::{SessionStore, SpillConfig, SpillStats};
 
@@ -146,6 +146,24 @@ pub enum Request {
         /// Where to send the resulting a-priori errors.
         resp: Sender<Response>,
     },
+    /// Train diffusion group `group` on a window of whole rounds: `xs`
+    /// is row-major `[rounds · nodes, dim]` in round-major order (round
+    /// `r`'s node `k` is row `r·nodes + k`), `ys` the matching targets.
+    /// The group runs its blocked batch kernels over the whole window
+    /// (bitwise identical to round-by-round stepping); one response
+    /// carries every per-node a-priori error in row order. Stats count
+    /// the rows under `diffusion_rows`.
+    TrainDiffusion {
+        /// Target group (a session id registered via
+        /// [`CoordinatorService::add_diffusion_group`]).
+        group: u64,
+        /// Row-major `[rounds · nodes, dim]` inputs.
+        xs: Vec<f64>,
+        /// One target per row.
+        ys: Vec<f64>,
+        /// Where to send the per-node a-priori errors.
+        resp: Sender<Response>,
+    },
     /// Predict with session `session`'s current model.
     Predict {
         /// Target session id.
@@ -213,6 +231,12 @@ pub struct ServiceStats {
     /// partial chunk; the per-session `samples_seen` counts *applied*
     /// rows and is the row-exact ground truth.
     pub trained: AtomicU64,
+    /// Diffusion rows applied successfully through
+    /// [`Request::TrainDiffusion`] (`rounds × nodes` per request —
+    /// node-rows, the same unit the per-group `samples_seen` counts).
+    /// Kept separate from `trained` so filter-session and group traffic
+    /// stay individually observable.
+    pub diffusion_rows: AtomicU64,
     /// Predictions served successfully (failures count under `errors`).
     pub predicted: AtomicU64,
     /// PJRT predict batches dispatched.
@@ -311,6 +335,23 @@ impl CoordinatorService {
         Ok(self.add_session(session))
     }
 
+    /// Register a **diffusion group** as a session: the whole network —
+    /// per-node θ over one interned map — lives under one id in the
+    /// sharded store, trains via [`Request::TrainDiffusion`], serves
+    /// consensus-mean predictions through the ordinary predict path, and
+    /// snapshots/spills through the same machinery as every other
+    /// session. The map is interned by
+    /// `(config.session.kernel, dim, features, seed)` — a group and a
+    /// fleet of plain sessions with the same spec share one `(Ω, b)`.
+    pub fn add_diffusion_group(
+        &self,
+        config: DiffusionGroupConfig,
+        seed: u64,
+    ) -> Result<u64> {
+        let session = FilterSession::diffusion_from_spec(config, seed, &self.registry)?;
+        Ok(self.add_session(session))
+    }
+
     /// Remove a session, returning it with any buffered partial PJRT
     /// chunk rows **flushed** through the native kernels first — a
     /// remove never silently drops trained samples (it used to drop up
@@ -379,6 +420,23 @@ impl CoordinatorService {
     pub fn train_batch_sync(&self, session: u64, xs: Vec<f64>, ys: Vec<f64>) -> Result<Vec<f64>> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.submit(Request::TrainBatch { session, xs, ys, resp: tx })?;
+        match rx.recv()? {
+            Response::Trained(e) => Ok(e),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Train a diffusion group on a window of whole rounds and wait for
+    /// the per-node errors.
+    pub fn train_diffusion_sync(
+        &self,
+        group: u64,
+        xs: Vec<f64>,
+        ys: Vec<f64>,
+    ) -> Result<Vec<f64>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::TrainDiffusion { group, xs, ys, resp: tx })?;
         match rx.recv()? {
             Response::Trained(e) => Ok(e),
             Response::Error(e) => anyhow::bail!(e),
@@ -489,6 +547,23 @@ fn router_loop(
                         // rows, not requests — n rows here count the same
                         // as n single Train requests
                         stats.trained.fetch_add(rows, Ordering::Relaxed);
+                    }
+                    respond(&stats, resp, out);
+                }
+                Request::TrainDiffusion { group, xs, ys, resp } => {
+                    let rows = ys.len() as u64;
+                    let out = match sessions.get(group) {
+                        Some(cell) => {
+                            let mut s =
+                                cell.lock().unwrap_or_else(PoisonError::into_inner);
+                            s.train_diffusion(&xs, &ys).map(Response::Trained)
+                        }
+                        None => Err(anyhow::anyhow!("no session {group}")),
+                    };
+                    if out.is_ok() {
+                        // node-rows: rounds × nodes per request, matching
+                        // the group's samples_seen accounting
+                        stats.diffusion_rows.fetch_add(rows, Ordering::Relaxed);
                     }
                     respond(&stats, resp, out);
                 }
@@ -942,6 +1017,62 @@ mod tests {
         // bad documents are an error, not a worker panic
         assert!(svc.restore_sync(1, "{".into()).is_err());
         assert!(svc.snapshot_sync(999).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn diffusion_group_served_through_the_coordinator() {
+        use crate::distributed::{DiffusionOrdering, NetworkTopology};
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let cfg = DiffusionGroupConfig {
+            session: SessionConfig { features: 32, ..SessionConfig::paper_default() },
+            ordering: DiffusionOrdering::AdaptThenCombine,
+            topology: NetworkTopology::ring(4),
+        };
+        let gid = svc.add_diffusion_group(cfg, 11).unwrap();
+        // a same-spec plain session shares the group's interned map
+        let scfg = SessionConfig { features: 32, ..SessionConfig::paper_default() };
+        let sid = svc.add_session_from_spec(scfg, 11).unwrap();
+        assert_eq!(svc.registry().len(), 1);
+
+        let mut src = NonlinearWiener::new(run_rng(40, 1), 0.05);
+        let mut rows = 0u64;
+        for s in src.take_samples(50) {
+            let mut xs = Vec::new();
+            for _ in 0..4 {
+                xs.extend_from_slice(&s.x);
+            }
+            let errs = svc.train_diffusion_sync(gid, xs, vec![s.y; 4]).unwrap();
+            assert_eq!(errs.len(), 4);
+            rows += 4;
+            svc.train_sync(sid, s.x.clone(), s.y).unwrap();
+        }
+        // diffusion rows and filter rows are counted separately
+        assert_eq!(svc.stats().diffusion_rows.load(Ordering::Relaxed), rows);
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 50);
+
+        // group predictions serve the consensus mean through the
+        // ordinary predict path
+        let probe = vec![0.1, 0.2, -0.3, 0.0, 0.4];
+        let p = svc.predict_sync(gid, probe.clone()).unwrap();
+        assert!(p.is_finite());
+
+        // TrainDiffusion against a plain session or an unknown id is an
+        // error that counts no rows
+        assert!(svc.train_diffusion_sync(sid, vec![0.0; 20], vec![0.0; 4]).is_err());
+        assert!(svc.train_diffusion_sync(999, vec![0.0; 20], vec![0.0; 4]).is_err());
+        assert_eq!(svc.stats().diffusion_rows.load(Ordering::Relaxed), rows);
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
+
+        // group snapshots flow through the request API: migrate the
+        // group under a new id, predictions agree bitwise
+        let snap = svc.snapshot_sync(gid).unwrap();
+        svc.restore_sync(777, snap).unwrap();
+        assert_eq!(svc.predict_sync(777, probe).unwrap(), p);
+
+        let g = svc.remove_session(gid).unwrap();
+        assert_eq!(g.samples_seen(), rows as usize);
+        assert!(g.diffusion().is_some());
         svc.shutdown();
     }
 

@@ -12,9 +12,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::distributed::{DiffusionAlgo, DiffusionNetwork, DiffusionOrdering, NetworkTopology};
 use crate::kaf::checkpoint::MapPayload;
 use crate::kaf::kernels::Kernel;
-use crate::kaf::{MapRegistry, MapSpec, OnlineRegressor, RffKlms, RffKrls, RffMap};
+use crate::kaf::{MapRegistry, MapSpec, OnlineRegressor, RffKlms, RffKrls, RffMap, RffNlms};
 use crate::rng::Rng;
 use crate::runtime::ExecutorHandle;
 
@@ -35,6 +36,14 @@ pub enum Algo {
         beta: f64,
         /// Regularization (P₀ = I/λ).
         lambda: f64,
+    },
+    /// RFF-NLMS with step size μ and normalization regularizer ε
+    /// (native backend only — there is no NLMS AOT artifact).
+    RffNlms {
+        /// NLMS step size (μ ∈ (0, 2) for stability).
+        mu: f64,
+        /// Normalization regularizer.
+        eps: f64,
     },
 }
 
@@ -76,9 +85,50 @@ impl SessionConfig {
     }
 }
 
+/// Configuration of a diffusion group session: the per-node filter
+/// config plus the network structure. The group trains through
+/// [`Request::TrainDiffusion`](super::Request::TrainDiffusion) on
+/// row-major `[rounds · nodes, dim]` windows and is snapshot/spilled
+/// through the same machinery as every other session.
+#[derive(Clone, Debug)]
+pub struct DiffusionGroupConfig {
+    /// Per-node dim/features/kernel/algo. The backend must be
+    /// [`Backend::Native`], and the algo [`Algo::RffKlms`] or
+    /// [`Algo::RffNlms`] (diffusion combines θ only — KRLS's P is
+    /// per-node second-order state the scheme does not exchange).
+    pub session: SessionConfig,
+    /// Which half-step runs first in a round.
+    pub ordering: DiffusionOrdering,
+    /// The undirected network the nodes diffuse over.
+    pub topology: NetworkTopology,
+}
+
+impl DiffusionGroupConfig {
+    /// Map the session algo onto a diffusion adapt rule, rejecting the
+    /// combinations a group cannot run.
+    fn diffusion_algo(&self) -> Result<DiffusionAlgo> {
+        anyhow::ensure!(
+            self.session.backend == Backend::Native,
+            "diffusion groups run on the native backend"
+        );
+        match self.session.algo {
+            Algo::RffKlms { mu } => Ok(DiffusionAlgo::Klms { mu }),
+            Algo::RffNlms { mu, eps } => Ok(DiffusionAlgo::Nlms { mu, eps }),
+            Algo::RffKrls { .. } => anyhow::bail!(
+                "diffusion groups support the KLMS/NLMS adapt rules \
+                 (per-node P is not exchangeable network state)"
+            ),
+        }
+    }
+}
+
 enum SessionState {
     NativeKlms(RffKlms),
     NativeKrls(RffKrls),
+    NativeNlms(RffNlms),
+    /// A whole diffusion network served as one session: per-node θ over
+    /// one shared map, trained in rounds via `train_diffusion`.
+    Diffusion(DiffusionNetwork),
     // PJRT variants hold only the f32 *learned* state and chunk buffers;
     // the f32 (Ω, b) staging tensors live in the shared map's cached
     // `f32_view()` — one copy per map, not per session.
@@ -223,6 +273,60 @@ impl FilterSession {
         Self::build(config, map, Some(spec), executor)
     }
 
+    /// Create a diffusion group session with an explicit shared map —
+    /// owned, or an `Arc` already interned elsewhere.
+    pub fn diffusion_with_map(
+        config: DiffusionGroupConfig,
+        map: impl Into<Arc<RffMap>>,
+    ) -> Result<Self> {
+        Self::build_diffusion(config, map.into(), None)
+    }
+
+    /// Create a diffusion group whose shared map is **interned**: the
+    /// whole group — every node — and every other same-spec session in
+    /// the fleet resolve to one resident `(Ω, b)`; the group's snapshots
+    /// carry a map reference instead of the arrays. This is the paper's
+    /// "agreeing on a map costs one seed exchange" point, fleet-wide.
+    pub fn diffusion_from_spec(
+        config: DiffusionGroupConfig,
+        seed: u64,
+        registry: &MapRegistry,
+    ) -> Result<Self> {
+        let spec = MapSpec::new(
+            config.session.kernel,
+            config.session.dim,
+            config.session.features,
+            seed,
+        );
+        let map = registry.get_or_draw(&spec);
+        Self::build_diffusion(config, map, Some(spec))
+    }
+
+    fn build_diffusion(
+        config: DiffusionGroupConfig,
+        map: Arc<RffMap>,
+        map_spec: Option<MapSpec>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            map.dim() == config.session.dim && map.features() == config.session.features,
+            "map shape (d={}, D={}) does not match config (d={}, D={})",
+            map.dim(),
+            map.features(),
+            config.session.dim,
+            config.session.features
+        );
+        let algo = config.diffusion_algo()?;
+        let net = DiffusionNetwork::new(config.topology, map, algo, config.ordering);
+        Ok(Self {
+            config: config.session,
+            state: SessionState::Diffusion(net),
+            executor: None,
+            samples_seen: 0,
+            sum_sq_err: 0.0,
+            map_spec,
+        })
+    }
+
     fn build(
         config: SessionConfig,
         map: Arc<RffMap>,
@@ -244,6 +348,9 @@ impl FilterSession {
             (Backend::Native, Algo::RffKrls { beta, lambda }) => {
                 SessionState::NativeKrls(RffKrls::new(map, beta, lambda))
             }
+            (Backend::Native, Algo::RffNlms { mu, eps }) => {
+                SessionState::NativeNlms(RffNlms::new(map, mu, eps))
+            }
             (Backend::Pjrt, algo) => {
                 let handle = executor
                     .as_ref()
@@ -251,6 +358,9 @@ impl FilterSession {
                 let kind = match algo {
                     Algo::RffKlms { .. } => "rffklms_chunk",
                     Algo::RffKrls { .. } => "rffkrls_chunk",
+                    Algo::RffNlms { .. } => {
+                        anyhow::bail!("RFF-NLMS has no AOT artifact; use the native backend")
+                    }
                 };
                 let chunk_n = handle.chunk_len(kind, config.dim, config.features)?;
                 match algo {
@@ -277,6 +387,7 @@ impl FilterSession {
                             map,
                         }
                     }
+                    Algo::RffNlms { .. } => unreachable!("rejected by the kind match above"),
                 }
             }
         };
@@ -318,7 +429,18 @@ impl FilterSession {
         match &self.state {
             SessionState::NativeKlms(f) => f.map_arc(),
             SessionState::NativeKrls(f) => f.map_arc(),
+            SessionState::NativeNlms(f) => f.map_arc(),
+            SessionState::Diffusion(net) => net.map_arc(),
             SessionState::PjrtKlms { map, .. } | SessionState::PjrtKrls { map, .. } => map,
+        }
+    }
+
+    /// The diffusion network, when this session is a group
+    /// (`None` for single-filter sessions).
+    pub fn diffusion(&self) -> Option<&DiffusionNetwork> {
+        match &self.state {
+            SessionState::Diffusion(net) => Some(net),
+            _ => None,
         }
     }
 
@@ -328,11 +450,16 @@ impl FilterSession {
         self.map_spec
     }
 
-    /// Current weight vector θ (f64 view).
+    /// Current weight vector θ (f64 view). For a diffusion group this is
+    /// the **network-mean** θ — the consensus estimate the group serves
+    /// predictions from; per-node weights are on
+    /// [`DiffusionNetwork::theta`] via [`Self::diffusion`].
     pub fn theta(&self) -> Vec<f64> {
         match &self.state {
             SessionState::NativeKlms(f) => f.theta().to_vec(),
             SessionState::NativeKrls(f) => f.theta().to_vec(),
+            SessionState::NativeNlms(f) => f.theta().to_vec(),
+            SessionState::Diffusion(net) => net.theta_mean(),
             SessionState::PjrtKlms { theta, .. } | SessionState::PjrtKrls { theta, .. } => {
                 theta.iter().map(|&v| v as f64).collect()
             }
@@ -354,6 +481,15 @@ impl FilterSession {
         match &self.state {
             SessionState::NativeKlms(f) => f.predict(x),
             SessionState::NativeKrls(f) => f.predict(x),
+            SessionState::NativeNlms(f) => f.predict(x),
+            SessionState::Diffusion(net) => {
+                // the group's served model is the consensus mean θ (equal
+                // to every node's estimate once disagreement → 0)
+                let theta = net.theta_mean();
+                let mut out = [0.0];
+                net.map().predict_batch_into(x, &theta, &mut out);
+                out[0]
+            }
             SessionState::PjrtKlms { map, theta, .. }
             | SessionState::PjrtKrls { map, theta, .. } => {
                 // lane feature map + strictly sequential mixed dot: f32→f64
@@ -389,6 +525,16 @@ impl FilterSession {
                 self.sum_sq_err += e * e;
                 Ok(vec![e])
             }
+            SessionState::NativeNlms(f) => {
+                let e = f.step(x, y);
+                self.samples_seen += 1;
+                self.sum_sq_err += e * e;
+                Ok(vec![e])
+            }
+            SessionState::Diffusion(_) => anyhow::bail!(
+                "diffusion groups train on whole rounds (one row per node); \
+                 use TrainDiffusion"
+            ),
             SessionState::PjrtKlms { .. } | SessionState::PjrtKrls { .. } => {
                 self.pjrt_push(x, y)
             }
@@ -427,6 +573,16 @@ impl FilterSession {
                 self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
                 Ok(errs)
             }
+            SessionState::NativeNlms(f) => {
+                let errs = f.train_batch(d, xs, ys);
+                self.samples_seen += errs.len();
+                self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+                Ok(errs)
+            }
+            SessionState::Diffusion(_) => anyhow::bail!(
+                "diffusion groups train on whole rounds (one row per node); \
+                 use TrainDiffusion"
+            ),
             SessionState::PjrtKlms { .. } | SessionState::PjrtKrls { .. } => {
                 let mut out = Vec::new();
                 for (row, &y) in xs.chunks_exact(d).zip(ys) {
@@ -435,6 +591,35 @@ impl FilterSession {
                 Ok(out)
             }
         }
+    }
+
+    /// Train a diffusion group on a window of whole rounds: `xs` is
+    /// row-major `[rounds · nodes, dim]` in round-major order (round
+    /// `r`'s node `k` is row `r·nodes + k`), `ys` the matching targets.
+    /// Runs [`DiffusionNetwork::step_batch_into`] — the blocked batch
+    /// kernels over the whole window, **bitwise identical** to stepping
+    /// round by round — and returns every per-node a-priori error in row
+    /// order. Errors on non-group sessions and on partial rounds.
+    pub fn train_diffusion(&mut self, xs: &[f64], ys: &[f64]) -> Result<Vec<f64>> {
+        let d = self.config.dim;
+        anyhow::ensure!(
+            xs.len() == ys.len() * d,
+            "train_diffusion shape mismatch: xs must be [rows, dim], ys length rows"
+        );
+        let SessionState::Diffusion(net) = &mut self.state else {
+            anyhow::bail!("session is not a diffusion group")
+        };
+        let n = net.nodes();
+        anyhow::ensure!(
+            !ys.is_empty() && ys.len() % n == 0,
+            "diffusion window of {} rows is not whole rounds of {n} nodes",
+            ys.len()
+        );
+        let mut errs = vec![0.0; ys.len()];
+        net.step_batch_into(xs, ys, &mut errs);
+        self.samples_seen += errs.len();
+        self.sum_sq_err += errs.iter().map(|e| e * e).sum::<f64>();
+        Ok(errs)
     }
 
     /// Buffer one row on a PJRT session, dispatching the chunk when full.
@@ -527,7 +712,10 @@ impl FilterSession {
     /// buffer time). No-op for native sessions.
     pub fn flush(&mut self) -> Result<Vec<f64>> {
         let errs = match &mut self.state {
-            SessionState::NativeKlms(_) | SessionState::NativeKrls(_) => Vec::new(),
+            SessionState::NativeKlms(_)
+            | SessionState::NativeKrls(_)
+            | SessionState::NativeNlms(_)
+            | SessionState::Diffusion(_) => Vec::new(),
             SessionState::PjrtKlms { map, theta, mu, buf_x, buf_y, .. } => {
                 let d = map.dim();
                 let mut errs = Vec::with_capacity(buf_y.len());
@@ -588,6 +776,12 @@ impl FilterSession {
                 // reconstruction on the snapshot path
                 p_packed: f.p_packed().to_vec(),
             },
+            SessionState::NativeNlms(f) => {
+                SnapshotState::NativeNlms { theta: f.theta().to_vec() }
+            }
+            SessionState::Diffusion(net) => SnapshotState::Diffusion {
+                state: crate::distributed::DiffusionState::of(net),
+            },
             SessionState::PjrtKlms { theta, buf_x, buf_y, .. } => SnapshotState::PjrtKlms {
                 theta: theta.clone(),
                 buf_x: buf_x.clone(),
@@ -626,10 +820,32 @@ impl FilterSession {
     ) -> Result<Self> {
         let spec = snap.map.spec();
         let map = snap.map.resolve(registry);
+        if let SnapshotState::Diffusion { state } = snap.state {
+            // diffusion groups rebuild through their own constructor: the
+            // topology round-trips via its canonical edge list, so the
+            // combine order — and with it the trajectory — is bitwise
+            // preserved
+            let topology = state.build_topology(map.features())?;
+            let config = DiffusionGroupConfig {
+                session: snap.config,
+                ordering: state.ordering,
+                topology,
+            };
+            let mut s = Self::build_diffusion(config, map, spec)?;
+            let SessionState::Diffusion(net) = &mut s.state else { unreachable!() };
+            net.restore_thetas(state.thetas);
+            s.samples_seen = snap.samples_seen;
+            s.sum_sq_err = snap.sum_sq_err;
+            return Ok(s);
+        }
         let mut s = Self::build(snap.config, map, spec, executor)?;
         let feats = s.config.features;
         match (&mut s.state, snap.state) {
             (SessionState::NativeKlms(f), SnapshotState::NativeKlms { theta }) => {
+                anyhow::ensure!(theta.len() == feats, "theta length mismatch");
+                f.set_theta(theta);
+            }
+            (SessionState::NativeNlms(f), SnapshotState::NativeNlms { theta }) => {
                 anyhow::ensure!(theta.len() == feats, "theta length mismatch");
                 f.set_theta(theta);
             }
@@ -698,6 +914,8 @@ impl FilterSession {
         match &self.state {
             SessionState::NativeKlms(f) => f.heap_bytes(),
             SessionState::NativeKrls(f) => f.heap_bytes(),
+            SessionState::NativeNlms(f) => f.heap_bytes(),
+            SessionState::Diffusion(net) => net.heap_bytes(),
             SessionState::PjrtKlms { theta, buf_x, buf_y, .. } => {
                 (theta.len() + buf_x.capacity() + buf_y.capacity()) * 4
             }
@@ -1010,6 +1228,119 @@ mod tests {
     }
 
     #[test]
+    fn nlms_native_session_learns_and_snapshots_bitwise() {
+        let cfg = SessionConfig {
+            algo: Algo::RffNlms { mu: 0.5, eps: 1e-6 },
+            features: 64,
+            ..SessionConfig::paper_default()
+        };
+        let mut rng = run_rng(30, 0);
+        let mut live = FilterSession::new(cfg.clone(), &mut rng, None).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(30, 1), 0.05);
+        for smp in src.take_samples(400) {
+            live.train(&smp.x, smp.y).unwrap();
+        }
+        assert_eq!(live.samples_seen(), 400);
+        // snapshot → restore → continue, bitwise
+        let text = live.snapshot().to_json();
+        assert!(text.contains("native_nlms"));
+        let mut restored =
+            FilterSession::restore(SessionSnapshot::from_json(&text).unwrap(), None, None)
+                .unwrap();
+        assert_eq!(restored.theta(), live.theta());
+        for smp in src.take_samples(50) {
+            let a = live.train(&smp.x, smp.y).unwrap();
+            let b = restored.train(&smp.x, smp.y).unwrap();
+            assert_eq!(a, b, "NLMS continuation diverged");
+        }
+        // and the PJRT backend correctly refuses NLMS
+        let pjrt_cfg = SessionConfig { backend: Backend::Pjrt, ..cfg };
+        let handle = ExecutorHandle::failing_stub(4);
+        let mut rng2 = run_rng(30, 2);
+        assert!(FilterSession::new(pjrt_cfg, &mut rng2, Some(handle)).is_err());
+    }
+
+    fn group_config(nodes: usize) -> DiffusionGroupConfig {
+        DiffusionGroupConfig {
+            session: SessionConfig { features: 32, ..SessionConfig::paper_default() },
+            ordering: DiffusionOrdering::AdaptThenCombine,
+            topology: NetworkTopology::ring(nodes),
+        }
+    }
+
+    #[test]
+    fn diffusion_group_session_trains_and_snapshots_bitwise() {
+        let registry = MapRegistry::new();
+        let mut live =
+            FilterSession::diffusion_from_spec(group_config(3), 9, &registry).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(31, 1), 0.05);
+        let round = |s: &crate::signal::Sample, sess: &mut FilterSession| {
+            let mut xs = Vec::new();
+            for _ in 0..3 {
+                xs.extend_from_slice(&s.x);
+            }
+            sess.train_diffusion(&xs, &vec![s.y; 3]).unwrap()
+        };
+        for s in src.take_samples(60) {
+            round(&s, &mut live);
+        }
+        assert_eq!(live.samples_seen(), 180); // rows = rounds × nodes
+        assert!(live.running_mse() > 0.0);
+
+        // interned group snapshots by reference and restores sharing the
+        // registry's map
+        let text = live.snapshot().to_json();
+        assert!(text.contains("\"diffusion\"") && text.contains("\"reference\""));
+        let mut restored = FilterSession::restore(
+            SessionSnapshot::from_json(&text).unwrap(),
+            Some(&registry),
+            None,
+        )
+        .unwrap();
+        assert!(Arc::ptr_eq(restored.map_arc(), live.map_arc()));
+        assert_eq!(restored.samples_seen(), live.samples_seen());
+        for s in src.take_samples(40) {
+            let a = round(&s, &mut live);
+            let b = round(&s, &mut restored);
+            assert_eq!(a, b, "group continuation diverged after restore");
+        }
+        assert_eq!(
+            restored.diffusion().unwrap().thetas(),
+            live.diffusion().unwrap().thetas()
+        );
+        // the group's served prediction is the consensus mean
+        let probe = [0.1, -0.2, 0.3, 0.0, 0.5];
+        assert_eq!(restored.predict(&probe), live.predict(&probe));
+    }
+
+    #[test]
+    fn diffusion_group_rejects_bad_configs_and_shapes() {
+        let registry = MapRegistry::new();
+        // KRLS adapt rule is not a diffusion workload
+        let mut bad = group_config(3);
+        bad.session.algo = Algo::RffKrls { beta: 0.999, lambda: 1e-3 };
+        assert!(FilterSession::diffusion_from_spec(bad, 1, &registry).is_err());
+        // PJRT backend is not either
+        let mut bad = group_config(3);
+        bad.session.backend = Backend::Pjrt;
+        assert!(FilterSession::diffusion_from_spec(bad, 1, &registry).is_err());
+
+        let mut group =
+            FilterSession::diffusion_from_spec(group_config(3), 1, &registry).unwrap();
+        // partial rounds are rejected before any row is applied
+        assert!(group.train_diffusion(&[0.0; 10], &[0.0; 2]).is_err());
+        assert_eq!(group.samples_seen(), 0);
+        // per-sample and plain-batch training point at TrainDiffusion
+        assert!(group.train(&[0.0; 5], 1.0).is_err());
+        assert!(group.train_batch(&[0.0; 15], &[0.0; 3]).is_err());
+        // and a non-group session rejects train_diffusion
+        let mut rng = run_rng(32, 0);
+        let mut plain =
+            FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        assert!(plain.train_diffusion(&[0.0; 15], &[0.0; 3]).is_err());
+    }
+
+    #[test]
     fn corrupt_snapshot_rejected() {
         assert!(SessionSnapshot::from_json("{").is_err());
         assert!(SessionSnapshot::from_json("{\"format\":1}").is_err());
@@ -1021,5 +1352,9 @@ mod tests {
         let text = s.snapshot().to_json().replace("native_klms", "native_krls");
         // shape check catches it at parse (θ is not D² long for P)
         assert!(SessionSnapshot::from_json(&text).is_err());
+        // out-of-range hyperparameters are parse errors, not panics
+        // inside a filter constructor during restore
+        let bad_mu = s.snapshot().to_json().replace("\"mu\":1", "\"mu\":-1");
+        assert!(SessionSnapshot::from_json(&bad_mu).is_err());
     }
 }

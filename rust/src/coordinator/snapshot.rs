@@ -5,9 +5,10 @@
 //! [`FilterSession`](super::FilterSession): configuration, feature map
 //! (inline or as a registry reference — see
 //! [`MapPayload`](crate::kaf::checkpoint::MapPayload)), the learned
-//! state of **all four** session variants (native f64 θ / θ+P, PJRT f32
-//! θ / θ+P *including any buffered partial chunk rows*), and the running
-//! stats. The codec guarantees:
+//! state of **every** session variant (native f64 θ for KLMS/NLMS,
+//! θ+packed-P for KRLS, PJRT f32 θ / θ+P *including any buffered
+//! partial chunk rows*, and whole diffusion groups — topology, ordering
+//! and per-node θ), and the running stats. The codec guarantees:
 //!
 //! * **Exactness.** Native f64 state round-trips bit-identically, so
 //!   snapshot → restore → train equals the uninterrupted run bitwise
@@ -31,6 +32,7 @@ use std::sync::{Mutex, PoisonError};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::distributed::DiffusionState;
 use crate::kaf::checkpoint::{
     arr, arr_f32, get_arr, get_arr_f32, get_num, get_str, get_usize, kernel_from_json,
     kernel_to_json, MapPayload,
@@ -42,15 +44,18 @@ use super::session::{Algo, Backend, SessionConfig};
 
 /// Session-snapshot format version written by this build. History:
 /// format 1 stored the native-KRLS `P` dense (`"p"`, `[D, D]`
-/// row-major); format 2 stores its packed upper triangle
-/// (`"p_packed"`, `D(D+1)/2` numbers — the filter's live layout).
-/// Format-1 documents are still read, translated at the boundary. The
-/// PJRT f32 `P` stays dense in every format — that is the device
-/// artifact's layout, round-tripped verbatim.
-pub const SNAPSHOT_FORMAT: usize = 2;
+/// row-major); format 2 switched it to the packed upper triangle
+/// (`"p_packed"`, `D(D+1)/2` numbers — the filter's live layout);
+/// format 3 added two state types — `"native_nlms"` (θ) and
+/// `"diffusion"` (a whole group: ordering, topology by canonical edge
+/// list, row-major `[nodes, D]` θ). Format-1/2 documents are still
+/// read (dense P translated at the boundary). The PJRT f32 `P` stays
+/// dense in every format — that is the device artifact's layout,
+/// round-tripped verbatim.
+pub const SNAPSHOT_FORMAT: usize = 3;
 
 /// Formats this build can read (see [`SNAPSHOT_FORMAT`]).
-pub const SNAPSHOT_READ_FORMATS: [usize; 2] = [1, SNAPSHOT_FORMAT];
+pub const SNAPSHOT_READ_FORMATS: [usize; 3] = [1, 2, SNAPSHOT_FORMAT];
 
 /// A serializable snapshot of one filter session's complete state.
 ///
@@ -73,6 +78,12 @@ pub(crate) enum SnapshotState {
     /// (`D(D+1)/2` floats — the filter's live layout; format-1 dense
     /// documents are translated to this at parse).
     NativeKrls { theta: Vec<f64>, p_packed: Vec<f64> },
+    /// Native f64 RFF-NLMS: θ.
+    NativeNlms { theta: Vec<f64> },
+    /// A diffusion group: ordering, topology (canonical edge list) and
+    /// every node's θ — the body codec is shared with the standalone
+    /// [`crate::distributed::codec`] documents.
+    Diffusion { state: DiffusionState },
     /// PJRT f32 KLMS: θ plus the buffered partial chunk rows.
     PjrtKlms { theta: Vec<f32>, buf_x: Vec<f32>, buf_y: Vec<f32> },
     /// PJRT f32 KRLS: θ, P, and the buffered partial chunk rows.
@@ -91,14 +102,43 @@ fn algo_to_json(algo: Algo) -> JsonValue {
             obj.insert("beta".into(), JsonValue::Number(beta));
             obj.insert("lambda".into(), JsonValue::Number(lambda));
         }
+        Algo::RffNlms { mu, eps } => {
+            obj.insert("type".into(), JsonValue::String("rffnlms".into()));
+            obj.insert("mu".into(), JsonValue::Number(mu));
+            obj.insert("eps".into(), JsonValue::Number(eps));
+        }
     }
     JsonValue::Object(obj)
 }
 
+/// Hyperparameter ranges are checked here at the parse boundary — the
+/// filter constructors `assert!` the same bounds, and a corrupt document
+/// must be a diagnostic error, never a panic inside a restore (the
+/// spill path decodes on router workers).
 fn algo_from_json(v: &JsonValue) -> Result<Algo> {
     match get_str(v, "type")? {
-        "rffklms" => Ok(Algo::RffKlms { mu: get_num(v, "mu")? }),
-        "rffkrls" => Ok(Algo::RffKrls { beta: get_num(v, "beta")?, lambda: get_num(v, "lambda")? }),
+        "rffklms" => {
+            let mu = get_num(v, "mu")?;
+            anyhow::ensure!(mu > 0.0 && mu.is_finite(), "algo mu must be positive");
+            Ok(Algo::RffKlms { mu })
+        }
+        "rffkrls" => {
+            let beta = get_num(v, "beta")?;
+            let lambda = get_num(v, "lambda")?;
+            anyhow::ensure!(beta > 0.0 && beta <= 1.0, "algo beta must be in (0, 1]");
+            anyhow::ensure!(
+                lambda > 0.0 && lambda.is_finite(),
+                "algo lambda must be positive"
+            );
+            Ok(Algo::RffKrls { beta, lambda })
+        }
+        "rffnlms" => {
+            let mu = get_num(v, "mu")?;
+            let eps = get_num(v, "eps")?;
+            anyhow::ensure!(mu > 0.0 && mu.is_finite(), "algo mu must be positive");
+            anyhow::ensure!(eps >= 0.0 && eps.is_finite(), "algo eps must be non-negative");
+            Ok(Algo::RffNlms { mu, eps })
+        }
         other => bail!("unknown algo '{other}'"),
     }
 }
@@ -161,6 +201,14 @@ impl SessionSnapshot {
                 state.insert("theta".into(), arr(theta.iter().copied()));
                 state.insert("p_packed".into(), arr(p_packed.iter().copied()));
             }
+            SnapshotState::NativeNlms { theta } => {
+                state.insert("type".into(), JsonValue::String("native_nlms".into()));
+                state.insert("theta".into(), arr(theta.iter().copied()));
+            }
+            SnapshotState::Diffusion { state: body } => {
+                state.insert("type".into(), JsonValue::String("diffusion".into()));
+                body.write_fields(&mut state);
+            }
             SnapshotState::PjrtKlms { theta, buf_x, buf_y } => {
                 state.insert("type".into(), JsonValue::String("pjrt_klms".into()));
                 state.insert("theta".into(), arr_f32(theta));
@@ -220,6 +268,8 @@ impl SessionSnapshot {
                 };
                 SnapshotState::NativeKrls { theta: get_arr(sv, "theta")?, p_packed }
             }
+            "native_nlms" => SnapshotState::NativeNlms { theta: get_arr(sv, "theta")? },
+            "diffusion" => SnapshotState::Diffusion { state: DiffusionState::parse_fields(sv)? },
             "pjrt_klms" => SnapshotState::PjrtKlms {
                 theta: get_arr_f32(sv, "theta")?,
                 buf_x: get_arr_f32(sv, "buf_x")?,
@@ -239,6 +289,16 @@ impl SessionSnapshot {
         // packed triangle, PJRT carries the dense device layout
         let (theta_len, p_check, buf) = match &state {
             SnapshotState::NativeKlms { theta } => (theta.len(), None, None),
+            SnapshotState::NativeNlms { theta } => (theta.len(), None, None),
+            SnapshotState::Diffusion { state } => {
+                // the group's θ payload is [nodes, D]; a node-count /
+                // topology mismatch must be a diagnostic error here, not
+                // a misparse (edge validity is checked when the topology
+                // is rebuilt at restore — also a diagnostic error).
+                // One source of truth: the shared body codec's check.
+                state.validate(feats)?;
+                (feats, None, None) // per-node θ length checked above
+            }
             SnapshotState::NativeKrls { theta, p_packed } => {
                 let want = crate::linalg::simd::packed_len(feats);
                 (theta.len(), Some((p_packed.len(), want)), None)
@@ -474,6 +534,35 @@ mod tests {
             let eb = b.train(&x, t.sin()).unwrap();
             assert_eq!(ea, eb, "continuation diverged after legacy restore");
         }
+    }
+
+    #[test]
+    fn diffusion_session_snapshot_mismatch_is_diagnostic() {
+        // a group snapshot whose node count disagrees with the θ payload
+        // must fail parsing with a descriptive error, not misparse
+        let registry = crate::kaf::MapRegistry::new();
+        let cfg = crate::coordinator::DiffusionGroupConfig {
+            session: SessionConfig { features: 8, ..SessionConfig::paper_default() },
+            ordering: crate::distributed::DiffusionOrdering::CombineThenAdapt,
+            topology: crate::distributed::NetworkTopology::ring(4),
+        };
+        let s = FilterSession::diffusion_from_spec(cfg, 5, &registry).unwrap();
+        let text = s.snapshot().to_json();
+        // sanity: the untampered document round-trips
+        assert!(SessionSnapshot::from_json(&text).is_ok());
+        let mut v = JsonValue::parse(&text).unwrap();
+        let JsonValue::Object(obj) = &mut v else { unreachable!("snapshot is an object") };
+        let Some(JsonValue::Object(st)) = obj.get_mut("state") else {
+            unreachable!("state is an object")
+        };
+        st.insert("nodes".into(), JsonValue::Number(5.0));
+        let err = SessionSnapshot::from_json(&v.to_string_compact())
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("node count and topology disagree"),
+            "unhelpful error: {err}"
+        );
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Checkpoint codec for diffusion networks — the distributed extension
+//! of [`kaf::checkpoint`](crate::kaf::checkpoint): the same versioned
+//! document format (`"format"` = [`CHECKPOINT_FORMAT`], map inline or by
+//! [`MapSpec`](crate::kaf::MapSpec) registry reference), carrying the
+//! whole group — topology, ordering, adapt rule and every node's θ.
+//!
+//! Documents are **shape-validated with diagnostics**: a node-count /
+//! topology / θ-length mismatch is a descriptive `Err`, never a panic or
+//! a misparse. The state-body codec ([`DiffusionState`]) is shared with
+//! the coordinator's session snapshots (`coordinator::SessionSnapshot`),
+//! so a group serialized by the service's spill path and one serialized
+//! here agree on the layout.
+//!
+//! Round-trip exactness: θ arrays are f64 and round-trip bitwise; the
+//! topology round-trips through its canonical edge list
+//! ([`NetworkTopology::edges`]), whose reconstruction yields identical
+//! adjacency order and therefore bitwise-identical combines — restoring
+//! a group and continuing to train equals the uninterrupted run exactly
+//! (property-tested in `tests/diffusion_parity.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::kaf::checkpoint::{
+    arr, check_format, get_arr, get_num, get_str, get_usize, MapPayload, CHECKPOINT_FORMAT,
+};
+use crate::kaf::{MapRegistry, RffMap};
+use crate::util::json::JsonValue;
+
+use super::network::{DiffusionAlgo, DiffusionNetwork, DiffusionOrdering, NetworkTopology};
+
+/// The decoded group state body, before a map/network is constructed —
+/// shared by this codec and the coordinator's session-snapshot codec.
+pub struct DiffusionState {
+    /// Node count.
+    pub nodes: usize,
+    /// Canonical undirected edge list.
+    pub edges: Vec<(usize, usize)>,
+    /// Half-step ordering.
+    pub ordering: DiffusionOrdering,
+    /// Row-major `[nodes, D]` per-node weights.
+    pub thetas: Vec<f64>,
+}
+
+impl DiffusionState {
+    /// Capture a live network's state body.
+    pub fn of(net: &DiffusionNetwork) -> Self {
+        Self {
+            nodes: net.nodes(),
+            edges: net.topology().edges(),
+            ordering: net.ordering(),
+            thetas: net.thetas().to_vec(),
+        }
+    }
+
+    /// Shape-check the body against a feature count: node count and the
+    /// `[nodes, D]` θ payload must agree. The single source of the
+    /// "node count and topology disagree" diagnostic — called both by
+    /// the session-snapshot parser (up-front, so a corrupt document
+    /// errors at parse) and by [`Self::build_topology`] at restore.
+    pub fn validate(&self, features: usize) -> Result<()> {
+        anyhow::ensure!(self.nodes > 0, "diffusion group document has zero nodes");
+        anyhow::ensure!(
+            self.thetas.len() == self.nodes * features,
+            "per-node θ payload has {} numbers but {} nodes × {} features \
+             need {} — node count and topology disagree with the state",
+            self.thetas.len(),
+            self.nodes,
+            features,
+            self.nodes * features
+        );
+        Ok(())
+    }
+
+    /// Validate the body against a feature count and build the topology,
+    /// with diagnostic errors for every mismatch a document can carry.
+    pub fn build_topology(&self, features: usize) -> Result<NetworkTopology> {
+        self.validate(features)?;
+        NetworkTopology::try_new(self.nodes, &self.edges)
+            .context("diffusion group document carries an invalid topology")
+    }
+
+    /// Serialize the body into a JSON object's fields.
+    pub fn write_fields(&self, obj: &mut BTreeMap<String, JsonValue>) {
+        obj.insert("ordering".into(), JsonValue::String(self.ordering.name().into()));
+        obj.insert("nodes".into(), JsonValue::Number(self.nodes as f64));
+        obj.insert(
+            "edges".into(),
+            arr(self.edges.iter().flat_map(|&(a, b)| [a as f64, b as f64])),
+        );
+        obj.insert("thetas".into(), arr(self.thetas.iter().copied()));
+    }
+
+    /// Parse the body out of a JSON object (shape-checked; topology
+    /// validity is checked by [`Self::build_topology`]).
+    pub fn parse_fields(v: &JsonValue) -> Result<Self> {
+        let ordering = DiffusionOrdering::from_name(get_str(v, "ordering")?)?;
+        let nodes = get_usize(v, "nodes")?;
+        let flat = get_arr(v, "edges")?;
+        anyhow::ensure!(
+            flat.len() % 2 == 0,
+            "diffusion edges array has odd length {} (must be (a, b) pairs)",
+            flat.len()
+        );
+        let edges = flat
+            .chunks_exact(2)
+            .map(|p| {
+                let (a, b) = (p[0], p[1]);
+                anyhow::ensure!(
+                    a.fract() == 0.0 && b.fract() == 0.0 && a >= 0.0 && b >= 0.0,
+                    "diffusion edge ({a}, {b}) is not a pair of node indices"
+                );
+                Ok((a as usize, b as usize))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let thetas = get_arr(v, "thetas")?;
+        Ok(Self { nodes, edges, ordering, thetas })
+    }
+}
+
+fn adapt_to_json(algo: DiffusionAlgo) -> JsonValue {
+    let mut obj = BTreeMap::new();
+    match algo {
+        DiffusionAlgo::Klms { mu } => {
+            obj.insert("type".into(), JsonValue::String("klms".into()));
+            obj.insert("mu".into(), JsonValue::Number(mu));
+        }
+        DiffusionAlgo::Nlms { mu, eps } => {
+            obj.insert("type".into(), JsonValue::String("nlms".into()));
+            obj.insert("mu".into(), JsonValue::Number(mu));
+            obj.insert("eps".into(), JsonValue::Number(eps));
+        }
+    }
+    JsonValue::Object(obj)
+}
+
+/// Ranges are checked at this parse boundary: `DiffusionNetwork::new`
+/// `assert!`s the same bounds, and a corrupt document must be a
+/// diagnostic error, never a panic inside a restore.
+fn adapt_from_json(v: &JsonValue) -> Result<DiffusionAlgo> {
+    let mu = get_num(v, "mu")?;
+    anyhow::ensure!(mu > 0.0 && mu.is_finite(), "adapt mu must be positive");
+    match get_str(v, "type")? {
+        "klms" => Ok(DiffusionAlgo::Klms { mu }),
+        "nlms" => {
+            let eps = get_num(v, "eps")?;
+            anyhow::ensure!(eps >= 0.0 && eps.is_finite(), "adapt eps must be non-negative");
+            Ok(DiffusionAlgo::Nlms { mu, eps })
+        }
+        other => anyhow::bail!("unknown diffusion adapt rule '{other}'"),
+    }
+}
+
+/// Serialize a diffusion network (map inline).
+pub fn save_diffusion(net: &DiffusionNetwork) -> String {
+    save_diffusion_with(net, MapPayload::Inline(Arc::clone(net.map_arc())))
+}
+
+/// Serialize a diffusion network with an explicit map payload (pass a
+/// [`MapPayload::Reference`] to store the shared map by spec — a group
+/// document then costs O(n·D) for the θ rows, not O(n·D + d·D) more for
+/// the map every group in a fleet shares anyway).
+pub fn save_diffusion_with(net: &DiffusionNetwork, map: MapPayload) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("format".into(), JsonValue::Number(CHECKPOINT_FORMAT as f64));
+    obj.insert("algo".into(), JsonValue::String("diffusion".into()));
+    obj.insert("map".into(), map.to_json());
+    obj.insert("adapt".into(), adapt_to_json(net.algo()));
+    DiffusionState::of(net).write_fields(&mut obj);
+    JsonValue::Object(obj).to_string_pretty()
+}
+
+/// Restore a diffusion network from [`save_diffusion`] output.
+/// Reference-mode maps resolve through `registry` so restored groups
+/// keep sharing the fleet's interned `(Ω, b)`. Every shape mismatch a
+/// document can carry — θ length vs nodes × features, out-of-range or
+/// self-loop edges, odd edge arrays — is a diagnostic error.
+pub fn load_diffusion(text: &str, registry: Option<&MapRegistry>) -> Result<DiffusionNetwork> {
+    let v = JsonValue::parse(text).context("parsing diffusion checkpoint")?;
+    check_format(&v)?;
+    let found = get_str(&v, "algo")?;
+    anyhow::ensure!(found == "diffusion", "not a diffusion checkpoint (found '{found}')");
+    let map = MapPayload::from_json(v.get("map").ok_or_else(|| anyhow!("missing map"))?)?;
+    let adapt = adapt_from_json(v.get("adapt").ok_or_else(|| anyhow!("missing adapt"))?)?;
+    let state = DiffusionState::parse_fields(&v)?;
+    let map: Arc<RffMap> = map.resolve(registry);
+    let topo = state.build_topology(map.features())?;
+    let mut net = DiffusionNetwork::new(topo, map, adapt, state.ordering);
+    net.restore_thetas(state.thetas);
+    Ok(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kaf::kernels::Kernel;
+    use crate::kaf::MapSpec;
+    use crate::rng::run_rng;
+    use crate::signal::{NonlinearWiener, SignalSource};
+
+    fn trained_net(feats: usize) -> DiffusionNetwork {
+        let mut rng = run_rng(1, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, feats);
+        let mut net = DiffusionNetwork::new(
+            NetworkTopology::ring(4),
+            map,
+            DiffusionAlgo::Klms { mu: 0.5 },
+            DiffusionOrdering::AdaptThenCombine,
+        );
+        let mut src = NonlinearWiener::new(run_rng(1, 1), 0.05);
+        for s in src.take_samples(60) {
+            let mut xs = Vec::new();
+            for _ in 0..4 {
+                xs.extend_from_slice(&s.x);
+            }
+            net.step(&xs, &vec![s.y; 4]);
+        }
+        net
+    }
+
+    #[test]
+    fn diffusion_roundtrip_continues_bitwise() {
+        let mut original = trained_net(24);
+        let text = save_diffusion(&original);
+        assert!(text.contains("\"algo\": \"diffusion\""));
+        let mut restored = load_diffusion(&text, None).unwrap();
+        assert_eq!(restored.thetas(), original.thetas());
+        assert_eq!(restored.ordering(), original.ordering());
+        assert_eq!(restored.topology().edges(), original.topology().edges());
+        // identical continuation — topology reconstruction kept the
+        // canonical combine order
+        let mut src = NonlinearWiener::new(run_rng(2, 0), 0.05);
+        for s in src.take_samples(40) {
+            let mut xs = Vec::new();
+            for _ in 0..4 {
+                xs.extend_from_slice(&s.x);
+            }
+            let a = original.step(&xs, &vec![s.y; 4]);
+            let b = restored.step(&xs, &vec![s.y; 4]);
+            assert_eq!(a, b, "trajectories diverged after restore");
+        }
+        assert_eq!(restored.thetas(), original.thetas());
+    }
+
+    #[test]
+    fn reference_map_group_restores_shared_through_registry() {
+        let registry = MapRegistry::new();
+        let spec = MapSpec::new(Kernel::Gaussian { sigma: 5.0 }, 5, 32, 77);
+        let map = registry.get_or_draw(&spec);
+        let net = DiffusionNetwork::new(
+            NetworkTopology::complete(3),
+            Arc::clone(&map),
+            DiffusionAlgo::Nlms { mu: 0.5, eps: 1e-6 },
+            DiffusionOrdering::CombineThenAdapt,
+        );
+        let text = save_diffusion_with(&net, MapPayload::Reference(spec));
+        assert!(text.len() < save_diffusion(&net).len() / 2, "reference doc should be small");
+        let restored = load_diffusion(&text, Some(&registry)).unwrap();
+        assert!(Arc::ptr_eq(restored.map_arc(), &map), "restored group must share the map");
+        assert_eq!(restored.algo(), net.algo());
+    }
+
+    /// Parse `text`, mutate the top-level object, re-serialize — the
+    /// hand-built-bad-document helper (string replacement is too brittle
+    /// against the pretty-printer's array layout).
+    fn mutate(text: &str, f: impl FnOnce(&mut BTreeMap<String, JsonValue>)) -> String {
+        let mut v = JsonValue::parse(text).unwrap();
+        let JsonValue::Object(obj) = &mut v else { unreachable!("checkpoint is an object") };
+        f(obj);
+        v.to_string_compact()
+    }
+
+    #[test]
+    fn mismatched_group_documents_are_diagnostic_errors() {
+        // satellite: node-count/topology mismatches must be descriptive
+        // errors, never a misparse or a panic inside a constructor
+        let text = save_diffusion(&trained_net(16));
+
+        // θ payload for 4 nodes relabelled as 3 nodes: length mismatch
+        let bad_nodes =
+            mutate(&text, |o| drop(o.insert("nodes".into(), JsonValue::Number(3.0))));
+        let err = load_diffusion(&bad_nodes, None).unwrap_err().to_string();
+        assert!(
+            err.contains("node count and topology disagree"),
+            "unhelpful error: {err}"
+        );
+
+        // an edge pointing past the node count
+        let bad_edge = mutate(&text, |o| drop(o.insert("edges".into(), arr([0.0, 9.0]))));
+        let err = format!("{:#}", load_diffusion(&bad_edge, None).unwrap_err());
+        assert!(err.contains("out of range"), "unhelpful error: {err}");
+
+        // a self loop
+        let self_loop = mutate(&text, |o| drop(o.insert("edges".into(), arr([1.0, 1.0]))));
+        let err = format!("{:#}", load_diffusion(&self_loop, None).unwrap_err());
+        assert!(err.contains("self loop"), "unhelpful error: {err}");
+
+        // an odd-length edge array cannot be (a, b) pairs
+        let odd = mutate(&text, |o| drop(o.insert("edges".into(), arr([0.0, 1.0, 2.0]))));
+        let err = load_diffusion(&odd, None).unwrap_err().to_string();
+        assert!(err.contains("odd length"), "unhelpful error: {err}");
+
+        // wrong algo tag and unknown ordering are rejected
+        let wrong_algo = mutate(&text, |o| {
+            drop(o.insert("algo".into(), JsonValue::String("rffklms".into())))
+        });
+        assert!(load_diffusion(&wrong_algo, None).is_err());
+        let bad_ordering = mutate(&text, |o| {
+            drop(o.insert("ordering".into(), JsonValue::String("sideways".into())))
+        });
+        assert!(load_diffusion(&bad_ordering, None).is_err());
+
+        // out-of-range adapt hyperparameters are diagnostic errors at
+        // parse, not a panic inside DiffusionNetwork::new during restore
+        let bad_mu = mutate(&text, |o| {
+            let mut adapt = BTreeMap::new();
+            adapt.insert("type".into(), JsonValue::String("klms".into()));
+            adapt.insert("mu".into(), JsonValue::Number(-1.0));
+            drop(o.insert("adapt".into(), JsonValue::Object(adapt)));
+        });
+        let err = load_diffusion(&bad_mu, None).unwrap_err().to_string();
+        assert!(err.contains("mu must be positive"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn hand_built_minimal_document_loads() {
+        // a document written by another tool, smallest valid shape:
+        // 2 nodes, one edge, inline 1-feature map
+        let doc = r#"{
+            "format": 3,
+            "algo": "diffusion",
+            "map": {"mode": "inline", "dim": 1, "omega": [0.5], "phases": [0.25]},
+            "adapt": {"type": "klms", "mu": 1.0},
+            "ordering": "cta",
+            "nodes": 2,
+            "edges": [0, 1],
+            "thetas": [0.125, -0.5]
+        }"#;
+        let net = load_diffusion(doc, None).unwrap();
+        assert_eq!(net.nodes(), 2);
+        assert_eq!(net.theta(0), &[0.125]);
+        assert_eq!(net.theta(1), &[-0.5]);
+        assert_eq!(net.topology().edges(), vec![(0, 1)]);
+    }
+}

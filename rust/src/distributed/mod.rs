@@ -1,20 +1,43 @@
-//! Distributed (diffusion) RFF-KLMS over a simulated network — the
-//! extension the paper's §7 / ref [21] points to, and the setting its
-//! intro uses to motivate fixed-size solutions: cooperating nodes
-//! exchange `θ ∈ R^D` vectors instead of dictionaries, so no dictionary
-//! matching and constant per-link payload.
+//! Distributed (diffusion) kernel adaptive filtering over a simulated
+//! network — the extension the paper's §7 / ref [21] points to, and the
+//! setting its intro uses to motivate fixed-size solutions: cooperating
+//! nodes exchange `θ ∈ R^D` vectors instead of dictionaries, so no
+//! dictionary matching and constant per-link payload. The combine/adapt
+//! scheme follows the RKHS-diffusion follow-up (Bouboulis et al., 2017,
+//! arXiv:1703.08131), which builds exactly on this fixed-size property.
 //!
-//! Combine-then-adapt (CTA) diffusion:
+//! One diffusion round, over Metropolis weights `A` on an arbitrary
+//! undirected graph (both orderings supported):
+//!
 //! ```text
-//! φ_k = Σ_l a_{lk} θ_l         (combine over neighbors, A doubly sym.)
-//! θ_k = φ_k + μ e_k z(x_k),    e_k = y_k − φ_kᵀ z(x_k)
+//! CTA:  φ_k = Σ_l a_lk θ_l                 (combine)
+//!       θ_k = φ_k + gain_k · z(x_k)        (adapt; e_k = y_k − φ_kᵀ z(x_k))
+//! ATC:  ψ_k = θ_k + gain_k · z(x_k)        (adapt; e_k = y_k − θ_kᵀ z(x_k))
+//!       θ_k = Σ_l a_lk ψ_l                 (combine)
 //! ```
-//! with Metropolis combination weights on an arbitrary undirected graph.
+//!
+//! with `gain = μ e` (diffusion RFF-KLMS) or `μ e / (ε + ‖z‖²)`
+//! (diffusion RFF-NLMS).
+//!
+//! Built on the crate's current substrate (ISSUE 5): the combine is the
+//! lane-oriented multi-axpy
+//! ([`weighted_combine_rows`](crate::linalg::simd::weighted_combine_rows)),
+//! features run the blocked batch kernels over whole windows of rounds
+//! ([`DiffusionNetwork::step_batch_into`] — bitwise identical to
+//! per-round stepping), the whole group shares **one** interned
+//! `Arc<RffMap>`, and groups are served, snapshot and spilled through
+//! the coordinator as first-class sessions
+//! (`coordinator::Request::TrainDiffusion`,
+//! [`coordinator::DiffusionGroupConfig`](crate::coordinator::DiffusionGroupConfig)).
+//! [`codec`] is the standalone checkpoint document; [`TrafficReport`]
+//! prices the fixed-payload advantage against dictionary diffusion.
 
+pub mod codec;
 mod network;
 mod traffic;
 
-pub use network::{DiffusionRffKlms, NetworkTopology};
+pub use codec::{load_diffusion, save_diffusion, save_diffusion_with, DiffusionState};
+pub use network::{DiffusionAlgo, DiffusionNetwork, DiffusionOrdering, NetworkTopology};
 pub use traffic::{
     dict_matching_ops, dict_payload_bytes, dict_traffic_bytes, rff_payload_bytes,
     rff_traffic_bytes, TrafficReport,

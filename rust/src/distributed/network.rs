@@ -1,13 +1,37 @@
-//! Network topology + diffusion RFF-KLMS.
+//! Network topology + the diffusion network engine.
+//!
+//! [`NetworkTopology`] is an undirected graph with Metropolis
+//! combination weights; [`DiffusionNetwork`] runs per-node RFF adaptive
+//! filters over it, exchanging fixed-size `θ ∈ R^D` vectors — one node's
+//! state per combine round, no dictionaries, no dictionary matching.
+//!
+//! ## Canonical adjacency order
+//!
+//! Adjacency lists are stored **sorted ascending and deduplicated**
+//! (built through [`NetworkTopology::try_new`] regardless of the edge
+//! list's order), and a node's combine accumulates `[self, neighbors
+//! ascending]`. Floating-point combines are order-sensitive, so this
+//! canonical order is what makes a topology reconstructed from
+//! [`NetworkTopology::edges`] produce **bitwise-identical** diffusion
+//! trajectories — the group snapshot round-trip guarantee rests on it.
 
-use crate::kaf::RffMap;
-use crate::linalg::{axpy, dot};
+use std::sync::Arc;
 
-/// Undirected network topology with Metropolis combination weights.
+use anyhow::Result;
+
+use crate::kaf::{RffMap, ROW_BLOCK};
+use crate::linalg::simd;
+use crate::linalg::{axpy, dot, seq_dot};
+
+/// Undirected network topology with Metropolis combination weights
+/// `a_lk = 1/(1 + max(deg_l, deg_k))` for neighbors and
+/// `a_kk = 1 − Σ_l a_lk` — symmetric and doubly stochastic, the standard
+/// choice of the diffusion-adaptation literature.
 #[derive(Clone, Debug)]
 pub struct NetworkTopology {
     n: usize,
-    /// Adjacency lists (no self loops stored; self weight is implicit).
+    /// Adjacency lists in canonical (ascending, deduped) order; no self
+    /// loops stored — the self weight is implicit.
     neighbors: Vec<Vec<usize>>,
     /// Metropolis weights aligned with `neighbors`, plus self weight.
     weights: Vec<Vec<f64>>,
@@ -15,17 +39,24 @@ pub struct NetworkTopology {
 }
 
 impl NetworkTopology {
-    /// Build from an undirected edge list over `n` nodes.
-    pub fn new(n: usize, edges: &[(usize, usize)]) -> Self {
-        assert!(n > 0);
-        let mut neighbors = vec![Vec::new(); n];
+    /// Build from an undirected edge list over `n` nodes, validating the
+    /// edges (endpoints in range, no self loops; duplicates collapse).
+    /// The stored adjacency is canonical regardless of `edges` order —
+    /// see the module docs.
+    pub fn try_new(n: usize, edges: &[(usize, usize)]) -> Result<Self> {
+        anyhow::ensure!(n > 0, "a topology needs at least one node");
+        let mut adj = vec![std::collections::BTreeSet::new(); n];
         for &(a, b) in edges {
-            assert!(a < n && b < n && a != b, "invalid edge ({a},{b})");
-            if !neighbors[a].contains(&b) {
-                neighbors[a].push(b);
-                neighbors[b].push(a);
-            }
+            anyhow::ensure!(
+                a < n && b < n,
+                "edge ({a},{b}) is out of range for {n} nodes"
+            );
+            anyhow::ensure!(a != b, "self loop ({a},{a}) is not a valid edge");
+            adj[a].insert(b);
+            adj[b].insert(a);
         }
+        let neighbors: Vec<Vec<usize>> =
+            adj.into_iter().map(|s| s.into_iter().collect()).collect();
         // Metropolis: a_lk = 1/(1+max(deg_l, deg_k)) for neighbors,
         // self weight = 1 − Σ_neighbors.
         let deg: Vec<usize> = neighbors.iter().map(|v| v.len()).collect();
@@ -40,7 +71,13 @@ impl NetworkTopology {
             }
             self_weights[k] = 1.0 - total;
         }
-        Self { n, neighbors, weights, self_weights }
+        Ok(Self { n, neighbors, weights, self_weights })
+    }
+
+    /// [`Self::try_new`], panicking on an invalid edge list (programmatic
+    /// construction; codecs and untrusted inputs use `try_new`).
+    pub fn new(n: usize, edges: &[(usize, usize)]) -> Self {
+        Self::try_new(n, edges).expect("valid topology")
     }
 
     /// Ring of `n` nodes.
@@ -60,9 +97,19 @@ impl NetworkTopology {
         Self::new(n, &edges)
     }
 
-    /// Erdős–Rényi random graph (connected retries up to 100 draws).
-    pub fn random(n: usize, p: f64, rng: &mut crate::rng::Rng) -> Self {
-        for _ in 0..100 {
+    /// Path `0 — 1 — … — n−1`.
+    pub fn path(n: usize) -> Self {
+        let edges: Vec<(usize, usize)> = (1..n).map(|i| (i - 1, i)).collect();
+        Self::new(n, &edges)
+    }
+
+    /// Connected Erdős–Rényi random graph: retries up to 100 draws and
+    /// **errors** when none comes out connected, instead of silently
+    /// handing back some other topology (it used to fall back to a ring,
+    /// so callers could not know what graph they were actually running).
+    pub fn random(n: usize, p: f64, rng: &mut crate::rng::Rng) -> Result<Self> {
+        const ATTEMPTS: usize = 100;
+        for _ in 0..ATTEMPTS {
             let mut edges = Vec::new();
             for i in 0..n {
                 for j in (i + 1)..n {
@@ -73,11 +120,13 @@ impl NetworkTopology {
             }
             let topo = Self::new(n, &edges);
             if topo.is_connected() {
-                return topo;
+                return Ok(topo);
             }
         }
-        // fall back to a ring (always connected)
-        Self::ring(n)
+        anyhow::bail!(
+            "no connected Erdős–Rényi draw over {n} nodes at p = {p} in \
+             {ATTEMPTS} attempts; raise p or pick an explicit topology"
+        )
     }
 
     /// Node count.
@@ -91,9 +140,59 @@ impl NetworkTopology {
         self.n == 0
     }
 
-    /// Neighbors of node `k`.
+    /// Neighbors of node `k`, in canonical ascending order.
     pub fn neighbors(&self, k: usize) -> &[usize] {
         &self.neighbors[k]
+    }
+
+    /// Degree of node `k`.
+    pub fn degree(&self, k: usize) -> usize {
+        self.neighbors[k].len()
+    }
+
+    /// Metropolis weight `a_lk` (self weight when `k == l`, 0 for
+    /// non-neighbors). Symmetric: `weight(k, l) == weight(l, k)`.
+    pub fn weight(&self, k: usize, l: usize) -> f64 {
+        if k == l {
+            return self.self_weights[k];
+        }
+        match self.neighbors[k].binary_search(&l) {
+            Ok(pos) => self.weights[k][pos],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Self weight `a_kk`.
+    pub fn self_weight(&self, k: usize) -> f64 {
+        self.self_weights[k]
+    }
+
+    /// Neighbor weights of node `k`, aligned with [`Self::neighbors`].
+    pub fn neighbor_weights(&self, k: usize) -> &[f64] {
+        &self.weights[k]
+    }
+
+    /// Directed link count `Σ_k deg(k)` — the traffic-accounting unit of
+    /// [`super::TrafficReport`] (each combine round ships one payload per
+    /// directed link).
+    pub fn links(&self) -> usize {
+        self.neighbors.iter().map(|v| v.len()).sum()
+    }
+
+    /// The canonical undirected edge list (`a < b`, ascending). Feeding
+    /// this back through [`Self::try_new`] reconstructs an identical
+    /// topology — identical adjacency order, hence bitwise-identical
+    /// combines (the snapshot codec's round-trip contract).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for k in 0..self.n {
+            for &l in &self.neighbors[k] {
+                if k < l {
+                    out.push((k, l));
+                }
+            }
+        }
+        out
     }
 
     /// BFS connectivity check.
@@ -121,31 +220,137 @@ impl NetworkTopology {
     }
 }
 
-/// Diffusion RFF-KLMS: one θ per node, shared feature map (all nodes use
-/// the same `(Ω, b)` — exactly what the fixed-size parameterization
-/// enables: agreeing on a map costs one seed exchange).
-pub struct DiffusionRffKlms {
-    topo: NetworkTopology,
-    map: RffMap,
-    mu: f64,
-    thetas: Vec<Vec<f64>>,
-    /// scratch: combined estimates φ_k
-    phi: Vec<Vec<f64>>,
-    z: Vec<f64>,
+/// Per-node adapt rule of a diffusion network. KRLS is deliberately
+/// absent: its `P` matrix is per-node second-order state the diffusion
+/// scheme does not combine — the exchanged quantity is θ alone.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DiffusionAlgo {
+    /// RFF-KLMS adapt: `θ ← φ + μ e z`.
+    Klms {
+        /// LMS step size.
+        mu: f64,
+    },
+    /// RFF-NLMS adapt: `θ ← φ + μ e z / (ε + ‖z‖²)`.
+    Nlms {
+        /// NLMS step size (μ ∈ (0, 2) for stability).
+        mu: f64,
+        /// Normalization regularizer.
+        eps: f64,
+    },
 }
 
-impl DiffusionRffKlms {
-    /// Build over `topo` with shared map and step size `mu`.
-    pub fn new(topo: NetworkTopology, map: RffMap, mu: f64) -> Self {
+/// Which half-step runs first in a diffusion round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffusionOrdering {
+    /// Combine-then-adapt: `φ_k = Σ_l a_lk θ_l`, then
+    /// `θ_k = φ_k + gain·z_k` with `e_k = y_k − φ_kᵀ z_k`.
+    CombineThenAdapt,
+    /// Adapt-then-combine (the Bouboulis et al. 2017 default — slightly
+    /// better steady state because the combine averages *post-update*
+    /// states): `ψ_k = θ_k + gain·z_k` with `e_k = y_k − θ_kᵀ z_k`, then
+    /// `θ_k = Σ_l a_lk ψ_l`.
+    AdaptThenCombine,
+}
+
+impl DiffusionOrdering {
+    /// Stable codec name (`"cta"` / `"atc"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            DiffusionOrdering::CombineThenAdapt => "cta",
+            DiffusionOrdering::AdaptThenCombine => "atc",
+        }
+    }
+
+    /// Parse a codec name produced by [`Self::name`].
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "cta" => Ok(DiffusionOrdering::CombineThenAdapt),
+            "atc" => Ok(DiffusionOrdering::AdaptThenCombine),
+            other => anyhow::bail!("unknown diffusion ordering '{other}'"),
+        }
+    }
+}
+
+/// A diffusion network: one θ per node over a shared frozen feature map
+/// (the paper's "agree on a map costs one seed exchange" point — the
+/// whole group holds exactly **one** `Arc<RffMap>`, interned via
+/// [`MapRegistry`](crate::kaf::MapRegistry) when built from a spec).
+///
+/// Built batch-first on the crate's current substrate:
+///
+/// * The combine half-step runs the lane-oriented multi-axpy
+///   ([`simd::weighted_combine_rows`]) over the node's `[self, neighbors
+///   ascending]` term list — strict term-order accumulation, so combines
+///   are reproducible bitwise across runs and restores.
+/// * The feature map runs the blocked batch kernels
+///   ([`RffMap::apply_batch_into`]) over whole windows of rounds; the
+///   a-priori prediction is the strictly sequential
+///   [`seq_dot`] — the same accumulation order as the fused
+///   [`RffMap::apply_dot_into`], which is what makes [`Self::step_batch_into`]
+///   **bitwise identical** to one [`Self::step_into`] per round
+///   (property-tested in `tests/diffusion_parity.rs`).
+/// * All scratches (the `[n, D]` combine stage, the blocked feature
+///   block, the per-node term lists) are owned by the network and grown
+///   once — steady-state steps allocate nothing.
+pub struct DiffusionNetwork {
+    topo: NetworkTopology,
+    map: Arc<RffMap>,
+    algo: DiffusionAlgo,
+    ordering: DiffusionOrdering,
+    /// Row-major `[n, D]` per-node weights.
+    thetas: Vec<f64>,
+    /// Per-node combine term rows: `[k, neighbors ascending]`, aligned
+    /// with `combine_w`. Built once at construction.
+    combine_idx: Vec<Vec<usize>>,
+    /// Per-node combine weights: `[a_kk, a_lk …]`.
+    combine_w: Vec<Vec<f64>>,
+    /// `[n, D]` stage buffer: φ (combine-then-adapt) or ψ
+    /// (adapt-then-combine) for the round in flight.
+    stage: Vec<f64>,
+    /// Blocked feature scratch (`[rounds_per_block · n, D]` max).
+    zb: Vec<f64>,
+}
+
+impl DiffusionNetwork {
+    /// Build over `topo` with a shared map (owned, or an `Arc` already
+    /// interned in a registry), adapt rule and ordering.
+    pub fn new(
+        topo: NetworkTopology,
+        map: impl Into<Arc<RffMap>>,
+        algo: DiffusionAlgo,
+        ordering: DiffusionOrdering,
+    ) -> Self {
+        match algo {
+            DiffusionAlgo::Klms { mu } => assert!(mu > 0.0, "mu must be positive"),
+            DiffusionAlgo::Nlms { mu, eps } => {
+                assert!(mu > 0.0 && eps >= 0.0, "mu must be positive, eps non-negative")
+            }
+        }
+        let map = map.into();
         let n = topo.len();
-        let d_feat = map.features();
+        let feats = map.features();
+        let mut combine_idx = Vec::with_capacity(n);
+        let mut combine_w = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut idx = Vec::with_capacity(1 + topo.degree(k));
+            let mut w = Vec::with_capacity(1 + topo.degree(k));
+            idx.push(k);
+            w.push(topo.self_weight(k));
+            idx.extend_from_slice(topo.neighbors(k));
+            w.extend_from_slice(topo.neighbor_weights(k));
+            combine_idx.push(idx);
+            combine_w.push(w);
+        }
         Self {
             topo,
             map,
-            mu,
-            thetas: vec![vec![0.0; d_feat]; n],
-            phi: vec![vec![0.0; d_feat]; n],
-            z: vec![0.0; d_feat],
+            algo,
+            ordering,
+            thetas: vec![0.0; n * feats],
+            combine_idx,
+            combine_w,
+            stage: vec![0.0; n * feats],
+            zb: Vec::new(),
         }
     }
 
@@ -154,9 +359,73 @@ impl DiffusionRffKlms {
         self.topo.len()
     }
 
+    /// The network topology.
+    pub fn topology(&self) -> &NetworkTopology {
+        &self.topo
+    }
+
+    /// The shared feature map.
+    pub fn map(&self) -> &RffMap {
+        &self.map
+    }
+
+    /// The shared map handle — the group's **only** resident `(Ω, b)`.
+    /// `Arc::strong_count` on it is independent of the node count.
+    pub fn map_arc(&self) -> &Arc<RffMap> {
+        &self.map
+    }
+
+    /// The per-node adapt rule.
+    pub fn algo(&self) -> DiffusionAlgo {
+        self.algo
+    }
+
+    /// The half-step ordering.
+    pub fn ordering(&self) -> DiffusionOrdering {
+        self.ordering
+    }
+
     /// θ of node `k`.
     pub fn theta(&self, k: usize) -> &[f64] {
-        &self.thetas[k]
+        let feats = self.map.features();
+        &self.thetas[k * feats..(k + 1) * feats]
+    }
+
+    /// All per-node weights, row-major `[n, D]` (the snapshot payload).
+    pub fn thetas(&self) -> &[f64] {
+        &self.thetas
+    }
+
+    /// Network-mean θ — the consensus estimate the coordinator serves
+    /// predictions from (per-node estimates agree with it up to the
+    /// disagreement diagnostic once the network has converged).
+    pub fn theta_mean(&self) -> Vec<f64> {
+        let n = self.topo.len();
+        let feats = self.map.features();
+        let mut mean = vec![0.0; feats];
+        for k in 0..n {
+            axpy(1.0, &self.thetas[k * feats..(k + 1) * feats], &mut mean);
+        }
+        let inv = 1.0 / n as f64;
+        for v in &mut mean {
+            *v *= inv;
+        }
+        mean
+    }
+
+    /// Overwrite every node's θ (snapshot restore). `thetas` must be
+    /// row-major `[n, D]`.
+    pub fn restore_thetas(&mut self, thetas: Vec<f64>) {
+        assert_eq!(thetas.len(), self.thetas.len(), "thetas must be [n, D]");
+        self.thetas = thetas;
+    }
+
+    /// Node `k`'s prediction `ŷ = θ_kᵀ z_Ω(x)` — Z-free fused kernel,
+    /// no allocation.
+    pub fn predict(&self, k: usize, x: &[f64]) -> f64 {
+        let mut out = [0.0];
+        self.map.predict_batch_into(x, self.theta(k), &mut out);
+        out[0]
     }
 
     /// Per-link payload in floats (the intro's point: D, not a dictionary).
@@ -164,35 +433,139 @@ impl DiffusionRffKlms {
         self.map.features()
     }
 
-    /// One diffusion step: every node `k` receives its own sample
-    /// `(x_k, y_k)`; combine-then-adapt; returns per-node a-priori errors
-    /// (measured at the combined estimate φ_k, the standard convention).
-    pub fn step(&mut self, samples: &[(Vec<f64>, f64)]) -> Vec<f64> {
+    /// One diffusion round: node `k` receives row `k` of the row-major
+    /// `[n, d]` window `xs` with target `ys[k]`; `errs` (length `n`)
+    /// receives the a-priori errors (measured at φ_k under
+    /// combine-then-adapt, at θ_k under adapt-then-combine — the
+    /// standard conventions). Allocation-free at steady state.
+    pub fn step_into(&mut self, xs: &[f64], ys: &[f64], errs: &mut [f64]) {
+        assert_eq!(ys.len(), self.topo.len(), "step takes exactly one sample per node");
+        self.step_batch_into(xs, ys, errs);
+    }
+
+    /// [`Self::step_into`], allocating the error vector.
+    pub fn step(&mut self, xs: &[f64], ys: &[f64]) -> Vec<f64> {
+        let mut errs = vec![0.0; ys.len()];
+        self.step_into(xs, ys, &mut errs);
+        errs
+    }
+
+    /// A whole window of rounds in one call: `xs` is row-major
+    /// `[rounds · n, d]` (round-major — round `r`'s node `k` is row
+    /// `r·n + k`), `ys`/`errs` match. The feature map runs the blocked
+    /// batch kernels over up to `max(1, ROW_BLOCK / n)` rounds at a time
+    /// (each `ω`/`b` lane loads once per block and serves every row);
+    /// combines and adapts stay strictly sequential in round order, so
+    /// the result is **bitwise identical** to one [`Self::step_into`]
+    /// call per round — `tests/diffusion_parity.rs` pins this at node
+    /// and row counts coprime with `LANES`/`ROW_BLOCK`.
+    pub fn step_batch_into(&mut self, xs: &[f64], ys: &[f64], errs: &mut [f64]) {
         let n = self.topo.len();
-        assert_eq!(samples.len(), n, "one sample per node");
-        let d_feat = self.map.features();
-        // combine
-        for k in 0..n {
-            let phi = &mut self.phi[k];
-            phi.iter_mut().for_each(|v| *v = 0.0);
-            axpy(self.topo.self_weights[k], &self.thetas[k], phi);
-            for (idx, &l) in self.topo.neighbors[k].iter().enumerate() {
-                axpy(self.topo.weights[k][idx], &self.thetas[l], phi);
+        let d = self.map.dim();
+        let feats = self.map.features();
+        assert_eq!(
+            ys.len() % n,
+            0,
+            "step_batch rows must be whole rounds of {n} nodes"
+        );
+        assert_eq!(xs.len(), ys.len() * d, "xs must be row-major [rows, d]");
+        assert_eq!(errs.len(), ys.len(), "errs must have one slot per row");
+        if ys.is_empty() {
+            return;
+        }
+        let rounds = ys.len() / n;
+        let rounds_per_block = (ROW_BLOCK / n).max(1);
+        let need = rounds_per_block.min(rounds) * n * feats;
+        if self.zb.len() < need {
+            self.zb.resize(need, 0.0);
+        }
+        let mut r0 = 0;
+        while r0 < rounds {
+            let rb = rounds_per_block.min(rounds - r0);
+            let rows = rb * n;
+            let row0 = r0 * n;
+            self.map
+                .apply_batch_into(&xs[row0 * d..(row0 + rows) * d], &mut self.zb[..rows * feats]);
+            for r in 0..rb {
+                let lo = (r0 + r) * n;
+                self.round_core(r * n, &ys[lo..lo + n], &mut errs[lo..lo + n]);
+            }
+            r0 += rb;
+        }
+    }
+
+    /// [`Self::step_batch_into`], allocating the error vector.
+    pub fn step_batch(&mut self, xs: &[f64], ys: &[f64]) -> Vec<f64> {
+        let mut errs = vec![0.0; ys.len()];
+        self.step_batch_into(xs, ys, &mut errs);
+        errs
+    }
+
+    /// The adapt gain for error `e` at features `z`.
+    #[inline]
+    fn gain(algo: DiffusionAlgo, e: f64, z: &[f64]) -> f64 {
+        match algo {
+            DiffusionAlgo::Klms { mu } => mu * e,
+            DiffusionAlgo::Nlms { mu, eps } => mu * e / (eps + dot(z, z)),
+        }
+    }
+
+    /// One combine+adapt round over the `n` feature rows starting at
+    /// `zb` row `zrow0`. The single round implementation both
+    /// [`Self::step_into`] and [`Self::step_batch_into`] run — one code
+    /// path, so per-step and windowed training cannot diverge.
+    fn round_core(&mut self, zrow0: usize, ys: &[f64], errs: &mut [f64]) {
+        let n = self.topo.len();
+        let feats = self.map.features();
+        match self.ordering {
+            DiffusionOrdering::CombineThenAdapt => {
+                // combine: φ_k = Σ_l a_lk θ_l (lane multi-axpy, strict
+                // [self, neighbors ascending] term order)
+                for k in 0..n {
+                    simd::weighted_combine_rows(
+                        feats,
+                        &self.thetas,
+                        &self.combine_idx[k],
+                        &self.combine_w[k],
+                        &mut self.stage[k * feats..(k + 1) * feats],
+                    );
+                }
+                // adapt from φ: θ_k = φ_k + gain·z_k
+                for k in 0..n {
+                    let z = &self.zb[(zrow0 + k) * feats..(zrow0 + k + 1) * feats];
+                    let phi = &self.stage[k * feats..(k + 1) * feats];
+                    let e = ys[k] - seq_dot(phi, z);
+                    let g = Self::gain(self.algo, e, z);
+                    let theta = &mut self.thetas[k * feats..(k + 1) * feats];
+                    theta.copy_from_slice(phi);
+                    axpy(g, z, theta);
+                    errs[k] = e;
+                }
+            }
+            DiffusionOrdering::AdaptThenCombine => {
+                // adapt: ψ_k = θ_k + gain·z_k, error at θ_k
+                for k in 0..n {
+                    let z = &self.zb[(zrow0 + k) * feats..(zrow0 + k + 1) * feats];
+                    let theta = &self.thetas[k * feats..(k + 1) * feats];
+                    let e = ys[k] - seq_dot(theta, z);
+                    let g = Self::gain(self.algo, e, z);
+                    let psi = &mut self.stage[k * feats..(k + 1) * feats];
+                    psi.copy_from_slice(theta);
+                    axpy(g, z, psi);
+                    errs[k] = e;
+                }
+                // combine: θ_k = Σ_l a_lk ψ_l
+                for k in 0..n {
+                    simd::weighted_combine_rows(
+                        feats,
+                        &self.stage,
+                        &self.combine_idx[k],
+                        &self.combine_w[k],
+                        &mut self.thetas[k * feats..(k + 1) * feats],
+                    );
+                }
             }
         }
-        // adapt
-        let mut errs = Vec::with_capacity(n);
-        for k in 0..n {
-            let (x, y) = &samples[k];
-            self.map.apply_into(x, &mut self.z);
-            let e = *y - dot(&self.phi[k], &self.z);
-            let theta = &mut self.thetas[k];
-            theta.copy_from_slice(&self.phi[k]);
-            axpy(self.mu * e, &self.z, theta);
-            errs.push(e);
-            debug_assert_eq!(theta.len(), d_feat);
-        }
-        errs
     }
 
     /// Network disagreement: mean pairwise θ distance (convergence-to-
@@ -202,15 +575,33 @@ impl DiffusionRffKlms {
         if n < 2 {
             return 0.0;
         }
+        let feats = self.map.features();
         let mut acc = 0.0;
         let mut pairs = 0usize;
         for a in 0..n {
             for b in (a + 1)..n {
-                acc += crate::linalg::sq_dist(&self.thetas[a], &self.thetas[b]).sqrt();
+                acc += crate::linalg::sq_dist(
+                    &self.thetas[a * feats..(a + 1) * feats],
+                    &self.thetas[b * feats..(b + 1) * feats],
+                )
+                .sqrt();
                 pairs += 1;
             }
         }
         acc / pairs as f64
+    }
+
+    /// Approximate heap bytes of the group's **own** state — per-node θ,
+    /// the combine stage, feature scratch and term lists — excluding the
+    /// shared map (count that once per fleet via [`RffMap::heap_bytes`]).
+    pub fn heap_bytes(&self) -> usize {
+        let terms: usize = self
+            .combine_idx
+            .iter()
+            .zip(&self.combine_w)
+            .map(|(i, w)| i.capacity() * 8 + w.capacity() * 8)
+            .sum();
+        (self.thetas.len() + self.stage.len() + self.zb.capacity()) * 8 + terms
     }
 }
 
@@ -218,20 +609,76 @@ impl DiffusionRffKlms {
 mod tests {
     use super::*;
     use crate::kaf::kernels::Kernel;
+    use crate::kaf::{OnlineRegressor, RffKlms};
     use crate::rng::{run_rng, Distribution, Normal};
     use crate::signal::{NonlinearWiener, SignalSource};
 
+    fn flat_round(x: &[f64], y: f64, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut xs = Vec::with_capacity(n * x.len());
+        for _ in 0..n {
+            xs.extend_from_slice(x);
+        }
+        (xs, vec![y; n])
+    }
+
     #[test]
-    fn metropolis_rows_sum_to_one() {
-        for topo in [
+    fn metropolis_rows_sum_to_one_and_weights_are_symmetric() {
+        // satellite: not just ring/complete/path — random graphs too
+        let mut rng = run_rng(1, 0);
+        let mut topos = vec![
             NetworkTopology::ring(6),
             NetworkTopology::complete(5),
-            NetworkTopology::new(4, &[(0, 1), (1, 2), (2, 3)]),
-        ] {
+            NetworkTopology::path(4),
+        ];
+        for draw in 0..4 {
+            topos.push(NetworkTopology::random(7 + draw, 0.5, &mut rng).unwrap());
+        }
+        for topo in &topos {
             for k in 0..topo.len() {
-                assert!((topo.weight_row_sum(k) - 1.0).abs() < 1e-12);
+                assert!(
+                    (topo.weight_row_sum(k) - 1.0).abs() < 1e-12,
+                    "row {k} sums to {}",
+                    topo.weight_row_sum(k)
+                );
+                for l in 0..topo.len() {
+                    assert_eq!(
+                        topo.weight(k, l),
+                        topo.weight(l, k),
+                        "Metropolis weights must be symmetric ({k},{l})"
+                    );
+                    if k != l && !topo.neighbors(k).contains(&l) {
+                        assert_eq!(topo.weight(k, l), 0.0);
+                    }
+                }
             }
         }
+    }
+
+    #[test]
+    fn adjacency_is_canonical_regardless_of_edge_order() {
+        // scrambled, duplicated edge lists build the identical topology
+        let a = NetworkTopology::new(5, &[(0, 3), (1, 0), (2, 4), (3, 2), (0, 3)]);
+        let b = NetworkTopology::new(5, &[(3, 0), (4, 2), (0, 1), (2, 3)]);
+        assert_eq!(a.edges(), b.edges());
+        for k in 0..5 {
+            assert_eq!(a.neighbors(k), b.neighbors(k));
+            assert_eq!(a.neighbor_weights(k), b.neighbor_weights(k));
+        }
+        // edges() round-trips through try_new
+        let c = NetworkTopology::try_new(5, &a.edges()).unwrap();
+        for k in 0..5 {
+            assert_eq!(a.neighbors(k), c.neighbors(k));
+        }
+        assert_eq!(a.links(), 8); // 4 undirected edges = 8 directed links
+    }
+
+    #[test]
+    fn invalid_edges_are_diagnostic_errors() {
+        assert!(NetworkTopology::try_new(0, &[]).is_err());
+        let err = NetworkTopology::try_new(4, &[(0, 7)]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "unhelpful error: {err}");
+        let err = NetworkTopology::try_new(4, &[(2, 2)]).unwrap_err().to_string();
+        assert!(err.contains("self loop"), "unhelpful error: {err}");
     }
 
     #[test]
@@ -239,7 +686,40 @@ mod tests {
         assert!(NetworkTopology::ring(5).is_connected());
         assert!(!NetworkTopology::new(4, &[(0, 1), (2, 3)]).is_connected());
         let mut rng = run_rng(1, 0);
-        assert!(NetworkTopology::random(8, 0.4, &mut rng).is_connected());
+        assert!(NetworkTopology::random(8, 0.4, &mut rng).unwrap().is_connected());
+    }
+
+    #[test]
+    fn random_surfaces_unconnected_draws_instead_of_ring_fallback() {
+        // regression: p = 0 can never produce a connected graph on n ≥ 2;
+        // the old code silently handed back a ring here
+        let mut rng = run_rng(2, 0);
+        let err = NetworkTopology::random(6, 0.0, &mut rng).unwrap_err().to_string();
+        assert!(err.contains("no connected"), "unhelpful error: {err}");
+        // a single node with no edges is trivially connected
+        assert!(NetworkTopology::random(1, 0.0, &mut rng).is_ok());
+    }
+
+    #[test]
+    fn solo_group_matches_rffklms_bitwise() {
+        // a 1-node network combines with weight a_00 = 1 and adapts with
+        // the same expressions as the plain filter: exact agreement
+        let mut rng = run_rng(3, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 37);
+        let mut filter = RffKlms::new(map.clone(), 0.5);
+        let mut net = DiffusionNetwork::new(
+            NetworkTopology::new(1, &[]),
+            map,
+            DiffusionAlgo::Klms { mu: 0.5 },
+            DiffusionOrdering::CombineThenAdapt,
+        );
+        let mut src = NonlinearWiener::new(run_rng(3, 1), 0.05);
+        for s in src.take_samples(200) {
+            let want = filter.step(&s.x, s.y);
+            let got = net.step(&s.x, &[s.y]);
+            assert_eq!(got, vec![want], "solo diffusion node diverged from RffKlms");
+        }
+        assert_eq!(net.theta(0), filter.theta());
     }
 
     #[test]
@@ -259,15 +739,24 @@ mod tests {
 
         let run = |topo: NetworkTopology, rng_seed: u64| -> f64 {
             let n = topo.len();
-            let mut net = DiffusionRffKlms::new(topo, map.clone(), 0.5);
+            let mut net = DiffusionNetwork::new(
+                topo,
+                map.clone(),
+                DiffusionAlgo::Klms { mu: 0.5 },
+                DiffusionOrdering::CombineThenAdapt,
+            );
             let mut rng = run_rng(rng_seed, 2);
+            let mut errs = vec![0.0; n];
+            let mut xs = vec![0.0; n * 5];
+            let mut ys = vec![0.0; n];
             let mut tail = 0.0;
             let mut count = 0;
             for (i, s) in samples.iter().enumerate() {
-                let batch: Vec<(Vec<f64>, f64)> = (0..n)
-                    .map(|_| (s.x.clone(), s.clean + noise.sample(&mut rng)))
-                    .collect();
-                let errs = net.step(&batch);
+                for k in 0..n {
+                    xs[k * 5..(k + 1) * 5].copy_from_slice(&s.x);
+                    ys[k] = s.clean + noise.sample(&mut rng);
+                }
+                net.step_into(&xs, &ys, &mut errs);
                 if i >= horizon - 800 {
                     tail += errs.iter().map(|e| e * e).sum::<f64>() / n as f64;
                     count += 1;
@@ -289,17 +778,70 @@ mod tests {
     }
 
     #[test]
+    fn atc_and_nlms_variants_learn() {
+        // convergence smoke for the adapt-then-combine ordering and the
+        // NLMS adapt rule
+        for (algo, ordering) in [
+            (DiffusionAlgo::Klms { mu: 0.5 }, DiffusionOrdering::AdaptThenCombine),
+            (
+                DiffusionAlgo::Nlms { mu: 0.5, eps: 1e-6 },
+                DiffusionOrdering::AdaptThenCombine,
+            ),
+            (
+                DiffusionAlgo::Nlms { mu: 0.5, eps: 1e-6 },
+                DiffusionOrdering::CombineThenAdapt,
+            ),
+        ] {
+            let mut rng = run_rng(5, 0);
+            let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 100);
+            let mut net =
+                DiffusionNetwork::new(NetworkTopology::ring(4), map, algo, ordering);
+            let mut sys = NonlinearWiener::new(run_rng(5, 1), 0.05);
+            let mut head = 0.0;
+            let mut tail = 0.0;
+            for i in 0..1500 {
+                let s = sys.next_sample();
+                let (xs, ys) = flat_round(&s.x, s.y, 4);
+                let errs = net.step(&xs, &ys);
+                let mse = errs.iter().map(|e| e * e).sum::<f64>() / 4.0;
+                if i < 150 {
+                    head += mse;
+                }
+                if i >= 1350 {
+                    tail += mse;
+                }
+            }
+            assert!(
+                tail < head * 0.5,
+                "{algo:?}/{ordering:?} did not learn: head {head} tail {tail}"
+            );
+        }
+    }
+
+    #[test]
     fn consensus_disagreement_shrinks() {
         let mut rng = run_rng(4, 0);
         let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 64);
-        let mut net = DiffusionRffKlms::new(NetworkTopology::complete(5), map, 0.5);
+        let mut net = DiffusionNetwork::new(
+            NetworkTopology::complete(5),
+            map,
+            DiffusionAlgo::Klms { mu: 0.5 },
+            DiffusionOrdering::CombineThenAdapt,
+        );
         let mut sys = NonlinearWiener::new(run_rng(4, 1), 0.05);
+        let mut noise_rng = run_rng(4, 2);
+        let noise = Normal::new(0.0, 0.3);
         let mut early = 0.0;
         let mut late = 0.0;
         for i in 0..800 {
             let s = sys.next_sample();
-            let batch: Vec<_> = (0..5).map(|_| (s.x.clone(), s.y)).collect();
-            net.step(&batch);
+            let mut xs = Vec::with_capacity(5 * 5);
+            let mut ys = Vec::with_capacity(5);
+            for _ in 0..5 {
+                xs.extend_from_slice(&s.x);
+                ys.push(s.y + noise.sample(&mut noise_rng));
+            }
+            net.step(&xs, &ys);
             if i == 50 {
                 early = net.disagreement();
             }
@@ -311,10 +853,47 @@ mod tests {
     }
 
     #[test]
+    fn complete_graph_zero_noise_stays_in_exact_consensus() {
+        // satellite: with identical observations and a complete graph the
+        // per-node updates are identical, so disagreement is exactly 0 —
+        // not merely small
+        let mut rng = run_rng(6, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 48);
+        let mut net = DiffusionNetwork::new(
+            NetworkTopology::complete(6),
+            map,
+            DiffusionAlgo::Klms { mu: 0.5 },
+            DiffusionOrdering::AdaptThenCombine,
+        );
+        let mut sys = NonlinearWiener::new(run_rng(6, 1), 0.0);
+        for s in sys.take_samples(600) {
+            let (xs, ys) = flat_round(&s.x, s.y, 6);
+            net.step(&xs, &ys);
+            assert_eq!(net.disagreement(), 0.0, "consensus broke under zero noise");
+        }
+        // and the consensus estimate actually learned something
+        let mut probe_sys = NonlinearWiener::new(run_rng(6, 1), 0.0);
+        let probes = probe_sys.take_samples(610);
+        let mse: f64 = probes[600..]
+            .iter()
+            .map(|s| (net.predict(0, &s.x) - s.clean).powi(2))
+            .sum::<f64>()
+            / 10.0;
+        assert!(mse < 1.0, "consensus model mse {mse}");
+    }
+
+    #[test]
     fn payload_is_d_not_dictionary() {
         let mut rng = run_rng(5, 0);
         let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 300);
-        let net = DiffusionRffKlms::new(NetworkTopology::ring(3), map, 1.0);
+        let net = DiffusionNetwork::new(
+            NetworkTopology::ring(3),
+            map,
+            DiffusionAlgo::Klms { mu: 1.0 },
+            DiffusionOrdering::CombineThenAdapt,
+        );
         assert_eq!(net.payload_floats(), 300);
+        // one resident map for the whole group
+        assert_eq!(std::sync::Arc::strong_count(net.map_arc()), 1);
     }
 }

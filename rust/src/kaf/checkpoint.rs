@@ -21,6 +21,13 @@
 //! f64 state round-trips bit-identically (numbers are written with
 //! Rust's shortest-round-trip float formatting); f32 state is stored
 //! through its exact f64 widening, which also round-trips bitwise.
+//!
+//! Two sibling codecs build on the helpers and format version here:
+//! the coordinator's whole-session snapshots
+//! (`coordinator::SessionSnapshot`) and the distributed layer's
+//! diffusion-group documents ([`crate::distributed::codec`] — algo tag
+//! `"diffusion"`, topology + per-node θ, shape-validated with
+//! diagnostics).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;

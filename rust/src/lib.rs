@@ -36,8 +36,8 @@
 //! | [`bench`] | micro-benchmark harness (criterion substitute, offline) |
 //! | [`util`] | minimal JSON/CSV writers, CLI parsing, logging |
 //! | [`runtime`] | PJRT client wrapper + HLO-text artifact registry |
-//! | [`coordinator`] | sessions, router, dynamic batcher, MC orchestrator |
-//! | [`distributed`] | diffusion RFF-KLMS over a simulated node graph |
+//! | [`coordinator`] | sessions (filters **and** diffusion groups), router, dynamic batcher, snapshots/spill, MC orchestrator |
+//! | [`distributed`] | diffusion networks (KLMS/NLMS × ATC/CTA) on the lane/batch substrate, topology codecs, traffic accounting |
 //! | [`experiments`] | drivers regenerating Figs. 1–3 and Table 1 |
 
 pub mod bench;

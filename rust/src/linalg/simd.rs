@@ -247,6 +247,55 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Weighted row combine `out[i] = Σ_t weights[t] · mat[rows[t]·n_cols + i]`
+/// over rows selected from a row-major `[·, n_cols]` matrix — the
+/// diffusion combine step `φ_k = Σ_l a_lk θ_l` (paper §7 / the
+/// Bouboulis et al. 2017 follow-up) as one **lanes-outer multi-axpy**:
+/// the outer loop walks `out` in `[f64; LANES]` chunks that stay in
+/// registers while the inner loop streams each selected row's lane once,
+/// so a combine over `T` neighbors reads `T·n_cols + n_cols` floats
+/// instead of the `2·T·n_cols` of `T` separate axpy sweeps.
+///
+/// Accumulation-order contract: each output element accumulates its
+/// terms in **strict `rows`-ascending single-accumulator order**,
+/// starting from 0.0 — bitwise identical to `out.fill(0.0)` followed by
+/// one [`axpy`]`(weights[t], row_t, out)` per term in order, and (since
+/// elements are independent) independent of where the lane/tail boundary
+/// falls. The diffusion parity suite rests on this: a combine computed
+/// here equals the scalar multi-axpy formulation exactly.
+pub fn weighted_combine_rows(
+    n_cols: usize,
+    mat: &[f64],
+    rows: &[usize],
+    weights: &[f64],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(rows.len(), weights.len());
+    debug_assert_eq!(out.len(), n_cols);
+    debug_assert!(rows.iter().all(|&r| (r + 1) * n_cols <= mat.len()));
+    let lane_end = n_cols - n_cols % LANES;
+    let mut c = 0;
+    while c < lane_end {
+        let mut acc = [0.0f64; LANES];
+        for (&r, &w) in rows.iter().zip(weights) {
+            let src = &mat[r * n_cols + c..r * n_cols + c + LANES];
+            for l in 0..LANES {
+                acc[l] += w * src[l];
+            }
+        }
+        out[c..c + LANES].copy_from_slice(&acc);
+        c += LANES;
+    }
+    // scalar tail: the identical per-element expression, same term order
+    for i in lane_end..n_cols {
+        let mut s = 0.0;
+        for (&r, &w) in rows.iter().zip(weights) {
+            s += w * mat[r * n_cols + i];
+        }
+        out[i] = s;
+    }
+}
+
 // ---- mixed-precision lanes (coordinator f32-state kernels) --------------
 
 /// f64-accumulated dot of an f32-state row with an f64 vector, `LANES`
@@ -483,6 +532,39 @@ mod tests {
         for (k, &v) in row.iter().enumerate() {
             assert_eq!(v, (2.0f64 * 1.5 - 0.25 * pi[k]) as f32);
         }
+    }
+
+    #[test]
+    fn weighted_combine_matches_axpy_sequence_bitwise() {
+        // n_cols straddles the lane boundary (13, 8, 1 — 13 coprime with
+        // LANES) and term counts 0..4; the kernel must equal the
+        // fill(0) + axpy-per-term formulation exactly, per the contract
+        for n_cols in [1usize, 8, 13, 33] {
+            let n_rows = 5;
+            let mat: Vec<f64> = (0..n_rows * n_cols).map(|k| (k as f64 * 0.37).sin()).collect();
+            for terms in 0..=4usize {
+                let rows: Vec<usize> = (0..terms).map(|t| (t * 2 + 1) % n_rows).collect();
+                let weights: Vec<f64> = (0..terms).map(|t| 0.3 + 0.2 * t as f64).collect();
+                let mut got = vec![f64::NAN; n_cols]; // stale contents must not leak
+                weighted_combine_rows(n_cols, &mat, &rows, &weights, &mut got);
+                let mut want = vec![0.0; n_cols];
+                for (&r, &w) in rows.iter().zip(&weights) {
+                    axpy(w, &mat[r * n_cols..(r + 1) * n_cols], &mut want);
+                }
+                assert_eq!(got, want, "n_cols={n_cols} terms={terms}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_combine_repeated_rows_accumulate_in_order() {
+        // the same row may appear twice (never in a Metropolis combine,
+        // but the kernel's contract is order, not uniqueness)
+        let mat = [1.0, 2.0, 3.0, 4.0];
+        let mut out = [0.0; 2];
+        weighted_combine_rows(2, &mat, &[1, 1, 0], &[0.5, 0.25, 1.0], &mut out);
+        assert_eq!(out[0], 0.5 * 3.0 + 0.25 * 3.0 + 1.0);
+        assert_eq!(out[1], 0.5 * 4.0 + 0.25 * 4.0 + 2.0);
     }
 
     #[test]

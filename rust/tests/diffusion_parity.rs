@@ -1,0 +1,305 @@
+//! Property tests for the diffusion layer (ISSUE 5 acceptance gates):
+//!
+//! * [`DiffusionNetwork::step_batch_into`] over multi-round windows is
+//!   **bitwise identical** to sequential per-round stepping, at node and
+//!   row counts coprime with `LANES`/`ROW_BLOCK`, for both orderings and
+//!   both adapt rules, over random topologies;
+//! * a diffusion group snapshot → serialize → parse → restore → train is
+//!   bitwise identical to the uninterrupted run (both map payload
+//!   modes), in the style of `snapshot_parity.rs`;
+//! * all nodes of a group share exactly **one** resident interned map
+//!   (`Arc::strong_count` independent of the node count);
+//! * groups ride the coordinator's spill/restore machinery with exact
+//!   row accounting and a bitwise-identical trajectory.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use rff_kaf::coordinator::{
+    Algo, CoordinatorService, DiffusionGroupConfig, FilterSession, ServiceConfig,
+    SessionConfig, SessionSnapshot,
+};
+use rff_kaf::distributed::{
+    DiffusionAlgo, DiffusionNetwork, DiffusionOrdering, NetworkTopology,
+};
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{MapRegistry, MapSpec, RffMap};
+use rff_kaf::rng::{run_rng, Distribution, Normal, Rng};
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+
+/// Mini property harness: run `prop(rng)` for `n` random cases; panic
+/// with the case seed on failure.
+fn cases(name: &str, n: usize, prop: impl Fn(&mut Rng)) {
+    for case in 0..n {
+        let seed = 0xD1FF ^ (case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+/// Node counts deliberately coprime with `LANES = 8` and
+/// `ROW_BLOCK = 64`, so window rows `rounds · n` land on every blocking
+/// boundary misalignment.
+const NODE_COUNTS: [usize; 7] = [1, 3, 5, 7, 9, 11, 13];
+
+fn random_topology(rng: &mut Rng, n: usize) -> NetworkTopology {
+    let mut edges = Vec::new();
+    for a in 0..n {
+        for b in (a + 1)..n {
+            if rng.next_f64() < 0.4 {
+                edges.push((a, b));
+            }
+        }
+    }
+    // connectivity is irrelevant to the parity properties
+    NetworkTopology::new(n, &edges)
+}
+
+fn random_algo(rng: &mut Rng) -> DiffusionAlgo {
+    if rng.next_below(2) == 0 {
+        DiffusionAlgo::Klms { mu: 0.1 + 0.5 * rng.next_f64() }
+    } else {
+        DiffusionAlgo::Nlms { mu: 0.1 + 0.8 * rng.next_f64(), eps: 1e-6 }
+    }
+}
+
+fn random_ordering(rng: &mut Rng) -> DiffusionOrdering {
+    if rng.next_below(2) == 0 {
+        DiffusionOrdering::CombineThenAdapt
+    } else {
+        DiffusionOrdering::AdaptThenCombine
+    }
+}
+
+#[test]
+fn prop_step_batch_bitwise_equals_sequential_steps() {
+    cases("diffusion_step_batch_parity", 40, |rng| {
+        let n = NODE_COUNTS[rng.next_below(NODE_COUNTS.len() as u64) as usize];
+        let dim = 1 + rng.next_below(6) as usize;
+        let feats = 1 + rng.next_below(96) as usize;
+        let sigma = 0.5 + 5.0 * rng.next_f64();
+        let map = RffMap::draw(rng, Kernel::Gaussian { sigma }, dim, feats);
+        let topo = random_topology(rng, n);
+        let (algo, ordering) = (random_algo(rng), random_ordering(rng));
+        let mut sequential =
+            DiffusionNetwork::new(topo.clone(), map.clone(), algo, ordering);
+        let mut windowed = DiffusionNetwork::new(topo, map, algo, ordering);
+
+        let rounds = 1 + rng.next_below(40) as usize;
+        let xs = Normal::standard().sample_vec(rng, rounds * n * dim);
+        let ys = Normal::standard().sample_vec(rng, rounds * n);
+
+        let mut want = vec![0.0; rounds * n];
+        for r in 0..rounds {
+            let lo = r * n;
+            sequential.step_into(
+                &xs[lo * dim..(lo + n) * dim],
+                &ys[lo..lo + n],
+                &mut want[lo..lo + n],
+            );
+        }
+        // feed the windowed net the same rounds in randomly-sized
+        // whole-round windows — parity must hold for any split
+        let mut got = vec![0.0; rounds * n];
+        let mut start = 0;
+        while start < rounds {
+            let take = 1 + rng.next_below(rounds as u64) as usize;
+            let end = (start + take).min(rounds);
+            windowed.step_batch_into(
+                &xs[start * n * dim..end * n * dim],
+                &ys[start * n..end * n],
+                &mut got[start * n..end * n],
+            );
+            start = end;
+        }
+        assert_eq!(got, want, "a-priori errors diverged (n={n}, rounds={rounds})");
+        assert_eq!(
+            windowed.thetas(),
+            sequential.thetas(),
+            "per-node θ diverged (n={n}, rounds={rounds})"
+        );
+    });
+}
+
+fn random_group_config(rng: &mut Rng) -> DiffusionGroupConfig {
+    let n = NODE_COUNTS[rng.next_below(NODE_COUNTS.len() as u64) as usize];
+    let algo = match random_algo(rng) {
+        DiffusionAlgo::Klms { mu } => Algo::RffKlms { mu },
+        DiffusionAlgo::Nlms { mu, eps } => Algo::RffNlms { mu, eps },
+    };
+    DiffusionGroupConfig {
+        session: SessionConfig {
+            dim: 1 + rng.next_below(5) as usize,
+            features: 1 + rng.next_below(40) as usize,
+            kernel: Kernel::Gaussian { sigma: 0.5 + 5.0 * rng.next_f64() },
+            algo,
+            backend: rff_kaf::coordinator::Backend::Native,
+        },
+        ordering: random_ordering(rng),
+        topology: random_topology(rng, n),
+    }
+}
+
+/// Train `rounds` random rounds with a snapshot/restore interruption at
+/// round `k` on one group, uninterrupted on the other; every error and
+/// the final per-node θ must match bitwise.
+fn check_group_snapshot_parity(
+    rng: &mut Rng,
+    mut uninterrupted: FilterSession,
+    mut resumable: FilterSession,
+    registry: Option<&MapRegistry>,
+) {
+    let dim = uninterrupted.config().dim;
+    let n = uninterrupted.diffusion().unwrap().nodes();
+    let rounds = 5 + rng.next_below(25) as usize;
+    let k = rng.next_below(rounds as u64) as usize;
+    for r in 0..rounds {
+        if r == k {
+            let text = resumable.snapshot().to_json();
+            let snap = SessionSnapshot::from_json(&text).expect("reparse");
+            resumable = FilterSession::restore(snap, registry, None).expect("restore");
+        }
+        let xs = Normal::standard().sample_vec(rng, n * dim);
+        let ys = Normal::standard().sample_vec(rng, n);
+        let want = uninterrupted.train_diffusion(&xs, &ys).expect("train");
+        let got = resumable.train_diffusion(&xs, &ys).expect("train");
+        assert_eq!(got, want, "errors diverged after restore at round {k}");
+    }
+    assert_eq!(
+        resumable.diffusion().unwrap().thetas(),
+        uninterrupted.diffusion().unwrap().thetas(),
+        "per-node θ diverged"
+    );
+    assert_eq!(resumable.samples_seen(), uninterrupted.samples_seen());
+    assert_eq!(resumable.running_mse(), uninterrupted.running_mse());
+    // served consensus predictions agree bitwise too
+    let probe = Normal::standard().sample_vec(rng, dim);
+    assert_eq!(resumable.predict(&probe), uninterrupted.predict(&probe));
+}
+
+#[test]
+fn prop_group_snapshot_restore_reference_map_is_bitwise() {
+    cases("group_snapshot_parity_reference", 25, |rng| {
+        let cfg = random_group_config(rng);
+        let seed = rng.next_u64();
+        let registry = MapRegistry::new();
+        let a = FilterSession::diffusion_from_spec(cfg.clone(), seed, &registry).unwrap();
+        let b = FilterSession::diffusion_from_spec(cfg, seed, &registry).unwrap();
+        check_group_snapshot_parity(rng, a, b, Some(&registry));
+        // restores resolved the reference — still exactly one map interned
+        assert_eq!(registry.len(), 1);
+    });
+}
+
+#[test]
+fn prop_group_snapshot_restore_inline_map_is_bitwise() {
+    cases("group_snapshot_parity_inline", 25, |rng| {
+        let cfg = random_group_config(rng);
+        let map = RffMap::draw(
+            rng,
+            cfg.session.kernel,
+            cfg.session.dim,
+            cfg.session.features,
+        );
+        let a = FilterSession::diffusion_with_map(cfg.clone(), map.clone()).unwrap();
+        let b = FilterSession::diffusion_with_map(cfg, map).unwrap();
+        check_group_snapshot_parity(rng, a, b, None);
+    });
+}
+
+#[test]
+fn group_shares_exactly_one_resident_interned_map() {
+    // acceptance gate: Arc::strong_count on the interned map is
+    // independent of the group's node count — every node runs off the
+    // registry's single (Ω, b)
+    let registry = MapRegistry::new();
+    let session = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+    let spec = MapSpec::new(session.kernel, session.dim, session.features, 7);
+    let mut groups = Vec::new();
+    for (i, nodes) in [1usize, 5, 13].into_iter().enumerate() {
+        let cfg = DiffusionGroupConfig {
+            session: session.clone(),
+            ordering: DiffusionOrdering::AdaptThenCombine,
+            topology: NetworkTopology::ring(nodes),
+        };
+        groups.push(FilterSession::diffusion_from_spec(cfg, 7, &registry).unwrap());
+        let map = registry.get_or_draw(&spec);
+        // registry + (i+1) groups + this probe handle — node counts
+        // contribute nothing
+        assert_eq!(Arc::strong_count(&map), i + 3, "after group of {nodes} nodes");
+    }
+    assert_eq!(registry.len(), 1);
+    // plain sessions off the same spec keep sharing it
+    let plain = FilterSession::from_spec(session, 7, &registry, None).unwrap();
+    assert!(Arc::ptr_eq(plain.map_arc(), groups[0].map_arc()));
+    for g in &groups {
+        assert!(Arc::ptr_eq(g.map_arc(), plain.map_arc()));
+    }
+}
+
+#[test]
+fn diffusion_groups_spill_and_restore_through_the_resident_cap() {
+    // groups are ordinary sessions to the store: cap 1 + two sessions
+    // forces evict/restore churn on every alternating touch; row
+    // accounting must stay exact and the trajectory bitwise equal to an
+    // unspilled mirror network
+    let svc = CoordinatorService::start(
+        ServiceConfig { workers: 2, max_resident_sessions: 1, ..ServiceConfig::default() },
+        None,
+    );
+    let session = SessionConfig {
+        features: 16,
+        algo: Algo::RffKlms { mu: 0.5 },
+        ..SessionConfig::paper_default()
+    };
+    let nodes = 3;
+    let cfg = DiffusionGroupConfig {
+        session: session.clone(),
+        ordering: DiffusionOrdering::CombineThenAdapt,
+        topology: NetworkTopology::ring(nodes),
+    };
+    let gid = svc.add_diffusion_group(cfg, 7).unwrap();
+    let sid = svc.add_session_from_spec(session.clone(), 7).unwrap();
+
+    // unspilled mirror: same spec ⇒ bitwise-identical map draw
+    let spec = MapSpec::new(session.kernel, session.dim, session.features, 7);
+    let mut mirror = DiffusionNetwork::new(
+        NetworkTopology::ring(nodes),
+        spec.draw(),
+        DiffusionAlgo::Klms { mu: 0.5 },
+        DiffusionOrdering::CombineThenAdapt,
+    );
+
+    let mut src = NonlinearWiener::new(run_rng(61, 1), 0.05);
+    let rounds = 40;
+    for s in src.take_samples(rounds) {
+        let mut xs = Vec::new();
+        for _ in 0..nodes {
+            xs.extend_from_slice(&s.x);
+        }
+        let ys = vec![s.y; nodes];
+        let served = svc.train_diffusion_sync(gid, xs.clone(), ys.clone()).unwrap();
+        let local = mirror.step_batch(&xs, &ys);
+        assert_eq!(served, local, "spill churn changed the group trajectory");
+        // alternating touch of the plain session keeps the cap churning
+        svc.train_sync(sid, s.x.clone(), s.y).unwrap();
+    }
+    assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 0);
+    let spill = &svc.stats().spill;
+    assert!(spill.evictions.load(Ordering::Relaxed) > 0, "cap 1 never evicted");
+    assert_eq!(spill.restore_failures.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        svc.stats().diffusion_rows.load(Ordering::Relaxed),
+        (rounds * nodes) as u64
+    );
+
+    let g = svc.remove_session(gid).unwrap();
+    assert_eq!(g.samples_seen(), rounds * nodes);
+    assert_eq!(g.diffusion().unwrap().thetas(), mirror.thetas());
+    let s = svc.remove_session(sid).unwrap();
+    assert_eq!(s.samples_seen(), rounds);
+    svc.shutdown();
+}
