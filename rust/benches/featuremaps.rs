@@ -1,0 +1,136 @@
+//! Bench — the FeatureMap-family experiment (EXPERIMENTS.md
+//! §FeatureMaps): deterministic Gauss–Hermite quadrature features matched
+//! against vanilla random Fourier features at **one quarter** of the
+//! feature budget, on the Mackey–Glass chaotic series and the Ex.-2
+//! nonlinear Wiener system, plus an adaptive-RFF row at the quadrature
+//! budget. Emits `BENCH_featuremaps.json`: per-variant training wall
+//! times as measurements, steady-state MSEs under an `"mse_db"` object.
+//!
+//! `cargo bench --bench featuremaps [-- --runs 20 --horizon 3000]`
+
+use std::collections::BTreeMap;
+
+use rff_kaf::bench::Bencher;
+use rff_kaf::kaf::kernels::Kernel;
+use rff_kaf::kaf::{MapKind, OnlineRegressor, RffKlms, RffMap};
+use rff_kaf::metrics::to_db;
+use rff_kaf::rng::run_rng;
+use rff_kaf::signal::{MackeyGlass, NonlinearWiener, Sample, SignalSource};
+use rff_kaf::util::{Args, JsonValue};
+
+/// Mean steady-state (tail) MSE of `runs` independent filter/source pairs.
+fn steady_state_mse(
+    runs: usize,
+    horizon: usize,
+    tail: usize,
+    mut source: impl FnMut(usize) -> Vec<Sample>,
+    mut filter: impl FnMut(usize) -> RffKlms,
+) -> f64 {
+    let mut acc = 0.0;
+    for run in 0..runs {
+        let samples = source(run);
+        let mut f = filter(run);
+        let errs = f.run(&samples);
+        acc += errs[horizon - tail..].iter().map(|e| e * e).sum::<f64>() / tail as f64;
+    }
+    acc / runs as f64
+}
+
+/// Time `f` once, deposit the wall time in the bencher and the resulting
+/// steady-state MSE (in dB) in the accuracy table.
+fn record(
+    b: &mut Bencher,
+    mse: &mut BTreeMap<String, JsonValue>,
+    name: &str,
+    f: &mut dyn FnMut() -> f64,
+) {
+    let t0 = std::time::Instant::now();
+    let m = f();
+    b.record(name, t0.elapsed());
+    mse.insert(name.to_string(), JsonValue::Number(to_db(m)));
+    println!("{name:<44} steady-state {:.2} dB", to_db(m));
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let runs = args.get_or("runs", 20usize);
+    let horizon = args.get_or("horizon", 3000usize);
+    let tail = (horizon / 6).max(1);
+    let seed = args.get_or("seed", 20160321u64);
+
+    let mut b = Bencher::quick();
+    let mut mse: BTreeMap<String, JsonValue> = BTreeMap::new();
+
+    // --- Mackey–Glass (τ=17, embed d=3, σ=1): quadrature order 3 gives
+    // --- D = 2·3³ = 54 deterministic features; the static-RFF baseline
+    // --- gets 4·54 = 216 random ones.
+    {
+        let (dim, sigma, mu) = (3usize, 1.0, 0.5);
+        let kernel = Kernel::Gaussian { sigma };
+        let quad = RffMap::quadrature(kernel, dim, 3).expect("order-3 grid");
+        let d_quad = quad.features();
+        let d_static = 4 * d_quad;
+        let src = |run: usize| {
+            MackeyGlass::chaotic(run_rng(seed, run), dim, 0.004).take_samples(horizon)
+        };
+        println!("=== Mackey–Glass d={dim} — static D={d_static} vs quadrature D={d_quad} ===");
+        record(&mut b, &mut mse, &format!("mg_static_rff_D{d_static}"), &mut || {
+            steady_state_mse(runs, horizon, tail, src, |run| {
+                let mut rng = run_rng(seed ^ 0xA11, run);
+                RffKlms::new(RffMap::draw(&mut rng, kernel, dim, d_static), mu)
+            })
+        });
+        record(&mut b, &mut mse, &format!("mg_quadrature_D{d_quad}"), &mut || {
+            steady_state_mse(runs, horizon, tail, src, |_| RffKlms::new(quad.clone(), mu))
+        });
+        record(&mut b, &mut mse, &format!("mg_adaptive_rff_D{d_quad}"), &mut || {
+            steady_state_mse(runs, horizon, tail, src, |run| {
+                let mut rng = run_rng(seed ^ 0xA12, run);
+                let kind = MapKind::AdaptiveRff { mu_omega: 0.01 };
+                RffKlms::new(RffMap::draw_kind(&mut rng, kernel, dim, d_quad, kind), mu)
+            })
+        });
+        record(&mut b, &mut mse, &format!("mg_static_rff_D{d_quad}"), &mut || {
+            steady_state_mse(runs, horizon, tail, src, |run| {
+                let mut rng = run_rng(seed ^ 0xA12, run); // same draw the adaptive row starts from
+                RffKlms::new(RffMap::draw(&mut rng, kernel, dim, d_quad), mu)
+            })
+        });
+        println!();
+    }
+
+    // --- Ex.-2 nonlinear Wiener system (d=5, σ=5): quadrature order 2
+    // --- gives D = 2·2⁵ = 64; the static baseline gets 4·64 = 256.
+    {
+        let (dim, sigma, mu) = (5usize, 5.0, 1.0);
+        let kernel = Kernel::Gaussian { sigma };
+        let quad = RffMap::quadrature(kernel, dim, 2).expect("order-2 grid");
+        let d_quad = quad.features();
+        let d_static = 4 * d_quad;
+        let src =
+            |run: usize| NonlinearWiener::new(run_rng(seed ^ 0xE2, run), 0.05).take_samples(horizon);
+        println!("=== Nonlinear Wiener d={dim} — static D={d_static} vs quadrature D={d_quad} ===");
+        record(&mut b, &mut mse, &format!("wiener_static_rff_D{d_static}"), &mut || {
+            steady_state_mse(runs, horizon, tail, src, |run| {
+                let mut rng = run_rng(seed ^ 0xE21, run);
+                RffKlms::new(RffMap::draw(&mut rng, kernel, dim, d_static), mu)
+            })
+        });
+        record(&mut b, &mut mse, &format!("wiener_quadrature_D{d_quad}"), &mut || {
+            steady_state_mse(runs, horizon, tail, src, |_| RffKlms::new(quad.clone(), mu))
+        });
+        println!();
+    }
+
+    // The Bencher document carries the wall times; splice the accuracy
+    // rows in under "mse_db" so one JSON holds the whole experiment.
+    let path = b.write_json("featuremaps").expect("writing BENCH_featuremaps.json");
+    let text = std::fs::read_to_string(&path).expect("re-reading bench json");
+    let JsonValue::Object(mut doc) = JsonValue::parse(&text).expect("bench json parses") else {
+        unreachable!("write_json emits an object document")
+    };
+    doc.insert("mse_db".into(), JsonValue::Object(mse));
+    std::fs::write(&path, JsonValue::Object(doc).to_string_pretty())
+        .expect("rewriting bench json with mse rows");
+    println!("spliced mse_db rows into {}", path.display());
+}

@@ -4,12 +4,14 @@
 //!
 //! `cargo bench --bench fig1_rffklms_convergence [-- --runs 100 --horizon 5000]`
 
+use rff_kaf::bench::Bencher;
 use rff_kaf::experiments::{fig1, print_figure, save_figure_csv, Series};
 use rff_kaf::metrics::to_db;
 use rff_kaf::util::Args;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut b = Bencher::quick();
     let runs = args.get_or("runs", 100usize);
     let horizon = args.get_or("horizon", 5000usize);
     let seed = args.get_or("seed", 20160321u64);
@@ -20,6 +22,7 @@ fn main() {
 
     let t0 = std::time::Instant::now();
     let res = fig1(runs, horizon, &d_values, seed);
+    b.record(&format!("fig1_{runs}runs_x_{horizon}"), t0.elapsed());
     let mut series = res.series.clone();
     series.push(Series::new("theory transient (Prop.1)", res.theory_curve.clone()));
     print_figure(
@@ -43,5 +46,7 @@ fn main() {
         save_figure_csv(path, &series).expect("csv");
         println!("wrote {path}");
     }
+    b.write_json("fig1_rffklms_convergence")
+        .expect("writing BENCH_fig1_rffklms_convergence.json");
     println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
 }

@@ -5,18 +5,24 @@
 //! faithful reduction (the curves stabilize long before); pass
 //! `-- --runs 1000 --horizon 15000` for paper scale.
 
+use rff_kaf::bench::Bencher;
 use rff_kaf::experiments::{fig2a, fig2b, print_figure, save_figure_csv};
 use rff_kaf::util::Args;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let seed = args.get_or("seed", 20160321u64);
+    let mut b = Bencher::quick();
 
     {
         let runs = args.get_or("runs", 100usize);
         let horizon = args.get_or("horizon", 15000usize);
         let t0 = std::time::Instant::now();
         let res = fig2a(runs, horizon, seed);
+        b.record(&format!("fig2a_{runs}runs_x_{horizon}"), t0.elapsed());
+        for (label, &secs) in res.series.iter().map(|s| &s.label).zip(&res.train_secs) {
+            b.record_secs(&format!("fig2a_train[{label}]"), secs);
+        }
         print_figure(
             &format!("Fig. 2a — RFFKLMS vs QKLMS (Ex. 2), {runs} runs x {horizon}"),
             &res.series,
@@ -45,6 +51,10 @@ fn main() {
         let horizon = args.get_or("krls-horizon", 2000usize);
         let t0 = std::time::Instant::now();
         let res = fig2b(runs, horizon, seed + 1);
+        b.record(&format!("fig2b_{runs}runs_x_{horizon}"), t0.elapsed());
+        for (label, &secs) in res.series.iter().map(|s| &s.label).zip(&res.train_secs) {
+            b.record_secs(&format!("fig2b_train[{label}]"), secs);
+        }
         print_figure(
             &format!("Fig. 2b — RFFKRLS vs Engel KRLS (Ex. 2 data), {runs} runs x {horizon}"),
             &res.series,
@@ -64,4 +74,6 @@ fn main() {
         }
         println!("fig2b wall time: {:.2}s", t0.elapsed().as_secs_f64());
     }
+
+    b.write_json("fig2_klms_krls").expect("writing BENCH_fig2_klms_krls.json");
 }

@@ -3,6 +3,7 @@
 //!
 //! Paper scale: 1000 runs (defaults here). `-- --runs N` to adjust.
 
+use rff_kaf::bench::Bencher;
 use rff_kaf::experiments::{fig3a, fig3b, print_figure, save_figure_csv};
 use rff_kaf::util::Args;
 
@@ -10,11 +11,16 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let runs = args.get_or("runs", 1000usize);
     let seed = args.get_or("seed", 20160321u64);
+    let mut b = Bencher::quick();
 
     {
         let horizon = args.get_or("horizon", 500usize);
         let t0 = std::time::Instant::now();
         let res = fig3a(runs, horizon, seed);
+        b.record(&format!("fig3a_{runs}runs_x_{horizon}"), t0.elapsed());
+        for (label, &secs) in res.series.iter().map(|s| &s.label).zip(&res.train_secs) {
+            b.record_secs(&format!("fig3a_train[{label}]"), secs);
+        }
         print_figure(
             &format!("Fig. 3a — Example 3 chaotic series, {runs} runs x {horizon}"),
             &res.series,
@@ -33,6 +39,10 @@ fn main() {
         let horizon = args.get_or("horizon4", 1000usize);
         let t0 = std::time::Instant::now();
         let res = fig3b(runs, horizon, seed + 1);
+        b.record(&format!("fig3b_{runs}runs_x_{horizon}"), t0.elapsed());
+        for (label, &secs) in res.series.iter().map(|s| &s.label).zip(&res.train_secs) {
+            b.record_secs(&format!("fig3b_train[{label}]"), secs);
+        }
         print_figure(
             &format!("Fig. 3b — Example 4 chaotic series, {runs} runs x {horizon}"),
             &res.series,
@@ -47,4 +57,6 @@ fn main() {
         }
         println!("fig3b wall time: {:.2}s", t0.elapsed().as_secs_f64());
     }
+
+    b.write_json("fig3_chaotic").expect("writing BENCH_fig3_chaotic.json");
 }

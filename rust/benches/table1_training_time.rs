@@ -8,6 +8,7 @@
 //! `--runs N` and `--scale S` (fraction of the paper's horizons) adjust
 //! cost; defaults reproduce the paper's horizons exactly.
 
+use rff_kaf::bench::Bencher;
 use rff_kaf::experiments::table1;
 use rff_kaf::kaf::kernels::Kernel;
 use rff_kaf::kaf::{OnlineRegressor, Qklms, RffKlms, RffMap};
@@ -22,7 +23,12 @@ fn main() {
     let seed = args.get_or("seed", 1u64);
 
     println!("=== Table 1 — mean training times ({runs} runs, horizon scale {scale}) ===\n");
+    let mut b = Bencher::quick();
     let t = table1(runs, scale, seed);
+    for row in &t.rows {
+        b.record_secs(&format!("{}_qklms_train", row.experiment), row.qklms_secs);
+        b.record_secs(&format!("{}_rffklms_train", row.experiment), row.rffklms_secs);
+    }
     print!("{}", t.render());
     println!(
         "\npaper (Matlab, core i5): Ex2 0.891s vs 0.226s | Ex3 0.036s vs 0.006s | Ex4 0.057s vs 0.021s"
@@ -61,5 +67,9 @@ fn main() {
             t_rff,
             t_qk / t_rff
         );
+        b.record_secs(&format!("crossover_eps{eps}_qklms"), t_qk / 1e3);
+        b.record_secs(&format!("crossover_eps{eps}_rffklms"), t_rff / 1e3);
     }
+
+    b.write_json("table1_training_time").expect("writing BENCH_table1_training_time.json");
 }

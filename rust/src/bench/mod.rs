@@ -144,6 +144,33 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Record a single pre-timed execution as a one-iteration
+    /// measurement. The paper-figure drivers run their experiment exactly
+    /// once (a full multi-run Monte-Carlo pass); [`Bencher::bench`]'s
+    /// adaptive looping would multiply that cost, so they time the pass
+    /// themselves and deposit the wall time here so it lands in the
+    /// `BENCH_*.json` written by [`Bencher::write_json`].
+    pub fn record(&mut self, name: &str, elapsed: Duration) -> &Measurement {
+        let ns = elapsed.as_nanos() as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            mean_ns: ns,
+            median_ns: ns,
+            p95_ns: ns,
+            std_ns: 0.0,
+            iters: 1,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// [`Self::record`] from fractional seconds (the experiment drivers
+    /// report mean per-run training times as `f64` seconds).
+    pub fn record_secs(&mut self, name: &str, secs: f64) -> &Measurement {
+        self.record(name, Duration::from_secs_f64(secs.max(0.0)))
+    }
+
     /// All measurements so far.
     pub fn results(&self) -> &[Measurement] {
         &self.results
@@ -228,6 +255,19 @@ mod tests {
         assert!(rows[0].get("mean_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
         assert!(rows[1].get("iters").and_then(|v| v.as_usize()).unwrap() >= 3);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_deposits_a_one_iter_measurement() {
+        let mut b = Bencher::quick();
+        b.record("full_pass", Duration::from_millis(250));
+        b.record_secs("mean_train", 1.5);
+        assert_eq!(b.results().len(), 2);
+        let m = &b.results()[0];
+        assert_eq!(m.iters, 1);
+        assert!((m.mean_ns - 250e6).abs() < 1e3);
+        assert_eq!(m.mean_ns, m.median_ns);
+        assert!((b.results()[1].mean_ns - 1.5e9).abs() < 1e3);
     }
 
     #[test]

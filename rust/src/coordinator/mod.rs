@@ -24,11 +24,15 @@
 //!               │ per-session locks, idle-  spill│ (memory or  │
 //!               │ LRU eviction + restore)       │  directory) │
 //!               └──────────┬──────────────┘     └────────────┘
-//!                          │ Arc<RffMap>
-//!                   ┌──────┴───────┐
-//!                   │ MapRegistry  │  one interned (Ω, b) + f32 view per
-//!                   │ (kaf layer)  │  (kernel, d, D, seed) — shared by
-//!                   └──────────────┘  sessions AND diffusion groups
+//!                          │ Arc<FeatureMap>
+//!                   ┌──────┴───────┐  one interned map + f32 view per
+//!                   │ MapRegistry  │  (kernel, d, D, seed, kind, param) —
+//!                   │ (kaf layer)  │  static RFF / quadrature shared by
+//!                   └──────────────┘  sessions AND diffusion groups;
+//!                                     adaptive-RFF sessions start on the
+//!                                     interned draw and clone-on-first-Ω-
+//!                                     update (their snapshots go inline,
+//!                                     never by registry reference)
 //! ```
 //!
 //! ## Diffusion groups
@@ -88,7 +92,8 @@
 //! beyond that, the least-recently-touched session is **evicted**: its
 //! [`SessionSnapshot`] (versioned JSON; every state variant incl.
 //! buffered PJRT chunk rows and whole diffusion groups; map by registry
-//! reference when interned)
+//! reference when interned and frozen — adaptive-RFF sessions always
+//! serialize their privately-adapted Ω inline)
 //! spills to the configured [`SnapshotSink`] and the live state is
 //! dropped. The next touch of that id restores it transparently —
 //! snapshot → evict → restore → train is **bitwise identical** to the

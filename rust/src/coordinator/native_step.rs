@@ -14,6 +14,20 @@
 //! The f64 (native-backend) hot path does **not** live here — it is the
 //! [`OnlineRegressor`](crate::kaf::OnlineRegressor) step/train_batch
 //! family in `kaf/`.
+//!
+//! These kernels are map-kind agnostic — features come from
+//! [`FeatureMap::apply_into`], whose evaluation contract carries the
+//! quadrature per-feature weights internally — but in practice only
+//! static-RFF maps flow through them:
+//! [`FilterSession::build`](super::FilterSession) pins the PJRT backend
+//! (the only caller, via `flush()`) to [`MapKind::StaticRff`] because
+//! the AOT artifacts bake the uniform-weight feature recipe. Quadrature
+//! and adaptive sessions run the native f64 path instead, and the
+//! adaptive Ω update lives in [`RffKlms::step`](crate::kaf::RffKlms),
+//! never in this chunk-remainder path.
+//!
+//! [`FeatureMap::apply_into`]: crate::kaf::FeatureMap::apply_into
+//! [`MapKind::StaticRff`]: crate::kaf::MapKind
 
 use crate::kaf::RffMap;
 use crate::linalg::simd;

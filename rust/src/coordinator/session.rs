@@ -15,7 +15,9 @@ use anyhow::Result;
 use crate::distributed::{DiffusionAlgo, DiffusionNetwork, DiffusionOrdering, NetworkTopology};
 use crate::kaf::checkpoint::MapPayload;
 use crate::kaf::kernels::Kernel;
-use crate::kaf::{MapRegistry, MapSpec, OnlineRegressor, RffKlms, RffKrls, RffMap, RffNlms};
+use crate::kaf::{
+    MapKind, MapRegistry, MapSpec, OnlineRegressor, RffKlms, RffKrls, RffMap, RffNlms,
+};
 use crate::rng::Rng;
 use crate::runtime::ExecutorHandle;
 
@@ -205,7 +207,7 @@ impl PredictState {
 
     /// Batched predict over row-major `[n, dim]` probes, writing `n`
     /// predictions into `out`. Runs the blocked **Z-free** fused kernel
-    /// ([`RffMap::predict_batch_into`]) — no feature matrix stored, no
+    /// ([`RffMap::predict_batch_into`](crate::kaf::FeatureMap::predict_batch_into)) — no feature matrix stored, no
     /// allocation (the caller owns `out`), bitwise the same values as
     /// per-row [`Self::predict`]. The service's native fallback serves
     /// whole bursts through this with one reused `out` buffer per router
@@ -273,6 +275,35 @@ impl FilterSession {
         Self::build(config, map, Some(spec), executor)
     }
 
+    /// Create a session from an explicit [`MapSpec`] — the fully general
+    /// interned constructor: any map kind ([`MapSpec::new`],
+    /// [`MapSpec::quadrature`], [`MapSpec::adaptive`]) resolves through
+    /// `registry`. Adaptive sessions share the interned *initial* draw
+    /// until their first Ω update clones a private map (copy-on-adapt),
+    /// and their snapshots always carry Ω inline.
+    pub fn from_map_spec(
+        config: SessionConfig,
+        spec: MapSpec,
+        registry: &MapRegistry,
+        executor: Option<ExecutorHandle>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            spec.kernel == config.kernel
+                && spec.dim == config.dim
+                && spec.features == config.features,
+            "map spec (kernel {:?}, d={}, D={}) does not match session config \
+             (kernel {:?}, d={}, D={})",
+            spec.kernel,
+            spec.dim,
+            spec.features,
+            config.kernel,
+            config.dim,
+            config.features
+        );
+        let map = registry.get_or_draw(&spec);
+        Self::build(config, map, Some(spec), executor)
+    }
+
     /// Create a diffusion group session with an explicit shared map —
     /// owned, or an `Arc` already interned elsewhere.
     pub fn diffusion_with_map(
@@ -315,6 +346,12 @@ impl FilterSession {
             config.session.dim,
             config.session.features
         );
+        anyhow::ensure!(
+            !map.kind().is_adaptive(),
+            "diffusion groups require a frozen map kind (got {}): every node \
+             shares one (Ω, b) and exchanges θ only",
+            map.kind().name()
+        );
         let algo = config.diffusion_algo()?;
         let net = DiffusionNetwork::new(config.topology, map, algo, config.ordering);
         Ok(Self {
@@ -341,6 +378,25 @@ impl FilterSession {
             config.dim,
             config.features
         );
+        // map-kind gates: the PJRT artifacts stage one frozen f32 (Ω, b)
+        // with a uniform scale, so only static-RFF maps run there; the
+        // adaptive Ω gradient lives in RffKlms::step, so it needs the
+        // native KLMS state.
+        if config.backend == Backend::Pjrt {
+            anyhow::ensure!(
+                map.kind() == MapKind::StaticRff,
+                "the PJRT backend requires a static RFF map, got '{}'",
+                map.kind().name()
+            );
+        }
+        if map.kind().is_adaptive() {
+            anyhow::ensure!(
+                matches!(config.algo, Algo::RffKlms { .. }),
+                "adaptive-RFF maps run the ARFF-GKLMS rule, which only \
+                 RFF-KLMS implements (got {:?})",
+                config.algo
+            );
+        }
         let state = match (config.backend, config.algo) {
             (Backend::Native, Algo::RffKlms { mu }) => {
                 SessionState::NativeKlms(RffKlms::new(map, mu))
@@ -763,8 +819,13 @@ impl FilterSession {
     /// buffered rows are carried in the snapshot, not dropped.
     pub fn snapshot(&self) -> SessionSnapshot {
         let map = match self.map_spec {
-            Some(spec) => MapPayload::Reference(spec),
-            None => MapPayload::Inline(Arc::clone(self.map_arc())),
+            // an adaptive session's Ω (may have) diverged from its spec's
+            // initial draw — a reference would silently restore the draw,
+            // so adaptive maps always serialize their private Ω inline
+            Some(spec) if !self.map_arc().kind().is_adaptive() => {
+                MapPayload::Reference(spec)
+            }
+            _ => MapPayload::Inline(Arc::clone(self.map_arc())),
         };
         let state = match &self.state {
             SessionState::NativeKlms(f) => {
@@ -904,7 +965,7 @@ impl FilterSession {
 
     /// Approximate heap bytes of this session's **own** state — θ, P,
     /// scratch and chunk buffers — excluding the shared map (count that
-    /// once per fleet via [`RffMap::heap_bytes`]). The per-session
+    /// once per fleet via [`RffMap::heap_bytes`](crate::kaf::FeatureMap::heap_bytes)). The per-session
     /// marginal cost the §Memory protocol records. Native variants
     /// delegate to the filters' own accounting, so the KRLS number
     /// reflects the packed `D(D+1)/2` P (about half the dense layout at
@@ -1138,6 +1199,160 @@ mod tests {
         let k = FilterSession::from_spec(krls_cfg, 42, &registry, None).unwrap();
         assert!(Arc::ptr_eq(k.map_arc(), &map));
         assert_eq!(registry.len(), 1);
+    }
+
+    #[test]
+    fn adaptive_fleet_copy_on_adapt_semantics() {
+        // acceptance gate: an adaptive fleet shares ONE resident initial
+        // draw until sessions adapt — then exactly one clone per adapted
+        // session, never before the first Ω update
+        let registry = MapRegistry::new();
+        let cfg = SessionConfig { features: 32, ..SessionConfig::paper_default() };
+        let spec = MapSpec::adaptive(cfg.kernel, cfg.dim, cfg.features, 42, 0.01);
+        let mut sessions: Vec<FilterSession> = (0..4)
+            .map(|_| FilterSession::from_map_spec(cfg.clone(), spec, &registry, None).unwrap())
+            .collect();
+        let map = registry.get_or_draw(&spec);
+        // registry + 4 sessions + probe: no clones before any update
+        assert_eq!(Arc::strong_count(&map), 6);
+        // train two of the four: each detaches exactly one private copy
+        let mut src = NonlinearWiener::new(run_rng(41, 0), 0.05);
+        for smp in src.take_samples(10) {
+            sessions[0].train(&smp.x, smp.y).unwrap();
+            sessions[1].train(&smp.x, smp.y).unwrap();
+        }
+        assert_eq!(Arc::strong_count(&map), 4, "two sessions cloned, two still share");
+        assert!(!Arc::ptr_eq(sessions[0].map_arc(), &map));
+        assert!(!Arc::ptr_eq(sessions[0].map_arc(), sessions[1].map_arc()));
+        assert!(Arc::ptr_eq(sessions[2].map_arc(), &map));
+        // identical trajectories → identical (private) adapted maps
+        assert_eq!(sessions[0].map().omega(0), sessions[1].map().omega(0));
+        assert_ne!(sessions[0].map().omega(0), map.omega(0));
+    }
+
+    #[test]
+    fn adaptive_session_snapshot_is_inline_and_restores_bitwise() {
+        let registry = MapRegistry::new();
+        let cfg = SessionConfig { features: 24, ..SessionConfig::paper_default() };
+        let spec = MapSpec::adaptive(cfg.kernel, cfg.dim, cfg.features, 7, 0.02);
+        let mut s = FilterSession::from_map_spec(cfg, spec, &registry, None).unwrap();
+        let mut src = NonlinearWiener::new(run_rng(42, 0), 0.05);
+        for smp in src.take_samples(50) {
+            s.train(&smp.x, smp.y).unwrap();
+        }
+        // spec session, but adaptive ⇒ the snapshot must carry Ω inline
+        let snap = s.snapshot();
+        assert!(snap.map_spec().is_none(), "adaptive snapshot must not be a reference");
+        let text = snap.to_json();
+        assert!(text.contains("\"kind\":\"adaptive_rff\""));
+        let mut restored = FilterSession::restore(
+            SessionSnapshot::from_json(&text).unwrap(),
+            Some(&registry),
+            None,
+        )
+        .unwrap();
+        assert_eq!(restored.theta(), s.theta());
+        assert_eq!(restored.map().omega(5), s.map().omega(5));
+        for smp in src.take_samples(30) {
+            assert_eq!(
+                s.train(&smp.x, smp.y).unwrap(),
+                restored.train(&smp.x, smp.y).unwrap(),
+                "continuation diverged (Ω and θ must co-evolve identically)"
+            );
+        }
+    }
+
+    #[test]
+    fn quadrature_session_round_trips_by_reference() {
+        let registry = MapRegistry::new();
+        let kernel = Kernel::Gaussian { sigma: 1.0 };
+        let spec = MapSpec::quadrature(kernel, 2, 4).unwrap();
+        let cfg = SessionConfig {
+            dim: 2,
+            features: spec.features,
+            kernel,
+            algo: Algo::RffKlms { mu: 0.5 },
+            backend: Backend::Native,
+        };
+        let mut s = FilterSession::from_map_spec(cfg, spec, &registry, None).unwrap();
+        for i in 0..60 {
+            let t = i as f64 * 0.23;
+            s.train(&[t.sin(), t.cos()], (t * 0.7).sin()).unwrap();
+        }
+        let text = s.snapshot().to_json();
+        assert!(text.contains("\"mode\":\"reference\""));
+        assert!(text.contains("\"kind\":\"quadrature\""));
+        let restored = FilterSession::restore(
+            SessionSnapshot::from_json(&text).unwrap(),
+            Some(&registry),
+            None,
+        )
+        .unwrap();
+        // the restored session SHARES the interned deterministic grid
+        assert!(Arc::ptr_eq(restored.map_arc(), s.map_arc()));
+        assert_eq!(restored.theta(), s.theta());
+    }
+
+    #[test]
+    fn map_kind_gates_reject_unsupported_combinations() {
+        let registry = MapRegistry::new();
+        let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+        let aspec = MapSpec::adaptive(cfg.kernel, cfg.dim, cfg.features, 1, 0.01);
+        // adaptive + KRLS: rejected (only RFF-KLMS runs the Ω gradient)
+        let krls = SessionConfig {
+            algo: Algo::RffKrls { beta: 0.999, lambda: 1e-3 },
+            ..cfg.clone()
+        };
+        let err = FilterSession::from_map_spec(krls, aspec, &registry, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("RFF-KLMS"), "unhelpful: {err}");
+        // adaptive + PJRT: rejected before the executor is even consulted
+        let pjrt = SessionConfig { backend: Backend::Pjrt, ..cfg.clone() };
+        let err = FilterSession::from_map_spec(pjrt, aspec, &registry, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("static RFF"), "unhelpful: {err}");
+        // adaptive diffusion group: rejected (nodes exchange θ only)
+        let amap = registry.get_or_draw(&aspec);
+        let group = DiffusionGroupConfig {
+            session: cfg,
+            ordering: DiffusionOrdering::CombineThenAdapt,
+            topology: NetworkTopology::ring(3),
+        };
+        let err = FilterSession::diffusion_with_map(group, amap)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("frozen map kind"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn quadrature_diffusion_group_trains() {
+        // any *static* kind is diffusion-eligible — quadrature included
+        let kernel = Kernel::Gaussian { sigma: 1.0 };
+        let map = RffMap::quadrature(kernel, 2, 3).unwrap();
+        let group = DiffusionGroupConfig {
+            session: SessionConfig {
+                dim: 2,
+                features: map.features(),
+                kernel,
+                algo: Algo::RffKlms { mu: 0.2 },
+                backend: Backend::Native,
+            },
+            ordering: DiffusionOrdering::CombineThenAdapt,
+            topology: NetworkTopology::ring(3),
+        };
+        let mut s = FilterSession::diffusion_with_map(group, map).unwrap();
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..30 {
+            let t = i as f64 * 0.31;
+            xs.extend_from_slice(&[t.sin(), t.cos()]);
+            ys.push((t * 0.9).sin());
+        }
+        let errs = s.train_diffusion(&xs, &ys).unwrap();
+        assert_eq!(errs.len(), 30);
+        assert!(errs.iter().all(|e| e.is_finite()));
     }
 
     #[test]

@@ -48,14 +48,19 @@ use super::session::{Algo, Backend, SessionConfig};
 /// (`"p_packed"`, `D(D+1)/2` numbers — the filter's live layout);
 /// format 3 added two state types — `"native_nlms"` (θ) and
 /// `"diffusion"` (a whole group: ordering, topology by canonical edge
-/// list, row-major `[nodes, D]` θ). Format-1/2 documents are still
-/// read (dense P translated at the boundary). The PJRT f32 `P` stays
-/// dense in every format — that is the device artifact's layout,
+/// list, row-major `[nodes, D]` θ); format 4 tags the map payload with
+/// its [`MapKind`](crate::kaf::MapKind) (`"kind"`, absent in older
+/// documents and defaulted to `"rff"`) and adds the quadrature weight
+/// table / adaptive μ_Ω fields — adaptive sessions always serialize
+/// their private Ω inline, never as a registry reference.
+/// Format-1/2/3 documents are still read (dense P translated at the
+/// boundary, missing kind tag defaulted). The PJRT f32 `P` stays dense
+/// in every format — that is the device artifact's layout,
 /// round-tripped verbatim.
-pub const SNAPSHOT_FORMAT: usize = 3;
+pub const SNAPSHOT_FORMAT: usize = 4;
 
 /// Formats this build can read (see [`SNAPSHOT_FORMAT`]).
-pub const SNAPSHOT_READ_FORMATS: [usize; 3] = [1, 2, SNAPSHOT_FORMAT];
+pub const SNAPSHOT_READ_FORMATS: [usize; 4] = [1, 2, 3, SNAPSHOT_FORMAT];
 
 /// A serializable snapshot of one filter session's complete state.
 ///
@@ -534,6 +539,54 @@ mod tests {
             let eb = b.train(&x, t.sin()).unwrap();
             assert_eq!(ea, eb, "continuation diverged after legacy restore");
         }
+    }
+
+    #[test]
+    fn format3_session_snapshot_without_kind_tag_restores_bitwise() {
+        // a pre-family (format-3) document — no map "kind" anywhere —
+        // must restore to the bitwise-identical StaticRff session
+        let cfg = SessionConfig::paper_default();
+        let mut rng = run_rng(31, 0);
+        let mut s = FilterSession::new(cfg, &mut rng, None).unwrap();
+        for i in 0..60 {
+            let t = i as f64 * 0.17;
+            let x = [t.sin(), t.cos(), (t * 0.5).sin(), (t * 1.1).cos(), 0.2];
+            s.train(&x, (t * 0.8).sin()).unwrap();
+        }
+        let text = s.snapshot().to_json();
+        assert!(text.contains("\"kind\":\"rff\""), "format 4 tags the map kind");
+        let mut v = JsonValue::parse(&text).unwrap();
+        let JsonValue::Object(obj) = &mut v else { unreachable!("snapshot is an object") };
+        obj.insert("format".into(), JsonValue::Number(3.0));
+        let Some(JsonValue::Object(map)) = obj.get_mut("map") else {
+            unreachable!("map is an object")
+        };
+        map.remove("kind").expect("kind tag present before stripping");
+        let legacy = v.to_string_compact();
+        let snap = SessionSnapshot::from_json(&legacy).expect("format-3 snapshot reads");
+        let mut restored = FilterSession::restore(snap, None, None).unwrap();
+        assert_eq!(restored.theta(), s.theta());
+        let mut a = s;
+        for i in 0..20 {
+            let t = i as f64 * 0.29;
+            let x = [t.cos(), t.sin(), 0.4 * t.cos(), (t * 1.7).sin(), -0.1];
+            assert_eq!(
+                a.train(&x, t.cos()).unwrap(),
+                restored.train(&x, t.cos()).unwrap(),
+                "continuation diverged after format-3 restore"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_map_kind_in_snapshot_is_diagnostic() {
+        let cfg = SessionConfig::paper_default();
+        let mut rng = run_rng(32, 0);
+        let s = FilterSession::new(cfg, &mut rng, None).unwrap();
+        let text = s.snapshot().to_json();
+        let doc = text.replace("\"kind\":\"rff\"", "\"kind\":\"spline\"");
+        let err = SessionSnapshot::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown map kind 'spline'"), "unhelpful error: {err}");
     }
 
     #[test]

@@ -186,6 +186,12 @@ pub fn load_diffusion(text: &str, registry: Option<&MapRegistry>) -> Result<Diff
     let adapt = adapt_from_json(v.get("adapt").ok_or_else(|| anyhow!("missing adapt"))?)?;
     let state = DiffusionState::parse_fields(&v)?;
     let map: Arc<RffMap> = map.resolve(registry);
+    anyhow::ensure!(
+        !map.kind().is_adaptive(),
+        "diffusion documents require a frozen map kind (got '{}'): every node \
+         shares one (Ω, b) and exchanges θ only",
+        map.kind().name()
+    );
     let topo = state.build_topology(map.features())?;
     let mut net = DiffusionNetwork::new(topo, map, adapt, state.ordering);
     net.restore_thetas(state.thetas);
@@ -322,6 +328,60 @@ mod tests {
         });
         let err = load_diffusion(&bad_mu, None).unwrap_err().to_string();
         assert!(err.contains("mu must be positive"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn quadrature_group_roundtrips() {
+        // any *static* map kind backs a group — the deterministic grid
+        // travels inline (weights + order) and by reference
+        let kernel = Kernel::Gaussian { sigma: 1.0 };
+        let map = RffMap::quadrature(kernel, 2, 3).unwrap();
+        let mut net = DiffusionNetwork::new(
+            NetworkTopology::ring(3),
+            map,
+            DiffusionAlgo::Klms { mu: 0.3 },
+            DiffusionOrdering::CombineThenAdapt,
+        );
+        for i in 0..20 {
+            let t = i as f64 * 0.29;
+            let xs = [t.sin(), t.cos(), (t * 1.1).sin(), (t * 1.1).cos(), 0.5, -0.5];
+            net.step(&xs, &[(t * 0.8).sin(); 3]);
+        }
+        let text = save_diffusion(&net);
+        assert!(text.contains("\"kind\": \"quadrature\""));
+        let mut restored = load_diffusion(&text, None).unwrap();
+        assert_eq!(restored.thetas(), net.thetas());
+        for i in 0..10 {
+            let t = i as f64 * 0.41;
+            let xs = [t.cos(), t.sin(), (t * 0.7).cos(), (t * 0.7).sin(), 0.1, 0.2];
+            assert_eq!(
+                net.step(&xs, &[t.cos(); 3]),
+                restored.step(&xs, &[t.cos(); 3]),
+                "quadrature group trajectories diverged after restore"
+            );
+        }
+        // by reference: the spec re-derives the identical grid
+        let spec = MapSpec::quadrature(kernel, 2, 3).unwrap();
+        let by_ref = save_diffusion_with(&net, MapPayload::Reference(spec));
+        let again = load_diffusion(&by_ref, None).unwrap();
+        assert_eq!(again.thetas(), net.thetas());
+        assert_eq!(again.map().weights().unwrap(), net.map().weights().unwrap());
+    }
+
+    #[test]
+    fn adaptive_map_in_group_document_is_diagnostic() {
+        // an adaptive inline map smuggled into a diffusion document must
+        // be a descriptive error, not a panic in DiffusionNetwork::new
+        let text = save_diffusion(&trained_net(16));
+        let doc = mutate(&text, |o| {
+            let Some(JsonValue::Object(map)) = o.get_mut("map") else {
+                unreachable!("document has a map object")
+            };
+            map.insert("kind".into(), JsonValue::String("adaptive_rff".into()));
+            map.insert("mu_omega".into(), JsonValue::Number(0.01));
+        });
+        let err = load_diffusion(&doc, None).unwrap_err().to_string();
+        assert!(err.contains("frozen map kind"), "unhelpful error: {err}");
     }
 
     #[test]

@@ -283,10 +283,10 @@ impl DiffusionOrdering {
 ///   ascending]` term list — strict term-order accumulation, so combines
 ///   are reproducible bitwise across runs and restores.
 /// * The feature map runs the blocked batch kernels
-///   ([`RffMap::apply_batch_into`]) over whole windows of rounds; the
+///   ([`RffMap::apply_batch_into`](crate::kaf::FeatureMap::apply_batch_into)) over whole windows of rounds; the
 ///   a-priori prediction is the strictly sequential
 ///   [`seq_dot`] — the same accumulation order as the fused
-///   [`RffMap::apply_dot_into`], which is what makes [`Self::step_batch_into`]
+///   [`RffMap::apply_dot_into`](crate::kaf::FeatureMap::apply_dot_into), which is what makes [`Self::step_batch_into`]
 ///   **bitwise identical** to one [`Self::step_into`] per round
 ///   (property-tested in `tests/diffusion_parity.rs`).
 /// * All scratches (the `[n, D]` combine stage, the blocked feature
@@ -327,6 +327,12 @@ impl DiffusionNetwork {
             }
         }
         let map = map.into();
+        assert!(
+            !map.kind().is_adaptive(),
+            "diffusion networks require a frozen map kind (got {}): every node \
+             shares one (Ω, b) and exchanges θ only",
+            map.kind().name()
+        );
         let n = topo.len();
         let feats = map.features();
         let mut combine_idx = Vec::with_capacity(n);
@@ -593,7 +599,7 @@ impl DiffusionNetwork {
 
     /// Approximate heap bytes of the group's **own** state — per-node θ,
     /// the combine stage, feature scratch and term lists — excluding the
-    /// shared map (count that once per fleet via [`RffMap::heap_bytes`]).
+    /// shared map (count that once per fleet via [`RffMap::heap_bytes`](crate::kaf::FeatureMap::heap_bytes)).
     pub fn heap_bytes(&self) -> usize {
         let terms: usize = self
             .combine_idx

@@ -36,7 +36,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::kernels::Kernel;
 use super::map_registry::{MapRegistry, MapSpec};
-use super::rff::RffMap;
+use super::rff::{MapKind, RffMap};
 use super::{RffKlms, RffKrls, RffNlms};
 use crate::util::json::JsonValue;
 
@@ -45,13 +45,17 @@ use crate::util::json::JsonValue;
 /// support and inline-only maps; format 2 added all three; format 3
 /// switched the KRLS `P` payload to its packed upper triangle
 /// (`"p_packed"`, `D(D+1)/2` numbers — half the document size of the
-/// dense `"p"`, matching the filter's live packed state).
-pub const CHECKPOINT_FORMAT: usize = 3;
+/// dense `"p"`, matching the filter's live packed state); format 4
+/// tags the map payload with its [`MapKind`] (`"kind"`: `"rff"` |
+/// `"quadrature"` | `"adaptive_rff"`; absent in older documents and
+/// defaulted to `"rff"`, so every format-2/3 document still reads).
+pub const CHECKPOINT_FORMAT: usize = 4;
 
 /// Formats this build can read. Format-2 documents differ only in the
 /// KRLS `P` layout (dense row-major `"p"`), which [`load_rffkrls`]
-/// translates to packed at the boundary; everything else is identical.
-pub const CHECKPOINT_READ_FORMATS: [usize; 2] = [2, CHECKPOINT_FORMAT];
+/// translates to packed at the boundary; format-3 documents lack the
+/// map `"kind"` tag (implied `"rff"`); everything else is identical.
+pub const CHECKPOINT_READ_FORMATS: [usize; 3] = [2, 3, CHECKPOINT_FORMAT];
 
 // ---- JSON helpers shared with coordinator::snapshot ---------------------
 
@@ -170,7 +174,12 @@ impl MapPayload {
 
     /// Serialize (`"mode"` discriminates inline vs reference; the seed is
     /// a decimal *string* — JSON numbers are f64 and would corrupt seeds
-    /// above 2⁵³).
+    /// above 2⁵³). Format 4 adds a `"kind"` tag; quadrature maps carry
+    /// their per-feature weight table and Gauss–Hermite order, adaptive
+    /// maps carry μ_Ω. Adaptive maps are inline-only (Ω is private
+    /// per-session state — a reference would silently restore the
+    /// *initial* draw), so an adaptive [`MapPayload::Reference`] panics
+    /// here; session codecs force inline before reaching this point.
     pub fn to_json(&self) -> JsonValue {
         let mut obj = BTreeMap::new();
         match self {
@@ -180,23 +189,51 @@ impl MapPayload {
                     omega_flat.extend_from_slice(map.omega(i));
                 }
                 obj.insert("mode".into(), JsonValue::String("inline".into()));
+                obj.insert("kind".into(), JsonValue::String(map.kind().name().into()));
                 obj.insert("dim".into(), JsonValue::Number(map.dim() as f64));
                 obj.insert("omega".into(), arr(omega_flat));
                 obj.insert("phases".into(), arr(map.phases().iter().copied()));
+                match map.kind() {
+                    MapKind::StaticRff => {}
+                    MapKind::Quadrature { order } => {
+                        let w = map.weights().expect("quadrature map has weights");
+                        obj.insert("order".into(), JsonValue::Number(order as f64));
+                        obj.insert("weights".into(), arr(w.iter().copied()));
+                    }
+                    MapKind::AdaptiveRff { mu_omega } => {
+                        obj.insert("mu_omega".into(), JsonValue::Number(mu_omega));
+                    }
+                }
             }
             MapPayload::Reference(spec) => {
+                assert!(
+                    !spec.kind.is_adaptive(),
+                    "adaptive maps cannot be serialized as a registry reference; \
+                     Ω is private per-session state — serialize inline"
+                );
                 obj.insert("mode".into(), JsonValue::String("reference".into()));
+                obj.insert("kind".into(), JsonValue::String(spec.kind.name().into()));
                 obj.insert("kernel".into(), kernel_to_json(spec.kernel));
                 obj.insert("dim".into(), JsonValue::Number(spec.dim as f64));
                 obj.insert("features".into(), JsonValue::Number(spec.features as f64));
                 obj.insert("seed".into(), JsonValue::String(spec.seed.to_string()));
+                if let MapKind::Quadrature { order } = spec.kind {
+                    obj.insert("order".into(), JsonValue::Number(order as f64));
+                }
             }
         }
         JsonValue::Object(obj)
     }
 
-    /// Parse either payload mode.
+    /// Parse either payload mode. A missing `"kind"` tag means a
+    /// pre-family (format ≤ 3) document and defaults to `"rff"`.
     pub fn from_json(v: &JsonValue) -> Result<Self> {
+        let kind_tag = match v.get("kind") {
+            None => "rff",
+            Some(k) => {
+                k.as_str().ok_or_else(|| anyhow!("map 'kind' must be a string"))?
+            }
+        };
         match get_str(v, "mode")? {
             "inline" => {
                 let dim = get_usize(v, "dim")?;
@@ -207,7 +244,46 @@ impl MapPayload {
                     omega.len() == dim * phases.len(),
                     "omega/phases length mismatch"
                 );
-                Ok(MapPayload::Inline(Arc::new(RffMap::from_parts(omega, phases, dim))))
+                let map = match kind_tag {
+                    "rff" => RffMap::from_parts(omega, phases, dim),
+                    "quadrature" => {
+                        let order = get_usize(v, "order")?;
+                        let weights = get_arr(v, "weights")?;
+                        anyhow::ensure!(
+                            weights.len() == phases.len(),
+                            "truncated quadrature node table: {} weights for {} \
+                             features",
+                            weights.len(),
+                            phases.len()
+                        );
+                        RffMap::from_parts_kind(
+                            omega,
+                            phases,
+                            Some(weights),
+                            dim,
+                            MapKind::Quadrature { order },
+                        )
+                    }
+                    "adaptive_rff" => {
+                        let mu_omega = get_num(v, "mu_omega")?;
+                        anyhow::ensure!(
+                            mu_omega > 0.0 && mu_omega.is_finite(),
+                            "adaptive map mu_omega must be positive"
+                        );
+                        RffMap::from_parts_kind(
+                            omega,
+                            phases,
+                            None,
+                            dim,
+                            MapKind::AdaptiveRff { mu_omega },
+                        )
+                    }
+                    other => bail!(
+                        "unknown map kind '{other}' (this build knows rff, \
+                         quadrature, adaptive_rff)"
+                    ),
+                };
+                Ok(MapPayload::Inline(Arc::new(map)))
             }
             "reference" => {
                 let kernel =
@@ -218,7 +294,31 @@ impl MapPayload {
                 let seed: u64 = get_str(v, "seed")?
                     .parse()
                     .context("map reference seed is not a u64")?;
-                Ok(MapPayload::Reference(MapSpec::new(kernel, dim, features, seed)))
+                let spec = match kind_tag {
+                    "rff" => MapSpec::new(kernel, dim, features, seed),
+                    "quadrature" => {
+                        let order = get_usize(v, "order")?;
+                        let spec = MapSpec::quadrature(kernel, dim, order)
+                            .context("invalid quadrature map reference")?;
+                        anyhow::ensure!(
+                            spec.features == features,
+                            "quadrature reference features mismatch: document says \
+                             {features}, order {order} over dim {dim} yields {}",
+                            spec.features
+                        );
+                        spec
+                    }
+                    "adaptive_rff" => bail!(
+                        "adaptive maps cannot be restored from a registry \
+                         reference; Ω is private per-session state and must be \
+                         serialized inline"
+                    ),
+                    other => bail!(
+                        "unknown map kind '{other}' (this build knows rff, \
+                         quadrature, adaptive_rff)"
+                    ),
+                };
+                Ok(MapPayload::Reference(spec))
             }
             other => bail!("unknown map payload mode '{other}'"),
         }
@@ -492,6 +592,131 @@ mod tests {
         let h = load_rffklms(&text, None).unwrap();
         assert!(!Arc::ptr_eq(h.map_arc(), &map));
         assert_eq!(h.map().phases(), map.phases());
+    }
+
+    /// Parse → mutate the top-level map object → re-serialize.
+    fn mutate_map(text: &str, f: impl FnOnce(&mut BTreeMap<String, JsonValue>)) -> String {
+        let mut v = JsonValue::parse(text).unwrap();
+        let JsonValue::Object(obj) = &mut v else { unreachable!() };
+        let Some(JsonValue::Object(map)) = obj.get_mut("map") else {
+            unreachable!("checkpoint has a map object")
+        };
+        f(map);
+        v.to_string_pretty()
+    }
+
+    #[test]
+    fn format3_checkpoint_without_kind_tag_still_restores_bitwise() {
+        // a pre-family document: format 3, no "kind" anywhere → StaticRff
+        let mut f = trained_klms();
+        let text = save_rffklms(&f);
+        let mut v = JsonValue::parse(&text).unwrap();
+        let JsonValue::Object(obj) = &mut v else { unreachable!() };
+        obj.insert("format".into(), JsonValue::Number(3.0));
+        let Some(JsonValue::Object(map)) = obj.get_mut("map") else { unreachable!() };
+        assert!(map.remove("kind").is_some(), "format 4 writes the kind tag");
+        let legacy = v.to_string_pretty();
+        let mut g = load_rffklms(&legacy, None).unwrap();
+        assert_eq!(g.map().kind(), MapKind::StaticRff);
+        assert_eq!(g.theta(), f.theta());
+        let mut src = NonlinearWiener::new(run_rng(21, 0), 0.05);
+        for s in src.take_samples(50) {
+            assert_eq!(f.step(&s.x, s.y), g.step(&s.x, s.y));
+        }
+    }
+
+    #[test]
+    fn quadrature_map_roundtrips_inline_and_by_reference() {
+        let kernel = Kernel::Gaussian { sigma: 1.0 };
+        let map = RffMap::quadrature(kernel, 2, 4).unwrap();
+        let mut f = RffKlms::new(map, 0.5);
+        let mut src = NonlinearWiener::new(run_rng(22, 0), 0.05);
+        for s in src.take_samples(100) {
+            f.step(&s.x[..2], s.y);
+        }
+        // inline: weights + order travel in the document
+        let text = save_rffklms(&f);
+        assert!(text.contains("\"kind\": \"quadrature\""));
+        assert!(text.contains("\"weights\""));
+        let g = load_rffklms(&text, None).unwrap();
+        assert_eq!(g.map().kind(), f.map().kind());
+        assert_eq!(g.map().weights().unwrap(), f.map().weights().unwrap());
+        assert_eq!(g.theta(), f.theta());
+        // reference: spec re-derives the identical deterministic grid
+        let spec = MapSpec::quadrature(kernel, 2, 4).unwrap();
+        let by_ref = save_rffklms_with(&f, MapPayload::Reference(spec));
+        let h = load_rffklms(&by_ref, None).unwrap();
+        assert_eq!(h.map().weights().unwrap(), f.map().weights().unwrap());
+        assert_eq!(h.map().phases(), f.map().phases());
+    }
+
+    #[test]
+    fn adaptive_map_roundtrips_inline_with_private_omega() {
+        let mut rng = run_rng(23, 0);
+        let kind = MapKind::AdaptiveRff { mu_omega: 0.02 };
+        let map =
+            RffMap::draw_kind(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 32, kind);
+        let mut f = RffKlms::new(map, 0.5);
+        let mut src = NonlinearWiener::new(run_rng(23, 1), 0.05);
+        for s in src.take_samples(100) {
+            f.step(&s.x, s.y); // adapts Ω away from the draw
+        }
+        let text = save_rffklms(&f);
+        assert!(text.contains("\"kind\": \"adaptive_rff\""));
+        let mut g = load_rffklms(&text, None).unwrap();
+        assert_eq!(g.map().kind(), kind);
+        assert_eq!(g.map().omega(7), f.map().omega(7), "adapted Ω must travel");
+        // identical future trajectory (Ω and θ keep co-evolving)
+        let mut src2 = NonlinearWiener::new(run_rng(23, 2), 0.05);
+        for s in src2.take_samples(50) {
+            assert_eq!(f.step(&s.x, s.y), g.step(&s.x, s.y));
+        }
+    }
+
+    #[test]
+    fn unknown_map_kind_rejected_with_diagnostic() {
+        let text = save_rffklms(&trained_klms());
+        let doc = mutate_map(&text, |map| {
+            map.insert("kind".into(), JsonValue::String("wavelet".into()));
+        });
+        let err = load_rffklms(&doc, None).unwrap_err().to_string();
+        assert!(err.contains("unknown map kind 'wavelet'"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn truncated_quadrature_node_table_rejected() {
+        let map = RffMap::quadrature(Kernel::Gaussian { sigma: 1.0 }, 2, 4).unwrap();
+        let f = RffKlms::new(map, 0.5);
+        let text = save_rffklms(&f);
+        let doc = mutate_map(&text, |map| {
+            let Some(JsonValue::Array(w)) = map.get_mut("weights") else {
+                unreachable!("quadrature inline payload has weights")
+            };
+            w.pop();
+        });
+        let err = load_rffklms(&doc, None).unwrap_err().to_string();
+        assert!(err.contains("truncated quadrature"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn adaptive_map_as_reference_rejected() {
+        // hand-built: flip an rff reference document's kind to adaptive
+        let registry = MapRegistry::new();
+        let spec = MapSpec::new(Kernel::Gaussian { sigma: 5.0 }, 5, 16, 3);
+        let f = RffKlms::new(registry.get_or_draw(&spec), 0.5);
+        let text = save_rffklms_with(&f, MapPayload::Reference(spec));
+        let doc = mutate_map(&text, |map| {
+            map.insert("kind".into(), JsonValue::String("adaptive_rff".into()));
+        });
+        let err = load_rffklms(&doc, Some(&registry)).unwrap_err().to_string();
+        assert!(
+            err.contains("registry reference"),
+            "unhelpful: {err}"
+        );
+        // and the write side refuses to construct one at all
+        let aspec = MapSpec::adaptive(Kernel::Gaussian { sigma: 5.0 }, 5, 16, 3, 0.01);
+        let r = std::panic::catch_unwind(|| MapPayload::Reference(aspec).to_json());
+        assert!(r.is_err(), "adaptive reference serialization must panic");
     }
 
     #[test]

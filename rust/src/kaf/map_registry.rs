@@ -22,68 +22,147 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
+use anyhow::{ensure, Context, Result};
+
 use super::kernels::Kernel;
-use super::rff::RffMap;
+use super::quadrature;
+use super::rff::{MapKind, RffMap};
 use crate::rng::Rng;
 
-/// The config-derived identity of one frozen feature-map draw.
+/// The config-derived identity of one feature-map construction.
 ///
 /// Determinism contract: [`MapSpec::draw`] yields a bitwise-identical
-/// `(Ω, b)` for the same spec on every platform and in every process —
-/// the property that lets snapshots reference a map by spec instead of
+/// map for the same spec on every platform and in every process — the
+/// property that lets snapshots reference a map by spec instead of
 /// serializing it, and lets distributed nodes agree on a map by
-/// exchanging one seed.
+/// exchanging one seed. This holds for every [`MapKind`]: static and
+/// adaptive RFF draws are seed-derived, quadrature grids are fully
+/// deterministic (the seed is ignored and fixed at 0).
+///
+/// An *adaptive* spec names the **initial** Ω draw only — once a
+/// session starts adapting, its private Ω diverges from the spec and the
+/// session can no longer be represented by reference (the codecs force
+/// inline serialization for adaptive maps).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MapSpec {
-    /// Kernel whose spectral density the frequencies are drawn from.
+    /// Kernel whose spectral density the features approximate.
     pub kernel: Kernel,
     /// Input dimension d.
     pub dim: usize,
     /// Feature count D.
     pub features: usize,
-    /// Draw seed (feeds `Rng::seed_from_u64`).
+    /// Draw seed (feeds `Rng::seed_from_u64`; 0 for quadrature).
     pub seed: u64,
+    /// Which member of the feature-map family this spec constructs.
+    pub kind: MapKind,
 }
 
 impl MapSpec {
-    /// Spec for drawing `features = D` map dimensions over `dim = d`
-    /// inputs from `kernel`'s spectral density, seeded by `seed`.
+    /// Spec for drawing `features = D` static-RFF dimensions over
+    /// `dim = d` inputs from `kernel`'s spectral density, seeded by
+    /// `seed` (the pre-family constructor, unchanged).
     pub fn new(kernel: Kernel, dim: usize, features: usize, seed: u64) -> Self {
-        Self { kernel, dim, features, seed }
+        Self { kernel, dim, features, seed, kind: MapKind::StaticRff }
     }
 
-    /// Deterministically draw the map this spec names (see the type-level
-    /// determinism contract).
+    /// Spec for the deterministic Gauss–Hermite grid of `order` nodes
+    /// per axis (→ `D = 2·order^dim` features). Validates everything the
+    /// construction would reject — non-Gaussian kernel, zero/oversized
+    /// grid — so [`MapSpec::draw`] stays infallible.
+    pub fn quadrature(kernel: Kernel, dim: usize, order: usize) -> Result<Self> {
+        ensure!(
+            matches!(kernel, Kernel::Gaussian { .. }),
+            "quadrature features require the Gaussian kernel, got {kernel:?}"
+        );
+        ensure!(dim > 0, "quadrature spec needs dim >= 1");
+        ensure!(
+            (1..=quadrature::MAX_ORDER).contains(&order),
+            "Gauss–Hermite order must be in 1..={}, got {order}",
+            quadrature::MAX_ORDER
+        );
+        let grid = order
+            .checked_pow(dim as u32)
+            .filter(|&g| g <= quadrature::MAX_FEATURES / 2)
+            .with_context(|| {
+                format!(
+                    "quadrature grid order^dim = {order}^{dim} exceeds the \
+                     {}-feature cap",
+                    quadrature::MAX_FEATURES
+                )
+            })?;
+        Ok(Self {
+            kernel,
+            dim,
+            features: 2 * grid,
+            seed: 0,
+            kind: MapKind::Quadrature { order },
+        })
+    }
+
+    /// Spec for an adaptive-RFF map: same initial draw as
+    /// [`MapSpec::new`], but sessions built from it run the ARFF-GKLMS
+    /// Ω gradient with step `mu_omega` and copy-on-adapt their map.
+    pub fn adaptive(
+        kernel: Kernel,
+        dim: usize,
+        features: usize,
+        seed: u64,
+        mu_omega: f64,
+    ) -> Self {
+        assert!(mu_omega > 0.0 && mu_omega.is_finite(), "mu_omega must be positive");
+        Self { kernel, dim, features, seed, kind: MapKind::AdaptiveRff { mu_omega } }
+    }
+
+    /// Deterministically construct the map this spec names (see the
+    /// type-level determinism contract).
     pub fn draw(&self) -> RffMap {
-        let mut rng = Rng::seed_from_u64(self.seed);
-        RffMap::draw(&mut rng, self.kernel, self.dim, self.features)
+        match self.kind {
+            MapKind::Quadrature { order } => {
+                RffMap::quadrature(self.kernel, self.dim, order)
+                    .expect("quadrature MapSpec validated at construction")
+            }
+            kind => {
+                let mut rng = Rng::seed_from_u64(self.seed);
+                RffMap::draw_kind(&mut rng, self.kernel, self.dim, self.features, kind)
+            }
+        }
     }
 
-    /// Total interning key. σ participates by bit pattern: two specs are
-    /// the same draw iff every field is bit-identical.
+    /// Total interning key. σ and μ_Ω participate by bit pattern: two
+    /// specs are the same construction iff every field is bit-identical.
     fn key(&self) -> MapKey {
-        let (kind, sigma) = match self.kernel {
+        let (kernel_kind, sigma) = match self.kernel {
             Kernel::Gaussian { sigma } => (0u8, sigma),
             Kernel::Laplacian { sigma } => (1u8, sigma),
         };
+        let (map_kind, param_bits) = match self.kind {
+            MapKind::StaticRff => (0u8, 0u64),
+            MapKind::Quadrature { order } => (1u8, order as u64),
+            MapKind::AdaptiveRff { mu_omega } => (2u8, mu_omega.to_bits()),
+        };
         MapKey {
-            kind,
+            kernel_kind,
             sigma_bits: sigma.to_bits(),
             dim: self.dim,
             features: self.features,
             seed: self.seed,
+            map_kind,
+            param_bits,
         }
     }
 }
 
-/// Orderable interning key (σ by bit pattern — `f64` itself is not `Ord`).
+/// Orderable interning key (σ/μ_Ω by bit pattern — `f64` itself is not
+/// `Ord`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 struct MapKey {
-    kind: u8,
+    kernel_kind: u8,
     sigma_bits: u64,
     dim: usize,
     features: usize,
     seed: u64,
+    map_kind: u8,
+    param_bits: u64,
 }
 
 /// Interns feature maps by [`MapSpec`] so every same-config consumer
@@ -194,6 +273,50 @@ mod tests {
         for i in 0..a.features() {
             assert_eq!(a.omega(i), b.omega(i));
         }
+    }
+
+    #[test]
+    fn map_kinds_intern_separately() {
+        // same (kernel, d, D, seed), different kind → distinct entries
+        let reg = MapRegistry::new();
+        let k = Kernel::Gaussian { sigma: 5.0 };
+        let s = reg.get_or_draw(&MapSpec::new(k, 5, 32, 7));
+        let a = reg.get_or_draw(&MapSpec::adaptive(k, 5, 32, 7, 0.01));
+        let a2 = reg.get_or_draw(&MapSpec::adaptive(k, 5, 32, 7, 0.02));
+        assert!(!Arc::ptr_eq(&s, &a));
+        assert!(!Arc::ptr_eq(&a, &a2), "mu_omega must participate in the key");
+        // adaptive shares the static draw's initial (Ω, b)
+        assert_eq!(s.phases(), a.phases());
+        assert_eq!(s.omega(3), a.omega(3));
+        assert!(a.kind().is_adaptive());
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    fn quadrature_spec_draws_deterministic_grid() {
+        let k = Kernel::Gaussian { sigma: 1.0 };
+        let spec = MapSpec::quadrature(k, 2, 5).unwrap();
+        assert_eq!(spec.features, 50);
+        assert_eq!(spec.seed, 0);
+        let a = spec.draw();
+        let b = spec.draw();
+        assert_eq!(a.phases(), b.phases());
+        assert_eq!(a.weights().unwrap(), b.weights().unwrap());
+        let reg = MapRegistry::new();
+        let x = reg.get_or_draw(&spec);
+        let y = reg.get_or_draw(&spec);
+        assert!(Arc::ptr_eq(&x, &y));
+    }
+
+    #[test]
+    fn quadrature_spec_rejects_bad_configs() {
+        let lap = MapSpec::quadrature(Kernel::Laplacian { sigma: 1.0 }, 2, 5);
+        assert!(lap.unwrap_err().to_string().contains("Gaussian"));
+        let k = Kernel::Gaussian { sigma: 1.0 };
+        let big = MapSpec::quadrature(k, 8, 64);
+        assert!(big.unwrap_err().to_string().contains("feature cap"));
+        assert!(MapSpec::quadrature(k, 2, 0).is_err());
+        assert!(MapSpec::quadrature(k, 2, quadrature::MAX_ORDER + 1).is_err());
     }
 
     #[test]

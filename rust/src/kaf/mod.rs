@@ -25,24 +25,44 @@
 //! take **row-major `[n, d]`** inputs (`n` concatenated samples) and
 //! default to per-row loops, so every algorithm is batchable. The RFF
 //! filters override them with the blocked kernels of [`RffMap`]
-//! ([`RffMap::apply_batch_into`], [`RffMap::apply_dot_batch`] over a
+//! ([`RffMap::apply_batch_into`](crate::kaf::FeatureMap::apply_batch_into), [`RffMap::apply_dot_batch`](crate::kaf::FeatureMap::apply_dot_batch) over a
 //! reusable [`FeatureScratch`], and the Z-free
-//! [`RffMap::predict_batch_into`]): only the θ-independent feature map is
+//! [`RffMap::predict_batch_into`](crate::kaf::FeatureMap::predict_batch_into)): only the θ-independent feature map is
 //! batched, updates stay strictly sequential, so batched and per-row
 //! runs yield **bitwise-identical** θ, errors and predictions — the
 //! property the `batch_parity` test suite pins down. This is the paper's
 //! point operationalised: a fixed-size linear state makes the hot path a
 //! dense matrix op, which dictionary methods cannot do.
 //!
+//! ## The feature-map family
+//!
+//! The RFF filters are generic over one concrete map type,
+//! [`FeatureMap`] (alias [`RffMap`]), whose [`MapKind`] picks the
+//! construction behind a single evaluation contract
+//! `z_i(x) = w_i·cos(ω_iᵀx + b_i)`:
+//!
+//! | kind | construction | reference |
+//! |---|---|---|
+//! | [`MapKind::StaticRff`] | Monte-Carlo spectral draw, frozen | the source paper |
+//! | [`MapKind::Quadrature`] | deterministic Gauss–Hermite grid ([`quadrature`]) | No-Trick KAF, arXiv 1912.04530 |
+//! | [`MapKind::AdaptiveRff`] | spectral draw + per-step Ω gradient | ARFF-GKLMS, arXiv 2207.07236 |
+//!
+//! All kinds evaluate through the same `linalg::simd` lane kernels, so
+//! per-row, blocked-batch, and coordinator predict paths stay one
+//! vector code path.
+//!
 //! ## Shared maps
 //!
-//! The RFF filters hold their frozen `(Ω, b)` behind an `Arc<`[`RffMap`]`>`,
-//! and [`MapRegistry`] interns maps by [`MapSpec`] `(kernel, d, D, seed)`
-//! so a fleet of same-config filters/sessions keeps exactly **one**
-//! resident copy of the map (plus one cached f32 artifact view,
-//! [`MapF32View`]) — only θ (and P) is per-learner state. Checkpoints
-//! can therefore reference a map by spec instead of serializing it; see
-//! [`checkpoint`].
+//! The RFF filters hold their map behind an `Arc<`[`RffMap`]`>`, and
+//! [`MapRegistry`] interns maps by [`MapSpec`]
+//! `(kernel, d, D, seed, kind)` so a fleet of same-config
+//! filters/sessions keeps exactly **one** resident copy of the map
+//! (plus one cached f32 artifact view, [`MapF32View`]) — only θ (and P)
+//! is per-learner state. Adaptive maps are **copy-on-adapt**: sessions
+//! share the interned initial draw until their first Ω update clones a
+//! private map (`Arc::make_mut`). Checkpoints can therefore reference a
+//! frozen map by spec instead of serializing it (adaptive maps always
+//! serialize their private Ω inline); see [`checkpoint`].
 
 pub mod checkpoint;
 mod coherence;
@@ -54,6 +74,7 @@ mod lms;
 mod map_registry;
 mod novelty;
 mod qklms;
+pub mod quadrature;
 pub mod rff;
 mod rff_klms;
 mod rff_nlms;
@@ -68,7 +89,7 @@ pub use lms::{Lms, Nlms};
 pub use novelty::NoveltyKlms;
 pub use qklms::Qklms;
 pub use map_registry::{MapRegistry, MapSpec};
-pub use rff::{FeatureScratch, MapF32View, RffMap, ROW_BLOCK};
+pub use rff::{FeatureMap, FeatureScratch, MapF32View, MapKind, RffMap, ROW_BLOCK};
 pub use rff_klms::RffKlms;
 pub use rff_nlms::RffNlms;
 pub use surprise::SurpriseKlms;

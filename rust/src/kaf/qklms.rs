@@ -208,7 +208,9 @@ mod tests {
                     .iter()
                     .enumerate()
                     .map(|(k, c)| (k, crate::linalg::sq_dist(c, x)))
-                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                    // total_cmp: a NaN distance (NaN input) must not panic
+                    // the comparator; NaN sorts above every real distance
+                    .min_by(|a, b| a.1.total_cmp(&b.1));
                 match nearest {
                     Some((k, dmin)) if dmin < self.eps => self.coeffs[k] += self.mu * e,
                     _ => {
@@ -229,6 +231,23 @@ mod tests {
             assert!((ef - es).abs() < 1e-10, "errors diverged: {ef} vs {es}");
         }
         assert_eq!(fast.dictionary_size(), slow.coeffs.len());
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_the_nearest_center_search() {
+        // regression: the nearest-center comparator used
+        // partial_cmp().unwrap(), which panicked on the first NaN
+        // distance; total_cmp sorts NaN above every real distance, so a
+        // NaN sample quantizes to "new center" instead of aborting
+        let mut f = Qklms::new(gaussian(5.0), 2, 1.0, 5.0);
+        f.step(&[0.1, 0.2], 0.5);
+        f.step(&[0.3, -0.1], 0.2);
+        let m = f.dictionary_size();
+        let e = f.step(&[f64::NAN, 0.0], 0.1);
+        assert!(e.is_nan());
+        assert_eq!(f.dictionary_size(), m + 1, "NaN sample appends, never merges");
+        // the filter stays usable on clean samples afterwards
+        assert!(f.nearest(&[0.1, 0.2]).is_some());
     }
 
     #[test]

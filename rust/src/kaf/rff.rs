@@ -1,6 +1,34 @@
-//! The random Fourier feature map `z_Ω` (paper Eq. (3)) — the shared
-//! substrate of [`RffKlms`](super::RffKlms) and [`RffKrls`](super::RffKrls)
-//! and the Rust mirror of the L1 Pallas kernel.
+//! The finite-dimensional feature map `z(x)` (paper Eq. (3)) — the
+//! shared substrate of [`RffKlms`](super::RffKlms) and
+//! [`RffKrls`](super::RffKrls) and the Rust mirror of the L1 Pallas
+//! kernel.
+//!
+//! ## The map family
+//!
+//! [`FeatureMap`] is one concrete type covering three map *kinds*
+//! ([`MapKind`]), all evaluating features of the single shared shape
+//! `z_i = w_i·cos(ω_iᵀx + b_i)` through the same lane kernels:
+//!
+//! * **[`MapKind::StaticRff`]** — the paper's Monte-Carlo draw:
+//!   `ω_i ~ p(ω)` (Bochner density of the kernel), `b_i ~ U[0, 2π)`,
+//!   uniform weight `w_i = √(2/D)`. Frozen after the draw.
+//! * **[`MapKind::Quadrature`]** — deterministic Gauss–Hermite features
+//!   for the Gaussian kernel (No-Trick KAF, arXiv 1912.04530): tensor
+//!   grid nodes as frequencies, per-feature quadrature weights `w_i`,
+//!   phases ∈ {0, −π/2} realizing cos/sin pairs. Frozen by
+//!   construction; non-Gaussian kernels are rejected with a diagnostic
+//!   (see [`super::quadrature`]).
+//! * **[`MapKind::AdaptiveRff`]** — starts as a Monte-Carlo draw and
+//!   then lets `RffKlms` descend Ω by the ARFF-GKLMS gradient
+//!   (arXiv 2207.07236) alongside θ via [`FeatureMap::adapt_frequencies`].
+//!   Copy-on-adapt: filters hold `Arc<FeatureMap>` and `Arc::make_mut`
+//!   the map on the first Ω update, so interned fleets keep sharing one
+//!   resident map until a session actually adapts.
+//!
+//! `RffMap` remains as a type alias for the static-RFF-centric call
+//! sites (filters, codecs, registry) — every pre-family constructor
+//! (`draw`, `from_parts`) builds a `StaticRff` map bitwise identical to
+//! the pre-refactor type.
 //!
 //! Storage is **feature-major** (`omega_t[i]` holds `ω_i ∈ R^d`
 //! contiguously), so `z_i = cos(ω_iᵀx + b_i)` streams one cache line per
@@ -12,7 +40,9 @@
 //! are consumed in `[f64; LANES]` chunks through the SIMD substrate
 //! ([`crate::linalg::simd`]) — fused dot+phase lane evaluation
 //! ([`simd::phase_args_lane`]) into the vectorized lane cosine
-//! ([`simd::scaled_cos_lanes`]) — with the `D mod LANES` tail finished
+//! ([`simd::scaled_cos_lanes`] for the uniform-weight kinds,
+//! [`simd::weighted_cos_lanes`] when the map carries per-feature
+//! quadrature weights) — with the `D mod LANES` tail finished
 //! by the scalar twins ([`simd::phase_arg`], [`simd::fast_cos`]). Lane
 //! and tail evaluate the same expression per element (including the
 //! tiny-d ∈ {1, 2} register specializations, which live inside the lane
@@ -26,10 +56,10 @@
 //! ## Batch substrate
 //!
 //! Because the map is frozen, `z_Ω` over a whole batch is a dense
-//! matrix op: [`RffMap::apply_batch_into`] and [`RffMap::apply_dot_batch`]
+//! matrix op: [`RffMap::apply_batch_into`](FeatureMap::apply_batch_into) and [`RffMap::apply_dot_batch`](FeatureMap::apply_dot_batch)
 //! take row-major `[n, d]` inputs and produce row-major `[n, D]` features
 //! (plus fused `ŷ = Z θ` for the latter), and
-//! [`RffMap::predict_batch_into`] computes `ŷ` alone, skipping the Z
+//! [`RffMap::predict_batch_into`](FeatureMap::predict_batch_into) computes `ŷ` alone, skipping the Z
 //! store — the serving hot path. The kernels are **blocked** —
 //! rows are processed in blocks of [`ROW_BLOCK`], and within a block the
 //! loop runs *feature-lanes outer, rows inner*, so each `[LANES]` chunk
@@ -39,7 +69,7 @@
 //! writes into a caller-owned buffer — either way steady-state batch
 //! work allocates nothing.
 //! Every batch element is computed by the *same expression* as the
-//! per-row [`RffMap::apply_into`] / [`RffMap::apply_dot_into`] paths, so
+//! per-row [`RffMap::apply_into`](FeatureMap::apply_into) / [`RffMap::apply_dot_into`](FeatureMap::apply_dot_into) paths, so
 //! batched and per-row results are bitwise identical (asserted by the
 //! batch-parity tests; see EXPERIMENTS.md §Batch).
 
@@ -57,14 +87,14 @@ use super::kernels::Kernel;
 /// its results table is recorded.
 pub const ROW_BLOCK: usize = 64;
 
-/// Reusable arena for [`RffMap::apply_dot_batch`] — the general fused
+/// Reusable arena for [`RffMap::apply_dot_batch`](FeatureMap::apply_dot_batch) — the general fused
 /// kernel for callers that consume **both** the `[n, D]` feature matrix
 /// and the predictions (e.g. a future fused train variant; the parity
 /// suite pins its semantics). Holds the Z block and the length-`n` ŷ
 /// vector, growing monotonically to the largest batch seen so steady-state
 /// calls perform **zero allocations**. The serving predict path does not
-/// need Z and uses the Z-free [`RffMap::predict_batch_into`] instead;
-/// training uses [`RffMap::apply_batch_into`] over a filter-local block.
+/// need Z and uses the Z-free [`RffMap::predict_batch_into`](FeatureMap::predict_batch_into) instead;
+/// training uses [`RffMap::apply_batch_into`](FeatureMap::apply_batch_into) over a filter-local block.
 #[derive(Clone, Debug, Default)]
 pub struct FeatureScratch {
     z: Vec<f64>,
@@ -96,7 +126,7 @@ impl FeatureScratch {
 /// the phases `b`, both f32 — exactly the tensors every PJRT dispatch
 /// (`rffklms_chunk`, `rffkrls_chunk`, `rff_predict`) ships to the device.
 ///
-/// Built lazily by [`RffMap::f32_view`] and cached inside the map behind
+/// Built lazily by [`RffMap::f32_view`](FeatureMap::f32_view) and cached inside the map behind
 /// an `Arc`, so a fleet of sessions sharing one interned map also shares
 /// **one** f32 copy instead of each session staging its own `omega`/`b`
 /// vectors (the pre-interning layout cost ~7 KB extra per session at
@@ -109,48 +139,190 @@ pub struct MapF32View {
     pub phases: Vec<f32>,
 }
 
-/// A frozen draw of the random Fourier features `(Ω, b)` for a kernel.
+/// Which member of the map family a [`FeatureMap`] is — the dimension
+/// the registry, the codecs and the session gates branch on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MapKind {
+    /// Monte-Carlo random Fourier features (the paper's Eq. (3)). Frozen.
+    StaticRff,
+    /// Deterministic Gauss–Hermite tensor-grid features for the Gaussian
+    /// kernel (No-Trick KAF). Frozen; carries per-feature weights.
+    Quadrature {
+        /// Per-axis rule order `p` (D = 2·p^d).
+        order: usize,
+    },
+    /// Monte-Carlo draw whose Ω descends the ARFF-GKLMS gradient
+    /// alongside θ. Mutable (copy-on-adapt through `Arc::make_mut`).
+    AdaptiveRff {
+        /// Frequency step size μ_Ω of the Ω gradient step.
+        mu_omega: f64,
+    },
+}
+
+impl MapKind {
+    /// Stable codec name (`"rff"` / `"quadrature"` / `"adaptive_rff"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            MapKind::StaticRff => "rff",
+            MapKind::Quadrature { .. } => "quadrature",
+            MapKind::AdaptiveRff { .. } => "adaptive_rff",
+        }
+    }
+
+    /// Whether Ω can change after construction. Frozen kinds are the
+    /// ones eligible for fleet-wide sharing (diffusion groups, PJRT
+    /// artifacts, registry references).
+    pub fn is_adaptive(self) -> bool {
+        matches!(self, MapKind::AdaptiveRff { .. })
+    }
+}
+
+/// A finite-dimensional feature map `z_i(x) = w_i·cos(ω_iᵀx + b_i)` —
+/// one of the [`MapKind`] family members (see the module docs).
+///
+/// `RffMap` aliases this type: a map built by [`FeatureMap::draw`] /
+/// [`FeatureMap::from_parts`] is the pre-family static RFF map, bitwise.
 #[derive(Clone, Debug)]
-pub struct RffMap {
+pub struct FeatureMap {
     /// Feature-major frequencies: row `i` is `ω_i ∈ R^d` (D rows).
     omega_t: Vec<f64>,
-    /// Phases `b_i ~ U[0, 2π)`.
+    /// Phases: `b_i ~ U[0, 2π)` for the RFF kinds, {0, −π/2} cos/sin
+    /// pairs for quadrature.
     phases: Vec<f64>,
+    /// Per-feature weights `w_i` — `None` for the uniform `sqrt(2/D)`
+    /// RFF normalization, `Some` for quadrature amplitudes.
+    weights: Option<Vec<f64>>,
     /// Input dimension d.
     dim: usize,
     /// Feature count D.
     features: usize,
-    /// `sqrt(2/D)` — the normalization of Eq. (3).
+    /// `sqrt(2/D)` — the uniform normalization of Eq. (3); superseded
+    /// per-feature by `weights` when present.
     scale: f64,
+    /// Which family member this map is.
+    kind: MapKind,
     /// Lazily-built cached [`MapF32View`]; one copy per map, shared by
     /// every PJRT session/dispatch that uses this map.
     f32_view: OnceLock<Arc<MapF32View>>,
 }
 
-impl RffMap {
-    /// Draw `(Ω, b)` for `kernel` with `features = D` map dimensions over
-    /// `dim = d` inputs, using `rng` (deterministic per seed).
+/// The pre-family name of [`FeatureMap`] — every static-RFF call site
+/// (filters, codecs, registry, coordinator) still reads naturally.
+pub type RffMap = FeatureMap;
+
+impl FeatureMap {
+    /// Draw static `(Ω, b)` for `kernel` with `features = D` map
+    /// dimensions over `dim = d` inputs, using `rng` (deterministic per
+    /// seed). Kind: [`MapKind::StaticRff`].
     pub fn draw(rng: &mut Rng, kernel: Kernel, dim: usize, features: usize) -> Self {
+        Self::draw_kind(rng, kernel, dim, features, MapKind::StaticRff)
+    }
+
+    /// [`Self::draw`] with an explicit RFF kind — `StaticRff`, or
+    /// `AdaptiveRff` for a map whose Ω will descend alongside θ. The
+    /// initial draw is identical either way (the kind only governs what
+    /// may happen *after* construction), so an adaptive fleet shares one
+    /// resident map until a session's first Ω update clones it.
+    /// Quadrature maps are built by [`Self::quadrature`], not drawn.
+    pub fn draw_kind(
+        rng: &mut Rng,
+        kernel: Kernel,
+        dim: usize,
+        features: usize,
+        kind: MapKind,
+    ) -> Self {
         assert!(dim > 0 && features > 0);
+        assert!(
+            !matches!(kind, MapKind::Quadrature { .. }),
+            "quadrature maps are deterministic — use FeatureMap::quadrature"
+        );
+        if let MapKind::AdaptiveRff { mu_omega } = kind {
+            assert!(mu_omega > 0.0 && mu_omega.is_finite(), "mu_omega must be positive");
+        }
         let mut omega_t = Vec::with_capacity(dim * features);
         for _ in 0..features {
             omega_t.extend(kernel.sample_freq(rng, dim));
         }
         let phases = Uniform::phase().sample_vec(rng, features);
         let scale = (2.0 / features as f64).sqrt();
-        Self { omega_t, phases, dim, features, scale, f32_view: OnceLock::new() }
+        Self {
+            omega_t,
+            phases,
+            weights: None,
+            dim,
+            features,
+            scale,
+            kind,
+            f32_view: OnceLock::new(),
+        }
     }
 
-    /// Build from explicit parts (used by tests and the PJRT bridge,
-    /// which needs the same `(Ω, b)` on both sides).
+    /// Build the deterministic Gauss–Hermite quadrature map of per-axis
+    /// `order` for `kernel` over `dim` inputs — `D = 2·order^dim`
+    /// features as cos/sin pairs over the tensor grid, with per-feature
+    /// amplitude weights (see [`super::quadrature`]). Only the Gaussian
+    /// kernel has a Gauss–Hermite construction; other kernels are a
+    /// diagnostic error, as are orders/dimensions whose tensor grid
+    /// explodes past the feature cap.
+    pub fn quadrature(kernel: Kernel, dim: usize, order: usize) -> anyhow::Result<Self> {
+        let Kernel::Gaussian { sigma } = kernel else {
+            anyhow::bail!(
+                "quadrature features require the Gaussian kernel (Gauss–Hermite \
+                 nodes integrate its spectral density); {kernel:?} is not supported — \
+                 use a StaticRff map for non-Gaussian kernels"
+            )
+        };
+        let (omega_t, phases, weights) = super::quadrature::gaussian_features(sigma, dim, order)?;
+        let features = phases.len();
+        let scale = (2.0 / features as f64).sqrt();
+        Ok(Self {
+            omega_t,
+            phases,
+            weights: Some(weights),
+            dim,
+            features,
+            scale,
+            kind: MapKind::Quadrature { order },
+            f32_view: OnceLock::new(),
+        })
+    }
+
+    /// Build a static map from explicit parts (used by tests and the
+    /// PJRT bridge, which needs the same `(Ω, b)` on both sides).
     pub fn from_parts(omega_t: Vec<f64>, phases: Vec<f64>, dim: usize) -> Self {
+        Self::from_parts_kind(omega_t, phases, None, dim, MapKind::StaticRff)
+    }
+
+    /// Build any family member from explicit parts — the codec restore
+    /// path. `weights` is required for (and only for) quadrature kinds;
+    /// shape invariants are asserted (codecs validate with diagnostics
+    /// *before* calling this).
+    pub fn from_parts_kind(
+        omega_t: Vec<f64>,
+        phases: Vec<f64>,
+        weights: Option<Vec<f64>>,
+        dim: usize,
+        kind: MapKind,
+    ) -> Self {
         let features = phases.len();
         // same invariant as `draw`: an empty map would make
         // `scale = sqrt(2/0) = +inf` and poison every feature
-        assert!(dim > 0 && features > 0, "RffMap needs dim > 0 and features > 0");
+        assert!(dim > 0 && features > 0, "FeatureMap needs dim > 0 and features > 0");
         assert_eq!(omega_t.len(), dim * features, "omega length mismatch");
+        match kind {
+            MapKind::Quadrature { .. } => {
+                let w = weights.as_ref().expect("quadrature maps carry weights");
+                assert_eq!(w.len(), features, "weights length mismatch");
+            }
+            MapKind::StaticRff | MapKind::AdaptiveRff { .. } => {
+                assert!(weights.is_none(), "RFF kinds use the uniform scale, not weights");
+            }
+        }
+        if let MapKind::AdaptiveRff { mu_omega } = kind {
+            assert!(mu_omega > 0.0 && mu_omega.is_finite(), "mu_omega must be positive");
+        }
         let scale = (2.0 / features as f64).sqrt();
-        Self { omega_t, phases, dim, features, scale, f32_view: OnceLock::new() }
+        Self { omega_t, phases, weights, dim, features, scale, kind, f32_view: OnceLock::new() }
     }
 
     /// Input dimension d.
@@ -163,9 +335,21 @@ impl RffMap {
         self.features
     }
 
-    /// `sqrt(2/D)`.
+    /// `sqrt(2/D)` — the uniform feature weight of the RFF kinds
+    /// (quadrature maps override it per feature; see [`Self::weights`]).
     pub fn scale(&self) -> f64 {
         self.scale
+    }
+
+    /// Which family member this map is.
+    pub fn kind(&self) -> MapKind {
+        self.kind
+    }
+
+    /// Per-feature weights: `Some` for quadrature maps, `None` for the
+    /// uniform-`sqrt(2/D)` RFF kinds.
+    pub fn weights(&self) -> Option<&[f64]> {
+        self.weights.as_deref()
     }
 
     /// Frequency row `ω_i`.
@@ -177,6 +361,54 @@ impl RffMap {
     /// Phases `b`.
     pub fn phases(&self) -> &[f64] {
         &self.phases
+    }
+
+    /// Weight of feature `i` — the scalar-tail twin of [`Self::cos_lane`].
+    #[inline]
+    fn feature_weight(&self, i: usize) -> f64 {
+        match &self.weights {
+            None => self.scale,
+            Some(w) => w[i],
+        }
+    }
+
+    /// The feature epilogue for the lane starting at `i0`: uniform-scale
+    /// cosines for the RFF kinds (the pre-family expression, bitwise),
+    /// per-feature-weighted cosines for quadrature.
+    #[inline]
+    fn cos_lane(&self, args: &[f64; LANES], i0: usize) -> [f64; LANES] {
+        match &self.weights {
+            None => simd::scaled_cos_lanes(args, self.scale),
+            Some(w) => simd::weighted_cos_lanes(args, &w[i0..i0 + LANES]),
+        }
+    }
+
+    /// One ARFF-GKLMS frequency descent step (arXiv 2207.07236): with
+    /// a-priori error `e` and the *pre-update* θ of the same sample,
+    /// `ω_i ← ω_i − μ_Ω·e·θ_i·w_i·sin(ω_iᵀx + b_i)·x` — gradient descent
+    /// of `e²/2` in Ω, mirroring the θ step. Only meaningful on
+    /// [`MapKind::AdaptiveRff`] maps (asserted); callers holding an
+    /// `Arc<FeatureMap>` reach this through `Arc::make_mut`, which is
+    /// what gives adaptive sessions copy-on-adapt semantics.
+    ///
+    /// Invalidates the cached f32 view — the next PJRT-style export
+    /// rebuilds from the updated Ω (adaptive maps are gated off the PJRT
+    /// backend anyway; the invalidation keeps the view honest for
+    /// diagnostics).
+    pub fn adapt_frequencies(&mut self, x: &[f64], theta: &[f64], e: f64, mu_omega: f64) {
+        debug_assert!(self.kind.is_adaptive(), "adapt_frequencies on a frozen map");
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(theta.len(), self.features);
+        let d = self.dim;
+        for i in 0..self.features {
+            let arg = simd::phase_arg(&self.omega_t, &self.phases, x, i);
+            let g = mu_omega * e * theta[i] * self.scale * arg.sin();
+            let w = &mut self.omega_t[i * d..(i + 1) * d];
+            for (wk, &xk) in w.iter_mut().zip(x) {
+                *wk -= g * xk;
+            }
+        }
+        self.f32_view = OnceLock::new();
     }
 
     /// The cached f32 artifact view of this map — `Ω` as `[d, D]` row-major
@@ -214,7 +446,8 @@ impl RffMap {
     /// plus the f32 view if it has been built. The §Memory protocol's
     /// accounting unit (EXPERIMENTS.md).
     pub fn heap_bytes(&self) -> usize {
-        let mut bytes = (self.omega_t.len() + self.phases.len()) * 8;
+        let weights = self.weights.as_ref().map_or(0, |w| w.len());
+        let mut bytes = (self.omega_t.len() + self.phases.len() + weights) * 8;
         if let Some(v) = self.f32_view.get() {
             bytes += (v.omega.len() + v.phases.len()) * 4;
         }
@@ -236,12 +469,12 @@ impl RffMap {
         let mut i0 = 0;
         while i0 < lane_end {
             let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
-            out[i0..i0 + LANES].copy_from_slice(&simd::scaled_cos_lanes(&args, self.scale));
+            out[i0..i0 + LANES].copy_from_slice(&self.cos_lane(&args, i0));
             i0 += LANES;
         }
         for i in lane_end..feats {
-            out[i] =
-                self.scale * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
+            out[i] = self.feature_weight(i)
+                * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
         }
     }
 
@@ -270,7 +503,7 @@ impl RffMap {
         let mut i0 = 0;
         while i0 < lane_end {
             let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
-            let zl = simd::scaled_cos_lanes(&args, self.scale);
+            let zl = self.cos_lane(&args, i0);
             out[i0..i0 + LANES].copy_from_slice(&zl);
             for l in 0..LANES {
                 acc += theta[i0 + l] * zl[l];
@@ -278,8 +511,8 @@ impl RffMap {
             i0 += LANES;
         }
         for i in lane_end..feats {
-            let z =
-                self.scale * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
+            let z = self.feature_weight(i)
+                * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
             out[i] = z;
             acc += theta[i] * z;
         }
@@ -336,7 +569,7 @@ impl RffMap {
                 for r in 0..bn {
                     let x = &xb[r * d..(r + 1) * d];
                     let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
-                    let zl = simd::scaled_cos_lanes(&args, self.scale);
+                    let zl = self.cos_lane(&args, i0);
                     if STORE_Z {
                         let row = (r0 + r) * feats;
                         z[row + i0..row + i0 + LANES].copy_from_slice(&zl);
@@ -354,9 +587,10 @@ impl RffMap {
             // expression and the same index-ascending accumulation
             for i in lane_end..feats {
                 let th = if FUSED { theta[i] } else { 0.0 };
+                let wi = self.feature_weight(i);
                 for r in 0..bn {
                     let x = &xb[r * d..(r + 1) * d];
-                    let zi = self.scale
+                    let zi = wi
                         * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
                     if STORE_Z {
                         z[(r0 + r) * feats + i] = zi;
@@ -589,5 +823,131 @@ mod tests {
         assert!(r.is_err());
         let r = std::panic::catch_unwind(|| RffMap::from_parts(vec![], vec![], 0));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn pre_family_constructors_are_static_rff() {
+        let mut rng = run_rng(20, 0);
+        let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 16);
+        assert_eq!(map.kind(), MapKind::StaticRff);
+        assert!(map.weights().is_none());
+        let parts = RffMap::from_parts(vec![0.5; 6], vec![0.1; 3], 2);
+        assert_eq!(parts.kind(), MapKind::StaticRff);
+    }
+
+    #[test]
+    fn quadrature_approximates_gaussian_kernel_deterministically() {
+        // order-10 Gauss–Hermite at d = 1 integrates the Gaussian
+        // spectral density to ~1e-6 for δ/σ ≤ 2 — far below any
+        // Monte-Carlo draw at the same D = 20
+        let kernel = Kernel::Gaussian { sigma: 1.0 };
+        let map = FeatureMap::quadrature(kernel, 1, 10).unwrap();
+        assert_eq!(map.features(), 20);
+        assert_eq!(map.kind(), MapKind::Quadrature { order: 10 });
+        for delta in [0.0f64, 0.3, 1.0, 2.0] {
+            let x = [0.7];
+            let y = [0.7 - delta];
+            let exact = kernel.eval(&x, &y);
+            let got = map.approx_kernel(&x, &y);
+            assert!(
+                (got - exact).abs() < 1e-4,
+                "δ={delta}: quadrature {got} vs exact {exact}"
+            );
+        }
+        // d = 2 tensor grid, order 6 → D = 72
+        let map2 = FeatureMap::quadrature(kernel, 2, 6).unwrap();
+        assert_eq!(map2.features(), 72);
+        let x = [0.2, -0.4];
+        let y = [-0.5, 0.3];
+        assert!((map2.approx_kernel(&x, &y) - kernel.eval(&x, &y)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quadrature_rejects_non_gaussian_kernels() {
+        let err = FeatureMap::quadrature(Kernel::Laplacian { sigma: 1.0 }, 1, 8)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Gaussian"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn quadrature_batch_matches_per_row_bitwise() {
+        // D = 18 is coprime-ish to LANES (18 mod 8 = 2) so the weighted
+        // tail path runs; n = 70 crosses a ROW_BLOCK boundary
+        for d in [1usize, 2] {
+            let map = FeatureMap::quadrature(Kernel::Gaussian { sigma: 0.8 }, d, 3).unwrap();
+            let feats = map.features();
+            let n = 70;
+            let xs: Vec<f64> = (0..n * d).map(|i| (i as f64 * 0.113).sin()).collect();
+            let mut z = vec![0.0; n * feats];
+            map.apply_batch_into(&xs, &mut z);
+            let theta: Vec<f64> = (0..feats).map(|i| (i as f64 * 0.41).cos()).collect();
+            let mut out = vec![9.9; n];
+            map.predict_batch_into(&xs, &theta, &mut out);
+            let mut z_row = vec![0.0; feats];
+            for r in 0..n {
+                let x = &xs[r * d..(r + 1) * d];
+                let want = map.apply_dot_into(x, &theta, &mut z_row);
+                assert_eq!(&z[r * feats..(r + 1) * feats], &z_row[..], "d={d} row={r}");
+                assert_eq!(out[r], want, "d={d} row={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_map_descends_and_invalidates_f32_view() {
+        let mut rng = run_rng(21, 0);
+        let kind = MapKind::AdaptiveRff { mu_omega: 0.05 };
+        let mut map =
+            FeatureMap::draw_kind(&mut rng, Kernel::Gaussian { sigma: 1.0 }, 2, 12, kind);
+        assert!(map.kind().is_adaptive());
+        let before = map.omega(3).to_vec();
+        let view_before = Arc::clone(map.f32_view());
+        let theta = vec![0.3; 12];
+        map.adapt_frequencies(&[0.5, -0.2], &theta, 0.7, 0.05);
+        assert_ne!(map.omega(3), &before[..], "Ω did not move");
+        // the update is the documented gradient: ω −= μ_Ω·e·θ_i·w·sin(arg)·x
+        let x = [0.5, -0.2];
+        let arg = crate::linalg::dot(&before, &x) + map.phases()[3];
+        let g = 0.05 * 0.7 * 0.3 * map.scale() * arg.sin();
+        for k in 0..2 {
+            assert!(
+                (map.omega(3)[k] - (before[k] - g * x[k])).abs() < 1e-15,
+                "gradient step mismatch at k={k}"
+            );
+        }
+        // the cached f32 view was rebuilt from the new Ω
+        let view_after = map.f32_view();
+        assert!(!Arc::ptr_eq(&view_before, view_after), "stale f32 view survived");
+        assert!((view_after.omega[3] as f64 - map.omega(3)[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn copy_on_adapt_clones_the_shared_map() {
+        // the acceptance semantics: a fleet shares one resident map until
+        // a session's first Ω update make_muts its own copy
+        let mut rng = run_rng(22, 0);
+        let kind = MapKind::AdaptiveRff { mu_omega: 0.01 };
+        let shared = Arc::new(FeatureMap::draw_kind(
+            &mut rng,
+            Kernel::Gaussian { sigma: 1.0 },
+            2,
+            8,
+            kind,
+        ));
+        let mut held = Arc::clone(&shared);
+        assert_eq!(Arc::strong_count(&shared), 2);
+        let theta = vec![0.1; 8];
+        FeatureMap::adapt_frequencies(
+            Arc::make_mut(&mut held),
+            &[0.3, 0.4],
+            &theta,
+            0.5,
+            0.01,
+        );
+        // make_mut detached `held`: the original is untouched
+        assert_eq!(Arc::strong_count(&shared), 1);
+        assert_eq!(Arc::strong_count(&held), 1);
+        assert_ne!(shared.omega(0), held.omega(0));
     }
 }

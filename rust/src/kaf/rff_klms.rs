@@ -3,19 +3,28 @@
 //! Per sample: `ŷ = θᵀ z_Ω(x)`, `e = y − ŷ`, `θ ← θ + μ e z_Ω(x)`.
 //! Fixed-size solution `θ ∈ R^D`, complexity O(Dd) per step, no
 //! dictionary, no sparsification.
+//!
+//! With an [`MapKind::AdaptiveRff`](crate::kaf::MapKind) map the filter
+//! additionally runs the ARFF-GKLMS frequency update (arXiv 2207.07236)
+//! each step: `ω_i ← ω_i − μ_Ω e θ_i w sin(ω_iᵀx + b_i) x`, using the
+//! *pre-update* θ (simultaneous gradient on Ω and θ). The first such
+//! update copy-on-writes the shared map (`Arc::make_mut`), so fleets
+//! sharing an interned adaptive map diverge lazily — no clone until a
+//! session actually adapts.
 
 use std::sync::Arc;
 
-use super::rff::{RffMap, ROW_BLOCK};
+use super::rff::{MapKind, RffMap, ROW_BLOCK};
 use super::OnlineRegressor;
 use crate::linalg::{axpy, seq_dot};
 
 /// The paper's RFF-KLMS filter.
 ///
-/// Holds its frozen map behind an `Arc`: a fleet of filters built from
-/// one interned map (see [`super::MapRegistry`]) shares a single
-/// resident `(Ω, b)` — only θ is per-filter state, which is the paper's
-/// fixed-size-solution property taken literally.
+/// Holds its (usually frozen) map behind an `Arc`: a fleet of filters
+/// built from one interned map (see [`super::MapRegistry`]) shares a
+/// single resident `(Ω, b)` — only θ is per-filter state, which is the
+/// paper's fixed-size-solution property taken literally. Adaptive-RFF
+/// maps break the sharing on first Ω update via copy-on-adapt.
 pub struct RffKlms {
     map: Arc<RffMap>,
     theta: Vec<f64>,
@@ -41,7 +50,7 @@ impl RffKlms {
 
     /// Approximate heap footprint of this filter's **own** state in
     /// bytes — θ plus the z/batch scratches; the shared map is counted
-    /// once per fleet via [`RffMap::heap_bytes`].
+    /// once per fleet via [`RffMap::heap_bytes`](crate::kaf::FeatureMap::heap_bytes).
     pub fn heap_bytes(&self) -> usize {
         (self.theta.len() + self.z.len() + self.zb.capacity()) * 8
     }
@@ -99,6 +108,16 @@ impl OnlineRegressor for RffKlms {
         if ys.is_empty() {
             return Vec::new();
         }
+        if self.map.kind().is_adaptive() {
+            // Ω moves every step, so the θ-independent batched feature
+            // block would be stale after row 0 — fall back to strictly
+            // sequential steps (identical results, just unblocked).
+            return xs
+                .chunks(dim)
+                .zip(ys)
+                .map(|(x, &y)| self.step(x, y))
+                .collect();
+        }
         // Only the θ-independent feature map is batched (blocked lane
         // kernels, feature-lanes outer) into the filter-owned scratch;
         // θ updates stay strictly sequential, so the errors and final θ
@@ -128,6 +147,12 @@ impl OnlineRegressor for RffKlms {
         // fused feature map + prediction (one pass), then the update pass
         let yhat = self.map.apply_dot_into(x, &self.theta, &mut self.z);
         let e = y - yhat;
+        if let MapKind::AdaptiveRff { mu_omega } = self.map.kind() {
+            // ARFF-GKLMS simultaneous update: Ω's gradient uses the
+            // pre-update θ, so adapt BEFORE the θ axpy. make_mut clones
+            // a still-shared map exactly once (copy-on-adapt).
+            Arc::make_mut(&mut self.map).adapt_frequencies(x, &self.theta, e, mu_omega);
+        }
         axpy(self.mu * e, &self.z, &mut self.theta);
         e
     }
@@ -228,6 +253,56 @@ mod tests {
         for (r, &v) in out.iter().enumerate() {
             assert_eq!(v, per_row.predict(&probe[r * 5..(r + 1) * 5]));
         }
+    }
+
+    #[test]
+    fn adaptive_copy_on_adapt_and_batch_fallback() {
+        let mut rng = run_rng(11, 0);
+        let kind = MapKind::AdaptiveRff { mu_omega: 0.02 };
+        let map = Arc::new(RffMap::draw_kind(
+            &mut rng,
+            Kernel::Gaussian { sigma: 5.0 },
+            5,
+            64,
+            kind,
+        ));
+        let mut a = RffKlms::new(Arc::clone(&map), 0.5);
+        let mut b = RffKlms::new(Arc::clone(&map), 0.5);
+        // registry-style sharing: no clones before the first Ω update
+        assert_eq!(Arc::strong_count(&map), 3);
+        let mut src = NonlinearWiener::new(run_rng(11, 1), 0.05);
+        let samples = src.take_samples(40);
+        let (mut xs, mut ys, mut want) = (Vec::new(), Vec::new(), Vec::new());
+        for s in &samples {
+            xs.extend_from_slice(&s.x);
+            ys.push(s.y);
+            want.push(a.step(&s.x, s.y));
+        }
+        // a's first step detached its private copy; b still shares
+        assert_eq!(Arc::strong_count(&map), 2);
+        let got = b.train_batch(5, &xs, &ys);
+        assert_eq!(got, want, "adaptive batch fallback diverged from per-row");
+        assert_eq!(b.theta(), a.theta(), "theta diverged");
+        assert_eq!(Arc::strong_count(&map), 1, "both filters own private maps now");
+        assert_ne!(a.map().omega(0), map.omega(0), "Ω never adapted");
+        // the two private maps walked the same trajectory
+        assert_eq!(a.map().omega(0), b.map().omega(0));
+    }
+
+    #[test]
+    fn adaptive_converges_on_linear_kernel_expansion() {
+        // sanity: the Ω gradient must not destabilize the θ recursion
+        let mut rng = run_rng(12, 0);
+        let kind = MapKind::AdaptiveRff { mu_omega: 0.01 };
+        let map =
+            RffMap::draw_kind(&mut rng, Kernel::Gaussian { sigma: 5.0 }, 5, 256, kind);
+        let mut f = RffKlms::new(map, 0.5);
+        let mut src = LinearKernelExpansion::paper_default(run_rng(12, 1), 5, 10);
+        let samples = src.take_samples(6000);
+        let errs = f.run(&samples);
+        let tail: f64 =
+            errs[errs.len() - 500..].iter().map(|e| e * e).sum::<f64>() / 500.0;
+        assert!(tail < 0.1, "adaptive steady-state MSE {tail}");
     }
 
     #[test]

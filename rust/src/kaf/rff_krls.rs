@@ -148,7 +148,7 @@ impl RffKrls {
 
     /// Approximate heap footprint of this filter's **own** state in
     /// bytes — θ, packed P, and the z/π/batch scratches; the shared map
-    /// is counted once per fleet via [`RffMap::heap_bytes`]. The packed
+    /// is counted once per fleet via [`RffMap::heap_bytes`](crate::kaf::FeatureMap::heap_bytes). The packed
     /// layout makes this ~half the dense filter's footprint at large D
     /// (§Memory accounting in EXPERIMENTS.md).
     pub fn heap_bytes(&self) -> usize {

@@ -37,7 +37,7 @@ impl RffNlms {
 
     /// Approximate heap footprint of this filter's **own** state in
     /// bytes — θ plus the z/batch scratches; the shared map is counted
-    /// once per fleet via [`RffMap::heap_bytes`].
+    /// once per fleet via [`RffMap::heap_bytes`](crate::kaf::FeatureMap::heap_bytes).
     pub fn heap_bytes(&self) -> usize {
         (self.theta.len() + self.z.len() + self.zb.capacity()) * 8
     }

@@ -126,12 +126,15 @@ impl OnlineRegressor for SurpriseKlms {
             self.centers.extend_from_slice(x);
             self.coeffs.push(self.mu * e);
         } else {
-            // redundant: cheap coefficient refresh on the nearest center
+            // redundant: cheap coefficient refresh on the nearest center.
+            // total_cmp: a NaN kernel row (NaN input) must not panic the
+            // comparator; NaN sorts above every real value, so the refresh
+            // still lands on *a* center and the filter survives the sample
             if let Some((k, _)) = self
                 .row
                 .iter()
                 .enumerate()
-                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .max_by(|x, y| x.1.total_cmp(y.1))
             {
                 self.coeffs[k] += self.mu * e;
             }
@@ -192,6 +195,19 @@ mod tests {
         let head: f64 = errs[..200].iter().map(|e| e * e).sum::<f64>() / 200.0;
         let tail: f64 = errs[errs.len() - 200..].iter().map(|e| e * e).sum::<f64>() / 200.0;
         assert!(tail < head * 0.35, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_the_redundant_refresh() {
+        // regression: the redundant-branch comparator used
+        // partial_cmp().unwrap(), which panicked when a NaN input made
+        // every kernel row value NaN; total_cmp survives the sample
+        let mut f = SurpriseKlms::new(Kernel::Gaussian { sigma: 1.0 }, 1, 0.5, 0.01, 1e12, 1e9);
+        f.step(&[0.0], 1.0);
+        f.step(&[0.01], 1.0); // same redundant regime as the test above
+        let e = f.step(&[f64::NAN], 1.0);
+        assert!(e.is_nan());
+        assert_eq!(f.dictionary_size(), 1, "NaN sample must not be admitted");
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! | [`rng`] | deterministic PRNG + Gaussian/uniform/Cauchy samplers |
 //! | [`linalg`] | dense matrices, LU/Cholesky, Jacobi eigensolver |
 //! | [`signal`] | the paper's four data generators + streaming traits |
-//! | [`kaf`] | kernels, RFF map, LMS/KLMS/QKLMS/KRLS/RFF-KLMS/RFF-KRLS |
+//! | [`kaf`] | kernels, the FeatureMap family (static RFF / Gauss–Hermite quadrature / adaptive RFF), LMS/KLMS/QKLMS/KRLS/RFF-KLMS/RFF-KRLS |
 //! | [`theory`] | closed-form `R_zz`, step-size bounds, steady-state MSE |
 //! | [`metrics`] | MC learning-curve accumulation, dB, steady-state |
 //! | [`exec`] | thread pool + parallel-for (tokio substitute, offline) |

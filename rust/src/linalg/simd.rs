@@ -5,8 +5,8 @@
 //! without `-C target-cpu=native`).
 //!
 //! Every caller that used to walk features one scalar at a time — the
-//! RFF map ([`RffMap::apply_into`](crate::kaf::RffMap::apply_into) /
-//! [`apply_dot_into`](crate::kaf::RffMap::apply_dot_into) / the blocked
+//! RFF map ([`RffMap::apply_into`](crate::kaf::FeatureMap::apply_into) /
+//! [`apply_dot_into`](crate::kaf::FeatureMap::apply_dot_into) / the blocked
 //! batch kernels), the packed-triangular KRLS recursion, and the
 //! coordinator's f32 native-step kernels — now runs its inner loop
 //! through these primitives, so serving and training share one vector
@@ -146,6 +146,22 @@ pub fn scaled_cos_lanes(args: &[f64; LANES], scale: f64) -> [f64; LANES] {
     out
 }
 
+/// `w[l] * fast_cos(args[l])` per lane — the per-feature-weight feature
+/// epilogue (quadrature maps carry a distinct weight per feature instead
+/// of the uniform `sqrt(2/D)`). `w` is the `LANES`-long weight slice for
+/// the lane's features; the tail-path twin is
+/// `w[i] * fast_cos(phase_arg(..))`, which evaluates the identical
+/// per-element expression.
+#[inline]
+pub fn weighted_cos_lanes(args: &[f64; LANES], w: &[f64]) -> [f64; LANES] {
+    debug_assert_eq!(w.len(), LANES);
+    let mut out = fast_cos_lanes(args);
+    for (v, &wi) in out.iter_mut().zip(w) {
+        *v *= wi;
+    }
+    out
+}
+
 /// Scalar phase argument `ω_iᵀx + b_i` of feature `i` — the tail-path
 /// twin of [`phase_args_lane`]: for every `d` (including the tiny-d
 /// lane specializations) the two produce bitwise-identical values.
@@ -221,7 +237,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 ///
 /// Slower than [`dot`] (no lane parallelism) but its accumulation order
 /// matches the fused `θᵀz` accumulation inside
-/// [`RffMap::apply_dot_into`](crate::kaf::RffMap::apply_dot_into) and
+/// [`RffMap::apply_dot_into`](crate::kaf::FeatureMap::apply_dot_into) and
 /// the batch kernels exactly (lane chunks ascending, sequential within a
 /// lane = plain index-ascending). The batched train paths use it for
 /// their a-priori predictions so batched and per-row runs produce
@@ -494,6 +510,20 @@ mod tests {
         for l in 0..LANES {
             assert_eq!(scaled[l], 0.25 * fast_cos(args[l]));
         }
+    }
+
+    #[test]
+    fn weighted_cos_lanes_match_scalar_bitwise() {
+        let xs = seq(LANES, |i| i as f64 * 0.91 - 2.0);
+        let args: [f64; LANES] = xs.as_slice().try_into().unwrap();
+        let w = seq(LANES, |i| 0.125 + i as f64 * 0.0625);
+        let lanes = weighted_cos_lanes(&args, &w);
+        for l in 0..LANES {
+            assert_eq!(lanes[l], w[l] * fast_cos(args[l]));
+        }
+        // uniform weights collapse to the scaled epilogue exactly
+        let uniform = vec![0.25; LANES];
+        assert_eq!(weighted_cos_lanes(&args, &uniform), scaled_cos_lanes(&args, 0.25));
     }
 
     #[test]
