@@ -1,0 +1,166 @@
+//! Bench — cross-session scaling through the coordinator's work-stealing
+//! epoch scheduler, plus the locked-vs-lock-free predict-path ablation.
+//!
+//! Two protocols (EXPERIMENTS.md §Scaling):
+//!
+//! 1. **rows/s × workers curve**: one epoch of `TrainBatch` traffic for a
+//!    mixed KLMS/KRLS fleet (heterogeneous per-row cost, so stealing has
+//!    real imbalance to fix), replayed through
+//!    [`CoordinatorService::run_epoch`] at several worker counts.
+//!    Sessions are the parallel unit — per-session results are bitwise
+//!    identical across the sweep (asserted in
+//!    `tests/epoch_determinism.rs`); only wall clock moves.
+//! 2. **Predict-path ablation**: the same 64-probe burst served the old
+//!    way (session mutex + θ snapshot per burst) and the new way (wait-
+//!    free load of the published `PredictState` via the epoch path).
+//!
+//! Emits `BENCH_scaling.json` — the `meta` block records the dispatch
+//! tier, CPU features, thread count and fleet shape, so curves from
+//! different machines/legs never get compared blind.
+//!
+//! `cargo bench --bench scaling [-- --quick]`
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use rff_kaf::bench::{time_once, Bencher};
+use rff_kaf::coordinator::{
+    Algo, CoordinatorService, EpochOp, FilterSession, ServiceConfig, SessionConfig,
+    SessionTraffic,
+};
+use rff_kaf::rng::{run_rng, Distribution, Normal};
+use rff_kaf::util::{Args, JsonValue};
+
+/// A fleet alternating KLMS (O(D) per row) and KRLS (O(D²) per row)
+/// sessions: the cost imbalance is what the scheduler's stealing earns
+/// its keep on. All sessions share one interned map (same spec + seed).
+fn make_service(n_sessions: usize, features: usize) -> (CoordinatorService, Vec<u64>) {
+    let svc = CoordinatorService::start(ServiceConfig::default(), None);
+    let ids = (0..n_sessions)
+        .map(|i| {
+            let algo = if i % 2 == 0 {
+                Algo::RffKlms { mu: 1.0 }
+            } else {
+                Algo::RffKrls { beta: 0.9995, lambda: 1e-4 }
+            };
+            let cfg = SessionConfig { features, algo, ..SessionConfig::paper_default() };
+            svc.add_session_from_spec(cfg, 7).expect("session spec")
+        })
+        .collect();
+    (svc, ids)
+}
+
+/// One epoch of deterministic train traffic: `rows_per_session` rows per
+/// session, chunked into `batch_rows`-row `TrainBatch` ops.
+fn traffic(
+    ids: &[u64],
+    rows_per_session: usize,
+    batch_rows: usize,
+    dim: usize,
+) -> Vec<SessionTraffic> {
+    let normal = Normal::standard();
+    ids.iter()
+        .enumerate()
+        .map(|(k, &sid)| {
+            let mut rng = run_rng(90, k as u64);
+            let mut ops = Vec::new();
+            let mut done = 0;
+            while done < rows_per_session {
+                let n = batch_rows.min(rows_per_session - done);
+                let xs = normal.sample_vec(&mut rng, n * dim);
+                let ys: Vec<f64> = (0..n).map(|r| xs[r * dim].sin()).collect();
+                ops.push(EpochOp::TrainBatch { xs, ys });
+                done += n;
+            }
+            SessionTraffic { session: sid, ops }
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let quick = args.flag("quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let (n_sessions, rows_per_session, batch_rows) =
+        if quick { (8usize, 256usize, 64usize) } else { (16, 2048, 64) };
+    let features = if quick { 64 } else { 128 };
+    let reps = if quick { 1u32 } else { 3 };
+    let worker_counts = [1usize, 2, 4, 8];
+
+    b.set_meta("sessions", JsonValue::Number(n_sessions as f64));
+    b.set_meta("rows_per_session", JsonValue::Number(rows_per_session as f64));
+    b.set_meta("batch_rows", JsonValue::Number(batch_rows as f64));
+    b.set_meta("features", JsonValue::Number(features as f64));
+    b.set_meta(
+        "worker_counts",
+        JsonValue::Array(worker_counts.iter().map(|&w| JsonValue::Number(w as f64)).collect()),
+    );
+
+    // --- rows/s × workers curve ------------------------------------------
+    let dim = SessionConfig::paper_default().dim;
+    let total_rows = (n_sessions * rows_per_session) as f64;
+    for &w in &worker_counts {
+        let mut total = Duration::ZERO;
+        for _ in 0..reps {
+            // fresh fleet per rep: every worker count trains the
+            // identical trajectory from θ = 0
+            let (svc, ids) = make_service(n_sessions, features);
+            let t = traffic(&ids, rows_per_session, batch_rows, dim);
+            let (out, dt) = time_once(|| svc.run_epoch(t, w));
+            assert!(
+                out.iter().all(|r| r.failed.is_none()),
+                "epoch failed at workers={w}"
+            );
+            total += dt;
+            svc.shutdown();
+        }
+        let mean = total / reps;
+        b.record(&format!("epoch_train_w{w}"), mean);
+        println!(
+            "  workers={w}: {:.3} Mrows/s ({n_sessions} sessions x {rows_per_session} rows)",
+            total_rows / mean.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- locked vs lock-free predict path at the served config (D=300) ---
+    let pcfg = SessionConfig::paper_default();
+    let mut rng = run_rng(91, 0);
+    let mut sess = FilterSession::new(pcfg.clone(), &mut rng, None).expect("session");
+    let normal = Normal::standard();
+    for _ in 0..512 {
+        let x = normal.sample_vec(&mut rng, pcfg.dim);
+        sess.train(&x, x[0].sin()).expect("train");
+    }
+    let probes = normal.sample_vec(&mut rng, 64 * pcfg.dim);
+    let mut out = vec![0.0; 64];
+
+    // old path: per burst, take the session mutex and clone θ into a
+    // fresh PredictState (what dispatch_predicts did before publication)
+    let locked = Mutex::new(sess);
+    b.bench("predict_64rows_locked_snapshot_D300", || {
+        let snap = locked.lock().unwrap().predict_state();
+        snap.predict_batch(&probes, &mut out);
+        out[0]
+    });
+
+    // new path: the same burst through the epoch scheduler's lock-free
+    // predict op — a wait-free load of the state published at the last
+    // train commit; no session mutex, no θ clone
+    let svc = CoordinatorService::start(ServiceConfig::default(), None);
+    let sid = svc.add_session(locked.into_inner().unwrap());
+    b.bench("predict_64rows_lockfree_published_D300", || {
+        let res = svc.run_epoch(
+            vec![SessionTraffic {
+                session: sid,
+                ops: vec![EpochOp::PredictBatch { xs: probes.clone() }],
+            }],
+            1,
+        );
+        res[0].predictions[0]
+    });
+    svc.shutdown();
+
+    b.write_json("scaling").expect("writing BENCH_scaling.json");
+    println!("\n{} measurements total", b.results().len());
+}

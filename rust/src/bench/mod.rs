@@ -79,6 +79,7 @@ pub struct Bencher {
     measure: Duration,
     min_iters: usize,
     results: Vec<Measurement>,
+    meta: std::collections::BTreeMap<String, JsonValue>,
 }
 
 impl Default for Bencher {
@@ -87,10 +88,51 @@ impl Default for Bencher {
     }
 }
 
+/// Run context stamped into every `BENCH_*.json`: numbers from two runs
+/// are only comparable when this block matches (a regression on the
+/// `avx2` tier and an improvement from a `-C target-cpu=native` build
+/// look identical in the raw nanoseconds).
+fn run_meta() -> std::collections::BTreeMap<String, JsonValue> {
+    use crate::linalg::simd;
+    let mut m = std::collections::BTreeMap::new();
+    // runtime dispatch tier actually serving the portable entry points
+    m.insert("simd_tier".into(), JsonValue::String(simd::active_tier().name().into()));
+    m.insert(
+        "simd_tiers_available".into(),
+        JsonValue::Array(
+            simd::available_tiers()
+                .into_iter()
+                .map(|t| JsonValue::String(t.name().into()))
+                .collect(),
+        ),
+    );
+    m.insert("cpu_features".into(), JsonValue::String(simd::cpu_feature_summary()));
+    m.insert("threads".into(), JsonValue::Number(crate::exec::default_parallelism() as f64));
+    // which CI codegen leg built this binary: the `native` leg compiles
+    // with `-C target-cpu=native`, which bakes AVX2 into *every* function
+    // on any machine CI runs on, so that target_feature doubles as the
+    // leg marker (a non-AVX2 host's native build reads `portable` — then
+    // the two legs genuinely are the same codegen)
+    m.insert(
+        "codegen".into(),
+        JsonValue::String(
+            if cfg!(target_feature = "avx2") { "native" } else { "portable" }.into(),
+        ),
+    );
+    m
+}
+
 impl Bencher {
     /// Custom budgets: `warmup` time, `measure` time, minimum iterations.
     pub fn new(warmup: Duration, measure: Duration, min_iters: usize) -> Self {
-        Self { warmup, measure, min_iters, results: Vec::new() }
+        Self { warmup, measure, min_iters, results: Vec::new(), meta: run_meta() }
+    }
+
+    /// Add (or override) one run-metadata entry carried in the `meta`
+    /// block of [`Self::write_json`] output — benchmark drivers record
+    /// their own knobs here (e.g. `sessions`, `rows_per_session`).
+    pub fn set_meta(&mut self, key: &str, value: JsonValue) {
+        self.meta.insert(key.to_string(), value);
     }
 
     /// A faster profile for CI-ish runs.
@@ -188,6 +230,7 @@ impl Bencher {
     pub fn write_json_to(&self, dir: &Path, name: &str) -> std::io::Result<PathBuf> {
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("bench".into(), JsonValue::String(name.to_string()));
+        obj.insert("meta".into(), JsonValue::Object(self.meta.clone()));
         obj.insert(
             "measurements".into(),
             JsonValue::Array(self.results.iter().map(Measurement::to_json).collect()),
@@ -240,6 +283,7 @@ mod tests {
     #[test]
     fn write_json_emits_parseable_document() {
         let mut b = Bencher::new(Duration::from_millis(1), Duration::from_millis(5), 3);
+        b.set_meta("run_label", JsonValue::String("unit-test".into()));
         b.bench("spin_a", || std::hint::black_box(1 + 1));
         b.bench("spin_b", || std::hint::black_box(2 + 2));
         let dir = std::env::temp_dir().join("rffkaf_bench_json_test");
@@ -249,6 +293,22 @@ mod tests {
         assert_eq!(path.file_name().unwrap().to_str().unwrap(), "BENCH_unit.json");
         let doc = JsonValue::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("unit"));
+        // the run-metadata block makes documents self-describing: the
+        // dispatch tier serving the run, the CPU's feature set, the
+        // codegen leg and any driver-recorded knobs
+        let meta = doc.get("meta").unwrap();
+        let tier = meta.get("simd_tier").and_then(|v| v.as_str()).unwrap();
+        assert!(
+            crate::linalg::simd::available_tiers()
+                .iter()
+                .any(|t| t.name() == tier),
+            "meta.simd_tier {tier:?} is not an available tier"
+        );
+        assert!(meta.get("cpu_features").and_then(|v| v.as_str()).is_some());
+        assert!(meta.get("threads").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        let leg = meta.get("codegen").and_then(|v| v.as_str()).unwrap();
+        assert!(leg == "native" || leg == "portable");
+        assert_eq!(meta.get("run_label").and_then(|v| v.as_str()), Some("unit-test"));
         let rows = doc.get("measurements").and_then(|v| v.as_array()).unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].get("name").and_then(|v| v.as_str()), Some("spin_a"));

@@ -107,19 +107,27 @@
 //!
 //! Sessions live in a [`SessionStore`]: `N` shards (power of two), each a
 //! `Mutex<BTreeMap<u64, Resident>>` keyed by a Fibonacci hash of the
-//! session id, where a `Resident` is an `Arc<Mutex<FilterSession>>` plus
-//! an LRU touch stamp. Who holds which lock:
+//! session id, where a `Resident` is an `Arc<SessionSlot>` — the
+//! `Mutex<FilterSession>` plus a lock-free published [`PredictState`]
+//! slot (`publish::ArcSlot`) — and an LRU touch stamp. Who holds which
+//! lock:
 //!
 //! * **Shard lock** — held for map operations (insert / remove / lookup /
 //!   len) *and* for the restore of a spilled session on touch (decode +
 //!   re-insert happen under the shard lock so a racing double-touch
 //!   restores exactly once). Never held while training, predicting, or
 //!   dispatching device work.
-//! * **Session lock** — held for exactly one `train()`/`flush()` call, or
-//!   just long enough for the predict batcher to snapshot `(θ, Ω, b)`
-//!   into a [`PredictState`]. Trains on different sessions run truly
-//!   concurrently across router workers; only same-session trains
-//!   serialize.
+//! * **Session lock** — held for exactly one `train()`/`flush()` call,
+//!   which republishes the session's [`PredictState`] into the slot's
+//!   lock-free `ArcSlot` before releasing. Trains on different sessions
+//!   run truly concurrently across router workers; only same-session
+//!   trains serialize. **Predicts take no lock**: the batcher loads the
+//!   published state (wait-free; counted in
+//!   [`ServiceStats`]`::lockfree_predicts`) and serves batches off it,
+//!   so a predict storm can never convoy behind a slow train and vice
+//!   versa. What a predict sees is the state as of the last completed
+//!   train commit — the same consistency the old snapshot-under-lock
+//!   path gave, minus the lock.
 //! * **Eviction set** — a store-wide `Mutex<BTreeSet<u64>>` naming
 //!   sessions mid-eviction (unlinked from their shard, snapshot not yet
 //!   in the sink). Touches of those ids spin briefly until the spill
@@ -138,13 +146,17 @@
 
 mod native_step;
 mod orchestrator;
+mod publish;
 mod service;
 mod session;
 mod snapshot;
 mod store;
 
 pub use orchestrator::{McConfig, McResult, Orchestrator};
-pub use service::{CoordinatorService, Request, Response, ServiceConfig, ServiceStats};
+pub use service::{
+    CoordinatorService, EpochOp, Request, Response, ServiceConfig, ServiceStats,
+    SessionEpochResult, SessionTraffic,
+};
 pub use session::{
     Algo, Backend, DiffusionGroupConfig, FilterSession, PredictState, SessionConfig,
 };

@@ -1,0 +1,203 @@
+//! Lock-free single-writer publication slot (arc-swap shaped, built on
+//! `std` only): writers swap in a new `Arc<T>` at train-commit, readers
+//! grab the current `Arc<T>` without ever touching a mutex — the predict
+//! path's replacement for "lock the session, clone a snapshot".
+//!
+//! ## Design
+//!
+//! [`ArcSlot`] holds the current value as a raw `Arc` pointer in an
+//! `AtomicPtr`, plus a reader count and a retired-pointer list:
+//!
+//! * **Readers** ([`ArcSlot::load`]): increment `readers`, load the
+//!   pointer, bump its strong count (`Arc::increment_strong_count`),
+//!   materialize the `Arc`, decrement `readers`. No locks, no
+//!   allocation — two atomic RMWs and a load on the hot path.
+//! * **Writers** ([`ArcSlot::store`]): swap the pointer, push the old
+//!   pointer onto the retired list, and reclaim the retired list only
+//!   when `readers == 0` at that instant. A reader observed mid-flight
+//!   defers reclamation to a later `store` (or to `Drop`, which holds
+//!   `&mut self` and therefore excludes readers by construction).
+//!
+//! ## Why the deferred reclamation is sound
+//!
+//! Every atomic here is `SeqCst`, so all operations order into one
+//! total order. Label a reader's ops A (`readers += 1`), B (pointer
+//! load), C (strong-count increment), D (`readers -= 1`); a writer's
+//! ops E (pointer swap) and F (`readers` check). B returns the retired
+//! pointer only if B precedes E in the total order, hence A < B < E < F.
+//! When F then reads 0, this reader's D must already have happened
+//! (A is visible at F, so only D can make the count 0 again), which
+//! means C happened too — the reader already owns a strong reference,
+//! and dropping the slot's retired reference cannot free the value. If
+//! instead F reads ≥ 1, the writer defers — nothing is freed under the
+//! reader. Readers never block writers and vice versa; memory for a
+//! superseded value is reclaimed at the first store (or drop) that
+//! observes a quiescent instant, so at most O(stores while readers are
+//! continuously in flight) values are parked — in the coordinator's use
+//! the reader critical section is ~4 instructions, so retirement in
+//! practice drains on the next train commit.
+//!
+//! The payoff for the predict path: `dispatch_predicts` serves batched
+//! predictions from the published
+//! [`PredictState`](super::PredictState) with **zero** session-mutex
+//! acquisitions, so a storm of predicts can never convoy behind a slow
+//! train holding the session lock (and vice versa).
+
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering::SeqCst};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// A lock-free slot holding an `Arc<T>`: single-value publish/subscribe
+/// with wait-free readers (see the module docs for the reclamation
+/// protocol).
+pub struct ArcSlot<T> {
+    /// Current value, as `Arc::into_raw` — the slot owns one strong
+    /// reference to it.
+    ptr: AtomicPtr<T>,
+    /// Readers currently between their `readers += 1` and
+    /// `readers -= 1` — while nonzero, retired pointers must not be
+    /// reclaimed.
+    readers: AtomicUsize,
+    /// Superseded pointers awaiting a quiescent instant (each carries
+    /// the one strong reference the slot held while it was current).
+    retired: Mutex<Vec<*mut T>>,
+}
+
+// SAFETY: the raw pointers are `Arc::into_raw` of `Arc<T>`; the slot
+// hands out `Arc<T>` clones and drops them, which is exactly as
+// Send/Sync as `Arc<T>` itself.
+unsafe impl<T: Send + Sync> Send for ArcSlot<T> {}
+unsafe impl<T: Send + Sync> Sync for ArcSlot<T> {}
+
+impl<T> ArcSlot<T> {
+    /// New slot holding `initial`.
+    pub fn new(initial: Arc<T>) -> Self {
+        Self {
+            ptr: AtomicPtr::new(Arc::into_raw(initial) as *mut T),
+            readers: AtomicUsize::new(0),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Grab the currently published value. Wait-free (two atomic RMWs
+    /// and a load); never blocks a writer.
+    pub fn load(&self) -> Arc<T> {
+        self.readers.fetch_add(1, SeqCst); // A
+        let p = self.ptr.load(SeqCst); // B
+        // SAFETY: `p` came from `Arc::into_raw` and the slot's strong
+        // reference to it is still alive: reclamation only happens when
+        // a writer reads `readers == 0` *after* swapping the pointer
+        // out, and our increment (A) precedes the load (B) in the SeqCst
+        // total order — see the module docs for the full argument.
+        let arc = unsafe {
+            Arc::increment_strong_count(p); // C
+            Arc::from_raw(p)
+        };
+        self.readers.fetch_sub(1, SeqCst); // D
+        arc
+    }
+
+    /// Publish a new value, retiring the previous one. Retired values
+    /// are reclaimed at the first `store` (or `Drop`) that observes no
+    /// reader in flight.
+    pub fn store(&self, value: Arc<T>) {
+        let new = Arc::into_raw(value) as *mut T;
+        let old = self.ptr.swap(new, SeqCst); // E
+        let mut retired = self.retired.lock().unwrap_or_else(PoisonError::into_inner);
+        retired.push(old);
+        if self.readers.load(SeqCst) == 0 {
+            // F — quiescent: no reader is between A and D, and any
+            // reader that saw a retired pointer has already secured its
+            // own strong count (module docs), so dropping ours is safe
+            for p in retired.drain(..) {
+                // SAFETY: each retired pointer carries exactly one
+                // strong reference (the one the slot held).
+                unsafe { drop(Arc::from_raw(p)) };
+            }
+        }
+    }
+}
+
+impl<T> Drop for ArcSlot<T> {
+    fn drop(&mut self) {
+        // `&mut self` excludes readers and writers, so both the current
+        // pointer and every retired pointer can be released.
+        let current = *self.ptr.get_mut();
+        // SAFETY: the slot holds one strong reference to the current
+        // value and one per retired pointer; nothing else can be
+        // touching them under `&mut self`.
+        unsafe { drop(Arc::from_raw(current)) };
+        let retired = self.retired.get_mut().unwrap_or_else(PoisonError::into_inner);
+        for p in retired.drain(..) {
+            unsafe { drop(Arc::from_raw(p)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn load_returns_latest_store() {
+        let slot = ArcSlot::new(Arc::new(1u64));
+        assert_eq!(*slot.load(), 1);
+        slot.store(Arc::new(2));
+        assert_eq!(*slot.load(), 2);
+        for v in 3..100 {
+            slot.store(Arc::new(v));
+        }
+        assert_eq!(*slot.load(), 99);
+    }
+
+    #[test]
+    fn values_are_dropped_exactly_once() {
+        struct Counted(Arc<AtomicUsize>);
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, SeqCst);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        {
+            let slot = ArcSlot::new(Arc::new(Counted(Arc::clone(&drops))));
+            for _ in 0..10 {
+                slot.store(Arc::new(Counted(Arc::clone(&drops))));
+            }
+            // 10 superseded values reclaimed by quiescent stores
+            assert_eq!(drops.load(SeqCst), 10);
+            let held = slot.load();
+            slot.store(Arc::new(Counted(Arc::clone(&drops))));
+            drop(held); // reader's clone outlives retirement safely
+        }
+        // slot dropped: current + any deferred retirees reclaimed
+        assert_eq!(drops.load(SeqCst), 12);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writer_agree() {
+        let slot = Arc::new(ArcSlot::new(Arc::new(0u64)));
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let slot = Arc::clone(&slot);
+                let stop = Arc::clone(&stop);
+                scope.spawn(move || {
+                    let mut last = 0u64;
+                    while !stop.load(SeqCst) {
+                        let v = *slot.load();
+                        // published values are monotone: a reader may
+                        // lag but never observe a rollback
+                        assert!(v >= last, "rollback: {v} < {last}");
+                        last = v;
+                    }
+                });
+            }
+            for v in 1..=1000u64 {
+                slot.store(Arc::new(v));
+            }
+            stop.store(true, SeqCst);
+        });
+        assert_eq!(*slot.load(), 1000);
+    }
+}

@@ -11,12 +11,30 @@
 //! Sessions live in a sharded [`SessionStore`]: trains on *different*
 //! sessions run truly concurrently across router workers (only same-
 //! session trains serialize, on that session's own mutex), and the
-//! predict batcher snapshots `(θ, Ω, b)` under the per-session lock and
-//! releases it *before* the PJRT batch executes or native per-row
-//! predicts run — no lock is held across *predict* device traffic. (A
-//! PJRT-backend train does hold its own session's lock across the chunk
-//! dispatch, serializing only that session.) See [`SessionStore`] for
-//! the full locking contract.
+//! predict path is **lock-free**: every train/flush/restore commit
+//! republishes the session's `(θ, Ω, b)` as a
+//! [`PredictState`](super::session::PredictState) into the session
+//! slot's wait-free publication cell
+//! ([`ArcSlot`](super::publish::ArcSlot)), and [`dispatch_predicts`]
+//! loads that published state without ever touching the session mutex
+//! (counted in [`ServiceStats::lockfree_predicts`]). A predict serves
+//! the state as of the last *completed* commit — exactly what the old
+//! snapshot-under-lock path served, minus the lock, so a predict storm
+//! never convoys behind a slow train and vice versa. (A PJRT-backend
+//! train does hold its own session's lock across the chunk dispatch,
+//! serializing only that session.) See [`SessionStore`] for the full
+//! locking contract.
+//!
+//! ## Epoch scheduling
+//!
+//! [`CoordinatorService::run_epoch`] bypasses the queue for offline /
+//! replay workloads: it takes one epoch of per-session traffic
+//! ([`SessionTraffic`]) and shards it across a work-stealing scheduler
+//! ([`crate::exec::run_stealing`]) with **sessions as the parallel
+//! unit** — each session's ops run sequentially in submission order on
+//! whichever worker claims them, so per-session trajectories are
+//! bitwise identical at any worker count while distinct sessions
+//! saturate every core.
 //!
 //! ## Stats semantics
 //!
@@ -47,12 +65,12 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, PoisonError};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::exec::BoundedQueue;
+use crate::exec::{run_stealing, BoundedQueue};
 use crate::kaf::MapRegistry;
 use crate::runtime::ExecutorHandle;
 
@@ -220,6 +238,50 @@ pub enum Response {
     Error(String),
 }
 
+/// One session's share of an epoch: its ops, executed **sequentially in
+/// this order** by whichever scheduler worker claims the session (see
+/// [`CoordinatorService::run_epoch`]).
+pub struct SessionTraffic {
+    /// Target session id.
+    pub session: u64,
+    /// The session's traffic, in submission order.
+    pub ops: Vec<EpochOp>,
+}
+
+/// One operation inside a [`SessionTraffic`].
+pub enum EpochOp {
+    /// Train on row-major `[n, dim]` inputs with `n` targets — the same
+    /// blocked batch kernels [`Request::TrainBatch`] runs.
+    TrainBatch {
+        /// Row-major `[n, dim]` inputs.
+        xs: Vec<f64>,
+        /// The `n` targets.
+        ys: Vec<f64>,
+    },
+    /// Predict over row-major `[n, dim]` probes, served off the
+    /// lock-free published [`PredictState`](super::session::PredictState)
+    /// — i.e. the state as of this session's last committed train op.
+    PredictBatch {
+        /// Row-major `[n, dim]` probes.
+        xs: Vec<f64>,
+    },
+}
+
+/// What one session's epoch produced, in op submission order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionEpochResult {
+    /// The session this result belongs to.
+    pub session: u64,
+    /// A-priori errors from every `TrainBatch`, concatenated.
+    pub errors: Vec<f64>,
+    /// Predictions from every `PredictBatch`, concatenated.
+    pub predictions: Vec<f64>,
+    /// First failure, if any — the session's remaining ops are skipped
+    /// (an epoch replay with a failed op is not a trajectory worth
+    /// continuing; other sessions are unaffected).
+    pub failed: Option<String>,
+}
+
 /// Counters exported by the service.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
@@ -239,6 +301,14 @@ pub struct ServiceStats {
     pub diffusion_rows: AtomicU64,
     /// Predictions served successfully (failures count under `errors`).
     pub predicted: AtomicU64,
+    /// Prediction **rows** served without touching any session mutex —
+    /// off the lock-free published [`PredictState`]
+    /// (see [`super::publish::ArcSlot`]). Every batched/epoch predict
+    /// now takes this path, so in steady state this tracks `predicted`;
+    /// it is kept separate so the lock-free property itself is
+    /// observable (a regression re-introducing a lock shows up as this
+    /// counter falling behind).
+    pub lockfree_predicts: AtomicU64,
     /// PJRT predict batches dispatched.
     pub predict_batches: AtomicU64,
     /// Total rows in dispatched predict batches (fill ratio = rows /
@@ -477,6 +547,93 @@ impl CoordinatorService {
         }
     }
 
+    /// Run one epoch of per-session traffic across `workers` threads via
+    /// the work-stealing scheduler ([`crate::exec::run_stealing`]),
+    /// bypassing the request queue — the offline/replay fast path.
+    ///
+    /// **Sessions are the parallel unit**: each [`SessionTraffic`] is one
+    /// schedulable task, its ops executed sequentially in submission
+    /// order, trains under the session lock (republishing the predict
+    /// state at every commit) and predicts off the lock-free published
+    /// state. Consequences:
+    ///
+    /// * Per-session trajectories (errors, predictions, `samples_seen`)
+    ///   are **bitwise identical at any worker count** — only the
+    ///   interleaving *across* sessions varies, and no result depends on
+    ///   it. (Asserted per tier/worker-count in
+    ///   `tests/epoch_determinism.rs`.)
+    /// * Throughput scales with the number of concurrently-trainable
+    ///   sessions; stealing rebalances heterogeneous sessions (a KRLS
+    ///   session costs ~D× a KLMS one per row) without any static
+    ///   partitioning. `BENCH_scaling.json` (`benches/scaling.rs`)
+    ///   records the rows/s × workers curve.
+    ///
+    /// Results come back in input order. Stats are updated exactly as the
+    /// queued paths would: `trained` by rows accepted, `predicted` /
+    /// `lockfree_predicts` by rows served, failures under `errors`.
+    pub fn run_epoch(
+        &self,
+        traffic: Vec<SessionTraffic>,
+        workers: usize,
+    ) -> Vec<SessionEpochResult> {
+        let sessions = &self.sessions;
+        let stats = &self.stats;
+        run_stealing(traffic, workers, |_, t| {
+            let mut res = SessionEpochResult {
+                session: t.session,
+                errors: Vec::new(),
+                predictions: Vec::new(),
+                failed: None,
+            };
+            let Some(cell) = sessions.get(t.session) else {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                res.failed = Some(format!("no session {}", t.session));
+                return res;
+            };
+            for op in t.ops {
+                match op {
+                    EpochOp::TrainBatch { xs, ys } => {
+                        let rows = ys.len() as u64;
+                        let mut s = cell.lock();
+                        match s.train_batch(&xs, &ys) {
+                            Ok(mut errs) => {
+                                cell.republish(&s);
+                                drop(s);
+                                stats.trained.fetch_add(rows, Ordering::Relaxed);
+                                res.errors.append(&mut errs);
+                            }
+                            Err(e) => {
+                                drop(s);
+                                stats.errors.fetch_add(1, Ordering::Relaxed);
+                                res.failed = Some(e.to_string());
+                                break;
+                            }
+                        }
+                    }
+                    EpochOp::PredictBatch { xs } => {
+                        let snap = cell.predict_handle();
+                        let dim = snap.dim();
+                        if xs.len() % dim != 0 {
+                            stats.errors.fetch_add(1, Ordering::Relaxed);
+                            res.failed = Some(format!(
+                                "predict probes ({} values) not a multiple of dim {dim}",
+                                xs.len()
+                            ));
+                            break;
+                        }
+                        let n = xs.len() / dim;
+                        let start = res.predictions.len();
+                        res.predictions.resize(start + n, 0.0);
+                        snap.predict_batch(&xs, &mut res.predictions[start..]);
+                        stats.predicted.fetch_add(n as u64, Ordering::Relaxed);
+                        stats.lockfree_predicts.fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                }
+            }
+            res
+        })
+    }
+
     /// Install a snapshot under `session` and wait for the confirmation.
     pub fn restore_sync(&self, session: u64, snapshot: String) -> Result<()> {
         let (tx, rx) = std::sync::mpsc::channel();
@@ -522,9 +679,15 @@ fn router_loop(
                     // other workers proceed in parallel
                     let out = match sessions.get(session) {
                         Some(cell) => {
-                            let mut s =
-                                cell.lock().unwrap_or_else(PoisonError::into_inner);
-                            s.train(&x, y).map(Response::Trained)
+                            let mut s = cell.lock();
+                            let r = s.train(&x, y).map(Response::Trained);
+                            if r.is_ok() {
+                                // commit: publish the new θ for the
+                                // lock-free predict path before releasing
+                                // the lock (and before responding)
+                                cell.republish(&s);
+                            }
+                            r
                         }
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
@@ -537,9 +700,12 @@ fn router_loop(
                     let rows = ys.len() as u64;
                     let out = match sessions.get(session) {
                         Some(cell) => {
-                            let mut s =
-                                cell.lock().unwrap_or_else(PoisonError::into_inner);
-                            s.train_batch(&xs, &ys).map(Response::Trained)
+                            let mut s = cell.lock();
+                            let r = s.train_batch(&xs, &ys).map(Response::Trained);
+                            if r.is_ok() {
+                                cell.republish(&s);
+                            }
+                            r
                         }
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
@@ -554,9 +720,12 @@ fn router_loop(
                     let rows = ys.len() as u64;
                     let out = match sessions.get(group) {
                         Some(cell) => {
-                            let mut s =
-                                cell.lock().unwrap_or_else(PoisonError::into_inner);
-                            s.train_diffusion(&xs, &ys).map(Response::Trained)
+                            let mut s = cell.lock();
+                            let r = s.train_diffusion(&xs, &ys).map(Response::Trained);
+                            if r.is_ok() {
+                                cell.republish(&s);
+                            }
+                            r
                         }
                         None => Err(anyhow::anyhow!("no session {group}")),
                     };
@@ -570,9 +739,12 @@ fn router_loop(
                 Request::Flush { session, resp } => {
                     let out = match sessions.get(session) {
                         Some(cell) => {
-                            let mut s =
-                                cell.lock().unwrap_or_else(PoisonError::into_inner);
-                            s.flush().map(Response::Trained)
+                            let mut s = cell.lock();
+                            let r = s.flush().map(Response::Trained);
+                            if r.is_ok() {
+                                cell.republish(&s);
+                            }
+                            r
                         }
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
@@ -649,10 +821,13 @@ fn respond(stats: &ServiceStats, tx: Sender<Response>, out: Result<Response>) {
 /// per group ([`super::session::PredictState::predict_batch`] over the
 /// worker's reusable scratch).
 ///
-/// Locking: each session is locked just long enough to snapshot
-/// `(θ, Ω, b)` ([`super::session::PredictState`]); the snapshot then
-/// serves the whole group with **no lock held** — a PJRT round-trip or a
-/// native batch never blocks trains on the same session.
+/// Locking: **none**. The session's `(θ, Ω, b)` is loaded from the
+/// lock-free published [`PredictState`](super::session::PredictState)
+/// (re-stored at every train commit — see
+/// [`super::publish::ArcSlot`]), so this function never acquires a
+/// session mutex: a predict burst proceeds at full speed even while the
+/// session is mid-train, serving the last committed state. Rows served
+/// this way count under [`ServiceStats::lockfree_predicts`].
 fn dispatch_predicts(
     sessions: &SessionStore,
     stats: &ServiceStats,
@@ -673,9 +848,9 @@ fn dispatch_predicts(
             }
             continue;
         };
-        // the lock guard is a temporary: it dies at the end of this
-        // statement, before any batch executes or native predict runs
-        let snap = cell.lock().unwrap_or_else(PoisonError::into_inner).predict_state();
+        // wait-free load of the state published at the last train
+        // commit — the session mutex is never touched on this path
+        let snap = cell.predict_handle();
         drop(cell); // release our cell ref so remove_session() can reclaim it
         let (dim, features) = (snap.dim(), snap.features());
         // reject dim-mismatched probes up front: both predict paths below
@@ -730,6 +905,9 @@ fn dispatch_predicts(
                         Ok(yhat) => {
                             stats.predict_batches.fetch_add(1, Ordering::Relaxed);
                             stats.predict_rows.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                            stats
+                                .lockfree_predicts
+                                .fetch_add(chunk.len() as u64, Ordering::Relaxed);
                             for (r, (_, tx)) in chunk.iter().enumerate() {
                                 stats.predicted.fetch_add(1, Ordering::Relaxed);
                                 let _ = tx.send(Response::Predicted(yhat[r] as f64));
@@ -759,6 +937,7 @@ fn dispatch_predicts(
                 }
                 let out = &mut scratch.out[..rows.len()];
                 snap.predict_batch(&scratch.xs, out);
+                stats.lockfree_predicts.fetch_add(rows.len() as u64, Ordering::Relaxed);
                 for ((_, tx), &v) in rows.into_iter().zip(out.iter()) {
                     stats.predicted.fetch_add(1, Ordering::Relaxed);
                     let _ = tx.send(Response::Predicted(v));
@@ -1073,6 +1252,119 @@ mod tests {
         let g = svc.remove_session(gid).unwrap();
         assert_eq!(g.samples_seen(), rows as usize);
         assert!(g.diffusion().is_some());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn predicts_serve_published_state_without_locks() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(30, 0);
+        let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let sid = svc.add_session(s);
+        let mut src = NonlinearWiener::new(run_rng(30, 1), 0.05);
+        let samples = src.take_samples(50);
+        // a fresh session already has a published state (θ = 0): a
+        // predict racing the very first train is valid, not a panic
+        assert_eq!(svc.predict_sync(sid, samples[0].x.clone()).unwrap(), 0.0);
+        for smp in &samples {
+            svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+        }
+        let served = svc.predict_sync(sid, samples[0].x.clone()).unwrap();
+        // both predicts went through the lock-free path...
+        assert_eq!(svc.stats().lockfree_predicts.load(Ordering::Relaxed), 2);
+        // ...and the second served exactly the last committed θ
+        let sess = svc.remove_session(sid).unwrap();
+        assert_eq!(served, sess.predict(&samples[0].x));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn run_epoch_is_deterministic_across_worker_counts() {
+        let make = || {
+            let svc = CoordinatorService::start(ServiceConfig::default(), None);
+            let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+            let ids: Vec<u64> = (0..6)
+                .map(|i| svc.add_session_from_spec(cfg.clone(), 9 + i).unwrap())
+                .collect();
+            (svc, ids)
+        };
+        let traffic_for = |ids: &[u64]| -> Vec<SessionTraffic> {
+            ids.iter()
+                .enumerate()
+                .map(|(k, &sid)| {
+                    let mut src = NonlinearWiener::new(run_rng(60 + k as u64, 1), 0.05);
+                    let mut ops = Vec::new();
+                    for _ in 0..3 {
+                        let batch = src.take_samples(15);
+                        let mut xs = Vec::new();
+                        let mut ys = Vec::new();
+                        for s in &batch {
+                            xs.extend_from_slice(&s.x);
+                            ys.push(s.y);
+                        }
+                        let probes: Vec<f64> =
+                            batch.iter().take(4).flat_map(|s| s.x.clone()).collect();
+                        ops.push(EpochOp::TrainBatch { xs, ys });
+                        // served off the state just committed above
+                        ops.push(EpochOp::PredictBatch { xs: probes });
+                    }
+                    SessionTraffic { session: sid, ops }
+                })
+                .collect()
+        };
+        let mut reference: Option<Vec<SessionEpochResult>> = None;
+        for workers in [1usize, 2, 8] {
+            let (svc, ids) = make();
+            let out = svc.run_epoch(traffic_for(&ids), workers);
+            assert_eq!(out.len(), ids.len());
+            for r in &out {
+                assert!(r.failed.is_none(), "workers={workers}: {:?}", r.failed);
+            }
+            // exact row accounting: 3 × 15 train rows and 3 × 4 predict
+            // rows per session, every predict via the lock-free path
+            assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 6 * 45);
+            assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 6 * 12);
+            assert_eq!(svc.stats().lockfree_predicts.load(Ordering::Relaxed), 6 * 12);
+            for &sid in &ids {
+                assert_eq!(svc.remove_session(sid).unwrap().samples_seen(), 45);
+            }
+            match &reference {
+                None => reference = Some(out),
+                // bitwise: errors AND predictions, every session
+                Some(want) => assert_eq!(&out, want, "workers={workers} diverged"),
+            }
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn run_epoch_reports_per_session_failures() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+        let sid = svc.add_session_from_spec(cfg, 3).unwrap();
+        let out = svc.run_epoch(
+            vec![
+                SessionTraffic {
+                    session: sid,
+                    ops: vec![
+                        // dim mismatch: fails, skipping the rest of THIS
+                        // session's ops only
+                        EpochOp::TrainBatch { xs: vec![0.0; 7], ys: vec![1.0] },
+                        EpochOp::PredictBatch { xs: vec![0.0; 5] },
+                    ],
+                },
+                SessionTraffic {
+                    session: 999, // unknown id
+                    ops: vec![EpochOp::PredictBatch { xs: vec![0.0; 5] }],
+                },
+            ],
+            2,
+        );
+        assert!(out[0].failed.is_some());
+        assert!(out[0].predictions.is_empty(), "ops after a failure must not run");
+        assert!(out[1].failed.as_deref().unwrap().contains("no session"));
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 0);
         svc.shutdown();
     }
 

@@ -23,8 +23,12 @@
 //!   lookup, len — and for the decode + re-insert of a spilled session
 //!   on touch (so a racing double-touch restores exactly once). Never
 //!   while training, predicting or dispatching.
-//! * **Session locks** are held for exactly one train/flush call, or just
-//!   long enough to snapshot predict state ([`super::session::PredictState`]).
+//! * **Session locks** are held for exactly one train/flush call —
+//!   which, before releasing, republishes the session's
+//!   [`PredictState`](super::session::PredictState) into the slot's
+//!   lock-free [`ArcSlot`](super::publish::ArcSlot). Predicts read that
+//!   published state ([`SessionSlot::predict_handle`]) and take **no
+//!   lock at all**.
 //! * **The eviction set** (`Mutex<BTreeSet<u64>>`) names sessions whose
 //!   spill is in flight: unlinked from their shard but not yet in the
 //!   sink. Touches of those ids spin briefly, then restore from the
@@ -34,17 +38,67 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::kaf::MapRegistry;
 use crate::runtime::ExecutorHandle;
 
-use super::session::FilterSession;
+use super::publish::ArcSlot;
+use super::session::{FilterSession, PredictState};
 use super::snapshot::{SessionSnapshot, SnapshotSink};
 
-/// A shared, mutably-lockable session slot handed out by the store.
+/// One session's residency unit: the mutable [`FilterSession`] behind
+/// its per-session mutex, plus the **lock-free published
+/// [`PredictState`]** — an [`ArcSlot`] the train path re-stores at every
+/// commit (train/flush/restore, under the session lock, *before*
+/// responding) and the predict path loads without ever touching the
+/// mutex. Predicts therefore never convoy behind a long train; what they
+/// serve is the state as of the last completed commit, which is exactly
+/// the consistency train/predict pipelines already had when predicts
+/// snapshotted under the lock.
+pub(crate) struct SessionSlot {
+    session: Mutex<FilterSession>,
+    published: ArcSlot<PredictState>,
+}
+
+impl SessionSlot {
+    /// Wrap a session, publishing its initial predict state (so a predict
+    /// racing the very first train still has something valid to serve).
+    pub(crate) fn new(session: FilterSession) -> Self {
+        let published = ArcSlot::new(Arc::new(session.predict_state()));
+        Self { session: Mutex::new(session), published }
+    }
+
+    /// Lock the session for train/flush/snapshot. Poison-absorbing: a
+    /// panicked trainer leaves θ mid-update at worst, which the next
+    /// commit overwrites wholesale.
+    pub(crate) fn lock(&self) -> MutexGuard<'_, FilterSession> {
+        self.session.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Publish `session`'s current predict state. Callers pass the
+    /// session they already hold locked — taking `&FilterSession` (rather
+    /// than locking internally) makes "republish happens under the
+    /// session lock, after the mutation, before the response" a
+    /// signature-level requirement.
+    pub(crate) fn republish(&self, session: &FilterSession) {
+        self.published.store(Arc::new(session.predict_state()));
+    }
+
+    /// The last published predict state — wait-free, no mutex.
+    pub(crate) fn predict_handle(&self) -> Arc<PredictState> {
+        self.published.load()
+    }
+
+    /// Consume the slot, returning the session by value.
+    fn into_session(self) -> FilterSession {
+        self.session.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// A shared session slot handed out by the store.
 /// Crate-private: see [`SessionStore::get`] for why cells never escape.
-pub(crate) type SessionCell = Arc<Mutex<FilterSession>>;
+pub(crate) type SessionCell = Arc<SessionSlot>;
 
 /// One resident session: its cell plus the LRU touch stamp (mutated only
 /// under the owning shard's lock).
@@ -194,7 +248,7 @@ impl SessionStore {
             }
             let prev = shard.insert(
                 id,
-                Resident { cell: Arc::new(Mutex::new(session)), last_touch: stamp },
+                Resident { cell: Arc::new(SessionSlot::new(session)), last_touch: stamp },
             );
             if prev.is_none() {
                 self.resident.fetch_add(1, Ordering::Relaxed);
@@ -258,7 +312,7 @@ impl SessionStore {
         match Self::decode(spill, &text) {
             Ok(session) => {
                 let _ = spill.sink.delete(id);
-                let cell = Arc::new(Mutex::new(session));
+                let cell = Arc::new(SessionSlot::new(session));
                 let stamp = self.tick();
                 shard.insert(id, Resident { cell: Arc::clone(&cell), last_touch: stamp });
                 self.resident.fetch_add(1, Ordering::Relaxed);
@@ -341,7 +395,7 @@ impl SessionStore {
                     drop(shard);
                     // shard lock released before the session lock, per the
                     // locking contract
-                    let session = cell.lock().unwrap_or_else(PoisonError::into_inner);
+                    let session = cell.lock();
                     return Some(session.snapshot().to_json());
                 }
                 let spill = self.spill.as_ref()?;
@@ -372,7 +426,7 @@ impl SessionStore {
         let mut spins = 0u32;
         loop {
             match Arc::try_unwrap(cell) {
-                Ok(m) => return m.into_inner().unwrap_or_else(PoisonError::into_inner),
+                Ok(slot) => return slot.into_session(),
                 Err(still_shared) => {
                     cell = still_shared;
                     Self::backoff(&mut spins);
@@ -446,7 +500,7 @@ impl SessionStore {
             self.shard_for(id)
                 .lock()
                 .unwrap_or_else(PoisonError::into_inner)
-                .insert(id, Resident { cell: Arc::new(Mutex::new(session)), last_touch: stamp });
+                .insert(id, Resident { cell: Arc::new(SessionSlot::new(session)), last_touch: stamp });
             self.resident.fetch_add(1, Ordering::Relaxed);
         }
         self.evicting.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
@@ -566,7 +620,7 @@ mod tests {
                     let cell = store.get(id).unwrap();
                     let mut src = NonlinearWiener::new(run_rng(id, 1), 0.05);
                     for smp in src.take_samples(200) {
-                        cell.lock().unwrap().train(&smp.x, smp.y).unwrap();
+                        cell.lock().train(&smp.x, smp.y).unwrap();
                     }
                 })
             })
@@ -585,7 +639,7 @@ mod tests {
         store.insert(1, session(9));
         let cell = store.get(1).unwrap();
         let borrower = std::thread::spawn(move || {
-            let guard = cell.lock().unwrap();
+            let guard = cell.lock();
             std::thread::sleep(std::time::Duration::from_millis(30));
             drop(guard);
             // `cell` drops here, releasing the last outside reference
@@ -618,7 +672,7 @@ mod tests {
         let samples = src.take_samples(20);
         for smp in &samples {
             let cell = store.get(0).unwrap();
-            cell.lock().unwrap().train(&smp.x, smp.y).unwrap();
+            cell.lock().train(&smp.x, smp.y).unwrap();
         }
         assert_eq!(stats.restores.load(Ordering::Relaxed), 1);
         assert_eq!(store.resident_count(), 2);

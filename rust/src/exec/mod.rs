@@ -1,17 +1,21 @@
-//! Execution substrate: a small thread pool with scoped parallel-for and
-//! bounded MPMC work queues.
+//! Execution substrate: a small thread pool with scoped parallel-for,
+//! bounded MPMC work queues, and a work-stealing batch scheduler.
 //!
 //! The offline vendor set has no `tokio`/`rayon`, so this module provides
 //! the concurrency the coordinator and the Monte-Carlo orchestrator need:
 //! [`ThreadPool`] for long-lived workers, [`parallel_for`] for data-
-//! parallel loops (MC runs), and [`BoundedQueue`] for backpressure-aware
-//! pipeline stages.
+//! parallel loops (MC runs), [`run_stealing`] for deque-based
+//! work-stealing over heterogeneous task sets (the coordinator's
+//! cross-session epoch scheduler), and [`BoundedQueue`] for
+//! backpressure-aware pipeline stages.
 
 mod pool;
 mod queue;
+mod scheduler;
 
 pub use pool::ThreadPool;
 pub use queue::{BoundedQueue, QueueClosed};
+pub use scheduler::run_stealing;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

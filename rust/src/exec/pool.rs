@@ -2,17 +2,36 @@
 //! the coordinator's session workers (tokio substitute for this offline
 //! environment; semantics: spawn-and-forget jobs plus graceful join).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+type Pending = Arc<(Mutex<usize>, Condvar)>;
+
+/// Decrements the pending count (and wakes waiters) on drop, so a job
+/// that panics still gets accounted for — without this, `wait_idle` /
+/// `Drop` waiters would hang forever on the never-decremented count.
+/// The mutex may be poisoned by a panicking *waiter*; the count itself
+/// stays coherent (it is only touched under the lock), so the guard
+/// absorbs the poison rather than double-panicking on a worker thread.
+struct PendingGuard<'a>(&'a Pending);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cvar) = &**self.0;
+        let mut p = lock.lock().unwrap_or_else(PoisonError::into_inner);
+        *p -= 1;
+        cvar.notify_all();
+    }
+}
 
 /// Fixed-size thread pool.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Pending,
 }
 
 impl ThreadPool {
@@ -21,7 +40,7 @@ impl ThreadPool {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending: Pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         let workers = (0..size)
             .map(|i| {
                 let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
@@ -35,11 +54,11 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                let (lock, cvar) = &*pending;
-                                let mut p = lock.lock().unwrap();
-                                *p -= 1;
-                                cvar.notify_all();
+                                // the guard decrements even if the job
+                                // panics (the unwind is contained so the
+                                // worker survives for the next job)
+                                let _guard = PendingGuard(&pending);
+                                let _ = catch_unwind(AssertUnwindSafe(job));
                             }
                             Err(_) => break, // channel closed: shut down
                         }
@@ -55,11 +74,13 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Submit a job for execution.
+    /// Submit a job for execution. A job that panics is contained by
+    /// the worker (its pending slot is released via a drop guard); the
+    /// pool stays usable and `wait_idle`/`Drop` still return.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+            *lock.lock().unwrap_or_else(PoisonError::into_inner) += 1;
         }
         self.tx
             .as_ref()
@@ -68,12 +89,13 @@ impl ThreadPool {
             .expect("worker channel closed");
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished (including jobs
+    /// that finished by panicking).
     pub fn wait_idle(&self) {
         let (lock, cvar) = &*self.pending;
-        let mut p = lock.lock().unwrap();
+        let mut p = lock.lock().unwrap_or_else(PoisonError::into_inner);
         while *p > 0 {
-            p = cvar.wait(p).unwrap();
+            p = cvar.wait(p).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -132,5 +154,40 @@ mod tests {
     #[test]
     fn size_clamped_to_one() {
         assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn wait_idle_returns_after_a_panicked_job() {
+        // regression: the pending decrement used to live *after* the
+        // job call, so a panicking job skipped it and wait_idle (and
+        // Drop) hung forever on the never-zero count
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("job panics on purpose"));
+        pool.wait_idle(); // must not hang
+        // the pool stays usable: the worker contained the unwind
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn drop_joins_after_panicked_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(1);
+            pool.execute(|| panic!("first job panics"));
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+            // drop without explicit wait: join must complete
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
     }
 }

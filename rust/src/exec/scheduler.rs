@@ -1,0 +1,179 @@
+//! Work-stealing batch scheduler: shard a fixed set of independent
+//! tasks over `workers` threads with per-worker deques plus stealing.
+//!
+//! This is the cross-session parallelism layer the coordinator's
+//! [`run_epoch`](crate::coordinator::CoordinatorService::run_epoch)
+//! rides on: **sessions are the parallel unit** — one task is one
+//! session's whole epoch of traffic, executed row-sequentially inside
+//! the task — so a single client driving N sessions saturates every
+//! core while each per-session trajectory stays bitwise-identical to a
+//! serial replay (determinism is a property of the task closure, which
+//! the scheduler never subdivides; only the *interleaving across*
+//! sessions varies run to run, and that interleaving is invisible in
+//! the results).
+//!
+//! ## Shape
+//!
+//! * Tasks are seeded **round-robin** across per-worker deques (task
+//!   `i` → deque `i % workers`), so a balanced workload never steals.
+//! * A worker pops from the **front** of its own deque (FIFO — its
+//!   seeded tasks in submission order) and, when empty, scans the other
+//!   deques and steals from the **back** (the classic Chase–Lev
+//!   orientation, here with plain mutexed `VecDeque`s: the deques hold
+//!   a handful of session-sized tasks, so lock traffic is negligible
+//!   against task granularity).
+//! * Termination: the task set is fixed up front — no task spawns new
+//!   work — so a worker may exit as soon as its own deque is empty and
+//!   one full sweep over the other deques finds nothing to steal.
+//! * Results land in a preallocated slot per task: output order equals
+//!   input order regardless of which worker ran what.
+//!
+//! Scoped threads keep the API borrow-friendly (`f` may capture `&mut`
+//! free state per task through its arguments; the scheduler itself only
+//! requires `Sync` closures). A panicking task aborts via unwind into
+//! the scope (propagated after all workers join) — the deliberate
+//! contrast with [`ThreadPool`](super::ThreadPool)'s contained jobs:
+//! epoch tasks are deterministic replays, so a panic is a programming
+//! error worth surfacing loudly.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Run `f` over every task on `workers` threads with work stealing;
+/// returns the results in input order. `workers` is clamped to
+/// `1..=tasks.len()` (a 0/1-worker call or a 0/1-task set degenerates
+/// to the serial loop, same results by construction).
+///
+/// `f` is called exactly once per task as `f(index, task)` where
+/// `index` is the task's position in the input vector.
+pub fn run_stealing<T, R, F>(tasks: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return tasks.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    // per-worker deques, seeded round-robin in submission order
+    let deques: Vec<Mutex<VecDeque<(usize, T)>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        deques[i % workers].lock().unwrap().push_back((i, t));
+    }
+
+    // one Option slot per task: every slot is written exactly once
+    // (each (index, task) pair lives in exactly one deque entry)
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let deques = &deques;
+            let slots = &slots;
+            let f = &f;
+            scope.spawn(move || loop {
+                // own deque first, front pop: seeded order
+                let own = deques[w].lock().unwrap().pop_front();
+                let job = match own {
+                    Some(job) => Some(job),
+                    None => {
+                        // full sweep over the other deques, back steal
+                        let mut stolen = None;
+                        for o in 1..workers {
+                            let v = (w + o) % workers;
+                            if let Some(job) = deques[v].lock().unwrap().pop_back() {
+                                stolen = Some(job);
+                                break;
+                            }
+                        }
+                        stolen
+                    }
+                };
+                match job {
+                    Some((i, t)) => {
+                        let r = f(i, t);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
+                    // own deque empty and a full steal sweep found
+                    // nothing: since no task spawns work, nothing will
+                    // ever appear again — exit
+                    None => break,
+                }
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .expect("no worker panicked while holding a result slot")
+                .expect("every task ran exactly once")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_are_in_input_order_for_all_worker_counts() {
+        for workers in [1usize, 2, 3, 8, 64] {
+            let tasks: Vec<u64> = (0..37).collect();
+            let out = run_stealing(tasks, workers, |i, t| {
+                assert_eq!(i as u64, t);
+                t * t
+            });
+            let want: Vec<u64> = (0..37).map(|t| t * t).collect();
+            assert_eq!(out, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let hits = AtomicUsize::new(0);
+        let out = run_stealing((0..100).collect::<Vec<usize>>(), 8, |_, t| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            t
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+        assert_eq!(out.iter().copied().collect::<HashSet<_>>().len(), 100);
+    }
+
+    #[test]
+    fn imbalanced_tasks_still_complete() {
+        // one long task seeded on worker 0; the short ones behind it
+        // must get stolen by the idle workers rather than waiting
+        let out = run_stealing((0..16).collect::<Vec<u64>>(), 4, |_, t| {
+            if t % 4 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            t + 1
+        });
+        assert_eq!(out, (1..=16).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        assert_eq!(run_stealing(Vec::<u8>::new(), 4, |_, t| t), Vec::<u8>::new());
+        assert_eq!(run_stealing(vec![7u8], 0, |_, t| t), vec![7]);
+        // more workers than tasks: clamped, still correct
+        assert_eq!(run_stealing(vec![1u8, 2], 16, |_, t| t * 10), vec![10, 20]);
+    }
+
+    #[test]
+    fn tasks_may_borrow_shared_state() {
+        let base = vec![10usize, 20, 30, 40, 50];
+        let out = run_stealing((0..5).collect::<Vec<usize>>(), 3, |i, t| base[i] + t);
+        assert_eq!(out, vec![10, 21, 32, 43, 54]);
+    }
+}

@@ -374,12 +374,16 @@ impl FeatureMap {
 
     /// The feature epilogue for the lane starting at `i0`: uniform-scale
     /// cosines for the RFF kinds (the pre-family expression, bitwise),
-    /// per-feature-weighted cosines for quadrature.
+    /// per-feature-weighted cosines for quadrature. Takes the dispatch
+    /// tier explicitly — the batch kernels hoist
+    /// [`simd::active_tier`] out of their row/lane loops and thread it
+    /// through here (every tier is bitwise-identical, so the hoist is
+    /// purely a dispatch-overhead optimization).
     #[inline]
-    fn cos_lane(&self, args: &[f64; LANES], i0: usize) -> [f64; LANES] {
+    fn cos_lane(&self, tier: simd::SimdTier, args: &[f64; LANES], i0: usize) -> [f64; LANES] {
         match &self.weights {
-            None => simd::scaled_cos_lanes(args, self.scale),
-            Some(w) => simd::weighted_cos_lanes(args, &w[i0..i0 + LANES]),
+            None => simd::scaled_cos_lanes_tier(tier, args, self.scale),
+            Some(w) => simd::weighted_cos_lanes_tier(tier, args, &w[i0..i0 + LANES]),
         }
     }
 
@@ -400,8 +404,9 @@ impl FeatureMap {
         debug_assert_eq!(x.len(), self.dim);
         debug_assert_eq!(theta.len(), self.features);
         let d = self.dim;
+        let tier = simd::active_tier();
         for i in 0..self.features {
-            let arg = simd::phase_arg(&self.omega_t, &self.phases, x, i);
+            let arg = simd::phase_arg_tier(tier, &self.omega_t, &self.phases, x, i);
             let g = mu_omega * e * theta[i] * self.scale * arg.sin();
             let w = &mut self.omega_t[i * d..(i + 1) * d];
             for (wk, &xk) in w.iter_mut().zip(x) {
@@ -466,15 +471,16 @@ impl FeatureMap {
         debug_assert_eq!(out.len(), self.features);
         let feats = self.features;
         let lane_end = feats - feats % LANES;
+        let tier = simd::active_tier(); // hoisted: one dispatch per call
         let mut i0 = 0;
         while i0 < lane_end {
-            let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
-            out[i0..i0 + LANES].copy_from_slice(&self.cos_lane(&args, i0));
+            let args = simd::phase_args_lane_tier(tier, &self.omega_t, &self.phases, x, i0);
+            out[i0..i0 + LANES].copy_from_slice(&self.cos_lane(tier, &args, i0));
             i0 += LANES;
         }
         for i in lane_end..feats {
             out[i] = self.feature_weight(i)
-                * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
+                * simd::fast_cos(simd::phase_arg_tier(tier, &self.omega_t, &self.phases, x, i));
         }
     }
 
@@ -499,11 +505,12 @@ impl FeatureMap {
         debug_assert_eq!(out.len(), self.features);
         let feats = self.features;
         let lane_end = feats - feats % LANES;
+        let tier = simd::active_tier(); // hoisted: one dispatch per call
         let mut acc = 0.0;
         let mut i0 = 0;
         while i0 < lane_end {
-            let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
-            let zl = self.cos_lane(&args, i0);
+            let args = simd::phase_args_lane_tier(tier, &self.omega_t, &self.phases, x, i0);
+            let zl = self.cos_lane(tier, &args, i0);
             out[i0..i0 + LANES].copy_from_slice(&zl);
             for l in 0..LANES {
                 acc += theta[i0 + l] * zl[l];
@@ -512,7 +519,7 @@ impl FeatureMap {
         }
         for i in lane_end..feats {
             let z = self.feature_weight(i)
-                * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
+                * simd::fast_cos(simd::phase_arg_tier(tier, &self.omega_t, &self.phases, x, i));
             out[i] = z;
             acc += theta[i] * z;
         }
@@ -555,6 +562,7 @@ impl FeatureMap {
             debug_assert_eq!(yhat.len(), n);
         }
         let lane_end = feats - feats % LANES;
+        let tier = simd::active_tier(); // hoisted: one dispatch per batch
         let mut r0 = 0;
         while r0 < n {
             let bn = ROW_BLOCK.min(n - r0);
@@ -568,8 +576,8 @@ impl FeatureMap {
                 }
                 for r in 0..bn {
                     let x = &xb[r * d..(r + 1) * d];
-                    let args = simd::phase_args_lane(&self.omega_t, &self.phases, x, i0);
-                    let zl = self.cos_lane(&args, i0);
+                    let args = simd::phase_args_lane_tier(tier, &self.omega_t, &self.phases, x, i0);
+                    let zl = self.cos_lane(tier, &args, i0);
                     if STORE_Z {
                         let row = (r0 + r) * feats;
                         z[row + i0..row + i0 + LANES].copy_from_slice(&zl);
@@ -591,7 +599,13 @@ impl FeatureMap {
                 for r in 0..bn {
                     let x = &xb[r * d..(r + 1) * d];
                     let zi = wi
-                        * simd::fast_cos(simd::phase_arg(&self.omega_t, &self.phases, x, i));
+                        * simd::fast_cos(simd::phase_arg_tier(
+                            tier,
+                            &self.omega_t,
+                            &self.phases,
+                            x,
+                            i,
+                        ));
                     if STORE_Z {
                         z[(r0 + r) * feats + i] = zi;
                     }

@@ -1,41 +1,76 @@
-//! Lane-oriented SIMD substrate: fixed-width `[f64; LANES]` chunk
-//! kernels for every hot loop in the crate (stable Rust, no intrinsics —
-//! the fixed-size-array loops are the shape LLVM's auto-vectorizer
-//! reliably turns into vector code under `-C opt-level=3`, with or
-//! without `-C target-cpu=native`).
+//! Lane-oriented SIMD substrate with **runtime dispatch tiers**: every
+//! hot loop in the crate runs through these fixed-width `[f64; LANES]`
+//! chunk kernels, and each kernel exists in up to three bodies —
 //!
-//! Every caller that used to walk features one scalar at a time — the
-//! RFF map ([`RffMap::apply_into`](crate::kaf::FeatureMap::apply_into) /
-//! [`apply_dot_into`](crate::kaf::FeatureMap::apply_dot_into) / the blocked
-//! batch kernels), the packed-triangular KRLS recursion, and the
-//! coordinator's f32 native-step kernels — now runs its inner loop
-//! through these primitives, so serving and training share one vector
-//! code path.
+//! * **portable** — stable-Rust fixed-size-array loops (the shape LLVM's
+//!   auto-vectorizer reliably turns into vector code). This is the
+//!   **contract-defining fallback**: the other tiers are correct iff
+//!   they reproduce its results bitwise.
+//! * **AVX2** (`x86_64`) — explicit `core::arch` 256-bit kernels for the
+//!   full hot set: `fast_cos_lanes` / the cos epilogues,
+//!   `phase_args_lane` (d = 1 / d = 2 deinterleave specializations),
+//!   `dot` + the mixed-precision f32 variants, `axpy`, the f32
+//!   write-backs, and `packed_rank1_scaled`. `packed_symv` composes the
+//!   tier's `dot`/`axpy` row sweeps.
+//! * **AVX-512** (`x86_64`, requires `avx512f` *and* `avx2`) — 512-bit
+//!   accumulate kernels (`dot`, mixed dots, `axpy`,
+//!   `packed_rank1_scaled`); the transcendental/shuffle-heavy kernels
+//!   delegate to the AVX2 bodies. **NEON** (`aarch64`) — 2×f64 kernels
+//!   for `dot`/`axpy`; everything else portable.
 //!
-//! ## Accumulation-order contract
+//! ## Detection and dispatch
 //!
-//! Bitwise parity between the per-row, batched, and coordinator paths
-//! (asserted by `tests/batch_parity.rs`, `tests/snapshot_parity.rs` and
-//! `tests/lane_tails.rs`) rests on two documented orders:
+//! [`active_tier`] picks the best tier **once** per process
+//! (`OnceLock`) via `is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!`; the `RFF_KAF_SIMD_TIER` environment
+//! variable (`portable` / `neon` / `avx2` / `avx512`) pins a tier for
+//! A/B runs and is ignored when the named tier is not available. Public
+//! kernels (`dot(..)`, `fast_cos_lanes(..)`, …) dispatch on
+//! [`active_tier`]; every dispatched kernel also has a `*_tier(tier, …)`
+//! twin so batch loops can hoist the tier choice out of the row loop and
+//! parity tests can drive one tier explicitly. A `*_tier` call with a
+//! tier the running CPU does not support falls back to portable instead
+//! of executing unavailable instructions, so the `*_tier` family stays
+//! safe. [`available_tiers`] enumerates what the CPU offers (always
+//! including `Portable`); [`cpu_feature_summary`] renders the detection
+//! result for bench metadata.
+//!
+//! ## Accumulation-order contract (all tiers)
+//!
+//! Bitwise parity between the per-row, batched, snapshot and
+//! coordinator paths (asserted by `tests/batch_parity.rs`,
+//! `tests/snapshot_parity.rs`, `tests/diffusion_parity.rs` and the
+//! dispatch-parity suite in `tests/lane_tails.rs`) rests on documented
+//! orders that **every tier must reproduce exactly**:
 //!
 //! * [`dot`] (and the mixed-precision variants) accumulate into `LANES`
 //!   partial sums — lane `l` takes elements `l, l+LANES, l+2·LANES, …` —
-//!   reduced by a fixed pairwise tree, then a strictly sequential scalar
-//!   tail. Deterministic for a given length, but **not** the same
-//!   grouping as a sequential sum.
+//!   reduced by the fixed pairwise tree of [`reduce_lanes` semantics]
+//!   (`acc[l] += acc[l+width]`, width `LANES/2 → 1`), then a strictly
+//!   sequential scalar tail. The AVX2 body keeps the 8 lane accumulators
+//!   in two 256-bit registers, the AVX-512 body in one 512-bit register,
+//!   the NEON body in four 2-lane registers — in all cases lane `l`
+//!   sees the identical `acc += a·b` sequence, and the registers are
+//!   stored back to `[f64; LANES]` and reduced by the same tree.
 //! * [`seq_dot`] is strictly sequential (single accumulator, index
-//!   ascending). This is exactly the order in which the fused kernels
-//!   accumulate `ŷ = θᵀz` (lane chunks ascending, elements within a
-//!   lane ascending — which *is* plain index-ascending order), so the
-//!   batched train paths use `seq_dot` for their a-priori predictions
-//!   and land bitwise on the per-row trajectory.
+//!   ascending) and intentionally has **no** vector body in any tier —
+//!   its order *is* its contract (the fused `ŷ = θᵀz` order of the
+//!   batch kernels).
+//! * **No FMA, anywhere.** The portable bodies write `mul` then `add`
+//!   as separate operations and rustc does not contract them; the
+//!   intrinsic bodies therefore use `_mm256_mul_pd` + `_mm256_add_pd`
+//!   (never `_mm256_fmadd_pd`) even on FMA-capable parts, because a
+//!   fused multiply-add rounds once where the contract rounds twice.
+//!   The same discipline applies to the cos polynomial evaluation: the
+//!   AVX2 [`fast_cos`] body mirrors the scalar Cody–Waite reduction and
+//!   Horner nesting operation for operation.
 //!
 //! Lane kernels and their scalar tails evaluate the *same expression
 //! per element* (the lane cos is [`fast_cos`] applied per lane; the lane
 //! phase-dot matches [`phase_arg`] bitwise, including the tiny-d
 //! specializations), so a result never depends on where the lane/tail
 //! boundary falls — `tests/lane_tails.rs` pins this with `D`, `n`
-//! coprime to `LANES`.
+//! coprime to `LANES`, per tier.
 //!
 //! ## Packed upper-triangular symmetric storage
 //!
@@ -49,22 +84,148 @@
 //! the dense update (the dominant O(D²) cost of the KRLS step); the
 //! matvec still performs ~n² multiply-adds (a matvec must) but reads
 //! each stored element once for its two uses, halving memory traffic.
+//!
+//! [`reduce_lanes` semantics]: self#accumulation-order-contract-all-tiers
 
-/// Lane width of the substrate: 8 × f64 = one AVX-512 register or two
-/// AVX2 registers per chunk. Chosen over 4 because the `fast_cos`
-/// polynomial has enough ILP to keep two 256-bit pipes busy; see
-/// EXPERIMENTS.md §Perf for the sweep protocol (any power of two
-/// works — the whole tree, reduction included, adapts).
+use std::sync::OnceLock;
+
+/// Lane width of the substrate: 8 × f64 = one AVX-512 register, two
+/// AVX2 registers, or four NEON registers per chunk. Chosen over 4
+/// because the `fast_cos` polynomial has enough ILP to keep two 256-bit
+/// pipes busy; see EXPERIMENTS.md §Perf for the sweep protocol (any
+/// power of two works — the whole tree, reduction included, adapts).
 pub const LANES: usize = 8;
 
 // The pairwise reduction halves the accumulator array, so the width
 // must be a power of two.
 const _: () = assert!(LANES.is_power_of_two());
 
+// ---- dispatch tiers -----------------------------------------------------
+
+/// One runtime-dispatched kernel family. Ordering is "capability
+/// ascending" (`Portable < Neon < Avx2 < Avx512`) only in the sense of
+/// expected throughput — every tier computes bitwise-identical results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SimdTier {
+    /// Autovectorized fixed-size-array loops — always available, and the
+    /// contract the other tiers are tested against.
+    Portable,
+    /// aarch64 NEON 2×f64 kernels (`dot`/`axpy`; the rest portable).
+    Neon,
+    /// x86_64 AVX2 256-bit kernels — the full hot set.
+    Avx2,
+    /// x86_64 AVX-512 accumulate kernels (`avx512f`); shuffle/cos
+    /// kernels delegate to the AVX2 bodies, so this tier requires
+    /// `avx2` as well.
+    Avx512,
+}
+
+impl SimdTier {
+    /// Stable lowercase name (also the accepted `RFF_KAF_SIMD_TIER`
+    /// values), used in bench metadata and test labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Portable => "portable",
+            SimdTier::Neon => "neon",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "portable" => Some(SimdTier::Portable),
+            "neon" => Some(SimdTier::Neon),
+            "avx2" => Some(SimdTier::Avx2),
+            "avx512" | "avx512f" => Some(SimdTier::Avx512),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every tier the running CPU can execute, capability ascending;
+/// `Portable` is always present (and always first). The dispatch-parity
+/// suite iterates this to pin each available tier against portable.
+pub fn available_tiers() -> Vec<SimdTier> {
+    let mut tiers = vec![SimdTier::Portable];
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            tiers.push(SimdTier::Neon);
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            tiers.push(SimdTier::Avx2);
+            if is_x86_feature_detected!("avx512f") {
+                tiers.push(SimdTier::Avx512);
+            }
+        }
+    }
+    tiers
+}
+
+/// The process-wide dispatch tier: the most capable available tier,
+/// detected once (`OnceLock`), overridable by setting
+/// `RFF_KAF_SIMD_TIER` (see [`SimdTier::name`]) *before the first
+/// kernel call*. An override naming an unavailable tier is ignored.
+pub fn active_tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        let avail = available_tiers();
+        let best = *avail.last().expect("Portable is always available");
+        match std::env::var("RFF_KAF_SIMD_TIER") {
+            Ok(v) => match SimdTier::from_name(&v) {
+                Some(t) if avail.contains(&t) => t,
+                _ => best,
+            },
+            Err(_) => best,
+        }
+    })
+}
+
+/// Human-readable detection summary for `BENCH_*.json` metadata:
+/// architecture plus the features the dispatch layer actually probes.
+pub fn cpu_feature_summary() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, on) in [
+            ("avx2", is_x86_feature_detected!("avx2")),
+            ("fma", is_x86_feature_detected!("fma")),
+            ("avx512f", is_x86_feature_detected!("avx512f")),
+        ] {
+            if on {
+                feats.push(name);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            feats.push("neon");
+        }
+    }
+    if feats.is_empty() {
+        format!("{}: (no simd features detected)", std::env::consts::ARCH)
+    } else {
+        format!("{}: {}", std::env::consts::ARCH, feats.join(" "))
+    }
+}
+
+// ---- shared reduction ---------------------------------------------------
+
 /// Reduce a lane of partial accumulators by the fixed halving tree
 /// (`acc[l] += acc[l + width]`, width `LANES/2 → 1`) — deterministic
 /// for a given `LANES`, and the single reduction order every lane dot
-/// shares.
+/// (in every tier) shares.
 #[inline]
 fn reduce_lanes(mut acc: [f64; LANES]) -> f64 {
     let mut width = LANES / 2;
@@ -80,10 +241,15 @@ fn reduce_lanes(mut acc: [f64; LANES]) -> f64 {
     acc[0]
 }
 
+// ---- dispatched kernels -------------------------------------------------
+
 /// Fast cosine, |err| < 2e-8 for |x| < 2^20 (range-reduced minimax
 /// poly). Branch-free except the final quadrant select (compiles to
 /// cmov/blend), so [`fast_cos_lanes`] vectorizes. This is the scalar
-/// tail-path primitive; hot loops should consume whole lanes.
+/// tail-path primitive; hot loops should consume whole lanes. The AVX2
+/// lane body mirrors this routine operation for operation (same
+/// Cody–Waite split, same Horner nesting, separate mul/add — no FMA),
+/// so lane and tail values agree bitwise in every tier.
 ///
 /// Strategy: reduce to `r ∈ [-π/4, π/4]` with quadrant index, evaluate
 /// the sin/cos minimax polynomials, pick by quadrant.
@@ -124,42 +290,71 @@ pub fn fast_cos(x: f64) -> f64 {
     if negate { -mag } else { mag }
 }
 
-/// [`fast_cos`] applied to a whole lane. Element `l` of the result is
-/// bitwise `fast_cos(args[l])` — same ops, evaluated `LANES`-wide, so
-/// lane and tail paths can never disagree.
+/// [`fast_cos`] applied to a whole lane on the active tier. Element `l`
+/// of the result is bitwise `fast_cos(args[l])` — same ops evaluated
+/// `LANES`-wide, so lane and tail paths can never disagree.
 #[inline]
 pub fn fast_cos_lanes(args: &[f64; LANES]) -> [f64; LANES] {
-    let mut out = [0.0; LANES];
-    for l in 0..LANES {
-        out[l] = fast_cos(args[l]);
-    }
-    out
+    fast_cos_lanes_tier(active_tier(), args)
 }
 
-/// `scale * fast_cos(args[l])` per lane — the RFF feature epilogue.
+/// [`fast_cos_lanes`] on an explicit tier (falls back to portable when
+/// `tier` is unavailable on the running CPU).
+#[inline]
+pub fn fast_cos_lanes_tier(tier: SimdTier, args: &[f64; LANES]) -> [f64; LANES] {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 | SimdTier::Avx512 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::fast_cos_lanes_avx2(args) }
+        }
+        _ => portable::fast_cos_lanes(args),
+    }
+}
+
+/// `scale * fast_cos(args[l])` per lane — the RFF feature epilogue —
+/// on the active tier.
 #[inline]
 pub fn scaled_cos_lanes(args: &[f64; LANES], scale: f64) -> [f64; LANES] {
-    let mut out = fast_cos_lanes(args);
-    for v in &mut out {
-        *v *= scale;
+    scaled_cos_lanes_tier(active_tier(), args, scale)
+}
+
+/// [`scaled_cos_lanes`] on an explicit tier.
+#[inline]
+pub fn scaled_cos_lanes_tier(tier: SimdTier, args: &[f64; LANES], scale: f64) -> [f64; LANES] {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 | SimdTier::Avx512 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::scaled_cos_lanes_avx2(args, scale) }
+        }
+        _ => portable::scaled_cos_lanes(args, scale),
     }
-    out
 }
 
 /// `w[l] * fast_cos(args[l])` per lane — the per-feature-weight feature
-/// epilogue (quadrature maps carry a distinct weight per feature instead
-/// of the uniform `sqrt(2/D)`). `w` is the `LANES`-long weight slice for
-/// the lane's features; the tail-path twin is
-/// `w[i] * fast_cos(phase_arg(..))`, which evaluates the identical
-/// per-element expression.
+/// epilogue (quadrature maps carry a distinct weight per feature
+/// instead of the uniform `sqrt(2/D)`) — on the active tier. `w` is the
+/// `LANES`-long weight slice for the lane's features; the tail-path
+/// twin is `w[i] * fast_cos(phase_arg(..))`, which evaluates the
+/// identical per-element expression.
 #[inline]
 pub fn weighted_cos_lanes(args: &[f64; LANES], w: &[f64]) -> [f64; LANES] {
+    weighted_cos_lanes_tier(active_tier(), args, w)
+}
+
+/// [`weighted_cos_lanes`] on an explicit tier.
+#[inline]
+pub fn weighted_cos_lanes_tier(tier: SimdTier, args: &[f64; LANES], w: &[f64]) -> [f64; LANES] {
     debug_assert_eq!(w.len(), LANES);
-    let mut out = fast_cos_lanes(args);
-    for (v, &wi) in out.iter_mut().zip(w) {
-        *v *= wi;
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 | SimdTier::Avx512 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::weighted_cos_lanes_avx2(args, w) }
+        }
+        _ => portable::weighted_cos_lanes(args, w),
     }
-    out
 }
 
 /// Scalar phase argument `ω_iᵀx + b_i` of feature `i` — the tail-path
@@ -167,73 +362,90 @@ pub fn weighted_cos_lanes(args: &[f64; LANES], w: &[f64]) -> [f64; LANES] {
 /// lane specializations) the two produce bitwise-identical values.
 #[inline]
 pub fn phase_arg(omega_t: &[f64], phases: &[f64], x: &[f64], i: usize) -> f64 {
-    let d = x.len();
-    dot(&omega_t[i * d..(i + 1) * d], x) + phases[i]
+    phase_arg_tier(active_tier(), omega_t, phases, x, i)
 }
 
-/// Fused dot+phase lane: `args[l] = ω_{i0+l}ᵀx + b_{i0+l}` for one lane
-/// of `LANES` consecutive features out of feature-major `omega_t`.
-/// Caller guarantees `i0 + LANES <= features`.
+/// [`phase_arg`] on an explicit tier (the inner dot dispatches on
+/// `tier`; all tiers agree bitwise, so mixing tiers between lane and
+/// tail is also safe).
+#[inline]
+pub fn phase_arg_tier(tier: SimdTier, omega_t: &[f64], phases: &[f64], x: &[f64], i: usize) -> f64 {
+    let d = x.len();
+    dot_tier(tier, &omega_t[i * d..(i + 1) * d], x) + phases[i]
+}
+
+/// Fused dot+phase lane on the active tier:
+/// `args[l] = ω_{i0+l}ᵀx + b_{i0+l}` for one lane of `LANES`
+/// consecutive features out of feature-major `omega_t`. Caller
+/// guarantees `i0 + LANES <= features`.
 ///
 /// The paper's experiments have d ∈ {1, 2, 5}; d = 1 and d = 2 are
 /// specialised so the weights stream as flat lanes with `x` pinned in
-/// registers. Both specializations evaluate the same
-/// left-to-right sum as the generic [`dot`] path (whose unrolled stage
-/// needs ≥ `LANES` elements and therefore degenerates to the sequential
-/// tail for tiny d), so the specialization is invisible bitwise.
+/// registers (the AVX2 body deinterleaves the d = 2 weight pairs with
+/// two 128-bit permutes + unpack). Both specializations evaluate the
+/// same left-to-right sum as the generic [`dot`] path (whose unrolled
+/// stage needs ≥ `LANES` elements and therefore degenerates to the
+/// sequential tail for tiny d), so the specialization is invisible
+/// bitwise.
 #[inline]
 pub fn phase_args_lane(omega_t: &[f64], phases: &[f64], x: &[f64], i0: usize) -> [f64; LANES] {
-    let d = x.len();
-    let mut args = [0.0; LANES];
-    let ph = &phases[i0..i0 + LANES];
-    match d {
-        1 => {
-            let x0 = x[0];
-            let w = &omega_t[i0..i0 + LANES];
-            for l in 0..LANES {
-                args[l] = w[l] * x0 + ph[l];
-            }
+    phase_args_lane_tier(active_tier(), omega_t, phases, x, i0)
+}
+
+/// [`phase_args_lane`] on an explicit tier.
+#[inline]
+pub fn phase_args_lane_tier(
+    tier: SimdTier,
+    omega_t: &[f64],
+    phases: &[f64],
+    x: &[f64],
+    i0: usize,
+) -> [f64; LANES] {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 | SimdTier::Avx512 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::phase_args_lane_avx2(omega_t, phases, x, i0) }
         }
-        2 => {
-            let (x0, x1) = (x[0], x[1]);
-            let w = &omega_t[i0 * 2..(i0 + LANES) * 2];
-            for l in 0..LANES {
-                args[l] = w[l * 2] * x0 + w[l * 2 + 1] * x1 + ph[l];
-            }
-        }
-        _ => {
-            for l in 0..LANES {
-                let w = &omega_t[(i0 + l) * d..(i0 + l + 1) * d];
-                args[l] = dot(w, x) + ph[l];
-            }
-        }
+        _ => portable::phase_args_lane(omega_t, phases, x, i0),
     }
-    args
 }
 
 /// Dot product with `LANES` partial accumulators (see the module-level
-/// accumulation-order contract). The default dot of the crate —
-/// re-exported as `linalg::dot`.
+/// accumulation-order contract), dispatched on the active tier. The
+/// default dot of the crate — re-exported as `linalg::dot`.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; LANES];
-    let mut ca = a.chunks_exact(LANES);
-    let mut cb = b.chunks_exact(LANES);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        for l in 0..LANES {
-            acc[l] += xa[l] * xb[l];
-        }
-    }
-    // fixed pairwise reduction tree, then the strictly sequential tail
-    let mut s = reduce_lanes(acc);
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s += x * y;
-    }
-    s
+    dot_tier(active_tier(), a, b)
 }
 
-/// Strictly sequential single-accumulator dot product.
+/// [`dot`] on an explicit tier.
+#[inline]
+pub fn dot_tier(tier: SimdTier, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::dot_avx2(a, b) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx512 if is_x86_feature_detected!("avx512f") => {
+            // SAFETY: guard proves avx512f is available.
+            unsafe { x86::dot_avx512(a, b) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon if std::arch::is_aarch64_feature_detected!("neon") => {
+            // SAFETY: guard proves neon is available.
+            unsafe { neon::dot_neon(a, b) }
+        }
+        _ => portable::dot(a, b),
+    }
+}
+
+/// Strictly sequential single-accumulator dot product. **Never
+/// dispatched** — its accumulation order is its contract, identical in
+/// every tier by construction.
 ///
 /// Slower than [`dot`] (no lane parallelism) but its accumulation order
 /// matches the fused `θᵀz` accumulation inside
@@ -254,12 +466,34 @@ pub fn seq_dot(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// `y += alpha * x` over equal-length slices (elementwise — order
-/// doesn't matter; one lane-friendly flat loop).
+/// doesn't matter; every tier computes the same `yᵢ + α·xᵢ` per
+/// element), dispatched on the active tier.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy_tier(active_tier(), alpha, x, y)
+}
+
+/// [`axpy`] on an explicit tier.
+#[inline]
+pub fn axpy_tier(tier: SimdTier, alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::axpy_avx2(alpha, x, y) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx512 if is_x86_feature_detected!("avx512f") => {
+            // SAFETY: guard proves avx512f is available.
+            unsafe { x86::axpy_avx512(alpha, x, y) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon if std::arch::is_aarch64_feature_detected!("neon") => {
+            // SAFETY: guard proves neon is available.
+            unsafe { neon::axpy_neon(alpha, x, y) }
+        }
+        _ => portable::axpy(alpha, x, y),
     }
 }
 
@@ -270,7 +504,9 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 /// the outer loop walks `out` in `[f64; LANES]` chunks that stay in
 /// registers while the inner loop streams each selected row's lane once,
 /// so a combine over `T` neighbors reads `T·n_cols + n_cols` floats
-/// instead of the `2·T·n_cols` of `T` separate axpy sweeps.
+/// instead of the `2·T·n_cols` of `T` separate axpy sweeps. Portable in
+/// every tier (the lanes-outer shape autovectorizes; the combine is not
+/// a per-row hot path).
 ///
 /// Accumulation-order contract: each output element accumulates its
 /// terms in **strict `rows`-ascending single-accumulator order**,
@@ -317,52 +553,65 @@ pub fn weighted_combine_rows(
 /// f64-accumulated dot of an f32-state row with an f64 vector, `LANES`
 /// partial accumulators — the `π_i = P_i·z` row sweep of the f32 KRLS
 /// kernel (f32 storage, f64 math: the PJRT artifacts' precision
-/// profile).
+/// profile). Dispatched; the f32 → f64 widening is exact, so every tier
+/// agrees bitwise.
 #[inline]
 pub fn dot_f32_f64(a: &[f32], b: &[f64]) -> f64 {
+    dot_f32_f64_tier(active_tier(), a, b)
+}
+
+/// [`dot_f32_f64`] on an explicit tier.
+#[inline]
+pub fn dot_f32_f64_tier(tier: SimdTier, a: &[f32], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; LANES];
-    let mut ca = a.chunks_exact(LANES);
-    let mut cb = b.chunks_exact(LANES);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        for l in 0..LANES {
-            acc[l] += xa[l] as f64 * xb[l];
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::dot_f32_f64_avx2(a, b) }
         }
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx512 if is_x86_feature_detected!("avx512f") => {
+            // SAFETY: guard proves avx512f is available.
+            unsafe { x86::dot_f32_f64_avx512(a, b) }
+        }
+        _ => portable::dot_f32_f64(a, b),
     }
-    let mut s = reduce_lanes(acc);
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s += *x as f64 * y;
-    }
-    s
 }
 
 /// f64-accumulated dot of an f64 vector with f32 state (`ŷ = θᵀz` of
-/// the f32 kernels), `LANES` partial accumulators.
+/// the f32 kernels), `LANES` partial accumulators, dispatched.
 #[inline]
 pub fn dot_f64_f32(a: &[f64], b: &[f32]) -> f64 {
+    dot_f64_f32_tier(active_tier(), a, b)
+}
+
+/// [`dot_f64_f32`] on an explicit tier.
+#[inline]
+pub fn dot_f64_f32_tier(tier: SimdTier, a: &[f64], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; LANES];
-    let mut ca = a.chunks_exact(LANES);
-    let mut cb = b.chunks_exact(LANES);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        for l in 0..LANES {
-            acc[l] += xa[l] * xb[l] as f64;
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::dot_f64_f32_avx2(a, b) }
         }
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx512 if is_x86_feature_detected!("avx512f") => {
+            // SAFETY: guard proves avx512f is available.
+            unsafe { x86::dot_f64_f32_avx512(a, b) }
+        }
+        _ => portable::dot_f64_f32(a, b),
     }
-    let mut s = reduce_lanes(acc);
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s += x * *y as f64;
-    }
-    s
 }
 
 /// Strictly sequential f64-accumulated dot of an f64 vector with f32
-/// state — the mixed-precision twin of [`seq_dot`]. Because f32 → f64
-/// widening is exact, this produces the **bitwise-identical** value to
-/// `seq_dot(a, widen(b))`, i.e. the fused `θᵀz` order of the predict
-/// kernels: a PJRT session's direct predict and a
-/// `PredictState`-snapshot predict (which widens θ once) must agree
-/// exactly.
+/// state — the mixed-precision twin of [`seq_dot`], and like it never
+/// dispatched. Because f32 → f64 widening is exact, this produces the
+/// **bitwise-identical** value to `seq_dot(a, widen(b))`, i.e. the
+/// fused `θᵀz` order of the predict kernels: a PJRT session's direct
+/// predict and a `PredictState`-snapshot predict (which widens θ once)
+/// must agree exactly.
 #[inline]
 pub fn seq_dot_f64_f32(a: &[f64], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -374,23 +623,46 @@ pub fn seq_dot_f64_f32(a: &[f64], b: &[f32]) -> f64 {
 }
 
 /// `y[i] += (alpha * x[i]) rounded to f32` — the f32-state θ write-back
-/// (f64 product, per-element f32 rounding; elementwise, so lane-safe).
+/// (f64 product, per-element f32 rounding; elementwise, so lane-safe),
+/// dispatched.
 #[inline]
 pub fn axpy_into_f32(alpha: f64, x: &[f64], y: &mut [f32]) {
+    axpy_into_f32_tier(active_tier(), alpha, x, y)
+}
+
+/// [`axpy_into_f32`] on an explicit tier.
+#[inline]
+pub fn axpy_into_f32_tier(tier: SimdTier, alpha: f64, x: &[f64], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += (alpha * xi) as f32;
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 | SimdTier::Avx512 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::axpy_into_f32_avx2(alpha, x, y) }
+        }
+        _ => portable::axpy_into_f32(alpha, x, y),
     }
 }
 
 /// One row of the f32 KRLS rank-1 update:
 /// `row[k] = f32(row[k]·s − cpi·pi[k])` — f64 math, f32 rounding on the
-/// write-back, elementwise (lane-safe).
+/// write-back, elementwise (lane-safe), dispatched.
 #[inline]
 pub fn scale_rank1_row_f32(row: &mut [f32], s: f64, cpi: f64, pi: &[f64]) {
+    scale_rank1_row_f32_tier(active_tier(), row, s, cpi, pi)
+}
+
+/// [`scale_rank1_row_f32`] on an explicit tier.
+#[inline]
+pub fn scale_rank1_row_f32_tier(tier: SimdTier, row: &mut [f32], s: f64, cpi: f64, pi: &[f64]) {
     debug_assert_eq!(row.len(), pi.len());
-    for (r, &pj) in row.iter_mut().zip(pi) {
-        *r = (*r as f64 * s - cpi * pj) as f32;
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 | SimdTier::Avx512 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::scale_rank1_row_f32_avx2(row, s, cpi, pi) }
+        }
+        _ => portable::scale_rank1_row_f32(row, s, cpi, pi),
     }
 }
 
@@ -441,16 +713,25 @@ pub fn unpack_symmetric(n: usize, packed: &[f64]) -> Vec<f64> {
     dense
 }
 
-/// Symmetric matvec `out = P z` on packed-upper `P`.
+/// Symmetric matvec `out = P z` on packed-upper `P`, dispatched on the
+/// active tier.
 ///
 /// Row sweep `i` ascending; each stored element `P[i,j]` (`j ≥ i`) is
 /// read once and used for both its symmetric roles: the in-row part of
 /// `out[i]` accumulates through [`dot`] (lane partials), the scattered
-/// part `out[j] += P[i,j]·z[i]` through [`axpy`]. Deterministic order;
-/// every caller of the f64 KRLS recursion goes through this one
-/// function, which is what keeps per-row and batched trains bitwise
-/// equal.
+/// part `out[j] += P[i,j]·z[i]` through [`axpy`]. Deterministic order
+/// in every tier (the tier only changes which `dot`/`axpy` body runs,
+/// and those are bitwise-identical); every caller of the f64 KRLS
+/// recursion goes through this one function, which is what keeps
+/// per-row and batched trains bitwise equal.
 pub fn packed_symv(n: usize, p: &[f64], z: &[f64], out: &mut [f64]) {
+    packed_symv_tier(active_tier(), n, p, z, out)
+}
+
+/// [`packed_symv`] on an explicit tier — there is exactly one row-sweep
+/// implementation (this one); the tier parameterizes the inner
+/// [`dot_tier`]/[`axpy_tier`] sweeps.
+pub fn packed_symv_tier(tier: SimdTier, n: usize, p: &[f64], z: &[f64], out: &mut [f64]) {
     debug_assert_eq!(p.len(), packed_len(n));
     debug_assert_eq!(z.len(), n);
     debug_assert_eq!(out.len(), n);
@@ -461,32 +742,771 @@ pub fn packed_symv(n: usize, p: &[f64], z: &[f64], out: &mut [f64]) {
         let row = &p[off..off + w];
         let zi = z[i];
         // diagonal + in-row columns j > i contribute to out[i]
-        out[i] += row[0] * zi + dot(&row[1..], &z[i + 1..]);
+        out[i] += row[0] * zi + dot_tier(tier, &row[1..], &z[i + 1..]);
         // symmetric halves: out[j] += P[i,j]·z[i] for j > i
-        axpy(zi, &row[1..], &mut out[i + 1..]);
+        axpy_tier(tier, zi, &row[1..], &mut out[i + 1..]);
         off += w;
     }
 }
 
 /// Scaled symmetric rank-1 update `P ← s·P − c·(π πᵀ)` on packed-upper
-/// storage: exactly [`packed_len`]`(n)` multiply-add pairs (one per
-/// stored element, each row contiguous against `π[i..]`) — **half** the
-/// dense update's flops and bytes, the dominant O(D²) cost of the KRLS
-/// step. `tests/lane_tails.rs` pins both the loop bound and the
-/// element-for-element agreement with the dense expression
-/// `s·P[i,j] − (c·π_i)·π_j`.
+/// storage, dispatched on the active tier: exactly [`packed_len`]`(n)`
+/// multiply-add pairs (one per stored element, each row contiguous
+/// against `π[i..]`) — **half** the dense update's flops and bytes, the
+/// dominant O(D²) cost of the KRLS step. Elementwise
+/// (`s·P[i,j] − (c·π_i)·π_j`, two multiplies and a subtract — no FMA in
+/// any tier), so every tier agrees bitwise; `tests/lane_tails.rs` pins
+/// both the loop bound and the element-for-element agreement with the
+/// dense expression.
 pub fn packed_rank1_scaled(n: usize, p: &mut [f64], pi: &[f64], s: f64, c: f64) {
+    packed_rank1_scaled_tier(active_tier(), n, p, pi, s, c)
+}
+
+/// [`packed_rank1_scaled`] on an explicit tier.
+pub fn packed_rank1_scaled_tier(tier: SimdTier, n: usize, p: &mut [f64], pi: &[f64], s: f64, c: f64) {
     debug_assert_eq!(p.len(), packed_len(n));
     debug_assert_eq!(pi.len(), n);
-    let mut off = 0;
-    for i in 0..n {
-        let w = n - i;
-        let cpi = c * pi[i];
-        let row = &mut p[off..off + w];
-        for (r, &pj) in row.iter_mut().zip(&pi[i..]) {
-            *r = *r * s - cpi * pj;
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 if is_x86_feature_detected!("avx2") => {
+            // SAFETY: guard proves avx2 is available.
+            unsafe { x86::packed_rank1_scaled_avx2(n, p, pi, s, c) }
         }
-        off += w;
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx512 if is_x86_feature_detected!("avx512f") => {
+            // SAFETY: guard proves avx512f is available.
+            unsafe { x86::packed_rank1_scaled_avx512(n, p, pi, s, c) }
+        }
+        _ => portable::packed_rank1_scaled(n, p, pi, s, c),
+    }
+}
+
+// ---- portable tier (the contract) ---------------------------------------
+
+/// The autovectorized fallback bodies — the accumulation-order contract
+/// every explicit-`std::arch` tier is pinned against. These are the
+/// exact lane loops the substrate shipped before runtime dispatch
+/// existed; the dispatch wrappers above route to them for
+/// `SimdTier::Portable` and for any kernel a tier does not implement.
+mod portable {
+    use super::{reduce_lanes, LANES};
+
+    #[inline]
+    pub(super) fn fast_cos_lanes(args: &[f64; LANES]) -> [f64; LANES] {
+        let mut out = [0.0; LANES];
+        for l in 0..LANES {
+            out[l] = super::fast_cos(args[l]);
+        }
+        out
+    }
+
+    #[inline]
+    pub(super) fn scaled_cos_lanes(args: &[f64; LANES], scale: f64) -> [f64; LANES] {
+        let mut out = fast_cos_lanes(args);
+        for v in &mut out {
+            *v *= scale;
+        }
+        out
+    }
+
+    #[inline]
+    pub(super) fn weighted_cos_lanes(args: &[f64; LANES], w: &[f64]) -> [f64; LANES] {
+        let mut out = fast_cos_lanes(args);
+        for (v, &wi) in out.iter_mut().zip(w) {
+            *v *= wi;
+        }
+        out
+    }
+
+    #[inline]
+    pub(super) fn phase_args_lane(
+        omega_t: &[f64],
+        phases: &[f64],
+        x: &[f64],
+        i0: usize,
+    ) -> [f64; LANES] {
+        let d = x.len();
+        let mut args = [0.0; LANES];
+        let ph = &phases[i0..i0 + LANES];
+        match d {
+            1 => {
+                let x0 = x[0];
+                let w = &omega_t[i0..i0 + LANES];
+                for l in 0..LANES {
+                    args[l] = w[l] * x0 + ph[l];
+                }
+            }
+            2 => {
+                let (x0, x1) = (x[0], x[1]);
+                let w = &omega_t[i0 * 2..(i0 + LANES) * 2];
+                for l in 0..LANES {
+                    args[l] = w[l * 2] * x0 + w[l * 2 + 1] * x1 + ph[l];
+                }
+            }
+            _ => {
+                for l in 0..LANES {
+                    let w = &omega_t[(i0 + l) * d..(i0 + l + 1) * d];
+                    args[l] = dot(w, x) + ph[l];
+                }
+            }
+        }
+        args
+    }
+
+    #[inline]
+    pub(super) fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for l in 0..LANES {
+                acc[l] += xa[l] * xb[l];
+            }
+        }
+        // fixed pairwise reduction tree, then the strictly sequential tail
+        let mut s = reduce_lanes(acc);
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            s += x * y;
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    #[inline]
+    pub(super) fn dot_f32_f64(a: &[f32], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for l in 0..LANES {
+                acc[l] += xa[l] as f64 * xb[l];
+            }
+        }
+        let mut s = reduce_lanes(acc);
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            s += *x as f64 * y;
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn dot_f64_f32(a: &[f64], b: &[f32]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for l in 0..LANES {
+                acc[l] += xa[l] * xb[l] as f64;
+            }
+        }
+        let mut s = reduce_lanes(acc);
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            s += x * *y as f64;
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn axpy_into_f32(alpha: f64, x: &[f64], y: &mut [f32]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += (alpha * xi) as f32;
+        }
+    }
+
+    #[inline]
+    pub(super) fn scale_rank1_row_f32(row: &mut [f32], s: f64, cpi: f64, pi: &[f64]) {
+        for (r, &pj) in row.iter_mut().zip(pi) {
+            *r = (*r as f64 * s - cpi * pj) as f32;
+        }
+    }
+
+    pub(super) fn packed_rank1_scaled(n: usize, p: &mut [f64], pi: &[f64], s: f64, c: f64) {
+        let mut off = 0;
+        for i in 0..n {
+            let w = n - i;
+            let cpi = c * pi[i];
+            let row = &mut p[off..off + w];
+            for (r, &pj) in row.iter_mut().zip(&pi[i..]) {
+                *r = *r * s - cpi * pj;
+            }
+            off += w;
+        }
+    }
+}
+
+// ---- x86_64 explicit tiers ----------------------------------------------
+
+/// AVX2 / AVX-512 kernel bodies. Every function here is `unsafe fn`
+/// with a `#[target_feature]` attribute; the dispatch wrappers only
+/// call them behind an `is_x86_feature_detected!` guard. The bodies
+/// intentionally use separate multiply/add intrinsics (no FMA — see the
+/// module contract) and keep the portable per-lane accumulation orders.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{reduce_lanes, LANES};
+    use core::arch::x86_64::*;
+
+    /// Vector [`super::fast_cos`]: the identical Cody–Waite reduction,
+    /// Horner nesting and quadrant select, four lanes at a time. The
+    /// quadrant index is integral and `< 2^21` for the documented
+    /// `|x| < 2^20` domain, so the post-floor `cvtpd_epi32` is exact
+    /// (conversion of an integral value is independent of rounding
+    /// mode), and the low two quadrant bits fit i32 arithmetic.
+    ///
+    /// # Safety
+    /// Requires avx2 (for `_mm256_cvtepi32_epi64`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn fast_cos_pd(x: __m256d) -> __m256d {
+        const FRAC_2_PI: f64 = core::f64::consts::FRAC_2_PI;
+        const PIO2_1: f64 = 1.570_796_326_794_896_6e0;
+        const PIO2_1T: f64 = 6.123_233_995_736_766e-17;
+
+        let sign = _mm256_set1_pd(-0.0);
+        let ax = _mm256_andnot_pd(sign, x); // |x|: clear the sign bit
+        // quadrant: floor(|x| * 2/pi + 0.5), kept in f64 for the
+        // Cody–Waite subtraction and converted exactly for the bit tests
+        let q = _mm256_floor_pd(_mm256_add_pd(
+            _mm256_mul_pd(ax, _mm256_set1_pd(FRAC_2_PI)),
+            _mm256_set1_pd(0.5),
+        ));
+        let r = _mm256_sub_pd(
+            _mm256_sub_pd(ax, _mm256_mul_pd(q, _mm256_set1_pd(PIO2_1))),
+            _mm256_mul_pd(q, _mm256_set1_pd(PIO2_1T)),
+        );
+        let qi = _mm256_cvtpd_epi32(q);
+        let r2 = _mm256_mul_pd(r, r);
+        // sin minimax poly: same inside-out Horner steps as the scalar
+        let mut ps = _mm256_set1_pd(1.589_413_637_195_215e-10);
+        ps = _mm256_add_pd(_mm256_set1_pd(-2.505_070_584_637_887e-8), _mm256_mul_pd(r2, ps));
+        ps = _mm256_add_pd(_mm256_set1_pd(2.755_731_329_901_505e-6), _mm256_mul_pd(r2, ps));
+        ps = _mm256_add_pd(_mm256_set1_pd(-1.984_126_982_958_954e-4), _mm256_mul_pd(r2, ps));
+        ps = _mm256_add_pd(_mm256_set1_pd(8.333_333_333_322_118e-3), _mm256_mul_pd(r2, ps));
+        ps = _mm256_add_pd(_mm256_set1_pd(-1.666_666_666_666_663e-1), _mm256_mul_pd(r2, ps));
+        // s = r + (r·r2)·ps — the scalar's exact association
+        let s = _mm256_add_pd(r, _mm256_mul_pd(_mm256_mul_pd(r, r2), ps));
+        let mut pc = _mm256_set1_pd(2.087_558_246_437_389e-9);
+        pc = _mm256_add_pd(_mm256_set1_pd(-2.755_731_317_768_328e-7), _mm256_mul_pd(r2, pc));
+        pc = _mm256_add_pd(_mm256_set1_pd(2.480_158_728_823_386e-5), _mm256_mul_pd(r2, pc));
+        pc = _mm256_add_pd(_mm256_set1_pd(-1.388_888_888_887_057e-3), _mm256_mul_pd(r2, pc));
+        pc = _mm256_add_pd(_mm256_set1_pd(4.166_666_666_666_016e-2), _mm256_mul_pd(r2, pc));
+        pc = _mm256_add_pd(_mm256_set1_pd(-0.5), _mm256_mul_pd(r2, pc));
+        let c = _mm256_add_pd(_mm256_set1_pd(1.0), _mm256_mul_pd(r2, pc));
+        // quadrant select: odd q → sin magnitude; (q+1) & 2 → negate.
+        // The i32 compares yield 0/-1 masks; sign-extending to 64 bits
+        // makes them usable as pd blend/and masks.
+        let one = _mm_set1_epi32(1);
+        let two = _mm_set1_epi32(2);
+        let pick_s32 = _mm_cmpeq_epi32(_mm_and_si128(qi, one), one);
+        let neg32 = _mm_cmpeq_epi32(_mm_and_si128(_mm_add_epi32(qi, one), two), two);
+        let pick_s = _mm256_castsi256_pd(_mm256_cvtepi32_epi64(pick_s32));
+        let neg = _mm256_castsi256_pd(_mm256_cvtepi32_epi64(neg32));
+        let mag = _mm256_blendv_pd(c, s, pick_s);
+        _mm256_xor_pd(mag, _mm256_and_pd(neg, sign))
+    }
+
+    /// # Safety
+    /// Requires avx2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fast_cos_lanes_avx2(args: &[f64; LANES]) -> [f64; LANES] {
+        let lo = fast_cos_pd(_mm256_loadu_pd(args.as_ptr()));
+        let hi = fast_cos_pd(_mm256_loadu_pd(args.as_ptr().add(4)));
+        let mut out = [0.0f64; LANES];
+        _mm256_storeu_pd(out.as_mut_ptr(), lo);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), hi);
+        out
+    }
+
+    /// # Safety
+    /// Requires avx2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scaled_cos_lanes_avx2(args: &[f64; LANES], scale: f64) -> [f64; LANES] {
+        let vs = _mm256_set1_pd(scale);
+        // portable order is cos(arg) * scale — multiplication commutes
+        // bitwise, but keep the cos value as the left operand shape by
+        // multiplying the cos vector by the broadcast scale
+        let lo = _mm256_mul_pd(fast_cos_pd(_mm256_loadu_pd(args.as_ptr())), vs);
+        let hi = _mm256_mul_pd(fast_cos_pd(_mm256_loadu_pd(args.as_ptr().add(4))), vs);
+        let mut out = [0.0f64; LANES];
+        _mm256_storeu_pd(out.as_mut_ptr(), lo);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), hi);
+        out
+    }
+
+    /// # Safety
+    /// Requires avx2; `w.len() >= LANES`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn weighted_cos_lanes_avx2(args: &[f64; LANES], w: &[f64]) -> [f64; LANES] {
+        let lo = _mm256_mul_pd(
+            fast_cos_pd(_mm256_loadu_pd(args.as_ptr())),
+            _mm256_loadu_pd(w.as_ptr()),
+        );
+        let hi = _mm256_mul_pd(
+            fast_cos_pd(_mm256_loadu_pd(args.as_ptr().add(4))),
+            _mm256_loadu_pd(w.as_ptr().add(4)),
+        );
+        let mut out = [0.0f64; LANES];
+        _mm256_storeu_pd(out.as_mut_ptr(), lo);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), hi);
+        out
+    }
+
+    /// Fused dot+phase lane. d = 1 streams the weights as flat lanes;
+    /// d = 2 deinterleaves the `(ω₀, ω₁)` pairs with two cross-lane
+    /// permutes + unpack so both components multiply as full vectors —
+    /// the summation `(w0·x0 + w1·x1) + b` keeps the portable
+    /// association. Generic d runs the portable loop shape over the
+    /// AVX2 dot.
+    ///
+    /// # Safety
+    /// Requires avx2; caller guarantees `i0 + LANES <= features` (the
+    /// public-wrapper contract).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn phase_args_lane_avx2(
+        omega_t: &[f64],
+        phases: &[f64],
+        x: &[f64],
+        i0: usize,
+    ) -> [f64; LANES] {
+        let d = x.len();
+        let mut args = [0.0f64; LANES];
+        let ph_lo = _mm256_loadu_pd(phases.as_ptr().add(i0));
+        let ph_hi = _mm256_loadu_pd(phases.as_ptr().add(i0 + 4));
+        match d {
+            1 => {
+                let x0 = _mm256_set1_pd(x[0]);
+                let w_lo = _mm256_loadu_pd(omega_t.as_ptr().add(i0));
+                let w_hi = _mm256_loadu_pd(omega_t.as_ptr().add(i0 + 4));
+                let lo = _mm256_add_pd(_mm256_mul_pd(w_lo, x0), ph_lo);
+                let hi = _mm256_add_pd(_mm256_mul_pd(w_hi, x0), ph_hi);
+                _mm256_storeu_pd(args.as_mut_ptr(), lo);
+                _mm256_storeu_pd(args.as_mut_ptr().add(4), hi);
+            }
+            2 => {
+                let x0 = _mm256_set1_pd(x[0]);
+                let x1 = _mm256_set1_pd(x[1]);
+                let base = omega_t.as_ptr().add(i0 * 2);
+                for (half, ph) in [ph_lo, ph_hi].into_iter().enumerate() {
+                    // 4 features = 8 interleaved f64: a = [w0₀ w1₀ w0₁ w1₁],
+                    // b = [w0₂ w1₂ w0₃ w1₃] → gather even/odd components
+                    let a = _mm256_loadu_pd(base.add(half * 8));
+                    let b = _mm256_loadu_pd(base.add(half * 8 + 4));
+                    let t0 = _mm256_permute2f128_pd::<0x20>(a, b); // [w0₀ w1₀ w0₂ w1₂]
+                    let t1 = _mm256_permute2f128_pd::<0x31>(a, b); // [w0₁ w1₁ w0₃ w1₃]
+                    let w0 = _mm256_unpacklo_pd(t0, t1); // [w0₀ w0₁ w0₂ w0₃]
+                    let w1 = _mm256_unpackhi_pd(t0, t1); // [w1₀ w1₁ w1₂ w1₃]
+                    let v = _mm256_add_pd(
+                        _mm256_add_pd(_mm256_mul_pd(w0, x0), _mm256_mul_pd(w1, x1)),
+                        ph,
+                    );
+                    _mm256_storeu_pd(args.as_mut_ptr().add(half * 4), v);
+                }
+            }
+            _ => {
+                for (l, arg) in args.iter_mut().enumerate() {
+                    let w = &omega_t[(i0 + l) * d..(i0 + l + 1) * d];
+                    *arg = dot_avx2(w, x) + phases[i0 + l];
+                }
+            }
+        }
+        args
+    }
+
+    /// `LANES` partial accumulators in two 256-bit registers (lanes
+    /// 0–3 / 4–7); separate mul+add per chunk, stored back to
+    /// `[f64; LANES]` and reduced by the shared pairwise tree, then the
+    /// strictly sequential scalar tail — the portable order exactly.
+    ///
+    /// # Safety
+    /// Requires avx2; `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for k in 0..chunks {
+            let i = k * LANES;
+            acc_lo = _mm256_add_pd(
+                acc_lo,
+                _mm256_mul_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i))),
+            );
+            acc_hi = _mm256_add_pd(
+                acc_hi,
+                _mm256_mul_pd(_mm256_loadu_pd(pa.add(i + 4)), _mm256_loadu_pd(pb.add(i + 4))),
+            );
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+        let mut s = reduce_lanes(acc);
+        for i in chunks * LANES..n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        }
+        s
+    }
+
+    /// All `LANES` accumulators in one 512-bit register — lane `l` sees
+    /// the identical mul+add sequence as portable lane `l`.
+    ///
+    /// # Safety
+    /// Requires avx512f; `a.len() == b.len()`.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn dot_avx512(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut accv = _mm512_setzero_pd();
+        for k in 0..chunks {
+            let i = k * LANES;
+            accv = _mm512_add_pd(
+                accv,
+                _mm512_mul_pd(_mm512_loadu_pd(pa.add(i)), _mm512_loadu_pd(pb.add(i))),
+            );
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm512_storeu_pd(acc.as_mut_ptr(), accv);
+        let mut s = reduce_lanes(acc);
+        for i in chunks * LANES..n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires avx2; `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_f32_f64_avx2(a: &[f32], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for k in 0..chunks {
+            let i = k * LANES;
+            // widen 8 f32 to 2×4 f64 (exact), then the usual mul+add
+            let a8 = _mm256_loadu_ps(pa.add(i));
+            let a_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(a8));
+            let a_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(a8));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(a_lo, _mm256_loadu_pd(pb.add(i))));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(a_hi, _mm256_loadu_pd(pb.add(i + 4))));
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+        let mut s = reduce_lanes(acc);
+        for i in chunks * LANES..n {
+            s += *a.get_unchecked(i) as f64 * *b.get_unchecked(i);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires avx512f; `a.len() == b.len()`.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn dot_f32_f64_avx512(a: &[f32], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut accv = _mm512_setzero_pd();
+        for k in 0..chunks {
+            let i = k * LANES;
+            let aw = _mm512_cvtps_pd(_mm256_loadu_ps(pa.add(i)));
+            accv = _mm512_add_pd(accv, _mm512_mul_pd(aw, _mm512_loadu_pd(pb.add(i))));
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm512_storeu_pd(acc.as_mut_ptr(), accv);
+        let mut s = reduce_lanes(acc);
+        for i in chunks * LANES..n {
+            s += *a.get_unchecked(i) as f64 * *b.get_unchecked(i);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires avx2; `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_f64_f32_avx2(a: &[f64], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for k in 0..chunks {
+            let i = k * LANES;
+            let b8 = _mm256_loadu_ps(pb.add(i));
+            let b_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(b8));
+            let b_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(b8));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(_mm256_loadu_pd(pa.add(i)), b_lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(_mm256_loadu_pd(pa.add(i + 4)), b_hi));
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+        let mut s = reduce_lanes(acc);
+        for i in chunks * LANES..n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i) as f64;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires avx512f; `a.len() == b.len()`.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn dot_f64_f32_avx512(a: &[f64], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut accv = _mm512_setzero_pd();
+        for k in 0..chunks {
+            let i = k * LANES;
+            let bw = _mm512_cvtps_pd(_mm256_loadu_ps(pb.add(i)));
+            accv = _mm512_add_pd(accv, _mm512_mul_pd(_mm512_loadu_pd(pa.add(i)), bw));
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm512_storeu_pd(acc.as_mut_ptr(), accv);
+        let mut s = reduce_lanes(acc);
+        for i in chunks * LANES..n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i) as f64;
+        }
+        s
+    }
+
+    /// Elementwise `yᵢ + α·xᵢ` — any chunking is bitwise-equal to the
+    /// portable flat loop, so this streams 4 lanes per step.
+    ///
+    /// # Safety
+    /// Requires avx2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 4;
+        let va = _mm256_set1_pd(alpha);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        for k in 0..chunks {
+            let i = k * 4;
+            let v = _mm256_add_pd(
+                _mm256_loadu_pd(py.add(i)),
+                _mm256_mul_pd(va, _mm256_loadu_pd(px.add(i))),
+            );
+            _mm256_storeu_pd(py.add(i), v);
+        }
+        for i in chunks * 4..n {
+            *y.get_unchecked_mut(i) += alpha * *x.get_unchecked(i);
+        }
+    }
+
+    /// # Safety
+    /// Requires avx512f; `x.len() == y.len()`.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn axpy_avx512(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 8;
+        let va = _mm512_set1_pd(alpha);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        for k in 0..chunks {
+            let i = k * 8;
+            let v = _mm512_add_pd(
+                _mm512_loadu_pd(py.add(i)),
+                _mm512_mul_pd(va, _mm512_loadu_pd(px.add(i))),
+            );
+            _mm512_storeu_pd(py.add(i), v);
+        }
+        for i in chunks * 8..n {
+            *y.get_unchecked_mut(i) += alpha * *x.get_unchecked(i);
+        }
+    }
+
+    /// `yᵢ += f32(α·xᵢ)`: f64 product, narrowed with the same
+    /// round-to-nearest-even as the scalar `as f32` cast, f32 add.
+    ///
+    /// # Safety
+    /// Requires avx2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_into_f32_avx2(alpha: f64, x: &[f64], y: &mut [f32]) {
+        let n = x.len();
+        let chunks = n / 4;
+        let va = _mm256_set1_pd(alpha);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        for k in 0..chunks {
+            let i = k * 4;
+            let prod32 = _mm256_cvtpd_ps(_mm256_mul_pd(va, _mm256_loadu_pd(px.add(i))));
+            _mm_storeu_ps(py.add(i), _mm_add_ps(_mm_loadu_ps(py.add(i)), prod32));
+        }
+        for i in chunks * 4..n {
+            *y.get_unchecked_mut(i) += (alpha * *x.get_unchecked(i)) as f32;
+        }
+    }
+
+    /// `rowₖ = f32(f64(rowₖ)·s − cpi·πₖ)`: widen, two muls + subtract
+    /// (no FMA), narrow — the scalar expression per element.
+    ///
+    /// # Safety
+    /// Requires avx2; `row.len() == pi.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_rank1_row_f32_avx2(row: &mut [f32], s: f64, cpi: f64, pi: &[f64]) {
+        let n = row.len();
+        let chunks = n / 4;
+        let vs = _mm256_set1_pd(s);
+        let vc = _mm256_set1_pd(cpi);
+        let (pr, pp) = (row.as_mut_ptr(), pi.as_ptr());
+        for k in 0..chunks {
+            let i = k * 4;
+            let r64 = _mm256_cvtps_pd(_mm_loadu_ps(pr.add(i)));
+            let v = _mm256_sub_pd(
+                _mm256_mul_pd(r64, vs),
+                _mm256_mul_pd(vc, _mm256_loadu_pd(pp.add(i))),
+            );
+            _mm_storeu_ps(pr.add(i), _mm256_cvtpd_ps(v));
+        }
+        for i in chunks * 4..n {
+            let r = row.get_unchecked_mut(i);
+            *r = (*r as f64 * s - cpi * *pi.get_unchecked(i)) as f32;
+        }
+    }
+
+    /// Whole packed rank-1 update, rows contiguous: elementwise
+    /// `P[i,j]·s − (c·πᵢ)·πⱼ`, 4 lanes per step + scalar row tail.
+    ///
+    /// # Safety
+    /// Requires avx2; `p.len() == packed_len(n)`, `pi.len() == n`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn packed_rank1_scaled_avx2(
+        n: usize,
+        p: &mut [f64],
+        pi: &[f64],
+        s: f64,
+        c: f64,
+    ) {
+        let vs = _mm256_set1_pd(s);
+        let mut off = 0;
+        for i in 0..n {
+            let w = n - i;
+            let cpi = c * *pi.get_unchecked(i);
+            let vcpi = _mm256_set1_pd(cpi);
+            let pr = p.as_mut_ptr().add(off);
+            let pp = pi.as_ptr().add(i);
+            let chunks = w / 4;
+            for k in 0..chunks {
+                let j = k * 4;
+                let v = _mm256_sub_pd(
+                    _mm256_mul_pd(_mm256_loadu_pd(pr.add(j)), vs),
+                    _mm256_mul_pd(vcpi, _mm256_loadu_pd(pp.add(j))),
+                );
+                _mm256_storeu_pd(pr.add(j), v);
+            }
+            for j in chunks * 4..w {
+                let r = pr.add(j);
+                *r = *r * s - cpi * *pp.add(j);
+            }
+            off += w;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx512f; `p.len() == packed_len(n)`, `pi.len() == n`.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn packed_rank1_scaled_avx512(
+        n: usize,
+        p: &mut [f64],
+        pi: &[f64],
+        s: f64,
+        c: f64,
+    ) {
+        let vs = _mm512_set1_pd(s);
+        let mut off = 0;
+        for i in 0..n {
+            let w = n - i;
+            let cpi = c * *pi.get_unchecked(i);
+            let vcpi = _mm512_set1_pd(cpi);
+            let pr = p.as_mut_ptr().add(off);
+            let pp = pi.as_ptr().add(i);
+            let chunks = w / 8;
+            for k in 0..chunks {
+                let j = k * 8;
+                let v = _mm512_sub_pd(
+                    _mm512_mul_pd(_mm512_loadu_pd(pr.add(j)), vs),
+                    _mm512_mul_pd(vcpi, _mm512_loadu_pd(pp.add(j))),
+                );
+                _mm512_storeu_pd(pr.add(j), v);
+            }
+            for j in chunks * 8..w {
+                let r = pr.add(j);
+                *r = *r * s - cpi * *pp.add(j);
+            }
+            off += w;
+        }
+    }
+}
+
+// ---- aarch64 NEON tier --------------------------------------------------
+
+/// Minimal NEON bodies (aarch64): the two accumulate kernels that
+/// dominate the hot path. Everything else dispatches to portable on
+/// this tier — aarch64 NEON is baseline, so the autovectorizer already
+/// emits decent code for the elementwise kernels, and keeping this
+/// module small keeps the untested-surface risk low (CI builds x86_64).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{reduce_lanes, LANES};
+    use core::arch::aarch64::*;
+
+    /// `LANES` partial accumulators in four 2-lane registers; same
+    /// per-lane mul+add sequence, shared reduction tree, sequential
+    /// scalar tail.
+    ///
+    /// # Safety
+    /// Requires neon; `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut acc2 = vdupq_n_f64(0.0);
+        let mut acc3 = vdupq_n_f64(0.0);
+        for k in 0..chunks {
+            let i = k * LANES;
+            acc0 = vaddq_f64(acc0, vmulq_f64(vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i))));
+            acc1 = vaddq_f64(acc1, vmulq_f64(vld1q_f64(pa.add(i + 2)), vld1q_f64(pb.add(i + 2))));
+            acc2 = vaddq_f64(acc2, vmulq_f64(vld1q_f64(pa.add(i + 4)), vld1q_f64(pb.add(i + 4))));
+            acc3 = vaddq_f64(acc3, vmulq_f64(vld1q_f64(pa.add(i + 6)), vld1q_f64(pb.add(i + 6))));
+        }
+        let mut acc = [0.0f64; LANES];
+        vst1q_f64(acc.as_mut_ptr(), acc0);
+        vst1q_f64(acc.as_mut_ptr().add(2), acc1);
+        vst1q_f64(acc.as_mut_ptr().add(4), acc2);
+        vst1q_f64(acc.as_mut_ptr().add(6), acc3);
+        let mut s = reduce_lanes(acc);
+        for i in chunks * LANES..n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires neon; `x.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 2;
+        let va = vdupq_n_f64(alpha);
+        let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+        for k in 0..chunks {
+            let i = k * 2;
+            let v = vaddq_f64(vld1q_f64(py.add(i)), vmulq_f64(va, vld1q_f64(px.add(i))));
+            vst1q_f64(py.add(i), v);
+        }
+        for i in chunks * 2..n {
+            *y.get_unchecked_mut(i) += alpha * *x.get_unchecked(i);
+        }
     }
 }
 
@@ -499,16 +1519,88 @@ mod tests {
     }
 
     #[test]
+    fn tier_plumbing_is_consistent() {
+        let avail = available_tiers();
+        assert_eq!(avail[0], SimdTier::Portable);
+        assert!(avail.contains(&active_tier()));
+        for t in &avail {
+            assert_eq!(SimdTier::from_name(t.name()), Some(*t));
+        }
+        assert!(SimdTier::from_name("no-such-tier").is_none());
+        assert!(!cpu_feature_summary().is_empty());
+    }
+
+    #[test]
+    fn every_available_tier_matches_portable_bitwise() {
+        // the compact in-module parity check — the full grid (coprime
+        // D/n, all kernels, KRLS recursion) lives in tests/lane_tails.rs
+        let p = SimdTier::Portable;
+        let args_v = seq(LANES, |i| i as f64 * 1.37 - 3.0);
+        let args: [f64; LANES] = args_v.as_slice().try_into().unwrap();
+        let w8 = seq(LANES, |i| 0.125 + i as f64 * 0.0625);
+        for n in [1usize, 7, 8, 9, 37] {
+            let a = seq(n, |i| (i as f64 * 0.37).sin());
+            let b = seq(n, |i| (i as f64 * 0.61).cos());
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            for tier in available_tiers() {
+                assert_eq!(dot_tier(tier, &a, &b), dot_tier(p, &a, &b), "{tier} n={n}");
+                assert_eq!(
+                    dot_f32_f64_tier(tier, &a32, &b),
+                    dot_f32_f64_tier(p, &a32, &b),
+                    "{tier} n={n}"
+                );
+                assert_eq!(
+                    dot_f64_f32_tier(tier, &b, &a32),
+                    dot_f64_f32_tier(p, &b, &a32),
+                    "{tier} n={n}"
+                );
+                let mut y_t = b.clone();
+                let mut y_p = b.clone();
+                axpy_tier(tier, 0.37, &a, &mut y_t);
+                axpy_tier(p, 0.37, &a, &mut y_p);
+                assert_eq!(y_t, y_p, "{tier} n={n}");
+            }
+        }
+        for tier in available_tiers() {
+            assert_eq!(fast_cos_lanes_tier(tier, &args), fast_cos_lanes_tier(p, &args), "{tier}");
+            assert_eq!(
+                scaled_cos_lanes_tier(tier, &args, 0.25),
+                scaled_cos_lanes_tier(p, &args, 0.25),
+                "{tier}"
+            );
+            assert_eq!(
+                weighted_cos_lanes_tier(tier, &args, &w8),
+                weighted_cos_lanes_tier(p, &args, &w8),
+                "{tier}"
+            );
+        }
+    }
+
+    #[test]
+    fn unavailable_tier_falls_back_to_portable() {
+        // requesting a tier this CPU lacks must not be UB — the guard
+        // routes to portable, so results still match bitwise
+        let a = seq(19, |i| i as f64 * 0.5 - 1.0);
+        let b = seq(19, |i| 1.0 - i as f64 * 0.1);
+        let want = dot_tier(SimdTier::Portable, &a, &b);
+        for tier in [SimdTier::Neon, SimdTier::Avx2, SimdTier::Avx512] {
+            assert_eq!(dot_tier(tier, &a, &b), want);
+        }
+    }
+
+    #[test]
     fn cos_lanes_match_scalar_bitwise() {
         let xs = seq(LANES, |i| i as f64 * 1.37 - 3.0);
         let args: [f64; LANES] = xs.as_slice().try_into().unwrap();
-        let lanes = fast_cos_lanes(&args);
-        for l in 0..LANES {
-            assert_eq!(lanes[l], fast_cos(args[l]));
-        }
-        let scaled = scaled_cos_lanes(&args, 0.25);
-        for l in 0..LANES {
-            assert_eq!(scaled[l], 0.25 * fast_cos(args[l]));
+        for tier in available_tiers() {
+            let lanes = fast_cos_lanes_tier(tier, &args);
+            for l in 0..LANES {
+                assert_eq!(lanes[l], fast_cos(args[l]), "{tier} l={l}");
+            }
+            let scaled = scaled_cos_lanes_tier(tier, &args, 0.25);
+            for l in 0..LANES {
+                assert_eq!(scaled[l], 0.25 * fast_cos(args[l]), "{tier} l={l}");
+            }
         }
     }
 
@@ -517,13 +1609,19 @@ mod tests {
         let xs = seq(LANES, |i| i as f64 * 0.91 - 2.0);
         let args: [f64; LANES] = xs.as_slice().try_into().unwrap();
         let w = seq(LANES, |i| 0.125 + i as f64 * 0.0625);
-        let lanes = weighted_cos_lanes(&args, &w);
-        for l in 0..LANES {
-            assert_eq!(lanes[l], w[l] * fast_cos(args[l]));
+        for tier in available_tiers() {
+            let lanes = weighted_cos_lanes_tier(tier, &args, &w);
+            for l in 0..LANES {
+                assert_eq!(lanes[l], w[l] * fast_cos(args[l]), "{tier} l={l}");
+            }
+            // uniform weights collapse to the scaled epilogue exactly
+            let uniform = vec![0.25; LANES];
+            assert_eq!(
+                weighted_cos_lanes_tier(tier, &args, &uniform),
+                scaled_cos_lanes_tier(tier, &args, 0.25),
+                "{tier}"
+            );
         }
-        // uniform weights collapse to the scaled epilogue exactly
-        let uniform = vec![0.25; LANES];
-        assert_eq!(weighted_cos_lanes(&args, &uniform), scaled_cos_lanes(&args, 0.25));
     }
 
     #[test]
@@ -551,16 +1649,18 @@ mod tests {
     #[test]
     fn f32_writebacks_round_per_element() {
         let x = seq(5, |i| i as f64 + 0.125);
-        let mut y = vec![1.0f32; 5];
-        axpy_into_f32(0.5, &x, &mut y);
-        for (i, &v) in y.iter().enumerate() {
-            assert_eq!(v, 1.0f32 + (0.5 * x[i]) as f32);
-        }
-        let pi = seq(5, |i| 1.0 - 0.2 * i as f64);
-        let mut row = vec![2.0f32; 5];
-        scale_rank1_row_f32(&mut row, 1.5, 0.25, &pi);
-        for (k, &v) in row.iter().enumerate() {
-            assert_eq!(v, (2.0f64 * 1.5 - 0.25 * pi[k]) as f32);
+        for tier in available_tiers() {
+            let mut y = vec![1.0f32; 5];
+            axpy_into_f32_tier(tier, 0.5, &x, &mut y);
+            for (i, &v) in y.iter().enumerate() {
+                assert_eq!(v, 1.0f32 + (0.5 * x[i]) as f32, "{tier}");
+            }
+            let pi = seq(5, |i| 1.0 - 0.2 * i as f64);
+            let mut row = vec![2.0f32; 5];
+            scale_rank1_row_f32_tier(tier, &mut row, 1.5, 0.25, &pi);
+            for (k, &v) in row.iter().enumerate() {
+                assert_eq!(v, (2.0f64 * 1.5 - 0.25 * pi[k]) as f32, "{tier}");
+            }
         }
     }
 
@@ -579,10 +1679,18 @@ mod tests {
                 weighted_combine_rows(n_cols, &mat, &rows, &weights, &mut got);
                 let mut want = vec![0.0; n_cols];
                 for (&r, &w) in rows.iter().zip(&weights) {
-                    axpy(w, &mat[r * n_cols..(r + 1) * n_cols], &mut want);
+                    // the contract names the portable axpy order
+                    portable_axpy(w, &mat[r * n_cols..(r + 1) * n_cols], &mut want);
                 }
                 assert_eq!(got, want, "n_cols={n_cols} terms={terms}");
             }
+        }
+    }
+
+    // the axpy formulation the combine contract is stated against
+    fn portable_axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
         }
     }
 
@@ -626,11 +1734,20 @@ mod tests {
         let packed: Vec<f64> = (0..packed_len(n)).map(|k| (k as f64 * 0.37).sin()).collect();
         let dense = unpack_symmetric(n, &packed);
         let z = seq(n, |i| (i as f64 * 0.61).cos());
-        let mut out = vec![f64::NAN; n]; // stale contents must not leak
-        packed_symv(n, &packed, &z, &mut out);
+        let mut portable_out = vec![0.0; n];
+        packed_symv_tier(SimdTier::Portable, n, &packed, &z, &mut portable_out);
         for i in 0..n {
             let want: f64 = (0..n).map(|j| dense[i * n + j] * z[j]).sum();
-            assert!((out[i] - want).abs() < 1e-12, "i={i}: {} vs {want}", out[i]);
+            assert!(
+                (portable_out[i] - want).abs() < 1e-12,
+                "i={i}: {} vs {want}",
+                portable_out[i]
+            );
+        }
+        for tier in available_tiers() {
+            let mut out = vec![f64::NAN; n]; // stale contents must not leak
+            packed_symv_tier(tier, n, &packed, &z, &mut out);
+            assert_eq!(out, portable_out, "{tier}");
         }
     }
 
@@ -640,17 +1757,19 @@ mod tests {
         let before: Vec<f64> = (0..packed_len(n)).map(|k| (k as f64 * 0.29).cos()).collect();
         let pi = seq(n, |i| 0.4 * i as f64 - 1.1);
         let (s, c) = (1.0 / 0.999, 0.37);
-        let mut p = before.clone();
-        packed_rank1_scaled(n, &mut p, &pi, s, c);
-        let mut off = 0;
-        for i in 0..n {
-            for k in 0..(n - i) {
-                let j = i + k;
-                // the exact dense-update expression, same op order
-                let want = before[off + k] * s - (c * pi[i]) * pi[j];
-                assert_eq!(p[off + k], want, "({i},{j})");
+        for tier in available_tiers() {
+            let mut p = before.clone();
+            packed_rank1_scaled_tier(tier, n, &mut p, &pi, s, c);
+            let mut off = 0;
+            for i in 0..n {
+                for k in 0..(n - i) {
+                    let j = i + k;
+                    // the exact dense-update expression, same op order
+                    let want = before[off + k] * s - (c * pi[i]) * pi[j];
+                    assert_eq!(p[off + k], want, "{tier} ({i},{j})");
+                }
+                off += n - i;
             }
-            off += n - i;
         }
     }
 }

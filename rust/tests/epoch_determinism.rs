@@ -1,0 +1,151 @@
+//! Integration tests for the work-stealing epoch scheduler's determinism
+//! contract (ISSUE 7 acceptance): sessions are the parallel unit and
+//! per-session row order is sequential, so the **same traffic replayed at
+//! any worker count produces bitwise-identical per-session trajectories**
+//! — identical training errors, identical predictions, identical final θ
+//! (observed through served predictions), and exact `samples_seen`.
+//! Stealing may move whole sessions between workers; it must never
+//! reorder, split, or dedupe a session's ops.
+//!
+//! The fleet mixes KLMS (O(D) per row) and KRLS (O(D²) per row) sessions
+//! so the per-session costs are genuinely imbalanced — the schedule the
+//! stealer picks differs across worker counts, which is exactly what the
+//! equality assertions must be insensitive to.
+
+use std::sync::atomic::Ordering;
+
+use rff_kaf::coordinator::{
+    Algo, CoordinatorService, EpochOp, ServiceConfig, SessionConfig, SessionTraffic,
+};
+use rff_kaf::rng::{run_rng, Distribution, Normal};
+
+const SESSIONS: usize = 6;
+const ROUNDS: usize = 4;
+const TRAIN_ROWS: usize = 12;
+const PROBE_ROWS: usize = 5;
+
+/// A fresh mixed KLMS/KRLS fleet over one interned map. Fresh services
+/// hand out the same id sequence, so results are comparable across runs.
+fn fleet() -> (CoordinatorService, Vec<u64>) {
+    let svc = CoordinatorService::start(ServiceConfig::default(), None);
+    let ids = (0..SESSIONS)
+        .map(|i| {
+            let algo = if i % 2 == 0 {
+                Algo::RffKlms { mu: 0.8 }
+            } else {
+                Algo::RffKrls { beta: 0.999, lambda: 1e-3 }
+            };
+            let cfg = SessionConfig { features: 48, algo, ..SessionConfig::paper_default() };
+            svc.add_session_from_spec(cfg, 5).expect("session spec")
+        })
+        .collect();
+    (svc, ids)
+}
+
+/// Deterministic interleaved traffic: per session, `ROUNDS` repetitions
+/// of a `TRAIN_ROWS`-row `TrainBatch` followed by a `PROBE_ROWS`-row
+/// `PredictBatch` — predicts must observe exactly the θ published by the
+/// preceding commit, at every worker count.
+fn interleaved_traffic(ids: &[u64], dim: usize) -> Vec<SessionTraffic> {
+    let normal = Normal::standard();
+    ids.iter()
+        .enumerate()
+        .map(|(k, &sid)| {
+            let mut rng = run_rng(70, k as u64);
+            let mut ops = Vec::new();
+            for _ in 0..ROUNDS {
+                let xs = normal.sample_vec(&mut rng, TRAIN_ROWS * dim);
+                let ys: Vec<f64> = (0..TRAIN_ROWS).map(|r| xs[r * dim].sin()).collect();
+                ops.push(EpochOp::TrainBatch { xs, ys });
+                ops.push(EpochOp::PredictBatch {
+                    xs: normal.sample_vec(&mut rng, PROBE_ROWS * dim),
+                });
+            }
+            SessionTraffic { session: sid, ops }
+        })
+        .collect()
+}
+
+#[test]
+fn epoch_trajectories_are_identical_across_worker_counts() {
+    let dim = SessionConfig::paper_default().dim;
+    let normal = Normal::standard();
+    let mut probe_rng = run_rng(71, 0);
+    let final_probes: Vec<Vec<f64>> =
+        (0..16).map(|_| normal.sample_vec(&mut probe_rng, dim)).collect();
+
+    // reference trajectory: serial epoch (workers = 1 runs inline, no
+    // threads), then the final models' predictions on a held-out grid
+    let mut reference: Option<(Vec<_>, Vec<Vec<f64>>)> = None;
+
+    // 8 and 32 both exceed the core count and 32 exceeds the session
+    // count — excess workers must idle, not perturb
+    for workers in [1usize, 2, 8, 32] {
+        let (svc, ids) = fleet();
+        let traffic = interleaved_traffic(&ids, dim);
+        let results = svc.run_epoch(traffic, workers);
+
+        assert_eq!(results.len(), SESSIONS);
+        for r in &results {
+            assert_eq!(r.failed, None, "workers={workers}");
+            assert_eq!(r.errors.len(), ROUNDS * TRAIN_ROWS);
+            assert_eq!(r.predictions.len(), ROUNDS * PROBE_ROWS);
+        }
+
+        let rows = (SESSIONS * ROUNDS * TRAIN_ROWS) as u64;
+        let probes = (SESSIONS * ROUNDS * PROBE_ROWS) as u64;
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), rows);
+        assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), probes);
+        // every epoch predict is served from the published state — none
+        // may fall back to the session mutex
+        assert_eq!(svc.stats().lockfree_predicts.load(Ordering::Relaxed), probes);
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 0);
+
+        // the trajectory each session actually took: exact sample count
+        // plus the final model's served predictions, bitwise
+        let finals: Vec<Vec<f64>> = ids
+            .iter()
+            .map(|&id| {
+                let sess = svc.remove_session(id).expect("session survives the epoch");
+                assert_eq!(sess.samples_seen(), ROUNDS * TRAIN_ROWS, "workers={workers}");
+                final_probes.iter().map(|x| sess.predict(x)).collect()
+            })
+            .collect();
+        svc.shutdown();
+
+        match &reference {
+            None => reference = Some((results, finals)),
+            Some((ref_results, ref_finals)) => {
+                assert_eq!(&results, ref_results, "per-op results diverged at workers={workers}");
+                assert_eq!(&finals, ref_finals, "final θ diverged at workers={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn epoch_predicts_match_the_router_predict_path_bitwise() {
+    // the epoch path's wait-free published-state predicts and the
+    // router's predict path must serve the same numbers for the same θ
+    let dim = SessionConfig::paper_default().dim;
+    let (svc, ids) = fleet();
+    let traffic = interleaved_traffic(&ids, dim);
+    let results = svc.run_epoch(traffic, 2);
+
+    let normal = Normal::standard();
+    let mut rng = run_rng(72, 0);
+    for (r, &id) in results.iter().zip(&ids) {
+        assert_eq!(r.failed, None);
+        for _ in 0..4 {
+            let x = normal.sample_vec(&mut rng, dim);
+            let via_router = svc.predict_sync(id, x.clone()).expect("router predict");
+            let via_epoch = svc.run_epoch(
+                vec![SessionTraffic { session: id, ops: vec![EpochOp::PredictBatch { xs: x }] }],
+                1,
+            );
+            assert_eq!(via_epoch[0].failed, None);
+            assert_eq!(via_epoch[0].predictions, vec![via_router]);
+        }
+    }
+    svc.shutdown();
+}

@@ -1,5 +1,6 @@
-//! Property tests for the lane SIMD substrate's tail handling and the
-//! packed-triangular P layout (ISSUE 4 acceptance):
+//! Property tests for the lane SIMD substrate's tail handling, the
+//! packed-triangular P layout (ISSUE 4 acceptance), and the runtime
+//! dispatch tiers (ISSUE 7 acceptance):
 //!
 //! * lane kernels must match the per-feature **scalar reference**
 //!   bitwise for `D` and `n` coprime with `LANES`/`ROW_BLOCK`
@@ -8,7 +9,14 @@
 //! * packed ↔ dense round-trips are exact and the packed rank-1 update
 //!   matches the dense expression element for element;
 //! * the packed update touches exactly `D(D+1)/2` stored elements per
-//!   step (the documented loop/flop bound — half the dense `D²`).
+//!   step (the documented loop/flop bound — half the dense `D²`);
+//! * **dispatch parity**: every tier `available_tiers()` reports on the
+//!   running CPU (portable always; AVX2/AVX-512/NEON when detected)
+//!   reproduces the portable accumulation orders **bitwise `==`** —
+//!   through the composed row pipeline at every D in the grid and
+//!   through a full packed-KRLS recursion driven entirely by `*_tier`
+//!   kernels. The intrinsics are an implementation detail, never a
+//!   numeric fork.
 
 use rff_kaf::kaf::kernels::Kernel;
 use rff_kaf::kaf::{OnlineRegressor, RffKrls, RffMap};
@@ -145,6 +153,119 @@ fn packed_rank1_update_is_half_the_dense_work() {
         assert_eq!(p.len(), n * (n + 1) / 2);
         assert!(p.iter().all(|&v| v == 2.0), "every stored element written once (D={n})");
         assert_eq!(2 * p.len(), n * n + n, "stored-element count is half of D² (+D/2)");
+    }
+}
+
+/// Flattened feature-major Ω, as the lane kernels consume it.
+fn omega_flat(map: &RffMap) -> Vec<f64> {
+    let mut flat = Vec::with_capacity(map.dim() * map.features());
+    for i in 0..map.features() {
+        flat.extend_from_slice(map.omega(i));
+    }
+    flat
+}
+
+#[test]
+fn every_tier_composes_the_row_pipeline_bitwise() {
+    // the full lane row pipeline — fused dot+phase lanes, scaled cosine
+    // lanes, scalar tail — composed by hand on every available tier,
+    // checked bitwise against the map's own apply_into (which runs the
+    // *active* tier): proves every tier agrees with every other, at
+    // every D in the coprime grid, lane and tail alike
+    let mut rng = run_rng(0xB1, 0);
+    let normal = Normal::standard();
+    let tiers = simd::available_tiers();
+    assert!(tiers.contains(&simd::SimdTier::Portable));
+    assert!(tiers.contains(&simd::active_tier()), "active tier must be available");
+    for d in DIMS {
+        for feats in FEATS {
+            let map = RffMap::draw(&mut rng, Kernel::Gaussian { sigma: 2.5 }, d, feats);
+            let x = normal.sample_vec(&mut rng, d);
+            let mut want = vec![f64::NAN; feats];
+            map.apply_into(&x, &mut want);
+            let omega = omega_flat(&map);
+            for &tier in &tiers {
+                let mut got = vec![f64::NAN; feats];
+                let full = feats / LANES * LANES;
+                for i0 in (0..full).step_by(LANES) {
+                    let args = simd::phase_args_lane_tier(tier, &omega, map.phases(), &x, i0);
+                    got[i0..i0 + LANES]
+                        .copy_from_slice(&simd::scaled_cos_lanes_tier(tier, &args, map.scale()));
+                }
+                for i in full..feats {
+                    got[i] = map.scale()
+                        * simd::fast_cos(simd::phase_arg_tier(tier, &omega, map.phases(), &x, i));
+                }
+                assert_eq!(got, want, "tier={tier:?} d={d} D={feats}");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_tier_runs_the_packed_krls_recursion_bitwise() {
+    // a whole packed-RLS recursion (symv, two dots, axpy, rank-1 — the
+    // exact kernel sequence RffKrls::step runs) driven per tier on
+    // identical inputs: after 120 steps at D = 33 and D = 301, θ and the
+    // packed P must be bitwise identical across every available tier.
+    // Accumulated state is the harshest parity detector — a single ULP
+    // of divergence anywhere compounds and trips `==` within a step or
+    // two.
+    let normal = Normal::standard();
+    for feats in [33usize, 301] {
+        let (beta, lambda) = (0.999f64, 1e-2f64);
+        let mut reference: Option<(Vec<f64>, Vec<f64>)> = None;
+        for tier in simd::available_tiers() {
+            let mut rng = run_rng(0xB2, feats as u64);
+            let mut theta = vec![0.0f64; feats];
+            let mut p = vec![0.0f64; simd::packed_len(feats)];
+            for i in 0..feats {
+                p[simd::packed_row_start(feats, i)] = 1.0 / lambda;
+            }
+            let mut pi = vec![0.0f64; feats];
+            for t in 0..120 {
+                let z = normal.sample_vec(&mut rng, feats);
+                let y = (t as f64 * 0.1).sin();
+                simd::packed_symv_tier(tier, feats, &p, &z, &mut pi);
+                let denom = beta + simd::dot_tier(tier, &z, &pi);
+                let e = y - simd::dot_tier(tier, &theta, &z);
+                simd::axpy_tier(tier, e / denom, &pi, &mut theta);
+                let inv_beta = 1.0 / beta;
+                simd::packed_rank1_scaled_tier(tier, feats, &mut p, &pi, inv_beta, inv_beta / denom);
+            }
+            match &reference {
+                None => reference = Some((theta, p)),
+                Some((tref, pref)) => {
+                    assert_eq!(&theta, tref, "θ diverged on tier {tier:?} (D={feats})");
+                    assert_eq!(&p, pref, "P diverged on tier {tier:?} (D={feats})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_tier_agrees_on_mixed_precision_dots_bitwise() {
+    // the native-step f32 θ path: widening dots and f32 writebacks must
+    // be tier-invariant too (the coordinator's native_step kernels ride
+    // these), across lengths straddling every lane/tail boundary
+    let mut rng = run_rng(0xB3, 0);
+    let normal = Normal::standard();
+    for n in [1usize, 7, 8, 9, 33, 301] {
+        let a64 = normal.sample_vec(&mut rng, n);
+        let b64 = normal.sample_vec(&mut rng, n);
+        let a32: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+        let want_fw = simd::dot_f32_f64_tier(simd::SimdTier::Portable, &a32, &b64);
+        let want_wf = simd::dot_f64_f32_tier(simd::SimdTier::Portable, &b64, &a32);
+        let mut want_axpy = a32.clone();
+        simd::axpy_into_f32_tier(simd::SimdTier::Portable, 0.37, &b64, &mut want_axpy);
+        for tier in simd::available_tiers() {
+            assert_eq!(simd::dot_f32_f64_tier(tier, &a32, &b64), want_fw, "{tier:?} n={n}");
+            assert_eq!(simd::dot_f64_f32_tier(tier, &b64, &a32), want_wf, "{tier:?} n={n}");
+            let mut got = a32.clone();
+            simd::axpy_into_f32_tier(tier, 0.37, &b64, &mut got);
+            assert_eq!(got, want_axpy, "{tier:?} n={n}");
+        }
     }
 }
 
