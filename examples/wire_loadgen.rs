@@ -1,0 +1,140 @@
+//! **Wire front-door driver**: boots a coordinator service + TCP
+//! daemon in-process, fires the closed-loop load generator at it over
+//! real loopback sockets, and prints client-side throughput/latency
+//! next to the server's own `stats`-verb counters (coalescing factor,
+//! rejection counts, per-class router latency).
+//!
+//! ```bash
+//! cargo run --release --example wire_loadgen
+//! # heavier: 64 connections, 5k rows each, coalescing ablation off:
+//! cargo run --release --example wire_loadgen -- \
+//!     --connections 64 --rows 5000 --coalesce-off
+//! # tune the coalescer:
+//! cargo run --release --example wire_loadgen -- --max-batch 128 --flush-us 500
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §Wire used `benches/wire.rs`
+//! (same loadgen, fixed sweep) — this example is the interactive knob
+//! box for exploring one point at a time.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rff_kaf::coordinator::{CoordinatorService, ServiceConfig, SessionConfig};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, WireClient};
+use rff_kaf::daemon::{CoalesceConfig, Daemon, DaemonConfig};
+use rff_kaf::exec::default_parallelism;
+use rff_kaf::util::{Args, JsonValue};
+
+fn main() {
+    let args = Args::from_env();
+    let connections: usize = args.get_or("connections", 8);
+    let sessions: usize = args.get_or("sessions", 8);
+    let rows: usize = args.get_or("rows", 2000);
+    let window: usize = args.get_or("window", 64);
+    let features: usize = args.get_or("features", 64);
+    let predict_every: usize = args.get_or("predict-every", 5);
+    let max_batch: usize = args.get_or("max-batch", 64);
+    let flush_us: u64 = args.get_or("flush-us", 200);
+    let coalesce_on = !args.flag("coalesce-off");
+
+    let svc = Arc::new(CoordinatorService::start(
+        ServiceConfig {
+            workers: default_parallelism().min(8),
+            queue_capacity: 4096,
+            ..ServiceConfig::default()
+        },
+        None,
+    ));
+    let ids: Vec<u64> = (0..sessions)
+        .map(|_| {
+            let cfg = SessionConfig { features, ..SessionConfig::paper_default() };
+            svc.add_session_from_spec(cfg, 7).expect("session spec")
+        })
+        .collect();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            max_connections: connections,
+            coalesce: CoalesceConfig {
+                enabled: coalesce_on,
+                max_batch,
+                flush_wait: Duration::from_micros(flush_us),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .expect("daemon start");
+    let addr = daemon.local_addr();
+    println!(
+        "daemon on {addr}: {connections} connections x {rows} rows, {sessions} sessions, \
+         D={features}, coalesce={} (max_batch={max_batch}, flush={flush_us}us)",
+        if coalesce_on { "on" } else { "off" },
+    );
+
+    let report = run_loadgen(
+        addr,
+        &LoadgenConfig {
+            connections,
+            sessions: ids,
+            rows_per_connection: rows,
+            dim: SessionConfig::paper_default().dim,
+            window,
+            predict_every,
+            seed: 42,
+        },
+    )
+    .expect("loadgen run");
+
+    println!("\n── client side ─────────────────────────────────────────");
+    println!("  ok replies    : {}", report.ok_replies);
+    println!("  rejections    : {}", report.wire_errors);
+    println!("  lost replies  : {}", report.lost_replies);
+    println!("  wall clock    : {:.3} s", report.elapsed.as_secs_f64());
+    println!("  throughput    : {:.0} rows/s", report.rows_per_sec());
+    for (q, tag) in [(0.5, "p50"), (0.95, "p95"), (0.99, "p99")] {
+        println!("  latency {tag}   : {:9.1} us", report.latency.quantile(q) * 1e6);
+    }
+
+    // server side, over the wire like any other client would see it
+    let mut probe = WireClient::connect(addr).expect("stats connection");
+    let stats = probe.call_stats().expect("stats verb");
+    println!("\n── server side (stats verb) ────────────────────────────");
+    for section in ["service", "coalesce", "daemon"] {
+        if let Some(JsonValue::Object(fields)) = stats.get(section) {
+            for (key, value) in fields {
+                if let JsonValue::Number(v) = value {
+                    if *v != 0.0 {
+                        println!("  {section:8} {key:22}: {v:.0}");
+                    }
+                }
+            }
+        }
+    }
+    if let Some(c) = stats.get("coalesce") {
+        let num = |k: &str| c.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let (rows_in, batches) = (num("train_rows"), num("train_batches"));
+        if batches > 0.0 {
+            println!("  train coalescing factor: {:.1} rows/batch", rows_in / batches);
+        }
+    }
+    if let Some(JsonValue::Object(classes)) = stats.get("latency") {
+        for (class, h) in classes {
+            let num = |k: &str| h.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            if num("count") > 0.0 {
+                println!(
+                    "  router {class:9}: n={:6.0}  p50={:9.1}us  p99={:9.1}us",
+                    num("count"),
+                    num("p50_s") * 1e6,
+                    num("p99_s") * 1e6,
+                );
+            }
+        }
+    }
+    drop(probe);
+
+    daemon.shutdown();
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}

@@ -1,0 +1,121 @@
+//! Bench — wire front-door throughput and latency over loopback TCP,
+//! with the cross-connection coalescing ablation.
+//!
+//! Protocol (EXPERIMENTS.md §Wire): for each connection count in
+//! {1, 4, 16, 64} and each coalescing mode (on / off), a fresh service
+//! + daemon serves a closed-loop load generator (window-bounded
+//! pipelining, 4:1 train:predict mix, sessions interleaved across
+//! connections so coalescing has cross-connection traffic to merge).
+//! Recorded per point: wall clock of the whole run, end-to-end
+//! p50/p95/p99 request latency, and rows/s in the meta block. Every
+//! run asserts zero lost replies and zero rejections — the numbers are
+//! only comparable when nothing was dropped.
+//!
+//! Emits `BENCH_wire.json`.
+//!
+//! `cargo bench --bench wire [-- --quick]`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rff_kaf::bench::Bencher;
+use rff_kaf::coordinator::{CoordinatorService, ServiceConfig, SessionConfig};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig};
+use rff_kaf::daemon::{CoalesceConfig, Daemon, DaemonConfig};
+use rff_kaf::exec::default_parallelism;
+use rff_kaf::util::{Args, JsonValue};
+
+const CONN_COUNTS: [usize; 4] = [1, 4, 16, 64];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let quick = args.flag("quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let (rows_per_conn, n_sessions, features, window) =
+        if quick { (400usize, 8usize, 32usize, 32usize) } else { (2000, 16, 128, 64) };
+    let workers = default_parallelism().min(8);
+
+    b.set_meta("rows_per_connection", JsonValue::Number(rows_per_conn as f64));
+    b.set_meta("sessions", JsonValue::Number(n_sessions as f64));
+    b.set_meta("features", JsonValue::Number(features as f64));
+    b.set_meta("window", JsonValue::Number(window as f64));
+    b.set_meta("workers", JsonValue::Number(workers as f64));
+    b.set_meta(
+        "connection_counts",
+        JsonValue::Array(CONN_COUNTS.iter().map(|&c| JsonValue::Number(c as f64)).collect()),
+    );
+
+    for coalesce_on in [true, false] {
+        let mode = if coalesce_on { "on" } else { "off" };
+        for &conns in &CONN_COUNTS {
+            // fresh fleet per point: every (mode, conns) cell trains
+            // the identical per-connection trajectories from θ = 0
+            let svc = Arc::new(CoordinatorService::start(
+                ServiceConfig {
+                    workers,
+                    // with coalescing off every op is its own queue
+                    // slot: leave headroom above conns × window so the
+                    // ablation measures dispatch cost, not rejections
+                    queue_capacity: 4096,
+                    first_wait: Duration::from_millis(5),
+                    ..ServiceConfig::default()
+                },
+                None,
+            ));
+            let ids: Vec<u64> = (0..n_sessions)
+                .map(|_| {
+                    let cfg = SessionConfig { features, ..SessionConfig::paper_default() };
+                    svc.add_session_from_spec(cfg, 7).expect("session spec")
+                })
+                .collect();
+            let daemon = Daemon::start(
+                Arc::clone(&svc),
+                DaemonConfig {
+                    max_connections: conns,
+                    coalesce: CoalesceConfig { enabled: coalesce_on, ..CoalesceConfig::default() },
+                    ..DaemonConfig::default()
+                },
+            )
+            .expect("daemon start");
+
+            let report = run_loadgen(
+                daemon.local_addr(),
+                &LoadgenConfig {
+                    connections: conns,
+                    sessions: ids,
+                    rows_per_connection: rows_per_conn,
+                    dim: SessionConfig::paper_default().dim,
+                    window,
+                    predict_every: 5,
+                    seed: 42,
+                },
+            )
+            .expect("loadgen run");
+            assert_eq!(report.lost_replies, 0, "lost replies at conns={conns} mode={mode}");
+            assert_eq!(report.wire_errors, 0, "rejections at conns={conns} mode={mode}");
+            assert_eq!(report.ok_replies, (conns * rows_per_conn) as u64);
+
+            let label = format!("wire_c{conns}_coalesce_{mode}");
+            b.record(&label, report.elapsed);
+            for (q, tag) in [(0.5, "p50"), (0.95, "p95"), (0.99, "p99")] {
+                b.record_secs(&format!("{label}_{tag}"), report.latency.quantile(q));
+            }
+            b.set_meta(&format!("{label}_rows_per_sec"), JsonValue::Number(report.rows_per_sec()));
+            println!(
+                "  conns={conns:2} coalesce={mode:3}: {:9.0} rows/s  p50={:7.1}us p99={:7.1}us",
+                report.rows_per_sec(),
+                report.latency.quantile(0.5) * 1e6,
+                report.latency.quantile(0.99) * 1e6,
+            );
+
+            daemon.shutdown();
+            if let Ok(s) = Arc::try_unwrap(svc) {
+                s.shutdown();
+            }
+        }
+    }
+
+    b.write_json("wire").expect("writing BENCH_wire.json");
+    println!("\n{} measurements total", b.results().len());
+}

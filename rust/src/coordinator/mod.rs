@@ -5,9 +5,21 @@
 //! Architecture (vLLM-router-shaped, scaled to this paper):
 //!
 //! ```text
-//!  clients ──► submit ──► BoundedQueue (backpressure)
-//!                             │
+//!  TCP peers ──► daemon (crate::daemon): framed JSON verbs, per-
+//!     │          connection in-flight caps, reject-with-diagnostic
+//!     │          on overload
+//!     │ single-row train/predict        batch & admin verbs
+//!     ▼                                       │
+//!  Coalescer: cross-connection per-session    │
+//!  buffers → TrainBatch / PredictBatch        │
+//!  (bitwise = sequential per-row)             │
+//!     └───────────────┬───────────────────────┘
+//!                     ▼
+//!  in-process clients ──► submit / try_submit ──► BoundedQueue
+//!                             │                   (backpressure)
 //!                       router worker(s)
+//!                   (per-class service-time
+//!                    histograms → LatencyStats)
 //!         ┌───────────────────┼──────────────────────┐
 //!    train path          predict path           snapshot path
 //!  FilterSession        DynamicBatcher:        SessionSnapshot
@@ -154,7 +166,7 @@ mod store;
 
 pub use orchestrator::{McConfig, McResult, Orchestrator};
 pub use service::{
-    CoordinatorService, EpochOp, Request, Response, ServiceConfig, ServiceStats,
+    CoordinatorService, EpochOp, LatencyStats, Request, Response, ServiceConfig, ServiceStats,
     SessionEpochResult, SessionTraffic,
 };
 pub use session::{

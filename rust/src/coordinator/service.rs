@@ -65,13 +65,14 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::exec::{run_stealing, BoundedQueue};
 use crate::kaf::MapRegistry;
+use crate::metrics::LogHistogram;
 use crate::runtime::ExecutorHandle;
 
 use super::session::{DiffusionGroupConfig, FilterSession, SessionConfig};
@@ -191,6 +192,22 @@ pub enum Request {
         /// Response channel.
         resp: Sender<Response>,
     },
+    /// Predict `n` rows against one session in a single request —
+    /// the pre-batched dual of [`Request::TrainBatch`], and what the
+    /// wire daemon's coalescer emits after merging single-row predict
+    /// traffic from many connections. Served off the lock-free
+    /// published [`PredictState`](super::session::PredictState) via one
+    /// blocked `predict_batch` kernel call; one
+    /// [`Response::Predictions`] carries all `n` values in row order.
+    /// Stats count the rows, not the request.
+    PredictBatch {
+        /// Target session id.
+        session: u64,
+        /// Row-major `[n, dim]` probes.
+        xs: Vec<f64>,
+        /// Response channel (receives [`Response::Predictions`]).
+        resp: Sender<Response>,
+    },
     /// Flush any buffered partial chunk of `session`.
     Flush {
         /// Target session id.
@@ -230,6 +247,8 @@ pub enum Response {
     Trained(Vec<f64>),
     /// A prediction.
     Predicted(f64),
+    /// Predictions from a [`Request::PredictBatch`], in row order.
+    Predictions(Vec<f64>),
     /// A serialized session snapshot.
     Snapshot(String),
     /// A snapshot was installed.
@@ -316,6 +335,13 @@ pub struct ServiceStats {
     pub predict_rows: AtomicU64,
     /// Requests that returned an error.
     pub errors: AtomicU64,
+    /// Responses that could not be delivered because the requester's
+    /// receiver was already gone (client disconnected mid-request, or a
+    /// sync caller timed out and dropped its channel). The operation
+    /// itself still ran and is counted under its own counter; this one
+    /// makes disconnect storms observable instead of silently eating
+    /// the send error.
+    pub dropped_responses: AtomicU64,
     /// Explicit [`Request::Snapshot`]s served successfully.
     pub snapshots: AtomicU64,
     /// Explicit [`Request::Restore`]s served successfully.
@@ -323,6 +349,71 @@ pub struct ServiceStats {
     /// Eviction/restore bookkeeping, shared with the session store (the
     /// store increments these as it spills and re-admits sessions).
     pub spill: Arc<SpillStats>,
+    /// Per-request-class service-time histograms recorded at the router
+    /// (p50/p95/p99 via [`LogHistogram::quantile`]; the daemon's `stats`
+    /// verb exports them over the wire).
+    pub latency: LatencyStats,
+}
+
+/// Router-side service-time histograms, one per request class, in
+/// **seconds** (a [`LogHistogram`] spans 1 ns – 1000 s at ~2% bucket
+/// resolution). "Service time" is arm execution time at the router
+/// worker — from the moment a worker starts the request to the moment
+/// its response is sent — *not* end-to-end latency: queue wait and wire
+/// time are excluded, which is exactly what makes the histograms useful
+/// for telling "the router is slow" apart from "the queue is deep".
+///
+/// Batched requests record once **per row** ([`LogHistogram::record_n`])
+/// so quantiles stay row-weighted and comparable between batched and
+/// single-row traffic.
+#[derive(Default)]
+pub struct LatencyStats {
+    /// Train-class requests: `Train`, `TrainBatch`, `TrainDiffusion`,
+    /// `Flush`.
+    pub train: Mutex<LogHistogram>,
+    /// Predict-class requests: `Predict` (recorded per gathered group)
+    /// and `PredictBatch`.
+    pub predict: Mutex<LogHistogram>,
+    /// [`Request::Snapshot`] serialization time.
+    pub snapshot: Mutex<LogHistogram>,
+    /// [`Request::Restore`] decode + install time.
+    pub restore: Mutex<LogHistogram>,
+}
+
+impl LatencyStats {
+    /// The classes in a stable export order, with their wire names.
+    pub fn classes(&self) -> [(&'static str, &Mutex<LogHistogram>); 4] {
+        [
+            ("train", &self.train),
+            ("predict", &self.predict),
+            ("snapshot", &self.snapshot),
+            ("restore", &self.restore),
+        ]
+    }
+}
+
+impl std::fmt::Debug for LatencyStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("LatencyStats");
+        for (name, hist) in self.classes() {
+            let h = hist.lock().unwrap_or_else(PoisonError::into_inner);
+            d.field(name, &format_args!("{}", h.report_ms(name)));
+        }
+        d.finish()
+    }
+}
+
+/// Record one observation of `dt` into a latency histogram.
+fn observe(hist: &Mutex<LogHistogram>, dt: Duration) {
+    observe_n(hist, dt, 1);
+}
+
+/// Record `rows` row-observations of the same service time `dt`.
+fn observe_n(hist: &Mutex<LogHistogram>, dt: Duration, rows: u64) {
+    // clamp to the histogram's 1 ns floor so a sub-tick measurement
+    // still lands in the bottom bucket instead of the zero clamp
+    let secs = dt.as_secs_f64().max(1e-9);
+    hist.lock().unwrap_or_else(PoisonError::into_inner).record_n(secs, rows);
 }
 
 /// The running coordinator service.
@@ -459,6 +550,22 @@ impl CoordinatorService {
             .map_err(|_| anyhow::anyhow!("service shut down"))
     }
 
+    /// Non-blocking submit: `Ok(true)` = accepted, `Ok(false)` = the
+    /// queue is at capacity *right now*. Callers that must never park on
+    /// a full queue (the wire daemon's direct dispatch path) use this to
+    /// reject with a diagnostic instead of buffering unboundedly or
+    /// stalling a connection's reader. `Err` only after shutdown.
+    pub fn try_submit(&self, req: Request) -> Result<bool> {
+        self.queue
+            .try_push(req)
+            .map_err(|_| anyhow::anyhow!("service shut down"))
+    }
+
+    /// The request queue's capacity (for overload diagnostics).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
     /// Service statistics.
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
@@ -520,6 +627,18 @@ impl CoordinatorService {
         self.submit(Request::Predict { session, x, resp: tx })?;
         match rx.recv()? {
             Response::Predicted(v) => Ok(v),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Predict a whole row-major `[n, dim]` batch of probes against one
+    /// session and wait for the `n` predictions.
+    pub fn predict_batch_sync(&self, session: u64, xs: Vec<f64>) -> Result<Vec<f64>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(Request::PredictBatch { session, xs, resp: tx })?;
+        match rx.recv()? {
+            Response::Predictions(v) => Ok(v),
             Response::Error(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
@@ -675,6 +794,7 @@ fn router_loop(
         for req in batch {
             match req {
                 Request::Train { session, x, y, resp } => {
+                    let t0 = Instant::now();
                     // per-session lock only: trains on other sessions in
                     // other workers proceed in parallel
                     let out = match sessions.get(session) {
@@ -695,8 +815,10 @@ fn router_loop(
                         stats.trained.fetch_add(1, Ordering::Relaxed);
                     }
                     respond(&stats, resp, out);
+                    observe(&stats.latency.train, t0.elapsed());
                 }
                 Request::TrainBatch { session, xs, ys, resp } => {
+                    let t0 = Instant::now();
                     let rows = ys.len() as u64;
                     let out = match sessions.get(session) {
                         Some(cell) => {
@@ -709,14 +831,17 @@ fn router_loop(
                         }
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
-                    if out.is_ok() {
+                    let ok = out.is_ok();
+                    if ok {
                         // rows, not requests — n rows here count the same
                         // as n single Train requests
                         stats.trained.fetch_add(rows, Ordering::Relaxed);
                     }
                     respond(&stats, resp, out);
+                    observe_n(&stats.latency.train, t0.elapsed(), if ok { rows.max(1) } else { 1 });
                 }
                 Request::TrainDiffusion { group, xs, ys, resp } => {
+                    let t0 = Instant::now();
                     let rows = ys.len() as u64;
                     let out = match sessions.get(group) {
                         Some(cell) => {
@@ -729,14 +854,17 @@ fn router_loop(
                         }
                         None => Err(anyhow::anyhow!("no session {group}")),
                     };
-                    if out.is_ok() {
+                    let ok = out.is_ok();
+                    if ok {
                         // node-rows: rounds × nodes per request, matching
                         // the group's samples_seen accounting
                         stats.diffusion_rows.fetch_add(rows, Ordering::Relaxed);
                     }
                     respond(&stats, resp, out);
+                    observe_n(&stats.latency.train, t0.elapsed(), if ok { rows.max(1) } else { 1 });
                 }
                 Request::Flush { session, resp } => {
+                    let t0 = Instant::now();
                     let out = match sessions.get(session) {
                         Some(cell) => {
                             let mut s = cell.lock();
@@ -749,8 +877,10 @@ fn router_loop(
                         None => Err(anyhow::anyhow!("no session {session}")),
                     };
                     respond(&stats, resp, out);
+                    observe(&stats.latency.train, t0.elapsed());
                 }
                 Request::Snapshot { session, resp } => {
+                    let t0 = Instant::now();
                     // resident sessions serialize under their own lock (a
                     // consistent point-in-time state, buffered rows
                     // included, nothing flushed or dispatched); spilled
@@ -764,8 +894,10 @@ fn router_loop(
                         stats.snapshots.fetch_add(1, Ordering::Relaxed);
                     }
                     respond(&stats, resp, out);
+                    observe(&stats.latency.snapshot, t0.elapsed());
                 }
                 Request::Restore { session, snapshot, resp } => {
+                    let t0 = Instant::now();
                     // decode outside any lock (it can be large), then one
                     // store insert — replacing any current occupant is the
                     // point (rollback/migration semantics)
@@ -785,6 +917,41 @@ fn router_loop(
                         stats.restored.fetch_add(1, Ordering::Relaxed);
                     }
                     respond(&stats, resp, out);
+                    observe(&stats.latency.restore, t0.elapsed());
+                }
+                Request::PredictBatch { session, xs, resp } => {
+                    let t0 = Instant::now();
+                    // the pre-batched predict path: serve the whole batch
+                    // off the lock-free published state via one blocked
+                    // kernel call — no per-row gathering, no session lock
+                    let out = match sessions.get(session) {
+                        Some(cell) => {
+                            let snap = cell.predict_handle();
+                            drop(cell);
+                            let dim = snap.dim();
+                            if xs.len() % dim != 0 {
+                                Err(anyhow::anyhow!(
+                                    "predict probes ({} values) not a multiple of dim {dim} \
+                                     for session {session}",
+                                    xs.len()
+                                ))
+                            } else {
+                                let n = xs.len() / dim;
+                                let mut ys = vec![0.0; n];
+                                snap.predict_batch(&xs, &mut ys);
+                                stats.predicted.fetch_add(n as u64, Ordering::Relaxed);
+                                stats.lockfree_predicts.fetch_add(n as u64, Ordering::Relaxed);
+                                Ok(Response::Predictions(ys))
+                            }
+                        }
+                        None => Err(anyhow::anyhow!("no session {session}")),
+                    };
+                    let rows = match &out {
+                        Ok(Response::Predictions(ys)) => ys.len().max(1) as u64,
+                        _ => 1,
+                    };
+                    respond(&stats, resp, out);
+                    observe_n(&stats.latency.predict, t0.elapsed(), rows);
                 }
                 Request::Predict { session, x, resp } => predicts.push((session, x, resp)),
             }
@@ -812,7 +979,17 @@ fn respond(stats: &ServiceStats, tx: Sender<Response>, out: Result<Response>) {
             Response::Error(e.to_string())
         }
     };
-    let _ = tx.send(msg); // receiver may have hung up; that's fine
+    send_tracked(stats, &tx, msg);
+}
+
+/// Send a response, counting an undeliverable one (receiver already
+/// dropped — client gone mid-request) under
+/// [`ServiceStats::dropped_responses`] instead of discarding the error.
+/// The operation already ran; this is delivery accounting only.
+fn send_tracked(stats: &ServiceStats, tx: &Sender<Response>, msg: Response) {
+    if tx.send(msg).is_err() {
+        stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Group predicts by session config and, when PJRT is available and the
@@ -841,11 +1018,14 @@ fn dispatch_predicts(
         by_session.entry(sid).or_default().push((x, tx));
     }
     for (sid, rows) in by_session {
+        let t0 = Instant::now();
+        let n_in = rows.len() as u64;
         let Some(cell) = sessions.get(sid) else {
             for (_, tx) in rows {
                 stats.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Response::Error(format!("no session {sid}")));
+                send_tracked(stats, &tx, Response::Error(format!("no session {sid}")));
             }
+            observe_n(&stats.latency.predict, t0.elapsed(), n_in);
             continue;
         };
         // wait-free load of the state published at the last train
@@ -862,15 +1042,20 @@ fn dispatch_predicts(
                     Some((x, tx))
                 } else {
                     stats.errors.fetch_add(1, Ordering::Relaxed);
-                    let _ = tx.send(Response::Error(format!(
-                        "predict dim mismatch for session {sid}: got {}, want {dim}",
-                        x.len()
-                    )));
+                    send_tracked(
+                        stats,
+                        &tx,
+                        Response::Error(format!(
+                            "predict dim mismatch for session {sid}: got {}, want {dim}",
+                            x.len()
+                        )),
+                    );
                     None
                 }
             })
             .collect();
         if rows.is_empty() {
+            observe_n(&stats.latency.predict, t0.elapsed(), n_in);
             continue;
         }
         let batched = executor.and_then(|eng| {
@@ -910,13 +1095,13 @@ fn dispatch_predicts(
                                 .fetch_add(chunk.len() as u64, Ordering::Relaxed);
                             for (r, (_, tx)) in chunk.iter().enumerate() {
                                 stats.predicted.fetch_add(1, Ordering::Relaxed);
-                                let _ = tx.send(Response::Predicted(yhat[r] as f64));
+                                send_tracked(stats, tx, Response::Predicted(yhat[r] as f64));
                             }
                         }
                         Err(e) => {
                             for (_, tx) in chunk {
                                 stats.errors.fetch_add(1, Ordering::Relaxed);
-                                let _ = tx.send(Response::Error(e.to_string()));
+                                send_tracked(stats, tx, Response::Error(e.to_string()));
                             }
                         }
                     }
@@ -940,10 +1125,11 @@ fn dispatch_predicts(
                 stats.lockfree_predicts.fetch_add(rows.len() as u64, Ordering::Relaxed);
                 for ((_, tx), &v) in rows.into_iter().zip(out.iter()) {
                     stats.predicted.fetch_add(1, Ordering::Relaxed);
-                    let _ = tx.send(Response::Predicted(v));
+                    send_tracked(stats, &tx, Response::Predicted(v));
                 }
             }
         }
+        observe_n(&stats.latency.predict, t0.elapsed(), n_in);
     }
 }
 
@@ -1365,6 +1551,123 @@ mod tests {
         assert!(out[1].failed.as_deref().unwrap().contains("no session"));
         assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
         assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn predict_batch_request_matches_per_row() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(55, 0);
+        let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let sid = svc.add_session(s);
+        let mut src = NonlinearWiener::new(run_rng(55, 1), 0.05);
+        let samples = src.take_samples(120);
+        for smp in &samples[..100] {
+            svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+        }
+        let probes = &samples[100..];
+        let xs: Vec<f64> = probes.iter().flat_map(|s| s.x.clone()).collect();
+        let got = svc.predict_batch_sync(sid, xs).unwrap();
+        let want: Vec<f64> = probes
+            .iter()
+            .map(|p| svc.predict_sync(sid, p.x.clone()).unwrap())
+            .collect();
+        assert_eq!(got, want, "PredictBatch must match per-row predicts bitwise");
+        // rows counted (20 batched + 20 single), every one lock-free
+        assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 40);
+        assert_eq!(svc.stats().lockfree_predicts.load(Ordering::Relaxed), 40);
+        // ragged probes and unknown sessions error without counting rows
+        assert!(svc.predict_batch_sync(sid, vec![0.0; 7]).is_err());
+        assert!(svc.predict_batch_sync(999, vec![0.0; 5]).is_err());
+        assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 40);
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dropped_receiver_counts_dropped_responses() {
+        // regression: a client hanging up mid-request used to discard
+        // the send error invisibly — disconnect storms were unobservable
+        let svc = CoordinatorService::start(
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+            None,
+        );
+        let mut rng = run_rng(66, 0);
+        let sid = svc
+            .add_session(FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap());
+        // a train whose requester is gone before the response sends...
+        {
+            let (tx, rx) = std::sync::mpsc::channel();
+            drop(rx);
+            svc.submit(Request::Train { session: sid, x: vec![0.0; 5], y: 1.0, resp: tx })
+                .unwrap();
+        }
+        // ...and a predict delivered through dispatch_predicts
+        {
+            let (tx, rx) = std::sync::mpsc::channel();
+            drop(rx);
+            svc.submit(Request::Predict { session: sid, x: vec![0.0; 5], resp: tx }).unwrap();
+        }
+        // a sync call queued behind them on the single worker is a
+        // barrier: once it returns, both dropped sends have happened
+        svc.predict_sync(sid, vec![0.0; 5]).unwrap();
+        assert_eq!(svc.stats().dropped_responses.load(Ordering::Relaxed), 2);
+        // the operations themselves still ran as successes
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn latency_histograms_record_per_class_and_per_row() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(77, 0);
+        let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+        let sid = svc.add_session(FilterSession::new(cfg, &mut rng, None).unwrap());
+        let mut src = NonlinearWiener::new(run_rng(77, 1), 0.05);
+        let samples = src.take_samples(15);
+        for smp in &samples[..10] {
+            svc.train_sync(sid, smp.x.clone(), smp.y).unwrap();
+        }
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        for smp in &samples[10..] {
+            xs.extend_from_slice(&smp.x);
+            ys.push(smp.y);
+        }
+        svc.train_batch_sync(sid, xs, ys).unwrap(); // 5 rows, one request
+        for smp in &samples[..3] {
+            svc.predict_sync(sid, smp.x.clone()).unwrap();
+        }
+        let probe4: Vec<f64> = samples[..4].iter().flat_map(|s| s.x.clone()).collect();
+        svc.predict_batch_sync(sid, probe4).unwrap();
+        let snap = svc.snapshot_sync(sid).unwrap();
+        svc.restore_sync(sid, snap).unwrap();
+        let lat = &svc.stats().latency;
+        // batched requests record per ROW: 10 singles + 5 batched
+        assert_eq!(lat.train.lock().unwrap().count(), 15);
+        // 3 single predicts + a 4-row batch
+        assert_eq!(lat.predict.lock().unwrap().count(), 7);
+        assert_eq!(lat.snapshot.lock().unwrap().count(), 1);
+        assert_eq!(lat.restore.lock().unwrap().count(), 1);
+        assert!(lat.train.lock().unwrap().quantile(0.99) > 0.0);
+        // Debug impl renders the report lines without panicking
+        assert!(format!("{:?}", svc.stats().latency).contains("p50"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn try_submit_accepts_when_capacity_allows() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(88, 0);
+        let sid = svc
+            .add_session(FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap());
+        assert_eq!(svc.queue_capacity(), 1024);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let accepted = svc
+            .try_submit(Request::Predict { session: sid, x: vec![0.0; 5], resp: tx })
+            .unwrap();
+        assert!(accepted, "empty queue must accept a try_submit");
+        assert!(matches!(rx.recv().unwrap(), Response::Predicted(_)));
         svc.shutdown();
     }
 

@@ -1,0 +1,561 @@
+//! Cross-connection batch coalescing: the daemon's perf core.
+//!
+//! Single-row `train`/`predict` frames from *any number of connections*
+//! accumulate in per-session buffers and leave as one
+//! [`Request::TrainBatch`] / [`Request::PredictBatch`] — recovering the
+//! blocked batch-kernel throughput (`ROW_BLOCK`-sized dispatch, one
+//! queue slot, one response round-trip per batch) that per-request
+//! dispatch throws away. A batch dispatches when any of three triggers
+//! fires:
+//!
+//! * **size** — the buffer reaches [`CoalesceConfig::max_batch`] rows;
+//! * **deadline** — the oldest buffered row has waited
+//!   [`CoalesceConfig::flush_wait`] (the router's `first_wait` /
+//!   `batch_wait` pattern, applied one layer up);
+//! * **completion** (trains only) — the session's in-flight batch
+//!   finished, releasing whatever accumulated behind it.
+//!
+//! ## Ordering = bitwise parity
+//!
+//! Training must remain bitwise identical to sequential per-row
+//! dispatch (the batch kernels already are — pinned by
+//! `tests/batch_parity.rs` — so the only thing the coalescer can get
+//! wrong is *order*). Two rules guarantee per-session row order:
+//!
+//! 1. Rows enter a session's buffer in arrival order and leave in one
+//!    contiguous batch — never reordered, never split across batches
+//!    that could race.
+//! 2. **At most one train batch per session is outstanding.** Without
+//!    this, two back-to-back `TrainBatch` requests for the same session
+//!    could be claimed by different router workers and acquire the
+//!    session lock in either order. Rows that arrive while a batch is
+//!    in flight accumulate and dispatch on its completion.
+//!
+//! Predicts have no such constraint (they are read-only against the
+//! lock-free published state) and dispatch concurrently.
+//!
+//! ## Fate sharing
+//!
+//! Rows coalesced into one batch share its outcome: if the batch fails
+//! (e.g. the first row's dim doesn't match the session), every
+//! contributor receives the error. A row whose length differs from the
+//! rows already buffered is rejected up front with its own diagnostic
+//! instead of poisoning the batch. On the PJRT backend a train batch
+//! may report fewer a-priori errors than rows (chunks still buffering);
+//! per-row attribution is then impossible and every contributor gets
+//! the documented "accepted, errors pending" empty reply.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{CoordinatorService, Request, Response};
+use crate::exec::ThreadPool;
+
+/// Coalescing-stage knobs.
+#[derive(Clone, Debug)]
+pub struct CoalesceConfig {
+    /// Coalesce single-row train/predict traffic (`false` = the
+    /// ablation baseline: every frame becomes its own request).
+    pub enabled: bool,
+    /// Dispatch a session's buffer at this many rows. The default (64)
+    /// is [`crate::kaf::ROW_BLOCK`]: one full blocked-kernel pass.
+    pub max_batch: usize,
+    /// Dispatch when the oldest buffered row has waited this long —
+    /// microsecond-scale: enough for concurrent connections to land
+    /// rows in the same batch, far below wire round-trip time.
+    pub flush_wait: Duration,
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            max_batch: crate::kaf::ROW_BLOCK,
+            flush_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Coalescing-stage counters (exported via the daemon's `stats` verb).
+#[derive(Debug, Default)]
+pub struct CoalesceStats {
+    /// Single-row trains accepted into buffers.
+    pub train_rows: AtomicU64,
+    /// `TrainBatch` requests dispatched (ratio `train_rows /
+    /// train_batches` = achieved train coalescing factor).
+    pub train_batches: AtomicU64,
+    /// Single-row predicts accepted into buffers.
+    pub predict_rows: AtomicU64,
+    /// `PredictBatch` requests dispatched.
+    pub predict_batches: AtomicU64,
+    /// Dispatches triggered by a full buffer (`max_batch`).
+    pub size_flushes: AtomicU64,
+    /// Dispatches triggered by the flush deadline.
+    pub deadline_flushes: AtomicU64,
+    /// Train dispatches triggered by an in-flight batch completing.
+    pub completion_flushes: AtomicU64,
+    /// Per-row replies that could not be delivered (contributor's
+    /// connection writer already gone) — the coalescer-level analogue
+    /// of `ServiceStats::dropped_responses`.
+    pub dropped_replies: AtomicU64,
+}
+
+/// One direction's accumulation buffer for one session.
+#[derive(Default)]
+struct RowBuf {
+    /// Row-major `[n_rows, row_len]` inputs.
+    xs: Vec<f64>,
+    /// Targets (trains only; stays empty in predict buffers).
+    ys: Vec<f64>,
+    /// Per-contributor reply routes: `(rows contributed, sender)` in
+    /// arrival order — the demux key for slicing the batch response.
+    pending: Vec<(usize, Sender<Response>)>,
+    /// Rows currently buffered.
+    n_rows: usize,
+    /// Length of the first buffered row (mismatch guard).
+    row_len: usize,
+    /// Arrival time of the oldest buffered row (deadline anchor).
+    first_at: Option<Instant>,
+}
+
+impl RowBuf {
+    /// Drain the buffer for dispatch.
+    fn take(&mut self) -> (Vec<f64>, Vec<f64>, Vec<(usize, Sender<Response>)>) {
+        self.n_rows = 0;
+        self.first_at = None;
+        (
+            std::mem::take(&mut self.xs),
+            std::mem::take(&mut self.ys),
+            std::mem::take(&mut self.pending),
+        )
+    }
+}
+
+#[derive(Default)]
+struct SessionBuf {
+    train: RowBuf,
+    predict: RowBuf,
+    /// Rule 2: exactly one outstanding train batch per session.
+    train_in_flight: bool,
+}
+
+#[derive(Default)]
+struct State {
+    sessions: BTreeMap<u64, SessionBuf>,
+}
+
+/// A drained buffer on its way to the queue (built under the state
+/// lock, dispatched after it is released — `submit` can block).
+enum Flush {
+    Train { session: u64, xs: Vec<f64>, ys: Vec<f64>, pending: Vec<(usize, Sender<Response>)> },
+    Predict { session: u64, xs: Vec<f64>, pending: Vec<(usize, Sender<Response>)> },
+}
+
+/// The coalescing stage: per-session buffers, a deadline-flusher
+/// thread, and a small completion pool that demuxes batch responses
+/// back to per-row reply channels.
+pub(crate) struct Coalescer {
+    svc: Arc<CoordinatorService>,
+    cfg: CoalesceConfig,
+    stats: CoalesceStats,
+    state: Mutex<State>,
+    /// Wakes the flusher when a fresh deadline appears (or on close).
+    wake: Condvar,
+    closing: AtomicBool,
+    /// Runs response demux + completion-triggered dispatch. Blocking
+    /// `recv` lives here so neither connection readers nor the flusher
+    /// ever wait on a router response.
+    completions: ThreadPool,
+    flusher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Coalescer {
+    /// Start the stage (spawns the deadline flusher when enabled).
+    pub(crate) fn start(
+        svc: Arc<CoordinatorService>,
+        cfg: CoalesceConfig,
+        completion_workers: usize,
+    ) -> Arc<Self> {
+        let this = Arc::new(Self {
+            svc,
+            cfg,
+            stats: CoalesceStats::default(),
+            state: Mutex::new(State::default()),
+            wake: Condvar::new(),
+            closing: AtomicBool::new(false),
+            completions: ThreadPool::new(completion_workers.max(1)),
+            flusher: Mutex::new(None),
+        });
+        if this.cfg.enabled {
+            let c = Arc::clone(&this);
+            let h = std::thread::Builder::new()
+                .name("rff-kaf-coalesce-flush".into())
+                .spawn(move || c.flusher_loop())
+                .expect("spawning coalesce flusher");
+            *this.flusher.lock().unwrap_or_else(PoisonError::into_inner) = Some(h);
+        }
+        this
+    }
+
+    /// Whether single-row traffic should route through this stage.
+    pub(crate) fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Stage counters.
+    pub(crate) fn stats(&self) -> &CoalesceStats {
+        &self.stats
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Buffer one train row; dispatches inline when the buffer fills.
+    pub(crate) fn add_train(
+        self: &Arc<Self>,
+        session: u64,
+        x: Vec<f64>,
+        y: f64,
+        resp: Sender<Response>,
+    ) {
+        let mut g = self.lock_state();
+        let buf = g.sessions.entry(session).or_default();
+        if buf.train.n_rows > 0 && x.len() != buf.train.row_len {
+            let have = buf.train.row_len;
+            drop(g);
+            self.send_row(
+                &resp,
+                Response::Error(format!(
+                    "coalesced train row for session {session} has {} values; \
+                     rows already buffered have {have}",
+                    x.len()
+                )),
+            );
+            return;
+        }
+        buf.train.row_len = x.len();
+        buf.train.xs.extend_from_slice(&x);
+        buf.train.ys.push(y);
+        buf.train.pending.push((1, resp));
+        buf.train.n_rows += 1;
+        self.stats.train_rows.fetch_add(1, Ordering::Relaxed);
+        if !buf.train_in_flight && buf.train.n_rows >= self.cfg.max_batch {
+            buf.train_in_flight = true;
+            let (xs, ys, pending) = buf.train.take();
+            drop(g);
+            self.stats.size_flushes.fetch_add(1, Ordering::Relaxed);
+            self.dispatch_train(session, xs, ys, pending);
+        } else if buf.train.first_at.is_none() {
+            buf.train.first_at = Some(Instant::now());
+            // a fresh deadline: the flusher may be parked on a longer
+            // (or infinite) wait
+            self.wake.notify_all();
+        }
+    }
+
+    /// Buffer one predict row; dispatches inline when the buffer fills.
+    pub(crate) fn add_predict(
+        self: &Arc<Self>,
+        session: u64,
+        x: Vec<f64>,
+        resp: Sender<Response>,
+    ) {
+        let mut g = self.lock_state();
+        let buf = g.sessions.entry(session).or_default();
+        if buf.predict.n_rows > 0 && x.len() != buf.predict.row_len {
+            let have = buf.predict.row_len;
+            drop(g);
+            self.send_row(
+                &resp,
+                Response::Error(format!(
+                    "coalesced predict row for session {session} has {} values; \
+                     rows already buffered have {have}",
+                    x.len()
+                )),
+            );
+            return;
+        }
+        buf.predict.row_len = x.len();
+        buf.predict.xs.extend_from_slice(&x);
+        buf.predict.pending.push((1, resp));
+        buf.predict.n_rows += 1;
+        self.stats.predict_rows.fetch_add(1, Ordering::Relaxed);
+        if buf.predict.n_rows >= self.cfg.max_batch {
+            let (xs, _, pending) = buf.predict.take();
+            drop(g);
+            self.stats.size_flushes.fetch_add(1, Ordering::Relaxed);
+            self.dispatch_predict(session, xs, pending);
+        } else if buf.predict.first_at.is_none() {
+            buf.predict.first_at = Some(Instant::now());
+            self.wake.notify_all();
+        }
+    }
+
+    /// Deadline watcher: wakes at the earliest pending deadline (or on
+    /// a fresh first-row notify), drains due buffers, dispatches them
+    /// outside the lock.
+    fn flusher_loop(self: Arc<Self>) {
+        let mut g = self.lock_state();
+        loop {
+            if self.closing.load(Ordering::Relaxed) {
+                return;
+            }
+            let now = Instant::now();
+            let mut due: Vec<Flush> = Vec::new();
+            let mut next: Option<Instant> = None;
+            for (&sid, buf) in g.sessions.iter_mut() {
+                if !buf.train_in_flight {
+                    if let Some(t0) = buf.train.first_at {
+                        let deadline = t0 + self.cfg.flush_wait;
+                        if deadline <= now {
+                            buf.train_in_flight = true;
+                            let (xs, ys, pending) = buf.train.take();
+                            due.push(Flush::Train { session: sid, xs, ys, pending });
+                        } else {
+                            next = Some(next.map_or(deadline, |n| n.min(deadline)));
+                        }
+                    }
+                }
+                if let Some(t0) = buf.predict.first_at {
+                    let deadline = t0 + self.cfg.flush_wait;
+                    if deadline <= now {
+                        let (xs, _, pending) = buf.predict.take();
+                        due.push(Flush::Predict { session: sid, xs, pending });
+                    } else {
+                        next = Some(next.map_or(deadline, |n| n.min(deadline)));
+                    }
+                }
+            }
+            if !due.is_empty() {
+                drop(g);
+                for f in due {
+                    self.stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+                    match f {
+                        Flush::Train { session, xs, ys, pending } => {
+                            self.dispatch_train(session, xs, ys, pending)
+                        }
+                        Flush::Predict { session, xs, pending } => {
+                            self.dispatch_predict(session, xs, pending)
+                        }
+                    }
+                }
+                g = self.lock_state();
+                continue;
+            }
+            g = match next {
+                Some(t) => {
+                    let wait = t.saturating_duration_since(now);
+                    self.wake.wait_timeout(g, wait).unwrap_or_else(PoisonError::into_inner).0
+                }
+                None => self.wake.wait(g).unwrap_or_else(PoisonError::into_inner),
+            };
+        }
+    }
+
+    /// Submit a train batch and arrange its completion (demux + chained
+    /// dispatch of whatever accumulated behind it). `submit` blocks on
+    /// a full queue — bounded, because rule 2 caps this session's
+    /// outstanding batches at one.
+    fn dispatch_train(
+        self: &Arc<Self>,
+        session: u64,
+        xs: Vec<f64>,
+        ys: Vec<f64>,
+        pending: Vec<(usize, Sender<Response>)>,
+    ) {
+        self.stats.train_batches.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        if self.svc.submit(Request::TrainBatch { session, xs, ys, resp: rtx }).is_err() {
+            self.fail_all(pending, "service shut down");
+            self.lock_state().sessions.entry(session).or_default().train_in_flight = false;
+            return;
+        }
+        let this = Arc::clone(self);
+        self.completions.execute(move || {
+            let resp = rrx
+                .recv()
+                .unwrap_or_else(|_| Response::Error("response channel closed".into()));
+            this.demux_train(resp, pending);
+            this.on_train_done(session);
+        });
+    }
+
+    /// Submit a predict batch and arrange its demux. No in-flight
+    /// gating: predicts are read-only, multiple batches may race.
+    fn dispatch_predict(
+        self: &Arc<Self>,
+        session: u64,
+        xs: Vec<f64>,
+        pending: Vec<(usize, Sender<Response>)>,
+    ) {
+        self.stats.predict_batches.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        if self.svc.submit(Request::PredictBatch { session, xs, resp: rtx }).is_err() {
+            self.fail_all(pending, "service shut down");
+            return;
+        }
+        let this = Arc::clone(self);
+        self.completions.execute(move || {
+            let resp = rrx
+                .recv()
+                .unwrap_or_else(|_| Response::Error("response channel closed".into()));
+            this.demux_predict(resp, pending);
+        });
+    }
+
+    /// A train batch finished: dispatch whatever accumulated behind it,
+    /// or release the session's in-flight slot.
+    fn on_train_done(self: &Arc<Self>, session: u64) {
+        let mut g = self.lock_state();
+        let Some(buf) = g.sessions.get_mut(&session) else { return };
+        if buf.train.n_rows == 0 {
+            buf.train_in_flight = false;
+            return;
+        }
+        // group commit: these rows already waited a full batch
+        // round-trip — dispatch immediately, keeping in_flight held
+        let (xs, ys, pending) = buf.train.take();
+        drop(g);
+        self.stats.completion_flushes.fetch_add(1, Ordering::Relaxed);
+        self.dispatch_train(session, xs, ys, pending);
+    }
+
+    /// Slice a batch train response back to its contributors.
+    fn demux_train(&self, resp: Response, pending: Vec<(usize, Sender<Response>)>) {
+        match resp {
+            Response::Trained(errs) => {
+                let total: usize = pending.iter().map(|(n, _)| *n).sum();
+                if errs.len() == total {
+                    let mut off = 0;
+                    for (n, tx) in pending {
+                        self.send_row(&tx, Response::Trained(errs[off..off + n].to_vec()));
+                        off += n;
+                    }
+                } else {
+                    // PJRT: fewer errors than rows (chunks buffering) —
+                    // attribution impossible, everyone gets the
+                    // documented "accepted, errors pending" empty reply
+                    for (_, tx) in pending {
+                        self.send_row(&tx, Response::Trained(Vec::new()));
+                    }
+                }
+            }
+            Response::Error(e) => {
+                for (_, tx) in pending {
+                    self.send_row(&tx, Response::Error(e.clone()));
+                }
+            }
+            other => {
+                let e = format!("unexpected coordinator response {other:?}");
+                for (_, tx) in pending {
+                    self.send_row(&tx, Response::Error(e.clone()));
+                }
+            }
+        }
+    }
+
+    /// Slice a batch predict response back to its contributors.
+    fn demux_predict(&self, resp: Response, pending: Vec<(usize, Sender<Response>)>) {
+        match resp {
+            Response::Predictions(ys) => {
+                let total: usize = pending.iter().map(|(n, _)| *n).sum();
+                if ys.len() == total {
+                    let mut off = 0;
+                    for (n, tx) in pending {
+                        let msg = if n == 1 {
+                            Response::Predicted(ys[off])
+                        } else {
+                            Response::Predictions(ys[off..off + n].to_vec())
+                        };
+                        self.send_row(&tx, msg);
+                        off += n;
+                    }
+                } else {
+                    let e = format!(
+                        "predict batch answered {} rows for {total} submitted",
+                        ys.len()
+                    );
+                    for (_, tx) in pending {
+                        self.send_row(&tx, Response::Error(e.clone()));
+                    }
+                }
+            }
+            Response::Error(e) => {
+                for (_, tx) in pending {
+                    self.send_row(&tx, Response::Error(e.clone()));
+                }
+            }
+            other => {
+                let e = format!("unexpected coordinator response {other:?}");
+                for (_, tx) in pending {
+                    self.send_row(&tx, Response::Error(e.clone()));
+                }
+            }
+        }
+    }
+
+    fn fail_all(&self, pending: Vec<(usize, Sender<Response>)>, msg: &str) {
+        for (_, tx) in pending {
+            self.send_row(&tx, Response::Error(msg.to_string()));
+        }
+    }
+
+    fn send_row(&self, tx: &Sender<Response>, msg: Response) {
+        if tx.send(msg).is_err() {
+            self.stats.dropped_replies.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Stop the flusher, dispatch every remaining buffered row, and
+    /// wait for all in-flight batches to demux. Callers must have
+    /// stopped producers (connection readers) first.
+    pub(crate) fn shutdown(self: &Arc<Self>) {
+        {
+            // notify under the state lock: the flusher checks `closing`
+            // and parks while holding it, so this cannot race between
+            // its check and its wait (lost wakeup)
+            let _g = self.lock_state();
+            self.closing.store(true, Ordering::SeqCst);
+            self.wake.notify_all();
+        }
+        let flusher = self.flusher.lock().unwrap_or_else(PoisonError::into_inner).take();
+        if let Some(h) = flusher {
+            let _ = h.join();
+        }
+        // final flush: producers are gone, buffers only shrink now
+        let mut due: Vec<Flush> = Vec::new();
+        {
+            let mut g = self.lock_state();
+            for (&sid, buf) in g.sessions.iter_mut() {
+                if !buf.train_in_flight && buf.train.n_rows > 0 {
+                    buf.train_in_flight = true;
+                    let (xs, ys, pending) = buf.train.take();
+                    due.push(Flush::Train { session: sid, xs, ys, pending });
+                }
+                if buf.predict.n_rows > 0 {
+                    let (xs, _, pending) = buf.predict.take();
+                    due.push(Flush::Predict { session: sid, xs, pending });
+                }
+            }
+        }
+        for f in due {
+            match f {
+                Flush::Train { session, xs, ys, pending } => {
+                    self.dispatch_train(session, xs, ys, pending)
+                }
+                Flush::Predict { session, xs, pending } => {
+                    self.dispatch_predict(session, xs, pending)
+                }
+            }
+        }
+        // every in-flight batch already has its completion job queued,
+        // and a chained dispatch enqueues its successor before the
+        // current job finishes — so one wait covers the chains
+        self.completions.wait_idle();
+    }
+}

@@ -1,0 +1,698 @@
+//! Per-connection protocol handler: one reader (this thread, a slot in
+//! the daemon's connection pool) plus one dedicated writer thread,
+//! joined by an in-flight counter that implements the connection's
+//! half of end-to-end backpressure.
+//!
+//! ## Pipelining and reply order
+//!
+//! Clients may pipeline arbitrarily many frames without waiting for
+//! replies. The reader parses each frame and enqueues a `Pending` item
+//! to the writer *in arrival order*; the writer resolves them strictly
+//! in that order (blocking on each response channel), so replies always
+//! come back in request order — `id` matching is a client convenience,
+//! not a protocol requirement.
+//!
+//! ## Backpressure, layer by layer
+//!
+//! * **Soft cap** ([`super::DaemonConfig::max_in_flight`]): a frame
+//!   arriving with the cap exceeded is *rejected with a diagnostic*
+//!   (`ok:false`, names the cap) — the client learns it is overrunning
+//!   instead of silently stalling.
+//! * **Hard bound** (2× the soft cap): the reader stops reading the
+//!   socket until replies drain, which fills the kernel buffers and
+//!   exerts plain TCP backpressure on the peer. This bounds daemon-side
+//!   memory per connection no matter how hostile the client.
+//! * **Queue admission**: direct-path requests use
+//!   [`CoordinatorService::try_submit`] — a full router queue rejects
+//!   with a diagnostic naming the capacity rather than blocking the
+//!   reader (coalesced rows are admitted by the coalescer, whose
+//!   in-flight rule bounds its own submissions).
+//!
+//! A reply that cannot be written (peer gone) marks the connection
+//! broken; remaining `Pending` responses are drained — dropping their
+//! receivers, which the router observes as
+//! `ServiceStats::dropped_responses` — and the in-flight counter is
+//! still decremented so the reader can exit its park.
+
+use std::fmt::Write as _;
+use std::io;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use crate::coordinator::{CoordinatorService, Request, Response};
+use crate::util::json::{write_escaped, JsonValue};
+
+use super::coalesce::Coalescer;
+use super::framing::{FrameReader, FrameWriter};
+use super::DaemonStats;
+
+/// Everything a connection handler needs, shared across connections.
+pub(crate) struct ConnShared {
+    pub(crate) svc: Arc<CoordinatorService>,
+    pub(crate) coalescer: Arc<Coalescer>,
+    pub(crate) stats: Arc<DaemonStats>,
+    pub(crate) max_in_flight: usize,
+    pub(crate) max_frame: usize,
+}
+
+/// Requests admitted but not yet replied to, shared between the reader
+/// (inc) and the writer (dec after each reply leaves, or is abandoned).
+#[derive(Default)]
+struct InFlight {
+    n: Mutex<usize>,
+    changed: Condvar,
+}
+
+impl InFlight {
+    fn lock(&self) -> std::sync::MutexGuard<'_, usize> {
+        self.n.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Count one admitted request; returns the new depth.
+    fn inc(&self) -> usize {
+        let mut g = self.lock();
+        *g += 1;
+        *g
+    }
+
+    fn dec(&self) {
+        let mut g = self.lock();
+        *g = g.saturating_sub(1);
+        self.changed.notify_all();
+    }
+
+    /// Park until the depth is below `bound` (the reader's hard stop:
+    /// parking here stops socket reads → TCP backpressure).
+    fn wait_below(&self, bound: usize) {
+        let mut g = self.lock();
+        while *g >= bound {
+            g = self.changed.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// Which shape of coordinator [`Response`] a pending request expects —
+/// the key for converting it to the wire reply.
+enum ReplyKind {
+    /// `train` / `train_batch` / `train_diffusion` → `errors` array.
+    Train,
+    /// `predict` → scalar `y`.
+    Predict,
+    /// `predict_batch` → `ys` array.
+    PredictBatch,
+    /// `snapshot` → `snapshot` string.
+    Snapshot,
+    /// `restore` → bare `ok`.
+    Restore,
+}
+
+/// A fully-resolved wire reply, ready to render.
+enum Reply {
+    Ok { id: u64, body: Body },
+    Err { id: u64, msg: String },
+}
+
+enum Body {
+    /// A-priori error array (train class).
+    Errors(Vec<f64>),
+    /// Scalar prediction.
+    Y(f64),
+    /// Batch predictions.
+    Ys(Vec<f64>),
+    /// Session snapshot document.
+    Snapshot(String),
+    /// Bare `ok` (restore).
+    None,
+    /// Pre-rendered stats object (embedded raw).
+    Stats(String),
+}
+
+/// Work items for the writer thread, enqueued in request order.
+enum Pending {
+    /// Already resolved (rejections, stats) — write it now.
+    Immediate(Reply),
+    /// Awaiting the coordinator; the writer blocks on `rx`.
+    Await { id: u64, kind: ReplyKind, rx: Receiver<Response> },
+    /// Reader is done; writer exits after this.
+    Close,
+}
+
+/// A parsed request frame.
+enum WireRequest {
+    Train { id: u64, session: u64, x: Vec<f64>, y: f64 },
+    TrainBatch { id: u64, session: u64, xs: Vec<f64>, ys: Vec<f64> },
+    TrainDiffusion { id: u64, group: u64, xs: Vec<f64>, ys: Vec<f64> },
+    Predict { id: u64, session: u64, x: Vec<f64> },
+    PredictBatch { id: u64, session: u64, xs: Vec<f64> },
+    Snapshot { id: u64, session: u64 },
+    Restore { id: u64, session: u64, snapshot: String },
+    Stats { id: u64 },
+}
+
+impl WireRequest {
+    fn id(&self) -> u64 {
+        match self {
+            Self::Train { id, .. }
+            | Self::TrainBatch { id, .. }
+            | Self::TrainDiffusion { id, .. }
+            | Self::Predict { id, .. }
+            | Self::PredictBatch { id, .. }
+            | Self::Snapshot { id, .. }
+            | Self::Restore { id, .. }
+            | Self::Stats { id } => *id,
+        }
+    }
+}
+
+/// Serve one accepted connection to completion.
+pub(crate) fn serve(stream: TcpStream, shared: Arc<ConnShared>) {
+    // per-frame request/reply traffic: Nagle would add 40 ms stalls
+    let _ = stream.set_nodelay(true);
+    let Ok(wstream) = stream.try_clone() else { return };
+    let in_flight = Arc::new(InFlight::default());
+    let (ptx, prx) = mpsc::channel::<Pending>();
+    let writer = {
+        let in_flight = Arc::clone(&in_flight);
+        let stats = Arc::clone(&shared.stats);
+        std::thread::Builder::new()
+            .name("rff-kaf-conn-writer".into())
+            .spawn(move || writer_loop(wstream, prx, &in_flight, &stats))
+            .expect("spawning connection writer")
+    };
+    reader_loop(&stream, &shared, &in_flight, &ptx);
+    let _ = ptx.send(Pending::Close);
+    drop(ptx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn reader_loop(
+    stream: &TcpStream,
+    shared: &Arc<ConnShared>,
+    in_flight: &Arc<InFlight>,
+    ptx: &Sender<Pending>,
+) {
+    let mut reader = stream;
+    let mut fr = FrameReader::new();
+    let hard = shared.max_in_flight.saturating_mul(2).max(8);
+    loop {
+        in_flight.wait_below(hard);
+        match fr.read_frame(&mut reader, shared.max_frame) {
+            Ok(None) => return, // clean close between frames
+            Ok(Some(frame)) => {
+                shared.stats.frames_in.fetch_add(1, Ordering::Relaxed);
+                handle_frame(frame, shared, in_flight, ptx);
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // oversized length prefix: reply with the diagnostic,
+                // then close — the stream position cannot be resynced
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                in_flight.inc();
+                let _ = ptx.send(Pending::Immediate(Reply::Err {
+                    id: 0,
+                    msg: format!("frame rejected: {e}"),
+                }));
+                return;
+            }
+            Err(_) => return, // truncated mid-frame or reset: peer is gone
+        }
+    }
+}
+
+/// Parse, admit and dispatch one frame. Exactly one `Pending` item is
+/// enqueued per frame (one `inc`, matched by the writer's `dec`).
+fn handle_frame(
+    frame: &[u8],
+    shared: &Arc<ConnShared>,
+    in_flight: &Arc<InFlight>,
+    ptx: &Sender<Pending>,
+) {
+    let depth = in_flight.inc();
+    let req = match parse_request(frame) {
+        Ok(req) => req,
+        Err((id, msg)) => {
+            // malformed frame: error reply, connection stays alive
+            // (framing is still synced — only the payload was bad)
+            shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = ptx.send(Pending::Immediate(Reply::Err { id, msg }));
+            return;
+        }
+    };
+    // `stats` is served inline and exempt from the in-flight cap: it is
+    // the verb a client uses to observe overload
+    if let WireRequest::Stats { id } = req {
+        let _ = ptx.send(Pending::Immediate(Reply::Ok {
+            id,
+            body: Body::Stats(stats_json(shared)),
+        }));
+        return;
+    }
+    if depth > shared.max_in_flight {
+        shared.stats.rejected_in_flight.fetch_add(1, Ordering::Relaxed);
+        let _ = ptx.send(Pending::Immediate(Reply::Err {
+            id: req.id(),
+            msg: format!(
+                "in-flight cap of {} requests exceeded on this connection; \
+                 wait for replies before sending more",
+                shared.max_in_flight
+            ),
+        }));
+        return;
+    }
+    dispatch(req, shared, ptx);
+}
+
+/// Route an admitted request: single-row train/predict through the
+/// coalescer when enabled, everything else directly onto the router
+/// queue via non-blocking admission.
+fn dispatch(req: WireRequest, shared: &Arc<ConnShared>, ptx: &Sender<Pending>) {
+    let (rtx, rrx) = mpsc::channel::<Response>();
+    let (id, kind, request) = match req {
+        WireRequest::Train { id, session, x, y } => {
+            if shared.coalescer.enabled() {
+                // enqueue the Await *before* the row can dispatch so the
+                // writer sees items in request order
+                let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Train, rx: rrx });
+                shared.coalescer.add_train(session, x, y, rtx);
+                return;
+            }
+            (id, ReplyKind::Train, Request::Train { session, x, y, resp: rtx })
+        }
+        WireRequest::Predict { id, session, x } => {
+            if shared.coalescer.enabled() {
+                let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Predict, rx: rrx });
+                shared.coalescer.add_predict(session, x, rtx);
+                return;
+            }
+            (id, ReplyKind::Predict, Request::Predict { session, x, resp: rtx })
+        }
+        WireRequest::TrainBatch { id, session, xs, ys } => {
+            (id, ReplyKind::Train, Request::TrainBatch { session, xs, ys, resp: rtx })
+        }
+        WireRequest::TrainDiffusion { id, group, xs, ys } => {
+            (id, ReplyKind::Train, Request::TrainDiffusion { group, xs, ys, resp: rtx })
+        }
+        WireRequest::PredictBatch { id, session, xs } => {
+            (id, ReplyKind::PredictBatch, Request::PredictBatch { session, xs, resp: rtx })
+        }
+        WireRequest::Snapshot { id, session } => {
+            (id, ReplyKind::Snapshot, Request::Snapshot { session, resp: rtx })
+        }
+        WireRequest::Restore { id, session, snapshot } => {
+            (id, ReplyKind::Restore, Request::Restore { session, snapshot, resp: rtx })
+        }
+        WireRequest::Stats { .. } => unreachable!("stats is handled inline"),
+    };
+    match shared.svc.try_submit(request) {
+        Ok(true) => {
+            let _ = ptx.send(Pending::Await { id, kind, rx: rrx });
+        }
+        Ok(false) => {
+            shared.stats.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
+            let _ = ptx.send(Pending::Immediate(Reply::Err {
+                id,
+                msg: format!(
+                    "request queue full ({} slots): service overloaded, retry later",
+                    shared.svc.queue_capacity()
+                ),
+            }));
+        }
+        Err(e) => {
+            let _ = ptx.send(Pending::Immediate(Reply::Err { id, msg: e.to_string() }));
+        }
+    }
+}
+
+/// Resolve and write replies in request order; reuses one JSON string
+/// and one frame buffer for the connection's lifetime.
+fn writer_loop(
+    mut stream: TcpStream,
+    prx: Receiver<Pending>,
+    in_flight: &InFlight,
+    stats: &DaemonStats,
+) {
+    let mut fw = FrameWriter::new();
+    let mut json = String::new();
+    let mut broken = false;
+    for item in prx {
+        let reply = match item {
+            Pending::Close => break,
+            Pending::Immediate(reply) => Some(reply),
+            Pending::Await { id, kind, rx } => {
+                if broken {
+                    // peer is gone: dropping `rx` lets the router count
+                    // the undeliverable response (dropped_responses)
+                    None
+                } else {
+                    Some(match rx.recv() {
+                        Ok(resp) => convert(id, kind, resp),
+                        Err(_) => Reply::Err { id, msg: "response channel closed".into() },
+                    })
+                }
+            }
+        };
+        if !broken {
+            if let Some(reply) = &reply {
+                json.clear();
+                render(&mut json, reply);
+                if fw.write_frame(&mut stream, json.as_bytes()).is_ok() {
+                    stats.frames_out.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    broken = true;
+                }
+            }
+        }
+        in_flight.dec();
+    }
+}
+
+/// Convert a coordinator response to a wire reply.
+fn convert(id: u64, kind: ReplyKind, resp: Response) -> Reply {
+    match (kind, resp) {
+        (_, Response::Error(msg)) => Reply::Err { id, msg },
+        (ReplyKind::Train, Response::Trained(errs)) => Reply::Ok { id, body: Body::Errors(errs) },
+        (ReplyKind::Predict, Response::Predicted(y)) => Reply::Ok { id, body: Body::Y(y) },
+        (ReplyKind::PredictBatch, Response::Predictions(ys)) => {
+            Reply::Ok { id, body: Body::Ys(ys) }
+        }
+        (ReplyKind::Snapshot, Response::Snapshot(doc)) => {
+            Reply::Ok { id, body: Body::Snapshot(doc) }
+        }
+        (ReplyKind::Restore, Response::Restored) => Reply::Ok { id, body: Body::None },
+        (_, other) => Reply::Err { id, msg: format!("unexpected coordinator response {other:?}") },
+    }
+}
+
+/// Render a reply into `out` (cleared by the caller).
+fn render(out: &mut String, reply: &Reply) {
+    match reply {
+        Reply::Err { id, msg } => {
+            let _ = write!(out, "{{\"id\":{id},\"ok\":false,\"error\":");
+            write_escaped(out, msg);
+            out.push('}');
+        }
+        Reply::Ok { id, body } => {
+            let _ = write!(out, "{{\"id\":{id},\"ok\":true");
+            match body {
+                Body::Errors(errs) => {
+                    out.push_str(",\"errors\":");
+                    push_f64_array(out, errs);
+                }
+                Body::Y(y) => {
+                    out.push_str(",\"y\":");
+                    push_f64(out, *y);
+                }
+                Body::Ys(ys) => {
+                    out.push_str(",\"ys\":");
+                    push_f64_array(out, ys);
+                }
+                Body::Snapshot(doc) => {
+                    out.push_str(",\"snapshot\":");
+                    write_escaped(out, doc);
+                }
+                Body::None => {}
+                Body::Stats(obj) => {
+                    out.push_str(",\"stats\":");
+                    out.push_str(obj);
+                }
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Append one `f64` as JSON. Uses Rust's shortest-roundtrip `Display`,
+/// so a finite value parses back **bitwise equal** (including `-0.0` →
+/// `-0`) — the property the wire parity test pins. JSON has no
+/// NaN/Infinity; non-finite values become `null`.
+pub(crate) fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Append a `[..]` JSON array of `f64`s (see [`push_f64`]).
+pub(crate) fn push_f64_array(out: &mut String, vs: &[f64]) {
+    out.push('[');
+    for (i, &v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_f64(out, v);
+    }
+    out.push(']');
+}
+
+/// Build the `stats` verb's payload: service counters, per-class
+/// latency quantiles, coalescer counters and daemon counters.
+fn stats_json(shared: &ConnShared) -> String {
+    use std::collections::BTreeMap;
+    let n = |v: u64| JsonValue::Number(v as f64);
+
+    let svc = shared.svc.stats();
+    let mut service = BTreeMap::new();
+    service.insert("trained".to_string(), n(svc.trained.load(Ordering::Relaxed)));
+    service.insert("diffusion_rows".to_string(), n(svc.diffusion_rows.load(Ordering::Relaxed)));
+    service.insert("predicted".to_string(), n(svc.predicted.load(Ordering::Relaxed)));
+    service
+        .insert("lockfree_predicts".to_string(), n(svc.lockfree_predicts.load(Ordering::Relaxed)));
+    service.insert("errors".to_string(), n(svc.errors.load(Ordering::Relaxed)));
+    service
+        .insert("dropped_responses".to_string(), n(svc.dropped_responses.load(Ordering::Relaxed)));
+    service.insert("snapshots".to_string(), n(svc.snapshots.load(Ordering::Relaxed)));
+    service.insert("restored".to_string(), n(svc.restored.load(Ordering::Relaxed)));
+    service.insert("evictions".to_string(), n(svc.spill.evictions.load(Ordering::Relaxed)));
+    service.insert("spill_restores".to_string(), n(svc.spill.restores.load(Ordering::Relaxed)));
+    service.insert("sessions".to_string(), n(shared.svc.session_count() as u64));
+
+    let mut latency = BTreeMap::new();
+    for (name, hist) in svc.latency.classes() {
+        let h = hist.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut class = BTreeMap::new();
+        class.insert("count".to_string(), n(h.count()));
+        class.insert("p50_s".to_string(), JsonValue::Number(h.quantile(0.5)));
+        class.insert("p95_s".to_string(), JsonValue::Number(h.quantile(0.95)));
+        class.insert("p99_s".to_string(), JsonValue::Number(h.quantile(0.99)));
+        let max = if h.count() == 0 { 0.0 } else { h.max() };
+        class.insert("max_s".to_string(), JsonValue::Number(max));
+        latency.insert(name.to_string(), JsonValue::Object(class));
+    }
+
+    let c = shared.coalescer.stats();
+    let mut coalesce = BTreeMap::new();
+    coalesce.insert("enabled".to_string(), JsonValue::Bool(shared.coalescer.enabled()));
+    coalesce.insert("train_rows".to_string(), n(c.train_rows.load(Ordering::Relaxed)));
+    coalesce.insert("train_batches".to_string(), n(c.train_batches.load(Ordering::Relaxed)));
+    coalesce.insert("predict_rows".to_string(), n(c.predict_rows.load(Ordering::Relaxed)));
+    coalesce.insert("predict_batches".to_string(), n(c.predict_batches.load(Ordering::Relaxed)));
+    coalesce.insert("size_flushes".to_string(), n(c.size_flushes.load(Ordering::Relaxed)));
+    coalesce.insert("deadline_flushes".to_string(), n(c.deadline_flushes.load(Ordering::Relaxed)));
+    coalesce
+        .insert("completion_flushes".to_string(), n(c.completion_flushes.load(Ordering::Relaxed)));
+    coalesce.insert("dropped_replies".to_string(), n(c.dropped_replies.load(Ordering::Relaxed)));
+
+    let d = &shared.stats;
+    let mut daemon = BTreeMap::new();
+    daemon.insert(
+        "connections_accepted".to_string(),
+        n(d.connections_accepted.load(Ordering::Relaxed)),
+    );
+    daemon.insert("frames_in".to_string(), n(d.frames_in.load(Ordering::Relaxed)));
+    daemon.insert("frames_out".to_string(), n(d.frames_out.load(Ordering::Relaxed)));
+    daemon
+        .insert("rejected_in_flight".to_string(), n(d.rejected_in_flight.load(Ordering::Relaxed)));
+    daemon.insert(
+        "rejected_queue_full".to_string(),
+        n(d.rejected_queue_full.load(Ordering::Relaxed)),
+    );
+    daemon.insert("protocol_errors".to_string(), n(d.protocol_errors.load(Ordering::Relaxed)));
+
+    let mut root = BTreeMap::new();
+    root.insert("service".to_string(), JsonValue::Object(service));
+    root.insert("latency".to_string(), JsonValue::Object(latency));
+    root.insert("coalesce".to_string(), JsonValue::Object(coalesce));
+    root.insert("daemon".to_string(), JsonValue::Object(daemon));
+    JsonValue::Object(root).to_string_compact()
+}
+
+// ── request parsing ────────────────────────────────────────────────────
+
+type ParseError = (u64, String);
+
+fn parse_request(frame: &[u8]) -> Result<WireRequest, ParseError> {
+    let text = std::str::from_utf8(frame)
+        .map_err(|_| (0, "request frame is not valid UTF-8".to_string()))?;
+    let doc = JsonValue::parse(text).map_err(|e| (0, format!("malformed JSON request: {e}")))?;
+    let id = doc.get("id").and_then(as_u64).unwrap_or(0);
+    let Some(verb) = doc.get("verb").and_then(|v| v.as_str()) else {
+        return Err((id, "request is missing the string field \"verb\"".to_string()));
+    };
+    match verb {
+        "train" => Ok(WireRequest::Train {
+            id,
+            session: get_u64(&doc, "session", id)?,
+            x: get_row(&doc, "x", id)?,
+            y: get_f64(&doc, "y", id)?,
+        }),
+        "train_batch" => Ok(WireRequest::TrainBatch {
+            id,
+            session: get_u64(&doc, "session", id)?,
+            xs: get_row(&doc, "xs", id)?,
+            ys: get_row(&doc, "ys", id)?,
+        }),
+        "train_diffusion" => Ok(WireRequest::TrainDiffusion {
+            id,
+            group: get_u64(&doc, "group", id)?,
+            xs: get_row(&doc, "xs", id)?,
+            ys: get_row(&doc, "ys", id)?,
+        }),
+        "predict" => Ok(WireRequest::Predict {
+            id,
+            session: get_u64(&doc, "session", id)?,
+            x: get_row(&doc, "x", id)?,
+        }),
+        "predict_batch" => Ok(WireRequest::PredictBatch {
+            id,
+            session: get_u64(&doc, "session", id)?,
+            xs: get_row(&doc, "xs", id)?,
+        }),
+        "snapshot" => Ok(WireRequest::Snapshot { id, session: get_u64(&doc, "session", id)? }),
+        "restore" => Ok(WireRequest::Restore {
+            id,
+            session: get_u64(&doc, "session", id)?,
+            snapshot: get_str(&doc, "snapshot", id)?,
+        }),
+        "stats" => Ok(WireRequest::Stats { id }),
+        other => Err((
+            id,
+            format!(
+                "unknown verb {other:?} (expected train, train_batch, predict, \
+                 predict_batch, train_diffusion, snapshot, restore or stats)"
+            ),
+        )),
+    }
+}
+
+fn as_u64(v: &JsonValue) -> Option<u64> {
+    let f = v.as_f64()?;
+    (f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64).then_some(f as u64)
+}
+
+fn get_u64(doc: &JsonValue, key: &str, id: u64) -> Result<u64, ParseError> {
+    doc.get(key)
+        .and_then(as_u64)
+        .ok_or_else(|| (id, format!("missing or non-integer field {key:?}")))
+}
+
+fn get_f64(doc: &JsonValue, key: &str, id: u64) -> Result<f64, ParseError> {
+    doc.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| (id, format!("missing or non-numeric field {key:?}")))
+}
+
+fn get_str(doc: &JsonValue, key: &str, id: u64) -> Result<String, ParseError> {
+    doc.get(key)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| (id, format!("missing or non-string field {key:?}")))
+}
+
+/// A numeric array field (a row or a row-major batch).
+fn get_row(doc: &JsonValue, key: &str, id: u64) -> Result<Vec<f64>, ParseError> {
+    let arr = doc
+        .get(key)
+        .and_then(|v| v.as_array())
+        .ok_or_else(|| (id, format!("missing or non-array field {key:?}")))?;
+    arr.iter()
+        .map(|v| v.as_f64())
+        .collect::<Option<Vec<f64>>>()
+        .ok_or_else(|| (id, format!("field {key:?} contains a non-numeric element")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_wire_rendering_is_roundtrip_exact() {
+        let vals =
+            [0.0, -0.0, 1.5, -2.25e-300, 1e300, f64::MIN_POSITIVE, std::f64::consts::PI, -1.0e16];
+        let mut s = String::new();
+        push_f64_array(&mut s, &vals);
+        let parsed = JsonValue::parse(&s).expect("valid JSON");
+        let back: Vec<f64> =
+            parsed.as_array().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} must roundtrip bitwise");
+        }
+        // non-finite values must serialize as JSON null
+        let mut s = String::new();
+        push_f64_array(&mut s, &[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]);
+        assert_eq!(s, "[null,null,null]");
+    }
+
+    #[test]
+    fn parse_request_extracts_verbs_and_reports_bad_fields() {
+        let req = parse_request(br#"{"id":7,"verb":"train","session":3,"x":[1.0,2.0],"y":0.5}"#)
+            .expect("valid train");
+        match req {
+            WireRequest::Train { id, session, x, y } => {
+                assert_eq!((id, session, y), (7, 3, 0.5));
+                assert_eq!(x, vec![1.0, 2.0]);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // id is recoverable even when a later field is bad
+        let (id, msg) = parse_request(br#"{"id":9,"verb":"train","session":"x"}"#).unwrap_err();
+        assert_eq!(id, 9);
+        assert!(msg.contains("session"), "diagnostic names the field: {msg}");
+        // unknown verb lists the vocabulary
+        let (_, msg) = parse_request(br#"{"id":1,"verb":"bogus"}"#).unwrap_err();
+        assert!(msg.contains("unknown verb") && msg.contains("train_batch"), "{msg}");
+        // malformed JSON
+        let (id, msg) = parse_request(b"not json").unwrap_err();
+        assert_eq!(id, 0);
+        assert!(msg.contains("malformed"), "{msg}");
+    }
+
+    #[test]
+    fn in_flight_counter_blocks_and_releases() {
+        let inflight = Arc::new(InFlight::default());
+        assert_eq!(inflight.inc(), 1);
+        assert_eq!(inflight.inc(), 2);
+        let other = Arc::clone(&inflight);
+        let h = std::thread::spawn(move || {
+            other.wait_below(2); // parks until one dec
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        inflight.dec();
+        h.join().expect("waiter must wake");
+    }
+
+    #[test]
+    fn render_shapes_match_protocol() {
+        let mut s = String::new();
+        render(&mut s, &Reply::Ok { id: 4, body: Body::Errors(vec![0.5, -0.25]) });
+        assert_eq!(s, r#"{"id":4,"ok":true,"errors":[0.5,-0.25]}"#);
+        s.clear();
+        render(&mut s, &Reply::Ok { id: 5, body: Body::None });
+        assert_eq!(s, r#"{"id":5,"ok":true}"#);
+        s.clear();
+        render(&mut s, &Reply::Err { id: 6, msg: "bad \"thing\"".into() });
+        assert_eq!(s, r#"{"id":6,"ok":false,"error":"bad \"thing\""}"#);
+        // every rendered reply must itself parse
+        for case in [
+            Reply::Ok { id: 1, body: Body::Y(-0.0) },
+            Reply::Ok { id: 2, body: Body::Ys(vec![f64::NAN, 1.0]) },
+            Reply::Ok { id: 3, body: Body::Snapshot("{\"v\":1}".into()) },
+        ] {
+            s.clear();
+            render(&mut s, &case);
+            JsonValue::parse(&s).expect("rendered reply parses");
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Length-prefixed framing over a byte stream.
+//!
+//! Every frame is a 4-byte **big-endian** `u32` payload length followed
+//! by exactly that many payload bytes (the JSON document — see
+//! [`crate::daemon`] for the protocol). Zero-length frames are legal at
+//! the framing layer (the protocol layer rejects them as malformed
+//! JSON).
+//!
+//! Both directions reuse one growable buffer per connection
+//! ([`FrameReader`] / [`FrameWriter`]): after warm-up, steady-state
+//! serving neither allocates nor copies beyond the single
+//! kernel-boundary read/write per frame.
+//!
+//! Error taxonomy (what the connection handler keys off):
+//!
+//! * `Ok(None)` — the peer closed cleanly **between** frames.
+//! * `ErrorKind::UnexpectedEof` — the stream ended **inside** a frame
+//!   (truncated length prefix or truncated payload): the peer is gone
+//!   mid-message, nothing can be replied.
+//! * `ErrorKind::InvalidData` — the length prefix exceeds the
+//!   configured cap: the daemon replies with the diagnostic and closes
+//!   (after an oversized claim the stream position can't be resynced).
+
+use std::io::{self, Read, Write};
+
+/// Bytes in the length prefix.
+pub const LEN_PREFIX_BYTES: usize = 4;
+
+/// Default per-frame payload cap (8 MiB) — large enough for a
+/// multi-thousand-row `train_batch` or a full session snapshot, small
+/// enough that one malicious prefix cannot OOM the daemon.
+pub const DEFAULT_MAX_FRAME: usize = 8 * 1024 * 1024;
+
+/// Reads length-prefixed frames, reusing one payload buffer.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    /// Empty reader (the buffer grows to the largest frame seen).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read the next frame's payload. `Ok(None)` means the peer closed
+    /// cleanly at a frame boundary. See the module docs for the error
+    /// taxonomy.
+    pub fn read_frame<'a>(
+        &'a mut self,
+        r: &mut impl Read,
+        max_frame: usize,
+    ) -> io::Result<Option<&'a [u8]>> {
+        let mut prefix = [0u8; LEN_PREFIX_BYTES];
+        // EOF before the first prefix byte is a clean close; EOF after
+        // it is a truncated frame
+        match r.read(&mut prefix)? {
+            0 => return Ok(None),
+            n if n < LEN_PREFIX_BYTES => r.read_exact(&mut prefix[n..])?,
+            _ => {}
+        }
+        let len = u32::from_be_bytes(prefix) as usize;
+        if len > max_frame {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("frame of {len} bytes exceeds the {max_frame}-byte cap"),
+            ));
+        }
+        // resize keeps capacity across frames: allocation-free once
+        // warmed up to the connection's largest frame
+        self.buf.resize(len, 0);
+        r.read_exact(&mut self.buf)?;
+        Ok(Some(&self.buf))
+    }
+}
+
+/// Writes length-prefixed frames, reusing one staging buffer so prefix
+/// and payload leave in a single `write_all` (one syscall per frame on
+/// an unbuffered socket).
+#[derive(Default)]
+pub struct FrameWriter {
+    buf: Vec<u8>,
+}
+
+impl FrameWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Frame `payload` and write it to `w`.
+    pub fn write_frame(&mut self, w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+        debug_assert!(payload.len() <= u32::MAX as usize);
+        self.buf.clear();
+        self.buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        self.buf.extend_from_slice(payload);
+        w.write_all(&self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(payloads: &[&[u8]]) -> Vec<Vec<u8>> {
+        let mut wire = Vec::new();
+        let mut fw = FrameWriter::new();
+        for p in payloads {
+            fw.write_frame(&mut wire, p).unwrap();
+        }
+        let mut out = Vec::new();
+        let mut cur = Cursor::new(wire);
+        let mut fr = FrameReader::new();
+        while let Some(frame) = fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap() {
+            out.push(frame.to_vec());
+        }
+        out
+    }
+
+    #[test]
+    fn frames_roundtrip_including_empty() {
+        let got = roundtrip(&[b"hello", b"", b"{\"id\":1}", &[0u8; 1000]]);
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0], b"hello");
+        assert_eq!(got[1], b"");
+        assert_eq!(got[3].len(), 1000);
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_none() {
+        let mut fr = FrameReader::new();
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(fr.read_frame(&mut empty, DEFAULT_MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_prefix_and_payload_are_unexpected_eof() {
+        // two of four prefix bytes, then EOF
+        let mut cur = Cursor::new(vec![0u8, 0]);
+        let err = FrameReader::new().read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // full prefix claiming 100 bytes, only 10 present
+        let mut wire = 100u32.to_be_bytes().to_vec();
+        wire.extend_from_slice(&[7u8; 10]);
+        let mut cur = Cursor::new(wire);
+        let err = FrameReader::new().read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn oversized_prefix_is_invalid_data_with_diagnostic() {
+        let mut wire = (u32::MAX).to_be_bytes().to_vec();
+        wire.extend_from_slice(b"whatever");
+        let mut cur = Cursor::new(wire);
+        let err = FrameReader::new().read_frame(&mut cur, 1024).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let msg = err.to_string();
+        assert!(msg.contains("exceeds") && msg.contains("1024"), "diagnostic: {msg}");
+    }
+
+    #[test]
+    fn reader_buffer_is_reused_across_frames() {
+        let mut wire = Vec::new();
+        let mut fw = FrameWriter::new();
+        fw.write_frame(&mut wire, &[1u8; 512]).unwrap();
+        fw.write_frame(&mut wire, &[2u8; 16]).unwrap();
+        let mut cur = Cursor::new(wire);
+        let mut fr = FrameReader::new();
+        fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap();
+        let cap = fr.buf.capacity();
+        assert!(cap >= 512);
+        fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(fr.buf.capacity(), cap, "small frame must not shrink the buffer");
+    }
+}

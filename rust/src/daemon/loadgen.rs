@@ -1,0 +1,402 @@
+//! Wire client + closed-loop load generator for the daemon.
+//!
+//! [`WireClient`] is a deliberately thin, fully pipelined client:
+//! `send_*` methods frame one request and return its id without
+//! waiting; [`WireClient::recv`] reads the next reply. The `call_*`
+//! wrappers do one synchronous round trip. `tests/wire.rs` drives
+//! correctness through it; `benches/wire.rs` and
+//! `examples/wire_loadgen.rs` drive throughput through
+//! [`run_loadgen`], which opens N concurrent connections, keeps a
+//! bounded window of requests in flight on each, and reports rows/s
+//! plus an end-to-end latency histogram (p50/p95/p99 via
+//! [`LogHistogram::quantile`]).
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure};
+
+use crate::metrics::LogHistogram;
+use crate::rng::{run_rng, Distribution, Normal};
+use crate::util::JsonValue;
+use crate::Result;
+
+use super::conn::{push_f64, push_f64_array};
+use super::framing::{FrameReader, FrameWriter, DEFAULT_MAX_FRAME};
+
+/// A pipelined client for the daemon's wire protocol.
+pub struct WireClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    writer: FrameWriter,
+    /// Reused request-serialization buffer.
+    json: String,
+    next_id: u64,
+}
+
+/// One parsed reply frame; fields are populated per the verb's shape
+/// (see [`crate::daemon`] for the protocol table).
+#[derive(Clone, Debug, Default)]
+pub struct WireReply {
+    /// Echo of the request id (0 if the server could not parse one).
+    pub id: u64,
+    /// Success flag.
+    pub ok: bool,
+    /// Train-class a-priori errors.
+    pub errors: Vec<f64>,
+    /// Scalar prediction (`predict`).
+    pub y: Option<f64>,
+    /// Batch predictions (`predict_batch`).
+    pub ys: Vec<f64>,
+    /// Session snapshot document (`snapshot`).
+    pub snapshot: Option<String>,
+    /// Stats object (`stats`).
+    pub stats: Option<JsonValue>,
+    /// Diagnostic when `ok` is false.
+    pub error: Option<String>,
+}
+
+impl WireClient {
+    /// Connect to a daemon.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self {
+            stream,
+            reader: FrameReader::new(),
+            writer: FrameWriter::new(),
+            json: String::new(),
+            next_id: 0,
+        })
+    }
+
+    fn begin(&mut self, verb: &str) -> u64 {
+        self.next_id += 1;
+        self.json.clear();
+        let _ = write!(self.json, "{{\"id\":{},\"verb\":\"{verb}\"", self.next_id);
+        self.next_id
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        self.json.push('}');
+        self.writer.write_frame(&mut (&self.stream), self.json.as_bytes())
+    }
+
+    /// Pipeline a `train` request; returns its id without waiting.
+    pub fn send_train(&mut self, session: u64, x: &[f64], y: f64) -> io::Result<u64> {
+        let id = self.begin("train");
+        let _ = write!(self.json, ",\"session\":{session},\"x\":");
+        push_f64_array(&mut self.json, x);
+        self.json.push_str(",\"y\":");
+        push_f64(&mut self.json, y);
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `train_batch` request (`xs` row-major `[n, d]`).
+    pub fn send_train_batch(&mut self, session: u64, xs: &[f64], ys: &[f64]) -> io::Result<u64> {
+        let id = self.begin("train_batch");
+        let _ = write!(self.json, ",\"session\":{session},\"xs\":");
+        push_f64_array(&mut self.json, xs);
+        self.json.push_str(",\"ys\":");
+        push_f64_array(&mut self.json, ys);
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `train_diffusion` request for a diffusion group.
+    pub fn send_train_diffusion(&mut self, group: u64, xs: &[f64], ys: &[f64]) -> io::Result<u64> {
+        let id = self.begin("train_diffusion");
+        let _ = write!(self.json, ",\"group\":{group},\"xs\":");
+        push_f64_array(&mut self.json, xs);
+        self.json.push_str(",\"ys\":");
+        push_f64_array(&mut self.json, ys);
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `predict` request.
+    pub fn send_predict(&mut self, session: u64, x: &[f64]) -> io::Result<u64> {
+        let id = self.begin("predict");
+        let _ = write!(self.json, ",\"session\":{session},\"x\":");
+        push_f64_array(&mut self.json, x);
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `predict_batch` request.
+    pub fn send_predict_batch(&mut self, session: u64, xs: &[f64]) -> io::Result<u64> {
+        let id = self.begin("predict_batch");
+        let _ = write!(self.json, ",\"session\":{session},\"xs\":");
+        push_f64_array(&mut self.json, xs);
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `snapshot` request.
+    pub fn send_snapshot(&mut self, session: u64) -> io::Result<u64> {
+        let id = self.begin("snapshot");
+        let _ = write!(self.json, ",\"session\":{session}");
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `restore` request.
+    pub fn send_restore(&mut self, session: u64, snapshot: &str) -> io::Result<u64> {
+        let id = self.begin("restore");
+        let _ = write!(self.json, ",\"session\":{session},\"snapshot\":");
+        crate::util::write_escaped(&mut self.json, snapshot);
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `stats` request.
+    pub fn send_stats(&mut self) -> io::Result<u64> {
+        let id = self.begin("stats");
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Send an arbitrary payload in a well-formed frame (negative-path
+    /// tests: malformed JSON, bad verbs, ...).
+    pub fn send_raw(&mut self, payload: &[u8]) -> io::Result<()> {
+        self.writer.write_frame(&mut (&self.stream), payload)
+    }
+
+    /// Read and parse the next reply frame.
+    pub fn recv(&mut self) -> Result<WireReply> {
+        let Some(frame) = self.reader.read_frame(&mut (&self.stream), DEFAULT_MAX_FRAME)? else {
+            bail!("connection closed by daemon");
+        };
+        let text = std::str::from_utf8(frame)?;
+        let doc = JsonValue::parse(text).map_err(|e| anyhow!("unparseable reply: {e}"))?;
+        let num = |k: &str| doc.get(k).and_then(|v| v.as_f64());
+        let vec = |k: &str| -> Vec<f64> {
+            doc.get(k)
+                .and_then(|v| v.as_array())
+                .map(|a| a.iter().map(|v| v.as_f64().unwrap_or(f64::NAN)).collect())
+                .unwrap_or_default()
+        };
+        Ok(WireReply {
+            id: num("id").unwrap_or(0.0) as u64,
+            ok: matches!(doc.get("ok"), Some(JsonValue::Bool(true))),
+            errors: vec("errors"),
+            y: num("y"),
+            ys: vec("ys"),
+            snapshot: doc.get("snapshot").and_then(|v| v.as_str()).map(str::to_string),
+            stats: doc.get("stats").cloned(),
+            error: doc.get("error").and_then(|v| v.as_str()).map(str::to_string),
+        })
+    }
+
+    /// Reply for `id`, failing on id mismatch or an `ok:false` reply.
+    fn expect_ok(&mut self, id: u64) -> Result<WireReply> {
+        let reply = self.recv()?;
+        ensure!(reply.id == id, "reply id {} for request {id} (pipelining mixup)", reply.id);
+        if !reply.ok {
+            bail!("request {id} failed: {}", reply.error.as_deref().unwrap_or("unknown error"));
+        }
+        Ok(reply)
+    }
+
+    /// Synchronous `train` round trip; returns the a-priori errors.
+    pub fn call_train(&mut self, session: u64, x: &[f64], y: f64) -> Result<Vec<f64>> {
+        let id = self.send_train(session, x, y)?;
+        Ok(self.expect_ok(id)?.errors)
+    }
+
+    /// Synchronous `train_batch` round trip.
+    pub fn call_train_batch(&mut self, session: u64, xs: &[f64], ys: &[f64]) -> Result<Vec<f64>> {
+        let id = self.send_train_batch(session, xs, ys)?;
+        Ok(self.expect_ok(id)?.errors)
+    }
+
+    /// Synchronous `train_diffusion` round trip.
+    pub fn call_train_diffusion(&mut self, group: u64, xs: &[f64], ys: &[f64]) -> Result<Vec<f64>> {
+        let id = self.send_train_diffusion(group, xs, ys)?;
+        Ok(self.expect_ok(id)?.errors)
+    }
+
+    /// Synchronous `predict` round trip.
+    pub fn call_predict(&mut self, session: u64, x: &[f64]) -> Result<f64> {
+        let id = self.send_predict(session, x)?;
+        self.expect_ok(id)?.y.ok_or_else(|| anyhow!("predict reply carried no y"))
+    }
+
+    /// Synchronous `predict_batch` round trip.
+    pub fn call_predict_batch(&mut self, session: u64, xs: &[f64]) -> Result<Vec<f64>> {
+        let id = self.send_predict_batch(session, xs)?;
+        Ok(self.expect_ok(id)?.ys)
+    }
+
+    /// Synchronous `snapshot` round trip.
+    pub fn call_snapshot(&mut self, session: u64) -> Result<String> {
+        let id = self.send_snapshot(session)?;
+        self.expect_ok(id)?.snapshot.ok_or_else(|| anyhow!("snapshot reply carried no document"))
+    }
+
+    /// Synchronous `restore` round trip.
+    pub fn call_restore(&mut self, session: u64, snapshot: &str) -> Result<()> {
+        let id = self.send_restore(session, snapshot)?;
+        self.expect_ok(id)?;
+        Ok(())
+    }
+
+    /// Synchronous `stats` round trip.
+    pub fn call_stats(&mut self) -> Result<JsonValue> {
+        let id = self.send_stats()?;
+        self.expect_ok(id)?.stats.ok_or_else(|| anyhow!("stats reply carried no object"))
+    }
+}
+
+/// Load-generator shape.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Target session ids; connection `c`'s op `o` goes to
+    /// `sessions[(c + o) % len]` — deterministic, so tests can compute
+    /// exact per-session row counts, and interleaved, so rows for one
+    /// session arrive from many connections (what coalescing feeds on).
+    pub sessions: Vec<u64>,
+    /// Operations (train or predict rows) sent per connection.
+    pub rows_per_connection: usize,
+    /// Input dimension of every row.
+    pub dim: usize,
+    /// Per-connection pipelining window (max outstanding requests);
+    /// kept at or below the daemon's `max_in_flight` so a well-behaved
+    /// run sees zero rejections.
+    pub window: usize,
+    /// Every `predict_every`-th op is a predict (0 = train only).
+    pub predict_every: usize,
+    /// Seed for the per-connection input streams.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            connections: 4,
+            sessions: vec![],
+            rows_per_connection: 1000,
+            dim: 5,
+            window: 64,
+            predict_every: 5,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregate result of a load-generator run.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// Replies received with `ok:true`.
+    pub ok_replies: u64,
+    /// Replies received with `ok:false` (rejections, failures).
+    pub wire_errors: u64,
+    /// Requests that never got a reply (plus replies with unknown ids).
+    pub lost_replies: u64,
+    /// Wall-clock for the whole run.
+    pub elapsed: Duration,
+    /// End-to-end per-request latency (seconds): send → reply parsed.
+    pub latency: LogHistogram,
+}
+
+impl LoadgenReport {
+    /// Successful operations per wall-clock second.
+    pub fn rows_per_sec(&self) -> f64 {
+        self.ok_replies as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+struct ConnOutcome {
+    ok: u64,
+    errs: u64,
+    lost: u64,
+    latency: LogHistogram,
+}
+
+/// Drive `cfg.connections` concurrent closed-loop clients against the
+/// daemon at `addr` and aggregate their outcomes.
+pub fn run_loadgen(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    ensure!(!cfg.sessions.is_empty(), "loadgen needs at least one session id");
+    ensure!(cfg.dim > 0 && cfg.window > 0, "loadgen needs dim > 0 and window > 0");
+    let t0 = Instant::now();
+    let outcomes: Vec<Result<ConnOutcome>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.connections)
+            .map(|c| scope.spawn(move || drive_connection(addr, cfg, c)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("loadgen connection panicked"))))
+            .collect()
+    });
+    let mut report = LoadgenReport {
+        ok_replies: 0,
+        wire_errors: 0,
+        lost_replies: 0,
+        elapsed: t0.elapsed(),
+        latency: LogHistogram::new(),
+    };
+    for outcome in outcomes {
+        let o = outcome?;
+        report.ok_replies += o.ok;
+        report.wire_errors += o.errs;
+        report.lost_replies += o.lost;
+        report.latency.merge(&o.latency);
+    }
+    Ok(report)
+}
+
+fn drive_connection(addr: SocketAddr, cfg: &LoadgenConfig, conn_index: usize) -> Result<ConnOutcome> {
+    let mut client = WireClient::connect(addr)?;
+    let mut rng = run_rng(cfg.seed, conn_index);
+    let normal = Normal::standard();
+    let mut outstanding: HashMap<u64, Instant> = HashMap::new();
+    let mut out = ConnOutcome { ok: 0, errs: 0, lost: 0, latency: LogHistogram::new() };
+    let mut x = vec![0.0; cfg.dim];
+    for op in 0..cfg.rows_per_connection {
+        while outstanding.len() >= cfg.window {
+            recv_one(&mut client, &mut outstanding, &mut out)?;
+        }
+        let session = cfg.sessions[(conn_index + op) % cfg.sessions.len()];
+        normal.fill(&mut rng, &mut x);
+        let id = if cfg.predict_every > 0 && op % cfg.predict_every == 0 {
+            client.send_predict(session, &x)?
+        } else {
+            // arbitrary deterministic target: the daemon doesn't care,
+            // the filters get a learnable nonlinearity
+            client.send_train(session, &x, x[0].sin())?
+        };
+        outstanding.insert(id, Instant::now());
+    }
+    while !outstanding.is_empty() {
+        if recv_one(&mut client, &mut outstanding, &mut out).is_err() {
+            // connection died with replies outstanding: all lost
+            out.lost += outstanding.len() as u64;
+            break;
+        }
+    }
+    Ok(out)
+}
+
+fn recv_one(
+    client: &mut WireClient,
+    outstanding: &mut HashMap<u64, Instant>,
+    out: &mut ConnOutcome,
+) -> Result<()> {
+    let reply = client.recv()?;
+    match outstanding.remove(&reply.id) {
+        Some(sent_at) => out.latency.record(sent_at.elapsed().as_secs_f64().max(1e-9)),
+        None => out.lost += 1, // a reply we never asked for counts as an anomaly
+    }
+    if reply.ok {
+        out.ok += 1;
+    } else {
+        out.errs += 1;
+    }
+    Ok(())
+}

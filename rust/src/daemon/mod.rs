@@ -1,0 +1,254 @@
+//! Wire front door: a pipelined TCP daemon over the coordinator.
+//!
+//! Everything below the socket already exists — this layer only maps
+//! frames onto [`Request`](crate::coordinator::Request)s, coalesces
+//! single-row traffic across connections (`coalesce.rs`, configured via
+//! [`CoalesceConfig`]) and pushes
+//! backpressure out to the peers ([`DaemonConfig::max_in_flight`],
+//! [`CoordinatorService::try_submit`] rejections). Plain `std::net` +
+//! the crate's own [`ThreadPool`](crate::exec::ThreadPool); no external
+//! dependencies.
+//!
+//! ```text
+//!  TCP peers ──► accept thread ──► connection pool (one reader/writer
+//!     │                            pair per connection; framing.rs)
+//!     │  single-row train/predict          │ batch & admin verbs
+//!     │          ▼                         ▼
+//!     │   Coalescer (coalesce.rs):   CoordinatorService::try_submit
+//!     │   per-session buffers ──►    (reject-with-diagnostic on a
+//!     │   TrainBatch/PredictBatch    full BoundedQueue)
+//!     └─ backpressure: in-flight cap → reject; 2× cap → stop reading
+//! ```
+//!
+//! ## Frame format
+//!
+//! Both directions: a 4-byte **big-endian** `u32` payload length, then
+//! that many bytes of UTF-8 JSON (one document per frame — see
+//! [`framing`]). Frames above [`DaemonConfig::max_frame`] are rejected
+//! with a diagnostic and the connection is closed (the stream cannot be
+//! resynced past an untrusted length). A *malformed payload* in a
+//! well-formed frame only fails that request: the daemon replies
+//! `ok:false` and keeps the connection.
+//!
+//! ## Verbs
+//!
+//! Requests are objects: `{"id": n, "verb": "...", ...}`. `id` is an
+//! arbitrary client-chosen integer echoed in the reply; replies always
+//! arrive in request order per connection (pipelining is encouraged —
+//! it is what the coalescer feeds on).
+//!
+//! | verb | request fields | ok-reply fields |
+//! |---|---|---|
+//! | `train` | `session`, `x` (row), `y` | `errors` (1 a-priori error) |
+//! | `train_batch` | `session`, `xs` (row-major `[n,d]`), `ys` | `errors` (n) |
+//! | `train_diffusion` | `group`, `xs` (`[rounds·nodes, d]`), `ys` | `errors` |
+//! | `predict` | `session`, `x` | `y` |
+//! | `predict_batch` | `session`, `xs` | `ys` |
+//! | `snapshot` | `session` | `snapshot` (versioned JSON document) |
+//! | `restore` | `session`, `snapshot` | — (bare `ok`) |
+//! | `stats` | — | `stats` (service/latency/coalesce/daemon counters) |
+//!
+//! Every reply is `{"id":N,"ok":true,...}` or
+//! `{"id":N,"ok":false,"error":"..."}` (`id` 0 when the request's id
+//! was unparseable). Numbers are serialized shortest-roundtrip, so
+//! `f64` values survive the wire **bitwise** (non-finite → `null`).
+//!
+//! ## Coalescing (the perf core)
+//!
+//! With [`CoalesceConfig::enabled`] (the default), single-row `train` /
+//! `predict` frames from *all* connections accumulate per session and
+//! dispatch as one `TrainBatch`/`PredictBatch` — same blocked batch
+//! kernels, one queue slot and one router round-trip per batch instead
+//! of per row. Per-session row order and the one-outstanding-train-
+//! batch rule make the result **bitwise identical** to sequential
+//! per-row dispatch (see `coalesce.rs`; pinned by `tests/wire.rs`).
+//! `BENCH_wire.json` carries the on/off ablation.
+//!
+//! ## Shutdown order
+//!
+//! [`Daemon::shutdown`] severs peer connections (pending replies on
+//! those sockets are lost — counted, never silently), flushes every
+//! coalesced row into the service and waits for the demux chains; the
+//! *service* must still be running while it does, so always shut the
+//! daemon down **before** the [`CoordinatorService`].
+
+pub mod framing;
+pub mod loadgen;
+
+mod coalesce;
+mod conn;
+
+pub use coalesce::{CoalesceConfig, CoalesceStats};
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::coordinator::CoordinatorService;
+use crate::exec::ThreadPool;
+use crate::Result;
+
+use coalesce::Coalescer;
+use conn::ConnShared;
+
+/// Daemon knobs.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address. The default `127.0.0.1:0` picks a free loopback
+    /// port — read it back via [`Daemon::local_addr`].
+    pub addr: String,
+    /// Connection-pool size: connections served concurrently. Extra
+    /// accepted connections queue for a slot.
+    pub max_connections: usize,
+    /// Per-connection soft cap on admitted-but-unanswered requests;
+    /// beyond it new frames are rejected with a diagnostic, and at 2×
+    /// the reader stops reading (plain TCP backpressure).
+    pub max_in_flight: usize,
+    /// Per-frame payload cap (default 8 MiB, see
+    /// [`framing::DEFAULT_MAX_FRAME`]).
+    pub max_frame: usize,
+    /// Cross-connection coalescing stage configuration.
+    pub coalesce: CoalesceConfig,
+    /// Threads demuxing batch responses back to per-row replies.
+    pub completion_workers: usize,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 128,
+            max_in_flight: 256,
+            max_frame: framing::DEFAULT_MAX_FRAME,
+            coalesce: CoalesceConfig::default(),
+            completion_workers: 4,
+        }
+    }
+}
+
+/// Wire-layer counters (exported via the `stats` verb alongside
+/// [`ServiceStats`](crate::coordinator::ServiceStats) and
+/// [`CoalesceStats`]).
+#[derive(Debug, Default)]
+pub struct DaemonStats {
+    /// Connections accepted over the daemon's lifetime.
+    pub connections_accepted: AtomicU64,
+    /// Request frames read (including ones later rejected).
+    pub frames_in: AtomicU64,
+    /// Reply frames successfully written.
+    pub frames_out: AtomicU64,
+    /// Frames rejected by the per-connection in-flight cap.
+    pub rejected_in_flight: AtomicU64,
+    /// Requests rejected because the router queue was full.
+    pub rejected_queue_full: AtomicU64,
+    /// Unparseable frames (bad UTF-8/JSON, unknown verb, bad fields)
+    /// and oversized length prefixes.
+    pub protocol_errors: AtomicU64,
+}
+
+/// A running TCP front door over a [`CoordinatorService`].
+///
+/// Dropping a `Daemon` without calling [`Daemon::shutdown`] leaks the
+/// accept thread (it parks in `accept`); always shut down explicitly.
+pub struct Daemon {
+    addr: SocketAddr,
+    closing: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<ThreadPool>,
+    live: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    coalescer: Arc<Coalescer>,
+    stats: Arc<DaemonStats>,
+}
+
+impl Daemon {
+    /// Bind and start serving. Returns once the listener is live.
+    pub fn start(svc: Arc<CoordinatorService>, config: DaemonConfig) -> Result<Self> {
+        let listener = TcpListener::bind(config.addr.as_str())?;
+        let addr = listener.local_addr()?;
+        let stats = Arc::new(DaemonStats::default());
+        let coalescer =
+            Coalescer::start(Arc::clone(&svc), config.coalesce.clone(), config.completion_workers);
+        let shared = Arc::new(ConnShared {
+            svc,
+            coalescer: Arc::clone(&coalescer),
+            stats: Arc::clone(&stats),
+            max_in_flight: config.max_in_flight.max(1),
+            max_frame: config.max_frame,
+        });
+        let conns = Arc::new(ThreadPool::new(config.max_connections.max(1)));
+        let closing = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(Mutex::new(HashMap::new()));
+        let accept = {
+            let pool_tx = Arc::clone(&conns);
+            let closing = Arc::clone(&closing);
+            let live = Arc::clone(&live);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name("rff-kaf-daemon-accept".into())
+                .spawn(move || {
+                    let mut next_conn = 0u64;
+                    for incoming in listener.incoming() {
+                        if closing.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        stats.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                        let cid = next_conn;
+                        next_conn += 1;
+                        // keep a handle so shutdown can sever the peer
+                        if let Ok(clone) = stream.try_clone() {
+                            live.lock().unwrap_or_else(PoisonError::into_inner).insert(cid, clone);
+                        }
+                        let shared = Arc::clone(&shared);
+                        let live = Arc::clone(&live);
+                        pool_tx.execute(move || {
+                            conn::serve(stream, shared);
+                            live.lock().unwrap_or_else(PoisonError::into_inner).remove(&cid);
+                        });
+                    }
+                })
+                .expect("spawning daemon accept thread")
+        };
+        Ok(Self { addr, closing, accept: Some(accept), conns, live, coalescer, stats })
+    }
+
+    /// The bound address (resolves the `:0` ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wire-layer counters.
+    pub fn stats(&self) -> &DaemonStats {
+        &self.stats
+    }
+
+    /// Coalescing-stage counters.
+    pub fn coalesce_stats(&self) -> &CoalesceStats {
+        self.coalescer.stats()
+    }
+
+    /// Stop accepting, sever live connections, flush every coalesced
+    /// row into the service and wait for all in-flight work to demux.
+    /// The underlying [`CoordinatorService`] must still be running
+    /// (shut the daemon down first, the service second).
+    pub fn shutdown(mut self) {
+        self.closing.store(true, Ordering::SeqCst);
+        // unblock `accept` — the loop re-checks `closing` per wakeup
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        // sever peers: readers see EOF/reset and drain their writers
+        let streams: Vec<TcpStream> = {
+            let mut g = self.live.lock().unwrap_or_else(PoisonError::into_inner);
+            g.drain().map(|(_, s)| s).collect()
+        };
+        for s in streams {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.conns.wait_idle();
+        self.coalescer.shutdown();
+    }
+}

@@ -37,11 +37,13 @@
 //! | [`util`] | minimal JSON/CSV writers, CLI parsing, logging |
 //! | [`runtime`] | PJRT client wrapper + HLO-text artifact registry |
 //! | [`coordinator`] | sessions (filters **and** diffusion groups), router, dynamic batcher, snapshots/spill, MC orchestrator |
+//! | [`daemon`] | TCP wire front door: length-prefixed JSON framing, cross-connection batch coalescing, backpressure, load generator |
 //! | [`distributed`] | diffusion networks (KLMS/NLMS × ATC/CTA) on the lane/batch substrate, topology codecs, traffic accounting |
 //! | [`experiments`] | drivers regenerating Figs. 1–3 and Table 1 |
 
 pub mod bench;
 pub mod coordinator;
+pub mod daemon;
 pub mod distributed;
 pub mod exec;
 pub mod experiments;

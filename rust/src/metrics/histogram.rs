@@ -50,11 +50,23 @@ impl LogHistogram {
 
     /// Record one observation (must be > 0; zeros are clamped).
     pub fn record(&mut self, v: f64) {
-        self.counts[Self::bucket_of(v)] += 1;
-        self.total += 1;
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` observations of the same value in O(1). This is the
+    /// batched-request path: a router arm that served `n` rows in one
+    /// request records the request's service time once per row without
+    /// looping, so per-row latency quantiles stay comparable between
+    /// batched and single-row traffic.
+    pub fn record_n(&mut self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[Self::bucket_of(v)] += n;
+        self.total += n;
         self.min = self.min.min(v);
         self.max = self.max.max(v);
-        self.sum += v;
+        self.sum += v * n as f64;
     }
 
     /// Number of observations.
@@ -170,6 +182,26 @@ mod tests {
         assert_eq!(a.count(), c.count());
         for q in [0.1, 0.5, 0.9, 0.99] {
             assert!((a.quantile(q) - c.quantile(q)).abs() / c.quantile(q) < 0.05);
+        }
+    }
+
+    #[test]
+    fn record_n_matches_n_records() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for (v, n) in [(1e-4, 7u64), (3e-3, 1), (2e-2, 40)] {
+            a.record_n(v, n);
+            for _ in 0..n {
+                b.record(v);
+            }
+        }
+        a.record_n(123.0, 0); // no-op, must not disturb min/max
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+        assert!((a.mean() - b.mean()).abs() < 1e-12);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), b.quantile(q));
         }
     }
 

@@ -150,7 +150,11 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Append `s` to `out` as a quoted JSON string with standard escapes.
+/// Shared by [`JsonValue`]'s writer and the daemon's allocation-free
+/// frame serializer (`crate::daemon`), so there is exactly one escaping
+/// implementation in the crate.
+pub fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

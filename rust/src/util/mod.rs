@@ -7,4 +7,4 @@ pub mod csv;
 pub mod json;
 
 pub use cli::Args;
-pub use json::JsonValue;
+pub use json::{write_escaped, JsonValue};

@@ -1,0 +1,433 @@
+//! Integration: the TCP wire front door end-to-end over loopback.
+//!
+//! The load-bearing property is **parity**: a session trained with
+//! pipelined single-row `train` frames through the coalescing daemon
+//! must be bitwise identical to the same rows fed straight into
+//! `train_batch_sync` — coalescing may change *batching*, never
+//! results. Around that: lossless mixed traffic across connections,
+//! framing/parse negative paths, backpressure diagnostics, and the
+//! snapshot/restore/stats verbs.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rff_kaf::coordinator::{
+    CoordinatorService, DiffusionGroupConfig, ServiceConfig, SessionConfig,
+};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, WireClient};
+use rff_kaf::daemon::{CoalesceConfig, Daemon, DaemonConfig};
+use rff_kaf::distributed::{DiffusionOrdering, NetworkTopology};
+use rff_kaf::rng::{run_rng, Distribution, Normal};
+use rff_kaf::signal::{NonlinearWiener, SignalSource};
+
+/// Service tuned for fast test shutdown (short idle-worker parking).
+fn start_service() -> Arc<CoordinatorService> {
+    let cfg = ServiceConfig { first_wait: Duration::from_millis(5), ..ServiceConfig::default() };
+    Arc::new(CoordinatorService::start(cfg, None))
+}
+
+fn stop_service(svc: Arc<CoordinatorService>) {
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}
+
+fn session_cfg(features: usize) -> SessionConfig {
+    SessionConfig { features, ..SessionConfig::paper_default() }
+}
+
+#[test]
+fn coalesced_wire_training_is_bitwise_equal_to_batch_sync() {
+    const ROWS: usize = 300;
+    let svc = start_service();
+    // identical spec + seed → identical initial state and one shared map
+    let wire_sid = svc.add_session_from_spec(session_cfg(64), 7).unwrap();
+    let mirror_sid = svc.add_session_from_spec(session_cfg(64), 7).unwrap();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            max_in_flight: 1024, // the whole run stays pipelined
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 8,
+                flush_wait: Duration::from_millis(20),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut src = NonlinearWiener::new(run_rng(42, 1), 0.05);
+    let samples = src.take_samples(ROWS);
+
+    // wire path: pipeline every row without waiting, then drain replies
+    // in order — reply order == request order == per-session row order
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+    for s in &samples {
+        client.send_train(wire_sid, &s.x, s.y).unwrap();
+    }
+    let mut wire_errs = Vec::with_capacity(ROWS);
+    for i in 0..ROWS {
+        let reply = client.recv().unwrap();
+        assert!(reply.ok, "train {i} failed: {:?}", reply.error);
+        assert_eq!(reply.errors.len(), 1, "native single-row train returns one error");
+        wire_errs.push(reply.errors[0]);
+    }
+
+    // mirror path: same rows through train_batch_sync, odd chunking to
+    // prove parity is independent of how either side batches
+    let mut mirror_errs = Vec::with_capacity(ROWS);
+    for chunk in samples.chunks(37) {
+        let xs: Vec<f64> = chunk.iter().flat_map(|s| s.x.iter().copied()).collect();
+        let ys: Vec<f64> = chunk.iter().map(|s| s.y).collect();
+        mirror_errs.extend(svc.train_batch_sync(mirror_sid, xs, ys).unwrap());
+    }
+
+    assert_eq!(wire_errs.len(), mirror_errs.len());
+    for (i, (w, m)) in wire_errs.iter().zip(&mirror_errs).enumerate() {
+        assert_eq!(w.to_bits(), m.to_bits(), "row {i}: wire {w} vs mirror {m}");
+    }
+
+    // the trained models answer identically too
+    let probe = vec![0.3, -0.2, 0.8, 0.1, -0.5];
+    let wire_p = client.call_predict(wire_sid, &probe).unwrap();
+    let mirror_p = svc.predict_sync(mirror_sid, probe).unwrap();
+    assert_eq!(wire_p.to_bits(), mirror_p.to_bits(), "{wire_p} vs {mirror_p}");
+
+    // coalescing actually happened: every row arrived, in fewer batches
+    let c = daemon.coalesce_stats();
+    assert_eq!(c.train_rows.load(Ordering::Relaxed), ROWS as u64);
+    let batches = c.train_batches.load(Ordering::Relaxed);
+    assert!(
+        (1..ROWS as u64).contains(&batches),
+        "expected 1..{ROWS} train batches, got {batches}"
+    );
+    assert_eq!(c.dropped_replies.load(Ordering::Relaxed), 0);
+
+    drop(client);
+    daemon.shutdown();
+    assert_eq!(svc.remove_session(wire_sid).unwrap().samples_seen(), ROWS);
+    assert_eq!(svc.remove_session(mirror_sid).unwrap().samples_seen(), ROWS);
+    stop_service(svc);
+}
+
+#[test]
+fn mixed_loadgen_traffic_is_lossless_and_exact() {
+    const CONNS: usize = 4;
+    const SESSIONS: usize = 16;
+    const ROWS_PER_CONN: usize = 200;
+    const PREDICT_EVERY: usize = 4;
+    let svc = start_service();
+    let ids: Vec<u64> =
+        (0..SESSIONS).map(|_| svc.add_session_from_spec(session_cfg(16), 7).unwrap()).collect();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+
+    let cfg = LoadgenConfig {
+        connections: CONNS,
+        sessions: ids.clone(),
+        rows_per_connection: ROWS_PER_CONN,
+        dim: 5,
+        window: 32,
+        predict_every: PREDICT_EVERY,
+        seed: 9,
+    };
+    let report = run_loadgen(daemon.local_addr(), &cfg).unwrap();
+    assert_eq!(report.lost_replies, 0, "every request must get exactly one reply");
+    assert_eq!(report.wire_errors, 0, "no rejections at this load: {report:?}");
+    assert_eq!(report.ok_replies, (CONNS * ROWS_PER_CONN) as u64);
+    assert!(report.latency.count() > 0);
+
+    // nothing dropped anywhere on the reply paths
+    assert_eq!(svc.stats().dropped_responses.load(Ordering::Relaxed), 0);
+    assert_eq!(daemon.coalesce_stats().dropped_replies.load(Ordering::Relaxed), 0);
+    daemon.shutdown();
+
+    // exact per-session row accounting: mirror the loadgen's routing
+    // formula (session = (conn + op) % len, predict every 4th op)
+    let mut expected_trains = vec![0usize; SESSIONS];
+    for conn in 0..CONNS {
+        for op in 0..ROWS_PER_CONN {
+            if op % PREDICT_EVERY != 0 {
+                expected_trains[(conn + op) % SESSIONS] += 1;
+            }
+        }
+    }
+    let total_trains: usize = expected_trains.iter().sum();
+    assert_eq!(svc.stats().trained.load(Ordering::Relaxed), total_trains as u64);
+    for (i, &sid) in ids.iter().enumerate() {
+        let session = svc.remove_session(sid).unwrap();
+        assert_eq!(
+            session.samples_seen(),
+            expected_trains[i],
+            "session {sid} lost or gained rows"
+        );
+    }
+    stop_service(svc);
+}
+
+#[test]
+fn malformed_frames_get_error_replies_and_the_connection_survives() {
+    let svc = start_service();
+    let sid = svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+
+    // malformed JSON → error reply with id 0, connection stays alive
+    client.send_raw(b"this is not json").unwrap();
+    let reply = client.recv().unwrap();
+    assert!(!reply.ok && reply.id == 0);
+    assert!(reply.error.as_deref().unwrap_or("").contains("malformed"), "{reply:?}");
+
+    // unknown verb → error names the verb and lists the vocabulary
+    client.send_raw(br#"{"id":3,"verb":"zap"}"#).unwrap();
+    let reply = client.recv().unwrap();
+    assert_eq!(reply.id, 3);
+    assert!(reply.error.as_deref().unwrap_or("").contains("unknown verb"), "{reply:?}");
+
+    // wrong field type → error names the field
+    client.send_raw(br#"{"id":4,"verb":"train","session":1,"x":"no","y":0}"#).unwrap();
+    let reply = client.recv().unwrap();
+    assert_eq!(reply.id, 4);
+    assert!(reply.error.as_deref().unwrap_or("").contains("\"x\""), "{reply:?}");
+
+    // the same connection still serves real work after all that
+    assert_eq!(client.call_train(sid, &[0.1, 0.2, 0.3, 0.4, 0.5], 0.5).unwrap().len(), 1);
+    assert!(daemon.stats().protocol_errors.load(Ordering::Relaxed) >= 3);
+    daemon.shutdown();
+    stop_service(svc);
+}
+
+#[test]
+fn truncated_and_oversized_frames_close_the_connection_not_the_daemon() {
+    let svc = start_service();
+    svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig { max_frame: 1024, ..DaemonConfig::default() },
+    )
+    .unwrap();
+
+    // truncated frame: prefix claims 100 bytes, peer dies after 10
+    {
+        let mut raw = TcpStream::connect(daemon.local_addr()).unwrap();
+        raw.write_all(&100u32.to_be_bytes()).unwrap();
+        raw.write_all(&[7u8; 10]).unwrap();
+    } // dropped mid-frame
+
+    // oversized length prefix: diagnostic reply, then close
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+    client.send_raw(&[b'a'; 4000]).unwrap(); // framed as a 4000-byte payload
+    let reply = client.recv().unwrap();
+    assert!(!reply.ok, "{reply:?}");
+    let msg = reply.error.as_deref().unwrap_or("");
+    assert!(msg.contains("exceeds") && msg.contains("1024"), "diagnostic: {msg}");
+    assert!(client.recv().is_err(), "daemon must close after an oversized prefix");
+
+    // the daemon itself survived both abuses
+    let mut fresh = WireClient::connect(daemon.local_addr()).unwrap();
+    let stats = fresh.call_stats().unwrap();
+    let proto = stats
+        .get("daemon")
+        .and_then(|d| d.get("protocol_errors"))
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert!(proto >= 1.0, "oversized prefix must count as a protocol error");
+    daemon.shutdown();
+    stop_service(svc);
+}
+
+#[test]
+fn in_flight_cap_rejects_with_named_diagnostic() {
+    let svc = start_service();
+    let sid = svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    // coalescer parks rows for 1 s, so replies cannot drain between the
+    // three pipelined sends — the third deterministically breaches the
+    // cap of 2
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            max_in_flight: 2,
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 100,
+                flush_wait: Duration::from_secs(1),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+    let x = [0.1, 0.2, 0.3, 0.4, 0.5];
+    let id1 = client.send_train(sid, &x, 0.1).unwrap();
+    let id2 = client.send_train(sid, &x, 0.2).unwrap();
+    let id3 = client.send_train(sid, &x, 0.3).unwrap();
+
+    // replies come back in order: two trains (after the deadline flush
+    // coalesces them into one batch), then the rejection
+    let r1 = client.recv().unwrap();
+    let r2 = client.recv().unwrap();
+    let r3 = client.recv().unwrap();
+    assert!(r1.ok && r1.id == id1, "{r1:?}");
+    assert!(r2.ok && r2.id == id2, "{r2:?}");
+    assert_eq!(r3.id, id3);
+    assert!(!r3.ok);
+    let msg = r3.error.as_deref().unwrap_or("");
+    assert!(msg.contains("in-flight cap") && msg.contains('2'), "diagnostic: {msg}");
+    assert_eq!(daemon.stats().rejected_in_flight.load(Ordering::Relaxed), 1);
+    // both admitted rows left in one deadline-coalesced batch
+    assert_eq!(daemon.coalesce_stats().train_rows.load(Ordering::Relaxed), 2);
+    assert_eq!(daemon.coalesce_stats().train_batches.load(Ordering::Relaxed), 1);
+    daemon.shutdown();
+    assert_eq!(svc.remove_session(sid).unwrap().samples_seen(), 2);
+    stop_service(svc);
+}
+
+#[test]
+fn batch_snapshot_restore_and_stats_verbs_roundtrip() {
+    const ROWS: usize = 60;
+    let svc = start_service();
+    let wire_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let mirror_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let gid = svc
+        .add_diffusion_group(
+            DiffusionGroupConfig {
+                session: session_cfg(16),
+                ordering: DiffusionOrdering::AdaptThenCombine,
+                topology: NetworkTopology::ring(3),
+            },
+            7,
+        )
+        .unwrap();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+
+    // train_batch over the wire == train_batch_sync, bitwise
+    let mut rng = run_rng(3, 0);
+    let xs = Normal::standard().sample_vec(&mut rng, ROWS * 5);
+    let ys = Normal::standard().sample_vec(&mut rng, ROWS);
+    let wire_errs = client.call_train_batch(wire_sid, &xs, &ys).unwrap();
+    let mirror_errs = svc.train_batch_sync(mirror_sid, xs.clone(), ys.clone()).unwrap();
+    assert_eq!(wire_errs.len(), ROWS);
+    for (w, m) in wire_errs.iter().zip(&mirror_errs) {
+        assert_eq!(w.to_bits(), m.to_bits());
+    }
+
+    // one diffusion round over the wire: 3 nodes × 1 round
+    let dx = Normal::standard().sample_vec(&mut rng, 3 * 5);
+    let dy = Normal::standard().sample_vec(&mut rng, 3);
+    let derrs = client.call_train_diffusion(gid, &dx, &dy).unwrap();
+    assert_eq!(derrs.len(), 3);
+
+    // snapshot the trained session, restore it as a brand-new id, and
+    // check the replica predicts bitwise-identically
+    let doc = client.call_snapshot(wire_sid).unwrap();
+    let restored_sid = 9_999;
+    client.call_restore(restored_sid, &doc).unwrap();
+    let probe = Normal::standard().sample_vec(&mut rng, 8 * 5);
+    let original = client.call_predict_batch(wire_sid, &probe).unwrap();
+    let replica = client.call_predict_batch(restored_sid, &probe).unwrap();
+    assert_eq!(original.len(), 8);
+    for (a, b) in original.iter().zip(&replica) {
+        assert_eq!(a.to_bits(), b.to_bits(), "restored replica must answer identically");
+    }
+
+    // stats verb: spot-check each section
+    let stats = client.call_stats().unwrap();
+    let field = |path: &[&str]| {
+        let mut v = &stats;
+        for key in path {
+            v = v.get(key).unwrap_or_else(|| panic!("stats missing {path:?}"));
+        }
+        v.as_f64().unwrap_or_else(|| panic!("stats {path:?} not a number"))
+    };
+    assert!(field(&["service", "trained"]) >= ROWS as f64);
+    assert!(field(&["service", "snapshots"]) >= 1.0);
+    assert!(field(&["service", "restored"]) >= 1.0);
+    assert!(field(&["latency", "train", "count"]) >= ROWS as f64);
+    assert!(field(&["latency", "predict", "p50_s"]) >= 0.0);
+    assert!(field(&["latency", "snapshot", "count"]) >= 1.0);
+    assert!(field(&["latency", "restore", "count"]) >= 1.0);
+    assert!(field(&["daemon", "frames_in"]) >= 6.0);
+    // the stats snapshot counts its own request frame but is built
+    // before its own reply is written, hence the off-by-one
+    assert_eq!(field(&["daemon", "frames_out"]), field(&["daemon", "frames_in"]) - 1.0);
+    assert!(matches!(
+        stats.get("coalesce").and_then(|c| c.get("enabled")),
+        Some(rff_kaf::util::JsonValue::Bool(true))
+    ));
+
+    daemon.shutdown();
+    stop_service(svc);
+}
+
+#[test]
+fn coalescing_disabled_daemon_matches_sync_paths() {
+    const ROWS: usize = 40;
+    let svc = start_service();
+    let wire_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let mirror_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            coalesce: CoalesceConfig { enabled: false, ..CoalesceConfig::default() },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+
+    let mut src = NonlinearWiener::new(run_rng(11, 0), 0.05);
+    for (i, s) in src.take_samples(ROWS).iter().enumerate() {
+        let wire = client.call_train(wire_sid, &s.x, s.y).unwrap();
+        let mirror = svc.train_sync(mirror_sid, s.x.clone(), s.y).unwrap();
+        assert_eq!(wire.len(), 1);
+        assert_eq!(wire[0].to_bits(), mirror[0].to_bits(), "row {i}");
+    }
+    let probe = vec![0.1, -0.4, 0.2, 0.9, -0.3];
+    let wire_p = client.call_predict(wire_sid, &probe).unwrap();
+    let mirror_p = svc.predict_sync(mirror_sid, probe).unwrap();
+    assert_eq!(wire_p.to_bits(), mirror_p.to_bits());
+
+    // ablation really bypassed the coalescer
+    let c = daemon.coalesce_stats();
+    assert_eq!(c.train_rows.load(Ordering::Relaxed), 0);
+    assert_eq!(c.predict_rows.load(Ordering::Relaxed), 0);
+    daemon.shutdown();
+    stop_service(svc);
+}
+
+/// Issue timing note: wire latency histograms must be monotone in load
+/// only in count, not compared across runs — this just pins that the
+/// loadgen measures *something* sane end-to-end.
+#[test]
+fn loadgen_latency_histogram_is_sane() {
+    let svc = start_service();
+    let sid = svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let t0 = Instant::now();
+    let report = run_loadgen(
+        daemon.local_addr(),
+        &LoadgenConfig {
+            connections: 2,
+            sessions: vec![sid],
+            rows_per_connection: 100,
+            dim: 5,
+            window: 16,
+            predict_every: 5,
+            seed: 1,
+        },
+    )
+    .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(report.ok_replies, 200);
+    assert_eq!(report.latency.count(), 200);
+    // every per-request latency fits inside the run's wall clock
+    assert!(report.latency.max() <= wall, "{} > {wall}", report.latency.max());
+    assert!(report.latency.quantile(0.5) <= report.latency.quantile(0.99));
+    assert!(report.rows_per_sec() > 0.0);
+    daemon.shutdown();
+    stop_service(svc);
+}
