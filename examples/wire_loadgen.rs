@@ -11,6 +11,9 @@
 //!     --connections 64 --rows 5000 --coalesce-off
 //! # tune the coalescer:
 //! cargo run --release --example wire_loadgen -- --max-batch 128 --flush-us 500
+//! # robustness knobs: per-request deadlines, cancel storms, abrupt death:
+//! cargo run --release --example wire_loadgen -- --deadline-ms 2 --cancel-rate 16
+//! cargo run --release --example wire_loadgen -- --kill-after 500
 //! ```
 //!
 //! The run recorded in EXPERIMENTS.md §Wire used `benches/wire.rs`
@@ -37,6 +40,10 @@ fn main() {
     let max_batch: usize = args.get_or("max-batch", 64);
     let flush_us: u64 = args.get_or("flush-us", 200);
     let coalesce_on = !args.flag("coalesce-off");
+    // Robustness knobs (ISSUE: deadlines / cancellation / client death).
+    let deadline_ms: Option<u64> = args.get("deadline-ms").and_then(|s| s.parse().ok());
+    let cancel_every: usize = args.get_or("cancel-rate", 0);
+    let kill_after: Option<usize> = args.get("kill-after").and_then(|s| s.parse().ok());
 
     let svc = Arc::new(CoordinatorService::start(
         ServiceConfig {
@@ -82,6 +89,9 @@ fn main() {
             window,
             predict_every,
             seed: 42,
+            deadline_ms,
+            cancel_every,
+            kill_after,
         },
     )
     .expect("loadgen run");
@@ -89,6 +99,10 @@ fn main() {
     println!("\n── client side ─────────────────────────────────────────");
     println!("  ok replies    : {}", report.ok_replies);
     println!("  rejections    : {}", report.wire_errors);
+    println!("  deadline errs : {}", report.deadline_errors);
+    println!("  cancel errs   : {}", report.cancel_errors);
+    println!("  shed replies  : {}", report.shed_replies);
+    println!("  cancel acks   : {}", report.cancel_acks);
     println!("  lost replies  : {}", report.lost_replies);
     println!("  wall clock    : {:.3} s", report.elapsed.as_secs_f64());
     println!("  throughput    : {:.0} rows/s", report.rows_per_sec());

@@ -11,6 +11,14 @@
 //! run asserts zero lost replies and zero rejections — the numbers are
 //! only comparable when nothing was dropped.
 //!
+//! A final robustness point re-runs the largest coalesced
+//! configuration with a tight per-request deadline and records the
+//! deadline-hit and shed rates (EXPERIMENTS.md §Robustness): how much
+//! admitted-then-expired work the stack drops instead of serving late.
+//! That point asserts the op conservation law
+//! `ok + wire_errors + shed == sent` (nothing lost) rather than
+//! zero drops.
+//!
 //! Emits `BENCH_wire.json`.
 //!
 //! `cargo bench --bench wire [-- --quick]`
@@ -89,6 +97,7 @@ fn main() {
                     window,
                     predict_every: 5,
                     seed: 42,
+                    ..LoadgenConfig::default()
                 },
             )
             .expect("loadgen run");
@@ -113,6 +122,78 @@ fn main() {
             if let Ok(s) = Arc::try_unwrap(svc) {
                 s.shutdown();
             }
+        }
+    }
+
+    // ── robustness point: tight deadlines under the largest coalesced
+    // load (ISSUE satellite: record deadline-hit / shed rates) ───────
+    {
+        let conns = if quick { 4 } else { 16 };
+        let deadline_ms = 2u64;
+        let svc = Arc::new(CoordinatorService::start(
+            ServiceConfig {
+                workers,
+                queue_capacity: 4096,
+                first_wait: Duration::from_millis(5),
+                ..ServiceConfig::default()
+            },
+            None,
+        ));
+        let ids: Vec<u64> = (0..n_sessions)
+            .map(|_| {
+                let cfg = SessionConfig { features, ..SessionConfig::paper_default() };
+                svc.add_session_from_spec(cfg, 7).expect("session spec")
+            })
+            .collect();
+        let daemon = Daemon::start(
+            Arc::clone(&svc),
+            DaemonConfig { max_connections: conns, ..DaemonConfig::default() },
+        )
+        .expect("daemon start");
+        let report = run_loadgen(
+            daemon.local_addr(),
+            &LoadgenConfig {
+                connections: conns,
+                sessions: ids,
+                rows_per_connection: rows_per_conn,
+                dim: SessionConfig::paper_default().dim,
+                window,
+                predict_every: 5,
+                seed: 42,
+                deadline_ms: Some(deadline_ms),
+                ..LoadgenConfig::default()
+            },
+        )
+        .expect("deadline loadgen run");
+        let sent = (conns * rows_per_conn) as u64;
+        // conservation, not zero-drop: every op resolved exactly once
+        assert_eq!(report.lost_replies, 0, "lost replies in deadline run");
+        assert_eq!(
+            report.ok_replies + report.wire_errors + report.shed_replies,
+            sent,
+            "deadline run op ledger"
+        );
+        let label = format!("wire_c{conns}_deadline_{deadline_ms}ms");
+        b.record(&label, report.elapsed);
+        b.set_meta(&format!("{label}_rows_per_sec"), JsonValue::Number(report.rows_per_sec()));
+        b.set_meta(
+            &format!("{label}_deadline_hit_rate"),
+            JsonValue::Number((report.deadline_errors + report.shed_replies) as f64 / sent as f64),
+        );
+        b.set_meta(
+            &format!("{label}_shed_rate"),
+            JsonValue::Number(report.shed_replies as f64 / sent as f64),
+        );
+        println!(
+            "  conns={conns:2} deadline={deadline_ms}ms: {:9.0} rows/s  ok={} rejected={} shed={}",
+            report.rows_per_sec(),
+            report.ok_replies,
+            report.deadline_errors,
+            report.shed_replies,
+        );
+        daemon.shutdown();
+        if let Ok(s) = Arc::try_unwrap(svc) {
+            s.shutdown();
         }
     }
 

@@ -166,8 +166,8 @@ mod store;
 
 pub use orchestrator::{McConfig, McResult, Orchestrator};
 pub use service::{
-    CoordinatorService, EpochOp, LatencyStats, Request, Response, ServiceConfig, ServiceStats,
-    SessionEpochResult, SessionTraffic,
+    CoordinatorService, DropKind, EpochOp, LatencyStats, Request, RequestContext, Response,
+    ServiceConfig, ServiceStats, SessionEpochResult, SessionTraffic,
 };
 pub use session::{
     Algo, Backend, DiffusionGroupConfig, FilterSession, PredictState, SessionConfig,

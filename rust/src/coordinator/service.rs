@@ -63,7 +63,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
@@ -119,6 +119,12 @@ pub struct ServiceConfig {
     /// when `None`, an in-memory sink (sessions demote to their
     /// serialized form but stay in RAM).
     pub snapshot_dir: Option<PathBuf>,
+    /// Fault injection (chaos harness only): stall every router worker
+    /// for this long after it pops a batch, simulating a slow router so
+    /// deadline expiry and queue saturation become reachable under
+    /// loopback latencies. Compiled out of release builds.
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fault_stall: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
@@ -132,8 +138,68 @@ impl Default for ServiceConfig {
             shards: 16,
             max_resident_sessions: 0,
             snapshot_dir: None,
+            #[cfg(any(test, feature = "fault-injection"))]
+            fault_stall: None,
         }
     }
+}
+
+/// Per-request deadline/cancellation context, threaded from the wire
+/// layer down to the router worker that finally serves (or sheds) the
+/// request — the cancellation-as-boundary-concern design: every
+/// *boundary* (connection dispatch, coalescer buffer, queue admission,
+/// router dequeue, response demux) checks the context; the compute
+/// kernels themselves never do. Consequences:
+///
+/// * **Queued** work that is cancelled or expires is dropped before it
+///   runs (diagnostic reply for cancels, counted suppressed drop for
+///   deadline expiry).
+/// * **In-flight** work runs to completion — cancellation is
+///   best-effort, it never corrupts a session mid-train — but its reply
+///   is suppressed and counted ([`Response::Dropped`]).
+///
+/// The default context (no deadline, no cancel flag) makes every check
+/// free-ish and is what all non-wire callers use, so deadline-disabled
+/// traffic is byte-identical to the pre-context behavior.
+#[derive(Clone, Debug, Default)]
+pub struct RequestContext {
+    /// Absolute expiry instant (wire `deadline_ms` is relative — the
+    /// daemon converts at parse time; clocks are never compared across
+    /// hosts). `None` = no deadline.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancel flag, shared with the connection's cancel
+    /// registry: a `cancel` verb naming this request's id sets it.
+    pub cancelled: Option<Arc<AtomicBool>>,
+    /// The client-chosen request id (wire `id`), carried for
+    /// diagnostics; 0 for non-wire callers.
+    pub correlation_id: u64,
+}
+
+impl RequestContext {
+    /// Deadline passed?
+    pub fn is_expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Cancel flag raised?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
+    }
+
+    /// Cancelled or expired — the request's reply no longer matters to
+    /// its sender.
+    pub fn is_dead(&self) -> bool {
+        self.is_cancelled() || self.is_expired()
+    }
+}
+
+/// Why a reply was deliberately suppressed (see [`Response::Dropped`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropKind {
+    /// The request's deadline passed before its reply could matter.
+    Deadline,
+    /// The request was cancelled while in flight.
+    Cancelled,
 }
 
 /// A request to the coordinator.
@@ -149,6 +215,8 @@ pub enum Request {
         /// Where to send the resulting a-priori errors (may be empty
         /// while a PJRT chunk fills).
         resp: Sender<Response>,
+        /// Deadline/cancellation context (default = none).
+        ctx: RequestContext,
     },
     /// Train session `session` on `n` rows in one request — amortizes
     /// queue/channel overhead over the whole batch and lets the session
@@ -164,6 +232,8 @@ pub enum Request {
         ys: Vec<f64>,
         /// Where to send the resulting a-priori errors.
         resp: Sender<Response>,
+        /// Deadline/cancellation context (default = none).
+        ctx: RequestContext,
     },
     /// Train diffusion group `group` on a window of whole rounds: `xs`
     /// is row-major `[rounds · nodes, dim]` in round-major order (round
@@ -182,6 +252,8 @@ pub enum Request {
         ys: Vec<f64>,
         /// Where to send the per-node a-priori errors.
         resp: Sender<Response>,
+        /// Deadline/cancellation context (default = none).
+        ctx: RequestContext,
     },
     /// Predict with session `session`'s current model.
     Predict {
@@ -191,6 +263,8 @@ pub enum Request {
         x: Vec<f64>,
         /// Response channel.
         resp: Sender<Response>,
+        /// Deadline/cancellation context (default = none).
+        ctx: RequestContext,
     },
     /// Predict `n` rows against one session in a single request —
     /// the pre-batched dual of [`Request::TrainBatch`], and what the
@@ -207,6 +281,8 @@ pub enum Request {
         xs: Vec<f64>,
         /// Response channel (receives [`Response::Predictions`]).
         resp: Sender<Response>,
+        /// Deadline/cancellation context (default = none).
+        ctx: RequestContext,
     },
     /// Flush any buffered partial chunk of `session`.
     Flush {
@@ -240,6 +316,27 @@ pub enum Request {
     },
 }
 
+impl Request {
+    /// The deadline/cancellation context, for the work-carrying
+    /// variants. Admin requests (`Flush`/`Snapshot`/`Restore`) carry
+    /// none — they are cheap, rare, and always answered.
+    fn context(&self) -> Option<&RequestContext> {
+        match self {
+            Request::Train { ctx, .. }
+            | Request::TrainBatch { ctx, .. }
+            | Request::TrainDiffusion { ctx, .. }
+            | Request::Predict { ctx, .. }
+            | Request::PredictBatch { ctx, .. } => Some(ctx),
+            Request::Flush { .. } | Request::Snapshot { .. } | Request::Restore { .. } => None,
+        }
+    }
+
+    /// Cancelled or expired while still queued — sheddable.
+    fn is_dead(&self) -> bool {
+        self.context().is_some_and(RequestContext::is_dead)
+    }
+}
+
 /// A response from the coordinator.
 #[derive(Clone, Debug)]
 pub enum Response {
@@ -255,6 +352,14 @@ pub enum Response {
     Restored,
     /// Request failed.
     Error(String),
+    /// The reply was deliberately suppressed: the request's deadline
+    /// passed or it was cancelled after admission. The daemon's writer
+    /// recognizes this and writes **no frame** (counted under
+    /// `DaemonStats::suppressed_replies`); sync callers treat it as an
+    /// error. Exactly one of {real reply, [`Response::Error`],
+    /// `Dropped`} resolves every admitted request — the conservation
+    /// law the chaos suite asserts.
+    Dropped(DropKind),
 }
 
 /// One session's share of an epoch: its ops, executed **sequentially in
@@ -342,6 +447,25 @@ pub struct ServiceStats {
     /// makes disconnect storms observable instead of silently eating
     /// the send error.
     pub dropped_responses: AtomicU64,
+    /// Requests rejected **before dispatch** because their `deadline_ms`
+    /// had already expired on arrival (the daemon replies with a
+    /// diagnostic error; nothing was queued). Counts requests.
+    pub deadline_rejects: AtomicU64,
+    /// Requests shed **after admission** because their deadline expired
+    /// while queued, coalesced, or in flight — the reply is suppressed
+    /// ([`Response::Dropped`]), never delivered late. Counts requests,
+    /// one per suppressed reply.
+    pub deadline_drops: AtomicU64,
+    /// Requests resolved by a `cancel` verb: still-queued work gets a
+    /// diagnostic error reply, in-flight work completes but its reply is
+    /// suppressed. Counts requests, one per cancel-induced resolution
+    /// (a cancel that arrives after the reply resolved counts nothing).
+    pub cancelled: AtomicU64,
+    /// Sessions whose mutex was found poisoned (a holder panicked
+    /// mid-operation) and recovered via `PoisonError::into_inner` — the
+    /// session stays servable; θ reflects every *completed* row. Counts
+    /// incidents, not subsequent locks (the poison flag is cleared).
+    pub poisoned_recoveries: AtomicU64,
     /// Explicit [`Request::Snapshot`]s served successfully.
     pub snapshots: AtomicU64,
     /// Explicit [`Request::Restore`]s served successfully.
@@ -555,10 +679,30 @@ impl CoordinatorService {
     /// a full queue (the wire daemon's direct dispatch path) use this to
     /// reject with a diagnostic instead of buffering unboundedly or
     /// stalling a connection's reader. `Err` only after shutdown.
+    ///
+    /// Saturation degrades expired-first: when the queue is full, any
+    /// queued request whose context is already dead (deadline passed or
+    /// cancelled) is shed — resolved with its counted drop/diagnostic —
+    /// before live work is rejected, so a deadline storm cannot starve
+    /// requests that still matter.
     pub fn try_submit(&self, req: Request) -> Result<bool> {
-        self.queue
-            .try_push(req)
-            .map_err(|_| anyhow::anyhow!("service shut down"))
+        let req = match self.queue.try_push_or_return(req) {
+            Ok(None) => return Ok(true),
+            Ok(Some(r)) => r,
+            Err(_) => anyhow::bail!("service shut down"),
+        };
+        let shed = self.queue.shed(Request::is_dead);
+        if shed.is_empty() {
+            return Ok(false);
+        }
+        for dead in shed {
+            resolve_shed(&self.stats, dead);
+        }
+        match self.queue.try_push_or_return(req) {
+            Ok(None) => Ok(true),
+            Ok(Some(_)) => Ok(false),
+            Err(_) => anyhow::bail!("service shut down"),
+        }
     }
 
     /// The request queue's capacity (for overload diagnostics).
@@ -584,7 +728,7 @@ impl CoordinatorService {
     /// Train and wait for the response.
     pub fn train_sync(&self, session: u64, x: Vec<f64>, y: f64) -> Result<Vec<f64>> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.submit(Request::Train { session, x, y, resp: tx })?;
+        self.submit(Request::Train { session, x, y, resp: tx, ctx: RequestContext::default() })?;
         match rx.recv()? {
             Response::Trained(e) => Ok(e),
             Response::Error(e) => anyhow::bail!(e),
@@ -596,7 +740,13 @@ impl CoordinatorService {
     /// wait for the response.
     pub fn train_batch_sync(&self, session: u64, xs: Vec<f64>, ys: Vec<f64>) -> Result<Vec<f64>> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.submit(Request::TrainBatch { session, xs, ys, resp: tx })?;
+        self.submit(Request::TrainBatch {
+            session,
+            xs,
+            ys,
+            resp: tx,
+            ctx: RequestContext::default(),
+        })?;
         match rx.recv()? {
             Response::Trained(e) => Ok(e),
             Response::Error(e) => anyhow::bail!(e),
@@ -613,7 +763,13 @@ impl CoordinatorService {
         ys: Vec<f64>,
     ) -> Result<Vec<f64>> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.submit(Request::TrainDiffusion { group, xs, ys, resp: tx })?;
+        self.submit(Request::TrainDiffusion {
+            group,
+            xs,
+            ys,
+            resp: tx,
+            ctx: RequestContext::default(),
+        })?;
         match rx.recv()? {
             Response::Trained(e) => Ok(e),
             Response::Error(e) => anyhow::bail!(e),
@@ -624,7 +780,7 @@ impl CoordinatorService {
     /// Predict and wait for the response.
     pub fn predict_sync(&self, session: u64, x: Vec<f64>) -> Result<f64> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.submit(Request::Predict { session, x, resp: tx })?;
+        self.submit(Request::Predict { session, x, resp: tx, ctx: RequestContext::default() })?;
         match rx.recv()? {
             Response::Predicted(v) => Ok(v),
             Response::Error(e) => anyhow::bail!(e),
@@ -636,7 +792,12 @@ impl CoordinatorService {
     /// session and wait for the `n` predictions.
     pub fn predict_batch_sync(&self, session: u64, xs: Vec<f64>) -> Result<Vec<f64>> {
         let (tx, rx) = std::sync::mpsc::channel();
-        self.submit(Request::PredictBatch { session, xs, resp: tx })?;
+        self.submit(Request::PredictBatch {
+            session,
+            xs,
+            resp: tx,
+            ctx: RequestContext::default(),
+        })?;
         match rx.recv()? {
             Response::Predictions(v) => Ok(v),
             Response::Error(e) => anyhow::bail!(e),
@@ -713,7 +874,7 @@ impl CoordinatorService {
                 match op {
                     EpochOp::TrainBatch { xs, ys } => {
                         let rows = ys.len() as u64;
-                        let mut s = cell.lock();
+                        let mut s = lock_counted(&cell, stats);
                         match s.train_batch(&xs, &ys) {
                             Ok(mut errs) => {
                                 cell.republish(&s);
@@ -788,18 +949,28 @@ fn router_loop(
         if batch.is_empty() {
             continue;
         }
+        // chaos harness: a configured stall makes this worker "slow",
+        // letting deadline expiry and queue saturation actually happen
+        // under loopback latencies
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(stall) = cfg.fault_stall {
+            std::thread::sleep(stall);
+        }
         // Partition: trains/flushes execute immediately; predicts gather
         // for the dynamic batcher.
-        let mut predicts: Vec<(u64, Vec<f64>, Sender<Response>)> = Vec::new();
+        let mut predicts: Vec<(u64, Vec<f64>, Sender<Response>, RequestContext)> = Vec::new();
         for req in batch {
             match req {
-                Request::Train { session, x, y, resp } => {
+                Request::Train { session, x, y, resp, ctx } => {
+                    if drop_dead_at_dequeue(&stats, &ctx, &resp) {
+                        continue;
+                    }
                     let t0 = Instant::now();
                     // per-session lock only: trains on other sessions in
                     // other workers proceed in parallel
                     let out = match sessions.get(session) {
                         Some(cell) => {
-                            let mut s = cell.lock();
+                            let mut s = lock_counted(&cell, &stats);
                             let r = s.train(&x, y).map(Response::Trained);
                             if r.is_ok() {
                                 // commit: publish the new θ for the
@@ -814,15 +985,18 @@ fn router_loop(
                     if out.is_ok() {
                         stats.trained.fetch_add(1, Ordering::Relaxed);
                     }
-                    respond(&stats, resp, out);
+                    respond_ctx(&stats, &ctx, resp, out);
                     observe(&stats.latency.train, t0.elapsed());
                 }
-                Request::TrainBatch { session, xs, ys, resp } => {
+                Request::TrainBatch { session, xs, ys, resp, ctx } => {
+                    if drop_dead_at_dequeue(&stats, &ctx, &resp) {
+                        continue;
+                    }
                     let t0 = Instant::now();
                     let rows = ys.len() as u64;
                     let out = match sessions.get(session) {
                         Some(cell) => {
-                            let mut s = cell.lock();
+                            let mut s = lock_counted(&cell, &stats);
                             let r = s.train_batch(&xs, &ys).map(Response::Trained);
                             if r.is_ok() {
                                 cell.republish(&s);
@@ -837,15 +1011,18 @@ fn router_loop(
                         // as n single Train requests
                         stats.trained.fetch_add(rows, Ordering::Relaxed);
                     }
-                    respond(&stats, resp, out);
+                    respond_ctx(&stats, &ctx, resp, out);
                     observe_n(&stats.latency.train, t0.elapsed(), if ok { rows.max(1) } else { 1 });
                 }
-                Request::TrainDiffusion { group, xs, ys, resp } => {
+                Request::TrainDiffusion { group, xs, ys, resp, ctx } => {
+                    if drop_dead_at_dequeue(&stats, &ctx, &resp) {
+                        continue;
+                    }
                     let t0 = Instant::now();
                     let rows = ys.len() as u64;
                     let out = match sessions.get(group) {
                         Some(cell) => {
-                            let mut s = cell.lock();
+                            let mut s = lock_counted(&cell, &stats);
                             let r = s.train_diffusion(&xs, &ys).map(Response::Trained);
                             if r.is_ok() {
                                 cell.republish(&s);
@@ -860,14 +1037,14 @@ fn router_loop(
                         // the group's samples_seen accounting
                         stats.diffusion_rows.fetch_add(rows, Ordering::Relaxed);
                     }
-                    respond(&stats, resp, out);
+                    respond_ctx(&stats, &ctx, resp, out);
                     observe_n(&stats.latency.train, t0.elapsed(), if ok { rows.max(1) } else { 1 });
                 }
                 Request::Flush { session, resp } => {
                     let t0 = Instant::now();
                     let out = match sessions.get(session) {
                         Some(cell) => {
-                            let mut s = cell.lock();
+                            let mut s = lock_counted(&cell, &stats);
                             let r = s.flush().map(Response::Trained);
                             if r.is_ok() {
                                 cell.republish(&s);
@@ -919,7 +1096,10 @@ fn router_loop(
                     respond(&stats, resp, out);
                     observe(&stats.latency.restore, t0.elapsed());
                 }
-                Request::PredictBatch { session, xs, resp } => {
+                Request::PredictBatch { session, xs, resp, ctx } => {
+                    if drop_dead_at_dequeue(&stats, &ctx, &resp) {
+                        continue;
+                    }
                     let t0 = Instant::now();
                     // the pre-batched predict path: serve the whole batch
                     // off the lock-free published state via one blocked
@@ -950,10 +1130,12 @@ fn router_loop(
                         Ok(Response::Predictions(ys)) => ys.len().max(1) as u64,
                         _ => 1,
                     };
-                    respond(&stats, resp, out);
+                    respond_ctx(&stats, &ctx, resp, out);
                     observe_n(&stats.latency.predict, t0.elapsed(), rows);
                 }
-                Request::Predict { session, x, resp } => predicts.push((session, x, resp)),
+                Request::Predict { session, x, resp, ctx } => {
+                    predicts.push((session, x, resp, ctx))
+                }
             }
         }
         if !predicts.is_empty() {
@@ -992,6 +1174,96 @@ fn send_tracked(stats: &ServiceStats, tx: &Sender<Response>, msg: Response) {
     }
 }
 
+/// Boundary check at router dequeue (and queue shed): resolve a request
+/// whose context is already dead without running it. Cancelled-while-
+/// queued work gets the diagnostic error reply the cancel contract
+/// promises; expired work gets a counted suppressed drop. Returns true
+/// when the request was resolved here — exactly one counter moves and
+/// exactly one response is sent.
+fn drop_dead_at_dequeue(stats: &ServiceStats, ctx: &RequestContext, resp: &Sender<Response>) -> bool {
+    if ctx.is_cancelled() {
+        stats.cancelled.fetch_add(1, Ordering::Relaxed);
+        send_tracked(
+            stats,
+            resp,
+            Response::Error(format!(
+                "request {} cancelled before execution",
+                ctx.correlation_id
+            )),
+        );
+        true
+    } else if ctx.is_expired() {
+        stats.deadline_drops.fetch_add(1, Ordering::Relaxed);
+        send_tracked(stats, resp, Response::Dropped(DropKind::Deadline));
+        true
+    } else {
+        false
+    }
+}
+
+/// [`respond`], suppressing the reply when the request died while its
+/// work ran: in-flight work always completes (cancellation never
+/// interrupts a kernel — θ stays consistent, `samples_seen` stays
+/// exact), but a reply nobody is waiting for is not delivered late —
+/// it resolves as a counted [`Response::Dropped`] instead. A suppressed
+/// execution error is likewise hidden (and not counted under `errors`);
+/// the per-session `samples_seen` remains the applied-rows ground truth.
+fn respond_ctx(stats: &ServiceStats, ctx: &RequestContext, tx: Sender<Response>, out: Result<Response>) {
+    if ctx.is_cancelled() {
+        stats.cancelled.fetch_add(1, Ordering::Relaxed);
+        send_tracked(stats, &tx, Response::Dropped(DropKind::Cancelled));
+    } else if ctx.is_expired() {
+        stats.deadline_drops.fetch_add(1, Ordering::Relaxed);
+        send_tracked(stats, &tx, Response::Dropped(DropKind::Deadline));
+    } else {
+        respond(stats, tx, out);
+    }
+}
+
+/// Deliver one computed row of a gathered predict group, suppressing it
+/// when the row's request died while the group ran — the per-row dual
+/// of [`respond_ctx`].
+fn deliver_row(stats: &ServiceStats, ctx: &RequestContext, tx: &Sender<Response>, msg: Response) {
+    if ctx.is_cancelled() {
+        stats.cancelled.fetch_add(1, Ordering::Relaxed);
+        send_tracked(stats, tx, Response::Dropped(DropKind::Cancelled));
+    } else if ctx.is_expired() {
+        stats.deadline_drops.fetch_add(1, Ordering::Relaxed);
+        send_tracked(stats, tx, Response::Dropped(DropKind::Deadline));
+    } else {
+        send_tracked(stats, tx, msg);
+    }
+}
+
+/// Resolve a request shed from the saturated queue (its context is
+/// dead): the same counted resolution the dequeue-time boundary gives.
+fn resolve_shed(stats: &ServiceStats, req: Request) {
+    let (ctx, resp) = match req {
+        Request::Train { ctx, resp, .. }
+        | Request::TrainBatch { ctx, resp, .. }
+        | Request::TrainDiffusion { ctx, resp, .. }
+        | Request::Predict { ctx, resp, .. }
+        | Request::PredictBatch { ctx, resp, .. } => (ctx, resp),
+        // context-less requests are never shed (is_dead() is false)
+        Request::Flush { .. } | Request::Snapshot { .. } | Request::Restore { .. } => return,
+    };
+    drop_dead_at_dequeue(stats, &ctx, &resp);
+}
+
+/// Lock a session's mutex, recovering and counting a poisoned one
+/// ([`ServiceStats::poisoned_recoveries`]) — a panicked train must not
+/// make the session permanently unservable.
+fn lock_counted<'a>(
+    cell: &'a super::store::SessionCell,
+    stats: &ServiceStats,
+) -> std::sync::MutexGuard<'a, FilterSession> {
+    let (guard, recovered) = cell.lock_tracked();
+    if recovered {
+        stats.poisoned_recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+    guard
+}
+
 /// Group predicts by session config and, when PJRT is available and the
 /// config has a baked `rff_predict` artifact, run each group as one
 /// padded batch; otherwise fall back to one **native batched** predict
@@ -1009,19 +1281,24 @@ fn dispatch_predicts(
     sessions: &SessionStore,
     stats: &ServiceStats,
     executor: Option<&ExecutorHandle>,
-    predicts: Vec<(u64, Vec<f64>, Sender<Response>)>,
+    predicts: Vec<(u64, Vec<f64>, Sender<Response>, RequestContext)>,
     scratch: &mut PredictScratch,
 ) {
-    // Group by (session) first: same session ⇒ same (d, D, Ω).
-    let mut by_session: BTreeMap<u64, Vec<(Vec<f64>, Sender<Response>)>> = BTreeMap::new();
-    for (sid, x, tx) in predicts {
-        by_session.entry(sid).or_default().push((x, tx));
+    // Group by (session) first: same session ⇒ same (d, D, Ω). Dead
+    // requests resolve at this boundary and never join a group.
+    let mut by_session: BTreeMap<u64, Vec<(Vec<f64>, Sender<Response>, RequestContext)>> =
+        BTreeMap::new();
+    for (sid, x, tx, ctx) in predicts {
+        if drop_dead_at_dequeue(stats, &ctx, &tx) {
+            continue;
+        }
+        by_session.entry(sid).or_default().push((x, tx, ctx));
     }
     for (sid, rows) in by_session {
         let t0 = Instant::now();
         let n_in = rows.len() as u64;
         let Some(cell) = sessions.get(sid) else {
-            for (_, tx) in rows {
+            for (_, tx, _) in rows {
                 stats.errors.fetch_add(1, Ordering::Relaxed);
                 send_tracked(stats, &tx, Response::Error(format!("no session {sid}")));
             }
@@ -1035,11 +1312,11 @@ fn dispatch_predicts(
         let (dim, features) = (snap.dim(), snap.features());
         // reject dim-mismatched probes up front: both predict paths below
         // index x[0..dim] and would panic the router worker otherwise
-        let rows: Vec<(Vec<f64>, Sender<Response>)> = rows
+        let rows: Vec<(Vec<f64>, Sender<Response>, RequestContext)> = rows
             .into_iter()
-            .filter_map(|(x, tx)| {
+            .filter_map(|(x, tx, ctx)| {
                 if x.len() == dim {
-                    Some((x, tx))
+                    Some((x, tx, ctx))
                 } else {
                     stats.errors.fetch_add(1, Ordering::Relaxed);
                     send_tracked(
@@ -1074,7 +1351,7 @@ fn dispatch_predicts(
                 // pad each group of up to bsz rows with zeros
                 for chunk in rows.chunks(bsz) {
                     let mut x = vec![0.0f32; bsz * dim];
-                    for (r, (xi, _)) in chunk.iter().enumerate() {
+                    for (r, (xi, _, _)) in chunk.iter().enumerate() {
                         for (k, &v) in xi.iter().enumerate() {
                             x[r * dim + k] = v as f32;
                         }
@@ -1093,13 +1370,13 @@ fn dispatch_predicts(
                             stats
                                 .lockfree_predicts
                                 .fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                            for (r, (_, tx)) in chunk.iter().enumerate() {
+                            for (r, (_, tx, ctx)) in chunk.iter().enumerate() {
                                 stats.predicted.fetch_add(1, Ordering::Relaxed);
-                                send_tracked(stats, tx, Response::Predicted(yhat[r] as f64));
+                                deliver_row(stats, ctx, tx, Response::Predicted(yhat[r] as f64));
                             }
                         }
                         Err(e) => {
-                            for (_, tx) in chunk {
+                            for (_, tx, _) in chunk {
                                 stats.errors.fetch_add(1, Ordering::Relaxed);
                                 send_tracked(stats, tx, Response::Error(e.to_string()));
                             }
@@ -1114,7 +1391,7 @@ fn dispatch_predicts(
                 // steady-state allocations, same values as per-row
                 // predicts
                 scratch.xs.clear();
-                for (x, _) in &rows {
+                for (x, _, _) in &rows {
                     scratch.xs.extend_from_slice(x);
                 }
                 if scratch.out.len() < rows.len() {
@@ -1123,9 +1400,9 @@ fn dispatch_predicts(
                 let out = &mut scratch.out[..rows.len()];
                 snap.predict_batch(&scratch.xs, out);
                 stats.lockfree_predicts.fetch_add(rows.len() as u64, Ordering::Relaxed);
-                for ((_, tx), &v) in rows.into_iter().zip(out.iter()) {
+                for ((_, tx, ctx), &v) in rows.into_iter().zip(out.iter()) {
                     stats.predicted.fetch_add(1, Ordering::Relaxed);
-                    send_tracked(stats, &tx, Response::Predicted(v));
+                    deliver_row(stats, &ctx, &tx, Response::Predicted(v));
                 }
             }
         }
@@ -1247,7 +1524,12 @@ mod tests {
         let probes = src.take_samples(64);
         let (tx, rx) = std::sync::mpsc::channel();
         for p in &probes {
-            svc.submit(Request::Predict { session: sid, x: p.x.clone(), resp: tx.clone() })
+            svc.submit(Request::Predict {
+                session: sid,
+                x: p.x.clone(),
+                resp: tx.clone(),
+                ctx: RequestContext::default(),
+            })
                 .unwrap();
         }
         drop(tx);
@@ -1599,14 +1881,26 @@ mod tests {
         {
             let (tx, rx) = std::sync::mpsc::channel();
             drop(rx);
-            svc.submit(Request::Train { session: sid, x: vec![0.0; 5], y: 1.0, resp: tx })
+            svc.submit(Request::Train {
+                session: sid,
+                x: vec![0.0; 5],
+                y: 1.0,
+                resp: tx,
+                ctx: RequestContext::default(),
+            })
                 .unwrap();
         }
         // ...and a predict delivered through dispatch_predicts
         {
             let (tx, rx) = std::sync::mpsc::channel();
             drop(rx);
-            svc.submit(Request::Predict { session: sid, x: vec![0.0; 5], resp: tx }).unwrap();
+            svc.submit(Request::Predict {
+                session: sid,
+                x: vec![0.0; 5],
+                resp: tx,
+                ctx: RequestContext::default(),
+            })
+            .unwrap();
         }
         // a sync call queued behind them on the single worker is a
         // barrier: once it returns, both dropped sends have happened
@@ -1664,7 +1958,12 @@ mod tests {
         assert_eq!(svc.queue_capacity(), 1024);
         let (tx, rx) = std::sync::mpsc::channel();
         let accepted = svc
-            .try_submit(Request::Predict { session: sid, x: vec![0.0; 5], resp: tx })
+            .try_submit(Request::Predict {
+                session: sid,
+                x: vec![0.0; 5],
+                resp: tx,
+                ctx: RequestContext::default(),
+            })
             .unwrap();
         assert!(accepted, "empty queue must accept a try_submit");
         assert!(matches!(rx.recv().unwrap(), Response::Predicted(_)));
@@ -1700,5 +1999,170 @@ mod tests {
         if let Ok(s) = Arc::try_unwrap(svc) {
             s.shutdown();
         }
+    }
+
+    #[test]
+    fn poisoned_session_recovers_and_counts_once() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(77, 0);
+        let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let sid = svc.add_session(s);
+        svc.train_sync(sid, vec![0.1; 5], 0.5).unwrap();
+        // poison the session mutex: a holder panics "mid-train"
+        let cell = svc.sessions.get(sid).unwrap();
+        let poisoner = Arc::clone(&cell);
+        drop(cell);
+        let h = std::thread::spawn(move || {
+            let _guard = poisoner.lock();
+            panic!("simulated mid-train panic");
+        });
+        assert!(h.join().is_err());
+        // the same session must train successfully again…
+        svc.train_sync(sid, vec![0.2; 5], 0.5).unwrap();
+        assert_eq!(svc.stats().poisoned_recoveries.load(Ordering::Relaxed), 1);
+        // …and the incident counts once, not once per subsequent lock
+        svc.train_sync(sid, vec![0.3; 5], 0.5).unwrap();
+        assert_eq!(svc.stats().poisoned_recoveries.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_drops_at_dequeue() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(78, 0);
+        let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let sid = svc.add_session(s);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let ctx = RequestContext {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..RequestContext::default()
+        };
+        svc.submit(Request::Train { session: sid, x: vec![0.0; 5], y: 1.0, resp: tx, ctx })
+            .unwrap();
+        match rx.recv().unwrap() {
+            Response::Dropped(DropKind::Deadline) => {}
+            other => panic!("expected a suppressed deadline drop, got {other:?}"),
+        }
+        assert_eq!(svc.stats().deadline_drops.load(Ordering::Relaxed), 1);
+        // the work never ran — no row applied, no error counted
+        assert_eq!(svc.stats().trained.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.stats().errors.load(Ordering::Relaxed), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cancelled_queued_request_gets_diagnostic() {
+        let svc = CoordinatorService::start(ServiceConfig::default(), None);
+        let mut rng = run_rng(79, 0);
+        let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let sid = svc.add_session(s);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let flag = Arc::new(AtomicBool::new(true));
+        let ctx = RequestContext {
+            cancelled: Some(flag),
+            correlation_id: 7,
+            ..RequestContext::default()
+        };
+        svc.submit(Request::Predict { session: sid, x: vec![0.0; 5], resp: tx, ctx }).unwrap();
+        match rx.recv().unwrap() {
+            Response::Error(msg) => {
+                assert!(msg.contains("cancelled"), "diagnostic should name the cancel: {msg}");
+                assert!(msg.contains('7'), "diagnostic should carry the correlation id: {msg}");
+            }
+            other => panic!("queued cancel must get a diagnostic reply, got {other:?}"),
+        }
+        assert_eq!(svc.stats().cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.stats().predicted.load(Ordering::Relaxed), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn respond_ctx_suppresses_dead_replies() {
+        let stats = ServiceStats::default();
+        // cancelled in flight: reply suppressed, counted under cancelled
+        let (tx, rx) = std::sync::mpsc::channel();
+        let flag = Arc::new(AtomicBool::new(true));
+        let ctx = RequestContext { cancelled: Some(flag), ..RequestContext::default() };
+        respond_ctx(&stats, &ctx, tx, Ok(Response::Predicted(1.0)));
+        assert!(matches!(rx.recv().unwrap(), Response::Dropped(DropKind::Cancelled)));
+        assert_eq!(stats.cancelled.load(Ordering::Relaxed), 1);
+        // expired in flight: suppressed, counted under deadline_drops
+        let (tx, rx) = std::sync::mpsc::channel();
+        let ctx = RequestContext {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..RequestContext::default()
+        };
+        respond_ctx(&stats, &ctx, tx, Ok(Response::Predicted(1.0)));
+        assert!(matches!(rx.recv().unwrap(), Response::Dropped(DropKind::Deadline)));
+        assert_eq!(stats.deadline_drops.load(Ordering::Relaxed), 1);
+        // a live context delivers unchanged
+        let (tx, rx) = std::sync::mpsc::channel();
+        respond_ctx(&stats, &RequestContext::default(), tx, Ok(Response::Predicted(2.5)));
+        assert!(matches!(rx.recv().unwrap(), Response::Predicted(v) if v == 2.5));
+        assert_eq!(stats.dropped_responses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn saturated_queue_sheds_expired_first() {
+        // single worker + injected stall: the queue can actually fill
+        let svc = CoordinatorService::start(
+            ServiceConfig {
+                workers: 1,
+                queue_capacity: 4,
+                fault_stall: Some(Duration::from_millis(300)),
+                ..ServiceConfig::default()
+            },
+            None,
+        );
+        let mut rng = run_rng(80, 0);
+        let s = FilterSession::new(SessionConfig::paper_default(), &mut rng, None).unwrap();
+        let sid = svc.add_session(s);
+        // occupy the worker: it pops this request, then stalls
+        let (busy_tx, busy_rx) = std::sync::mpsc::channel();
+        svc.submit(Request::Train {
+            session: sid,
+            x: vec![0.0; 5],
+            y: 0.1,
+            resp: busy_tx,
+            ctx: RequestContext::default(),
+        })
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        // fill the queue with already-expired requests
+        let expired = RequestContext {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..RequestContext::default()
+        };
+        let (dead_tx, dead_rx) = std::sync::mpsc::channel();
+        for _ in 0..4 {
+            assert!(svc
+                .try_submit(Request::Train {
+                    session: sid,
+                    x: vec![0.0; 5],
+                    y: 0.0,
+                    resp: dead_tx.clone(),
+                    ctx: expired.clone(),
+                })
+                .unwrap());
+        }
+        // full queue: a live request must shed the dead entries, not bounce
+        let (live_tx, live_rx) = std::sync::mpsc::channel();
+        let accepted = svc
+            .try_submit(Request::Predict {
+                session: sid,
+                x: vec![0.0; 5],
+                resp: live_tx,
+                ctx: RequestContext::default(),
+            })
+            .unwrap();
+        assert!(accepted, "live work must displace expired queue entries");
+        for _ in 0..4 {
+            assert!(matches!(dead_rx.recv().unwrap(), Response::Dropped(DropKind::Deadline)));
+        }
+        assert!(matches!(live_rx.recv().unwrap(), Response::Predicted(_)));
+        assert!(matches!(busy_rx.recv().unwrap(), Response::Trained(_)));
+        assert_eq!(svc.stats().deadline_drops.load(Ordering::Relaxed), 4);
+        svc.shutdown();
     }
 }

@@ -351,6 +351,34 @@ pub trait SnapshotSink: Send + Sync {
     fn count(&self) -> usize;
 }
 
+/// Bounded-retry wrapper around [`SnapshotSink::put`] — the spill
+/// path's write valve. A transient sink failure (busy disk, momentary
+/// backend hiccup) retries with the store's yield-then-sleep backoff
+/// escalation instead of immediately abandoning the eviction; only a
+/// sink that fails every attempt surfaces the error (the store then
+/// re-admits the session and counts an `eviction_failure`, as before).
+pub(crate) fn put_with_retry(sink: &dyn SnapshotSink, id: u64, snapshot: &str) -> Result<()> {
+    /// Retries after the first attempt (4 attempts total).
+    const PUT_RETRIES: u32 = 3;
+    let mut last = None;
+    for attempt in 0..=PUT_RETRIES {
+        match sink.put(id, snapshot) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                last = Some(e);
+                if attempt < PUT_RETRIES {
+                    if attempt == 0 {
+                        std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(std::time::Duration::from_micros(100 << attempt));
+                    }
+                }
+            }
+        }
+    }
+    Err(last.expect("at least one attempt ran"))
+}
+
 /// In-memory sink: spilled sessions stay in RAM but in *serialized* form
 /// — a cache-tier demotion (θ-sized JSON instead of live filter state +
 /// lock + map handles). The default sink when no
@@ -437,8 +465,18 @@ impl SnapshotSink for DirSink {
             .with_context(|| format!("creating snapshot dir {}", self.dir.display()))?;
         let path = self.path(id);
         let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, snapshot)
-            .with_context(|| format!("writing {}", tmp.display()))?;
+        // write + fsync the temp file *before* the rename publishes it:
+        // rename is atomic in the namespace, but renaming an unsynced
+        // file can surface an empty/torn "snapshot" after power loss —
+        // exactly the torn-file class the tmp+rename dance exists to
+        // prevent
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            std::io::Write::write_all(&mut f, snapshot.as_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("publishing {}", path.display()))?;
         Ok(())
@@ -657,5 +695,26 @@ mod tests {
             .collect();
         assert!(stray.is_empty());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn put_with_retry_absorbs_transient_failures() {
+        // sink fails twice then recovers: the bounded-backoff retry must
+        // land the write on the third attempt without surfacing an error
+        let sink = crate::daemon::fault::FlakySink::failing_puts(2);
+        put_with_retry(&sink, 5, "{\"v\":1}").unwrap();
+        assert_eq!(sink.put_attempts(), 3);
+        assert_eq!(sink.get(5).unwrap().as_deref(), Some("{\"v\":1}"));
+    }
+
+    #[test]
+    fn put_with_retry_gives_up_after_budget() {
+        // a sink that fails every attempt must surface the last error
+        // after exactly 1 + PUT_RETRIES attempts, not retry forever
+        let sink = crate::daemon::fault::FlakySink::failing_puts(100);
+        let err = put_with_retry(&sink, 5, "{}").unwrap_err();
+        assert!(err.to_string().contains("injected"), "unexpected error: {err}");
+        assert_eq!(sink.put_attempts(), 4);
+        assert_eq!(sink.count(), 0);
     }
 }

@@ -76,6 +76,22 @@ impl SessionSlot {
         self.session.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
+    /// [`SessionSlot::lock`], reporting whether this acquisition
+    /// *recovered* a poisoned mutex (a previous holder panicked). The
+    /// poison flag is cleared on recovery so each incident reports
+    /// exactly once — the router counts it under
+    /// `ServiceStats::poisoned_recoveries` and the session stays
+    /// servable.
+    pub(crate) fn lock_tracked(&self) -> (MutexGuard<'_, FilterSession>, bool) {
+        match self.session.lock() {
+            Ok(guard) => (guard, false),
+            Err(poisoned) => {
+                self.session.clear_poison();
+                (poisoned.into_inner(), true)
+            }
+        }
+    }
+
     /// Publish `session`'s current predict state. Callers pass the
     /// session they already hold locked — taking `&FilterSession` (rather
     /// than locking internally) makes "republish happens under the
@@ -490,7 +506,10 @@ impl SessionStore {
         self.resident.fetch_sub(1, Ordering::Relaxed);
         let session = Self::unwrap_wait(cell);
         let text = session.snapshot().to_json();
-        let ok = spill.sink.put(id, &text).is_ok();
+        // bounded-backoff retry: a transiently failing sink must not
+        // force the re-admit path (which would immediately re-select
+        // this same LRU victim and thrash)
+        let ok = super::snapshot::put_with_retry(&*spill.sink, id, &text).is_ok();
         if ok {
             spill.stats.evictions.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -724,6 +743,61 @@ mod tests {
         assert_eq!(stats.restores.load(Ordering::Relaxed), 1);
         assert_eq!(stats.evictions.load(Ordering::Relaxed), 2);
         assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn transient_sink_failures_do_not_fail_eviction() {
+        // a sink that fails its first 2 puts recovers inside the spill
+        // path's retry budget: the eviction lands (no re-admit thrash,
+        // no eviction_failure), just with extra put attempts
+        let sink = Arc::new(crate::daemon::fault::FlakySink::failing_puts(2));
+        let stats = Arc::new(SpillStats::default());
+        let store = SessionStore::with_spill(
+            4,
+            SpillConfig {
+                max_resident: 1,
+                sink: Arc::clone(&sink) as Arc<dyn SnapshotSink>,
+                registry: Arc::new(MapRegistry::new()),
+                executor: None,
+                stats: Arc::clone(&stats),
+            },
+        );
+        let mut rng = run_rng(53, 0);
+        store.insert(1, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        store.insert(2, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        assert_eq!(stats.evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.eviction_failures.load(Ordering::Relaxed), 0);
+        assert_eq!((store.resident_count(), store.spilled_count()), (1, 1));
+        assert_eq!(sink.put_attempts(), 3, "two injected failures + one success");
+        // the spilled session is intact behind the flaky sink
+        assert!(store.get(1).is_some());
+    }
+
+    #[test]
+    fn persistent_sink_failure_readmits_session() {
+        // a sink that never recovers exhausts the retry budget: the
+        // session must be re-admitted (never lost) and the incident
+        // counted as an eviction_failure
+        let sink = Arc::new(crate::daemon::fault::FlakySink::failing_puts(u64::MAX));
+        let stats = Arc::new(SpillStats::default());
+        let store = SessionStore::with_spill(
+            4,
+            SpillConfig {
+                max_resident: 1,
+                sink: Arc::clone(&sink) as Arc<dyn SnapshotSink>,
+                registry: Arc::new(MapRegistry::new()),
+                executor: None,
+                stats: Arc::clone(&stats),
+            },
+        );
+        let mut rng = run_rng(54, 0);
+        store.insert(1, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        store.insert(2, FilterSession::new(small_cfg(), &mut rng, None).unwrap());
+        assert_eq!(stats.evictions.load(Ordering::Relaxed), 0);
+        assert!(stats.eviction_failures.load(Ordering::Relaxed) >= 1);
+        assert_eq!(store.spilled_count(), 0);
+        assert_eq!(store.len(), 2, "failed eviction must not lose the session");
+        assert!(store.get(1).is_some() && store.get(2).is_some());
     }
 
     #[test]

@@ -34,6 +34,19 @@
 //! Predicts have no such constraint (they are read-only against the
 //! lock-free published state) and dispatch concurrently.
 //!
+//! ## Deadlines and cancellation
+//!
+//! Each buffered row carries its [`RequestContext`]. Immediately before
+//! a batch is submitted, rows that died while buffered are **evicted**:
+//! a cancelled row resolves with a diagnostic error (it never executed
+//! — `ServiceStats::cancelled`), an expired row resolves as
+//! [`Response::Dropped`] (`deadline_drops`). Survivors keep their exact
+//! relative order and contiguity, so the bitwise-parity guarantee is
+//! untouched — the surviving rows execute in precisely the order they
+//! arrived. Rows whose context dies while the batch is *running* are
+//! caught at demux and suppressed with in-flight semantics (the work
+//! happened; only the reply is withheld), mirroring the router path.
+//!
 //! ## Fate sharing
 //!
 //! Rows coalesced into one batch share its outcome: if the batch fails
@@ -52,7 +65,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{CoordinatorService, Request, Response};
+use crate::coordinator::{CoordinatorService, DropKind, Request, RequestContext, Response};
 use crate::exec::ThreadPool;
 
 /// Coalescing-stage knobs.
@@ -104,6 +117,18 @@ pub struct CoalesceStats {
     pub dropped_replies: AtomicU64,
 }
 
+/// One contributor's stake in a coalesced batch: its rows, its reply
+/// route, and the deadline/cancel state that travels with it.
+struct PendingRow {
+    /// Rows this contributor added (1 for wire traffic) — the demux key
+    /// for slicing the batch response.
+    rows: usize,
+    /// Reply route back to the contributor's connection writer.
+    resp: Sender<Response>,
+    /// Deadline/cancellation context threaded from the wire layer.
+    ctx: RequestContext,
+}
+
 /// One direction's accumulation buffer for one session.
 #[derive(Default)]
 struct RowBuf {
@@ -111,9 +136,8 @@ struct RowBuf {
     xs: Vec<f64>,
     /// Targets (trains only; stays empty in predict buffers).
     ys: Vec<f64>,
-    /// Per-contributor reply routes: `(rows contributed, sender)` in
-    /// arrival order — the demux key for slicing the batch response.
-    pending: Vec<(usize, Sender<Response>)>,
+    /// Per-contributor stakes in arrival order.
+    pending: Vec<PendingRow>,
     /// Rows currently buffered.
     n_rows: usize,
     /// Length of the first buffered row (mismatch guard).
@@ -124,7 +148,7 @@ struct RowBuf {
 
 impl RowBuf {
     /// Drain the buffer for dispatch.
-    fn take(&mut self) -> (Vec<f64>, Vec<f64>, Vec<(usize, Sender<Response>)>) {
+    fn take(&mut self) -> (Vec<f64>, Vec<f64>, Vec<PendingRow>) {
         self.n_rows = 0;
         self.first_at = None;
         (
@@ -151,8 +175,8 @@ struct State {
 /// A drained buffer on its way to the queue (built under the state
 /// lock, dispatched after it is released — `submit` can block).
 enum Flush {
-    Train { session: u64, xs: Vec<f64>, ys: Vec<f64>, pending: Vec<(usize, Sender<Response>)> },
-    Predict { session: u64, xs: Vec<f64>, pending: Vec<(usize, Sender<Response>)> },
+    Train { session: u64, xs: Vec<f64>, ys: Vec<f64>, pending: Vec<PendingRow> },
+    Predict { session: u64, xs: Vec<f64>, pending: Vec<PendingRow> },
 }
 
 /// The coalescing stage: per-session buffers, a deadline-flusher
@@ -222,6 +246,7 @@ impl Coalescer {
         x: Vec<f64>,
         y: f64,
         resp: Sender<Response>,
+        ctx: RequestContext,
     ) {
         let mut g = self.lock_state();
         let buf = g.sessions.entry(session).or_default();
@@ -241,7 +266,7 @@ impl Coalescer {
         buf.train.row_len = x.len();
         buf.train.xs.extend_from_slice(&x);
         buf.train.ys.push(y);
-        buf.train.pending.push((1, resp));
+        buf.train.pending.push(PendingRow { rows: 1, resp, ctx });
         buf.train.n_rows += 1;
         self.stats.train_rows.fetch_add(1, Ordering::Relaxed);
         if !buf.train_in_flight && buf.train.n_rows >= self.cfg.max_batch {
@@ -264,6 +289,7 @@ impl Coalescer {
         session: u64,
         x: Vec<f64>,
         resp: Sender<Response>,
+        ctx: RequestContext,
     ) {
         let mut g = self.lock_state();
         let buf = g.sessions.entry(session).or_default();
@@ -282,7 +308,7 @@ impl Coalescer {
         }
         buf.predict.row_len = x.len();
         buf.predict.xs.extend_from_slice(&x);
-        buf.predict.pending.push((1, resp));
+        buf.predict.pending.push(PendingRow { rows: 1, resp, ctx });
         buf.predict.n_rows += 1;
         self.stats.predict_rows.fetch_add(1, Ordering::Relaxed);
         if buf.predict.n_rows >= self.cfg.max_batch {
@@ -357,20 +383,105 @@ impl Coalescer {
         }
     }
 
+    /// Evict contributors whose context died while buffered, *before*
+    /// their rows reach the service: queued semantics — a cancelled row
+    /// gets its diagnostic, an expired row is dropped-and-suppressed,
+    /// and neither costs any kernel work. Survivors keep their exact
+    /// relative order and contiguity (bitwise parity). Returns the
+    /// compacted batch.
+    fn evict_dead_rows(
+        &self,
+        xs: Vec<f64>,
+        ys: Vec<f64>,
+        pending: Vec<PendingRow>,
+    ) -> (Vec<f64>, Vec<f64>, Vec<PendingRow>) {
+        if pending.iter().all(|p| !p.ctx.is_dead()) {
+            return (xs, ys, pending); // common case: nothing to do
+        }
+        let total: usize = pending.iter().map(|p| p.rows).sum();
+        let row_len = if total > 0 { xs.len() / total } else { 0 };
+        let stats = self.svc.stats();
+        let mut kept_xs = Vec::with_capacity(xs.len());
+        let mut kept_ys = Vec::with_capacity(ys.len());
+        let mut kept = Vec::with_capacity(pending.len());
+        let mut off = 0;
+        for p in pending {
+            let n = p.rows;
+            // cancelled wins over expired, matching the router's
+            // dequeue-time resolution order
+            if p.ctx.is_cancelled() {
+                stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                self.send_row(
+                    &p.resp,
+                    Response::Error(format!(
+                        "request {} cancelled before execution",
+                        p.ctx.correlation_id
+                    )),
+                );
+            } else if p.ctx.is_expired() {
+                stats.deadline_drops.fetch_add(1, Ordering::Relaxed);
+                self.send_row(&p.resp, Response::Dropped(DropKind::Deadline));
+            } else {
+                kept_xs.extend_from_slice(&xs[off * row_len..(off + n) * row_len]);
+                if !ys.is_empty() {
+                    kept_ys.extend_from_slice(&ys[off..off + n]);
+                }
+                kept.push(p);
+            }
+            off += n;
+        }
+        (kept_xs, kept_ys, kept)
+    }
+
+    /// Claim the session's next accumulated train buffer while keeping
+    /// its in-flight slot held, or release the slot and return `None`.
+    /// The single point where `train_in_flight` is cleared on the
+    /// success path — callers loop on it instead of recursing, so a
+    /// cancel storm that evicts batch after batch runs in constant
+    /// stack.
+    fn take_next_train(&self, session: u64) -> Option<(Vec<f64>, Vec<f64>, Vec<PendingRow>)> {
+        let mut g = self.lock_state();
+        let buf = g.sessions.get_mut(&session)?;
+        if buf.train.n_rows == 0 {
+            buf.train_in_flight = false;
+            return None;
+        }
+        Some(buf.train.take())
+    }
+
     /// Submit a train batch and arrange its completion (demux + chained
     /// dispatch of whatever accumulated behind it). `submit` blocks on
     /// a full queue — bounded, because rule 2 caps this session's
-    /// outstanding batches at one.
+    /// outstanding batches at one. Called with the session's in-flight
+    /// slot held; if eviction empties the batch, chains to the next
+    /// accumulation (or releases the slot) without submitting.
     fn dispatch_train(
         self: &Arc<Self>,
         session: u64,
         xs: Vec<f64>,
         ys: Vec<f64>,
-        pending: Vec<(usize, Sender<Response>)>,
+        pending: Vec<PendingRow>,
     ) {
+        let (mut xs, mut ys, mut pending) = (xs, ys, pending);
+        loop {
+            (xs, ys, pending) = self.evict_dead_rows(xs, ys, pending);
+            if !pending.is_empty() {
+                break;
+            }
+            // whole batch evicted: pull whatever accumulated behind it
+            match self.take_next_train(session) {
+                Some((nxs, nys, npending)) => {
+                    self.stats.completion_flushes.fetch_add(1, Ordering::Relaxed);
+                    (xs, ys, pending) = (nxs, nys, npending);
+                }
+                None => return,
+            }
+        }
         self.stats.train_batches.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
-        if self.svc.submit(Request::TrainBatch { session, xs, ys, resp: rtx }).is_err() {
+        let req =
+            Request::TrainBatch { session, xs, ys, resp: rtx, ctx: RequestContext::default() };
+        if self.svc.submit(req).is_err() {
             self.fail_all(pending, "service shut down");
             self.lock_state().sessions.entry(session).or_default().train_in_flight = false;
             return;
@@ -391,11 +502,16 @@ impl Coalescer {
         self: &Arc<Self>,
         session: u64,
         xs: Vec<f64>,
-        pending: Vec<(usize, Sender<Response>)>,
+        pending: Vec<PendingRow>,
     ) {
+        let (xs, _, pending) = self.evict_dead_rows(xs, Vec::new(), pending);
+        if pending.is_empty() {
+            return;
+        }
         self.stats.predict_batches.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
-        if self.svc.submit(Request::PredictBatch { session, xs, resp: rtx }).is_err() {
+        let req = Request::PredictBatch { session, xs, resp: rtx, ctx: RequestContext::default() };
+        if self.svc.submit(req).is_err() {
             self.fail_all(pending, "service shut down");
             return;
         }
@@ -411,97 +527,109 @@ impl Coalescer {
     /// A train batch finished: dispatch whatever accumulated behind it,
     /// or release the session's in-flight slot.
     fn on_train_done(self: &Arc<Self>, session: u64) {
-        let mut g = self.lock_state();
-        let Some(buf) = g.sessions.get_mut(&session) else { return };
-        if buf.train.n_rows == 0 {
-            buf.train_in_flight = false;
-            return;
+        if let Some((xs, ys, pending)) = self.take_next_train(session) {
+            // group commit: these rows already waited a full batch
+            // round-trip — dispatch immediately, keeping in_flight held
+            self.stats.completion_flushes.fetch_add(1, Ordering::Relaxed);
+            self.dispatch_train(session, xs, ys, pending);
         }
-        // group commit: these rows already waited a full batch
-        // round-trip — dispatch immediately, keeping in_flight held
-        let (xs, ys, pending) = buf.train.take();
-        drop(g);
-        self.stats.completion_flushes.fetch_add(1, Ordering::Relaxed);
-        self.dispatch_train(session, xs, ys, pending);
+    }
+
+    /// Route one contributor's resolved reply, applying in-flight
+    /// suppression: a contributor whose context died while its batch
+    /// ran did get its work done, but its reply is withheld and counted
+    /// — the per-row mirror of the router's `respond_ctx`.
+    fn deliver_row(&self, p: &PendingRow, msg: Response) {
+        let stats = self.svc.stats();
+        if p.ctx.is_cancelled() {
+            stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            self.send_row(&p.resp, Response::Dropped(DropKind::Cancelled));
+        } else if p.ctx.is_expired() {
+            stats.deadline_drops.fetch_add(1, Ordering::Relaxed);
+            self.send_row(&p.resp, Response::Dropped(DropKind::Deadline));
+        } else {
+            self.send_row(&p.resp, msg);
+        }
     }
 
     /// Slice a batch train response back to its contributors.
-    fn demux_train(&self, resp: Response, pending: Vec<(usize, Sender<Response>)>) {
+    fn demux_train(&self, resp: Response, pending: Vec<PendingRow>) {
         match resp {
             Response::Trained(errs) => {
-                let total: usize = pending.iter().map(|(n, _)| *n).sum();
+                let total: usize = pending.iter().map(|p| p.rows).sum();
                 if errs.len() == total {
                     let mut off = 0;
-                    for (n, tx) in pending {
-                        self.send_row(&tx, Response::Trained(errs[off..off + n].to_vec()));
-                        off += n;
+                    for p in pending {
+                        let slice = Response::Trained(errs[off..off + p.rows].to_vec());
+                        off += p.rows;
+                        self.deliver_row(&p, slice);
                     }
                 } else {
                     // PJRT: fewer errors than rows (chunks buffering) —
                     // attribution impossible, everyone gets the
                     // documented "accepted, errors pending" empty reply
-                    for (_, tx) in pending {
-                        self.send_row(&tx, Response::Trained(Vec::new()));
+                    for p in pending {
+                        self.deliver_row(&p, Response::Trained(Vec::new()));
                     }
                 }
             }
             Response::Error(e) => {
-                for (_, tx) in pending {
-                    self.send_row(&tx, Response::Error(e.clone()));
+                for p in pending {
+                    self.deliver_row(&p, Response::Error(e.clone()));
                 }
             }
             other => {
                 let e = format!("unexpected coordinator response {other:?}");
-                for (_, tx) in pending {
-                    self.send_row(&tx, Response::Error(e.clone()));
+                for p in pending {
+                    self.deliver_row(&p, Response::Error(e.clone()));
                 }
             }
         }
     }
 
     /// Slice a batch predict response back to its contributors.
-    fn demux_predict(&self, resp: Response, pending: Vec<(usize, Sender<Response>)>) {
+    fn demux_predict(&self, resp: Response, pending: Vec<PendingRow>) {
         match resp {
             Response::Predictions(ys) => {
-                let total: usize = pending.iter().map(|(n, _)| *n).sum();
+                let total: usize = pending.iter().map(|p| p.rows).sum();
                 if ys.len() == total {
                     let mut off = 0;
-                    for (n, tx) in pending {
-                        let msg = if n == 1 {
+                    for p in pending {
+                        let msg = if p.rows == 1 {
                             Response::Predicted(ys[off])
                         } else {
-                            Response::Predictions(ys[off..off + n].to_vec())
+                            Response::Predictions(ys[off..off + p.rows].to_vec())
                         };
-                        self.send_row(&tx, msg);
-                        off += n;
+                        off += p.rows;
+                        self.deliver_row(&p, msg);
                     }
                 } else {
                     let e = format!(
                         "predict batch answered {} rows for {total} submitted",
                         ys.len()
                     );
-                    for (_, tx) in pending {
-                        self.send_row(&tx, Response::Error(e.clone()));
+                    for p in pending {
+                        self.deliver_row(&p, Response::Error(e.clone()));
                     }
                 }
             }
             Response::Error(e) => {
-                for (_, tx) in pending {
-                    self.send_row(&tx, Response::Error(e.clone()));
+                for p in pending {
+                    self.deliver_row(&p, Response::Error(e.clone()));
                 }
             }
             other => {
                 let e = format!("unexpected coordinator response {other:?}");
-                for (_, tx) in pending {
-                    self.send_row(&tx, Response::Error(e.clone()));
+                for p in pending {
+                    self.deliver_row(&p, Response::Error(e.clone()));
                 }
             }
         }
     }
 
-    fn fail_all(&self, pending: Vec<(usize, Sender<Response>)>, msg: &str) {
-        for (_, tx) in pending {
-            self.send_row(&tx, Response::Error(msg.to_string()));
+    fn fail_all(&self, pending: Vec<PendingRow>, msg: &str) {
+        for p in pending {
+            self.send_row(&p.resp, Response::Error(msg.to_string()));
         }
     }
 

@@ -28,20 +28,38 @@
 //!   reader (coalesced rows are admitted by the coalescer, whose
 //!   in-flight rule bounds its own submissions).
 //!
-//! A reply that cannot be written (peer gone) marks the connection
-//! broken; remaining `Pending` responses are drained — dropping their
-//! receivers, which the router observes as
-//! `ServiceStats::dropped_responses` — and the in-flight counter is
-//! still decremented so the reader can exit its park.
+//! ## Deadlines, cancellation and the reply ledger
+//!
+//! Data verbs may carry `deadline_ms` (relative; converted to an
+//! absolute instant at parse time and threaded through the stack as a
+//! [`RequestContext`]). A frame already expired at parse time is
+//! rejected pre-dispatch (`deadline_rejects`); one that expires after
+//! admission resolves as [`Response::Dropped`] and the writer
+//! *suppresses* its reply frame (`suppressed_replies`). `cancel` raises
+//! the target's flag in the per-connection [`CancelRegistry`]; the
+//! registry entry lives from dispatch until the writer resolves that
+//! id, so cancellation is best-effort by construction.
+//!
+//! Every admitted frame resolves exactly one way. A reply that cannot
+//! be written (peer gone) marks the connection broken; from then on the
+//! writer still *receives* every pending response — rather than
+//! dropping the channel and racing the router's send — so each one is
+//! counted: deliberate suppressions in `suppressed_replies`,
+//! undeliverable real replies in `dropped_frames`. At quiescence
+//! `frames_in == frames_out + suppressed_replies + dropped_frames`
+//! (the chaos suite pins this ledger). The in-flight counter is always
+//! decremented so the reader can exit its park.
 
+use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::io;
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
-use crate::coordinator::{CoordinatorService, Request, Response};
+use crate::coordinator::{CoordinatorService, Request, RequestContext, Response};
 use crate::util::json::{write_escaped, JsonValue};
 
 use super::coalesce::Coalescer;
@@ -93,6 +111,47 @@ impl InFlight {
     }
 }
 
+/// Cancellation flags for this connection's live requests, keyed by
+/// wire id. The reader registers a flag at dispatch (before the
+/// matching `Await` is enqueued) and the writer resolves it when that
+/// id's reply is written or suppressed — so a `cancel` frame can only
+/// ever reach requests that are genuinely still pending here, which is
+/// exactly the best-effort contract. Ids are client-chosen; reusing an
+/// id while the first use is still live simply makes the newer flag the
+/// cancellable one.
+#[derive(Default)]
+struct CancelRegistry {
+    flags: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+}
+
+impl CancelRegistry {
+    /// Create and track the flag for a newly-dispatched request.
+    fn register(&self, id: u64) -> Arc<AtomicBool> {
+        let flag = Arc::new(AtomicBool::new(false));
+        self.flags
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(id, Arc::clone(&flag));
+        flag
+    }
+
+    /// Stop tracking `id` (its reply was written or suppressed).
+    fn resolve(&self, id: u64) {
+        self.flags.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
+    }
+
+    /// Raise `target`'s flag; `true` when the target was still live.
+    fn cancel(&self, target: u64) -> bool {
+        match self.flags.lock().unwrap_or_else(PoisonError::into_inner).get(&target) {
+            Some(flag) => {
+                flag.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
 /// Which shape of coordinator [`Response`] a pending request expects —
 /// the key for converting it to the wire reply.
 enum ReplyKind {
@@ -127,6 +186,8 @@ enum Body {
     None,
     /// Pre-rendered stats object (embedded raw).
     Stats(String),
+    /// `cancel` acknowledgement: whether the target was still live.
+    Cancelled(bool),
 }
 
 /// Work items for the writer thread, enqueued in request order.
@@ -139,16 +200,19 @@ enum Pending {
     Close,
 }
 
-/// A parsed request frame.
+/// A parsed request frame. Data verbs carry the already-absolutized
+/// deadline (`deadline_ms` is relative on the wire; the clock starts
+/// at parse time).
 enum WireRequest {
-    Train { id: u64, session: u64, x: Vec<f64>, y: f64 },
-    TrainBatch { id: u64, session: u64, xs: Vec<f64>, ys: Vec<f64> },
-    TrainDiffusion { id: u64, group: u64, xs: Vec<f64>, ys: Vec<f64> },
-    Predict { id: u64, session: u64, x: Vec<f64> },
-    PredictBatch { id: u64, session: u64, xs: Vec<f64> },
+    Train { id: u64, session: u64, x: Vec<f64>, y: f64, deadline: Option<Instant> },
+    TrainBatch { id: u64, session: u64, xs: Vec<f64>, ys: Vec<f64>, deadline: Option<Instant> },
+    TrainDiffusion { id: u64, group: u64, xs: Vec<f64>, ys: Vec<f64>, deadline: Option<Instant> },
+    Predict { id: u64, session: u64, x: Vec<f64>, deadline: Option<Instant> },
+    PredictBatch { id: u64, session: u64, xs: Vec<f64>, deadline: Option<Instant> },
     Snapshot { id: u64, session: u64 },
     Restore { id: u64, session: u64, snapshot: String },
     Stats { id: u64 },
+    Cancel { id: u64, target: u64 },
 }
 
 impl WireRequest {
@@ -161,7 +225,20 @@ impl WireRequest {
             | Self::PredictBatch { id, .. }
             | Self::Snapshot { id, .. }
             | Self::Restore { id, .. }
-            | Self::Stats { id } => *id,
+            | Self::Stats { id }
+            | Self::Cancel { id, .. } => *id,
+        }
+    }
+
+    /// The absolute deadline, for verbs that accept one.
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            Self::Train { deadline, .. }
+            | Self::TrainBatch { deadline, .. }
+            | Self::TrainDiffusion { deadline, .. }
+            | Self::Predict { deadline, .. }
+            | Self::PredictBatch { deadline, .. } => *deadline,
+            Self::Snapshot { .. } | Self::Restore { .. } | Self::Stats { .. } | Self::Cancel { .. } => None,
         }
     }
 }
@@ -172,16 +249,18 @@ pub(crate) fn serve(stream: TcpStream, shared: Arc<ConnShared>) {
     let _ = stream.set_nodelay(true);
     let Ok(wstream) = stream.try_clone() else { return };
     let in_flight = Arc::new(InFlight::default());
+    let cancels = Arc::new(CancelRegistry::default());
     let (ptx, prx) = mpsc::channel::<Pending>();
     let writer = {
         let in_flight = Arc::clone(&in_flight);
+        let cancels = Arc::clone(&cancels);
         let stats = Arc::clone(&shared.stats);
         std::thread::Builder::new()
             .name("rff-kaf-conn-writer".into())
-            .spawn(move || writer_loop(wstream, prx, &in_flight, &stats))
+            .spawn(move || writer_loop(wstream, prx, &in_flight, &cancels, &stats))
             .expect("spawning connection writer")
     };
-    reader_loop(&stream, &shared, &in_flight, &ptx);
+    reader_loop(&stream, &shared, &in_flight, &cancels, &ptx);
     let _ = ptx.send(Pending::Close);
     drop(ptx);
     let _ = writer.join();
@@ -192,6 +271,7 @@ fn reader_loop(
     stream: &TcpStream,
     shared: &Arc<ConnShared>,
     in_flight: &Arc<InFlight>,
+    cancels: &Arc<CancelRegistry>,
     ptx: &Sender<Pending>,
 ) {
     let mut reader = stream;
@@ -203,11 +283,15 @@ fn reader_loop(
             Ok(None) => return, // clean close between frames
             Ok(Some(frame)) => {
                 shared.stats.frames_in.fetch_add(1, Ordering::Relaxed);
-                handle_frame(frame, shared, in_flight, ptx);
+                handle_frame(frame, shared, in_flight, cancels, ptx);
             }
             Err(e) if e.kind() == io::ErrorKind::InvalidData => {
                 // oversized length prefix: reply with the diagnostic,
-                // then close — the stream position cannot be resynced
+                // then close — the stream position cannot be resynced.
+                // The frame still counts into `frames_in` (its diagnostic
+                // will count into `frames_out`): the reply ledger must
+                // balance under abuse too.
+                shared.stats.frames_in.fetch_add(1, Ordering::Relaxed);
                 shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
                 in_flight.inc();
                 let _ = ptx.send(Pending::Immediate(Reply::Err {
@@ -227,6 +311,7 @@ fn handle_frame(
     frame: &[u8],
     shared: &Arc<ConnShared>,
     in_flight: &Arc<InFlight>,
+    cancels: &Arc<CancelRegistry>,
     ptx: &Sender<Pending>,
 ) {
     let depth = in_flight.inc();
@@ -241,12 +326,21 @@ fn handle_frame(
         }
     };
     // `stats` is served inline and exempt from the in-flight cap: it is
-    // the verb a client uses to observe overload
+    // the verb a client uses to observe overload (and the fence a
+    // pipelined client uses to bound waits when replies may be
+    // suppressed — it must never be rejected or suppressed itself)
     if let WireRequest::Stats { id } = req {
         let _ = ptx.send(Pending::Immediate(Reply::Ok {
             id,
             body: Body::Stats(stats_json(shared)),
         }));
+        return;
+    }
+    // `cancel` is likewise inline and cap-exempt: it exists to *reduce*
+    // load, so rejecting it under pressure would be self-defeating
+    if let WireRequest::Cancel { id, target } = req {
+        let hit = cancels.cancel(target);
+        let _ = ptx.send(Pending::Immediate(Reply::Ok { id, body: Body::Cancelled(hit) }));
         return;
     }
     if depth > shared.max_in_flight {
@@ -261,41 +355,68 @@ fn handle_frame(
         }));
         return;
     }
-    dispatch(req, shared, ptx);
+    // already expired at dispatch: reject with a diagnostic *before*
+    // any admission work — the client gets an answer (unlike post-
+    // admission expiry, which suppresses the reply)
+    if req.deadline().is_some_and(|d| Instant::now() >= d) {
+        shared.svc.stats().deadline_rejects.fetch_add(1, Ordering::Relaxed);
+        let _ = ptx.send(Pending::Immediate(Reply::Err {
+            id: req.id(),
+            msg: format!("request {} rejected: deadline already expired at dispatch", req.id()),
+        }));
+        return;
+    }
+    dispatch(req, shared, cancels, ptx);
 }
 
 /// Route an admitted request: single-row train/predict through the
 /// coalescer when enabled, everything else directly onto the router
-/// queue via non-blocking admission.
-fn dispatch(req: WireRequest, shared: &Arc<ConnShared>, ptx: &Sender<Pending>) {
+/// queue via non-blocking admission. Data requests register a
+/// cancellation flag and carry their [`RequestContext`] down the stack.
+fn dispatch(
+    req: WireRequest,
+    shared: &Arc<ConnShared>,
+    cancels: &Arc<CancelRegistry>,
+    ptx: &Sender<Pending>,
+) {
+    let ctx_for = |id: u64, deadline: Option<Instant>| RequestContext {
+        deadline,
+        cancelled: Some(cancels.register(id)),
+        correlation_id: id,
+    };
     let (rtx, rrx) = mpsc::channel::<Response>();
     let (id, kind, request) = match req {
-        WireRequest::Train { id, session, x, y } => {
+        WireRequest::Train { id, session, x, y, deadline } => {
+            let ctx = ctx_for(id, deadline);
             if shared.coalescer.enabled() {
                 // enqueue the Await *before* the row can dispatch so the
                 // writer sees items in request order
                 let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Train, rx: rrx });
-                shared.coalescer.add_train(session, x, y, rtx);
+                shared.coalescer.add_train(session, x, y, rtx, ctx);
                 return;
             }
-            (id, ReplyKind::Train, Request::Train { session, x, y, resp: rtx })
+            (id, ReplyKind::Train, Request::Train { session, x, y, resp: rtx, ctx })
         }
-        WireRequest::Predict { id, session, x } => {
+        WireRequest::Predict { id, session, x, deadline } => {
+            let ctx = ctx_for(id, deadline);
             if shared.coalescer.enabled() {
                 let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Predict, rx: rrx });
-                shared.coalescer.add_predict(session, x, rtx);
+                shared.coalescer.add_predict(session, x, rtx, ctx);
                 return;
             }
-            (id, ReplyKind::Predict, Request::Predict { session, x, resp: rtx })
+            (id, ReplyKind::Predict, Request::Predict { session, x, resp: rtx, ctx })
         }
-        WireRequest::TrainBatch { id, session, xs, ys } => {
-            (id, ReplyKind::Train, Request::TrainBatch { session, xs, ys, resp: rtx })
+        WireRequest::TrainBatch { id, session, xs, ys, deadline } => {
+            let ctx = ctx_for(id, deadline);
+            (id, ReplyKind::Train, Request::TrainBatch { session, xs, ys, resp: rtx, ctx })
         }
-        WireRequest::TrainDiffusion { id, group, xs, ys } => {
-            (id, ReplyKind::Train, Request::TrainDiffusion { group, xs, ys, resp: rtx })
+        WireRequest::TrainDiffusion { id, group, xs, ys, deadline } => {
+            let ctx = ctx_for(id, deadline);
+            (id, ReplyKind::Train, Request::TrainDiffusion { group, xs, ys, resp: rtx, ctx })
         }
-        WireRequest::PredictBatch { id, session, xs } => {
-            (id, ReplyKind::PredictBatch, Request::PredictBatch { session, xs, resp: rtx })
+        WireRequest::PredictBatch { id, session, xs, deadline } => {
+            let ctx = ctx_for(id, deadline);
+            (id, ReplyKind::PredictBatch, Request::PredictBatch { session, xs, resp: rtx, ctx })
         }
         WireRequest::Snapshot { id, session } => {
             (id, ReplyKind::Snapshot, Request::Snapshot { session, resp: rtx })
@@ -303,13 +424,17 @@ fn dispatch(req: WireRequest, shared: &Arc<ConnShared>, ptx: &Sender<Pending>) {
         WireRequest::Restore { id, session, snapshot } => {
             (id, ReplyKind::Restore, Request::Restore { session, snapshot, resp: rtx })
         }
-        WireRequest::Stats { .. } => unreachable!("stats is handled inline"),
+        WireRequest::Stats { .. } | WireRequest::Cancel { .. } => {
+            unreachable!("stats and cancel are handled inline")
+        }
     };
     match shared.svc.try_submit(request) {
         Ok(true) => {
             let _ = ptx.send(Pending::Await { id, kind, rx: rrx });
         }
         Ok(false) => {
+            // no Await will resolve this id — untrack its cancel flag
+            cancels.resolve(id);
             shared.stats.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
             let _ = ptx.send(Pending::Immediate(Reply::Err {
                 id,
@@ -320,6 +445,7 @@ fn dispatch(req: WireRequest, shared: &Arc<ConnShared>, ptx: &Sender<Pending>) {
             }));
         }
         Err(e) => {
+            cancels.resolve(id);
             let _ = ptx.send(Pending::Immediate(Reply::Err { id, msg: e.to_string() }));
         }
     }
@@ -327,10 +453,23 @@ fn dispatch(req: WireRequest, shared: &Arc<ConnShared>, ptx: &Sender<Pending>) {
 
 /// Resolve and write replies in request order; reuses one JSON string
 /// and one frame buffer for the connection's lifetime.
+///
+/// This loop is the reply *ledger*: every `Pending` item resolves into
+/// exactly one of `frames_out` (written), `suppressed_replies`
+/// (deliberately unwritten — deadline drop / in-flight cancel) or
+/// `dropped_frames` (undeliverable — peer gone). Once the connection is
+/// broken the loop keeps **receiving** each pending response instead of
+/// dropping the channel: dropping would race the router's `send` (a
+/// response sent a microsecond earlier would vanish uncounted) and the
+/// conservation law `frames_in == frames_out + suppressed_replies +
+/// dropped_frames` would leak. Receiving here cannot deadlock: the
+/// coalescer's flush timer guarantees buffered rows always dispatch,
+/// and the router always answers admitted requests.
 fn writer_loop(
     mut stream: TcpStream,
     prx: Receiver<Pending>,
     in_flight: &InFlight,
+    cancels: &CancelRegistry,
     stats: &DaemonStats,
 ) {
     let mut fw = FrameWriter::new();
@@ -341,28 +480,50 @@ fn writer_loop(
             Pending::Close => break,
             Pending::Immediate(reply) => Some(reply),
             Pending::Await { id, kind, rx } => {
-                if broken {
-                    // peer is gone: dropping `rx` lets the router count
-                    // the undeliverable response (dropped_responses)
-                    None
-                } else {
-                    Some(match rx.recv() {
-                        Ok(resp) => convert(id, kind, resp),
-                        Err(_) => Reply::Err { id, msg: "response channel closed".into() },
-                    })
-                }
+                let reply = match rx.recv() {
+                    // a dropped request is suppressed whether or not the
+                    // peer is still there — count it as such
+                    Ok(Response::Dropped(_)) => {
+                        stats.suppressed_replies.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                    Ok(resp) if !broken => Some(convert(id, kind, resp)),
+                    // real reply, dead peer: undeliverable
+                    Ok(_) => {
+                        stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                    Err(_) if !broken => {
+                        Some(Reply::Err { id, msg: "response channel closed".into() })
+                    }
+                    // the sender vanished (shutdown race) and so did the
+                    // peer: still one admitted frame, still accounted
+                    Err(_) => {
+                        stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                };
+                cancels.resolve(id);
+                reply
             }
         };
-        if !broken {
-            if let Some(reply) = &reply {
+        match reply {
+            Some(reply) if !broken => {
                 json.clear();
-                render(&mut json, reply);
+                render(&mut json, &reply);
                 if fw.write_frame(&mut stream, json.as_bytes()).is_ok() {
                     stats.frames_out.fetch_add(1, Ordering::Relaxed);
                 } else {
+                    // this reply existed but never reached the peer
                     broken = true;
+                    stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
                 }
             }
+            // resolved reply on a broken connection: undeliverable
+            Some(_) => {
+                stats.dropped_frames.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {}
         }
         in_flight.dec();
     }
@@ -417,6 +578,9 @@ fn render(out: &mut String, reply: &Reply) {
                     out.push_str(",\"stats\":");
                     out.push_str(obj);
                 }
+                Body::Cancelled(hit) => {
+                    let _ = write!(out, ",\"cancelled\":{hit}");
+                }
             }
             out.push('}');
         }
@@ -465,6 +629,13 @@ fn stats_json(shared: &ConnShared) -> String {
         .insert("dropped_responses".to_string(), n(svc.dropped_responses.load(Ordering::Relaxed)));
     service.insert("snapshots".to_string(), n(svc.snapshots.load(Ordering::Relaxed)));
     service.insert("restored".to_string(), n(svc.restored.load(Ordering::Relaxed)));
+    service.insert("deadline_rejects".to_string(), n(svc.deadline_rejects.load(Ordering::Relaxed)));
+    service.insert("deadline_drops".to_string(), n(svc.deadline_drops.load(Ordering::Relaxed)));
+    service.insert("cancelled".to_string(), n(svc.cancelled.load(Ordering::Relaxed)));
+    service.insert(
+        "poisoned_recoveries".to_string(),
+        n(svc.poisoned_recoveries.load(Ordering::Relaxed)),
+    );
     service.insert("evictions".to_string(), n(svc.spill.evictions.load(Ordering::Relaxed)));
     service.insert("spill_restores".to_string(), n(svc.spill.restores.load(Ordering::Relaxed)));
     service.insert("sessions".to_string(), n(shared.svc.session_count() as u64));
@@ -510,6 +681,9 @@ fn stats_json(shared: &ConnShared) -> String {
         n(d.rejected_queue_full.load(Ordering::Relaxed)),
     );
     daemon.insert("protocol_errors".to_string(), n(d.protocol_errors.load(Ordering::Relaxed)));
+    daemon
+        .insert("suppressed_replies".to_string(), n(d.suppressed_replies.load(Ordering::Relaxed)));
+    daemon.insert("dropped_frames".to_string(), n(d.dropped_frames.load(Ordering::Relaxed)));
 
     let mut root = BTreeMap::new();
     root.insert("service".to_string(), JsonValue::Object(service));
@@ -537,28 +711,33 @@ fn parse_request(frame: &[u8]) -> Result<WireRequest, ParseError> {
             session: get_u64(&doc, "session", id)?,
             x: get_row(&doc, "x", id)?,
             y: get_f64(&doc, "y", id)?,
+            deadline: get_deadline(&doc, id)?,
         }),
         "train_batch" => Ok(WireRequest::TrainBatch {
             id,
             session: get_u64(&doc, "session", id)?,
             xs: get_row(&doc, "xs", id)?,
             ys: get_row(&doc, "ys", id)?,
+            deadline: get_deadline(&doc, id)?,
         }),
         "train_diffusion" => Ok(WireRequest::TrainDiffusion {
             id,
             group: get_u64(&doc, "group", id)?,
             xs: get_row(&doc, "xs", id)?,
             ys: get_row(&doc, "ys", id)?,
+            deadline: get_deadline(&doc, id)?,
         }),
         "predict" => Ok(WireRequest::Predict {
             id,
             session: get_u64(&doc, "session", id)?,
             x: get_row(&doc, "x", id)?,
+            deadline: get_deadline(&doc, id)?,
         }),
         "predict_batch" => Ok(WireRequest::PredictBatch {
             id,
             session: get_u64(&doc, "session", id)?,
             xs: get_row(&doc, "xs", id)?,
+            deadline: get_deadline(&doc, id)?,
         }),
         "snapshot" => Ok(WireRequest::Snapshot { id, session: get_u64(&doc, "session", id)? }),
         "restore" => Ok(WireRequest::Restore {
@@ -567,11 +746,12 @@ fn parse_request(frame: &[u8]) -> Result<WireRequest, ParseError> {
             snapshot: get_str(&doc, "snapshot", id)?,
         }),
         "stats" => Ok(WireRequest::Stats { id }),
+        "cancel" => Ok(WireRequest::Cancel { id, target: get_u64(&doc, "target", id)? }),
         other => Err((
             id,
             format!(
                 "unknown verb {other:?} (expected train, train_batch, predict, \
-                 predict_batch, train_diffusion, snapshot, restore or stats)"
+                 predict_batch, train_diffusion, snapshot, restore, stats or cancel)"
             ),
         )),
     }
@@ -599,6 +779,21 @@ fn get_str(doc: &JsonValue, key: &str, id: u64) -> Result<String, ParseError> {
         .and_then(|v| v.as_str())
         .map(str::to_string)
         .ok_or_else(|| (id, format!("missing or non-string field {key:?}")))
+}
+
+/// The optional relative `deadline_ms` field, absolutized against the
+/// parse-time clock (`null` is treated as absent for client
+/// convenience). A budget of 0 ms parses fine — it is simply already
+/// expired and gets rejected pre-dispatch.
+fn get_deadline(doc: &JsonValue, id: u64) -> Result<Option<Instant>, ParseError> {
+    match doc.get("deadline_ms") {
+        None | Some(JsonValue::Null) => Ok(None),
+        Some(v) => as_u64(v)
+            .map(|ms| Some(Instant::now() + Duration::from_millis(ms)))
+            .ok_or_else(|| {
+                (id, "field \"deadline_ms\" must be a non-negative integer".to_string())
+            }),
+    }
 }
 
 /// A numeric array field (a row or a row-major batch).
@@ -640,9 +835,10 @@ mod tests {
         let req = parse_request(br#"{"id":7,"verb":"train","session":3,"x":[1.0,2.0],"y":0.5}"#)
             .expect("valid train");
         match req {
-            WireRequest::Train { id, session, x, y } => {
+            WireRequest::Train { id, session, x, y, deadline } => {
                 assert_eq!((id, session, y), (7, 3, 0.5));
                 assert_eq!(x, vec![1.0, 2.0]);
+                assert!(deadline.is_none());
             }
             _ => panic!("wrong variant"),
         }
@@ -650,9 +846,10 @@ mod tests {
         let (id, msg) = parse_request(br#"{"id":9,"verb":"train","session":"x"}"#).unwrap_err();
         assert_eq!(id, 9);
         assert!(msg.contains("session"), "diagnostic names the field: {msg}");
-        // unknown verb lists the vocabulary
+        // unknown verb lists the vocabulary (including cancel)
         let (_, msg) = parse_request(br#"{"id":1,"verb":"bogus"}"#).unwrap_err();
         assert!(msg.contains("unknown verb") && msg.contains("train_batch"), "{msg}");
+        assert!(msg.contains("cancel"), "{msg}");
         // malformed JSON
         let (id, msg) = parse_request(b"not json").unwrap_err();
         assert_eq!(id, 0);
@@ -684,15 +881,63 @@ mod tests {
         s.clear();
         render(&mut s, &Reply::Err { id: 6, msg: "bad \"thing\"".into() });
         assert_eq!(s, r#"{"id":6,"ok":false,"error":"bad \"thing\""}"#);
+        s.clear();
+        render(&mut s, &Reply::Ok { id: 8, body: Body::Cancelled(true) });
+        assert_eq!(s, r#"{"id":8,"ok":true,"cancelled":true}"#);
         // every rendered reply must itself parse
         for case in [
             Reply::Ok { id: 1, body: Body::Y(-0.0) },
             Reply::Ok { id: 2, body: Body::Ys(vec![f64::NAN, 1.0]) },
             Reply::Ok { id: 3, body: Body::Snapshot("{\"v\":1}".into()) },
+            Reply::Ok { id: 9, body: Body::Cancelled(false) },
         ] {
             s.clear();
             render(&mut s, &case);
             JsonValue::parse(&s).expect("rendered reply parses");
         }
+    }
+
+    #[test]
+    fn deadline_ms_parses_relative_and_rejects_garbage() {
+        let req = parse_request(
+            br#"{"id":1,"verb":"predict","session":2,"x":[0.5],"deadline_ms":5000}"#,
+        )
+        .expect("valid predict with deadline");
+        let d = req.deadline().expect("deadline set");
+        let left = d.saturating_duration_since(Instant::now());
+        assert!(left <= Duration::from_millis(5000), "relative budget, not absolute");
+        assert!(left > Duration::from_millis(4000), "parse overhead must be tiny");
+        // null means absent
+        let req = parse_request(
+            br#"{"id":1,"verb":"predict","session":2,"x":[0.5],"deadline_ms":null}"#,
+        )
+        .unwrap();
+        assert!(req.deadline().is_none());
+        // non-data verbs never carry a deadline even if the field is sent
+        let req =
+            parse_request(br#"{"id":1,"verb":"snapshot","session":2,"deadline_ms":50}"#).unwrap();
+        assert!(req.deadline().is_none());
+        // garbage is a parse error naming the field
+        let (_, msg) = parse_request(
+            br#"{"id":1,"verb":"train","session":2,"x":[0.1],"y":0.2,"deadline_ms":-3}"#,
+        )
+        .unwrap_err();
+        assert!(msg.contains("deadline_ms"), "{msg}");
+    }
+
+    #[test]
+    fn cancel_registry_hits_only_live_requests() {
+        let reg = CancelRegistry::default();
+        assert!(!reg.cancel(5), "unknown target");
+        let flag = reg.register(5);
+        assert!(!flag.load(Ordering::Relaxed));
+        assert!(reg.cancel(5), "live target");
+        assert!(flag.load(Ordering::Relaxed), "flag raised");
+        reg.resolve(5);
+        assert!(!reg.cancel(5), "resolved target is untouchable");
+        // cancel is idempotent while live
+        let flag = reg.register(6);
+        assert!(reg.cancel(6) && reg.cancel(6));
+        assert!(flag.load(Ordering::Relaxed));
     }
 }

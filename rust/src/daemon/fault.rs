@@ -1,0 +1,277 @@
+//! Deterministic fault injection for the wire → coordinator stack.
+//!
+//! Compiled only under `#[cfg(any(test, feature = "fault-injection"))]`
+//! — nothing here exists in a release build. The chaos suite
+//! (`tests/chaos.rs`, run with `--features fault-injection`) drives a
+//! mixed multi-connection load through schedules drawn from a
+//! [`FaultPlan`] and asserts the stack's conservation laws; everything
+//! is a pure function of the plan's seed, so a red chaos run replays
+//! exactly from its seed.
+//!
+//! Fault classes are **disjoint by connection**: one connection kills
+//! its socket, another runs tight deadlines, another cancels, another
+//! stays clean. Mixing classes on one connection would make the
+//! per-counter conservation laws unattributable (an unanswered request
+//! could be "killed" or "expired"); keeping them disjoint keeps every
+//! law exact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::coordinator::{MemorySink, SnapshotSink};
+use crate::Result;
+
+/// Minimal deterministic RNG (SplitMix64): one `u64` of state, no
+/// external deps, stable across platforms — fault schedules must replay
+/// bit-exactly from a seed.
+pub struct FaultRng(u64);
+
+impl FaultRng {
+    /// Seeded stream.
+    pub fn new(seed: u64) -> Self {
+        Self(seed)
+    }
+
+    /// Next raw draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform draw in `0..n` (`n` clamped to ≥ 1).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+}
+
+/// What one chaos connection does to the stack.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConnFault {
+    /// Well-behaved traffic — the control group; its replies must be
+    /// exact and complete.
+    Clean,
+    /// Every request carries this tight relative deadline; some expire
+    /// in queue/coalesce/flight and must resolve as counted drops.
+    Deadline {
+        /// The per-request `deadline_ms` value.
+        deadline_ms: u64,
+    },
+    /// Cancel every `every`-th request right after sending it;
+    /// still-queued targets get diagnostics, in-flight targets get
+    /// suppressed-and-counted replies.
+    Cancel {
+        /// Cancel cadence in requests.
+        every: usize,
+    },
+    /// Abruptly drop the socket after `after_ops` sends with a deep
+    /// pipelined window outstanding — every abandoned reply must land
+    /// in a loss counter, and no router worker may stall.
+    Kill {
+        /// Sends before the connection dies.
+        after_ops: usize,
+    },
+    /// Interleave malformed frames (corrupted payload bytes, truncated
+    /// bodies) with valid traffic — protocol errors must fail only the
+    /// frame (or, for truncation, only the connection), never the
+    /// service.
+    Corrupt,
+}
+
+/// A seeded, deterministic fault schedule for one chaos run.
+pub struct FaultPlan {
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Plan for `seed` — equal seeds produce identical schedules.
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// The plan's seed (for failure reports).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// One fault class per connection, disjoint by construction: with
+    /// `conns >= 4` the Clean/Deadline/Cancel/Kill classes all appear.
+    /// Parameters (deadline tightness, cancel cadence, kill point) vary
+    /// with the seed; class-to-connection assignment rotates so every
+    /// connection index exercises every class across seeds.
+    pub fn connection_faults(&self, conns: usize, rows_per_conn: usize) -> Vec<ConnFault> {
+        let mut rng = FaultRng::new(self.seed);
+        let rotate = rng.below(4) as usize;
+        (0..conns)
+            .map(|i| match (i + rotate) % 4 {
+                0 => ConnFault::Clean,
+                1 => ConnFault::Deadline { deadline_ms: 1 + rng.below(3) },
+                2 => ConnFault::Cancel { every: 2 + rng.below(5) as usize },
+                _ => {
+                    let quarter = (rows_per_conn / 4).max(1);
+                    ConnFault::Kill { after_ops: quarter + rng.below(quarter as u64) as usize }
+                }
+            })
+            .collect()
+    }
+
+    /// How many consecutive [`SnapshotSink`] puts fail before the sink
+    /// recovers (the transient-spill-failure scenario).
+    pub fn sink_failures(&self) -> u64 {
+        FaultRng::new(self.seed ^ 0xD1F7).below(3)
+    }
+
+    /// Router stall for the slow-router scenario — long enough that
+    /// tight deadlines actually expire under loopback latencies, short
+    /// enough that a chaos run stays fast.
+    pub fn router_stall(&self) -> Duration {
+        Duration::from_micros(200 + FaultRng::new(self.seed ^ 0x51A1_1ED).below(800))
+    }
+}
+
+/// A [`SnapshotSink`] whose first `n` puts fail with a transient error,
+/// then behaves like a [`MemorySink`] — the regression harness for the
+/// spill path's bounded-backoff retry (`put_with_retry`).
+#[derive(Debug, Default)]
+pub struct FlakySink {
+    inner: MemorySink,
+    remaining_failures: AtomicU64,
+    attempts: AtomicU64,
+}
+
+impl FlakySink {
+    /// Sink that fails its first `n` put attempts, then succeeds.
+    pub fn failing_puts(n: u64) -> Self {
+        Self {
+            inner: MemorySink::new(),
+            remaining_failures: AtomicU64::new(n),
+            attempts: AtomicU64::new(0),
+        }
+    }
+
+    /// Total put attempts observed (failures included).
+    pub fn put_attempts(&self) -> u64 {
+        self.attempts.load(Ordering::Relaxed)
+    }
+}
+
+impl SnapshotSink for FlakySink {
+    fn put(&self, id: u64, snapshot: &str) -> Result<()> {
+        self.attempts.fetch_add(1, Ordering::Relaxed);
+        // decrement-if-positive: concurrent putters may race here, the
+        // injected failure count stays exact
+        let mut left = self.remaining_failures.load(Ordering::Relaxed);
+        while left > 0 {
+            match self.remaining_failures.compare_exchange(
+                left,
+                left - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => anyhow::bail!("injected transient sink failure ({left} left)"),
+                Err(actual) => left = actual,
+            }
+        }
+        self.inner.put(id, snapshot)
+    }
+
+    fn get(&self, id: u64) -> Result<Option<String>> {
+        self.inner.get(id)
+    }
+
+    fn delete(&self, id: u64) -> Result<()> {
+        self.inner.delete(id)
+    }
+
+    fn count(&self) -> usize {
+        self.inner.count()
+    }
+}
+
+/// Write a frame whose length prefix promises `payload.len()` bytes but
+/// deliver only the first `keep` — from the peer's side an abrupt
+/// truncation mid-frame (it must surface as a clean connection error,
+/// never a misparse of the next frame).
+pub fn write_frame_truncated(
+    w: &mut impl std::io::Write,
+    payload: &[u8],
+    keep: usize,
+) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(&payload[..keep.min(payload.len())])?;
+    w.flush()
+}
+
+/// Write a well-formed frame with one payload byte flipped: framing
+/// stays intact, the JSON inside does not — the daemon must fail only
+/// this request (error reply) and keep the connection serving.
+pub fn write_frame_corrupted(
+    w: &mut impl std::io::Write,
+    payload: &[u8],
+    flip_at: usize,
+) -> std::io::Result<()> {
+    let mut mangled = payload.to_vec();
+    if !mangled.is_empty() {
+        let at = flip_at % mangled.len();
+        mangled[at] ^= 0x80;
+    }
+    w.write_all(&(mangled.len() as u32).to_be_bytes())?;
+    w.write_all(&mangled)?;
+    w.flush()
+}
+
+/// Write a valid frame in two chunks with a pause in between — a slow,
+/// trickling client. The reader must block across the gap and then
+/// parse the frame normally (delayed writes are a latency fault, not a
+/// protocol fault).
+pub fn write_frame_delayed(
+    w: &mut impl std::io::Write,
+    payload: &[u8],
+    pause: Duration,
+) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    let split = payload.len() / 2;
+    w.write_all(&payload[..split])?;
+    w.flush()?;
+    std::thread::sleep(pause);
+    w.write_all(&payload[split..])?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plans_are_deterministic() {
+        let a = FaultPlan::new(42).connection_faults(8, 200);
+        let b = FaultPlan::new(42).connection_faults(8, 200);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::new(43).connection_faults(8, 200));
+        assert_eq!(FaultPlan::new(42).router_stall(), FaultPlan::new(42).router_stall());
+    }
+
+    #[test]
+    fn four_connections_cover_all_live_fault_classes() {
+        for seed in 0..16 {
+            let faults = FaultPlan::new(seed).connection_faults(4, 100);
+            assert!(faults.iter().any(|f| matches!(f, ConnFault::Clean)), "seed {seed}");
+            assert!(faults.iter().any(|f| matches!(f, ConnFault::Deadline { .. })), "seed {seed}");
+            assert!(faults.iter().any(|f| matches!(f, ConnFault::Cancel { .. })), "seed {seed}");
+            assert!(faults.iter().any(|f| matches!(f, ConnFault::Kill { .. })), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn flaky_sink_fails_exactly_n_then_recovers() {
+        let sink = FlakySink::failing_puts(2);
+        assert!(sink.put(1, "{}").is_err());
+        assert!(sink.put(1, "{}").is_err());
+        sink.put(1, r#"{"v":1}"#).unwrap();
+        assert_eq!(sink.get(1).unwrap().as_deref(), Some(r#"{"v":1}"#));
+        assert_eq!(sink.put_attempts(), 3);
+        assert_eq!(sink.count(), 1);
+    }
+}

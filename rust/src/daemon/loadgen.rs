@@ -10,8 +10,23 @@
 //! bounded window of requests in flight on each, and reports rows/s
 //! plus an end-to-end latency histogram (p50/p95/p99 via
 //! [`LogHistogram::quantile`]).
+//!
+//! ## Suppressed replies and the stats fence
+//!
+//! With deadlines or cancellation in play the daemon may legitimately
+//! *never answer* a request (see the wire contract in
+//! [`crate::daemon`]). Replies still arrive in strict request order, so
+//! the client tracks outstanding requests in an ordered queue: when a
+//! reply for id `k` arrives, every outstanding request older than `k`
+//! was suppressed — counted as [`LoadgenReport::shed_replies`], never
+//! mistaken for loss. Because an entire window could be suppressed (a
+//! closed-loop client would then block forever), the generator plants a
+//! `stats` **fence** when the window is full and suppression is
+//! possible: `stats` is deadline-exempt and always answered, so the
+//! next `recv` is guaranteed to return and drain every suppression
+//! before the fence. A final fence bounds the tail the same way.
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 use std::fmt::Write as _;
 use std::io;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -35,6 +50,9 @@ pub struct WireClient {
     /// Reused request-serialization buffer.
     json: String,
     next_id: u64,
+    /// When set, every subsequent request carries this relative
+    /// `deadline_ms` (ignored by the daemon on non-data verbs).
+    deadline_ms: Option<u64>,
 }
 
 /// One parsed reply frame; fields are populated per the verb's shape
@@ -55,6 +73,8 @@ pub struct WireReply {
     pub snapshot: Option<String>,
     /// Stats object (`stats`).
     pub stats: Option<JsonValue>,
+    /// Cancel acknowledgement (`cancel`): whether the target was live.
+    pub cancelled: Option<bool>,
     /// Diagnostic when `ok` is false.
     pub error: Option<String>,
 }
@@ -70,13 +90,24 @@ impl WireClient {
             writer: FrameWriter::new(),
             json: String::new(),
             next_id: 0,
+            deadline_ms: None,
         })
+    }
+
+    /// Attach (or clear) a relative deadline for all subsequent
+    /// requests. The daemon reads it on data verbs and ignores it
+    /// elsewhere, so the client can set it once and forget.
+    pub fn set_deadline_ms(&mut self, deadline_ms: Option<u64>) {
+        self.deadline_ms = deadline_ms;
     }
 
     fn begin(&mut self, verb: &str) -> u64 {
         self.next_id += 1;
         self.json.clear();
         let _ = write!(self.json, "{{\"id\":{},\"verb\":\"{verb}\"", self.next_id);
+        if let Some(ms) = self.deadline_ms {
+            let _ = write!(self.json, ",\"deadline_ms\":{ms}");
+        }
         self.next_id
     }
 
@@ -160,6 +191,15 @@ impl WireClient {
         Ok(id)
     }
 
+    /// Pipeline a `cancel` for a previously sent request on this
+    /// connection (best-effort — see the wire contract).
+    pub fn send_cancel(&mut self, target: u64) -> io::Result<u64> {
+        let id = self.begin("cancel");
+        let _ = write!(self.json, ",\"target\":{target}");
+        self.finish()?;
+        Ok(id)
+    }
+
     /// Send an arbitrary payload in a well-formed frame (negative-path
     /// tests: malformed JSON, bad verbs, ...).
     pub fn send_raw(&mut self, payload: &[u8]) -> io::Result<()> {
@@ -188,6 +228,10 @@ impl WireClient {
             ys: vec("ys"),
             snapshot: doc.get("snapshot").and_then(|v| v.as_str()).map(str::to_string),
             stats: doc.get("stats").cloned(),
+            cancelled: match doc.get("cancelled") {
+                Some(JsonValue::Bool(b)) => Some(*b),
+                _ => None,
+            },
             error: doc.get("error").and_then(|v| v.as_str()).map(str::to_string),
         })
     }
@@ -250,6 +294,13 @@ impl WireClient {
         let id = self.send_stats()?;
         self.expect_ok(id)?.stats.ok_or_else(|| anyhow!("stats reply carried no object"))
     }
+
+    /// Synchronous `cancel` round trip; returns whether the target was
+    /// still live when the cancel arrived.
+    pub fn call_cancel(&mut self, target: u64) -> Result<bool> {
+        let id = self.send_cancel(target)?;
+        self.expect_ok(id)?.cancelled.ok_or_else(|| anyhow!("cancel reply carried no flag"))
+    }
 }
 
 /// Load-generator shape.
@@ -274,6 +325,17 @@ pub struct LoadgenConfig {
     pub predict_every: usize,
     /// Seed for the per-connection input streams.
     pub seed: u64,
+    /// Relative deadline attached to every data request (None = no
+    /// deadlines — the classic closed-loop run).
+    pub deadline_ms: Option<u64>,
+    /// Cancel every `cancel_every`-th op right after sending it
+    /// (0 = never). Cancels are best-effort: the op may complete, get
+    /// a cancelled diagnostic, or have its reply suppressed.
+    pub cancel_every: usize,
+    /// Abruptly drop the connection after this many sends, abandoning
+    /// the pipelined window (None = run to completion). Each
+    /// connection's abandoned requests are reported as `lost_replies`.
+    pub kill_after: Option<usize>,
 }
 
 impl Default for LoadgenConfig {
@@ -286,18 +348,41 @@ impl Default for LoadgenConfig {
             window: 64,
             predict_every: 5,
             seed: 42,
+            deadline_ms: None,
+            cancel_every: 0,
+            kill_after: None,
         }
     }
 }
 
 /// Aggregate result of a load-generator run.
+///
+/// Counter disjointness: every *op* resolves into exactly one of
+/// `ok_replies`, `wire_errors`, `shed_replies` or `lost_replies`.
+/// Fences and cancel requests are instrumentation/control traffic and
+/// are excluded from all four (cancel acks land in `cancel_acks`).
 #[derive(Debug)]
 pub struct LoadgenReport {
     /// Replies received with `ok:true`.
     pub ok_replies: u64,
     /// Replies received with `ok:false` (rejections, failures).
     pub wire_errors: u64,
-    /// Requests that never got a reply (plus replies with unknown ids).
+    /// Of `wire_errors`: diagnostics naming an expired deadline
+    /// (pre-dispatch rejections).
+    pub deadline_errors: u64,
+    /// Of `wire_errors`: diagnostics naming a cancellation (the target
+    /// was still queued when its cancel landed).
+    pub cancel_errors: u64,
+    /// Requests whose replies were deliberately suppressed by the
+    /// daemon (post-admission deadline drops, in-flight cancels) —
+    /// detected by in-order gap, mirrors the server's
+    /// `suppressed_replies`.
+    pub shed_replies: u64,
+    /// `cancel` verbs acknowledged (`ok:true`), regardless of whether
+    /// the target was still live.
+    pub cancel_acks: u64,
+    /// Requests that never got a reply (connection died with them
+    /// outstanding, plus replies with unknown ids).
     pub lost_replies: u64,
     /// Wall-clock for the whole run.
     pub elapsed: Duration,
@@ -315,8 +400,45 @@ impl LoadgenReport {
 struct ConnOutcome {
     ok: u64,
     errs: u64,
+    deadline_errs: u64,
+    cancel_errs: u64,
+    shed: u64,
+    cancel_acks: u64,
     lost: u64,
     latency: LogHistogram,
+}
+
+impl ConnOutcome {
+    fn new() -> Self {
+        Self {
+            ok: 0,
+            errs: 0,
+            deadline_errs: 0,
+            cancel_errs: 0,
+            shed: 0,
+            cancel_acks: 0,
+            lost: 0,
+            latency: LogHistogram::new(),
+        }
+    }
+}
+
+/// What a tracked outstanding request is, for reply accounting.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SlotKind {
+    /// A workload op (train/predict row) — counted in the report.
+    Op,
+    /// A `cancel` request — control traffic, counted via `cancel_acks`.
+    Cancel,
+    /// A `stats` fence — instrumentation, not counted at all.
+    Fence,
+}
+
+/// One outstanding pipelined request, in send order.
+struct Slot {
+    id: u64,
+    at: Instant,
+    kind: SlotKind,
 }
 
 /// Drive `cfg.connections` concurrent closed-loop clients against the
@@ -337,6 +459,10 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenRepor
     let mut report = LoadgenReport {
         ok_replies: 0,
         wire_errors: 0,
+        deadline_errors: 0,
+        cancel_errors: 0,
+        shed_replies: 0,
+        cancel_acks: 0,
         lost_replies: 0,
         elapsed: t0.elapsed(),
         latency: LogHistogram::new(),
@@ -345,6 +471,10 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenRepor
         let o = outcome?;
         report.ok_replies += o.ok;
         report.wire_errors += o.errs;
+        report.deadline_errors += o.deadline_errs;
+        report.cancel_errors += o.cancel_errs;
+        report.shed_replies += o.shed;
+        report.cancel_acks += o.cancel_acks;
         report.lost_replies += o.lost;
         report.latency.merge(&o.latency);
     }
@@ -353,14 +483,26 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenRepor
 
 fn drive_connection(addr: SocketAddr, cfg: &LoadgenConfig, conn_index: usize) -> Result<ConnOutcome> {
     let mut client = WireClient::connect(addr)?;
+    client.set_deadline_ms(cfg.deadline_ms);
+    // suppression is only possible with deadlines or cancels in play;
+    // without them, recv() on a full window always returns (classic
+    // closed loop, no fences needed)
+    let may_suppress = cfg.deadline_ms.is_some() || cfg.cancel_every > 0;
     let mut rng = run_rng(cfg.seed, conn_index);
     let normal = Normal::standard();
-    let mut outstanding: HashMap<u64, Instant> = HashMap::new();
-    let mut out = ConnOutcome { ok: 0, errs: 0, lost: 0, latency: LogHistogram::new() };
+    let mut outstanding: VecDeque<Slot> = VecDeque::new();
+    let mut out = ConnOutcome::new();
     let mut x = vec![0.0; cfg.dim];
-    for op in 0..cfg.rows_per_connection {
+    let mut sends = 0usize;
+    let mut killed = false;
+    'ops: for op in 0..cfg.rows_per_connection {
         while outstanding.len() >= cfg.window {
+            plant_fence_if_needed(&mut client, &mut outstanding, may_suppress)?;
             recv_one(&mut client, &mut outstanding, &mut out)?;
+        }
+        if cfg.kill_after.is_some_and(|k| sends >= k) {
+            killed = true;
+            break 'ops;
         }
         let session = cfg.sessions[(conn_index + op) % cfg.sessions.len()];
         normal.fill(&mut rng, &mut x);
@@ -371,32 +513,99 @@ fn drive_connection(addr: SocketAddr, cfg: &LoadgenConfig, conn_index: usize) ->
             // the filters get a learnable nonlinearity
             client.send_train(session, &x, x[0].sin())?
         };
-        outstanding.insert(id, Instant::now());
+        outstanding.push_back(Slot { id, at: Instant::now(), kind: SlotKind::Op });
+        sends += 1;
+        if cfg.cancel_every > 0 && op % cfg.cancel_every == cfg.cancel_every - 1 {
+            let cid = client.send_cancel(id)?;
+            outstanding.push_back(Slot { id: cid, at: Instant::now(), kind: SlotKind::Cancel });
+            sends += 1;
+        }
+    }
+    if killed {
+        // abrupt mid-pipeline death: abandon the whole window — the
+        // daemon must account every one of these in its own ledger
+        out.lost += outstanding.iter().filter(|s| s.kind == SlotKind::Op).count() as u64;
+        return Ok(out);
+    }
+    // drain the tail; a final fence bounds the wait when the remaining
+    // replies could all be suppressed
+    if may_suppress && !outstanding.is_empty() {
+        let fid = client.send_stats()?;
+        outstanding.push_back(Slot { id: fid, at: Instant::now(), kind: SlotKind::Fence });
     }
     while !outstanding.is_empty() {
         if recv_one(&mut client, &mut outstanding, &mut out).is_err() {
             // connection died with replies outstanding: all lost
-            out.lost += outstanding.len() as u64;
+            out.lost += outstanding.iter().filter(|s| s.kind == SlotKind::Op).count() as u64;
             break;
         }
     }
     Ok(out)
 }
 
+/// Guarantee the next `recv` can return: if every outstanding request
+/// might be suppressed, plant a `stats` fence (deadline-exempt, always
+/// answered) unless one is already pending.
+fn plant_fence_if_needed(
+    client: &mut WireClient,
+    outstanding: &mut VecDeque<Slot>,
+    may_suppress: bool,
+) -> Result<()> {
+    if !may_suppress || outstanding.iter().any(|s| s.kind == SlotKind::Fence) {
+        return Ok(());
+    }
+    let fid = client.send_stats()?;
+    outstanding.push_back(Slot { id: fid, at: Instant::now(), kind: SlotKind::Fence });
+    Ok(())
+}
+
+/// Receive one reply and reconcile it against the ordered outstanding
+/// queue: anything older than the reply's id was suppressed by the
+/// daemon (replies are strictly in request order).
 fn recv_one(
     client: &mut WireClient,
-    outstanding: &mut HashMap<u64, Instant>,
+    outstanding: &mut VecDeque<Slot>,
     out: &mut ConnOutcome,
 ) -> Result<()> {
     let reply = client.recv()?;
-    match outstanding.remove(&reply.id) {
-        Some(sent_at) => out.latency.record(sent_at.elapsed().as_secs_f64().max(1e-9)),
-        None => out.lost += 1, // a reply we never asked for counts as an anomaly
+    let mut matched = None;
+    while let Some(front) = outstanding.front() {
+        if front.id == reply.id {
+            matched = outstanding.pop_front();
+            break;
+        }
+        // skipped over: this reply was suppressed (deadline drop or
+        // in-flight cancel) — the server counted it; so do we
+        if front.kind == SlotKind::Op {
+            out.shed += 1;
+        }
+        outstanding.pop_front();
     }
-    if reply.ok {
-        out.ok += 1;
-    } else {
-        out.errs += 1;
+    let Some(slot) = matched else {
+        out.lost += 1; // a reply we never asked for counts as an anomaly
+        return Ok(());
+    };
+    match slot.kind {
+        SlotKind::Op => {
+            out.latency.record(slot.at.elapsed().as_secs_f64().max(1e-9));
+            if reply.ok {
+                out.ok += 1;
+            } else {
+                out.errs += 1;
+                let msg = reply.error.as_deref().unwrap_or("");
+                if msg.contains("deadline") {
+                    out.deadline_errs += 1;
+                } else if msg.contains("cancelled") {
+                    out.cancel_errs += 1;
+                }
+            }
+        }
+        SlotKind::Cancel => {
+            if reply.ok {
+                out.cancel_acks += 1;
+            }
+        }
+        SlotKind::Fence => {}
     }
     Ok(())
 }

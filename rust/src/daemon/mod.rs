@@ -47,11 +47,42 @@
 //! | `snapshot` | `session` | `snapshot` (versioned JSON document) |
 //! | `restore` | `session`, `snapshot` | — (bare `ok`) |
 //! | `stats` | — | `stats` (service/latency/coalesce/daemon counters) |
+//! | `cancel` | `target` (request id on this connection) | `cancelled` (bool) |
 //!
 //! Every reply is `{"id":N,"ok":true,...}` or
 //! `{"id":N,"ok":false,"error":"..."}` (`id` 0 when the request's id
 //! was unparseable). Numbers are serialized shortest-roundtrip, so
 //! `f64` values survive the wire **bitwise** (non-finite → `null`).
+//!
+//! ## Deadlines and cancellation (best-effort, exactly-counted)
+//!
+//! Every *data* verb (`train`, `train_batch`, `train_diffusion`,
+//! `predict`, `predict_batch`) accepts an optional `deadline_ms` field:
+//! a **relative** time budget, converted to an absolute instant the
+//! moment the frame is parsed. A frame that is already expired at parse
+//! time is rejected before dispatch with an `ok:false` diagnostic
+//! (counted as `deadline_rejects`). Work that expires *after* admission
+//! — in the router queue, in a coalesced batch, or while running — is
+//! dropped at the next checkpoint and its reply **suppressed**: the
+//! daemon writes no frame for it (counted as `deadline_drops`). Because
+//! replies are in strict request order per connection, a pipelined
+//! client detects suppression by the gap when a later reply arrives;
+//! `stats` is deadline-exempt and always answered, so a `stats` fence
+//! bounds the wait (see `loadgen.rs`).
+//!
+//! `cancel` asks to abandon request `target` previously sent **on the
+//! same connection**. The contract is best-effort: a target still
+//! queued (or still buffered in the coalescer) is dropped with an
+//! `ok:false` diagnostic reply; a target already running completes but
+//! its reply is suppressed; a target already resolved (or unknown) is
+//! untouched. The `cancel` reply itself reports `cancelled:true` when
+//! the target was still live (its flag was raised), `false` otherwise.
+//! All cancel-induced resolutions are counted in the service's
+//! `cancelled` counter. Every frame read resolves exactly one way, so
+//! at quiescence `frames_in == frames_out + suppressed_replies +
+//! dropped_frames` (answered / deliberately unanswered / undeliverable
+//! because the peer vanished) — the chaos suite (`tests/chaos.rs`) pins
+//! the exact ledger.
 //!
 //! ## Coalescing (the perf core)
 //!
@@ -74,6 +105,9 @@
 
 pub mod framing;
 pub mod loadgen;
+
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod fault;
 
 mod coalesce;
 mod conn;
@@ -146,6 +180,16 @@ pub struct DaemonStats {
     /// Unparseable frames (bad UTF-8/JSON, unknown verb, bad fields)
     /// and oversized length prefixes.
     pub protocol_errors: AtomicU64,
+    /// Replies deliberately *not* written: the request resolved as a
+    /// deadline drop or an in-flight cancellation, and per the wire
+    /// contract its frame is suppressed. One per suppressed request.
+    pub suppressed_replies: AtomicU64,
+    /// Replies that existed but could not be delivered because the
+    /// connection was already gone (peer died mid-pipeline). The writer
+    /// drains its channel to count these exactly — together with
+    /// `frames_out` and `suppressed_replies` they conserve `frames_in`
+    /// at quiescence.
+    pub dropped_frames: AtomicU64,
 }
 
 /// A running TCP front door over a [`CoordinatorService`].

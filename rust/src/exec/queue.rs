@@ -89,6 +89,48 @@ impl<T> BoundedQueue<T> {
         Ok(true)
     }
 
+    /// Non-blocking push that hands the item back when full instead of
+    /// dropping it — `Ok(None)` = accepted, `Ok(Some(item))` = at
+    /// capacity, try again (e.g. after shedding dead entries).
+    pub fn try_push_or_return(&self, item: T) -> Result<Option<T>, QueueClosed> {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if g.closed {
+            return Err(QueueClosed);
+        }
+        if g.buf.len() >= self.capacity {
+            return Ok(Some(item));
+        }
+        g.buf.push_back(item);
+        self.not_empty.notify_one();
+        Ok(None)
+    }
+
+    /// Extract every queued item matching `pred`, preserving the
+    /// relative order of what remains — the saturation valve: a full
+    /// queue sheds expired/cancelled requests first so live work is
+    /// rejected only when everything queued still matters. Returns the
+    /// shed items (the caller owns resolving them); wakes blocked
+    /// producers when anything was freed. Works on a closed queue too
+    /// (consumers drain post-close, so sheddable entries remain
+    /// reachable).
+    pub fn shed(&self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut kept = VecDeque::with_capacity(g.buf.len());
+        let mut shed = Vec::new();
+        for item in g.buf.drain(..) {
+            if pred(&item) {
+                shed.push(item);
+            } else {
+                kept.push_back(item);
+            }
+        }
+        g.buf = kept;
+        if !shed.is_empty() {
+            self.not_full.notify_all();
+        }
+        shed
+    }
+
     /// Blocking pop; drains pending items after close, then errs.
     pub fn pop(&self) -> Result<T, QueueClosed> {
         let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -250,6 +292,21 @@ mod tests {
         // whether the gatherer was still in first-wait or mid-gather, the
         // closed+empty queue must surface as an error, not an empty batch
         assert_eq!(gatherer.join().unwrap(), Err(QueueClosed));
+    }
+
+    #[test]
+    fn shed_extracts_matching_preserving_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..8 {
+            q.push(i).unwrap();
+        }
+        assert!(matches!(q.try_push_or_return(99).unwrap(), Some(99)));
+        let shed = q.shed(|v| v % 2 == 0);
+        assert_eq!(shed, vec![0, 2, 4, 6]);
+        assert!(q.try_push_or_return(99).unwrap().is_none());
+        // survivors keep their relative order, new item appended last
+        let drained = q.pop_batch(8, Duration::from_millis(10)).unwrap();
+        assert_eq!(drained, vec![1, 3, 5, 7, 99]);
     }
 
     #[test]

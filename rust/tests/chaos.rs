@@ -1,0 +1,394 @@
+//! Chaos suite: deterministic fault schedules through the whole
+//! wire → coalescer → router stack, asserting **conservation laws**
+//! rather than timing-dependent rates.
+//!
+//! Run with `cargo test --test chaos --features fault-injection`
+//! (without the feature the whole file compiles to nothing — the
+//! injection hooks it drives don't exist in normal builds).
+//!
+//! Each scenario draws its schedule from a seeded
+//! [`FaultPlan`](rff_kaf::daemon::fault::FaultPlan): four concurrent
+//! connections, one fault class each (clean / tight deadlines / cancel
+//! storm / abrupt kill — disjoint by construction so every counter is
+//! attributable to exactly one class), 16 sessions partitioned four per
+//! connection, and every router worker stalled by the plan's chosen
+//! amount so deadlines actually expire under loopback latencies.
+//!
+//! The laws, checked at quiescence for every seed:
+//!
+//! - every op resolves exactly once client-side:
+//!   `ok + errors + shed + lost == sent` per connection;
+//! - the daemon's reply ledger balances:
+//!   `frames_in == frames_out + suppressed_replies + dropped_frames`;
+//! - suppression is exactly mirrored:
+//!   `suppressed_replies == shed(deadline) + shed(cancel)`,
+//!   `deadline_rejects == deadline diagnostics`,
+//!   `deadline_drops == deadline sheds`,
+//!   `cancelled == cancel diagnostics + cancel sheds`;
+//! - no row is lost or duplicated:
+//!   `Σ samples_seen == service.trained`, with the clean connection's
+//!   per-session counts exact;
+//! - nothing leaks on any reply path (`dropped_responses == 0`,
+//!   coalescer `dropped_replies == 0`).
+
+#![cfg(feature = "fault-injection")]
+
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rff_kaf::coordinator::{CoordinatorService, ServiceConfig, SessionConfig};
+use rff_kaf::daemon::fault::{
+    write_frame_corrupted, write_frame_delayed, write_frame_truncated, ConnFault, FaultPlan,
+    FaultRng,
+};
+use rff_kaf::daemon::framing::{FrameReader, DEFAULT_MAX_FRAME};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, LoadgenReport, WireClient};
+use rff_kaf::daemon::{Daemon, DaemonConfig, DaemonStats};
+
+const CONNS: usize = 4;
+const SESSIONS_PER_CONN: usize = 4;
+const ROWS: usize = 256;
+/// The clean connection's predict cadence — deliberately coprime with
+/// its session count so every clean session receives trains.
+const CLEAN_PREDICT_EVERY: usize = 5;
+
+/// Block until the daemon's reply ledger balances:
+/// `frames_in == frames_out + suppressed_replies + dropped_frames` —
+/// i.e. every admitted frame has resolved exactly one way. Counters are
+/// read directly (not over the wire), so there is no probe off-by-one.
+fn quiesce(stats: &DaemonStats) {
+    let give_up = Instant::now() + Duration::from_secs(20);
+    loop {
+        let fin = stats.frames_in.load(Ordering::Relaxed);
+        let fout = stats.frames_out.load(Ordering::Relaxed);
+        let supp = stats.suppressed_replies.load(Ordering::Relaxed);
+        let dropped = stats.dropped_frames.load(Ordering::Relaxed);
+        if fin == fout + supp + dropped {
+            return;
+        }
+        assert!(
+            Instant::now() < give_up,
+            "frame ledger never balanced: in={fin} out={fout} suppressed={supp} dropped={dropped}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Per-class outcome of one chaos run, paired with its parameters.
+struct ClassReports {
+    clean: LoadgenReport,
+    deadline: LoadgenReport,
+    cancel: LoadgenReport,
+    cancel_cadence: usize,
+    kill: LoadgenReport,
+    kill_after: usize,
+}
+
+/// Run one seeded 4-connection chaos schedule against a fresh stack and
+/// assert every conservation law. Everything that can vary with timing
+/// is asserted as a law or a bound, never as a rate.
+fn run_chaos_schedule(seed: u64) {
+    let plan = FaultPlan::new(seed);
+    let faults = plan.connection_faults(CONNS, ROWS);
+
+    let svc = Arc::new(CoordinatorService::start(
+        ServiceConfig {
+            workers: 2,
+            first_wait: Duration::from_millis(5),
+            // the plan's router stall makes deadline expiry and
+            // in-queue cancellation actually reachable on loopback
+            fault_stall: Some(plan.router_stall()),
+            ..ServiceConfig::default()
+        },
+        None,
+    ));
+    let ids: Vec<u64> = (0..CONNS * SESSIONS_PER_CONN)
+        .map(|_| {
+            let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+            svc.add_session_from_spec(cfg, 7).unwrap()
+        })
+        .collect();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let addr = daemon.local_addr();
+    let dim = SessionConfig::paper_default().dim;
+
+    // one single-connection loadgen per fault class, concurrently; each
+    // class owns a disjoint 4-session slice so row accounting stays
+    // attributable
+    let mut clean = None;
+    let mut deadline = None;
+    let mut cancel = None;
+    let mut cancel_cadence = 0;
+    let mut kill = None;
+    let mut kill_after = 0;
+    let outcomes: Vec<(usize, LoadgenReport)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = faults
+            .iter()
+            .enumerate()
+            .map(|(i, fault)| {
+                let sessions =
+                    ids[i * SESSIONS_PER_CONN..(i + 1) * SESSIONS_PER_CONN].to_vec();
+                let mut cfg = LoadgenConfig {
+                    connections: 1,
+                    sessions,
+                    rows_per_connection: ROWS,
+                    dim,
+                    window: 32,
+                    predict_every: 0, // trains only: exact row laws below
+                    seed: seed.wrapping_add(i as u64),
+                    ..LoadgenConfig::default()
+                };
+                match fault {
+                    ConnFault::Clean => cfg.predict_every = CLEAN_PREDICT_EVERY,
+                    ConnFault::Deadline { deadline_ms } => cfg.deadline_ms = Some(*deadline_ms),
+                    ConnFault::Cancel { every } => cfg.cancel_every = *every,
+                    ConnFault::Kill { after_ops } => cfg.kill_after = Some(*after_ops),
+                    ConnFault::Corrupt => unreachable!("not drawn by connection_faults"),
+                }
+                scope.spawn(move || (i, run_loadgen(addr, &cfg).unwrap()))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, report) in outcomes {
+        match &faults[i] {
+            ConnFault::Clean => clean = Some(report),
+            ConnFault::Deadline { .. } => deadline = Some(report),
+            ConnFault::Cancel { every } => {
+                cancel_cadence = *every;
+                cancel = Some(report);
+            }
+            ConnFault::Kill { after_ops } => {
+                kill_after = *after_ops;
+                kill = Some(report);
+            }
+            ConnFault::Corrupt => unreachable!(),
+        }
+    }
+    let r = ClassReports {
+        clean: clean.expect("plan covers Clean"),
+        deadline: deadline.expect("plan covers Deadline"),
+        cancel: cancel.expect("plan covers Cancel"),
+        cancel_cadence,
+        kill: kill.expect("plan covers Kill"),
+        kill_after,
+    };
+
+    // every in-flight request must resolve: the ledger balances once
+    // the stack has drained the schedule's aftermath
+    quiesce(daemon.stats());
+    assert_laws(seed, &svc, &daemon, &faults, &r);
+    daemon.shutdown();
+    let clean_idx = faults.iter().position(|f| matches!(f, ConnFault::Clean)).unwrap();
+    assert_rows_conserved(seed, &svc, &ids, clean_idx, &r);
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}
+
+fn assert_laws(
+    seed: u64,
+    svc: &CoordinatorService,
+    daemon: &Daemon,
+    faults: &[ConnFault],
+    r: &ClassReports,
+) {
+    let ctx = format!("seed {seed}, faults {faults:?}");
+
+    // client-side: every op resolved exactly once, per class
+    let c = &r.clean;
+    assert_eq!(c.ok_replies, ROWS as u64, "clean class must be untouched: {ctx}\n{c:?}");
+    assert_eq!(c.wire_errors + c.shed_replies + c.lost_replies, 0, "{ctx}\n{c:?}");
+
+    let d = &r.deadline;
+    assert_eq!(d.lost_replies, 0, "{ctx}\n{d:?}");
+    assert_eq!(d.ok_replies + d.wire_errors + d.shed_replies, ROWS as u64, "{ctx}\n{d:?}");
+    assert_eq!(d.wire_errors, d.deadline_errors, "only deadline diagnostics: {ctx}\n{d:?}");
+
+    let k = &r.cancel;
+    assert_eq!(k.lost_replies, 0, "{ctx}\n{k:?}");
+    assert_eq!(k.ok_replies + k.wire_errors + k.shed_replies, ROWS as u64, "{ctx}\n{k:?}");
+    assert_eq!(k.wire_errors, k.cancel_errors, "only cancel diagnostics: {ctx}\n{k:?}");
+    assert_eq!(k.cancel_acks, (ROWS / r.cancel_cadence) as u64, "every cancel acked: {ctx}");
+
+    let x = &r.kill;
+    assert_eq!(
+        x.ok_replies + x.lost_replies,
+        r.kill_after as u64,
+        "killed class: received + abandoned == sent: {ctx}\n{x:?}"
+    );
+    assert_eq!(x.wire_errors + x.shed_replies, 0, "{ctx}\n{x:?}");
+
+    // server-side counters mirror the client-observed outcomes exactly
+    // (classes are disjoint by connection, so attribution is 1:1)
+    let s = svc.stats();
+    let load = |v: &std::sync::atomic::AtomicU64| v.load(Ordering::Relaxed);
+    assert_eq!(load(&s.deadline_rejects), d.deadline_errors, "{ctx}");
+    assert_eq!(load(&s.deadline_drops), d.shed_replies, "{ctx}");
+    assert_eq!(load(&s.cancelled), k.cancel_errors + k.shed_replies, "{ctx}");
+    let ds = daemon.stats();
+    assert_eq!(
+        load(&ds.suppressed_replies),
+        d.shed_replies + k.shed_replies,
+        "every suppressed reply is one client-side shed: {ctx}"
+    );
+    // nothing leaked on any reply path
+    assert_eq!(load(&s.dropped_responses), 0, "{ctx}");
+    assert_eq!(load(&daemon.coalesce_stats().dropped_replies), 0, "{ctx}");
+}
+
+/// Row conservation, checked after daemon shutdown (all work flushed):
+/// no row lost, no row duplicated, clean rows exact per session.
+fn assert_rows_conserved(
+    seed: u64,
+    svc: &CoordinatorService,
+    ids: &[u64],
+    clean_idx: usize,
+    r: &ClassReports,
+) {
+    let ctx = format!("seed {seed}");
+    let trained = svc.stats().trained.load(Ordering::Relaxed);
+
+    // bounds, not rates: a shed deadline/cancel row may or may not have
+    // executed (post-run suppression trains, eviction doesn't), and the
+    // kill class's last sends race the peer reset — but each class is
+    // bracketed exactly by what its client observed.
+    let clean_trains =
+        (0..ROWS).filter(|op| op % CLEAN_PREDICT_EVERY != 0).count() as u64;
+    let lo = clean_trains
+        + r.deadline.ok_replies
+        + r.cancel.ok_replies
+        + r.cancel.shed_replies
+        + r.kill.ok_replies;
+    let hi = clean_trains
+        + r.deadline.ok_replies
+        + r.deadline.shed_replies
+        + r.cancel.ok_replies
+        + r.cancel.shed_replies
+        + r.kill_after as u64;
+    assert!(
+        (lo..=hi).contains(&trained),
+        "trained {trained} outside [{lo}, {hi}]: {ctx}\n{:?}\n{:?}\n{:?}",
+        r.deadline,
+        r.cancel,
+        r.kill
+    );
+
+    // Σ samples_seen == trained: zero lost, zero duplicated rows
+    let mut total = 0usize;
+    let mut seen = Vec::with_capacity(ids.len());
+    for &sid in ids {
+        let n = svc.remove_session(sid).unwrap().samples_seen();
+        total += n;
+        seen.push(n);
+    }
+    assert_eq!(total as u64, trained, "rows lost or duplicated: {ctx}\nper-session {seen:?}");
+
+    // the clean connection's per-session counts are exact: its op o
+    // trains session o % 4 of its own slice whenever o is not a predict
+    for j in 0..SESSIONS_PER_CONN {
+        let expected = (0..ROWS)
+            .filter(|op| op % CLEAN_PREDICT_EVERY != 0 && op % SESSIONS_PER_CONN == j)
+            .count();
+        assert_eq!(
+            seen[clean_idx * SESSIONS_PER_CONN + j],
+            expected,
+            "clean session {j} row count: {ctx}\n{seen:?}"
+        );
+    }
+}
+
+#[test]
+fn chaos_schedules_conserve_every_row_and_every_reply() {
+    for seed in [3u64, 14, 27] {
+        run_chaos_schedule(seed);
+    }
+}
+
+/// The Corrupt fault class, driven directly: a corrupted payload byte
+/// fails only that request (invalid UTF-8 → diagnostic reply, framing
+/// stays synced), a truncated frame fails only that connection, and a
+/// slow trickling writer is a latency fault, not a protocol fault. The
+/// daemon survives all three with its ledger intact.
+#[test]
+fn corrupt_truncated_and_delayed_frames_fail_no_wider_than_their_frame() {
+    let svc = Arc::new(CoordinatorService::start(
+        ServiceConfig { first_wait: Duration::from_millis(5), ..ServiceConfig::default() },
+        None,
+    ));
+    let sid = svc
+        .add_session_from_spec(
+            SessionConfig { features: 16, ..SessionConfig::paper_default() },
+            7,
+        )
+        .unwrap();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let addr = daemon.local_addr();
+    let payload =
+        format!(r#"{{"id":7,"verb":"train","session":{sid},"x":[0.1,0.2,0.3,0.4,0.5],"y":0.25}}"#);
+
+    let mut survived_trains = 0u64;
+    for seed in [5u64, 21, 77] {
+        let mut rng = FaultRng::new(seed);
+
+        // corrupted byte (^0x80 makes the UTF-8 invalid wherever it
+        // lands): diagnostic reply, connection keeps serving
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut fr = FrameReader::new();
+        write_frame_corrupted(
+            &mut (&stream),
+            payload.as_bytes(),
+            rng.below(payload.len() as u64) as usize,
+        )
+        .unwrap();
+        let frame = fr.read_frame(&mut (&stream), DEFAULT_MAX_FRAME).unwrap().unwrap();
+        let text = std::str::from_utf8(frame).unwrap();
+        assert!(text.contains("\"ok\":false"), "corrupt frame must fail: {text}");
+
+        // same connection, now trickling a *valid* frame byte-split
+        // around a pause: parsed and served normally
+        write_frame_delayed(&mut (&stream), payload.as_bytes(), Duration::from_millis(20))
+            .unwrap();
+        let frame = fr.read_frame(&mut (&stream), DEFAULT_MAX_FRAME).unwrap().unwrap();
+        let text = std::str::from_utf8(frame).unwrap();
+        assert!(text.contains("\"ok\":true"), "delayed valid frame must serve: {text}");
+        survived_trains += 1;
+        drop(stream);
+
+        // truncated body on a fresh connection: the daemon reads a
+        // partial frame then EOF — that connection dies quietly, with
+        // no reply and no protocol damage
+        let stream = TcpStream::connect(addr).unwrap();
+        write_frame_truncated(
+            &mut (&stream),
+            payload.as_bytes(),
+            rng.below(payload.len() as u64 - 1) as usize,
+        )
+        .unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut fr = FrameReader::new();
+        assert!(
+            matches!(fr.read_frame(&mut (&stream), DEFAULT_MAX_FRAME), Ok(None) | Err(_)),
+            "truncated frame must never be answered"
+        );
+    }
+
+    // the daemon is unharmed: counters add up and fresh work serves
+    quiesce(daemon.stats());
+    let proto = daemon.stats().protocol_errors.load(Ordering::Relaxed);
+    assert_eq!(proto, 3, "one protocol error per corrupted frame");
+    let mut fresh = WireClient::connect(addr).unwrap();
+    assert_eq!(fresh.call_train(sid, &[0.1, 0.2, 0.3, 0.4, 0.5], 0.5).unwrap().len(), 1);
+    drop(fresh);
+    daemon.shutdown();
+    assert_eq!(
+        svc.remove_session(sid).unwrap().samples_seen(),
+        survived_trains as usize + 1,
+        "exactly the valid frames trained"
+    );
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}

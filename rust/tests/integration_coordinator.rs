@@ -5,7 +5,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use rff_kaf::coordinator::{
-    Algo, Backend, CoordinatorService, FilterSession, Request, Response, ServiceConfig,
+    Algo, Backend, CoordinatorService, FilterSession, Request, RequestContext, Response, ServiceConfig,
     SessionConfig,
 };
 use rff_kaf::kaf::kernels::Kernel;
@@ -105,7 +105,12 @@ fn batched_predicts_match_native_predicts() {
     let probes = src.take_samples(64);
     let (tx, rx) = std::sync::mpsc::channel();
     for p in &probes {
-        svc.submit(Request::Predict { session: sid, x: p.x.clone(), resp: tx.clone() })
+        svc.submit(Request::Predict {
+            session: sid,
+            x: p.x.clone(),
+            resp: tx.clone(),
+            ctx: RequestContext::default(),
+        })
             .unwrap();
     }
     drop(tx);

@@ -133,6 +133,7 @@ fn mixed_loadgen_traffic_is_lossless_and_exact() {
         window: 32,
         predict_every: PREDICT_EVERY,
         seed: 9,
+        ..LoadgenConfig::default()
     };
     let report = run_loadgen(daemon.local_addr(), &cfg).unwrap();
     assert_eq!(report.lost_replies, 0, "every request must get exactly one reply");
@@ -399,6 +400,181 @@ fn coalescing_disabled_daemon_matches_sync_paths() {
     stop_service(svc);
 }
 
+/// Poll `stats` until the daemon's reply ledger balances:
+/// `frames_in == frames_out + suppressed_replies + dropped_frames + 1`.
+/// The `+1` is the polling stats request itself — counted into
+/// `frames_in` before its own reply is written (same off-by-one the
+/// stats test above pins). Balancing means every admitted frame has
+/// been resolved exactly once: written, suppressed, or dropped.
+fn quiesce_frame_ledger(probe: &mut WireClient) {
+    let give_up = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = probe.call_stats().unwrap();
+        let num = |key: &str| {
+            stats
+                .get("daemon")
+                .and_then(|d| d.get(key))
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("stats missing daemon.{key}"))
+        };
+        let (fin, fout) = (num("frames_in"), num("frames_out"));
+        let (supp, dropped) = (num("suppressed_replies"), num("dropped_frames"));
+        if fin == fout + supp + dropped + 1.0 {
+            return;
+        }
+        assert!(
+            Instant::now() < give_up,
+            "frame ledger never balanced: in={fin} out={fout} suppressed={supp} dropped={dropped}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// ISSUE satellite: a client that dies abruptly mid-pipeline (deep
+/// window, nothing ever received) must leave the daemon fully
+/// accounted — every abandoned request resolved into the frame ledger,
+/// every row still trained, and the router serving fresh connections.
+#[test]
+fn abrupt_client_death_mid_pipeline_is_fully_accounted() {
+    const CONNS: usize = 4;
+    const KILL_AFTER: usize = 50;
+    const SESSIONS: usize = 8;
+    let svc = start_service();
+    let ids: Vec<u64> =
+        (0..SESSIONS).map(|_| svc.add_session_from_spec(session_cfg(16), 7).unwrap()).collect();
+    // coalescer parks rows for 300 ms — far longer than the bursts
+    // take — so no reply reaches a client before it dies. The doomed
+    // connections then close with empty receive queues (clean FIN, no
+    // RST racing the reader), making the frame counts exact: the
+    // daemon reads every sent frame, then writes every reply into a
+    // dead socket.
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            max_in_flight: 1024,
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 1000,
+                flush_wait: Duration::from_millis(300),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+
+    // window (64) deeper than kill point (50): each connection fires
+    // its whole burst without reading a single reply, then vanishes
+    let report = run_loadgen(
+        daemon.local_addr(),
+        &LoadgenConfig {
+            connections: CONNS,
+            sessions: ids.clone(),
+            rows_per_connection: 200,
+            dim: 5,
+            window: 64,
+            predict_every: 0, // trains only: exact per-session accounting
+            seed: 5,
+            kill_after: Some(KILL_AFTER),
+            ..LoadgenConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.lost_replies, (CONNS * KILL_AFTER) as u64, "{report:?}");
+    assert_eq!(report.ok_replies, 0, "killed connections never read replies");
+
+    // the daemon resolves every abandoned request (written into a dead
+    // socket buffer or counted as dropped — never leaked)
+    let mut probe = WireClient::connect(daemon.local_addr()).unwrap();
+    quiesce_frame_ledger(&mut probe);
+
+    // no router stall: the fresh connection is served immediately
+    assert_eq!(probe.call_train(ids[0], &[0.1, 0.2, 0.3, 0.4, 0.5], 0.2).unwrap().len(), 1);
+    drop(probe);
+    daemon.shutdown();
+
+    // abandonment dropped replies, never work: every sent row trained
+    let mut expected = vec![0usize; SESSIONS];
+    for conn in 0..CONNS {
+        for op in 0..KILL_AFTER {
+            expected[(conn + op) % SESSIONS] += 1;
+        }
+    }
+    expected[0] += 1; // the probe's train
+    assert_eq!(
+        svc.stats().trained.load(Ordering::Relaxed),
+        (CONNS * KILL_AFTER + 1) as u64
+    );
+    for (i, &sid) in ids.iter().enumerate() {
+        assert_eq!(svc.remove_session(sid).unwrap().samples_seen(), expected[i], "session {sid}");
+    }
+    stop_service(svc);
+}
+
+/// Deadline and cancel verbs, deterministic single-connection paths:
+/// an already-expired deadline is rejected before dispatch with a
+/// named diagnostic; a queued row cancelled before its batch
+/// dispatches is evicted with a diagnostic and the cancel
+/// acknowledged; cancelling an unknown id acks `cancelled:false`.
+#[test]
+fn deadline_and_cancel_verbs_over_the_wire() {
+    let svc = start_service();
+    let sid = svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    // coalescer parks rows for 1 s: a queued row is reliably still
+    // buffered when its cancel lands
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 100,
+                flush_wait: Duration::from_secs(1),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+    let x = [0.1, 0.2, 0.3, 0.4, 0.5];
+
+    // deadline_ms:0 has expired by dispatch time → pre-dispatch reject
+    client.set_deadline_ms(Some(0));
+    let id = client.send_train(sid, &x, 0.5).unwrap();
+    let reply = client.recv().unwrap();
+    assert_eq!(reply.id, id);
+    assert!(!reply.ok);
+    assert!(reply.error.as_deref().unwrap_or("").contains("deadline"), "{reply:?}");
+    client.set_deadline_ms(None);
+
+    // cancel a queued train: replies arrive in request order — first
+    // the evicted row's diagnostic (at flush), then the cancel ack
+    let tid = client.send_train(sid, &x, 0.5).unwrap();
+    let cid = client.send_cancel(tid).unwrap();
+    let row = client.recv().unwrap();
+    assert_eq!(row.id, tid);
+    assert!(!row.ok);
+    assert!(row.error.as_deref().unwrap_or("").contains("cancelled"), "{row:?}");
+    let ack = client.recv().unwrap();
+    assert!(ack.ok && ack.id == cid, "{ack:?}");
+    assert_eq!(ack.cancelled, Some(true), "target was live when the cancel arrived");
+
+    // cancelling a resolved/unknown id is a no-op ack
+    assert!(!client.call_cancel(123_456).unwrap());
+
+    // counters: one pre-dispatch reject, one queued-cancel resolution,
+    // and the cancelled row never trained
+    let stats = client.call_stats().unwrap();
+    let num = |section: &str, key: &str| {
+        stats.get(section).and_then(|s| s.get(key)).and_then(|v| v.as_f64()).unwrap()
+    };
+    assert_eq!(num("service", "deadline_rejects"), 1.0);
+    assert_eq!(num("service", "cancelled"), 1.0);
+    assert_eq!(num("service", "deadline_drops"), 0.0);
+    drop(client);
+    daemon.shutdown();
+    assert_eq!(svc.remove_session(sid).unwrap().samples_seen(), 0);
+    stop_service(svc);
+}
+
 /// Issue timing note: wire latency histograms must be monotone in load
 /// only in count, not compared across runs — this just pins that the
 /// loadgen measures *something* sane end-to-end.
@@ -418,6 +594,7 @@ fn loadgen_latency_histogram_is_sane() {
             window: 16,
             predict_every: 5,
             seed: 1,
+            ..LoadgenConfig::default()
         },
     )
     .unwrap();
