@@ -14,6 +14,9 @@
 //! # robustness knobs: per-request deadlines, cancel storms, abrupt death:
 //! cargo run --release --example wire_loadgen -- --deadline-ms 2 --cancel-rate 16
 //! cargo run --release --example wire_loadgen -- --kill-after 500
+//! # wire encodings: binary fast path, or train_stream chunking:
+//! cargo run --release --example wire_loadgen -- --binary
+//! cargo run --release --example wire_loadgen -- --stream --chunk 32
 //! ```
 //!
 //! The run recorded in EXPERIMENTS.md §Wire used `benches/wire.rs`
@@ -24,7 +27,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use rff_kaf::coordinator::{CoordinatorService, ServiceConfig, SessionConfig};
-use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, WireClient};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, WireClient, WireProtocol};
 use rff_kaf::daemon::{CoalesceConfig, Daemon, DaemonConfig};
 use rff_kaf::exec::default_parallelism;
 use rff_kaf::util::{Args, JsonValue};
@@ -44,6 +47,14 @@ fn main() {
     let deadline_ms: Option<u64> = args.get("deadline-ms").and_then(|s| s.parse().ok());
     let cancel_every: usize = args.get_or("cancel-rate", 0);
     let kill_after: Option<usize> = args.get("kill-after").and_then(|s| s.parse().ok());
+    // Wire encoding (ISSUE: binary fast path / streaming train verb).
+    let protocol = if args.flag("stream") {
+        WireProtocol::Stream { chunk: args.get_or("chunk", 32) }
+    } else if args.flag("binary") {
+        WireProtocol::Binary
+    } else {
+        WireProtocol::Json
+    };
 
     let svc = Arc::new(CoordinatorService::start(
         ServiceConfig {
@@ -73,9 +84,14 @@ fn main() {
     )
     .expect("daemon start");
     let addr = daemon.local_addr();
+    let proto_name = match protocol {
+        WireProtocol::Json => "json".to_string(),
+        WireProtocol::Binary => "binary".to_string(),
+        WireProtocol::Stream { chunk } => format!("stream(chunk={chunk})"),
+    };
     println!(
         "daemon on {addr}: {connections} connections x {rows} rows, {sessions} sessions, \
-         D={features}, coalesce={} (max_batch={max_batch}, flush={flush_us}us)",
+         D={features}, proto={proto_name}, coalesce={} (max_batch={max_batch}, flush={flush_us}us)",
         if coalesce_on { "on" } else { "off" },
     );
 
@@ -92,12 +108,14 @@ fn main() {
             deadline_ms,
             cancel_every,
             kill_after,
+            protocol,
         },
     )
     .expect("loadgen run");
 
     println!("\n── client side ─────────────────────────────────────────");
     println!("  ok replies    : {}", report.ok_replies);
+    println!("  ok rows       : {}", report.ok_rows);
     println!("  rejections    : {}", report.wire_errors);
     println!("  deadline errs : {}", report.deadline_errors);
     println!("  cancel errs   : {}", report.cancel_errors);

@@ -11,6 +11,13 @@
 //! run asserts zero lost replies and zero rejections — the numbers are
 //! only comparable when nothing was dropped.
 //!
+//! A **protocol comparison** leg then re-runs a trains-only workload
+//! at {1, 8} connections under each wire encoding — JSON, the binary
+//! fast path, and `train_stream` chunking — against fresh stacks with
+//! coalescing on. Rows/s across the three is the headline number for
+//! EXPERIMENTS.md §Wire's protocol table (`ok_rows` is the shared
+//! numerator, so a stream chunk counts all its rows).
+//!
 //! A final robustness point re-runs the largest coalesced
 //! configuration with a tight per-request deadline and records the
 //! deadline-hit and shed rates (EXPERIMENTS.md §Robustness): how much
@@ -28,7 +35,7 @@ use std::time::Duration;
 
 use rff_kaf::bench::Bencher;
 use rff_kaf::coordinator::{CoordinatorService, ServiceConfig, SessionConfig};
-use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, WireProtocol};
 use rff_kaf::daemon::{CoalesceConfig, Daemon, DaemonConfig};
 use rff_kaf::exec::default_parallelism;
 use rff_kaf::util::{Args, JsonValue};
@@ -44,6 +51,7 @@ fn main() {
         if quick { (400usize, 8usize, 32usize, 32usize) } else { (2000, 16, 128, 64) };
     let workers = default_parallelism().min(8);
 
+    b.set_meta("profile", JsonValue::String(if quick { "quick" } else { "full" }.to_string()));
     b.set_meta("rows_per_connection", JsonValue::Number(rows_per_conn as f64));
     b.set_meta("sessions", JsonValue::Number(n_sessions as f64));
     b.set_meta("features", JsonValue::Number(features as f64));
@@ -113,6 +121,82 @@ fn main() {
             b.set_meta(&format!("{label}_rows_per_sec"), JsonValue::Number(report.rows_per_sec()));
             println!(
                 "  conns={conns:2} coalesce={mode:3}: {:9.0} rows/s  p50={:7.1}us p99={:7.1}us",
+                report.rows_per_sec(),
+                report.latency.quantile(0.5) * 1e6,
+                report.latency.quantile(0.99) * 1e6,
+            );
+
+            daemon.shutdown();
+            if let Ok(s) = Arc::try_unwrap(svc) {
+                s.shutdown();
+            }
+        }
+    }
+
+    // ── protocol comparison: the same trains-only trajectories over
+    // JSON, the binary fast path, and train_stream chunks (ISSUE:
+    // take JSON out of the per-row hot loop) ─────────────────────────
+    let stream_chunk = 32usize;
+    b.set_meta("stream_chunk", JsonValue::Number(stream_chunk as f64));
+    let protocols: [(&str, WireProtocol); 3] = [
+        ("json", WireProtocol::Json),
+        ("binary", WireProtocol::Binary),
+        ("stream", WireProtocol::Stream { chunk: stream_chunk }),
+    ];
+    for &(proto_name, protocol) in &protocols {
+        for conns in [1usize, 8] {
+            let svc = Arc::new(CoordinatorService::start(
+                ServiceConfig {
+                    workers,
+                    queue_capacity: 4096,
+                    first_wait: Duration::from_millis(5),
+                    ..ServiceConfig::default()
+                },
+                None,
+            ));
+            let ids: Vec<u64> = (0..n_sessions)
+                .map(|_| {
+                    let cfg = SessionConfig { features, ..SessionConfig::paper_default() };
+                    svc.add_session_from_spec(cfg, 7).expect("session spec")
+                })
+                .collect();
+            let daemon = Daemon::start(
+                Arc::clone(&svc),
+                DaemonConfig { max_connections: conns, ..DaemonConfig::default() },
+            )
+            .expect("daemon start");
+
+            let report = run_loadgen(
+                daemon.local_addr(),
+                &LoadgenConfig {
+                    connections: conns,
+                    sessions: ids,
+                    rows_per_connection: rows_per_conn,
+                    dim: SessionConfig::paper_default().dim,
+                    window,
+                    predict_every: 0, // trains only: the per-row hot loop
+                    seed: 42,
+                    protocol,
+                    ..LoadgenConfig::default()
+                },
+            )
+            .expect("protocol loadgen run");
+            assert_eq!(report.lost_replies, 0, "lost replies at proto={proto_name}");
+            assert_eq!(report.wire_errors, 0, "rejections at proto={proto_name}");
+            assert_eq!(
+                report.ok_rows,
+                (conns * rows_per_conn) as u64,
+                "row ledger at proto={proto_name} conns={conns}"
+            );
+
+            let label = format!("wire_proto_{proto_name}_c{conns}");
+            b.record(&label, report.elapsed);
+            for (q, tag) in [(0.5, "p50"), (0.95, "p95"), (0.99, "p99")] {
+                b.record_secs(&format!("{label}_{tag}"), report.latency.quantile(q));
+            }
+            b.set_meta(&format!("{label}_rows_per_sec"), JsonValue::Number(report.rows_per_sec()));
+            println!(
+                "  conns={conns:2} proto={proto_name:6}: {:9.0} rows/s  p50={:7.1}us p99={:7.1}us",
                 report.rows_per_sec(),
                 report.latency.quantile(0.5) * 1e6,
                 report.latency.quantile(0.99) * 1e6,

@@ -1,0 +1,285 @@
+//! Bench **regression gate**: compare a freshly produced
+//! `BENCH_*.json` against a committed baseline (the perf trajectory
+//! under `perf-trajectory/`) measurement by measurement and flag
+//! mean-time regressions past a configurable ratio.
+//!
+//! Comparability first: two documents are only held against each other
+//! when their run metadata agrees on the axes that move the numbers
+//! wholesale — the codegen leg, the active SIMD dispatch tier, and the
+//! bench profile (quick vs full). Any mismatch downgrades the whole
+//! gate to *incomparable* instead of producing nonsense verdicts.
+//!
+//! Verdicts are per measurement, on the `current / baseline` mean-time
+//! ratio: above the threshold is a regression, below its reciprocal an
+//! improvement, labels present on only one side are `New` / `Missing`
+//! (reported, never fatal — benches gain and rename points as the
+//! suite grows). Only a `Regressed` verdict fails the gate.
+//!
+//! The CLI wrapper is the `bench-gate` binary (`gate_main.rs`); CI
+//! runs it warn-only until a baseline is committed.
+
+use std::collections::BTreeMap;
+
+use crate::util::JsonValue;
+
+/// Meta keys that must agree before two runs are comparable at all.
+pub const COMPARABILITY_KEYS: [&str; 3] = ["codegen", "simd_tier", "profile"];
+
+/// One parsed `BENCH_*.json`: bench name, scalar run metadata, and each
+/// measurement's mean nanoseconds by label.
+#[derive(Debug, Clone)]
+pub struct BenchDoc {
+    /// The document's `bench` field (e.g. `"wire"`).
+    pub bench: String,
+    /// Scalar meta entries, stringified (numbers lose nothing we gate on).
+    pub meta: BTreeMap<String, String>,
+    /// `measurements[].name` → `mean_ns`.
+    pub mean_ns: BTreeMap<String, f64>,
+}
+
+impl BenchDoc {
+    /// Parse the text of a `BENCH_*.json` document (as written by
+    /// [`Bencher::write_json`](super::Bencher::write_json)).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let doc = JsonValue::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+        let bench = doc
+            .get("bench")
+            .and_then(|v| v.as_str())
+            .ok_or("document has no `bench` name")?
+            .to_string();
+        let mut meta = BTreeMap::new();
+        if let Some(JsonValue::Object(m)) = doc.get("meta") {
+            for (k, v) in m {
+                let s = match v {
+                    JsonValue::String(s) => s.clone(),
+                    JsonValue::Number(n) => format!("{n}"),
+                    JsonValue::Bool(b) => format!("{b}"),
+                    _ => continue, // arrays/objects are not gate axes
+                };
+                meta.insert(k.clone(), s);
+            }
+        }
+        let rows = doc
+            .get("measurements")
+            .and_then(|v| v.as_array())
+            .ok_or("document has no `measurements` array")?;
+        let mut mean_ns = BTreeMap::new();
+        for row in rows {
+            let name = row
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("measurement row has no `name`")?;
+            let mean = row
+                .get("mean_ns")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("measurement {name} has no `mean_ns`"))?;
+            mean_ns.insert(name.to_string(), mean);
+        }
+        Ok(Self { bench, meta, mean_ns })
+    }
+}
+
+/// Outcome for one measurement label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within the threshold band either way.
+    Ok,
+    /// Faster than the reciprocal threshold — worth refreshing the baseline.
+    Improved,
+    /// Slower than the threshold — the only fatal verdict.
+    Regressed,
+    /// Present only in the current run.
+    New,
+    /// Present only in the baseline.
+    Missing,
+}
+
+/// One label's comparison row.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    /// Measurement label shared by (or unique to) the two documents.
+    pub name: String,
+    /// Baseline mean nanoseconds, when the label exists there.
+    pub baseline_ns: Option<f64>,
+    /// Current mean nanoseconds, when the label exists there.
+    pub current_ns: Option<f64>,
+    /// `current / baseline`, when both sides exist.
+    pub ratio: Option<f64>,
+    /// The verdict under the gate's threshold.
+    pub verdict: Verdict,
+}
+
+/// The whole gate outcome: per-label rows plus the comparability check.
+#[derive(Debug)]
+pub struct GateReport {
+    /// Mean-time threshold the verdicts were computed under.
+    pub threshold: f64,
+    /// One row per label in either document, baseline order then new.
+    pub comparisons: Vec<Comparison>,
+    /// `(key, baseline value, current value)` for every comparability
+    /// axis the two runs disagree on. Non-empty ⇒ no verdict is fatal.
+    pub incomparable: Vec<(String, String, String)>,
+}
+
+impl GateReport {
+    /// Rows that regressed past the threshold.
+    pub fn regressions(&self) -> Vec<&Comparison> {
+        self.comparisons.iter().filter(|c| c.verdict == Verdict::Regressed).collect()
+    }
+
+    /// The gate passes when the runs are comparable and nothing
+    /// regressed — or when they are *incomparable*, which is a warning
+    /// condition, not a perf verdict.
+    pub fn passed(&self) -> bool {
+        !self.incomparable.is_empty() || self.regressions().is_empty()
+    }
+}
+
+/// Compare `current` against `baseline` with a mean-time `threshold`
+/// (e.g. `2.0` fails anything ≥ 2× slower; must be > 1).
+pub fn compare(baseline: &BenchDoc, current: &BenchDoc, threshold: f64) -> GateReport {
+    assert!(threshold > 1.0, "gate threshold must exceed 1.0, got {threshold}");
+    let mut incomparable = Vec::new();
+    for key in COMPARABILITY_KEYS {
+        if let (Some(b), Some(c)) = (baseline.meta.get(key), current.meta.get(key)) {
+            if b != c {
+                incomparable.push((key.to_string(), b.clone(), c.clone()));
+            }
+        }
+    }
+    let mut comparisons = Vec::new();
+    for (name, &base) in &baseline.mean_ns {
+        match current.mean_ns.get(name) {
+            Some(&cur) => {
+                // single-run wall-clock points have no variance model;
+                // the ratio band is the whole noise allowance
+                let ratio = cur / base.max(f64::MIN_POSITIVE);
+                let verdict = if ratio > threshold {
+                    Verdict::Regressed
+                } else if ratio < 1.0 / threshold {
+                    Verdict::Improved
+                } else {
+                    Verdict::Ok
+                };
+                comparisons.push(Comparison {
+                    name: name.clone(),
+                    baseline_ns: Some(base),
+                    current_ns: Some(cur),
+                    ratio: Some(ratio),
+                    verdict,
+                });
+            }
+            None => comparisons.push(Comparison {
+                name: name.clone(),
+                baseline_ns: Some(base),
+                current_ns: None,
+                ratio: None,
+                verdict: Verdict::Missing,
+            }),
+        }
+    }
+    for (name, &cur) in &current.mean_ns {
+        if !baseline.mean_ns.contains_key(name) {
+            comparisons.push(Comparison {
+                name: name.clone(),
+                baseline_ns: None,
+                current_ns: Some(cur),
+                ratio: None,
+                verdict: Verdict::New,
+            });
+        }
+    }
+    GateReport { threshold, comparisons, incomparable }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(meta: &[(&str, &str)], rows: &[(&str, f64)]) -> BenchDoc {
+        let meta_body = meta
+            .iter()
+            .map(|(k, v)| format!("\"{k}\": \"{v}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let rows_body = rows
+            .iter()
+            .map(|(n, m)| format!("{{\"name\": \"{n}\", \"mean_ns\": {m}}}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let text = format!(
+            "{{\"bench\": \"unit\", \"meta\": {{{meta_body}}}, \"measurements\": [{rows_body}]}}"
+        );
+        BenchDoc::parse(&text).unwrap()
+    }
+
+    const META: &[(&str, &str)] =
+        &[("codegen", "portable"), ("simd_tier", "avx2"), ("profile", "quick")];
+
+    #[test]
+    fn verdicts_cover_every_direction() {
+        let base = doc(META, &[("same", 100.0), ("slow", 100.0), ("fast", 100.0), ("gone", 1.0)]);
+        let cur = doc(META, &[("same", 120.0), ("slow", 350.0), ("fast", 20.0), ("born", 1.0)]);
+        let report = compare(&base, &cur, 2.0);
+        assert!(report.incomparable.is_empty());
+        let verdict = |name: &str| {
+            report.comparisons.iter().find(|c| c.name == name).unwrap().verdict
+        };
+        assert_eq!(verdict("same"), Verdict::Ok);
+        assert_eq!(verdict("slow"), Verdict::Regressed);
+        assert_eq!(verdict("fast"), Verdict::Improved);
+        assert_eq!(verdict("gone"), Verdict::Missing);
+        assert_eq!(verdict("born"), Verdict::New);
+        assert!(!report.passed(), "a regression fails the gate");
+        assert_eq!(report.regressions().len(), 1);
+        let slow = report.comparisons.iter().find(|c| c.name == "slow").unwrap();
+        assert!((slow.ratio.unwrap() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn new_and_missing_are_not_fatal() {
+        let base = doc(META, &[("gone", 100.0)]);
+        let cur = doc(META, &[("born", 100.0)]);
+        let report = compare(&base, &cur, 2.0);
+        assert!(report.passed(), "renames alone must not fail the gate");
+    }
+
+    #[test]
+    fn meta_mismatch_disarms_the_gate() {
+        let base = doc(META, &[("point", 100.0)]);
+        let cur = doc(
+            &[("codegen", "native"), ("simd_tier", "avx2"), ("profile", "quick")],
+            &[("point", 1e9)],
+        );
+        let report = compare(&base, &cur, 2.0);
+        assert_eq!(report.incomparable.len(), 1);
+        assert_eq!(report.incomparable[0].0, "codegen");
+        // the 10000× "regression" is apples-to-oranges, not a verdict
+        assert!(report.passed());
+        assert_eq!(report.regressions().len(), 1, "the row is still reported");
+    }
+
+    #[test]
+    fn parses_real_bencher_output() {
+        let mut b = super::super::Bencher::quick();
+        b.set_meta("profile", JsonValue::String("quick".into()));
+        b.record("full_pass", std::time::Duration::from_millis(5));
+        let dir = std::env::temp_dir().join("rffkaf_gate_parse_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = b.write_json_to(&dir, "gate_unit").unwrap();
+        let parsed = BenchDoc::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.bench, "gate_unit");
+        assert_eq!(parsed.meta.get("profile").map(String::as_str), Some("quick"));
+        assert!(parsed.meta.contains_key("codegen"));
+        assert!((parsed.mean_ns["full_pass"] - 5e6).abs() < 1e3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_documents_error_cleanly() {
+        assert!(BenchDoc::parse("not json").is_err());
+        assert!(BenchDoc::parse("{\"meta\": {}}").unwrap_err().contains("bench"));
+        assert!(BenchDoc::parse("{\"bench\": \"x\"}").unwrap_err().contains("measurements"));
+    }
+}

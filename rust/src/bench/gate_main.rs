@@ -1,0 +1,103 @@
+//! `bench-gate` — CLI for the bench regression gate
+//! (`rff_kaf::bench::gate`): compare a fresh `BENCH_*.json` against
+//! the committed baseline in `perf-trajectory/` and exit non-zero on a
+//! mean-time regression past the threshold.
+//!
+//! ```bash
+//! cargo run --release --bin bench-gate -- \
+//!     --baseline ../perf-trajectory/BENCH_wire.json \
+//!     --current BENCH_wire.json --threshold 2.0
+//! # CI bootstrap mode — report, never fail (note: boolean flags last):
+//! cargo run --release --bin bench-gate -- \
+//!     --baseline ../perf-trajectory/BENCH_wire.json \
+//!     --current BENCH_wire.json --warn-only
+//! ```
+//!
+//! Exit codes: `0` pass (including a missing baseline — the gate arms
+//! itself only once a baseline is committed — and incomparable run
+//! metadata), `1` regression, `2` usage or unreadable/unparseable
+//! input.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use rff_kaf::bench::gate::{compare, BenchDoc, Verdict};
+use rff_kaf::util::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let (Some(baseline_path), Some(current_path)) = (args.get("baseline"), args.get("current"))
+    else {
+        eprintln!(
+            "usage: bench-gate --baseline <BENCH_x.json> --current <BENCH_x.json> \
+             [--threshold 2.0] [--warn-only]"
+        );
+        return ExitCode::from(2);
+    };
+    let threshold: f64 = args.get_or("threshold", 2.0);
+    let warn_only = args.flag("warn-only");
+
+    if !Path::new(baseline_path).exists() {
+        println!(
+            "bench-gate: no baseline at {baseline_path} — gate unarmed, \
+             commit one to perf-trajectory/ to arm it"
+        );
+        return ExitCode::SUCCESS;
+    }
+    let baseline = match load(baseline_path) {
+        Ok(doc) => doc,
+        Err(e) => return fail_input(baseline_path, &e),
+    };
+    let current = match load(current_path) {
+        Ok(doc) => doc,
+        Err(e) => return fail_input(current_path, &e),
+    };
+
+    let report = compare(&baseline, &current, threshold);
+    println!("bench-gate: {current_path} vs {baseline_path} (threshold {threshold}x)");
+    for (key, b, c) in &report.incomparable {
+        println!("  INCOMPARABLE meta.{key}: baseline={b} current={c}");
+    }
+    for c in &report.comparisons {
+        let tag = match c.verdict {
+            Verdict::Ok => "ok       ",
+            Verdict::Improved => "IMPROVED ",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::New => "new      ",
+            Verdict::Missing => "missing  ",
+        };
+        match (c.baseline_ns, c.current_ns, c.ratio) {
+            (Some(b), Some(cur), Some(r)) => {
+                println!("  {tag} {:<44} {b:>12.0} -> {cur:>12.0} ns  ({r:.2}x)", c.name);
+            }
+            (Some(b), None, _) => println!("  {tag} {:<44} {b:>12.0} ns -> (absent)", c.name),
+            (None, Some(cur), _) => println!("  {tag} {:<44} (absent) -> {cur:>12.0} ns", c.name),
+            _ => unreachable!("comparison rows always carry at least one side"),
+        }
+    }
+
+    let regressions = report.regressions().len();
+    if !report.incomparable.is_empty() {
+        println!("bench-gate: runs are incomparable — no verdict (pass)");
+        ExitCode::SUCCESS
+    } else if regressions == 0 {
+        println!("bench-gate: pass ({} measurements)", report.comparisons.len());
+        ExitCode::SUCCESS
+    } else if warn_only {
+        println!("bench-gate: {regressions} regression(s) — warn-only, not failing");
+        ExitCode::SUCCESS
+    } else {
+        println!("bench-gate: FAIL — {regressions} regression(s) past {threshold}x");
+        ExitCode::from(1)
+    }
+}
+
+fn load(path: &str) -> Result<BenchDoc, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read failed: {e}"))?;
+    BenchDoc::parse(&text)
+}
+
+fn fail_input(path: &str, err: &str) -> ExitCode {
+    eprintln!("bench-gate: {path}: {err}");
+    ExitCode::from(2)
+}

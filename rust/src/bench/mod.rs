@@ -11,6 +11,8 @@ use std::time::{Duration, Instant};
 
 use crate::util::json::JsonValue;
 
+pub mod gate;
+
 /// One benchmark measurement summary (nanoseconds per iteration).
 #[derive(Clone, Debug)]
 pub struct Measurement {

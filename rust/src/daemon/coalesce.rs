@@ -120,8 +120,9 @@ pub struct CoalesceStats {
 /// One contributor's stake in a coalesced batch: its rows, its reply
 /// route, and the deadline/cancel state that travels with it.
 struct PendingRow {
-    /// Rows this contributor added (1 for wire traffic) — the demux key
-    /// for slicing the batch response.
+    /// Rows this contributor added (1 for single-row wire traffic, the
+    /// chunk size for `train_stream` chunks) — the demux key for
+    /// slicing the batch response.
     rows: usize,
     /// Reply route back to the contributor's connection writer.
     resp: Sender<Response>,
@@ -248,27 +249,62 @@ impl Coalescer {
         resp: Sender<Response>,
         ctx: RequestContext,
     ) {
+        self.add_train_rows(session, x, vec![y], resp, ctx)
+    }
+
+    /// Buffer a contiguous run of train rows under **one** stake (one
+    /// reply for the whole run — the `train_stream` chunk carrier).
+    /// `ys.len()` is the row count, `xs.len()` must be an exact multiple
+    /// of it. The rows enter the session buffer contiguously in arrival
+    /// order and share a batch with whatever single rows surround them,
+    /// so bitwise parity with sequential dispatch is preserved; demux
+    /// slices the batch response by each stake's row count.
+    pub(crate) fn add_train_rows(
+        self: &Arc<Self>,
+        session: u64,
+        xs: Vec<f64>,
+        ys: Vec<f64>,
+        resp: Sender<Response>,
+        ctx: RequestContext,
+    ) {
+        let n = ys.len();
+        if n == 0 {
+            // empty chunk: nothing to buffer, ack immediately
+            self.send_row(&resp, Response::Trained(Vec::new()));
+            return;
+        }
+        if xs.len() % n != 0 {
+            self.send_row(
+                &resp,
+                Response::Error(format!(
+                    "train chunk for session {session} has {} inputs for {n} targets \
+                     (not an exact multiple)",
+                    xs.len()
+                )),
+            );
+            return;
+        }
+        let row_len = xs.len() / n;
         let mut g = self.lock_state();
         let buf = g.sessions.entry(session).or_default();
-        if buf.train.n_rows > 0 && x.len() != buf.train.row_len {
+        if buf.train.n_rows > 0 && row_len != buf.train.row_len {
             let have = buf.train.row_len;
             drop(g);
             self.send_row(
                 &resp,
                 Response::Error(format!(
-                    "coalesced train row for session {session} has {} values; \
-                     rows already buffered have {have}",
-                    x.len()
+                    "coalesced train row for session {session} has {row_len} values; \
+                     rows already buffered have {have}"
                 )),
             );
             return;
         }
-        buf.train.row_len = x.len();
-        buf.train.xs.extend_from_slice(&x);
-        buf.train.ys.push(y);
-        buf.train.pending.push(PendingRow { rows: 1, resp, ctx });
-        buf.train.n_rows += 1;
-        self.stats.train_rows.fetch_add(1, Ordering::Relaxed);
+        buf.train.row_len = row_len;
+        buf.train.xs.extend_from_slice(&xs);
+        buf.train.ys.extend_from_slice(&ys);
+        buf.train.pending.push(PendingRow { rows: n, resp, ctx });
+        buf.train.n_rows += n;
+        self.stats.train_rows.fetch_add(n as u64, Ordering::Relaxed);
         if !buf.train_in_flight && buf.train.n_rows >= self.cfg.max_batch {
             buf.train_in_flight = true;
             let (xs, ys, pending) = buf.train.take();

@@ -64,7 +64,7 @@ use crate::util::json::{write_escaped, JsonValue};
 
 use super::coalesce::Coalescer;
 use super::framing::{FrameReader, FrameWriter};
-use super::DaemonStats;
+use super::{prom, wirebin, DaemonStats};
 
 /// Everything a connection handler needs, shared across connections.
 pub(crate) struct ConnShared {
@@ -152,6 +152,25 @@ impl CancelRegistry {
     }
 }
 
+/// Which encoding a frame arrived in — its reply is encoded the same
+/// way. JSON is the default; a frame starting with [`wirebin::MAGIC`]
+/// is binary. The two interleave freely on one connection.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Enc {
+    Json,
+    Bin,
+}
+
+/// Per-session accounting for the streaming train verb, owned by the
+/// reader thread (frames on one connection are sequential, so no lock).
+/// Counts chunks/rows *admitted* into the pipeline — rejected chunks
+/// (cap, queue-full, expired-at-dispatch, malformed) never count.
+#[derive(Default)]
+struct StreamState {
+    chunks: u64,
+    rows: u64,
+}
+
 /// Which shape of coordinator [`Response`] a pending request expects —
 /// the key for converting it to the wire reply.
 enum ReplyKind {
@@ -188,14 +207,22 @@ enum Body {
     Stats(String),
     /// `cancel` acknowledgement: whether the target was still live.
     Cancelled(bool),
+    /// `stream_end` summary: rows and chunks admitted on this
+    /// connection for the stream's session.
+    StreamSummary { rows: u64, chunks: u64 },
+    /// Prometheus-format text exposition (`metrics` verb).
+    Metrics(String),
+    /// `hello` capability advertisement.
+    Hello { max_frame: usize },
 }
 
-/// Work items for the writer thread, enqueued in request order.
+/// Work items for the writer thread, enqueued in request order. Each
+/// carries the encoding its reply must use.
 enum Pending {
     /// Already resolved (rejections, stats) — write it now.
-    Immediate(Reply),
+    Immediate(Reply, Enc),
     /// Awaiting the coordinator; the writer blocks on `rx`.
-    Await { id: u64, kind: ReplyKind, rx: Receiver<Response> },
+    Await { id: u64, kind: ReplyKind, rx: Receiver<Response>, enc: Enc },
     /// Reader is done; writer exits after this.
     Close,
 }
@@ -213,6 +240,14 @@ enum WireRequest {
     Restore { id: u64, session: u64, snapshot: String },
     Stats { id: u64 },
     Cancel { id: u64, target: u64 },
+    /// One binary `train_stream` row chunk (multi-row, coalescer-fed).
+    StreamChunk { id: u64, session: u64, xs: Vec<f64>, ys: Vec<f64>, deadline: Option<Instant> },
+    /// End of a session's stream: answered with the admitted totals.
+    StreamEnd { id: u64, session: u64 },
+    /// Capability negotiation (JSON): advertises the binary fast path.
+    Hello { id: u64 },
+    /// Prometheus text exposition (JSON verb, text payload).
+    Metrics { id: u64 },
 }
 
 impl WireRequest {
@@ -226,7 +261,11 @@ impl WireRequest {
             | Self::Snapshot { id, .. }
             | Self::Restore { id, .. }
             | Self::Stats { id }
-            | Self::Cancel { id, .. } => *id,
+            | Self::Cancel { id, .. }
+            | Self::StreamChunk { id, .. }
+            | Self::StreamEnd { id, .. }
+            | Self::Hello { id }
+            | Self::Metrics { id } => *id,
         }
     }
 
@@ -237,8 +276,15 @@ impl WireRequest {
             | Self::TrainBatch { deadline, .. }
             | Self::TrainDiffusion { deadline, .. }
             | Self::Predict { deadline, .. }
-            | Self::PredictBatch { deadline, .. } => *deadline,
-            Self::Snapshot { .. } | Self::Restore { .. } | Self::Stats { .. } | Self::Cancel { .. } => None,
+            | Self::PredictBatch { deadline, .. }
+            | Self::StreamChunk { deadline, .. } => *deadline,
+            Self::Snapshot { .. }
+            | Self::Restore { .. }
+            | Self::Stats { .. }
+            | Self::Cancel { .. }
+            | Self::StreamEnd { .. }
+            | Self::Hello { .. }
+            | Self::Metrics { .. } => None,
         }
     }
 }
@@ -276,6 +322,10 @@ fn reader_loop(
 ) {
     let mut reader = stream;
     let mut fr = FrameReader::new();
+    // per-session stream accounting lives with the reader: frames on a
+    // connection are sequential, so `stream_end` observes every chunk
+    // admitted before it without synchronization
+    let mut streams: HashMap<u64, StreamState> = HashMap::new();
     let hard = shared.max_in_flight.saturating_mul(2).max(8);
     loop {
         in_flight.wait_below(hard);
@@ -283,7 +333,7 @@ fn reader_loop(
             Ok(None) => return, // clean close between frames
             Ok(Some(frame)) => {
                 shared.stats.frames_in.fetch_add(1, Ordering::Relaxed);
-                handle_frame(frame, shared, in_flight, cancels, ptx);
+                handle_frame(frame, shared, in_flight, cancels, ptx, &mut streams);
             }
             Err(e) if e.kind() == io::ErrorKind::InvalidData => {
                 // oversized length prefix: reply with the diagnostic,
@@ -294,10 +344,10 @@ fn reader_loop(
                 shared.stats.frames_in.fetch_add(1, Ordering::Relaxed);
                 shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
                 in_flight.inc();
-                let _ = ptx.send(Pending::Immediate(Reply::Err {
-                    id: 0,
-                    msg: format!("frame rejected: {e}"),
-                }));
+                let _ = ptx.send(Pending::Immediate(
+                    Reply::Err { id: 0, msg: format!("frame rejected: {e}") },
+                    Enc::Json,
+                ));
                 return;
             }
             Err(_) => return, // truncated mid-frame or reset: peer is gone
@@ -313,15 +363,19 @@ fn handle_frame(
     in_flight: &Arc<InFlight>,
     cancels: &Arc<CancelRegistry>,
     ptx: &Sender<Pending>,
+    streams: &mut HashMap<u64, StreamState>,
 ) {
     let depth = in_flight.inc();
-    let req = match parse_request(frame) {
-        Ok(req) => req,
-        Err((id, msg)) => {
+    if wirebin::is_binary(frame) {
+        shared.stats.binary_frames_in.fetch_add(1, Ordering::Relaxed);
+    }
+    let (req, enc) = match parse_request(frame) {
+        Ok(pair) => pair,
+        Err((id, msg, enc)) => {
             // malformed frame: error reply, connection stays alive
             // (framing is still synced — only the payload was bad)
             shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
-            let _ = ptx.send(Pending::Immediate(Reply::Err { id, msg }));
+            let _ = ptx.send(Pending::Immediate(Reply::Err { id, msg }, enc));
             return;
         }
     };
@@ -330,29 +384,60 @@ fn handle_frame(
     // pipelined client uses to bound waits when replies may be
     // suppressed — it must never be rejected or suppressed itself)
     if let WireRequest::Stats { id } = req {
-        let _ = ptx.send(Pending::Immediate(Reply::Ok {
-            id,
-            body: Body::Stats(stats_json(shared)),
-        }));
+        let _ = ptx.send(Pending::Immediate(
+            Reply::Ok { id, body: Body::Stats(stats_json(shared)) },
+            enc,
+        ));
         return;
     }
     // `cancel` is likewise inline and cap-exempt: it exists to *reduce*
     // load, so rejecting it under pressure would be self-defeating
     if let WireRequest::Cancel { id, target } = req {
         let hit = cancels.cancel(target);
-        let _ = ptx.send(Pending::Immediate(Reply::Ok { id, body: Body::Cancelled(hit) }));
+        let _ = ptx.send(Pending::Immediate(Reply::Ok { id, body: Body::Cancelled(hit) }, enc));
+        return;
+    }
+    // `hello` / `metrics` are control-plane reads: served inline,
+    // cap-exempt (a scraper must be able to observe an overloaded
+    // daemon, and negotiation must not be shed)
+    if let WireRequest::Hello { id } = req {
+        let _ = ptx.send(Pending::Immediate(
+            Reply::Ok { id, body: Body::Hello { max_frame: shared.max_frame } },
+            enc,
+        ));
+        return;
+    }
+    if let WireRequest::Metrics { id } = req {
+        let _ = ptx.send(Pending::Immediate(
+            Reply::Ok { id, body: Body::Metrics(metrics_text(shared)) },
+            enc,
+        ));
+        return;
+    }
+    // `stream_end` is the stream's fence: always answered (never capped,
+    // rejected or suppressed) so a streaming client can bound its drain
+    // wait on the summary even when chunk replies were suppressed
+    if let WireRequest::StreamEnd { id, session } = req {
+        let st = streams.remove(&session).unwrap_or_default();
+        let _ = ptx.send(Pending::Immediate(
+            Reply::Ok { id, body: Body::StreamSummary { rows: st.rows, chunks: st.chunks } },
+            enc,
+        ));
         return;
     }
     if depth > shared.max_in_flight {
         shared.stats.rejected_in_flight.fetch_add(1, Ordering::Relaxed);
-        let _ = ptx.send(Pending::Immediate(Reply::Err {
-            id: req.id(),
-            msg: format!(
-                "in-flight cap of {} requests exceeded on this connection; \
-                 wait for replies before sending more",
-                shared.max_in_flight
-            ),
-        }));
+        let _ = ptx.send(Pending::Immediate(
+            Reply::Err {
+                id: req.id(),
+                msg: format!(
+                    "in-flight cap of {} requests exceeded on this connection; \
+                     wait for replies before sending more",
+                    shared.max_in_flight
+                ),
+            },
+            enc,
+        ));
         return;
     }
     // already expired at dispatch: reject with a diagnostic *before*
@@ -360,13 +445,16 @@ fn handle_frame(
     // admission expiry, which suppresses the reply)
     if req.deadline().is_some_and(|d| Instant::now() >= d) {
         shared.svc.stats().deadline_rejects.fetch_add(1, Ordering::Relaxed);
-        let _ = ptx.send(Pending::Immediate(Reply::Err {
-            id: req.id(),
-            msg: format!("request {} rejected: deadline already expired at dispatch", req.id()),
-        }));
+        let _ = ptx.send(Pending::Immediate(
+            Reply::Err {
+                id: req.id(),
+                msg: format!("request {} rejected: deadline already expired at dispatch", req.id()),
+            },
+            enc,
+        ));
         return;
     }
-    dispatch(req, shared, cancels, ptx);
+    dispatch(req, enc, shared, cancels, ptx, streams);
 }
 
 /// Route an admitted request: single-row train/predict through the
@@ -375,9 +463,11 @@ fn handle_frame(
 /// cancellation flag and carry their [`RequestContext`] down the stack.
 fn dispatch(
     req: WireRequest,
+    enc: Enc,
     shared: &Arc<ConnShared>,
     cancels: &Arc<CancelRegistry>,
     ptx: &Sender<Pending>,
+    streams: &mut HashMap<u64, StreamState>,
 ) {
     let ctx_for = |id: u64, deadline: Option<Instant>| RequestContext {
         deadline,
@@ -391,7 +481,7 @@ fn dispatch(
             if shared.coalescer.enabled() {
                 // enqueue the Await *before* the row can dispatch so the
                 // writer sees items in request order
-                let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Train, rx: rrx });
+                let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Train, rx: rrx, enc });
                 shared.coalescer.add_train(session, x, y, rtx, ctx);
                 return;
             }
@@ -400,11 +490,66 @@ fn dispatch(
         WireRequest::Predict { id, session, x, deadline } => {
             let ctx = ctx_for(id, deadline);
             if shared.coalescer.enabled() {
-                let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Predict, rx: rrx });
+                let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Predict, rx: rrx, enc });
                 shared.coalescer.add_predict(session, x, rtx, ctx);
                 return;
             }
             (id, ReplyKind::Predict, Request::Predict { session, x, resp: rtx, ctx })
+        }
+        WireRequest::StreamChunk { id, session, xs, ys, deadline } => {
+            // empty chunk: a legal keep-alive, acked without admission
+            if ys.is_empty() {
+                let _ =
+                    ptx.send(Pending::Immediate(Reply::Ok { id, body: Body::Errors(vec![]) }, enc));
+                return;
+            }
+            let rows = ys.len() as u64;
+            let ctx = ctx_for(id, deadline);
+            if shared.coalescer.enabled() {
+                // chunk rows feed the coalescer's row buffers directly —
+                // same admission, eviction and demux as single-row train,
+                // so deadline/cancel and the reply ledger hold unchanged
+                let st = streams.entry(session).or_default();
+                st.chunks += 1;
+                st.rows += rows;
+                shared.stats.stream_chunks.fetch_add(1, Ordering::Relaxed);
+                shared.stats.stream_rows.fetch_add(rows, Ordering::Relaxed);
+                let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Train, rx: rrx, enc });
+                shared.coalescer.add_train_rows(session, xs, ys, rtx, ctx);
+                return;
+            }
+            // coalescing disabled: a chunk is exactly a train_batch, but
+            // still stream-accounted (only on successful admission)
+            match shared.svc.try_submit(Request::TrainBatch { session, xs, ys, resp: rtx, ctx }) {
+                Ok(true) => {
+                    let st = streams.entry(session).or_default();
+                    st.chunks += 1;
+                    st.rows += rows;
+                    shared.stats.stream_chunks.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.stream_rows.fetch_add(rows, Ordering::Relaxed);
+                    let _ = ptx.send(Pending::Await { id, kind: ReplyKind::Train, rx: rrx, enc });
+                }
+                Ok(false) => {
+                    cancels.resolve(id);
+                    shared.stats.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
+                    let _ = ptx.send(Pending::Immediate(
+                        Reply::Err {
+                            id,
+                            msg: format!(
+                                "request queue full ({} slots): service overloaded, retry later",
+                                shared.svc.queue_capacity()
+                            ),
+                        },
+                        enc,
+                    ));
+                }
+                Err(e) => {
+                    cancels.resolve(id);
+                    let _ =
+                        ptx.send(Pending::Immediate(Reply::Err { id, msg: e.to_string() }, enc));
+                }
+            }
+            return;
         }
         WireRequest::TrainBatch { id, session, xs, ys, deadline } => {
             let ctx = ctx_for(id, deadline);
@@ -424,35 +569,43 @@ fn dispatch(
         WireRequest::Restore { id, session, snapshot } => {
             (id, ReplyKind::Restore, Request::Restore { session, snapshot, resp: rtx })
         }
-        WireRequest::Stats { .. } | WireRequest::Cancel { .. } => {
-            unreachable!("stats and cancel are handled inline")
+        WireRequest::Stats { .. }
+        | WireRequest::Cancel { .. }
+        | WireRequest::Hello { .. }
+        | WireRequest::Metrics { .. }
+        | WireRequest::StreamEnd { .. } => {
+            unreachable!("control-plane verbs are handled inline")
         }
     };
     match shared.svc.try_submit(request) {
         Ok(true) => {
-            let _ = ptx.send(Pending::Await { id, kind, rx: rrx });
+            let _ = ptx.send(Pending::Await { id, kind, rx: rrx, enc });
         }
         Ok(false) => {
             // no Await will resolve this id — untrack its cancel flag
             cancels.resolve(id);
             shared.stats.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
-            let _ = ptx.send(Pending::Immediate(Reply::Err {
-                id,
-                msg: format!(
-                    "request queue full ({} slots): service overloaded, retry later",
-                    shared.svc.queue_capacity()
-                ),
-            }));
+            let _ = ptx.send(Pending::Immediate(
+                Reply::Err {
+                    id,
+                    msg: format!(
+                        "request queue full ({} slots): service overloaded, retry later",
+                        shared.svc.queue_capacity()
+                    ),
+                },
+                enc,
+            ));
         }
         Err(e) => {
             cancels.resolve(id);
-            let _ = ptx.send(Pending::Immediate(Reply::Err { id, msg: e.to_string() }));
+            let _ = ptx.send(Pending::Immediate(Reply::Err { id, msg: e.to_string() }, enc));
         }
     }
 }
 
-/// Resolve and write replies in request order; reuses one JSON string
-/// and one frame buffer for the connection's lifetime.
+/// Resolve and write replies in request order; reuses one JSON string,
+/// one binary buffer and one frame buffer for the connection's lifetime
+/// (each reply is encoded the way its request arrived).
 ///
 /// This loop is the reply *ledger*: every `Pending` item resolves into
 /// exactly one of `frames_out` (written), `suppressed_replies`
@@ -474,12 +627,13 @@ fn writer_loop(
 ) {
     let mut fw = FrameWriter::new();
     let mut json = String::new();
+    let mut bin = Vec::new();
     let mut broken = false;
     for item in prx {
-        let reply = match item {
+        let (reply, enc) = match item {
             Pending::Close => break,
-            Pending::Immediate(reply) => Some(reply),
-            Pending::Await { id, kind, rx } => {
+            Pending::Immediate(reply, enc) => (Some(reply), enc),
+            Pending::Await { id, kind, rx, enc } => {
                 let reply = match rx.recv() {
                     // a dropped request is suppressed whether or not the
                     // peer is still there — count it as such
@@ -504,14 +658,23 @@ fn writer_loop(
                     }
                 };
                 cancels.resolve(id);
-                reply
+                (reply, enc)
             }
         };
         match reply {
             Some(reply) if !broken => {
-                json.clear();
-                render(&mut json, &reply);
-                if fw.write_frame(&mut stream, json.as_bytes()).is_ok() {
+                let payload: &[u8] = match enc {
+                    Enc::Json => {
+                        json.clear();
+                        render(&mut json, &reply);
+                        json.as_bytes()
+                    }
+                    Enc::Bin => {
+                        render_bin(&mut bin, &reply);
+                        &bin
+                    }
+                };
+                if fw.write_frame(&mut stream, payload).is_ok() {
                     stats.frames_out.fetch_add(1, Ordering::Relaxed);
                 } else {
                     // this reply existed but never reached the peer
@@ -581,9 +744,47 @@ fn render(out: &mut String, reply: &Reply) {
                 Body::Cancelled(hit) => {
                     let _ = write!(out, ",\"cancelled\":{hit}");
                 }
+                Body::StreamSummary { rows, chunks } => {
+                    let _ = write!(out, ",\"rows\":{rows},\"chunks\":{chunks}");
+                }
+                Body::Metrics(text) => {
+                    out.push_str(",\"metrics\":");
+                    write_escaped(out, text);
+                }
+                Body::Hello { max_frame } => {
+                    let _ = write!(
+                        out,
+                        ",\"hello\":{{\"binary\":true,\"train_stream\":true,\"max_frame\":{max_frame}}}"
+                    );
+                }
             }
             out.push('}');
         }
+    }
+}
+
+/// Render a reply as a binary frame (see [`wirebin`]). Only data-verb
+/// shapes have a binary form; anything else resolving on a binary id is
+/// a protocol bug surfaced as an `RT_ERROR`, not a panic.
+fn render_bin(out: &mut Vec<u8>, reply: &Reply) {
+    match reply {
+        Reply::Err { id, msg } => wirebin::encode_reply_error(out, *id, msg),
+        Reply::Ok { id, body } => match body {
+            Body::Errors(errs) => wirebin::encode_reply_f64s(out, wirebin::RT_ERRORS, *id, errs),
+            Body::Y(y) => wirebin::encode_reply_f64s(out, wirebin::RT_Y, *id, &[*y]),
+            Body::Ys(ys) => wirebin::encode_reply_f64s(out, wirebin::RT_YS, *id, ys),
+            Body::StreamSummary { rows, chunks } => {
+                wirebin::encode_reply_summary(out, *id, *rows, *chunks)
+            }
+            Body::Snapshot(_)
+            | Body::None
+            | Body::Stats(_)
+            | Body::Cancelled(_)
+            | Body::Metrics(_)
+            | Body::Hello { .. } => {
+                wirebin::encode_reply_error(out, *id, "reply shape has no binary encoding")
+            }
+        },
     }
 }
 
@@ -684,6 +885,9 @@ fn stats_json(shared: &ConnShared) -> String {
     daemon
         .insert("suppressed_replies".to_string(), n(d.suppressed_replies.load(Ordering::Relaxed)));
     daemon.insert("dropped_frames".to_string(), n(d.dropped_frames.load(Ordering::Relaxed)));
+    daemon.insert("binary_frames_in".to_string(), n(d.binary_frames_in.load(Ordering::Relaxed)));
+    daemon.insert("stream_chunks".to_string(), n(d.stream_chunks.load(Ordering::Relaxed)));
+    daemon.insert("stream_rows".to_string(), n(d.stream_rows.load(Ordering::Relaxed)));
 
     let mut root = BTreeMap::new();
     root.insert("service".to_string(), JsonValue::Object(service));
@@ -693,11 +897,72 @@ fn stats_json(shared: &ConnShared) -> String {
     JsonValue::Object(root).to_string_compact()
 }
 
+/// Build the `metrics` verb's payload: Prometheus text exposition.
+fn metrics_text(shared: &ConnShared) -> String {
+    prom::render_metrics(
+        shared.svc.stats(),
+        shared.svc.session_count(),
+        shared.coalescer.enabled(),
+        shared.coalescer.stats(),
+        &shared.stats,
+    )
+}
+
 // ── request parsing ────────────────────────────────────────────────────
 
 type ParseError = (u64, String);
 
-fn parse_request(frame: &[u8]) -> Result<WireRequest, ParseError> {
+/// Parse one frame, routing on the magic first byte: [`wirebin::MAGIC`]
+/// selects the binary codec, anything else is a JSON document. The
+/// returned [`Enc`] tags the reply encoding (errors carry it too, so
+/// even a malformed binary frame gets a binary error reply).
+fn parse_request(frame: &[u8]) -> Result<(WireRequest, Enc), (u64, String, Enc)> {
+    if wirebin::is_binary(frame) {
+        parse_request_bin(frame)
+            .map(|req| (req, Enc::Bin))
+            .map_err(|(id, msg)| (id, msg, Enc::Bin))
+    } else {
+        parse_request_json(frame)
+            .map(|req| (req, Enc::Json))
+            .map_err(|(id, msg)| (id, msg, Enc::Json))
+    }
+}
+
+/// Decode a binary frame into a [`WireRequest`] — no `JsonValue` tree,
+/// no text float round-trip: rows arrive as raw little-endian `f64`
+/// bits, so binary traffic is bitwise-identical to JSON by construction.
+fn parse_request_bin(frame: &[u8]) -> Result<WireRequest, ParseError> {
+    let (h, xs, mut ys) = wirebin::parse_request(frame)?;
+    let deadline = h.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    Ok(match h.tag {
+        wirebin::VT_TRAIN => WireRequest::Train {
+            id: h.id,
+            session: h.target,
+            x: xs,
+            y: ys.pop().expect("VT_TRAIN carries exactly one y"),
+            deadline,
+        },
+        wirebin::VT_TRAIN_BATCH => {
+            WireRequest::TrainBatch { id: h.id, session: h.target, xs, ys, deadline }
+        }
+        wirebin::VT_TRAIN_DIFFUSION => {
+            WireRequest::TrainDiffusion { id: h.id, group: h.target, xs, ys, deadline }
+        }
+        wirebin::VT_PREDICT => {
+            WireRequest::Predict { id: h.id, session: h.target, x: xs, deadline }
+        }
+        wirebin::VT_PREDICT_BATCH => {
+            WireRequest::PredictBatch { id: h.id, session: h.target, xs, deadline }
+        }
+        wirebin::VT_STREAM_CHUNK => {
+            WireRequest::StreamChunk { id: h.id, session: h.target, xs, ys, deadline }
+        }
+        wirebin::VT_STREAM_END => WireRequest::StreamEnd { id: h.id, session: h.target },
+        other => unreachable!("wirebin::parse_request validates verb tags, got {other}"),
+    })
+}
+
+fn parse_request_json(frame: &[u8]) -> Result<WireRequest, ParseError> {
     let text = std::str::from_utf8(frame)
         .map_err(|_| (0, "request frame is not valid UTF-8".to_string()))?;
     let doc = JsonValue::parse(text).map_err(|e| (0, format!("malformed JSON request: {e}")))?;
@@ -747,11 +1012,15 @@ fn parse_request(frame: &[u8]) -> Result<WireRequest, ParseError> {
         }),
         "stats" => Ok(WireRequest::Stats { id }),
         "cancel" => Ok(WireRequest::Cancel { id, target: get_u64(&doc, "target", id)? }),
+        "hello" => Ok(WireRequest::Hello { id }),
+        "metrics" => Ok(WireRequest::Metrics { id }),
         other => Err((
             id,
             format!(
                 "unknown verb {other:?} (expected train, train_batch, predict, \
-                 predict_batch, train_diffusion, snapshot, restore, stats or cancel)"
+                 predict_batch, train_diffusion, snapshot, restore, stats, cancel, \
+                 hello or metrics; train_stream rows travel as binary stream_chunk \
+                 frames — see the crate::daemon frame-format docs)"
             ),
         )),
     }
@@ -832,8 +1101,9 @@ mod tests {
 
     #[test]
     fn parse_request_extracts_verbs_and_reports_bad_fields() {
-        let req = parse_request(br#"{"id":7,"verb":"train","session":3,"x":[1.0,2.0],"y":0.5}"#)
-            .expect("valid train");
+        let req =
+            parse_request_json(br#"{"id":7,"verb":"train","session":3,"x":[1.0,2.0],"y":0.5}"#)
+                .expect("valid train");
         match req {
             WireRequest::Train { id, session, x, y, deadline } => {
                 assert_eq!((id, session, y), (7, 3, 0.5));
@@ -843,17 +1113,82 @@ mod tests {
             _ => panic!("wrong variant"),
         }
         // id is recoverable even when a later field is bad
-        let (id, msg) = parse_request(br#"{"id":9,"verb":"train","session":"x"}"#).unwrap_err();
+        let (id, msg) =
+            parse_request_json(br#"{"id":9,"verb":"train","session":"x"}"#).unwrap_err();
         assert_eq!(id, 9);
         assert!(msg.contains("session"), "diagnostic names the field: {msg}");
         // unknown verb lists the vocabulary (including cancel)
-        let (_, msg) = parse_request(br#"{"id":1,"verb":"bogus"}"#).unwrap_err();
+        let (_, msg) = parse_request_json(br#"{"id":1,"verb":"bogus"}"#).unwrap_err();
         assert!(msg.contains("unknown verb") && msg.contains("train_batch"), "{msg}");
         assert!(msg.contains("cancel"), "{msg}");
         // malformed JSON
-        let (id, msg) = parse_request(b"not json").unwrap_err();
+        let (id, msg) = parse_request_json(b"not json").unwrap_err();
         assert_eq!(id, 0);
         assert!(msg.contains("malformed"), "{msg}");
+    }
+
+    #[test]
+    fn parse_request_routes_on_the_magic_byte() {
+        // JSON frame → Enc::Json
+        let (req, enc) = parse_request(br#"{"id":1,"verb":"stats"}"#).unwrap();
+        assert_eq!(enc, Enc::Json);
+        assert!(matches!(req, WireRequest::Stats { id: 1 }));
+        // binary frame → Enc::Bin, bitwise payload
+        let mut buf = Vec::new();
+        let h = wirebin::BinHeader {
+            tag: wirebin::VT_TRAIN,
+            id: 42,
+            target: 3,
+            deadline_ms: None,
+            n: 1,
+            d: 2,
+        };
+        wirebin::encode_request(&mut buf, &h, &[1.5, f64::NAN], &[-0.0]);
+        let (req, enc) = parse_request(&buf).unwrap();
+        assert_eq!(enc, Enc::Bin);
+        match req {
+            WireRequest::Train { id, session, x, y, deadline } => {
+                assert_eq!((id, session), (42, 3));
+                assert_eq!(x[0].to_bits(), 1.5f64.to_bits());
+                assert_eq!(x[1].to_bits(), f64::NAN.to_bits());
+                assert_eq!(y.to_bits(), (-0.0f64).to_bits());
+                assert!(deadline.is_none());
+            }
+            _ => panic!("wrong variant"),
+        }
+        // malformed binary frame → error tagged Enc::Bin
+        let (id, _, enc) = parse_request(&[wirebin::MAGIC, 0, 0]).unwrap_err();
+        assert_eq!((id, enc), (0, Enc::Bin));
+        // stream verbs map through
+        let end = wirebin::BinHeader {
+            tag: wirebin::VT_STREAM_END,
+            id: 9,
+            target: 3,
+            deadline_ms: None,
+            n: 0,
+            d: 0,
+        };
+        wirebin::encode_request(&mut buf, &end, &[], &[]);
+        let (req, _) = parse_request(&buf).unwrap();
+        assert!(matches!(req, WireRequest::StreamEnd { id: 9, session: 3 }));
+        let chunk = wirebin::BinHeader {
+            tag: wirebin::VT_STREAM_CHUNK,
+            id: 10,
+            target: 4,
+            deadline_ms: Some(100),
+            n: 2,
+            d: 1,
+        };
+        wirebin::encode_request(&mut buf, &chunk, &[0.5, 0.25], &[1.0, 2.0]);
+        let (req, _) = parse_request(&buf).unwrap();
+        match req {
+            WireRequest::StreamChunk { id, session, xs, ys, deadline } => {
+                assert_eq!((id, session), (10, 4));
+                assert_eq!((xs.len(), ys.len()), (2, 2));
+                assert!(deadline.is_some());
+            }
+            _ => panic!("wrong variant"),
+        }
     }
 
     #[test]
@@ -884,12 +1219,17 @@ mod tests {
         s.clear();
         render(&mut s, &Reply::Ok { id: 8, body: Body::Cancelled(true) });
         assert_eq!(s, r#"{"id":8,"ok":true,"cancelled":true}"#);
+        s.clear();
+        render(&mut s, &Reply::Ok { id: 10, body: Body::StreamSummary { rows: 96, chunks: 6 } });
+        assert_eq!(s, r#"{"id":10,"ok":true,"rows":96,"chunks":6}"#);
         // every rendered reply must itself parse
         for case in [
             Reply::Ok { id: 1, body: Body::Y(-0.0) },
             Reply::Ok { id: 2, body: Body::Ys(vec![f64::NAN, 1.0]) },
             Reply::Ok { id: 3, body: Body::Snapshot("{\"v\":1}".into()) },
             Reply::Ok { id: 9, body: Body::Cancelled(false) },
+            Reply::Ok { id: 11, body: Body::Metrics("# TYPE a counter\na 1\n".into()) },
+            Reply::Ok { id: 12, body: Body::Hello { max_frame: 8 << 20 } },
         ] {
             s.clear();
             render(&mut s, &case);
@@ -898,8 +1238,32 @@ mod tests {
     }
 
     #[test]
+    fn render_bin_maps_data_shapes_and_guards_the_rest() {
+        let mut b = Vec::new();
+        render_bin(&mut b, &Reply::Ok { id: 1, body: Body::Errors(vec![0.5, f64::NAN]) });
+        let r = wirebin::parse_reply(&b).unwrap();
+        assert_eq!((r.id, r.tag), (1, wirebin::RT_ERRORS));
+        assert_eq!(r.vals[1].to_bits(), f64::NAN.to_bits());
+
+        render_bin(&mut b, &Reply::Ok { id: 2, body: Body::Y(-0.0) });
+        let r = wirebin::parse_reply(&b).unwrap();
+        assert_eq!(r.vals[0].to_bits(), (-0.0f64).to_bits());
+
+        render_bin(&mut b, &Reply::Ok { id: 3, body: Body::StreamSummary { rows: 7, chunks: 2 } });
+        assert_eq!(wirebin::parse_reply(&b).unwrap().summary, Some((7, 2)));
+
+        render_bin(&mut b, &Reply::Err { id: 4, msg: "nope".into() });
+        assert_eq!(wirebin::parse_reply(&b).unwrap().error.as_deref(), Some("nope"));
+
+        // control-plane shapes degrade to a binary error, never panic
+        render_bin(&mut b, &Reply::Ok { id: 5, body: Body::Cancelled(true) });
+        let r = wirebin::parse_reply(&b).unwrap();
+        assert!(r.error.unwrap().contains("no binary encoding"));
+    }
+
+    #[test]
     fn deadline_ms_parses_relative_and_rejects_garbage() {
-        let req = parse_request(
+        let req = parse_request_json(
             br#"{"id":1,"verb":"predict","session":2,"x":[0.5],"deadline_ms":5000}"#,
         )
         .expect("valid predict with deadline");
@@ -908,17 +1272,17 @@ mod tests {
         assert!(left <= Duration::from_millis(5000), "relative budget, not absolute");
         assert!(left > Duration::from_millis(4000), "parse overhead must be tiny");
         // null means absent
-        let req = parse_request(
+        let req = parse_request_json(
             br#"{"id":1,"verb":"predict","session":2,"x":[0.5],"deadline_ms":null}"#,
         )
         .unwrap();
         assert!(req.deadline().is_none());
         // non-data verbs never carry a deadline even if the field is sent
-        let req =
-            parse_request(br#"{"id":1,"verb":"snapshot","session":2,"deadline_ms":50}"#).unwrap();
+        let req = parse_request_json(br#"{"id":1,"verb":"snapshot","session":2,"deadline_ms":50}"#)
+            .unwrap();
         assert!(req.deadline().is_none());
         // garbage is a parse error naming the field
-        let (_, msg) = parse_request(
+        let (_, msg) = parse_request_json(
             br#"{"id":1,"verb":"train","session":2,"x":[0.1],"y":0.2,"deadline_ms":-3}"#,
         )
         .unwrap_err();

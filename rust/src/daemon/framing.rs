@@ -31,16 +31,36 @@ pub const LEN_PREFIX_BYTES: usize = 4;
 /// enough that one malicious prefix cannot OOM the daemon.
 pub const DEFAULT_MAX_FRAME: usize = 8 * 1024 * 1024;
 
+/// Default capacity retained by the reusable buffers between frames
+/// (256 KiB). Larger frames are still served — the buffer grows for the
+/// duration of that frame — but the capacity is released afterwards, so
+/// one in-limit burst (a giant snapshot restore, say) doesn't pin
+/// peak-frame memory for the rest of a long-lived connection's life.
+pub const DEFAULT_RETAIN_CAPACITY: usize = 256 * 1024;
+
 /// Reads length-prefixed frames, reusing one payload buffer.
-#[derive(Default)]
 pub struct FrameReader {
     buf: Vec<u8>,
+    retain: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self { buf: Vec::new(), retain: DEFAULT_RETAIN_CAPACITY }
+    }
 }
 
 impl FrameReader {
-    /// Empty reader (the buffer grows to the largest frame seen).
+    /// Empty reader (the buffer grows to the largest frame seen, capped
+    /// between frames at [`DEFAULT_RETAIN_CAPACITY`]).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Empty reader retaining at most `retain` bytes of buffer capacity
+    /// between frames.
+    pub fn with_retain_capacity(retain: usize) -> Self {
+        Self { buf: Vec::new(), retain }
     }
 
     /// Read the next frame's payload. `Ok(None)` means the peer closed
@@ -66,8 +86,15 @@ impl FrameReader {
                 format!("frame of {len} bytes exceeds the {max_frame}-byte cap"),
             ));
         }
-        // resize keeps capacity across frames: allocation-free once
-        // warmed up to the connection's largest frame
+        // resize keeps capacity across frames — allocation-free once
+        // warmed up — but capacity above the retain cap (left behind by
+        // a rare oversized burst) is released before the next frame.
+        // clear() first: shrink_to can't go below the current length.
+        self.buf.clear();
+        let keep = self.retain.max(len);
+        if self.buf.capacity() > keep {
+            self.buf.shrink_to(keep);
+        }
         self.buf.resize(len, 0);
         r.read_exact(&mut self.buf)?;
         Ok(Some(&self.buf))
@@ -76,10 +103,17 @@ impl FrameReader {
 
 /// Writes length-prefixed frames, reusing one staging buffer so prefix
 /// and payload leave in a single `write_all` (one syscall per frame on
-/// an unbuffered socket).
-#[derive(Default)]
+/// an unbuffered socket). Retained capacity is capped the same way as
+/// [`FrameReader`]'s.
 pub struct FrameWriter {
     buf: Vec<u8>,
+    retain: usize,
+}
+
+impl Default for FrameWriter {
+    fn default() -> Self {
+        Self { buf: Vec::new(), retain: DEFAULT_RETAIN_CAPACITY }
+    }
 }
 
 impl FrameWriter {
@@ -92,6 +126,10 @@ impl FrameWriter {
     pub fn write_frame(&mut self, w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
         debug_assert!(payload.len() <= u32::MAX as usize);
         self.buf.clear();
+        let keep = self.retain.max(LEN_PREFIX_BYTES + payload.len());
+        if self.buf.capacity() > keep {
+            self.buf.shrink_to(keep);
+        }
         self.buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
         self.buf.extend_from_slice(payload);
         w.write_all(&self.buf)
@@ -172,5 +210,48 @@ mod tests {
         assert!(cap >= 512);
         fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap();
         assert_eq!(fr.buf.capacity(), cap, "small frame must not shrink the buffer");
+    }
+
+    #[test]
+    fn oversized_burst_capacity_is_released_after_the_frame() {
+        // One in-limit 1 MiB frame, then a 64-byte frame: the big frame
+        // is served (buffer grows past the retain cap for its duration),
+        // but the capacity is released before the small frame is read.
+        let big = vec![3u8; 1024 * 1024];
+        let mut wire = Vec::new();
+        let mut fw = FrameWriter::new();
+        fw.write_frame(&mut wire, &big).unwrap();
+        fw.write_frame(&mut wire, &[4u8; 64]).unwrap();
+        assert!(
+            fw.buf.capacity() <= DEFAULT_RETAIN_CAPACITY,
+            "writer retained {} bytes past the {} cap",
+            fw.buf.capacity(),
+            DEFAULT_RETAIN_CAPACITY
+        );
+        let mut cur = Cursor::new(wire);
+        let mut fr = FrameReader::new();
+        let frame = fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!(frame.len(), big.len());
+        let frame = fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!(frame.len(), 64);
+        assert!(
+            fr.buf.capacity() <= DEFAULT_RETAIN_CAPACITY,
+            "reader retained {} bytes past the {} cap",
+            fr.buf.capacity(),
+            DEFAULT_RETAIN_CAPACITY
+        );
+    }
+
+    #[test]
+    fn custom_retain_capacity_is_honored() {
+        let mut wire = Vec::new();
+        let mut fw = FrameWriter::new();
+        fw.write_frame(&mut wire, &[9u8; 4096]).unwrap();
+        fw.write_frame(&mut wire, &[9u8; 8]).unwrap();
+        let mut cur = Cursor::new(wire);
+        let mut fr = FrameReader::with_retain_capacity(1024);
+        fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap();
+        fr.read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap();
+        assert!(fr.buf.capacity() <= 1024, "retained {}", fr.buf.capacity());
     }
 }

@@ -9,7 +9,10 @@
 //! [`run_loadgen`], which opens N concurrent connections, keeps a
 //! bounded window of requests in flight on each, and reports rows/s
 //! plus an end-to-end latency histogram (p50/p95/p99 via
-//! [`LogHistogram::quantile`]).
+//! [`LogHistogram::quantile`]). [`LoadgenConfig::protocol`] selects the
+//! wire encoding: JSON frames (the default), the binary fast path, or
+//! `train_stream` chunking — throughput is compared per *row* via
+//! [`LoadgenReport::ok_rows`], since one stream chunk carries many rows.
 //!
 //! ## Suppressed replies and the stats fence
 //!
@@ -41,14 +44,34 @@ use crate::Result;
 
 use super::conn::{push_f64, push_f64_array};
 use super::framing::{FrameReader, FrameWriter, DEFAULT_MAX_FRAME};
+use super::wirebin;
+
+/// Which wire encoding the load generator drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireProtocol {
+    /// JSON text frames — the default, and the only encoding every verb
+    /// supports.
+    Json,
+    /// Binary frames (magic byte `0xBF`) for the data verbs; one row
+    /// per `train`/`predict` frame, like [`WireProtocol::Json`].
+    Binary,
+    /// `train_stream`: binary row chunks of `chunk` rows per frame,
+    /// closed with a `stream_end` summary per touched session.
+    Stream {
+        /// Rows per chunk frame (clamped to at least 1).
+        chunk: usize,
+    },
+}
 
 /// A pipelined client for the daemon's wire protocol.
 pub struct WireClient {
     stream: TcpStream,
     reader: FrameReader,
     writer: FrameWriter,
-    /// Reused request-serialization buffer.
+    /// Reused request-serialization buffer (JSON encoding).
     json: String,
+    /// Reused request-serialization buffer (binary encoding).
+    bin: Vec<u8>,
     next_id: u64,
     /// When set, every subsequent request carries this relative
     /// `deadline_ms` (ignored by the daemon on non-data verbs).
@@ -75,6 +98,14 @@ pub struct WireReply {
     pub stats: Option<JsonValue>,
     /// Cancel acknowledgement (`cancel`): whether the target was live.
     pub cancelled: Option<bool>,
+    /// Capability object (`hello`).
+    pub hello: Option<JsonValue>,
+    /// Prometheus exposition text (`metrics`).
+    pub metrics: Option<String>,
+    /// Total admitted rows from a `stream_end` summary.
+    pub stream_rows: Option<u64>,
+    /// Total admitted chunks from a `stream_end` summary.
+    pub stream_chunks: Option<u64>,
     /// Diagnostic when `ok` is false.
     pub error: Option<String>,
 }
@@ -89,6 +120,7 @@ impl WireClient {
             reader: FrameReader::new(),
             writer: FrameWriter::new(),
             json: String::new(),
+            bin: Vec::new(),
             next_id: 0,
             deadline_ms: None,
         })
@@ -200,17 +232,105 @@ impl WireClient {
         Ok(id)
     }
 
+    /// Pipeline a `hello` capability probe.
+    pub fn send_hello(&mut self) -> io::Result<u64> {
+        let id = self.begin("hello");
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Pipeline a `metrics` request (Prometheus exposition).
+    pub fn send_metrics(&mut self) -> io::Result<u64> {
+        let id = self.begin("metrics");
+        self.finish()?;
+        Ok(id)
+    }
+
+    /// Frame and pipeline one binary request; `n` rows, `d` inferred
+    /// from `xs`. The client's relative deadline rides along when set.
+    fn send_bin(&mut self, tag: u8, target: u64, n: usize, xs: &[f64], ys: &[f64]) -> io::Result<u64> {
+        self.next_id += 1;
+        let d = if n == 0 { 0 } else { xs.len() / n };
+        let h = wirebin::BinHeader {
+            tag,
+            id: self.next_id,
+            target,
+            deadline_ms: self.deadline_ms,
+            n: n as u32,
+            d: d as u32,
+        };
+        wirebin::encode_request(&mut self.bin, &h, xs, ys);
+        self.writer.write_frame(&mut (&self.stream), &self.bin)?;
+        Ok(self.next_id)
+    }
+
+    /// Binary-encoded `train` (single row).
+    pub fn send_train_bin(&mut self, session: u64, x: &[f64], y: f64) -> io::Result<u64> {
+        self.send_bin(wirebin::VT_TRAIN, session, 1, x, &[y])
+    }
+
+    /// Binary-encoded `train_batch` (`xs` row-major `[n, d]`).
+    pub fn send_train_batch_bin(&mut self, session: u64, xs: &[f64], ys: &[f64]) -> io::Result<u64> {
+        self.send_bin(wirebin::VT_TRAIN_BATCH, session, ys.len(), xs, ys)
+    }
+
+    /// Binary-encoded `train_diffusion`.
+    pub fn send_train_diffusion_bin(&mut self, group: u64, xs: &[f64], ys: &[f64]) -> io::Result<u64> {
+        self.send_bin(wirebin::VT_TRAIN_DIFFUSION, group, ys.len(), xs, ys)
+    }
+
+    /// Binary-encoded `predict` (single row).
+    pub fn send_predict_bin(&mut self, session: u64, x: &[f64]) -> io::Result<u64> {
+        self.send_bin(wirebin::VT_PREDICT, session, 1, x, &[])
+    }
+
+    /// Binary-encoded `predict_batch`; `xs` is row-major `[n, dim]`.
+    pub fn send_predict_batch_bin(&mut self, session: u64, xs: &[f64], dim: usize) -> io::Result<u64> {
+        self.send_bin(wirebin::VT_PREDICT_BATCH, session, xs.len() / dim.max(1), xs, &[])
+    }
+
+    /// Pipeline one `train_stream` chunk of `ys.len()` rows. The first
+    /// chunk for a session *is* the stream — there is no open ceremony.
+    pub fn send_stream_chunk(&mut self, session: u64, xs: &[f64], ys: &[f64]) -> io::Result<u64> {
+        self.send_bin(wirebin::VT_STREAM_CHUNK, session, ys.len(), xs, ys)
+    }
+
+    /// Close a session's stream; the reply is the admitted-rows/chunks
+    /// summary. Always answered, so it doubles as the stream's fence.
+    pub fn send_stream_end(&mut self, session: u64) -> io::Result<u64> {
+        self.send_bin(wirebin::VT_STREAM_END, session, 0, &[], &[])
+    }
+
     /// Send an arbitrary payload in a well-formed frame (negative-path
     /// tests: malformed JSON, bad verbs, ...).
     pub fn send_raw(&mut self, payload: &[u8]) -> io::Result<()> {
         self.writer.write_frame(&mut (&self.stream), payload)
     }
 
-    /// Read and parse the next reply frame.
+    /// Read and parse the next reply frame (either encoding: the
+    /// daemon answers in whatever encoding the request used).
     pub fn recv(&mut self) -> Result<WireReply> {
         let Some(frame) = self.reader.read_frame(&mut (&self.stream), DEFAULT_MAX_FRAME)? else {
             bail!("connection closed by daemon");
         };
+        if wirebin::is_binary(frame) {
+            let r = wirebin::parse_reply(frame)?;
+            let mut reply =
+                WireReply { id: r.id, ok: r.error.is_none(), ..WireReply::default() };
+            match r.tag {
+                wirebin::RT_ERRORS => reply.errors = r.vals,
+                wirebin::RT_Y => reply.y = r.vals.first().copied(),
+                wirebin::RT_YS => reply.ys = r.vals,
+                wirebin::RT_SUMMARY => {
+                    let (rows, chunks) = r.summary.unwrap_or((0, 0));
+                    reply.stream_rows = Some(rows);
+                    reply.stream_chunks = Some(chunks);
+                }
+                _ => {}
+            }
+            reply.error = r.error;
+            return Ok(reply);
+        }
         let text = std::str::from_utf8(frame)?;
         let doc = JsonValue::parse(text).map_err(|e| anyhow!("unparseable reply: {e}"))?;
         let num = |k: &str| doc.get(k).and_then(|v| v.as_f64());
@@ -232,6 +352,10 @@ impl WireClient {
                 Some(JsonValue::Bool(b)) => Some(*b),
                 _ => None,
             },
+            hello: doc.get("hello").cloned(),
+            metrics: doc.get("metrics").and_then(|v| v.as_str()).map(str::to_string),
+            stream_rows: num("rows").map(|v| v as u64),
+            stream_chunks: num("chunks").map(|v| v as u64),
             error: doc.get("error").and_then(|v| v.as_str()).map(str::to_string),
         })
     }
@@ -301,6 +425,64 @@ impl WireClient {
         let id = self.send_cancel(target)?;
         self.expect_ok(id)?.cancelled.ok_or_else(|| anyhow!("cancel reply carried no flag"))
     }
+
+    /// Synchronous `hello` round trip; returns the capability object.
+    pub fn call_hello(&mut self) -> Result<JsonValue> {
+        let id = self.send_hello()?;
+        self.expect_ok(id)?.hello.ok_or_else(|| anyhow!("hello reply carried no object"))
+    }
+
+    /// Synchronous `metrics` round trip; returns the exposition text.
+    pub fn call_metrics(&mut self) -> Result<String> {
+        let id = self.send_metrics()?;
+        self.expect_ok(id)?.metrics.ok_or_else(|| anyhow!("metrics reply carried no text"))
+    }
+
+    /// Synchronous `train` over the binary encoding.
+    pub fn call_train_bin(&mut self, session: u64, x: &[f64], y: f64) -> Result<Vec<f64>> {
+        let id = self.send_train_bin(session, x, y)?;
+        Ok(self.expect_ok(id)?.errors)
+    }
+
+    /// Synchronous `train_batch` over the binary encoding.
+    pub fn call_train_batch_bin(&mut self, session: u64, xs: &[f64], ys: &[f64]) -> Result<Vec<f64>> {
+        let id = self.send_train_batch_bin(session, xs, ys)?;
+        Ok(self.expect_ok(id)?.errors)
+    }
+
+    /// Synchronous `train_diffusion` over the binary encoding.
+    pub fn call_train_diffusion_bin(&mut self, group: u64, xs: &[f64], ys: &[f64]) -> Result<Vec<f64>> {
+        let id = self.send_train_diffusion_bin(group, xs, ys)?;
+        Ok(self.expect_ok(id)?.errors)
+    }
+
+    /// Synchronous `predict` over the binary encoding.
+    pub fn call_predict_bin(&mut self, session: u64, x: &[f64]) -> Result<f64> {
+        let id = self.send_predict_bin(session, x)?;
+        self.expect_ok(id)?.y.ok_or_else(|| anyhow!("predict reply carried no y"))
+    }
+
+    /// Synchronous `predict_batch` over the binary encoding.
+    pub fn call_predict_batch_bin(&mut self, session: u64, xs: &[f64], dim: usize) -> Result<Vec<f64>> {
+        let id = self.send_predict_batch_bin(session, xs, dim)?;
+        Ok(self.expect_ok(id)?.ys)
+    }
+
+    /// Synchronous `train_stream` chunk round trip (one ack per chunk).
+    pub fn call_stream_chunk(&mut self, session: u64, xs: &[f64], ys: &[f64]) -> Result<Vec<f64>> {
+        let id = self.send_stream_chunk(session, xs, ys)?;
+        Ok(self.expect_ok(id)?.errors)
+    }
+
+    /// Synchronous `stream_end`; returns `(admitted_rows, admitted_chunks)`.
+    pub fn call_stream_end(&mut self, session: u64) -> Result<(u64, u64)> {
+        let id = self.send_stream_end(session)?;
+        let reply = self.expect_ok(id)?;
+        match (reply.stream_rows, reply.stream_chunks) {
+            (Some(rows), Some(chunks)) => Ok((rows, chunks)),
+            _ => bail!("stream_end reply carried no summary"),
+        }
+    }
 }
 
 /// Load-generator shape.
@@ -336,6 +518,13 @@ pub struct LoadgenConfig {
     /// the pipelined window (None = run to completion). Each
     /// connection's abandoned requests are reported as `lost_replies`.
     pub kill_after: Option<usize>,
+    /// Wire encoding: JSON (default), binary, or `train_stream`
+    /// chunking. Under [`WireProtocol::Stream`] one *op* is one chunk
+    /// of up to `chunk` rows, so op-level knobs (`window`,
+    /// `cancel_every`, `kill_after`) count chunks, `predict_every` is
+    /// ignored (streams are train-only), and throughput must be read
+    /// from [`LoadgenReport::ok_rows`].
+    pub protocol: WireProtocol,
 }
 
 impl Default for LoadgenConfig {
@@ -351,6 +540,7 @@ impl Default for LoadgenConfig {
             deadline_ms: None,
             cancel_every: 0,
             kill_after: None,
+            protocol: WireProtocol::Json,
         }
     }
 }
@@ -365,6 +555,10 @@ impl Default for LoadgenConfig {
 pub struct LoadgenReport {
     /// Replies received with `ok:true`.
     pub ok_replies: u64,
+    /// Rows carried by those `ok` replies: equal to `ok_replies` for
+    /// single-row protocols, the admitted row total for streams. The
+    /// protocol-comparable throughput numerator.
+    pub ok_rows: u64,
     /// Replies received with `ok:false` (rejections, failures).
     pub wire_errors: u64,
     /// Of `wire_errors`: diagnostics naming an expired deadline
@@ -391,14 +585,16 @@ pub struct LoadgenReport {
 }
 
 impl LoadgenReport {
-    /// Successful operations per wall-clock second.
+    /// Successfully served rows per wall-clock second (comparable
+    /// across protocols — a stream chunk counts all its rows).
     pub fn rows_per_sec(&self) -> f64 {
-        self.ok_replies as f64 / self.elapsed.as_secs_f64().max(1e-9)
+        self.ok_rows as f64 / self.elapsed.as_secs_f64().max(1e-9)
     }
 }
 
 struct ConnOutcome {
     ok: u64,
+    ok_rows: u64,
     errs: u64,
     deadline_errs: u64,
     cancel_errs: u64,
@@ -412,6 +608,7 @@ impl ConnOutcome {
     fn new() -> Self {
         Self {
             ok: 0,
+            ok_rows: 0,
             errs: 0,
             deadline_errs: 0,
             cancel_errs: 0,
@@ -439,6 +636,9 @@ struct Slot {
     id: u64,
     at: Instant,
     kind: SlotKind,
+    /// Rows this op carries (1 for single-row verbs, the chunk size for
+    /// stream chunks, 0 for control traffic).
+    rows: usize,
 }
 
 /// Drive `cfg.connections` concurrent closed-loop clients against the
@@ -458,6 +658,7 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenRepor
     });
     let mut report = LoadgenReport {
         ok_replies: 0,
+        ok_rows: 0,
         wire_errors: 0,
         deadline_errors: 0,
         cancel_errors: 0,
@@ -470,6 +671,7 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenRepor
     for outcome in outcomes {
         let o = outcome?;
         report.ok_replies += o.ok;
+        report.ok_rows += o.ok_rows;
         report.wire_errors += o.errs;
         report.deadline_errors += o.deadline_errs;
         report.cancel_errors += o.cancel_errs;
@@ -482,6 +684,9 @@ pub fn run_loadgen(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadgenRepor
 }
 
 fn drive_connection(addr: SocketAddr, cfg: &LoadgenConfig, conn_index: usize) -> Result<ConnOutcome> {
+    if let WireProtocol::Stream { chunk } = cfg.protocol {
+        return drive_stream_connection(addr, cfg, conn_index, chunk.max(1));
+    }
     let mut client = WireClient::connect(addr)?;
     client.set_deadline_ms(cfg.deadline_ms);
     // suppression is only possible with deadlines or cancels in play;
@@ -506,18 +711,28 @@ fn drive_connection(addr: SocketAddr, cfg: &LoadgenConfig, conn_index: usize) ->
         }
         let session = cfg.sessions[(conn_index + op) % cfg.sessions.len()];
         normal.fill(&mut rng, &mut x);
+        let binary = cfg.protocol == WireProtocol::Binary;
         let id = if cfg.predict_every > 0 && op % cfg.predict_every == 0 {
-            client.send_predict(session, &x)?
+            if binary {
+                client.send_predict_bin(session, &x)?
+            } else {
+                client.send_predict(session, &x)?
+            }
         } else {
             // arbitrary deterministic target: the daemon doesn't care,
             // the filters get a learnable nonlinearity
-            client.send_train(session, &x, x[0].sin())?
+            let y = x[0].sin();
+            if binary {
+                client.send_train_bin(session, &x, y)?
+            } else {
+                client.send_train(session, &x, y)?
+            }
         };
-        outstanding.push_back(Slot { id, at: Instant::now(), kind: SlotKind::Op });
+        outstanding.push_back(Slot { id, at: Instant::now(), kind: SlotKind::Op, rows: 1 });
         sends += 1;
         if cfg.cancel_every > 0 && op % cfg.cancel_every == cfg.cancel_every - 1 {
             let cid = client.send_cancel(id)?;
-            outstanding.push_back(Slot { id: cid, at: Instant::now(), kind: SlotKind::Cancel });
+            outstanding.push_back(Slot { id: cid, at: Instant::now(), kind: SlotKind::Cancel, rows: 0 });
             sends += 1;
         }
     }
@@ -531,11 +746,90 @@ fn drive_connection(addr: SocketAddr, cfg: &LoadgenConfig, conn_index: usize) ->
     // replies could all be suppressed
     if may_suppress && !outstanding.is_empty() {
         let fid = client.send_stats()?;
-        outstanding.push_back(Slot { id: fid, at: Instant::now(), kind: SlotKind::Fence });
+        outstanding.push_back(Slot { id: fid, at: Instant::now(), kind: SlotKind::Fence, rows: 0 });
     }
     while !outstanding.is_empty() {
         if recv_one(&mut client, &mut outstanding, &mut out).is_err() {
             // connection died with replies outstanding: all lost
+            out.lost += outstanding.iter().filter(|s| s.kind == SlotKind::Op).count() as u64;
+            break;
+        }
+    }
+    Ok(out)
+}
+
+/// The `train_stream` variant of [`drive_connection`]: rows travel in
+/// binary chunks of up to `chunk` rows, each an ordinary admitted
+/// request (acked, cancellable, deadline-bound). Sessions rotate per
+/// chunk; every touched session's stream is closed with a `stream_end`,
+/// which is always answered and so bounds the tail drain without a
+/// `stats` fence.
+fn drive_stream_connection(
+    addr: SocketAddr,
+    cfg: &LoadgenConfig,
+    conn_index: usize,
+    chunk: usize,
+) -> Result<ConnOutcome> {
+    let mut client = WireClient::connect(addr)?;
+    client.set_deadline_ms(cfg.deadline_ms);
+    let may_suppress = cfg.deadline_ms.is_some() || cfg.cancel_every > 0;
+    let mut rng = run_rng(cfg.seed, conn_index);
+    let normal = Normal::standard();
+    let mut outstanding: VecDeque<Slot> = VecDeque::new();
+    let mut out = ConnOutcome::new();
+    let mut x = vec![0.0; cfg.dim];
+    let mut xs = Vec::with_capacity(chunk * cfg.dim);
+    let mut ys = Vec::with_capacity(chunk);
+    let mut touched: Vec<u64> = Vec::new();
+    let mut remaining = cfg.rows_per_connection;
+    let mut sends = 0usize;
+    let mut killed = false;
+    let n_chunks = cfg.rows_per_connection.div_ceil(chunk);
+    'chunks: for ci in 0..n_chunks {
+        while outstanding.len() >= cfg.window {
+            plant_fence_if_needed(&mut client, &mut outstanding, may_suppress)?;
+            recv_one(&mut client, &mut outstanding, &mut out)?;
+        }
+        if cfg.kill_after.is_some_and(|k| sends >= k) {
+            killed = true;
+            break 'chunks;
+        }
+        let session = cfg.sessions[(conn_index + ci) % cfg.sessions.len()];
+        if !touched.contains(&session) {
+            touched.push(session);
+        }
+        let rows_here = chunk.min(remaining);
+        remaining -= rows_here;
+        xs.clear();
+        ys.clear();
+        for _ in 0..rows_here {
+            normal.fill(&mut rng, &mut x);
+            xs.extend_from_slice(&x);
+            ys.push(x[0].sin());
+        }
+        let id = client.send_stream_chunk(session, &xs, &ys)?;
+        outstanding.push_back(Slot { id, at: Instant::now(), kind: SlotKind::Op, rows: rows_here });
+        sends += 1;
+        if cfg.cancel_every > 0 && ci % cfg.cancel_every == cfg.cancel_every - 1 {
+            let cid = client.send_cancel(id)?;
+            outstanding.push_back(Slot { id: cid, at: Instant::now(), kind: SlotKind::Cancel, rows: 0 });
+            sends += 1;
+        }
+    }
+    if killed {
+        // abrupt mid-pipeline death: abandon the window and leave the
+        // streams dangling — the daemon's ledger must still close
+        out.lost += outstanding.iter().filter(|s| s.kind == SlotKind::Op).count() as u64;
+        return Ok(out);
+    }
+    // close every stream this connection opened; the summaries are
+    // instrumentation (Fence), not ops
+    for &session in &touched {
+        let fid = client.send_stream_end(session)?;
+        outstanding.push_back(Slot { id: fid, at: Instant::now(), kind: SlotKind::Fence, rows: 0 });
+    }
+    while !outstanding.is_empty() {
+        if recv_one(&mut client, &mut outstanding, &mut out).is_err() {
             out.lost += outstanding.iter().filter(|s| s.kind == SlotKind::Op).count() as u64;
             break;
         }
@@ -555,7 +849,7 @@ fn plant_fence_if_needed(
         return Ok(());
     }
     let fid = client.send_stats()?;
-    outstanding.push_back(Slot { id: fid, at: Instant::now(), kind: SlotKind::Fence });
+    outstanding.push_back(Slot { id: fid, at: Instant::now(), kind: SlotKind::Fence, rows: 0 });
     Ok(())
 }
 
@@ -590,6 +884,7 @@ fn recv_one(
             out.latency.record(slot.at.elapsed().as_secs_f64().max(1e-9));
             if reply.ok {
                 out.ok += 1;
+                out.ok_rows += slot.rows as u64;
             } else {
                 out.errs += 1;
                 let msg = reply.error.as_deref().unwrap_or("");

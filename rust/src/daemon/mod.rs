@@ -23,36 +23,80 @@
 //! ## Frame format
 //!
 //! Both directions: a 4-byte **big-endian** `u32` payload length, then
-//! that many bytes of UTF-8 JSON (one document per frame — see
-//! [`framing`]). Frames above [`DaemonConfig::max_frame`] are rejected
-//! with a diagnostic and the connection is closed (the stream cannot be
-//! resynced past an untrusted length). A *malformed payload* in a
-//! well-formed frame only fails that request: the daemon replies
-//! `ok:false` and keeps the connection.
+//! that many payload bytes (see [`framing`]). Frames above
+//! [`DaemonConfig::max_frame`] are rejected with a diagnostic and the
+//! connection is closed (the stream cannot be resynced past an
+//! untrusted length). A *malformed payload* in a well-formed frame only
+//! fails that request: the daemon replies `ok:false` and keeps the
+//! connection.
+//!
+//! The payload is one of **two encodings**, distinguished by its first
+//! byte, interleavable freely on one connection:
+//!
+//! * **JSON** (the default — every frame not starting with the magic
+//!   byte): one UTF-8 JSON document per frame.
+//! * **Binary** (first byte [`wirebin::MAGIC`] = `0xBF`, which can
+//!   never start a JSON document): a fixed header (verb tag, id,
+//!   session/group, `n`, `d`, optional `deadline_ms`) followed by raw
+//!   little-endian `f64` rows — no JSON tree, no text float round-trip,
+//!   **bitwise by construction**. Only the data verbs have binary
+//!   layouts (`train`, `train_batch`, `predict`, `predict_batch`,
+//!   `train_diffusion`, plus the stream verbs below); control-plane
+//!   verbs stay JSON. Each reply uses its request's encoding. No prior
+//!   negotiation is required — the magic byte *is* the negotiation —
+//!   but a client can probe support with the `hello` verb first. Layout
+//!   details live in [`wirebin`].
 //!
 //! ## Verbs
 //!
-//! Requests are objects: `{"id": n, "verb": "...", ...}`. `id` is an
-//! arbitrary client-chosen integer echoed in the reply; replies always
-//! arrive in request order per connection (pipelining is encouraged —
-//! it is what the coalescer feeds on).
+//! JSON requests are objects: `{"id": n, "verb": "...", ...}`. `id` is
+//! an arbitrary client-chosen integer echoed in the reply; replies
+//! always arrive in request order per connection (pipelining is
+//! encouraged — it is what the coalescer feeds on).
 //!
-//! | verb | request fields | ok-reply fields |
-//! |---|---|---|
-//! | `train` | `session`, `x` (row), `y` | `errors` (1 a-priori error) |
-//! | `train_batch` | `session`, `xs` (row-major `[n,d]`), `ys` | `errors` (n) |
-//! | `train_diffusion` | `group`, `xs` (`[rounds·nodes, d]`), `ys` | `errors` |
-//! | `predict` | `session`, `x` | `y` |
-//! | `predict_batch` | `session`, `xs` | `ys` |
-//! | `snapshot` | `session` | `snapshot` (versioned JSON document) |
-//! | `restore` | `session`, `snapshot` | — (bare `ok`) |
-//! | `stats` | — | `stats` (service/latency/coalesce/daemon counters) |
-//! | `cancel` | `target` (request id on this connection) | `cancelled` (bool) |
+//! | verb | request fields | ok-reply fields | binary tag |
+//! |---|---|---|---|
+//! | `train` | `session`, `x` (row), `y` | `errors` (1 a-priori error) | `VT_TRAIN` |
+//! | `train_batch` | `session`, `xs` (row-major `[n,d]`), `ys` | `errors` (n) | `VT_TRAIN_BATCH` |
+//! | `train_diffusion` | `group`, `xs` (`[rounds·nodes, d]`), `ys` | `errors` | `VT_TRAIN_DIFFUSION` |
+//! | `predict` | `session`, `x` | `y` | `VT_PREDICT` |
+//! | `predict_batch` | `session`, `xs` | `ys` | `VT_PREDICT_BATCH` |
+//! | `snapshot` | `session` | `snapshot` (versioned JSON document) | — |
+//! | `restore` | `session`, `snapshot` | — (bare `ok`) | — |
+//! | `stats` | — | `stats` (service/latency/coalesce/daemon counters) | — |
+//! | `cancel` | `target` (request id on this connection) | `cancelled` (bool) | — |
+//! | `hello` | — | `hello` (`binary`, `train_stream`, `max_frame`) | — |
+//! | `metrics` | — | `metrics` (Prometheus text exposition, see [`prom`]) | — |
+//! | `train_stream` chunk | binary only: rows `[n,d]` + `ys` | `errors` (n) | `VT_STREAM_CHUNK` |
+//! | `train_stream` end | binary only: none | `rows`, `chunks` | `VT_STREAM_END` |
 //!
-//! Every reply is `{"id":N,"ok":true,...}` or
+//! Every JSON reply is `{"id":N,"ok":true,...}` or
 //! `{"id":N,"ok":false,"error":"..."}` (`id` 0 when the request's id
 //! was unparseable). Numbers are serialized shortest-roundtrip, so
 //! `f64` values survive the wire **bitwise** (non-finite → `null`).
+//!
+//! ## The streaming train verb (`train_stream`)
+//!
+//! A high-rate producer streams rows to one session as a sequence of
+//! binary `VT_STREAM_CHUNK` frames (any chunk sizes, any count),
+//! terminated by `VT_STREAM_END`. There is no open ceremony: the first
+//! chunk *is* the stream. Semantics:
+//!
+//! * Chunk rows feed the coalescer's per-session row buffer **directly**
+//!   (one stake per chunk, demuxed by row count), so chunks share
+//!   batches with ordinary single-row traffic and bitwise parity with
+//!   sequential dispatch is preserved. Each chunk is acked with its `n`
+//!   a-priori errors.
+//! * Chunks are ordinary admitted requests: the in-flight cap, queue
+//!   admission, `deadline_ms` (per chunk) and `cancel` (by chunk id)
+//!   all apply, and a suppressed chunk ack is counted in
+//!   `suppressed_replies` — the frame ledger stays a closed
+//!   conservation law with streams in play.
+//! * `stream_end` is the stream's **fence**: cap-exempt, never
+//!   rejected or suppressed, answered with the totals of chunks/rows
+//!   *admitted* on this connection for that session (rejected chunks
+//!   don't count). A windowed streaming client bounds its drain wait on
+//!   the summary exactly like a pipelined client uses a `stats` fence.
 //!
 //! ## Deadlines and cancellation (best-effort, exactly-counted)
 //!
@@ -105,6 +149,8 @@
 
 pub mod framing;
 pub mod loadgen;
+pub mod prom;
+pub mod wirebin;
 
 #[cfg(any(test, feature = "fault-injection"))]
 pub mod fault;
@@ -190,6 +236,14 @@ pub struct DaemonStats {
     /// `frames_out` and `suppressed_replies` they conserve `frames_in`
     /// at quiescence.
     pub dropped_frames: AtomicU64,
+    /// Request frames that arrived in the binary encoding (a subset of
+    /// `frames_in`).
+    pub binary_frames_in: AtomicU64,
+    /// `train_stream` chunks admitted (across all connections/sessions).
+    pub stream_chunks: AtomicU64,
+    /// Rows admitted via `train_stream` chunks (a subset of the
+    /// coalescer's `train_rows` when coalescing is on).
+    pub stream_rows: AtomicU64,
 }
 
 /// A running TCP front door over a [`CoordinatorService`].

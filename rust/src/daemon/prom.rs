@@ -1,0 +1,401 @@
+//! Prometheus text exposition for the serving stack's counters.
+//!
+//! One function, [`render_metrics`], renders every counter family the
+//! stack maintains — [`ServiceStats`] (+ its
+//! [`SpillStats`](crate::coordinator::SpillStats) and per-class latency
+//! histograms), [`CoalesceStats`] and [`DaemonStats`]
+//! — in the Prometheus plain-text format (version 0.0.4): `# HELP` /
+//! `# TYPE` comment pairs followed by `name{labels} value` samples.
+//! The daemon serves it via the `metrics` verb (see [`crate::daemon`]),
+//! so any scrape bridge just needs a one-frame TCP round-trip.
+//!
+//! Conventions:
+//!
+//! * every metric is prefixed `rffkaf_`;
+//! * monotone counters end in `_total`;
+//! * latency histograms export as a `summary` family
+//!   (`rffkaf_request_latency_seconds`) with one `class` label per
+//!   router request class and `quantile` ∈ {0.5, 0.95, 0.99}, plus the
+//!   conventional `_sum`/`_count` children.
+
+use std::sync::atomic::Ordering;
+use std::sync::PoisonError;
+
+use crate::coordinator::ServiceStats;
+
+use super::{CoalesceStats, DaemonStats};
+
+/// Append one `# HELP`/`# TYPE` header pair.
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// Append one counter metric with its headers.
+fn counter(out: &mut String, name: &str, help: &str, value: u64) {
+    header(out, name, help, "counter");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&value.to_string());
+    out.push('\n');
+}
+
+/// Append one gauge metric with its headers.
+fn gauge(out: &mut String, name: &str, help: &str, value: f64) {
+    header(out, name, help, "gauge");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&value.to_string());
+    out.push('\n');
+}
+
+/// Render the full exposition document. `sessions` is the current
+/// resident session count; `coalesce_enabled` gates the coalescer gauge
+/// (its counters are rendered either way — zeros are informative).
+pub fn render_metrics(
+    svc: &ServiceStats,
+    sessions: usize,
+    coalesce_enabled: bool,
+    c: &CoalesceStats,
+    d: &DaemonStats,
+) -> String {
+    let mut out = String::with_capacity(4096);
+    let ld = Ordering::Relaxed;
+
+    // ── service ─────────────────────────────────────────────────────
+    counter(
+        &mut out,
+        "rffkaf_trained_rows_total",
+        "Training rows accepted by the coordinator.",
+        svc.trained.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_diffusion_rows_total",
+        "Diffusion node-rows applied via train_diffusion.",
+        svc.diffusion_rows.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_predicted_total",
+        "Predictions served.",
+        svc.predicted.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_lockfree_predicts_total",
+        "Prediction rows served off the lock-free published state.",
+        svc.lockfree_predicts.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_predict_batches_total",
+        "PJRT predict batches dispatched.",
+        svc.predict_batches.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_predict_batch_rows_total",
+        "Rows in dispatched PJRT predict batches.",
+        svc.predict_rows.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_errors_total",
+        "Requests that returned an error.",
+        svc.errors.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_dropped_responses_total",
+        "Responses undeliverable because the requester was gone.",
+        svc.dropped_responses.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_deadline_rejects_total",
+        "Requests rejected pre-dispatch with an already-expired deadline.",
+        svc.deadline_rejects.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_deadline_drops_total",
+        "Requests shed post-admission by deadline expiry (reply suppressed).",
+        svc.deadline_drops.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_cancelled_total",
+        "Cancel-induced request resolutions.",
+        svc.cancelled.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_snapshots_total",
+        "Session snapshots serialized.",
+        svc.snapshots.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_restored_total",
+        "Sessions restored from snapshots.",
+        svc.restored.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_poisoned_recoveries_total",
+        "Session locks recovered after a worker panic.",
+        svc.poisoned_recoveries.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_spill_evictions_total",
+        "Sessions evicted to the spill sink.",
+        svc.spill.evictions.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_spill_restores_total",
+        "Sessions restored from the spill sink.",
+        svc.spill.restores.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_spill_restore_failures_total",
+        "Spilled snapshots that failed to load or decode.",
+        svc.spill.restore_failures.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_spill_eviction_failures_total",
+        "Evictions whose sink write failed (session re-admitted).",
+        svc.spill.eviction_failures.load(ld),
+    );
+    gauge(
+        &mut out,
+        "rffkaf_sessions_resident",
+        "Sessions currently resident in the store.",
+        sessions as f64,
+    );
+
+    // ── latency (summary family, one class label per request class) ─
+    let lat = "rffkaf_request_latency_seconds";
+    header(&mut out, lat, "Router service time by request class.", "summary");
+    for (class, hist) in svc.latency.classes() {
+        let h = hist.lock().unwrap_or_else(PoisonError::into_inner);
+        for q in [0.5, 0.95, 0.99] {
+            let v = h.quantile(q);
+            out.push_str(&format!("{lat}{{class=\"{class}\",quantile=\"{q}\"}} {v}\n"));
+        }
+        // LogHistogram keeps mean and count; sum = mean * count (0 when
+        // empty so the exposition never emits NaN)
+        let count = h.count();
+        let sum = if count == 0 { 0.0 } else { h.mean() * count as f64 };
+        out.push_str(&format!("{lat}_sum{{class=\"{class}\"}} {sum}\n"));
+        out.push_str(&format!("{lat}_count{{class=\"{class}\"}} {count}\n"));
+    }
+
+    // ── coalescer ───────────────────────────────────────────────────
+    gauge(
+        &mut out,
+        "rffkaf_coalesce_enabled",
+        "1 when cross-connection coalescing is active.",
+        if coalesce_enabled { 1.0 } else { 0.0 },
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_train_rows_total",
+        "Train rows accepted into coalescing buffers.",
+        c.train_rows.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_train_batches_total",
+        "Coalesced TrainBatch requests dispatched.",
+        c.train_batches.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_predict_rows_total",
+        "Predict rows accepted into coalescing buffers.",
+        c.predict_rows.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_predict_batches_total",
+        "Coalesced PredictBatch requests dispatched.",
+        c.predict_batches.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_size_flushes_total",
+        "Batch dispatches triggered by a full buffer.",
+        c.size_flushes.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_deadline_flushes_total",
+        "Batch dispatches triggered by the flush deadline.",
+        c.deadline_flushes.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_completion_flushes_total",
+        "Train dispatches triggered by an in-flight batch completing.",
+        c.completion_flushes.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_coalesce_dropped_replies_total",
+        "Per-row replies undeliverable at demux.",
+        c.dropped_replies.load(ld),
+    );
+
+    // ── daemon ──────────────────────────────────────────────────────
+    counter(
+        &mut out,
+        "rffkaf_connections_accepted_total",
+        "TCP connections accepted.",
+        d.connections_accepted.load(ld),
+    );
+    counter(&mut out, "rffkaf_frames_in_total", "Request frames read.", d.frames_in.load(ld));
+    counter(
+        &mut out,
+        "rffkaf_frames_out_total",
+        "Reply frames written.",
+        d.frames_out.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_binary_frames_in_total",
+        "Request frames in the binary encoding (subset of frames_in).",
+        d.binary_frames_in.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_stream_chunks_total",
+        "train_stream chunks admitted.",
+        d.stream_chunks.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_stream_rows_total",
+        "Rows admitted via train_stream chunks.",
+        d.stream_rows.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_rejected_in_flight_total",
+        "Frames rejected by the per-connection in-flight cap.",
+        d.rejected_in_flight.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_rejected_queue_full_total",
+        "Requests rejected because the router queue was full.",
+        d.rejected_queue_full.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_protocol_errors_total",
+        "Unparseable frames and oversized prefixes.",
+        d.protocol_errors.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_suppressed_replies_total",
+        "Replies deliberately withheld (deadline drops, in-flight cancels).",
+        d.suppressed_replies.load(ld),
+    );
+    counter(
+        &mut out,
+        "rffkaf_dropped_frames_total",
+        "Replies undeliverable because the peer was gone.",
+        d.dropped_frames.load(ld),
+    );
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn render_default() -> String {
+        let svc = ServiceStats::default();
+        let c = CoalesceStats::default();
+        let d = DaemonStats::default();
+        render_metrics(&svc, 0, true, &c, &d)
+    }
+
+    #[test]
+    fn exposition_is_well_formed() {
+        let text = render_default();
+        let mut families = 0;
+        for (i, line) in text.lines().enumerate() {
+            assert!(!line.is_empty(), "no blank lines in the exposition");
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                // every HELP is immediately followed by its TYPE
+                let name = rest.split(' ').next().unwrap();
+                assert!(name.starts_with("rffkaf_"), "prefix convention: {name}");
+                let next = text.lines().nth(i + 1).expect("TYPE follows HELP");
+                assert!(
+                    next.starts_with(&format!("# TYPE {name} ")),
+                    "HELP/TYPE pairing for {name}, got {next}"
+                );
+                families += 1;
+            } else if !line.starts_with('#') {
+                // sample line: `name{labels} value` — value parses
+                let (_, value) = line.rsplit_once(' ').expect("sample has a value");
+                value.parse::<f64>().unwrap_or_else(|_| panic!("numeric value in {line:?}"));
+            }
+        }
+        assert!(families > 20, "expected a full counter inventory, got {families} families");
+    }
+
+    #[test]
+    fn counters_reflect_the_loaded_values() {
+        let svc = ServiceStats::default();
+        svc.trained.store(12345, Ordering::Relaxed);
+        svc.spill.evictions.store(3, Ordering::Relaxed);
+        let c = CoalesceStats::default();
+        c.train_batches.store(77, Ordering::Relaxed);
+        let d = DaemonStats::default();
+        d.binary_frames_in.store(9000, Ordering::Relaxed);
+        d.stream_rows.store(4096, Ordering::Relaxed);
+        let text = render_metrics(&svc, 42, false, &c, &d);
+        assert!(text.contains("rffkaf_trained_rows_total 12345\n"), "{text}");
+        assert!(text.contains("rffkaf_spill_evictions_total 3\n"));
+        assert!(text.contains("rffkaf_coalesce_train_batches_total 77\n"));
+        assert!(text.contains("rffkaf_binary_frames_in_total 9000\n"));
+        assert!(text.contains("rffkaf_stream_rows_total 4096\n"));
+        assert!(text.contains("rffkaf_sessions_resident 42\n"));
+        assert!(text.contains("rffkaf_coalesce_enabled 0\n"));
+    }
+
+    #[test]
+    fn latency_summary_has_every_class_and_quantile() {
+        let text = render_default();
+        for class in ["train", "predict", "snapshot", "restore"] {
+            for q in ["0.5", "0.95", "0.99"] {
+                let needle = format!(
+                    "rffkaf_request_latency_seconds{{class=\"{class}\",quantile=\"{q}\"}} "
+                );
+                assert!(text.contains(&needle), "missing {needle}");
+            }
+            assert!(text
+                .contains(&format!("rffkaf_request_latency_seconds_sum{{class=\"{class}\"}} 0")));
+            assert!(text
+                .contains(&format!("rffkaf_request_latency_seconds_count{{class=\"{class}\"}} 0")));
+        }
+        assert!(text.contains("# TYPE rffkaf_request_latency_seconds summary"));
+    }
+}

@@ -1,0 +1,468 @@
+//! Binary frame codec for the daemon's data verbs.
+//!
+//! JSON frames (see [`super`] module docs) stay the default and the
+//! negotiation-free contract; a client opts into the binary fast path
+//! per frame by making the first payload byte [`MAGIC`] (`0xBF`), which
+//! can never begin a JSON document (it is not a valid UTF-8 start byte,
+//! and JSON frames here always start with `{`). The two encodings can be
+//! interleaved freely on one connection; each reply is encoded the same
+//! way as its request.
+//!
+//! The point is to take text out of the per-row hot loop: rows travel as
+//! raw little-endian `f64` bits, decoded straight into the coalescer's
+//! row buffers with no `JsonValue` tree and no text float round-trip —
+//! so binary traffic is **bitwise identical** to JSON traffic by
+//! construction (JSON already pins shortest-roundtrip exactness; binary
+//! never leaves the bit domain at all).
+//!
+//! ## Request layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     MAGIC (0xBF)
+//! 1       1     verb tag (VT_*)
+//! 2       1     flags (bit 0: deadline_ms present; other bits must be 0)
+//! 3       1     reserved, must be 0
+//! 4       8     id        u64 LE
+//! 12      8     target    u64 LE   (session id, or group id for diffusion)
+//! 20      4     n         u32 LE   (row count)
+//! 24      4     d         u32 LE   (row length)
+//! [28     8     deadline_ms u64 LE  — only if flags bit 0 set]
+//! ...     n*d*8 xs        f64 LE, row-major
+//! ...     n*8   ys        f64 LE   (train-class verbs only)
+//! ```
+//!
+//! `VT_TRAIN` / `VT_PREDICT` require `n == 1`; `VT_STREAM_END` carries
+//! no payload (`n == 0`, `d == 0`). `VT_STREAM_CHUNK` is the streaming
+//! train verb's row carrier: same shape as `VT_TRAIN_BATCH`, but acked
+//! with a per-chunk `RT_ERRORS` and totalled by the `VT_STREAM_END`
+//! summary (see the module docs in [`super`] for stream semantics).
+//!
+//! ## Reply layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     MAGIC (0xBF)
+//! 1       1     reply tag (RT_*)
+//! 2       2     reserved, must be 0
+//! 4       8     id  u64 LE
+//! 12      4     n   u32 LE
+//! 16      ...   payload:
+//!               RT_ERRORS   n f64 LE         (train/train_batch/chunk acks)
+//!               RT_Y        one f64 LE       (n == 1)
+//!               RT_YS       n f64 LE
+//!               RT_ERROR    n UTF-8 bytes    (error message)
+//!               RT_SUMMARY  rows u64 LE + chunks u64 LE  (n == 2)
+//! ```
+//!
+//! Verbs with no compact payload (`snapshot`, `restore`, `stats`,
+//! `cancel`, `hello`, `metrics`) have no binary encoding — they are
+//! control-plane traffic, cold by definition, and stay JSON.
+
+use std::io;
+
+/// First payload byte of every binary frame. Not a valid UTF-8 start
+/// byte, so it can never collide with a JSON frame.
+pub const MAGIC: u8 = 0xBF;
+
+/// Fixed request header length (without the optional deadline word).
+pub const HEADER_LEN: usize = 28;
+/// Fixed reply header length.
+pub const REPLY_HEADER_LEN: usize = 16;
+
+/// Flags bit 0: an 8-byte `deadline_ms` word follows the fixed header.
+pub const FLAG_DEADLINE: u8 = 0x01;
+
+/// Verb tags (request byte 1).
+pub const VT_TRAIN: u8 = 1;
+pub const VT_TRAIN_BATCH: u8 = 2;
+pub const VT_PREDICT: u8 = 3;
+pub const VT_PREDICT_BATCH: u8 = 4;
+pub const VT_TRAIN_DIFFUSION: u8 = 5;
+pub const VT_STREAM_CHUNK: u8 = 6;
+pub const VT_STREAM_END: u8 = 7;
+
+/// Reply tags (reply byte 1).
+pub const RT_ERRORS: u8 = 1;
+pub const RT_Y: u8 = 2;
+pub const RT_YS: u8 = 3;
+pub const RT_ERROR: u8 = 4;
+pub const RT_SUMMARY: u8 = 5;
+
+/// Parsed fixed header of a binary request frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinHeader {
+    /// One of the `VT_*` verb tags.
+    pub tag: u8,
+    /// Request id (echoed on the reply).
+    pub id: u64,
+    /// Session id, or diffusion group id for `VT_TRAIN_DIFFUSION`.
+    pub target: u64,
+    /// Relative deadline in milliseconds, if the flag bit was set.
+    pub deadline_ms: Option<u64>,
+    /// Row count.
+    pub n: u32,
+    /// Row length.
+    pub d: u32,
+}
+
+fn is_train_class(tag: u8) -> bool {
+    matches!(tag, VT_TRAIN | VT_TRAIN_BATCH | VT_TRAIN_DIFFUSION | VT_STREAM_CHUNK)
+}
+
+/// True if `frame` is a binary frame (starts with [`MAGIC`]).
+pub fn is_binary(frame: &[u8]) -> bool {
+    frame.first() == Some(&MAGIC)
+}
+
+/// Encode a binary request frame into `out` (cleared first). `ys` must
+/// be empty for predict-class verbs and `VT_STREAM_END`; for
+/// train-class verbs `ys.len() == h.n` and `xs.len() == h.n * h.d`.
+pub fn encode_request(out: &mut Vec<u8>, h: &BinHeader, xs: &[f64], ys: &[f64]) {
+    debug_assert_eq!(xs.len(), h.n as usize * h.d as usize);
+    debug_assert_eq!(ys.len(), if is_train_class(h.tag) { h.n as usize } else { 0 });
+    out.clear();
+    out.reserve(HEADER_LEN + 8 + 8 * (xs.len() + ys.len()));
+    out.push(MAGIC);
+    out.push(h.tag);
+    out.push(if h.deadline_ms.is_some() { FLAG_DEADLINE } else { 0 });
+    out.push(0);
+    out.extend_from_slice(&h.id.to_le_bytes());
+    out.extend_from_slice(&h.target.to_le_bytes());
+    out.extend_from_slice(&h.n.to_le_bytes());
+    out.extend_from_slice(&h.d.to_le_bytes());
+    if let Some(ms) = h.deadline_ms {
+        out.extend_from_slice(&ms.to_le_bytes());
+    }
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in ys {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().unwrap())
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.try_into().unwrap())
+}
+
+fn decode_f64s(b: &[u8], n: usize) -> Vec<f64> {
+    debug_assert_eq!(b.len(), n * 8);
+    b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Parse a binary request frame into `(header, xs, ys)`.
+///
+/// Errors carry `(id, message)` so the caller can address the error
+/// reply — `id` is 0 when the frame is too short to even contain one.
+/// Every size computation is checked so a hostile header cannot
+/// overflow into a bogus "payload fits" conclusion.
+pub fn parse_request(frame: &[u8]) -> Result<(BinHeader, Vec<f64>, Vec<f64>), (u64, String)> {
+    debug_assert!(is_binary(frame));
+    if frame.len() < HEADER_LEN {
+        return Err((
+            0,
+            format!(
+                "binary frame of {} bytes is shorter than the {HEADER_LEN}-byte header",
+                frame.len()
+            ),
+        ));
+    }
+    let id = le_u64(&frame[4..12]);
+    let tag = frame[1];
+    let flags = frame[2];
+    if frame[3] != 0 {
+        return Err((id, format!("binary frame reserved byte is {:#04x}, must be 0", frame[3])));
+    }
+    if flags & !FLAG_DEADLINE != 0 {
+        return Err((id, format!("binary frame has unknown flag bits {:#04x}", flags & !FLAG_DEADLINE)));
+    }
+    let target = le_u64(&frame[12..20]);
+    let n = le_u32(&frame[20..24]);
+    let d = le_u32(&frame[24..28]);
+    let mut off = HEADER_LEN;
+    let deadline_ms = if flags & FLAG_DEADLINE != 0 {
+        if frame.len() < off + 8 {
+            return Err((id, "binary frame truncated inside the deadline_ms word".to_string()));
+        }
+        let ms = le_u64(&frame[off..off + 8]);
+        off += 8;
+        Some(ms)
+    } else {
+        None
+    };
+    let (xs_n, ys_n): (u64, u64) = match tag {
+        VT_TRAIN | VT_PREDICT => {
+            if n != 1 {
+                return Err((id, format!("binary verb tag {tag} is single-row but n is {n}")));
+            }
+            (d as u64, if tag == VT_TRAIN { 1 } else { 0 })
+        }
+        VT_TRAIN_BATCH | VT_TRAIN_DIFFUSION | VT_STREAM_CHUNK => {
+            (n as u64 * d as u64, n as u64)
+        }
+        VT_PREDICT_BATCH => (n as u64 * d as u64, 0),
+        VT_STREAM_END => {
+            if n != 0 || d != 0 {
+                return Err((id, format!("stream_end carries no rows but n={n} d={d}")));
+            }
+            (0, 0)
+        }
+        other => {
+            return Err((
+                id,
+                format!(
+                    "unknown binary verb tag {other} (expected train=1, train_batch=2, \
+                     predict=3, predict_batch=4, train_diffusion=5, stream_chunk=6 or \
+                     stream_end=7)"
+                ),
+            ));
+        }
+    };
+    let body = (frame.len() - off) as u64;
+    let expect = (xs_n + ys_n).checked_mul(8).ok_or_else(|| {
+        (id, format!("binary frame declares n={n} d={d}: payload size overflows"))
+    })?;
+    if body != expect {
+        return Err((
+            id,
+            format!(
+                "binary frame payload is {body} bytes but n={n} d={d} requires {expect}"
+            ),
+        ));
+    }
+    let xs = decode_f64s(&frame[off..off + xs_n as usize * 8], xs_n as usize);
+    let ys = decode_f64s(&frame[off + xs_n as usize * 8..], ys_n as usize);
+    Ok((BinHeader { tag, id, target, deadline_ms, n, d }, xs, ys))
+}
+
+fn reply_header(out: &mut Vec<u8>, tag: u8, id: u64, n: u32) {
+    out.clear();
+    out.push(MAGIC);
+    out.push(tag);
+    out.extend_from_slice(&[0, 0]);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&n.to_le_bytes());
+}
+
+/// Encode an `RT_ERRORS` / `RT_Y` / `RT_YS` reply carrying `vals`.
+pub fn encode_reply_f64s(out: &mut Vec<u8>, tag: u8, id: u64, vals: &[f64]) {
+    debug_assert!(matches!(tag, RT_ERRORS | RT_Y | RT_YS));
+    debug_assert!(tag != RT_Y || vals.len() == 1);
+    reply_header(out, tag, id, vals.len() as u32);
+    out.reserve(8 * vals.len());
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode an `RT_ERROR` reply carrying a UTF-8 diagnostic.
+pub fn encode_reply_error(out: &mut Vec<u8>, id: u64, msg: &str) {
+    reply_header(out, RT_ERROR, id, msg.len() as u32);
+    out.extend_from_slice(msg.as_bytes());
+}
+
+/// Encode an `RT_SUMMARY` stream-end reply: total admitted rows and chunks.
+pub fn encode_reply_summary(out: &mut Vec<u8>, id: u64, rows: u64, chunks: u64) {
+    reply_header(out, RT_SUMMARY, id, 2);
+    out.extend_from_slice(&rows.to_le_bytes());
+    out.extend_from_slice(&chunks.to_le_bytes());
+}
+
+/// Parsed binary reply frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinReply {
+    /// Request id this reply answers.
+    pub id: u64,
+    /// One of the `RT_*` reply tags.
+    pub tag: u8,
+    /// Payload of `RT_ERRORS` / `RT_Y` / `RT_YS`; empty otherwise.
+    pub vals: Vec<f64>,
+    /// Diagnostic of an `RT_ERROR` reply.
+    pub error: Option<String>,
+    /// `(rows, chunks)` of an `RT_SUMMARY` reply.
+    pub summary: Option<(u64, u64)>,
+}
+
+/// Parse a binary reply frame (client side).
+pub fn parse_reply(frame: &[u8]) -> io::Result<BinReply> {
+    let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+    if !is_binary(frame) || frame.len() < REPLY_HEADER_LEN {
+        return Err(bad(format!(
+            "binary reply of {} bytes is shorter than the {REPLY_HEADER_LEN}-byte header",
+            frame.len()
+        )));
+    }
+    let tag = frame[1];
+    let id = le_u64(&frame[4..12]);
+    let n = le_u32(&frame[12..16]) as usize;
+    let body = &frame[REPLY_HEADER_LEN..];
+    let mut reply = BinReply { id, tag, vals: Vec::new(), error: None, summary: None };
+    match tag {
+        RT_ERRORS | RT_YS | RT_Y => {
+            if tag == RT_Y && n != 1 {
+                return Err(bad(format!("RT_Y reply declares n={n}, must be 1")));
+            }
+            if body.len() != n * 8 {
+                return Err(bad(format!(
+                    "binary reply payload is {} bytes but n={n} requires {}",
+                    body.len(),
+                    n * 8
+                )));
+            }
+            reply.vals = decode_f64s(body, n);
+        }
+        RT_ERROR => {
+            if body.len() != n {
+                return Err(bad(format!(
+                    "RT_ERROR payload is {} bytes but n={n}",
+                    body.len()
+                )));
+            }
+            let msg = std::str::from_utf8(body)
+                .map_err(|e| bad(format!("RT_ERROR payload is not UTF-8: {e}")))?;
+            reply.error = Some(msg.to_string());
+        }
+        RT_SUMMARY => {
+            if n != 2 || body.len() != 16 {
+                return Err(bad(format!(
+                    "RT_SUMMARY must carry exactly two u64 words, got n={n} payload {} bytes",
+                    body.len()
+                )));
+            }
+            reply.summary = Some((le_u64(&body[..8]), le_u64(&body[8..16])));
+        }
+        other => return Err(bad(format!("unknown binary reply tag {other}"))),
+    }
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_is_bitwise_exact_including_nan() {
+        let xs = vec![1.5, -0.0, f64::NAN, f64::MIN_POSITIVE, 1e308, -3.25];
+        let ys = vec![f64::NAN.copysign(-1.0), 0.1 + 0.2];
+        let h = BinHeader {
+            tag: VT_TRAIN_BATCH,
+            id: 0xDEAD_BEEF_CAFE,
+            target: 42,
+            deadline_ms: Some(250),
+            n: 2,
+            d: 3,
+        };
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &h, &xs, &ys);
+        assert!(is_binary(&buf));
+        let (h2, xs2, ys2) = parse_request(&buf).unwrap();
+        assert_eq!(h2, h);
+        for (a, b) in xs.iter().zip(&xs2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ys.iter().zip(&ys2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn predict_and_stream_end_shapes() {
+        let mut buf = Vec::new();
+        let h = BinHeader { tag: VT_PREDICT, id: 7, target: 3, deadline_ms: None, n: 1, d: 4 };
+        encode_request(&mut buf, &h, &[1.0, 2.0, 3.0, 4.0], &[]);
+        let (h2, xs, ys) = parse_request(&buf).unwrap();
+        assert_eq!(h2, h);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(ys.is_empty());
+
+        let end = BinHeader { tag: VT_STREAM_END, id: 8, target: 3, deadline_ms: None, n: 0, d: 0 };
+        encode_request(&mut buf, &end, &[], &[]);
+        let (h3, xs3, ys3) = parse_request(&buf).unwrap();
+        assert_eq!(h3.tag, VT_STREAM_END);
+        assert!(xs3.is_empty() && ys3.is_empty());
+    }
+
+    #[test]
+    fn malformed_requests_name_the_defect() {
+        // Too short for a header: id 0.
+        let (id, msg) = parse_request(&[MAGIC, VT_TRAIN]).unwrap_err();
+        assert_eq!(id, 0);
+        assert!(msg.contains("shorter than"), "{msg}");
+
+        // Unknown verb tag, id recovered from the header.
+        let mut buf = Vec::new();
+        let h = BinHeader { tag: VT_TRAIN, id: 99, target: 1, deadline_ms: None, n: 1, d: 1 };
+        encode_request(&mut buf, &h, &[0.0], &[0.0]);
+        buf[1] = 200;
+        let (id, msg) = parse_request(&buf).unwrap_err();
+        assert_eq!(id, 99);
+        assert!(msg.contains("unknown binary verb tag 200"), "{msg}");
+
+        // Payload length mismatch.
+        encode_request(&mut buf, &h, &[0.0], &[0.0]);
+        buf.pop();
+        let (id, msg) = parse_request(&buf).unwrap_err();
+        assert_eq!(id, 99);
+        assert!(msg.contains("requires"), "{msg}");
+
+        // Single-row verb with n != 1.
+        let bad = BinHeader { tag: VT_TRAIN_BATCH, id: 5, target: 1, deadline_ms: None, n: 2, d: 1 };
+        encode_request(&mut buf, &bad, &[0.0, 1.0], &[0.0, 1.0]);
+        buf[1] = VT_TRAIN;
+        let (id, msg) = parse_request(&buf).unwrap_err();
+        assert_eq!(id, 5);
+        assert!(msg.contains("single-row"), "{msg}");
+
+        // Unknown flag bits.
+        encode_request(&mut buf, &h, &[0.0], &[0.0]);
+        buf[2] = 0x82;
+        let (_, msg) = parse_request(&buf).unwrap_err();
+        assert!(msg.contains("unknown flag bits"), "{msg}");
+    }
+
+    #[test]
+    fn replies_roundtrip_every_tag() {
+        let mut buf = Vec::new();
+
+        encode_reply_f64s(&mut buf, RT_ERRORS, 11, &[0.5, f64::NAN, -0.0]);
+        let r = parse_reply(&buf).unwrap();
+        assert_eq!((r.id, r.tag), (11, RT_ERRORS));
+        assert_eq!(r.vals[1].to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.vals[2].to_bits(), (-0.0f64).to_bits());
+
+        encode_reply_f64s(&mut buf, RT_Y, 12, &[2.75]);
+        let r = parse_reply(&buf).unwrap();
+        assert_eq!((r.id, r.tag, r.vals.len()), (12, RT_Y, 1));
+
+        encode_reply_f64s(&mut buf, RT_YS, 13, &[1.0, 2.0]);
+        assert_eq!(parse_reply(&buf).unwrap().vals, vec![1.0, 2.0]);
+
+        encode_reply_error(&mut buf, 14, "session 9 not found");
+        let r = parse_reply(&buf).unwrap();
+        assert_eq!(r.error.as_deref(), Some("session 9 not found"));
+
+        encode_reply_summary(&mut buf, 15, 4096, 64);
+        let r = parse_reply(&buf).unwrap();
+        assert_eq!(r.summary, Some((4096, 64)));
+    }
+
+    #[test]
+    fn malformed_replies_are_invalid_data() {
+        let mut buf = Vec::new();
+        encode_reply_f64s(&mut buf, RT_ERRORS, 1, &[0.0]);
+        buf.pop();
+        assert!(parse_reply(&buf).is_err());
+
+        encode_reply_summary(&mut buf, 2, 1, 1);
+        buf[1] = 99;
+        let e = parse_reply(&buf).unwrap_err();
+        assert!(e.to_string().contains("unknown binary reply tag 99"));
+    }
+}

@@ -30,6 +30,12 @@
 //!   per-session counts exact;
 //! - nothing leaks on any reply path (`dropped_responses == 0`,
 //!   coalescer `dropped_replies == 0`).
+//!
+//! A second, fully deterministic schedule drives the **streaming**
+//! front door (`train_stream` chunks over the binary encoding) through
+//! the same laws: chunks are ordinary admitted requests, so a cancel
+//! storm and an abrupt client death must leave the frame ledger closed
+//! and `Σ samples_seen == trained` exact, row for row.
 
 #![cfg(feature = "fault-injection")]
 
@@ -44,8 +50,8 @@ use rff_kaf::daemon::fault::{
     FaultRng,
 };
 use rff_kaf::daemon::framing::{FrameReader, DEFAULT_MAX_FRAME};
-use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, LoadgenReport, WireClient};
-use rff_kaf::daemon::{Daemon, DaemonConfig, DaemonStats};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, LoadgenReport, WireClient, WireProtocol};
+use rff_kaf::daemon::{CoalesceConfig, Daemon, DaemonConfig, DaemonStats};
 
 const CONNS: usize = 4;
 const SESSIONS_PER_CONN: usize = 4;
@@ -388,6 +394,182 @@ fn corrupt_truncated_and_delayed_frames_fail_no_wider_than_their_frame() {
         survived_trains as usize + 1,
         "exactly the valid frames trained"
     );
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}
+
+/// The streaming front door under chaos: four concurrent connections —
+/// clean JSON rows, a clean `train_stream`, a cancel storm over a
+/// stream, and a stream killed mid-pipeline — against one daemon with
+/// coalescing on. Because every chunk is an ordinary admitted request,
+/// the frame ledger must still close and row conservation must stay
+/// *exact*, not bounded, for every class whose fate the client
+/// observed: a cancel-evicted chunk trains zero rows, a
+/// cancel-suppressed chunk trains all of them, and only the killed
+/// stream's abandoned window is a genuine interval.
+#[test]
+fn streaming_chaos_keeps_frame_ledger_and_row_laws_exact() {
+    const CLEAN_CHUNK: usize = 4;
+    const CANCEL_CHUNK: usize = 2;
+    const CANCEL_EVERY: usize = 5;
+    const KILL_AFTER: usize = 100;
+
+    let svc = Arc::new(CoordinatorService::start(
+        ServiceConfig {
+            workers: 2,
+            first_wait: Duration::from_millis(5),
+            ..ServiceConfig::default()
+        },
+        None,
+    ));
+    let ids: Vec<u64> = (0..CONNS * SESSIONS_PER_CONN)
+        .map(|_| {
+            let cfg = SessionConfig { features: 16, ..SessionConfig::paper_default() };
+            svc.add_session_from_spec(cfg, 7).unwrap()
+        })
+        .collect();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 64,
+                flush_wait: Duration::from_millis(2),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = daemon.local_addr();
+    let dim = SessionConfig::paper_default().dim;
+
+    // conn 0: clean JSON trains; conn 1: clean stream; conn 2: cancel
+    // storm over a stream; conn 3: stream killed mid-pipeline. Each
+    // owns a disjoint 4-session slice so row accounting is attributable.
+    let configs: Vec<LoadgenConfig> = (0..CONNS)
+        .map(|i| {
+            let mut cfg = LoadgenConfig {
+                connections: 1,
+                sessions: ids[i * SESSIONS_PER_CONN..(i + 1) * SESSIONS_PER_CONN].to_vec(),
+                rows_per_connection: ROWS,
+                dim,
+                window: 32,
+                predict_every: 0, // trains only: exact row laws below
+                seed: 90 + i as u64,
+                ..LoadgenConfig::default()
+            };
+            match i {
+                0 => {}
+                1 => cfg.protocol = WireProtocol::Stream { chunk: CLEAN_CHUNK },
+                2 => {
+                    cfg.protocol = WireProtocol::Stream { chunk: CANCEL_CHUNK };
+                    cfg.cancel_every = CANCEL_EVERY;
+                }
+                _ => {
+                    cfg.protocol = WireProtocol::Stream { chunk: 1 };
+                    cfg.kill_after = Some(KILL_AFTER);
+                }
+            }
+            cfg
+        })
+        .collect();
+    let reports: Vec<LoadgenReport> = std::thread::scope(|scope| {
+        let handles: Vec<_> = configs
+            .iter()
+            .map(|cfg| scope.spawn(move || run_loadgen(addr, cfg).unwrap()))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let (json, clean, cancel, kill) = (&reports[0], &reports[1], &reports[2], &reports[3]);
+
+    // untouched classes are exact, replies and rows both
+    assert_eq!(json.ok_replies, ROWS as u64, "{json:?}");
+    assert_eq!(json.ok_rows, ROWS as u64, "{json:?}");
+    assert_eq!(json.wire_errors + json.shed_replies + json.lost_replies, 0, "{json:?}");
+    let clean_chunks = (ROWS / CLEAN_CHUNK) as u64;
+    assert_eq!(clean.ok_replies, clean_chunks, "one ack per chunk: {clean:?}");
+    assert_eq!(clean.ok_rows, ROWS as u64, "{clean:?}");
+    assert_eq!(clean.wire_errors + clean.shed_replies + clean.lost_replies, 0, "{clean:?}");
+
+    // cancel storm: every chunk resolves exactly once, every diagnostic
+    // names the cancel, every cancel is acked
+    let cancel_chunks = (ROWS / CANCEL_CHUNK) as u64;
+    assert_eq!(cancel.lost_replies, 0, "{cancel:?}");
+    assert_eq!(
+        cancel.ok_replies + cancel.wire_errors + cancel.shed_replies,
+        cancel_chunks,
+        "{cancel:?}"
+    );
+    assert_eq!(cancel.wire_errors, cancel.cancel_errors, "only cancel diagnostics: {cancel:?}");
+    assert_eq!(cancel.cancel_acks, cancel_chunks / CANCEL_EVERY as u64, "{cancel:?}");
+
+    // killed stream: received + abandoned == sent, nothing else
+    assert_eq!(kill.ok_replies + kill.lost_replies, KILL_AFTER as u64, "{kill:?}");
+    assert_eq!(kill.wire_errors + kill.shed_replies, 0, "{kill:?}");
+
+    // the ledger closes even with a dangling stream left by the kill
+    quiesce(daemon.stats());
+
+    // server mirrors: only the cancel class can shed or cancel
+    let s = svc.stats();
+    let load = |v: &std::sync::atomic::AtomicU64| v.load(Ordering::Relaxed);
+    assert_eq!(load(&s.deadline_rejects) + load(&s.deadline_drops), 0);
+    assert_eq!(load(&s.cancelled), cancel.cancel_errors + cancel.shed_replies, "{cancel:?}");
+    let ds = daemon.stats();
+    assert_eq!(load(&ds.suppressed_replies), cancel.shed_replies, "{cancel:?}");
+    assert_eq!(load(&s.dropped_responses), 0);
+    assert_eq!(load(&daemon.coalesce_stats().dropped_replies), 0);
+
+    // admission counters: the clean and cancel streams admit every
+    // chunk (eviction happens after admission); the killed stream
+    // admits at least what was acked, at most what was sent
+    let chunks = load(&ds.stream_chunks);
+    let rows = load(&ds.stream_rows);
+    let base_chunks = clean_chunks + cancel_chunks;
+    assert!(
+        (base_chunks + kill.ok_replies..=base_chunks + KILL_AFTER as u64).contains(&chunks),
+        "stream_chunks {chunks} outside its admission interval"
+    );
+    let base_rows = 2 * ROWS as u64;
+    assert!(
+        (base_rows + kill.ok_rows..=base_rows + KILL_AFTER as u64).contains(&rows),
+        "stream_rows {rows} outside its admission interval"
+    );
+
+    daemon.shutdown();
+    let trained = load(&s.trained);
+    // exact per observed class: both clean classes train every row, a
+    // cancel-storm chunk trains iff it was not evicted (every chunk is
+    // exactly CANCEL_CHUNK rows), and only the killed stream's
+    // abandoned window leaves an interval
+    let certain = 2 * ROWS as u64
+        + cancel.ok_rows
+        + cancel.shed_replies * CANCEL_CHUNK as u64
+        + kill.ok_rows;
+    let hi = certain - kill.ok_rows + KILL_AFTER as u64;
+    assert!(
+        (certain..=hi).contains(&trained),
+        "trained {trained} outside [{certain}, {hi}]\n{cancel:?}\n{kill:?}"
+    );
+
+    // Σ samples_seen == trained: no row lost, none duplicated
+    let mut total = 0usize;
+    let mut seen = Vec::with_capacity(ids.len());
+    for &sid in &ids {
+        let n = svc.remove_session(sid).unwrap().samples_seen();
+        total += n;
+        seen.push(n);
+    }
+    assert_eq!(total as u64, trained, "rows lost or duplicated\nper-session {seen:?}");
+
+    // both clean connections rotate their slice uniformly (op o / chunk
+    // ci lands on slot o % 4 / ci % 4), so per-session counts are exact
+    for j in 0..SESSIONS_PER_CONN {
+        let per = ROWS / SESSIONS_PER_CONN;
+        assert_eq!(seen[j], per, "clean JSON session {j}: {seen:?}");
+        assert_eq!(seen[SESSIONS_PER_CONN + j], per, "clean stream session {j}: {seen:?}");
+    }
     if let Ok(s) = Arc::try_unwrap(svc) {
         s.shutdown();
     }

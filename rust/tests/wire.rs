@@ -17,8 +17,8 @@ use std::time::{Duration, Instant};
 use rff_kaf::coordinator::{
     CoordinatorService, DiffusionGroupConfig, ServiceConfig, SessionConfig,
 };
-use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, WireClient};
-use rff_kaf::daemon::{CoalesceConfig, Daemon, DaemonConfig};
+use rff_kaf::daemon::loadgen::{run_loadgen, LoadgenConfig, WireClient, WireProtocol};
+use rff_kaf::daemon::{wirebin, CoalesceConfig, Daemon, DaemonConfig};
 use rff_kaf::distributed::{DiffusionOrdering, NetworkTopology};
 use rff_kaf::rng::{run_rng, Distribution, Normal};
 use rff_kaf::signal::{NonlinearWiener, SignalSource};
@@ -572,6 +572,392 @@ fn deadline_and_cancel_verbs_over_the_wire() {
     drop(client);
     daemon.shutdown();
     assert_eq!(svc.remove_session(sid).unwrap().samples_seen(), 0);
+    stop_service(svc);
+}
+
+/// ISSUE tentpole: the binary fast path is an *encoding*, not a new
+/// semantics — identical rows over binary frames and JSON frames must
+/// produce bitwise-identical a-priori errors and predictions, with the
+/// two encodings interleaving freely on one connection.
+#[test]
+fn binary_wire_training_is_bitwise_equal_to_json() {
+    const ROWS: usize = 200;
+    let svc = start_service();
+    let bin_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let json_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            max_in_flight: 1024,
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 8,
+                flush_wait: Duration::from_millis(20),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+
+    let mut src = NonlinearWiener::new(run_rng(21, 0), 0.05);
+    let samples = src.take_samples(ROWS);
+    // interleave the encodings on ONE connection: binary rows to one
+    // session, the same rows as JSON to its twin
+    for s in &samples {
+        client.send_train_bin(bin_sid, &s.x, s.y).unwrap();
+        client.send_train(json_sid, &s.x, s.y).unwrap();
+    }
+    let mut bin_errs = Vec::with_capacity(ROWS);
+    let mut json_errs = Vec::with_capacity(ROWS);
+    for _ in 0..ROWS {
+        let b = client.recv().unwrap();
+        assert!(b.ok, "{b:?}");
+        bin_errs.push(b.errors[0]);
+        let j = client.recv().unwrap();
+        assert!(j.ok, "{j:?}");
+        json_errs.push(j.errors[0]);
+    }
+    for (i, (b, j)) in bin_errs.iter().zip(&json_errs).enumerate() {
+        assert_eq!(b.to_bits(), j.to_bits(), "row {i}: binary {b} vs json {j}");
+    }
+
+    // the trained twins answer identically, over either encoding
+    let probe = vec![0.3, -0.2, 0.8, 0.1, -0.5];
+    let bp = client.call_predict_bin(bin_sid, &probe).unwrap();
+    let jp = client.call_predict(json_sid, &probe).unwrap();
+    assert_eq!(bp.to_bits(), jp.to_bits(), "{bp} vs {jp}");
+    // and cross-encoding probes agree with themselves
+    assert_eq!(client.call_predict(bin_sid, &probe).unwrap().to_bits(), bp.to_bits());
+
+    // the daemon actually took the fast path for the binary half:
+    // ROWS trains + one binary predict, nothing else
+    let bin_frames = daemon.stats().binary_frames_in.load(Ordering::Relaxed);
+    assert_eq!(bin_frames, ROWS as u64 + 1, "binary_frames_in");
+    drop(client);
+    daemon.shutdown();
+    assert_eq!(svc.remove_session(bin_sid).unwrap().samples_seen(), ROWS);
+    assert_eq!(svc.remove_session(json_sid).unwrap().samples_seen(), ROWS);
+    stop_service(svc);
+}
+
+/// ISSUE tentpole: `train_stream` chunks feed the coalescer directly
+/// and must stay bitwise equal to `train_batch_sync` on the same rows,
+/// with the `stream_end` summary counting exactly the admitted
+/// chunks/rows.
+#[test]
+fn train_stream_is_bitwise_equal_to_batch_sync() {
+    let svc = start_service();
+    let stream_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let mirror_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 64,
+                flush_wait: Duration::from_millis(1),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+
+    // ragged chunk sizes: parity must not depend on how rows are framed
+    let chunk_sizes = [5usize, 1, 9, 3, 17, 2, 8];
+    let total_rows: usize = chunk_sizes.iter().sum();
+    let mut src = NonlinearWiener::new(run_rng(31, 0), 0.05);
+    let samples = src.take_samples(total_rows);
+    let mut stream_errs = Vec::with_capacity(total_rows);
+    let mut cursor = 0;
+    for &size in &chunk_sizes {
+        let chunk = &samples[cursor..cursor + size];
+        cursor += size;
+        let xs: Vec<f64> = chunk.iter().flat_map(|s| s.x.iter().copied()).collect();
+        let ys: Vec<f64> = chunk.iter().map(|s| s.y).collect();
+        let errs = client.call_stream_chunk(stream_sid, &xs, &ys).unwrap();
+        assert_eq!(errs.len(), size, "chunk ack carries one error per row");
+        stream_errs.extend(errs);
+    }
+
+    // an empty chunk is a legal no-op: acked, never admitted
+    assert!(client.call_stream_chunk(stream_sid, &[], &[]).unwrap().is_empty());
+
+    // summary counts admitted traffic only: 7 chunks, not 8
+    let (rows, chunks) = client.call_stream_end(stream_sid).unwrap();
+    assert_eq!(rows, total_rows as u64);
+    assert_eq!(chunks, chunk_sizes.len() as u64);
+    // a second end on the same (now-closed) stream reads zero
+    assert_eq!(client.call_stream_end(stream_sid).unwrap(), (0, 0));
+
+    // mirror: one big batch through the sync path, bitwise equal
+    let xs: Vec<f64> = samples.iter().flat_map(|s| s.x.iter().copied()).collect();
+    let ys: Vec<f64> = samples.iter().map(|s| s.y).collect();
+    let mirror_errs = svc.train_batch_sync(mirror_sid, xs, ys).unwrap();
+    assert_eq!(stream_errs.len(), mirror_errs.len());
+    for (i, (s, m)) in stream_errs.iter().zip(&mirror_errs).enumerate() {
+        assert_eq!(s.to_bits(), m.to_bits(), "row {i}: stream {s} vs mirror {m}");
+    }
+    let probe = vec![0.2, -0.7, 0.4, 0.0, 0.9];
+    let sp = client.call_predict(stream_sid, &probe).unwrap();
+    let mp = svc.predict_sync(mirror_sid, probe).unwrap();
+    assert_eq!(sp.to_bits(), mp.to_bits());
+
+    // daemon-side stream accounting matches the summary
+    assert_eq!(daemon.stats().stream_chunks.load(Ordering::Relaxed), chunk_sizes.len() as u64);
+    assert_eq!(daemon.stats().stream_rows.load(Ordering::Relaxed), total_rows as u64);
+    drop(client);
+    daemon.shutdown();
+    assert_eq!(svc.remove_session(stream_sid).unwrap().samples_seen(), total_rows);
+    assert_eq!(svc.remove_session(mirror_sid).unwrap().samples_seen(), total_rows);
+    stop_service(svc);
+}
+
+/// Binary encodings of the remaining data verbs round-trip with the
+/// same results as their JSON twins.
+#[test]
+fn binary_batch_diffusion_and_predict_batch_match_json() {
+    const ROWS: usize = 48;
+    let svc = start_service();
+    let bin_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let json_sid = svc.add_session_from_spec(session_cfg(32), 7).unwrap();
+    let gid = svc
+        .add_diffusion_group(
+            DiffusionGroupConfig {
+                session: session_cfg(16),
+                ordering: DiffusionOrdering::AdaptThenCombine,
+                topology: NetworkTopology::ring(3),
+            },
+            7,
+        )
+        .unwrap();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+
+    let mut rng = run_rng(8, 0);
+    let xs = Normal::standard().sample_vec(&mut rng, ROWS * 5);
+    let ys = Normal::standard().sample_vec(&mut rng, ROWS);
+    let bin_errs = client.call_train_batch_bin(bin_sid, &xs, &ys).unwrap();
+    let json_errs = client.call_train_batch(json_sid, &xs, &ys).unwrap();
+    assert_eq!(bin_errs.len(), ROWS);
+    for (b, j) in bin_errs.iter().zip(&json_errs) {
+        assert_eq!(b.to_bits(), j.to_bits());
+    }
+
+    let dx = Normal::standard().sample_vec(&mut rng, 3 * 5);
+    let dy = Normal::standard().sample_vec(&mut rng, 3);
+    assert_eq!(client.call_train_diffusion_bin(gid, &dx, &dy).unwrap().len(), 3);
+
+    let probe = Normal::standard().sample_vec(&mut rng, 8 * 5);
+    let bp = client.call_predict_batch_bin(bin_sid, &probe, 5).unwrap();
+    let jp = client.call_predict_batch(bin_sid, &probe).unwrap();
+    assert_eq!(bp.len(), 8);
+    for (b, j) in bp.iter().zip(&jp) {
+        assert_eq!(b.to_bits(), j.to_bits(), "same session, either encoding");
+    }
+    drop(client);
+    daemon.shutdown();
+    stop_service(svc);
+}
+
+/// ISSUE satellites: the `hello` capability probe and the `metrics`
+/// Prometheus exposition, served over the wire.
+#[test]
+fn hello_and_metrics_verbs_over_the_wire() {
+    let svc = start_service();
+    let sid = svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+
+    let hello = client.call_hello().unwrap();
+    let truthy = |k: &str| matches!(hello.get(k), Some(rff_kaf::util::JsonValue::Bool(true)));
+    assert!(truthy("binary"), "{hello:?}");
+    assert!(truthy("train_stream"), "{hello:?}");
+    let max_frame = hello.get("max_frame").and_then(|v| v.as_f64()).unwrap();
+    assert!(max_frame > 0.0, "{hello:?}");
+
+    // metrics reflect work, binary or not
+    for i in 0..10 {
+        client.call_train_bin(sid, &[0.1, 0.2, 0.3, 0.4, 0.5], 0.1 * i as f64).unwrap();
+    }
+    let text = client.call_metrics().unwrap();
+    assert!(text.starts_with("# HELP "), "{}", &text[..text.len().min(120)]);
+    for needle in [
+        "rffkaf_trained_rows_total 10",
+        "rffkaf_sessions_resident 1",
+        "rffkaf_frames_in_total",
+        "rffkaf_binary_frames_in_total",
+        "rffkaf_request_latency_seconds{class=\"train\",quantile=\"0.5\"}",
+        "rffkaf_coalesce_enabled 1",
+    ] {
+        assert!(text.contains(needle), "metrics missing {needle:?}:\n{text}");
+    }
+    drop(client);
+    daemon.shutdown();
+    stop_service(svc);
+}
+
+/// Malformed binary frames fail only their own request — with a binary
+/// error reply naming the defect — and the connection keeps serving.
+#[test]
+fn malformed_binary_frames_fail_only_that_request() {
+    let svc = start_service();
+    let sid = svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    let daemon = Daemon::start(Arc::clone(&svc), DaemonConfig::default()).unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+    let x = [0.1, 0.2, 0.3, 0.4, 0.5];
+    let h = wirebin::BinHeader {
+        tag: wirebin::VT_TRAIN,
+        id: 77,
+        target: sid,
+        deadline_ms: None,
+        n: 1,
+        d: 5,
+    };
+
+    // too short for a header: id unrecoverable → 0
+    client.send_raw(&[wirebin::MAGIC, wirebin::VT_TRAIN, 0]).unwrap();
+    let reply = client.recv().unwrap();
+    assert!(!reply.ok && reply.id == 0, "{reply:?}");
+    assert!(reply.error.as_deref().unwrap_or("").contains("shorter"), "{reply:?}");
+
+    // unknown verb tag: id echoed from the intact header
+    let mut frame = Vec::new();
+    wirebin::encode_request(&mut frame, &h, &x, &[0.5]);
+    frame[1] = 42;
+    client.send_raw(&frame).unwrap();
+    let reply = client.recv().unwrap();
+    assert_eq!(reply.id, 77);
+    assert!(reply.error.as_deref().unwrap_or("").contains("unknown binary verb tag"), "{reply:?}");
+
+    // payload size mismatch
+    wirebin::encode_request(&mut frame, &h, &x, &[0.5]);
+    frame.truncate(frame.len() - 3);
+    client.send_raw(&frame).unwrap();
+    let reply = client.recv().unwrap();
+    assert_eq!(reply.id, 77);
+    assert!(reply.error.as_deref().unwrap_or("").contains("requires"), "{reply:?}");
+
+    // the connection still serves real work, either encoding
+    assert_eq!(client.call_train_bin(sid, &x, 0.5).unwrap().len(), 1);
+    assert_eq!(client.call_train(sid, &x, 0.6).unwrap().len(), 1);
+    assert!(daemon.stats().protocol_errors.load(Ordering::Relaxed) >= 3);
+    drop(client);
+    daemon.shutdown();
+    assert_eq!(svc.remove_session(sid).unwrap().samples_seen(), 2);
+    stop_service(svc);
+}
+
+/// Deadlines and cancellation apply to binary traffic and stream
+/// chunks exactly as to JSON data verbs: pre-dispatch rejects name the
+/// deadline; a queued chunk cancelled before its flush is evicted, yet
+/// still counts as *admitted* in the stream summary.
+#[test]
+fn binary_deadline_reject_and_stream_chunk_cancel() {
+    let svc = start_service();
+    let sid = svc.add_session_from_spec(session_cfg(16), 7).unwrap();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 100,
+                flush_wait: Duration::from_secs(1),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = WireClient::connect(daemon.local_addr()).unwrap();
+    let x = [0.1, 0.2, 0.3, 0.4, 0.5];
+
+    // expired deadline on a binary train → pre-dispatch reject (binary
+    // error reply), never admitted
+    client.set_deadline_ms(Some(0));
+    let id = client.send_train_bin(sid, &x, 0.5).unwrap();
+    let reply = client.recv().unwrap();
+    assert_eq!(reply.id, id);
+    assert!(!reply.ok);
+    assert!(reply.error.as_deref().unwrap_or("").contains("deadline"), "{reply:?}");
+    // same for a stream chunk: a rejected chunk must NOT enter the
+    // stream's admitted totals
+    let cid = client.send_stream_chunk(sid, &x, &[0.5]).unwrap();
+    let reply = client.recv().unwrap();
+    assert_eq!(reply.id, cid);
+    assert!(!reply.ok && reply.error.as_deref().unwrap_or("").contains("deadline"));
+    client.set_deadline_ms(None);
+
+    // cancel a queued stream chunk: evicted with a diagnostic, cancel
+    // acked live — but it *was* admitted, so the summary counts it
+    let tid = client.send_stream_chunk(sid, &x, &[0.5]).unwrap();
+    let kid = client.send_cancel(tid).unwrap();
+    let row = client.recv().unwrap();
+    assert_eq!(row.id, tid);
+    assert!(!row.ok);
+    assert!(row.error.as_deref().unwrap_or("").contains("cancelled"), "{row:?}");
+    let ack = client.recv().unwrap();
+    assert!(ack.ok && ack.id == kid && ack.cancelled == Some(true), "{ack:?}");
+
+    let (rows, chunks) = client.call_stream_end(sid).unwrap();
+    assert_eq!((rows, chunks), (1, 1), "admitted-then-cancelled chunk counts");
+    // ... but the cancelled row never trained
+    drop(client);
+    daemon.shutdown();
+    assert_eq!(svc.remove_session(sid).unwrap().samples_seen(), 0);
+    stop_service(svc);
+}
+
+/// The loadgen's stream mode drives many sessions per connection and
+/// stays lossless: every row acked, summaries exact, ledger balanced.
+#[test]
+fn stream_loadgen_traffic_is_lossless() {
+    const CONNS: usize = 3;
+    const SESSIONS: usize = 4;
+    const ROWS_PER_CONN: usize = 120;
+    const CHUNK: usize = 7;
+    let svc = start_service();
+    let ids: Vec<u64> =
+        (0..SESSIONS).map(|_| svc.add_session_from_spec(session_cfg(16), 7).unwrap()).collect();
+    let daemon = Daemon::start(
+        Arc::clone(&svc),
+        DaemonConfig {
+            max_in_flight: 1024,
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_batch: 64,
+                flush_wait: Duration::from_millis(1),
+            },
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap();
+    let report = run_loadgen(
+        daemon.local_addr(),
+        &LoadgenConfig {
+            connections: CONNS,
+            sessions: ids.clone(),
+            rows_per_connection: ROWS_PER_CONN,
+            dim: 5,
+            window: 16,
+            predict_every: 0,
+            seed: 13,
+            protocol: WireProtocol::Stream { chunk: CHUNK },
+            ..LoadgenConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.lost_replies, 0, "{report:?}");
+    assert_eq!(report.wire_errors, 0, "{report:?}");
+    assert_eq!(report.ok_rows, (CONNS * ROWS_PER_CONN) as u64, "{report:?}");
+    assert_eq!(report.ok_replies, (CONNS * ROWS_PER_CONN.div_ceil(CHUNK)) as u64);
+    assert_eq!(daemon.stats().stream_rows.load(Ordering::Relaxed), report.ok_rows);
+    daemon.shutdown();
+    let mut seen = 0;
+    for &sid in &ids {
+        seen += svc.remove_session(sid).unwrap().samples_seen();
+    }
+    assert_eq!(seen, CONNS * ROWS_PER_CONN, "every admitted stream row trained");
     stop_service(svc);
 }
 
